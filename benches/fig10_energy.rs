@@ -1,0 +1,41 @@
+//! Bench: Fig 10 — normalized systolic energy per method, with the
+//! static/dynamic × core/buffer/memory decomposition.
+//! Run: `cargo bench --bench fig10_energy`
+
+use halo::systolic::{SimConfig, Simulator};
+use halo::workload::{ModelShapes, Phase};
+
+fn main() {
+    let sim = Simulator::new(SimConfig::default());
+    let methods = ["fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal"];
+
+    println!("=== Fig 10: normalized energy (FP16 = 1.0) ===");
+    for model in ModelShapes::paper_models() {
+        let fp16 = sim
+            .run_method(&model, Phase::prefill(), "fp16", 128, 8)
+            .energy
+            .total();
+        print!("{:<12}", model.name);
+        for m in &methods {
+            let e = sim.run_method(&model, Phase::prefill(), m, 128, 8).energy.total();
+            print!(" {:>9.3}", e / fp16);
+        }
+        println!();
+    }
+    println!("              {}", methods.map(|m| format!("{m:>9}")).join(" "));
+
+    println!("\n=== decomposition (llama2-7b, joules) ===");
+    let model = ModelShapes::llama2_7b();
+    println!(
+        "{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "method", "core_dyn", "core_st", "buf_dyn", "buf_st", "mem_dyn", "mem_st"
+    );
+    for m in &methods {
+        let e = sim.run_method(&model, Phase::prefill(), m, 128, 8).energy;
+        println!(
+            "{:<10} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            m, e.core_dynamic, e.core_static, e.buffer_dynamic, e.buffer_static,
+            e.mem_dynamic, e.mem_static
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: Fig 11 — HALO-bal execution time vs tile size (128/64/32).
+//! Run: `cargo bench --bench fig11_tile_size`
+
+use halo::systolic::{SimConfig, Simulator};
+use halo::workload::{ModelShapes, Phase};
+
+fn main() {
+    let sim = Simulator::new(SimConfig::default());
+    println!("=== Fig 11: HALO-bal normalized time vs tile size (tile=128 → 1.0) ===");
+    let mut geo = [0.0f64; 3];
+    let models = ModelShapes::paper_models();
+    for model in &models {
+        let t128 = sim.run_method(model, Phase::prefill(), "halo-bal", 128, 9).time_s;
+        print!("{:<12}", model.name);
+        for (i, tile) in [128usize, 64, 32].into_iter().enumerate() {
+            let t = sim.run_method(model, Phase::prefill(), "halo-bal", tile, 9).time_s;
+            geo[i] += (t / t128).ln();
+            print!("  tile{tile:<4} {:>6.3}", t / t128);
+        }
+        println!();
+    }
+    println!(
+        "\ngeomean: t128 {:.3}, t64 {:.3}, t32 {:.3} (paper: 32x32 ≈ 15% faster than 128)",
+        (geo[0] / models.len() as f64).exp(),
+        (geo[1] / models.len() as f64).exp(),
+        (geo[2] / models.len() as f64).exp()
+    );
+}

@@ -1,0 +1,29 @@
+//! Bench: Fig 12 — normalized GPU execution time (decode, batch 8).
+//! Run: `cargo bench --bench fig12_gpu_exec`
+
+use halo::gpu::{GpuConfig, GpuSim};
+use halo::workload::{ModelShapes, Phase};
+
+fn main() {
+    let sim = GpuSim::new(GpuConfig::default());
+    let methods = ["fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal"];
+    println!("=== Fig 12: normalized GPU execution time (W8A8 = 1.0) ===");
+    for model in ModelShapes::paper_models() {
+        let base = sim.run_method(&model, Phase::decode(8), "w8a8", 128, 8).time_s;
+        print!("{:<12}", model.name);
+        for m in &methods {
+            let r = sim.run_method(&model, Phase::decode(8), m, 128, 8);
+            print!(" {:>9.3}", r.time_s / base);
+        }
+        println!();
+    }
+    println!("              {}", methods.map(|m| format!("{m:>9}")).join(" "));
+
+    // DVFS governor decisions for the 7B model.
+    let model = ModelShapes::llama2_7b();
+    println!("\n=== DVFS level selection (llama2-7b) ===");
+    for m in &methods {
+        let r = sim.run_method(&model, Phase::decode(8), m, 128, 8);
+        println!("{:<10} class clocks {:?} GHz, transitions {}", m, r.class_ghz, r.transitions);
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Fig 13 — normalized GPU energy (constant/static/dynamic).
+//! Run: `cargo bench --bench fig13_gpu_energy`
+
+use halo::gpu::{GpuConfig, GpuSim};
+use halo::workload::{ModelShapes, Phase};
+
+fn main() {
+    let sim = GpuSim::new(GpuConfig::default());
+    let methods = ["fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal"];
+    println!("=== Fig 13: normalized GPU energy (W8A8 = 1.0) ===");
+    for model in ModelShapes::paper_models() {
+        let base = sim
+            .run_method(&model, Phase::decode(8), "w8a8", 128, 8)
+            .energy_total();
+        print!("{:<12}", model.name);
+        for m in &methods {
+            let r = sim.run_method(&model, Phase::decode(8), m, 128, 8);
+            print!(" {:>9.3}", r.energy_total() / base);
+        }
+        println!();
+    }
+    println!("              {}", methods.map(|m| format!("{m:>9}")).join(" "));
+
+    println!("\n=== decomposition (opt-30b, joules) ===");
+    let model = ModelShapes::opt_30b();
+    println!("{:<10} {:>10} {:>10} {:>10}", "method", "constant", "static", "dynamic");
+    for m in &methods {
+        let r = sim.run_method(&model, Phase::decode(8), m, 128, 8);
+        println!(
+            "{:<10} {:>10.3} {:>10.3} {:>10.3}",
+            m, r.energy_constant, r.energy_static, r.energy_dynamic
+        );
+    }
+}

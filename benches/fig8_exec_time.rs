@@ -1,0 +1,37 @@
+//! Bench: Fig 8 — normalized systolic execution time per method.
+//!
+//! Times the simulator itself (the L3 hot path, §Perf) and prints the
+//! figure's normalized rows. Run: `cargo bench --bench fig8_exec_time`
+
+use std::time::Duration;
+
+use halo::systolic::{SimConfig, Simulator};
+use halo::util::bench::bench;
+use halo::workload::{ModelShapes, Phase};
+
+fn main() {
+    let sim = Simulator::new(SimConfig::default());
+    let models = ModelShapes::paper_models();
+    let methods = ["fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal"];
+
+    println!("=== Fig 8: normalized execution time (FP16 = 1.0) ===");
+    for model in &models {
+        let fp16 = sim.run_method(model, Phase::prefill(), "fp16", 128, 8).time_s;
+        print!("{:<12}", model.name);
+        for m in &methods {
+            let r = sim.run_method(model, Phase::prefill(), m, 128, 8);
+            print!(" {:>9.3}", r.time_s / fp16);
+        }
+        println!();
+    }
+    println!("              {}", methods.map(|m| format!("{m:>9}")).join(" "));
+
+    println!("\n=== simulator hot-path timing ===");
+    let model = ModelShapes::llama2_7b();
+    for m in ["w8a8", "halo-bal"] {
+        let s = bench(&format!("systolic_sim/llama2-7b/{m}"), Duration::from_secs(2), || {
+            std::hint::black_box(sim.run_method(&model, Phase::prefill(), m, 128, 8));
+        });
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,104 @@
+//! Bench: L3 hot paths (§Perf) — coordinator routing/batching throughput,
+//! the quantization pipeline, the MAC profile build, and (when artifacts
+//! exist) the PJRT kernel execution path.
+//! Run: `cargo bench --bench l3_coordinator`
+
+use std::time::Duration;
+
+use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator};
+use halo::mac::MacProfile;
+use halo::quant::baselines::by_name;
+use halo::quant::{LayerCtx, Matrix};
+use halo::util::bench::{bench, bench_n};
+use halo::util::Rng;
+
+struct Noop;
+
+impl BatchExecutor for Noop {
+    fn batch_capacity(&self) -> usize {
+        8
+    }
+    fn seq_len(&self) -> usize {
+        128
+    }
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+        Ok(prefixes.iter().map(|p| p.len() as i32).collect())
+    }
+}
+
+fn main() {
+    // 1. Coordinator routing throughput (no model): requests/s ceiling.
+    let coord = Coordinator::start(
+        BatcherConfig { batch_size: 8, timeout: Duration::from_micros(200) },
+        || Ok(Box::new(Noop) as Box<dyn BatchExecutor>),
+    );
+    let n = 20_000;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(vec![i as i32; 16])).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "coordinator_routing: {n} reqs in {dt:.3}s = {:.0} req/s (occupancy {:.2})",
+        n as f64 / dt,
+        coord.metrics.mean_batch_occupancy()
+    );
+    coord.shutdown().unwrap();
+
+    // 2. Quantization pipeline on a 1024x1024 layer.
+    let profile = MacProfile::cached();
+    let mut rng = Rng::seed_from_u64(1);
+    let w = Matrix::random_normal(1024, 1024, 0.02, &mut rng);
+    let g = Matrix::random_normal(1024, 1024, 1.0, &mut rng);
+    for method in ["rtn-w4", "zq-local", "halo-bal"] {
+        let q = by_name(method, profile, 128).unwrap();
+        let s = bench(&format!("quantize_1024x1024/{method}"), Duration::from_secs(2), || {
+            std::hint::black_box(q.quantize(&w, &LayerCtx::with_grad("b", &g)));
+        });
+        println!("{}", s.report());
+    }
+    // GPTQ is heavier (Cholesky + error propagation) — fixed iterations.
+    let q = by_name("gptq", profile, 128).unwrap();
+    let s = bench_n("quantize_1024x1024/gptq", 3, || {
+        std::hint::black_box(q.quantize(&w, &LayerCtx::with_grad("b", &g)));
+    });
+    println!("{}", s.report());
+
+    // 3. MAC profile build (STA + dynamic sampling over 256 weights).
+    let s = bench_n("mac_profile_compute(256 samples)", 3, || {
+        std::hint::black_box(MacProfile::compute(256, 1));
+    });
+    println!("{}", s.report());
+
+    // 4. PJRT kernel microbench (needs artifacts).
+    if let Ok(store) = halo::runtime::Store::open_default() {
+        if let Ok(rt) = halo::runtime::Runtime::cpu() {
+            let path = store.kernel_path("halo_matmul");
+            if let Ok(exe) = rt.load(&path) {
+                let mut rng = Rng::seed_from_u64(2);
+                let x: Vec<f32> = (0..128 * 256).map(|_| rng.gen_normal() as f32).collect();
+                let idx: Vec<i8> = (0..256 * 1024).map(|_| rng.gen_usize(16) as i8).collect();
+                let cb: Vec<f32> = (0..16).map(|_| rng.gen_normal() as f32).collect();
+                let sc: Vec<f32> = (0..2 * 8).map(|_| 1.0).collect();
+                let inputs = vec![
+                    halo::runtime::literal_f32(&x, &[128, 256]).unwrap(),
+                    halo::runtime::literal_i8(&idx, &[256, 1024]).unwrap(),
+                    halo::runtime::literal_f32(&cb, &[16]).unwrap(),
+                    halo::runtime::literal_f32(&sc, &[2, 8]).unwrap(),
+                ];
+                let s = bench("pjrt_halo_matmul_128x256x1024", Duration::from_secs(2), || {
+                    std::hint::black_box(exe.run(&inputs).unwrap());
+                });
+                println!("{}", s.report());
+                let flops = 2.0 * 128.0 * 256.0 * 1024.0;
+                println!(
+                    "  ≈ {:.2} GFLOP/s through the L1 Pallas kernel (interpret-mode HLO)",
+                    flops / s.mean_s() / 1e9
+                );
+            }
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT kernel microbench)");
+    }
+}

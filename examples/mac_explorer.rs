@@ -1,0 +1,63 @@
+//! MAC circuit exploration: regenerates the data behind Figs 3, 4 and 5.
+//!
+//! Prints (a) the full 256-entry per-weight frequency/power profile with an
+//! ASCII rendering of Fig 4's peaks, and (b) Fig 3's settle-time histograms
+//! for the paper's example pair (w = 64 vs w = −127).
+//!
+//! Run: `cargo run --release --example mac_explorer [-- --samples 4096]`
+
+use halo::mac::{booth, profile::delay_histogram_ps, MacProfile};
+use halo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.usize_or("samples", 2048).unwrap();
+    let profile = MacProfile::cached();
+
+    println!("== Fig 4: achievable frequency per weight value ==");
+    let fmax = profile
+        .freq_ghz
+        .iter()
+        .cloned()
+        .filter(|f| f.is_finite())
+        .fold(0.0, f64::max);
+    for w in (i8::MIN..=i8::MAX).step_by(4) {
+        let f = profile.freq_of(w).min(fmax);
+        let bar = "#".repeat((f / fmax * 50.0) as usize);
+        println!(
+            "{w:>5} | {bar:<50} {f:.2} GHz ({} booth digits)",
+            booth::nonzero_digits(w)
+        );
+    }
+
+    println!("\n== Fig 5: power ordering (sample) ==");
+    for w in [0i8, 64, 16, -16, 1, -1, 2, 85, -86, -127, 127] {
+        println!(
+            "w={w:>5}: mean toggles {:>6.1}, dyn energy {:.3} pJ/op",
+            profile.toggles_of(w),
+            profile.energy_of(w)
+        );
+    }
+
+    println!("\n== Fig 3: delay histograms across activation transitions ==");
+    for w in [64i8, -127] {
+        println!("-- weight {w} --");
+        let hist = delay_histogram_ps(w, samples, 3);
+        let max_count = hist.iter().map(|&(_, c)| c).max().unwrap_or(1);
+        for (ps, count) in hist {
+            let bar = "*".repeat((count as f64 / max_count as f64 * 40.0) as usize);
+            println!("{ps:7.0} ps | {bar:<40} {count}");
+        }
+        println!(
+            "max delay {:.0} ps -> achievable {:.2} GHz\n",
+            profile.delay_of(w),
+            profile.freq_of(w)
+        );
+    }
+
+    println!(
+        "derived classes: fast {:?} @ {:.2} GHz | med (16) @ {:.2} GHz | base @ {:.2} GHz",
+        profile.codebook_fast, profile.f_fast_ghz, profile.f_med_ghz, profile.f_base_ghz
+    );
+    println!("(paper Table I clocks these classes at 3.7 / 2.4 / 1.9 GHz — see DESIGN.md)");
+}

@@ -1,0 +1,113 @@
+//! Fig 9 — normalized performance vs perplexity knee + the Pareto-front
+//! optimizer (paper Fig 1: "a set of Pareto-optimal quantized models").
+//!
+//! Enumerates (variant × tile) candidates, scores latency/energy with the
+//! systolic simulator and accuracy with the real trained model (when
+//! artifacts exist; otherwise weight-MSE on synthetic layers), then prints
+//! the Pareto front and marks the knee.
+//!
+//! Run: `cargo run --release --example pareto_sweep -- [--model small]`
+
+use std::collections::BTreeMap;
+
+use halo::dvfs::optimizer::{pareto_front, select, Candidate};
+use halo::mac::MacProfile;
+use halo::model::{calibrate_fisher, Evaluator};
+use halo::quant::{HaloConfig, HaloQuantizer, LayerCtx, Quantizer, Variant};
+use halo::runtime::{Runtime, Store};
+use halo::systolic::{SimConfig, Simulator};
+use halo::util::cli::Args;
+use halo::workload::{ModelShapes, Phase};
+
+fn main() -> halo::Result<()> {
+    let args = Args::from_env();
+    let profile = MacProfile::cached();
+    let sim = Simulator::new(SimConfig::default());
+    let shapes = ModelShapes::llama2_7b();
+
+    // Accuracy scorer: real perplexity if artifacts exist.
+    let real = Store::open_default().ok().and_then(|store| {
+        let model_name = args.str_or("model", "small").to_string();
+        let rt = Runtime::cpu().ok()?;
+        let model = store.model(&model_name).ok()?;
+        let calib = store.corpus_calib().ok()?;
+        let grads = calibrate_fisher(&rt, &model, &calib, 3).ok()?;
+        let stream = store.corpus_eval("wikisyn").ok()?;
+        Some((store, rt, model, grads, stream, model_name))
+    });
+
+    let mut candidates = Vec::new();
+    for variant in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt] {
+        for tile in [128usize, 64, 32] {
+            let method = match variant {
+                Variant::PerfOpt => "halo-perf",
+                Variant::Bal => "halo-bal",
+                Variant::AccOpt => "halo-acc",
+            };
+            let r = sim.run_method(&shapes, Phase::prefill(), method, tile, 11);
+
+            let accuracy_cost = match &real {
+                Some((_, rt, model, grads, stream, _)) => {
+                    let ev = Evaluator::new(rt, model)?;
+                    let q = HaloQuantizer::new(HaloConfig::new(tile, variant), profile);
+                    let mut replace = BTreeMap::new();
+                    for p in model.linear_params() {
+                        let w = p.as_matrix()?;
+                        let ctx = match grads.get(&p.name) {
+                            Some(g) => LayerCtx::with_grad(&p.name, g),
+                            None => LayerCtx::new(&p.name),
+                        };
+                        replace.insert(p.name.clone(), q.quantize(&w, &ctx).dequant);
+                    }
+                    let (nll, _) = ev.mean_nll(&replace, stream, true, 6)?;
+                    nll.exp()
+                }
+                None => {
+                    // Synthetic fallback: weight reconstruction MSE.
+                    let mut rng = halo::util::Rng::seed_from_u64(5);
+                    let w = halo::quant::Matrix::random_normal(256, 256, 0.02, &mut rng);
+                    let g = halo::quant::Matrix::random_normal(256, 256, 1.0, &mut rng);
+                    let q = HaloQuantizer::new(HaloConfig::new(tile, variant), profile);
+                    q.quantize(&w, &LayerCtx::with_grad("syn", &g)).dequant.mse(&w)
+                }
+            };
+            candidates.push(Candidate {
+                variant,
+                tile,
+                time_s: r.time_s,
+                energy_j: r.energy.total(),
+                accuracy_cost,
+            });
+        }
+    }
+
+    println!("== all candidates (Fig 9 scatter) ==");
+    println!(
+        "{:<10} {:>5} {:>10} {:>10} {:>10}",
+        "variant", "tile", "time", "energy", "ppl/mse"
+    );
+    for c in &candidates {
+        println!(
+            "{:<10} {:>5} {:>8.1}ms {:>9.1}J {:>10.3}",
+            c.variant.name(),
+            c.tile,
+            c.time_s * 1e3,
+            c.energy_j,
+            c.accuracy_cost
+        );
+    }
+
+    let front = pareto_front(&candidates);
+    println!("\n== Pareto front ({} of {}) ==", front.len(), candidates.len());
+    for c in &front {
+        println!("{:<10} tile {:<4} — kept", c.variant.name(), c.tile);
+    }
+
+    let knee = select(&front, 1.0, 0.5, 1.0).expect("non-empty front");
+    println!(
+        "\nknee (balanced goals): {} tile {} — the paper's `bal` recommendation",
+        knee.variant.name(),
+        knee.tile
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: the whole HALO idea in one file, no artifacts needed.
+//!
+//! 1. Build the MAC circuit profile (gate-level Booth–Wallace model).
+//! 2. Quantize a synthetic weight matrix with HALO and every baseline.
+//! 3. Compare reconstruction error, effective bits, achievable clocks.
+//! 4. Simulate a LLaMA2-7B prefill on the systolic array per method.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use halo::mac::MacProfile;
+use halo::quant::baselines::by_name;
+use halo::quant::{LayerCtx, Matrix};
+use halo::systolic::{SimConfig, Simulator};
+use halo::util::Rng;
+use halo::workload::{ModelShapes, Phase};
+
+fn main() -> halo::Result<()> {
+    println!("== 1. MAC circuit profile (paper §II) ==");
+    let profile = MacProfile::cached();
+    println!(
+        "fast codebook (9 values, ≤{:.0} ps): {:?}",
+        1000.0 / profile.f_fast_ghz,
+        profile.codebook_fast
+    );
+    println!(
+        "med codebook (16 values, ≤{:.0} ps): {:?}",
+        1000.0 / profile.f_med_ghz,
+        profile.codebook_med
+    );
+    println!(
+        "full int8 range worst case: {:.0} ps → {:.1} GHz (Table I base)\n",
+        1000.0 / profile.f_base_ghz,
+        profile.f_base_ghz
+    );
+
+    println!("== 2+3. quantize one 256x256 layer with every method ==");
+    let mut rng = Rng::seed_from_u64(1);
+    let w = Matrix::random_normal(256, 256, 0.02, &mut rng);
+    // A gradient field with one very sensitive tile-row band.
+    let g = Matrix::from_fn(256, 256, |r, _| {
+        let x = rng.gen_normal() as f32;
+        if r < 64 { x } else { x * 0.05 }
+    });
+    println!(
+        "{:<18} {:>8} {:>8} {:>22} {:>8}",
+        "method", "bits", "rel-err", "tiles fast/med/base", "sparse"
+    );
+    for method in ["fp16", "w8a8", "w4a8", "w3a8", "gptq", "zq-local",
+                   "halo-perf", "halo-acc", "halo-bal"] {
+        let q = by_name(method, profile, 64).unwrap();
+        let res = q.quantize(&w, &LayerCtx::with_grad("demo", &g));
+        let (f, m, b) = res.class_counts(profile);
+        println!(
+            "{:<18} {:>8.2} {:>8.4} {:>22} {:>8}",
+            res.method,
+            res.bits_eff,
+            res.dequant.mse(&w).sqrt() / w.std(),
+            format!("{f}/{m}/{b}"),
+            res.sparse_nnz
+        );
+    }
+
+    println!("\n== 4. systolic-array simulation: LLaMA2-7B prefill (Fig 8) ==");
+    let sim = Simulator::new(SimConfig::default());
+    let model = ModelShapes::llama2_7b();
+    let fp16 = sim.run_method(&model, Phase::prefill(), "fp16", 128, 7).time_s;
+    println!("{:<12} {:>10} {:>10} {:>12}", "method", "time", "vs fp16", "energy (J)");
+    for method in ["fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal"] {
+        let r = sim.run_method(&model, Phase::prefill(), method, 128, 7);
+        println!(
+            "{:<12} {:>8.1}ms {:>9.2}x {:>12.1}",
+            method,
+            r.time_s * 1e3,
+            fp16 / r.time_s,
+            r.energy.total()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! END-TO-END driver (DESIGN.md §End-to-end validation): load a real
+//! trained model from `artifacts/`, HALO-quantize it with Fisher
+//! calibration through the PJRT grad graph, measure perplexity before and
+//! after on both corpora, then serve batched next-token requests through
+//! the L3 coordinator and report latency/throughput.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example serve_llm -- [--model base] [--requests 128]
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use halo::coordinator::server::PjrtExecutor;
+use halo::coordinator::{BatcherConfig, Coordinator};
+use halo::dvfs::Schedule;
+use halo::mac::MacProfile;
+use halo::model::{calibrate_fisher, Evaluator};
+use halo::quant::{HaloConfig, HaloQuantizer, LayerCtx, Quantizer, Variant};
+use halo::runtime::{Runtime, Store};
+use halo::util::cli::Args;
+
+fn main() -> halo::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "base").to_string();
+    let n_requests = args.usize_or("requests", 128)?;
+    let max_batches = args.usize_or("max-batches", 12)?;
+
+    let store = Store::open_default()?;
+    let rt = Runtime::cpu()?;
+    let model = store.model(&model_name)?;
+    println!(
+        "model {model_name}: {} params, vocab {}, seq {}",
+        model.n_weights(),
+        model.vocab,
+        model.seq_len
+    );
+
+    // --- Fisher calibration (paper Eq. 1) through the grad graph ---
+    let t0 = Instant::now();
+    let calib = store.corpus_calib()?;
+    let grads = calibrate_fisher(&rt, &model, &calib, 4)?;
+    println!("fisher calibration: {:.1}s ({} tensors)", t0.elapsed().as_secs_f64(), grads.len());
+
+    // --- quantize (HALO-bal, tile 128) ---
+    let profile = MacProfile::cached();
+    let q = HaloQuantizer::new(HaloConfig::new(128, Variant::Bal), profile);
+    let t0 = Instant::now();
+    let mut replace = BTreeMap::new();
+    let mut classes = Vec::new();
+    let mut bits = 0.0;
+    let mut total = 0.0;
+    for p in model.linear_params() {
+        let w = p.as_matrix()?;
+        let ctx = match grads.get(&p.name) {
+            Some(g) => LayerCtx::with_grad(&p.name, g),
+            None => LayerCtx::new(&p.name),
+        };
+        let res = q.quantize(&w, &ctx);
+        for &f in &res.tile_freq_ghz {
+            classes.push(halo::dvfs::classify(f, profile));
+        }
+        bits += res.bits_eff * w.numel() as f64;
+        total += w.numel() as f64;
+        replace.insert(p.name.clone(), res.dequant);
+    }
+    let schedule = Schedule::cluster(&classes);
+    println!(
+        "quantized in {:.1}s: B_eff {:.2} bits, {} tiles, {} DVFS transitions/pass",
+        t0.elapsed().as_secs_f64(),
+        bits / total,
+        classes.len(),
+        schedule.transitions()
+    );
+
+    // --- accuracy before/after (Table II cells for this model) ---
+    let ev = Evaluator::new(&rt, &model)?;
+    for corpus in ["wikisyn", "c4syn"] {
+        let stream = store.corpus_eval(corpus)?;
+        let (nll_fp, _) = ev.mean_nll(&BTreeMap::new(), &stream, false, max_batches)?;
+        let (nll_halo, n) = ev.mean_nll(&replace, &stream, true, max_batches)?;
+        println!(
+            "{corpus}: ppl fp16 {:.2} → halo-bal {:.2} (Δ {:+.2}, {} batches)",
+            nll_fp.exp(),
+            nll_halo.exp(),
+            nll_halo.exp() - nll_fp.exp(),
+            n
+        );
+    }
+
+    // --- serve batched requests through the coordinator ---
+    let root = store.root.clone();
+    let model_name2 = model_name.clone();
+    let replace2 = replace.clone();
+    let schedule2 = schedule.clone();
+    let coord = Coordinator::start(BatcherConfig::default(), move || {
+        let rt = Runtime::cpu()?;
+        let store = Store::open(root)?;
+        let model = store.model(&model_name2)?;
+        let exec = PjrtExecutor::new(rt, &model, &replace2, schedule2)?;
+        Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+    });
+
+    let stream = store.corpus_eval("wikisyn")?;
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let start = (i * 61) % (stream.len() - 64);
+        let prefix: Vec<i32> =
+            stream[start..start + 48].iter().map(|&t| t as i32).collect();
+        rxs.push(coord.submit(prefix));
+    }
+    for rx in rxs {
+        let r = rx.recv()?;
+        assert!((0..model.vocab as i32).contains(&r.next_token));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} requests in {wall:.2}s = {:.1} req/s; {}",
+        n_requests as f64 / wall,
+        coord.metrics.summary()
+    );
+    coord.shutdown()?;
+    println!("serve_llm OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Tile-size ablation (paper §IV-D, Fig 11 + Table II tile rows).
+//!
+//! Sweeps HALO-bal over 128/64/32 tiles on (a) the systolic simulator at
+//! paper scale and (b) the real trained model's accuracy when artifacts
+//! exist.
+//!
+//! Run: `cargo run --release --example tile_sweep -- [--model small]`
+
+use std::collections::BTreeMap;
+
+use halo::mac::MacProfile;
+use halo::model::{calibrate_fisher, Evaluator};
+use halo::quant::{HaloConfig, HaloQuantizer, LayerCtx, Quantizer, Variant};
+use halo::runtime::{Runtime, Store};
+use halo::systolic::{SimConfig, Simulator};
+use halo::util::cli::Args;
+use halo::workload::{ModelShapes, Phase};
+
+fn main() -> halo::Result<()> {
+    let args = Args::from_env();
+    let profile = MacProfile::cached();
+
+    println!("== systolic performance vs tile size (Fig 11, HALO-bal) ==");
+    let sim = Simulator::new(SimConfig::default());
+    for model in ModelShapes::paper_models() {
+        let t128 = sim.run_method(&model, Phase::prefill(), "halo-bal", 128, 9).time_s;
+        print!("{:<12}", model.name);
+        for tile in [128usize, 64, 32] {
+            let t = sim.run_method(&model, Phase::prefill(), "halo-bal", tile, 9).time_s;
+            print!("  t{tile}: {:.3}x", t128 / t);
+        }
+        println!();
+    }
+
+    // Accuracy sweep on a real model (when artifacts are present).
+    let Ok(store) = Store::open_default() else {
+        println!("\n(no artifacts — skipping accuracy sweep; run `make artifacts`)");
+        return Ok(());
+    };
+    let model_name = args.str_or("model", "small").to_string();
+    println!("\n== accuracy vs tile size on `{model_name}` (Table II bottom rows) ==");
+    let rt = Runtime::cpu()?;
+    let model = store.model(&model_name)?;
+    let calib = store.corpus_calib()?;
+    let grads = calibrate_fisher(&rt, &model, &calib, 3)?;
+    let ev = Evaluator::new(&rt, &model)?;
+    let stream = store.corpus_eval("wikisyn")?;
+
+    let (nll_fp, _) = ev.mean_nll(&BTreeMap::new(), &stream, false, 8)?;
+    println!("fp16 ppl: {:.2}", nll_fp.exp());
+    for tile in [128usize, 64, 32] {
+        let q = HaloQuantizer::new(HaloConfig::new(tile, Variant::Bal), profile);
+        let mut replace = BTreeMap::new();
+        let mut bits = 0.0;
+        let mut total = 0.0;
+        for p in model.linear_params() {
+            let w = p.as_matrix()?;
+            let ctx = match grads.get(&p.name) {
+                Some(g) => LayerCtx::with_grad(&p.name, g),
+                None => LayerCtx::new(&p.name),
+            };
+            let res = q.quantize(&w, &ctx);
+            bits += res.bits_eff * w.numel() as f64;
+            total += w.numel() as f64;
+            replace.insert(p.name.clone(), res.dequant);
+        }
+        let (nll, _) = ev.mean_nll(&replace, &stream, true, 8)?;
+        println!(
+            "halo-bal tile={tile:<4} ppl: {:.2} (Δ {:+.2}), B_eff {:.2}",
+            nll.exp(),
+            nll.exp() - nll_fp.exp(),
+            bits / total
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time Python for HALO: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Never imported at runtime — the Rust binary consumes only ``artifacts/``.
+"""

@@ -1,0 +1,338 @@
+"""AOT pipeline: train the tiny LMs, lower every graph to HLO *text*.
+
+Run via ``make artifacts`` (``python -m compile.aot --out ../artifacts``).
+Python appears ONLY here; after this runs, the Rust binary is self-contained.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts layout (consumed by rust/src/runtime/artifacts.rs):
+
+    artifacts/
+      manifest.json                  global index
+      corpora/<name>_{eval,calib}.u16.bin
+      models/<name>/
+        config.json                  model + param table (name/shape/offset)
+        params.f32.bin               trained weights, canonical order
+        train_log.json
+        nll_fp.hlo.txt               (params..., tokens(B,S+1)) -> mean NLL
+        nll_a8.hlo.txt               same, A8 fake-quant activations
+        fwd_fp.hlo.txt               (params..., tokens(B,S)) -> logits
+        grad.hlo.txt                 (params..., tokens) -> (loss, dW_linear...)
+      models/base/fwd_halo.hlo.txt   true HALO path (L1 Pallas kernels inside)
+      kernels/halo_matmul.hlo.txt    standalone kernel for runtime microbench
+      kernels/spmv.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, train
+from .kernels import halo_matmul as hm
+from .kernels import spmv as sp
+
+EVAL_BATCH = 8
+EVAL_TOKENS = 96_000  # per corpus; ~ 93 batches of 8x129
+CALIB_TOKENS = 16_000
+HALO_TILE = 128
+SPARSE_FRAC = 0.005  # 0.5% outliers+salient, padded up (paper §III-A)
+SPARSE_PAD = 256
+
+# steps per model (HALO_FAST=1 cuts everything down for CI)
+TRAIN_STEPS = {"tiny": 400, "small": 400, "base": 450, "large": 400}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _cfg_digest(cfg: model.Config, steps: int) -> str:
+    blob = json.dumps({**cfg.__dict__, "steps": steps}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def dump_params(cfg: model.Config, params: Dict[str, jnp.ndarray], mdir: Path,
+                steps: int) -> List[dict]:
+    """Write params.f32.bin + the param table; returns the table."""
+    table, off = [], 0
+    with open(mdir / "params.f32.bin", "wb") as f:
+        for name, shape, is_lin in model.param_specs(cfg):
+            arr = np.asarray(params[name], np.float32)
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset": off,
+                    "numel": int(arr.size),
+                    "linear": is_lin,
+                }
+            )
+            off += arr.size
+    (mdir / "config.json").write_text(
+        json.dumps(
+            {
+                "config": cfg.__dict__,
+                "digest": _cfg_digest(cfg, steps),
+                "n_params": int(off),
+                "eval_batch": EVAL_BATCH,
+                "params": table,
+            },
+            indent=1,
+        )
+    )
+    return table
+
+
+def load_cached(cfg: model.Config, mdir: Path, steps: int):
+    """Reload trained params if config.json digest matches (skip training)."""
+    cj = mdir / "config.json"
+    pb = mdir / "params.f32.bin"
+    if not (cj.exists() and pb.exists()):
+        return None
+    meta = json.loads(cj.read_text())
+    if meta.get("digest") != _cfg_digest(cfg, steps):
+        return None
+    flat = np.fromfile(pb, np.float32)
+    out = {}
+    for e in meta["params"]:
+        out[e["name"]] = jnp.asarray(
+            flat[e["offset"] : e["offset"] + e["numel"]].reshape(e["shape"])
+        )
+    return out
+
+
+def lower_model_graphs(cfg: model.Config, mdir: Path) -> None:
+    names = model.param_names(cfg)
+    b, s = EVAL_BATCH, cfg.seq_len
+
+    def as_dict(ptuple):
+        return dict(zip(names, ptuple))
+
+    def nll_fp(ptuple, tokens):
+        return (model.loss_fn(cfg, as_dict(ptuple), tokens),)
+
+    def nll_a8(ptuple, tokens):
+        return (model.loss_fn(cfg, as_dict(ptuple), tokens, fwd=model.forward_a8),)
+
+    def fwd_fp(ptuple, tokens):
+        return (model.forward_fp(cfg, as_dict(ptuple), tokens),)
+
+    def grad(ptuple, tokens):
+        loss, grads = model.grad_linear_fn(cfg, as_dict(ptuple), tokens)
+        return (loss,) + tuple(grads)
+
+    pspecs = tuple(
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape, _ in model.param_specs(cfg)
+    )
+    tok_nll = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+    tok_fwd = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    for fname, fn, tok in [
+        ("nll_fp", nll_fp, tok_nll),
+        ("nll_a8", nll_a8, tok_nll),
+        ("fwd_fp", fwd_fp, tok_fwd),
+        ("grad", grad, tok_nll),
+    ]:
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(pspecs, tok))
+        (mdir / f"{fname}.hlo.txt").write_text(text)
+        print(f"  lowered {cfg.name}/{fname}: {len(text)/1e6:.2f} MB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+
+def sparse_pad_len(k: int, n: int) -> int:
+    raw = int(np.ceil(k * n * SPARSE_FRAC))
+    return int(np.ceil(raw / SPARSE_PAD) * SPARSE_PAD)
+
+
+def lower_halo_graph(cfg: model.Config, mdir: Path) -> None:
+    """Lower the true-HALO forward (L1 Pallas kernels inside the graph)."""
+    names = model.param_names(cfg)
+    lin = set(model.linear_weight_names(cfg))
+    b, s, t = EVAL_BATCH, cfg.seq_len, HALO_TILE
+
+    # HLO parameter layout: non-linear params (canonical order), then per
+    # linear weight (canonical order): idx, codebook, scales, sp_val, sp_pos,
+    # then tokens. Recorded in manifest for the Rust side.
+    rest_names = [n for n in names if n not in lin]
+    lin_names = [n for n in names if n in lin]
+
+    spec_by_name = {n: shp for n, shp, _ in model.param_specs(cfg)}
+    rest_specs = tuple(
+        jax.ShapeDtypeStruct(spec_by_name[n], jnp.float32) for n in rest_names
+    )
+    qspecs = []
+    qlayout = []
+    for n in lin_names:
+        k, nn = spec_by_name[n]
+        nnz = sparse_pad_len(k, nn)
+        qspecs.append(
+            dict(
+                idx=jax.ShapeDtypeStruct((k, nn), jnp.int8),
+                codebook=jax.ShapeDtypeStruct((16,), jnp.float32),
+                scales=jax.ShapeDtypeStruct((k // t, nn // t), jnp.float32),
+                sp_val=jax.ShapeDtypeStruct((nnz,), jnp.float32),
+                sp_pos=jax.ShapeDtypeStruct((nnz,), jnp.int32),
+            )
+        )
+        qlayout.append({"name": n, "k": k, "n": nn, "nnz": nnz})
+
+    def fwd_halo(rest_tuple, qtuple, tokens):
+        params = dict(zip(rest_names, rest_tuple))
+        qparams = dict(zip(lin_names, qtuple))
+        return (model.forward_halo(cfg, params, qparams, tokens, tile=t),)
+
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fwd_halo).lower(rest_specs, tuple(qspecs), tok))
+    (mdir / "fwd_halo.hlo.txt").write_text(text)
+    (mdir / "fwd_halo.json").write_text(
+        json.dumps(
+            {"tile": t, "rest": rest_names, "linear": qlayout,
+             "qfields": ["idx", "codebook", "scales", "sp_val", "sp_pos"]},
+            indent=1,
+        )
+    )
+    print(f"  lowered {cfg.name}/fwd_halo: {len(text)/1e6:.2f} MB "
+          f"({time.time()-t0:.1f}s)", flush=True)
+
+
+def lower_kernel_graphs(kdir: Path) -> None:
+    """Standalone L1 kernels for the Rust runtime microbenches."""
+    m, k, n, t = 128, 256, 1024, 128
+
+    def hm_fn(x, idx, cb, sc):
+        return (hm.halo_matmul(x, idx, cb, sc, tile=t, block_m=m),)
+
+    text = to_hlo_text(
+        jax.jit(hm_fn).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.int8),
+            jax.ShapeDtypeStruct((16,), jnp.float32),
+            jax.ShapeDtypeStruct((k // t, n // t), jnp.float32),
+        )
+    )
+    (kdir / "halo_matmul.hlo.txt").write_text(text)
+
+    nnz = 512
+
+    def sp_fn(val, pos, x):
+        return (sp.spmv(val, pos, x, out_dim=n),)
+
+    text = to_hlo_text(
+        jax.jit(sp_fn).lower(
+            jax.ShapeDtypeStruct((nnz,), jnp.float32),
+            jax.ShapeDtypeStruct((nnz,), jnp.int32),
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+        )
+    )
+    (kdir / "spmv.hlo.txt").write_text(text)
+    (kdir / "kernels.json").write_text(
+        json.dumps({"halo_matmul": {"m": m, "k": k, "n": n, "tile": t},
+                    "spmv": {"m": m, "k": k, "n": n, "nnz": nnz}}, indent=1)
+    )
+    print("  lowered standalone kernels", flush=True)
+
+
+def write_corpora(cdir: Path) -> dict:
+    meta = {}
+    for i, name in enumerate(corpus.SPECS):
+        ev = corpus.generate(name, EVAL_TOKENS, seed=9000 + i)
+        (cdir / f"{name}_eval.u16.bin").write_bytes(ev.tobytes())
+        meta[name] = {
+            "eval_tokens": int(len(ev)),
+            "entropy_bits": corpus.entropy_bits(name),
+        }
+    # Calibration stream: the paper samples from the C4 *training* set.
+    cal = corpus.generate("c4syn", CALIB_TOKENS, seed=7777)
+    (cdir / "calib.u16.bin").write_bytes(cal.tobytes())
+    meta["calib"] = {"tokens": int(len(cal)), "source": "c4syn"}
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny-only, few steps (CI smoke)")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+    fast = args.fast or os.environ.get("HALO_FAST") == "1"
+
+    out = Path(args.out)
+    (out / "corpora").mkdir(parents=True, exist_ok=True)
+    (out / "kernels").mkdir(parents=True, exist_ok=True)
+
+    model_names = args.models or (["tiny"] if fast else list(model.CONFIGS))
+    steps = {k: (20 if fast else v) for k, v in TRAIN_STEPS.items()}
+
+    corpora_meta = write_corpora(out / "corpora")
+    print("corpora written", flush=True)
+
+    models_meta = {}
+    for name in model_names:
+        cfg = model.CONFIGS[name]
+        mdir = out / "models" / name
+        mdir.mkdir(parents=True, exist_ok=True)
+        params = load_cached(cfg, mdir, steps[name])
+        if params is None:
+            print(f"training {name} ({model.count_params(cfg)/1e6:.1f}M params, "
+                  f"{steps[name]} steps)", flush=True)
+            params, log = train.train(cfg, steps=steps[name])
+            dump_params(cfg, params, mdir, steps[name])
+            (mdir / "train_log.json").write_text(json.dumps(log))
+        else:
+            print(f"{name}: cached params reused", flush=True)
+        lower_model_graphs(cfg, mdir)
+        if name == "base" or (fast and name == "tiny"):
+            lower_halo_graph(cfg, mdir)
+        models_meta[name] = {
+            "n_params": model.count_params(cfg),
+            "config": cfg.__dict__,
+            "train_steps": steps[name],
+        }
+
+    lower_kernel_graphs(out / "kernels")
+
+    (out / "manifest.json").write_text(
+        json.dumps(
+            {
+                "halo_tile": HALO_TILE,
+                "sparse_frac": SPARSE_FRAC,
+                "sparse_pad": SPARSE_PAD,
+                "eval_batch": EVAL_BATCH,
+                "vocab": corpus.VOCAB,
+                "corpora": corpora_meta,
+                "models": models_meta,
+                "fast": fast,
+            },
+            indent=1,
+        )
+    )
+    print("manifest written; artifacts complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Synthetic corpora standing in for WikiText-2 and C4 (DESIGN.md §Subst.).
+
+Each corpus is a Zipfian-bigram Markov chain over a 512-token vocabulary:
+row t of the transition matrix is a Zipf(s) distribution over a
+seed-deterministic permutation of the vocabulary. The two corpora differ in
+skew (entropy): ``wikisyn`` is peakier (curated text), ``c4syn`` flatter
+(noisy web crawl), giving the same "C4 perplexity > WikiText perplexity"
+ordering the paper's Table II shows for every model.
+
+Everything is deterministic in (name, seed) so `make artifacts` is
+reproducible and Rust-side evaluation sees the exact same token streams.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 256
+
+# name -> (zipf skew, permutation seed)
+SPECS = {
+    "wikisyn": (1.45, 101),
+    "c4syn": (1.15, 202),
+}
+
+# Mixture weight of the global (unigram) component: every next-token
+# distribution is  (1-MIX)·bigram_row + MIX·unigram. The unigram part is
+# learnable within a few hundred steps (like natural-language frequency
+# structure); the bigram part rewards model capacity (like syntax).
+UNIGRAM_MIX = 0.45
+
+
+def transition_matrix(name: str) -> np.ndarray:
+    """(VOCAB, VOCAB) row-stochastic next-token matrix (bigram + unigram)."""
+    skew, seed = SPECS[name]
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, VOCAB + 1, dtype=np.float64)
+    base = ranks ** (-skew)
+    base /= base.sum()
+    unigram = base[rng.permutation(VOCAB)]
+    mat = np.empty((VOCAB, VOCAB), np.float64)
+    for t in range(VOCAB):
+        perm = rng.permutation(VOCAB)
+        mat[t, perm] = base
+    return (1.0 - UNIGRAM_MIX) * mat + UNIGRAM_MIX * unigram[None, :]
+
+
+def generate(name: str, n_tokens: int, seed: int) -> np.ndarray:
+    """Sample a (n_tokens,) uint16 stream from the corpus chain."""
+    mat = transition_matrix(name)
+    cum = np.cumsum(mat, axis=1)
+    rng = np.random.default_rng(seed)
+    u = rng.random(n_tokens)
+    out = np.empty(n_tokens, np.uint16)
+    t = int(rng.integers(VOCAB))
+    for i in range(n_tokens):
+        t = int(np.searchsorted(cum[t], u[i]))
+        if t >= VOCAB:  # guard fp edge
+            t = VOCAB - 1
+        out[i] = t
+    return out
+
+
+def entropy_bits(name: str) -> float:
+    """Per-token conditional entropy (bits) — the perplexity floor is 2^H."""
+    mat = transition_matrix(name)
+    # Stationary distribution ~ uniform by symmetry of the construction.
+    h = -(mat * np.log2(np.maximum(mat, 1e-300))).sum(axis=1)
+    return float(h.mean())
+
+
+def batches(stream: np.ndarray, batch: int, seq: int) -> np.ndarray:
+    """Reshape a token stream into (n_batches, batch, seq) dropping the tail."""
+    per = batch * seq
+    n = len(stream) // per
+    return stream[: n * per].reshape(n, batch, seq).astype(np.int32)

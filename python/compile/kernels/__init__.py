@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for HALO (build-time only; lowered into L2 HLO).
+
+- :mod:`halo_matmul` — codebook-dequant tiled matmul (the paper's quantized
+  GEMM on the systolic array, re-thought for TPU VMEM/MXU).
+- :mod:`spmv` — hypersparse SpMV for outlier/salient weights (§III-C1).
+- :mod:`tile_stats` — per-tile Fisher sensitivity reduction (Eq. 2).
+- :mod:`ref` — pure-jnp oracles; the correctness contract for all of the
+  above and for the Rust re-implementation.
+"""
+
+from . import halo_matmul, ref, spmv, tile_stats  # noqa: F401

@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: HALO codebook-dequant tiled matmul.
+
+The paper executes non-uniformly quantized weights on a weight-stationary
+systolic array whose PEs hold int8 weights drawn from a small codebook of
+low critical-path-delay values (9 values for low-sensitivity tiles, 16 for
+high-sensitivity tiles), with one dequant scale per 128x128 tile.
+
+TPU re-think (DESIGN.md §Hardware adaptation): the 128x128 *tile* becomes the
+Pallas block. HBM holds only the int8 *indices* (3-4 effective bits of
+entropy, 1 byte stored); the codebook and the per-tile scale ride along as
+tiny operands; dequantization (gather + scale) happens in VMEM immediately
+before the MXU ``dot``. VMEM plays the role of the PE weight registers and
+the BlockSpec index maps play the role of the paper's tile scheduler.
+
+Lowered with ``interpret=True`` — CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU utilization is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 128
+
+
+def _kernel(x_ref, idx_ref, cb_ref, scale_ref, o_ref, *, nk: int):
+    """One (bm x tile) @ (tile x tile) step of the dequant matmul.
+
+    Grid is (M/bm, N/tile, K/tile); K is the reduction (innermost) axis.
+    The output block mapping is independent of the K index, so ``o_ref``
+    persists across the reduction — the classic Pallas accumulate-in-place
+    pattern; partial sums never round-trip through HBM.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequant in VMEM: gather from the (tiny) codebook, apply per-tile scale.
+    w = cb_ref[idx_ref[...].astype(jnp.int32)] * scale_ref[0, 0]
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "block_m", "interpret")
+)
+def halo_matmul(
+    x,
+    idx,
+    codebook,
+    scales,
+    *,
+    tile: int = DEFAULT_TILE,
+    block_m: int = 128,
+    interpret: bool = True,
+):
+    """y = x @ (codebook[idx] * per_tile_scale) as a Pallas kernel.
+
+    Args:
+      x:        (M, K) f32 activations, M % block_m == 0.
+      idx:      (K, N) int8 codebook indices, K/N % tile == 0.
+      codebook: (C,) f32 codebook (9 or 16 live entries; may be padded).
+      scales:   (K//tile, N//tile) f32 per-tile scales.
+      tile:     tile edge (paper default 128).
+      block_m:  rows of x per grid step.
+
+    Returns:
+      (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = idx.shape
+    assert k == k2, (x.shape, idx.shape)
+    assert m % block_m == 0, (m, block_m)
+    assert k % tile == 0 and n % tile == 0, (idx.shape, tile)
+    nk = k // tile
+
+    grid = (m // block_m, n // tile, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+            # Whole codebook visible to every block.
+            pl.BlockSpec(codebook.shape, lambda i, j, kk: (0,)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, tile), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, idx, codebook, scales)
+
+
+def vmem_bytes(tile: int, block_m: int, codebook_len: int = 16) -> int:
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf, L1).
+
+    x block + idx block + dequantized w + output accumulator + codebook
+    + scale. Used by the perf pass to keep the footprint under ~16 MB.
+    """
+    f32 = 4
+    return (
+        block_m * tile * f32  # x block
+        + tile * tile * 1  # idx block (int8)
+        + tile * tile * f32  # dequantized weights
+        + block_m * tile * f32  # output accumulator
+        + codebook_len * f32
+        + f32
+    )
+
+
+def mxu_utilization_estimate(tile: int, block_m: int) -> float:
+    """Crude MXU utilization estimate for DESIGN.md §Perf.
+
+    The MXU is a 128x128 systolic array fed 8 lanes deep; a (bm, t) @ (t, t)
+    dot achieves full utilization when all dims are multiples of 128 and the
+    gather+scale dequant overlaps with the previous dot. We charge the
+    dequant as a VPU pass over the weight block: t*t elements at 8 elem/cycle
+    vs the dot's bm*t*t / (128*128) MXU cycles.
+    """
+    mxu_cycles = block_m * tile * tile / (128.0 * 128.0)
+    vpu_cycles = tile * tile / 8.0
+    dim_eff = min(tile / 128.0, 1.0) * min(block_m / 128.0, 1.0)
+    overlap_eff = mxu_cycles / (mxu_cycles + max(vpu_cycles - mxu_cycles, 0.0))
+    return dim_eff * overlap_eff

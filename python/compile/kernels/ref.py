@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its oracle here to float tolerance (pytest +
+hypothesis sweeps in ``python/tests/``). They are also the semantic spec the
+Rust quantizer re-implements (``rust/src/quant``), so the three layers agree
+on what "HALO quantized matmul" means.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequantize(idx, codebook, scales, tile: int):
+    """Expand HALO codebook-index weights back to dense f32.
+
+    Args:
+      idx:      (K, N) int8/int32 — per-weight index into ``codebook``.
+      codebook: (C,) f32 — low critical-path-delay weight values (9 or 16
+                entries, padded to a power of two for the kernel).
+      scales:   (K // tile, N // tile) f32 — per-tile dequant scale.
+      tile:     tile edge length (paper default 128).
+
+    Returns:
+      (K, N) f32 dense weights ``codebook[idx] * scale_of_tile``.
+    """
+    k, n = idx.shape
+    assert k % tile == 0 and n % tile == 0, (idx.shape, tile)
+    w = codebook[idx.astype(jnp.int32)]
+    s = jnp.repeat(jnp.repeat(scales, tile, axis=0), tile, axis=1)
+    return w * s
+
+
+def halo_matmul(x, idx, codebook, scales, tile: int):
+    """Oracle for the HALO codebook-dequant matmul kernel.
+
+    y = x @ (codebook[idx] * per_tile_scale)
+
+    Args:
+      x: (M, K) f32 activations.
+      idx/codebook/scales/tile: see :func:`dequantize`.
+
+    Returns:
+      (M, N) f32.
+    """
+    return x @ dequantize(idx, codebook, scales, tile)
+
+
+def spmv(val, pos, x, out_dim: int):
+    """Oracle for the hypersparse outlier/salient SpMV (paper §III-C1).
+
+    The sparse matrix W_s (K, N) is stored as ``val[i]`` at flattened
+    position ``pos[i]`` (row-major: pos = row * N + col). Padding entries
+    use val == 0 (pos arbitrary but in range). Computes  y = x @ W_s.
+
+    Args:
+      val: (nnz,) f32 non-zero weight values (zero-padded).
+      pos: (nnz,) int32 flattened positions into the (K, N) matrix.
+      x:   (M, K) f32 dense activations.
+      out_dim: N.
+
+    Returns:
+      (M, N) f32.
+    """
+    k = x.shape[-1]
+    rows = pos // out_dim
+    cols = pos % out_dim
+    dense = jnp.zeros((k, out_dim), x.dtype).at[rows, cols].add(val)
+    return x @ dense
+
+
+def fake_quant_act(x, bits: int = 8):
+    """Per-token symmetric fake quantization of activations (paper: A8).
+
+    Each token (row) gets its own scale max|x| / qmax; zeros stay zero.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    s = jnp.where(s == 0.0, 1.0, s)
+    return jnp.round(x / s).clip(-qmax - 1, qmax) * s
+
+
+def tile_sensitivity(g, tile: int):
+    """Oracle for the per-tile Fisher sensitivity reduction (paper Eq. 2).
+
+    Lambda_Tk = sum_ij g_{k,i,j}^2 / (tile_rows * tile_cols)
+
+    Args:
+      g: (K, N) f32 gradient of the loss w.r.t. the weight matrix.
+      tile: tile edge length.
+
+    Returns:
+      (K // tile, N // tile) f32 per-tile sensitivity scores.
+    """
+    k, n = g.shape
+    assert k % tile == 0 and n % tile == 0, (g.shape, tile)
+    g2 = (g * g).reshape(k // tile, tile, n // tile, tile)
+    return g2.sum(axis=(1, 3)) / float(tile * tile)

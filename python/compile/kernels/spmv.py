@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: hypersparse SpMV for outlier/salient weights.
+
+Paper §III-C1: salient + outlier weights (< 0.5% of all weights) are kept in
+high precision and packaged as ``(val, idx)`` vectors for a dedicated SpMV
+engine:  res[i] = val[i] * b[idx[i]]  scattered into the output.
+
+We compute  y = x @ W_s  where W_s is the (K, N) hypersparse matrix stored
+COO-style as ``val[i]`` at flattened row-major position ``pos[i]``. The
+kernel blocks over the nnz vector; each grid step gathers the activation
+columns its values need and scatter-adds partial products into the output,
+which stays resident across the (sequential) grid — the Pallas analogue of
+the paper's streaming SpMV unit.
+
+interpret=True only (CPU PJRT); see halo_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(val_ref, pos_ref, x_ref, o_ref, *, n: int):
+    """Process one block of nnz entries against the full x / y panels."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    val = val_ref[...]  # (bnnz,)
+    pos = pos_ref[...].astype(jnp.int32)  # (bnnz,)
+    rows = pos // n
+    cols = pos % n
+    # (M, bnnz): activation column for each nnz entry, times its value.
+    contrib = x_ref[...][:, rows] * val[None, :]
+    # Scatter-add into the output columns.
+    o_ref[...] = o_ref[...].at[:, cols].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim", "block_nnz", "interpret"))
+def spmv(val, pos, x, *, out_dim: int, block_nnz: int = 256, interpret: bool = True):
+    """y = x @ scatter(val at pos) for hypersparse (val, pos).
+
+    Args:
+      val: (nnz,) f32 values, zero-padded to a multiple of ``block_nnz``.
+      pos: (nnz,) int32 flattened row-major positions into (K, N).
+      x:   (M, K) f32 activations.
+      out_dim: N.
+      block_nnz: nnz entries per grid step.
+
+    Returns:
+      (M, N) f32.
+    """
+    (nnz,) = val.shape
+    assert pos.shape == (nnz,)
+    block_nnz = min(block_nnz, nnz)  # small layers: single block
+    assert nnz % block_nnz == 0, (nnz, block_nnz)
+    m, k = x.shape
+
+    grid = (nnz // block_nnz,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=out_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda i: (i,)),
+            pl.BlockSpec((block_nnz,), lambda i: (i,)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, out_dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, out_dim), jnp.float32),
+        interpret=interpret,
+    )(val, pos, x)

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: per-tile Fisher sensitivity reduction (Eq. 2).
+
+Lambda_Tk = sum_{i,j in tile k} g_{i,j}^2 / (tile_rows * tile_cols)
+
+Used at calibration time over the gradient tensors produced by the L2 grad
+graph; one grid step per 128x128 tile. Trivial compute, but it is the third
+distinct dataflow in the paper (dense GEMM, SpMV, tile reduction), so it
+gets the same Pallas + oracle treatment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, o_ref, *, tile: int):
+    g = g_ref[...]
+    o_ref[0, 0] = jnp.sum(g * g) / float(tile * tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def tile_sensitivity(g, *, tile: int = 128, interpret: bool = True):
+    """Per-tile mean squared gradient (diagonal Fisher, paper Eq. 2).
+
+    Args:
+      g: (K, N) f32 gradients, K/N % tile == 0.
+      tile: tile edge length.
+
+    Returns:
+      (K//tile, N//tile) f32 sensitivities.
+    """
+    k, n = g.shape
+    assert k % tile == 0 and n % tile == 0, (g.shape, tile)
+    grid = (k // tile, n // tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k // tile, n // tile), jnp.float32),
+        interpret=interpret,
+    )(g)

@@ -1,0 +1,250 @@
+"""Layer-2 JAX model: decoder-only transformer LM (the LLM under test).
+
+Three lowered variants per model (see aot.py):
+
+- ``fwd_fp``   — plain f32 forward (Table II "FP16/Ideal" row).
+- ``fwd_a8``   — forward with per-token 8-bit fake-quantized activations;
+                 weights are ordinary f32 parameters, so Rust substitutes any
+                 fake-quantized weight tensor (RTN / SmoothQuant / GPTQ / ZQ /
+                 HALO) into the same graph. This is the Table II workhorse.
+- ``fwd_halo`` — the true HALO execution path: every linear layer runs the
+                 L1 Pallas codebook-dequant matmul on int8 *indices* plus the
+                 hypersparse SpMV correction (outliers + salient weights),
+                 exactly the dataflow of Fig. 6(b). Used by the Rust serving
+                 coordinator.
+
+Weights are HLO *parameters*, never constants: one lowered graph serves
+every quantization method (DESIGN.md, key decision 2). Parameter order is
+the order of :func:`param_names`, followed by the token batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import halo_matmul as hm
+from .kernels import ref as kref
+from .kernels import spmv as sp
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Transformer hyper-parameters.
+
+    All matrix dims are multiples of 128 so that every linear weight tiles
+    exactly at the paper's 128/64/32 tile sweep sizes.
+    """
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 512
+    seq_len: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# The four model sizes standing in for LLaMA2-7B/13B and OPT-1.3B/30B
+# (DESIGN.md §Substitutions): same architecture family, graded capacity.
+CONFIGS: Dict[str, Config] = {
+    c.name: c
+    for c in [
+        Config(name="tiny", d_model=128, n_layers=2, n_heads=2, d_ff=512),
+        Config(name="small", d_model=256, n_layers=4, n_heads=4, d_ff=1024),
+        Config(name="base", d_model=256, n_layers=6, n_heads=4, d_ff=1024),
+        Config(name="large", d_model=384, n_layers=8, n_heads=6, d_ff=1536),
+    ]
+}
+
+
+def param_specs(cfg: Config) -> List[Tuple[str, Tuple[int, ...], bool]]:
+    """Canonical (name, shape, is_linear_weight) list.
+
+    ``is_linear_weight`` marks the GEMM weights the paper quantizes
+    ("computationally intensive operators such as attention and linear
+    layers"); embeddings / norms / biases stay f32.
+    """
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs: List[Tuple[str, Tuple[int, ...], bool]] = [
+        ("embed", (v, d), False),
+        ("pos_embed", (s, d), False),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.scale", (d,), False),
+            (p + "ln1.bias", (d,), False),
+            (p + "attn.wq", (d, d), True),
+            (p + "attn.wk", (d, d), True),
+            (p + "attn.wv", (d, d), True),
+            (p + "attn.wo", (d, d), True),
+            (p + "ln2.scale", (d,), False),
+            (p + "ln2.bias", (d,), False),
+            (p + "mlp.w1", (d, ff), True),
+            (p + "mlp.b1", (ff,), False),
+            (p + "mlp.w2", (ff, d), True),
+            (p + "mlp.b2", (d,), False),
+        ]
+    specs += [
+        ("ln_f.scale", (d,), False),
+        ("ln_f.bias", (d,), False),
+        ("head", (d, v), True),
+    ]
+    return specs
+
+
+def param_names(cfg: Config) -> List[str]:
+    return [n for n, _, _ in param_specs(cfg)]
+
+
+def linear_weight_names(cfg: Config) -> List[str]:
+    return [n for n, _, lin in param_specs(cfg) if lin]
+
+
+def init_params(cfg: Config, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for name, shape, is_lin in param_specs(cfg):
+        if name.endswith((".scale",)):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith((".bias", ".b1", ".b2")):
+            arr = np.zeros(shape, np.float32)
+        elif is_lin or name in ("embed", "pos_embed"):
+            std = 0.02 if len(shape) < 2 else 1.0 / math.sqrt(shape[0])
+            if name.endswith((".wo", ".w2")):
+                std *= resid_scale
+            arr = rng.normal(0.0, std, shape).astype(np.float32)
+        else:
+            arr = rng.normal(0.0, 0.02, shape).astype(np.float32)
+        out[name] = jnp.asarray(arr)
+    return out
+
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _causal_mask(s: int):
+    return jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+
+def _attention(cfg: Config, x, q, k, v):
+    """(B, S, D) multi-head causal attention given projected q/k/v."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd)
+    logits = jnp.where(_causal_mask(s)[None, None], logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def _forward(cfg: Config, params: Dict[str, jnp.ndarray], tokens, matmul):
+    """Shared forward; ``matmul(name, x2d, default_w)`` performs the GEMM for
+    the linear weight called ``name`` on flattened (B*S, in) activations."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][None, :s]
+
+    def lin(name, t):
+        t2 = t.reshape(b * s, t.shape[-1])
+        return matmul(name, t2, params.get(name)).reshape(b, s, -1)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        hn = _layer_norm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+        q, k, v = lin(p + "attn.wq", hn), lin(p + "attn.wk", hn), lin(p + "attn.wv", hn)
+        x = x + lin(p + "attn.wo", _attention(cfg, hn, q, k, v))
+        hn = _layer_norm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+        h1 = jax.nn.gelu(lin(p + "mlp.w1", hn) + params[p + "mlp.b1"])
+        x = x + lin(p + "mlp.w2", h1) + params[p + "mlp.b2"]
+
+    x = _layer_norm(x, params["ln_f.scale"], params["ln_f.bias"])
+    return lin("head", x)
+
+
+def forward_fp(cfg: Config, params, tokens):
+    """Plain f32 forward → logits (B, S, vocab)."""
+    return _forward(cfg, params, tokens, lambda _n, x, w: x @ w)
+
+
+def forward_a8(cfg: Config, params, tokens):
+    """Forward with per-token A8 fake-quantized activations at every GEMM."""
+    return _forward(
+        cfg, params, tokens, lambda _n, x, w: kref.fake_quant_act(x) @ w
+    )
+
+
+def forward_halo(cfg: Config, params, qparams, tokens, tile: int = 128):
+    """True HALO path: L1 Pallas codebook matmul + SpMV correction per GEMM.
+
+    ``qparams[name]`` is a dict with keys ``idx`` (K,N i8), ``codebook``
+    (C,), ``scales`` (K//tile, N//tile), ``sp_val`` (nnz,), ``sp_pos``
+    (nnz, i32). Non-linear params come from ``params`` as usual.
+    """
+
+    def mm(name, x, _w):
+        q = qparams[name]
+        xq = kref.fake_quant_act(x)
+        y = hm.halo_matmul(xq, q["idx"], q["codebook"], q["scales"], tile=tile,
+                           block_m=min(128, x.shape[0]))
+        n = q["idx"].shape[1]
+        return y + sp.spmv(q["sp_val"], q["sp_pos"], xq, out_dim=n)
+
+    return _forward(cfg, params, tokens, mm)
+
+
+def loss_fn(cfg: Config, params, tokens, fwd=None):
+    """Next-token mean cross-entropy over (B, S+1) token batch.
+
+    ``fwd`` selects the forward variant (default :func:`forward_fp`;
+    :func:`forward_a8` gives the quantized-activation loss used by the
+    Table II evaluation graphs).
+    """
+    fwd = fwd or forward_fp
+    logits = fwd(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def grad_linear_fn(cfg: Config, params, tokens):
+    """(loss, grads-for-linear-weights) — the Fisher inputs (paper Eq. 1).
+
+    Only the quantizable GEMM weights get gradients in the lowered artifact,
+    keeping the output tuple small.
+    """
+    lin_names = linear_weight_names(cfg)
+
+    def f(lin_weights, rest, toks):
+        p = dict(rest)
+        p.update(dict(zip(lin_names, lin_weights)))
+        return loss_fn(cfg, p, toks)
+
+    lin = tuple(params[n] for n in lin_names)
+    rest = {k: v for k, v in params.items() if k not in lin_names}
+    loss, grads = jax.value_and_grad(f)(lin, rest, tokens)
+    return loss, grads
+
+
+def count_params(cfg: Config) -> int:
+    return sum(int(np.prod(s)) for _, s, _ in param_specs(cfg))

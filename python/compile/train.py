@@ -1,0 +1,91 @@
+"""Build-time training loop (Adam) for the synthetic-corpus LMs.
+
+Runs once inside `make artifacts`; never on the request path. Checkpoints
+land in artifacts/models/<name>/params.f32.bin and are reused on rebuild.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def adam_init(params: Dict[str, jnp.ndarray]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def lr_schedule(step, total, peak=6e-3, floor=1e-3, warmup=20):
+    """Linear warmup to `peak`, cosine decay to `floor`."""
+    import numpy as np
+
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(total - warmup, 1)
+    return floor + 0.5 * (peak - floor) * (1 + np.cos(np.pi * frac))
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    lr_t = lr * jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+    new = {k: params[k] - lr_t * m[k] / (jnp.sqrt(v[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def make_step(cfg: model.Config):
+    @jax.jit
+    def step(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(cfg, p, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return step
+
+
+def data_iter(batch: int, seq: int, seed: int) -> Iterator[np.ndarray]:
+    """Alternate batches from both corpora (the 'mixed web data' trainset)."""
+    streams = {n: corpus.generate(n, 600_000, seed=seed + i) for i, n in enumerate(corpus.SPECS)}
+    bat = {n: corpus.batches(s, batch, seq + 1) for n, s in streams.items()}
+    names = list(corpus.SPECS)
+    i = 0
+    while True:
+        for n in names:
+            yield bat[n][i % len(bat[n])]
+        i += 1
+
+
+def train(
+    cfg: model.Config,
+    steps: int,
+    batch: int = 8,
+    seed: int = 0,
+    log_every: int = 50,
+) -> Tuple[Dict[str, jnp.ndarray], list]:
+    """Train ``cfg`` for ``steps`` Adam steps; returns (params, loss log)."""
+    params = model.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+    step = make_step(cfg)
+    it = data_iter(batch, cfg.seq_len, seed=1234)
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        tokens = jnp.asarray(next(it))
+        params, opt, loss = step(params, opt, tokens, lr_schedule(s, steps))
+        if s % log_every == 0 or s == steps - 1:
+            l = float(loss)
+            log.append((s, l))
+            print(
+                f"  [{cfg.name}] step {s:4d} loss {l:6.3f} ppl {np.exp(l):8.2f} "
+                f"({time.time() - t0:5.1f}s)",
+                flush=True,
+            )
+    return params, log

@@ -1,0 +1,104 @@
+"""AOT artifact sanity: manifest, param tables, HLO text well-formedness.
+
+Runs against whatever ``artifacts/`` the Makefile produced (fast or full).
+Skips if artifacts have not been built yet.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_fields():
+    m = _manifest()
+    assert m["halo_tile"] == 128
+    assert 0 < m["sparse_frac"] <= 0.01
+    assert set(m["corpora"]) >= {"wikisyn", "c4syn", "calib"}
+    assert m["models"]
+
+
+@pytest.mark.parametrize("corp", ["wikisyn", "c4syn"])
+def test_corpus_files(corp):
+    m = _manifest()
+    data = np.fromfile(ART / "corpora" / f"{corp}_eval.u16.bin", np.uint16)
+    assert len(data) == m["corpora"][corp]["eval_tokens"]
+    assert data.max() < m["vocab"]
+
+
+def test_param_bin_matches_table():
+    m = _manifest()
+    for name in m["models"]:
+        meta = json.loads((ART / "models" / name / "config.json").read_text())
+        flat = np.fromfile(ART / "models" / name / "params.f32.bin", np.float32)
+        assert len(flat) == meta["n_params"]
+        last = meta["params"][-1]
+        assert last["offset"] + last["numel"] == meta["n_params"]
+        # Table order matches the model's canonical param order.
+        cfg = model.CONFIGS[name]
+        assert [e["name"] for e in meta["params"]] == model.param_names(cfg)
+        assert np.isfinite(flat).all()
+
+
+@pytest.mark.parametrize("g", ["nll_fp", "nll_a8", "fwd_fp", "grad"])
+def test_hlo_text_wellformed(g):
+    m = _manifest()
+    for name in m["models"]:
+        text = (ART / "models" / name / f"{g}.hlo.txt").read_text()
+        assert "ENTRY" in text and "ROOT" in text
+        cfg = model.CONFIGS[name]
+        # params + tokens all appear as HLO parameters. Subcomputations
+        # (reduces etc.) declare their own parameter() instructions, so the
+        # total count is a lower bound check.
+        n_params = len(model.param_names(cfg)) + 1
+        assert text.count("parameter(") >= n_params, (name, g)
+        # the token batch parameter is the (B, S(+1)) s32 operand
+        assert "s32[" in text
+
+
+def test_halo_graph_layout():
+    m = _manifest()
+    name = "base" if "base" in m["models"] else next(iter(m["models"]))
+    meta_p = ART / "models" / name / "fwd_halo.json"
+    if not meta_p.exists():
+        pytest.skip("fwd_halo only lowered for base model")
+    meta = json.loads(meta_p.read_text())
+    cfg = model.CONFIGS[name]
+    assert meta["tile"] == 128
+    assert [e["name"] for e in meta["linear"]] == model.linear_weight_names(cfg)
+    for e in meta["linear"]:
+        assert e["nnz"] % aot.SPARSE_PAD == 0
+        assert e["nnz"] >= e["k"] * e["n"] * aot.SPARSE_FRAC
+    text = (ART / "models" / name / "fwd_halo.hlo.txt").read_text()
+    n_hlo_params = (len(meta["rest"]) + 5 * len(meta["linear"])) + 1
+    assert text.count("parameter(") >= n_hlo_params
+    assert "s8[" in text  # codebook index operands reached the graph
+
+
+def test_kernel_artifacts():
+    kj = json.loads((ART / "kernels" / "kernels.json").read_text())
+    for k in ["halo_matmul", "spmv"]:
+        text = (ART / "kernels" / f"{k}.hlo.txt").read_text()
+        assert "ENTRY" in text
+        assert kj[k]["m"] > 0
+
+
+def test_sparse_pad_len():
+    assert aot.sparse_pad_len(128, 128) == 256  # ceil(82) -> 256
+    assert aot.sparse_pad_len(1024, 1024) % aot.SPARSE_PAD == 0
+    assert aot.sparse_pad_len(1024, 1024) >= 1024 * 1024 * aot.SPARSE_FRAC

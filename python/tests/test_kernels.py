@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the instruction from DESIGN.md: the kernel
+contract is what the Rust quantizer re-implements, so these tests are the
+three-layer agreement point).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import halo_matmul as hm
+from compile.kernels import ref
+from compile.kernels import spmv as sp
+from compile.kernels import tile_stats as ts
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_case(seed, tile, mt, kt, nt, cb_len):
+    r = _rng(seed)
+    m, k, n = mt * tile, kt * tile, nt * tile
+    x = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, cb_len, size=(k, n)), jnp.int8)
+    cb = jnp.asarray(r.normal(size=(cb_len,)), jnp.float32)
+    sc = jnp.asarray(r.uniform(0.25, 4.0, size=(k // tile, n // tile)), jnp.float32)
+    return x, idx, cb, sc
+
+
+class TestHaloMatmul:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([8, 16, 32]),
+        mt=st.integers(1, 3),
+        kt=st.integers(1, 3),
+        nt=st.integers(1, 3),
+        cb_len=st.sampled_from([9, 16]),
+    )
+    def test_matches_ref(self, seed, tile, mt, kt, nt, cb_len):
+        x, idx, cb, sc = make_case(seed, tile, mt, kt, nt, cb_len)
+        got = hm.halo_matmul(x, idx, cb, sc, tile=tile, block_m=tile)
+        want = ref.halo_matmul(x, idx, cb, sc, tile)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_paper_tile_128(self):
+        x, idx, cb, sc = make_case(7, 128, 1, 2, 2, 16)
+        got = hm.halo_matmul(x, idx, cb, sc, tile=128, block_m=128)
+        want = ref.halo_matmul(x, idx, cb, sc, 128)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_block_m_smaller_than_tile(self):
+        x, idx, cb, sc = make_case(3, 32, 2, 2, 2, 9)
+        got = hm.halo_matmul(x, idx, cb, sc, tile=32, block_m=16)
+        want = ref.halo_matmul(x, idx, cb, sc, 32)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_scale_tile_zeroes_block(self):
+        x, idx, cb, _ = make_case(11, 16, 1, 1, 2, 16)
+        sc = jnp.asarray([[0.0, 1.0]], jnp.float32)
+        got = hm.halo_matmul(x, idx, cb, sc, tile=16, block_m=16)
+        assert float(jnp.abs(got[:, :16]).max()) == 0.0
+        assert float(jnp.abs(got[:, 16:]).max()) > 0.0
+
+    def test_rejects_ragged(self):
+        x, idx, cb, sc = make_case(0, 16, 1, 1, 1, 16)
+        with pytest.raises(AssertionError):
+            hm.halo_matmul(x[:, :-1], idx[:-1], cb, sc, tile=16, block_m=16)
+
+    def test_vmem_budget(self):
+        # DESIGN.md §Perf L1: default block shapes stay far under 16 MB VMEM.
+        assert hm.vmem_bytes(128, 128) < 16 * 2**20
+        assert 0.0 < hm.mxu_utilization_estimate(128, 128) <= 1.0
+
+
+class TestSpmv:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.sampled_from([4, 8, 16]),
+        k=st.sampled_from([16, 64]),
+        n=st.sampled_from([16, 32, 128]),
+        blocks=st.integers(1, 4),
+    )
+    def test_matches_ref(self, seed, m, k, n, blocks):
+        r = _rng(seed)
+        nnz = 64 * blocks
+        val = jnp.asarray(r.normal(size=(nnz,)), jnp.float32)
+        pos = jnp.asarray(r.integers(0, k * n, size=(nnz,)), jnp.int32)
+        x = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+        got = sp.spmv(val, pos, x, out_dim=n, block_nnz=64)
+        want = ref.spmv(val, pos, x, n)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_duplicate_positions_accumulate(self):
+        # Paper packaging never duplicates, but the kernel must still be a
+        # well-defined scatter-add (Rust property tests rely on it).
+        val = jnp.asarray([1.0, 2.0, 0.0, 0.0], jnp.float32)
+        pos = jnp.asarray([5, 5, 0, 0], jnp.int32)
+        x = jnp.eye(4, dtype=jnp.float32)
+        got = sp.spmv(val, pos, x, out_dim=4, block_nnz=4)
+        want = ref.spmv(val, pos, x, 4)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_padding_is_noop(self):
+        r = _rng(0)
+        val = jnp.concatenate(
+            [jnp.asarray(r.normal(size=(32,)), jnp.float32), jnp.zeros(32)]
+        )
+        pos = jnp.asarray(r.integers(0, 64, size=(64,)), jnp.int32)
+        x = jnp.asarray(r.normal(size=(4, 8)), jnp.float32)
+        got = sp.spmv(val, pos, x, out_dim=8, block_nnz=32)
+        want = ref.spmv(val[:32], pos[:32], x, 8)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestTileStats:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([8, 32]),
+        kt=st.integers(1, 4),
+        nt=st.integers(1, 4),
+    )
+    def test_matches_ref(self, seed, tile, kt, nt):
+        r = _rng(seed)
+        g = jnp.asarray(r.normal(size=(kt * tile, nt * tile)), jnp.float32)
+        got = ts.tile_sensitivity(g, tile=tile)
+        want = ref.tile_sensitivity(g, tile)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_constant_tile_value(self):
+        g = jnp.full((16, 16), 2.0, jnp.float32)
+        got = ts.tile_sensitivity(g, tile=8)
+        np.testing.assert_allclose(got, jnp.full((2, 2), 4.0), rtol=1e-6)
+
+
+class TestFakeQuantAct:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]))
+    def test_bounded_error(self, seed, bits):
+        r = _rng(seed)
+        x = jnp.asarray(r.normal(size=(8, 32)) * 10, jnp.float32)
+        xq = ref.fake_quant_act(x, bits=bits)
+        # Per-token scale bounds the max error to scale/2.
+        s = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / (2 ** (bits - 1) - 1)
+        assert np.all(np.abs(np.asarray(xq - x)) <= s / 2 + 1e-6)
+
+    def test_zero_rows_stay_zero(self):
+        x = jnp.zeros((2, 8), jnp.float32)
+        assert float(jnp.abs(ref.fake_quant_act(x)).max()) == 0.0
+
+    def test_idempotent(self):
+        r = _rng(1)
+        x = jnp.asarray(r.normal(size=(4, 16)), jnp.float32)
+        xq = ref.fake_quant_act(x)
+        np.testing.assert_allclose(ref.fake_quant_act(xq), xq, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,111 @@
+//! Dynamic batcher: collect requests until the batch fills or the timeout
+//! since the *first* pending request expires (vLLM-style continuous
+//! batching, simplified to fixed-shape batches because the AOT graph has a
+//! static (B, S)).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub batch_size: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { batch_size: 8, timeout: Duration::from_millis(5) }
+    }
+}
+
+/// Pulls from a channel and yields batches.
+pub struct Batcher<T> {
+    pub cfg: BatcherConfig,
+    rx: Receiver<T>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig, rx: Receiver<T>) -> Self {
+        Self { cfg, rx }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel closed and
+    /// no items remain.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block for the first item.
+        let first = match self.rx.recv() {
+            Ok(x) => x,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.timeout;
+        while batch.len() < self.cfg.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(x) => batch.push(x),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_size() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
+            rx,
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 8, timeout: Duration::from_millis(10) },
+            rx,
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![42]);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn none_after_close() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(BatcherConfig::default(), rx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 8, timeout: Duration::from_millis(1) },
+            rx,
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,80 @@
+//! Serving metrics: counters + latency reservoir, lock-light.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_tokens: AtomicU64,
+    /// Simulated DVFS transitions accounted by the executor.
+    pub dvfs_transitions: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() < 1_000_000 {
+            l.push(d.as_micros() as u64);
+        }
+    }
+
+    pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return None;
+        }
+        l.sort_unstable();
+        let i = ((l.len() - 1) as f64 * p) as usize;
+        Some(Duration::from_micros(l[i]))
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.responses.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} occupancy={:.2} p50={:?} p95={:?} dvfs_transitions={}",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.percentile_latency(0.5).unwrap_or_default(),
+            self.percentile_latency(0.95).unwrap_or_default(),
+            self.dvfs_transitions.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.percentile_latency(0.5).unwrap(), Duration::from_micros(300));
+        assert_eq!(m.percentile_latency(1.0).unwrap(), Duration::from_micros(1000));
+        assert!(m.percentile_latency(0.0).unwrap() <= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn occupancy() {
+        let m = Metrics::default();
+        m.responses.store(24, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_occupancy(), 6.0);
+    }
+}

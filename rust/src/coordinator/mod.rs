@@ -1,0 +1,19 @@
+//! L3 serving coordinator: request router → dynamic batcher → executor.
+//!
+//! The offline build has no tokio, so the coordinator is built directly on
+//! std threads + channels (arguably closer to the deterministic lockstep
+//! the paper's systolic target wants anyway). Python never appears here:
+//! the executor thread owns the PJRT executable loaded from `artifacts/`.
+//!
+//! DVFS-awareness (§III-C3): each quantized model carries a
+//! [`crate::dvfs::Schedule`]; the executor executes whole batches and
+//! accounts the simulated per-class residency + transition overhead into
+//! the metrics, mirroring how the systolic array would clock the pass.
+
+pub mod batch;
+pub mod metrics;
+pub mod server;
+
+pub use batch::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use server::{BatchExecutor, Coordinator, Request, Response};

@@ -1,0 +1,312 @@
+//! The coordinator: router → batcher → executor threads.
+//!
+//! The executor is abstracted behind [`BatchExecutor`] so the coordinator's
+//! routing/batching invariants are testable without PJRT; the production
+//! executor ([`PjrtExecutor`]) owns the compiled `fwd` graph and the
+//! quantized parameter literals (PJRT handles are not `Send`, so the
+//! executor is *constructed inside* its thread via a factory closure).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batch::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use crate::dvfs::Schedule;
+use crate::quant::Matrix;
+use crate::runtime::{literal_i32, ModelArtifacts, Runtime};
+
+/// One inference request: a token prefix; the response carries the argmax
+/// next token at the prefix end.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub respond: Sender<Response>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub next_token: i32,
+    pub latency: std::time::Duration,
+}
+
+/// What the executor thread runs per batch: padded token matrix in, one
+/// next-token per request out.
+pub trait BatchExecutor {
+    /// Max sequences per executed batch (the AOT graph's B).
+    fn batch_capacity(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    /// `prefixes` has ≤ batch_capacity entries, each ≤ seq_len tokens.
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>>;
+    /// Simulated DVFS transitions for one pass (schedule metadata).
+    fn dvfs_transitions(&self) -> usize {
+        0
+    }
+}
+
+/// Production executor: fwd graph + (quantized) parameter literals.
+pub struct PjrtExecutor {
+    rt: Runtime,
+    exe: crate::runtime::Executable,
+    /// Parameters resident on device across batches (§Perf L3).
+    params: Vec<xla::PjRtBuffer>,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    schedule: Schedule,
+}
+
+impl PjrtExecutor {
+    /// Build inside the executor thread. `replace` substitutes quantized
+    /// linear weights; `schedule` is the model's DVFS class schedule.
+    pub fn new(
+        rt: Runtime,
+        model: &ModelArtifacts,
+        replace: &BTreeMap<String, Matrix>,
+        schedule: Schedule,
+    ) -> Result<Self> {
+        let exe = rt.load(&model.graph_path("fwd_fp"))?;
+        let params = rt.upload_all(&model.param_literals(replace)?)?;
+        Ok(Self {
+            rt,
+            exe,
+            params,
+            batch: model.eval_batch,
+            seq: model.seq_len,
+            vocab: model.vocab,
+            schedule,
+        })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+        anyhow::ensure!(prefixes.len() <= self.batch, "over-full batch");
+        // Pad to the static (B, S) shape; causality makes right-padding safe.
+        let mut tokens = vec![0i32; self.batch * self.seq];
+        for (i, p) in prefixes.iter().enumerate() {
+            let n = p.len().min(self.seq);
+            tokens[i * self.seq..i * self.seq + n].copy_from_slice(&p[..n]);
+        }
+        let tok_buf = self
+            .rt
+            .upload(&literal_i32(&tokens, &[self.batch, self.seq])?)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        inputs.push(&tok_buf);
+        let out = self.exe.run_b(&inputs)?;
+        let logits: Vec<f32> = out[0].to_vec()?;
+        // logits: (B, S, vocab); read the argmax at each prefix's last pos.
+        let next = prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let pos = p.len().min(self.seq) - 1;
+                let base = (i * self.seq + pos) * self.vocab;
+                let row = &logits[base..base + self.vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(t, _)| t as i32)
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok(next)
+    }
+
+    fn dvfs_transitions(&self) -> usize {
+        self.schedule.transitions()
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    handle: Option<JoinHandle<Result<()>>>,
+    pub metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Start with an executor factory (runs on the executor thread — PJRT
+    /// handles never cross threads).
+    pub fn start<F>(cfg: BatcherConfig, make_executor: F) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let mut exec = make_executor()?;
+            let cfg = BatcherConfig {
+                batch_size: cfg.batch_size.min(exec.batch_capacity()),
+                ..cfg
+            };
+            let batcher = Batcher::new(cfg, rx);
+            while let Some(batch) = batcher.next_batch() {
+                let prefixes: Vec<Vec<i32>> =
+                    batch.iter().map(|r| r.tokens.clone()).collect();
+                let next = exec.run(&prefixes)?;
+                m.batches.fetch_add(1, Ordering::Relaxed);
+                m.batch_tokens
+                    .fetch_add(prefixes.iter().map(|p| p.len() as u64).sum(), Ordering::Relaxed);
+                m.dvfs_transitions
+                    .fetch_add(exec.dvfs_transitions() as u64, Ordering::Relaxed);
+                for (req, tok) in batch.into_iter().zip(next) {
+                    let latency = req.submitted.elapsed();
+                    m.record_latency(latency);
+                    m.responses.fetch_add(1, Ordering::Relaxed);
+                    // Receiver may have gone away; that's the client's loss.
+                    let _ = req.respond.send(Response { id: req.id, next_token: tok, latency });
+                }
+            }
+            Ok(())
+        });
+        Self {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a prefix; returns the response channel.
+    pub fn submit(&self, tokens: Vec<i32>) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, tokens, respond: rtx, submitted: Instant::now() };
+        self.tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(req)
+            .expect("executor thread died");
+        rrx
+    }
+
+    /// Drain and stop the executor thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().expect("executor thread panicked")?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    /// Deterministic fake: next token = sum of prefix mod 97.
+    struct Echo {
+        cap: usize,
+    }
+
+    impl BatchExecutor for Echo {
+        fn batch_capacity(&self) -> usize {
+            self.cap
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            Ok(prefixes.iter().map(|p| p.iter().sum::<i32>() % 97).collect())
+        }
+        fn dvfs_transitions(&self) -> usize {
+            2
+        }
+    }
+
+    fn start(batch: usize) -> Coordinator {
+        Coordinator::start(
+            BatcherConfig { batch_size: batch, timeout: Duration::from_millis(2) },
+            move || Ok(Box::new(Echo { cap: batch }) as Box<dyn BatchExecutor>),
+        )
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once() {
+        let c = start(4);
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        let mut rng = Rng::seed_from_u64(1);
+        for i in 0..97 {
+            let tokens: Vec<i32> =
+                (0..1 + rng.gen_usize(10)).map(|_| rng.gen_usize(50) as i32).collect();
+            want.push((i as u64, tokens.iter().sum::<i32>() % 97));
+            rxs.push(c.submit(tokens));
+        }
+        for (rx, (id, tok)) in rxs.into_iter().zip(want) {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.next_token, tok);
+            // one response only
+            assert!(rx.recv_timeout(Duration::from_millis(1)).is_err());
+        }
+        let m = &c.metrics;
+        assert_eq!(m.requests.load(Ordering::Relaxed), 97);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 97);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let c = start(8);
+        let rxs: Vec<_> = (0..64).map(|i| c.submit(vec![i])).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let batches = c.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches < 64, "no batching happened: {batches}");
+        assert!(c.metrics.mean_batch_occupancy() > 1.1);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dvfs_transitions_accounted_per_batch() {
+        let c = start(4);
+        let rxs: Vec<_> = (0..8).map(|i| c.submit(vec![i])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let b = c.metrics.batches.load(Ordering::Relaxed);
+        assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 2 * b);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let c = start(2);
+        let rx = c.submit(vec![1, 2, 3]);
+        c.shutdown().unwrap();
+        assert_eq!(rx.recv().unwrap().next_token, 6);
+    }
+}

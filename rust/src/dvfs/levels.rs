@@ -1,0 +1,144 @@
+//! DVFS levels (paper Table I) and frequency classes.
+//!
+//! The paper *assumes* the Table I ladders ("deriving levels from MAC
+//! characteristics"); our circuit model reproduces the class structure
+//! (which weight values are fast) with a smaller frequency spread than the
+//! authors' 22 nm PrimeTime numbers (DESIGN.md §Substitutions documents
+//! the gap). Default simulations therefore clock classes at the paper's
+//! ladder; `Ladder::derived` exposes our model's own numbers for the
+//! ablation (`halo ablate derived-ladder`).
+
+use crate::mac::MacProfile;
+
+/// A voltage/frequency operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Level {
+    pub volts: f64,
+    pub ghz: f64,
+}
+
+/// Which codebook class a tile's stored values belong to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FreqClass {
+    /// Full int8 range (uniform baselines, outlier/salient SpMV).
+    Base = 0,
+    /// 16-value medium codebook (high-sensitivity tiles).
+    Med = 1,
+    /// 9-value fast codebook (low-sensitivity tiles).
+    Fast = 2,
+}
+
+impl FreqClass {
+    pub const ALL: [FreqClass; 3] = [FreqClass::Base, FreqClass::Med, FreqClass::Fast];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FreqClass::Base => "base",
+            FreqClass::Med => "med",
+            FreqClass::Fast => "fast",
+        }
+    }
+}
+
+/// Classify a tile by its achievable frequency from the circuit model
+/// (compare against the derived class frequencies, not the paper ladder).
+pub fn classify(achievable_ghz: f64, profile: &MacProfile) -> FreqClass {
+    if achievable_ghz >= profile.f_fast_ghz - 1e-9 {
+        FreqClass::Fast
+    } else if achievable_ghz >= profile.f_med_ghz - 1e-9 {
+        FreqClass::Med
+    } else {
+        FreqClass::Base
+    }
+}
+
+/// An ordered (Base → Med → Fast) set of operating points.
+#[derive(Debug, Clone)]
+pub struct Ladder {
+    pub name: &'static str,
+    pub levels: [Level; 3],
+}
+
+impl Ladder {
+    /// Table I, systolic array (TPU) row.
+    pub fn paper_systolic() -> Self {
+        Self {
+            name: "paper-systolic",
+            levels: [
+                Level { volts: 1.0, ghz: 1.9 },
+                Level { volts: 1.1, ghz: 2.4 },
+                Level { volts: 1.2, ghz: 3.7 },
+            ],
+        }
+    }
+
+    /// Table I, GPU row.
+    pub fn paper_gpu() -> Self {
+        Self {
+            name: "paper-gpu",
+            levels: [
+                Level { volts: 0.9, ghz: 1.5 },
+                Level { volts: 1.0, ghz: 2.0 },
+                Level { volts: 1.1, ghz: 2.8 },
+            ],
+        }
+    }
+
+    /// Ladder derived from our own gate-level MAC model (ablation).
+    pub fn derived(profile: &MacProfile) -> Self {
+        Self {
+            name: "derived",
+            levels: [
+                Level { volts: 1.0, ghz: profile.f_base_ghz },
+                Level { volts: 1.1, ghz: profile.f_med_ghz },
+                Level { volts: 1.2, ghz: profile.f_fast_ghz },
+            ],
+        }
+    }
+
+    pub fn level(&self, class: FreqClass) -> Level {
+        self.levels[class as usize]
+    }
+}
+
+/// DVFS transition cost (paper §III-C3: "tens of nanoseconds to a few
+/// microseconds"); we take the conservative end.
+pub const TRANSITION_S: f64 = 2e-6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ladders_match_table1() {
+        let s = Ladder::paper_systolic();
+        assert_eq!(s.level(FreqClass::Base).ghz, 1.9);
+        assert_eq!(s.level(FreqClass::Fast).ghz, 3.7);
+        let g = Ladder::paper_gpu();
+        assert_eq!(g.level(FreqClass::Med).volts, 1.0);
+        assert_eq!(g.level(FreqClass::Fast).ghz, 2.8);
+    }
+
+    #[test]
+    fn ladders_monotone() {
+        for l in [
+            Ladder::paper_systolic(),
+            Ladder::paper_gpu(),
+            Ladder::derived(MacProfile::cached()),
+        ] {
+            assert!(l.levels[0].ghz < l.levels[1].ghz);
+            assert!(l.levels[1].ghz < l.levels[2].ghz);
+            assert!(l.levels[0].volts <= l.levels[2].volts);
+        }
+    }
+
+    #[test]
+    fn classify_boundaries() {
+        let p = MacProfile::cached();
+        assert_eq!(classify(p.f_fast_ghz, p), FreqClass::Fast);
+        assert_eq!(classify(p.f_med_ghz, p), FreqClass::Med);
+        assert_eq!(classify(p.f_base_ghz, p), FreqClass::Base);
+        assert_eq!(classify(0.5, p), FreqClass::Base);
+        assert_eq!(classify(99.0, p), FreqClass::Fast);
+    }
+}

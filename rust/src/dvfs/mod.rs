@@ -1,0 +1,9 @@
+//! DVFS subsystem (paper §III-C): operating points, tile classification,
+//! transition scheduling, and the goal-driven variant optimizer.
+
+pub mod levels;
+pub mod optimizer;
+pub mod schedule;
+
+pub use levels::{classify, FreqClass, Ladder, Level, TRANSITION_S};
+pub use schedule::{Group, Schedule};

@@ -1,0 +1,115 @@
+//! Goal-driven quantization/DVFS co-optimization (paper Fig 1 + §III-C):
+//! enumerate (variant × tile size) candidates, predict (latency, energy,
+//! weight-MSE) with the systolic simulator, and return the Pareto-optimal
+//! set — the paper's "set of Pareto-optimal quantized models, each paired
+//! with a corresponding DVFS schedule".
+
+use crate::quant::Variant;
+
+/// One candidate operating point.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub variant: Variant,
+    pub tile: usize,
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Accuracy proxy (weight reconstruction MSE or measured perplexity).
+    pub accuracy_cost: f64,
+}
+
+impl Candidate {
+    /// True iff `self` dominates `other` (no worse on all axes, strictly
+    /// better on one).
+    pub fn dominates(&self, other: &Candidate) -> bool {
+        let le = self.time_s <= other.time_s
+            && self.energy_j <= other.energy_j
+            && self.accuracy_cost <= other.accuracy_cost;
+        let lt = self.time_s < other.time_s
+            || self.energy_j < other.energy_j
+            || self.accuracy_cost < other.accuracy_cost;
+        le && lt
+    }
+}
+
+/// Filter to the Pareto-optimal front (order preserved).
+pub fn pareto_front(candidates: &[Candidate]) -> Vec<Candidate> {
+    candidates
+        .iter()
+        .filter(|c| !candidates.iter().any(|d| d.dominates(c)))
+        .cloned()
+        .collect()
+}
+
+/// Pick from the front by user goal weights (normalized scalarization).
+pub fn select(front: &[Candidate], w_time: f64, w_energy: f64, w_acc: f64) -> Option<Candidate> {
+    if front.is_empty() {
+        return None;
+    }
+    let max_t = front.iter().map(|c| c.time_s).fold(f64::MIN, f64::max).max(1e-30);
+    let max_e = front.iter().map(|c| c.energy_j).fold(f64::MIN, f64::max).max(1e-30);
+    let max_a = front
+        .iter()
+        .map(|c| c.accuracy_cost)
+        .fold(f64::MIN, f64::max)
+        .max(1e-30);
+    front
+        .iter()
+        .min_by(|a, b| {
+            let sa = w_time * a.time_s / max_t
+                + w_energy * a.energy_j / max_e
+                + w_acc * a.accuracy_cost / max_a;
+            let sb = w_time * b.time_s / max_t
+                + w_energy * b.energy_j / max_e
+                + w_acc * b.accuracy_cost / max_a;
+            sa.partial_cmp(&sb).unwrap()
+        })
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: Variant, t: f64, e: f64, a: f64) -> Candidate {
+        Candidate { variant: v, tile: 128, time_s: t, energy_j: e, accuracy_cost: a }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let cands = vec![
+            c(Variant::PerfOpt, 1.0, 2.0, 3.0),
+            c(Variant::Bal, 1.5, 2.5, 3.5), // dominated by the first
+            c(Variant::AccOpt, 2.0, 1.0, 1.0),
+        ];
+        let front = pareto_front(&cands);
+        assert_eq!(front.len(), 2);
+        assert!(front.iter().all(|x| x.variant != Variant::Bal));
+    }
+
+    #[test]
+    fn incomparable_points_survive() {
+        let cands = vec![
+            c(Variant::PerfOpt, 1.0, 3.0, 3.0),
+            c(Variant::Bal, 2.0, 2.0, 2.0),
+            c(Variant::AccOpt, 3.0, 1.0, 1.0),
+        ];
+        assert_eq!(pareto_front(&cands).len(), 3);
+    }
+
+    #[test]
+    fn goal_weights_steer_selection() {
+        let cands = vec![
+            c(Variant::PerfOpt, 1.0, 3.0, 3.0),
+            c(Variant::AccOpt, 3.0, 1.0, 1.0),
+        ];
+        let front = pareto_front(&cands);
+        assert_eq!(select(&front, 1.0, 0.0, 0.0).unwrap().variant, Variant::PerfOpt);
+        assert_eq!(select(&front, 0.0, 0.0, 1.0).unwrap().variant, Variant::AccOpt);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pareto_front(&[]).is_empty());
+        assert!(select(&[], 1.0, 1.0, 1.0).is_none());
+    }
+}

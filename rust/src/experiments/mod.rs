@@ -1,0 +1,51 @@
+//! Experiment harness: one generator per paper table/figure (DESIGN.md
+//! experiment index). Each returns structured rows and renders markdown;
+//! the CLI writes them under `results/`.
+
+pub mod figs;
+pub mod table2;
+
+use std::path::Path;
+
+/// Write a report file, creating `results/` as needed.
+pub fn write_report(path: &Path, content: &str) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render rows as a GitHub-flavored markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str("| ");
+    s.push_str(&headers.join(" | "));
+    s.push_str(" |\n|");
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str("| ");
+        s.push_str(&row.join(" | "));
+        s.push_str(" |\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert_eq!(md.lines().count(), 4);
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

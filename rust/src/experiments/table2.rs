@@ -1,0 +1,156 @@
+//! Table II: perplexity across methods × models × corpora, evaluated
+//! end-to-end through the PJRT graphs with quantized weights substituted.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::mac::MacProfile;
+use crate::model::{calibrate_fisher, Evaluator};
+use crate::quant::baselines::by_name;
+use crate::quant::Matrix;
+use crate::runtime::{Runtime, Store};
+
+use super::markdown_table;
+
+/// One Table II row group for a model.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub model: String,
+    pub corpus: String,
+    pub ppl: f64,
+    pub bits: f64,
+}
+
+/// Methods in presentation order (paper Table II).
+pub const METHODS: &[&str] = &[
+    "fp16",
+    "rtn-w8",
+    "rtn-w4",
+    "rtn-w3",
+    "smoothquant-w8",
+    "smoothquant-w4",
+    "smoothquant-w3",
+    "gptq",
+    "zq-local",
+    "zq-global",
+    "halo-perf",
+    "halo-acc",
+    "halo-bal",
+];
+
+/// HALO-bal tile-size sweep rows (paper: tile 128/64/32).
+pub const TILE_SWEEP: &[usize] = &[128, 64, 32];
+
+/// Run the full table for the given models (default: all in the store).
+pub fn run(
+    store: &Store,
+    models: &[String],
+    methods: &[&str],
+    max_batches: usize,
+    calib_batches: usize,
+) -> Result<Vec<Row>> {
+    let rt = Runtime::cpu()?;
+    let profile = MacProfile::cached();
+    let mut rows = Vec::new();
+
+    for model_name in models {
+        let model = store.model(model_name)?;
+        let ev = Evaluator::new(&rt, &model)?;
+        let calib = store.corpus_calib()?;
+        let grads: BTreeMap<String, Matrix> =
+            calibrate_fisher(&rt, &model, &calib, calib_batches)?;
+        eprintln!("[table2] {model_name}: fisher calibrated over {calib_batches} batches");
+
+        for corpus in ["wikisyn", "c4syn"] {
+            let stream = store.corpus_eval(corpus)?;
+            for &method in methods {
+                let row = if method == "fp16" {
+                    let r = ev.eval_fp16(&stream, corpus, max_batches)?;
+                    Row {
+                        method: r.method,
+                        model: model_name.clone(),
+                        corpus: corpus.into(),
+                        ppl: r.ppl,
+                        bits: 16.0,
+                    }
+                } else {
+                    let q = by_name(method, profile, 128)
+                        .ok_or_else(|| anyhow::anyhow!("unknown method {method}"))?;
+                    let r =
+                        ev.eval_quantizer(q.as_ref(), &grads, &stream, corpus, max_batches, true)?;
+                    Row {
+                        method: r.method,
+                        model: model_name.clone(),
+                        corpus: corpus.into(),
+                        ppl: r.ppl,
+                        bits: r.bits_eff,
+                    }
+                };
+                eprintln!(
+                    "[table2] {model_name}/{corpus}/{method}: ppl {:.2} (bw {:.2})",
+                    row.ppl, row.bits
+                );
+                rows.push(row);
+            }
+            // HALO tile-size sweep (bal variant), paper Table II bottom.
+            for &tile in TILE_SWEEP.iter().skip(1) {
+                let q = by_name("halo-bal", profile, tile).unwrap();
+                let r =
+                    ev.eval_quantizer(q.as_ref(), &grads, &stream, corpus, max_batches, true)?;
+                eprintln!(
+                    "[table2] {model_name}/{corpus}/halo-bal-t{tile}: ppl {:.2} (bw {:.2})",
+                    r.ppl, r.bits_eff
+                );
+                rows.push(Row {
+                    method: format!("halo-bal-t{tile}"),
+                    model: model_name.clone(),
+                    corpus: corpus.into(),
+                    ppl: r.ppl,
+                    bits: r.bits_eff,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render in the paper's layout: methods × (models per corpus).
+pub fn render(rows: &[Row], models: &[String]) -> String {
+    let mut methods: Vec<String> = Vec::new();
+    for r in rows {
+        if !methods.contains(&r.method) {
+            methods.push(r.method.clone());
+        }
+    }
+    let mut headers: Vec<String> = vec!["PPL↓ (BW)".into()];
+    for corpus in ["wikisyn", "c4syn"] {
+        for m in models {
+            headers.push(format!("{corpus}/{m}"));
+        }
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+
+    let mut out_rows = Vec::new();
+    for method in &methods {
+        let mut row = vec![method.clone()];
+        for corpus in ["wikisyn", "c4syn"] {
+            for m in models {
+                let cell = rows
+                    .iter()
+                    .find(|r| &r.method == method && &r.model == m && r.corpus == corpus);
+                row.push(match cell {
+                    Some(r) if r.ppl > 9999.0 => format!(">1e4 ({:.2})", r.bits),
+                    Some(r) => format!("{:.2} ({:.2})", r.ppl, r.bits),
+                    None => "—".into(),
+                });
+            }
+        }
+        out_rows.push(row);
+    }
+    format!(
+        "## Table II — perplexity (lower is better), effective weight bits in parens\n\n{}",
+        markdown_table(&hdr_refs, &out_rows)
+    )
+}

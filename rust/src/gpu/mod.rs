@@ -1,0 +1,266 @@
+//! Analytic GPU simulator (Figs 12–13): an RTX-2080-Ti-class device with
+//! the Table I GPU DVFS ladder and an AccelWattch-style energy split
+//! (constant / static / dynamic).
+//!
+//! Substitution for AccelSim+AccelWattch (DESIGN.md): a roofline model —
+//! per-kernel latency = max(compute at the selected DVFS level, memory) —
+//! plus a power-budget-driven DVFS selector. Quantization enters exactly
+//! where it does on real GPUs: weight bytes (memory-bound decode) and
+//! per-op switching energy (which determines how much frequency headroom
+//! the power budget allows — the paper's "concentrating high frequency
+//! execution only where necessary").
+
+use crate::dvfs::{FreqClass, Ladder, TRANSITION_S};
+use crate::mac::MacProfile;
+use crate::workload::{LayerQuant, ModelShapes, Phase};
+
+/// GPU hardware description (RTX 2080 Ti-like).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    pub sms: usize,
+    /// int8 MACs per SM per cycle (dp4a lanes).
+    pub int8_macs_per_sm: usize,
+    /// fp16 MACs per SM per cycle.
+    pub fp16_macs_per_sm: usize,
+    /// DRAM bandwidth (bytes/s).
+    pub dram_bw: f64,
+    /// Board power budget (W) — what the DVFS governor enforces.
+    pub power_budget_w: f64,
+    /// Constant (peripheral) power: fans, VRM, display (W).
+    pub constant_w: f64,
+    /// Leakage at nominal voltage (W).
+    pub static_w: f64,
+    /// DRAM access energy (pJ/byte).
+    pub dram_pj_per_byte: f64,
+    /// Core switching energy per int8 MAC (pJ) for full-range weights at
+    /// the nominal voltage — scaled per method by the MAC profile ratio.
+    pub mac_pj: f64,
+    pub ladder: Ladder,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        Self {
+            sms: 68,
+            int8_macs_per_sm: 256,
+            fp16_macs_per_sm: 128,
+            dram_bw: 616e9,
+            power_budget_w: 250.0,
+            constant_w: 55.0,
+            static_w: 40.0,
+            dram_pj_per_byte: 20.0,
+            mac_pj: 0.45,
+            ladder: Ladder::paper_gpu(),
+        }
+    }
+}
+
+/// Simulation output for one inference pass on the GPU.
+#[derive(Debug, Clone)]
+pub struct GpuReport {
+    pub method: String,
+    pub model: String,
+    pub time_s: f64,
+    pub compute_s: f64,
+    pub mem_s: f64,
+    /// DVFS level chosen per class (GHz) — the governor's decision.
+    pub class_ghz: [f64; 3],
+    pub transitions: usize,
+    pub energy_constant: f64,
+    pub energy_static: f64,
+    pub energy_dynamic: f64,
+}
+
+impl GpuReport {
+    pub fn energy_total(&self) -> f64 {
+        self.energy_constant + self.energy_static + self.energy_dynamic
+    }
+}
+
+pub struct GpuSim {
+    pub cfg: GpuConfig,
+}
+
+impl GpuSim {
+    pub fn new(cfg: GpuConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Pick the highest ladder level whose predicted board power stays
+    /// within budget for kernels with the given per-MAC energy (pJ).
+    fn select_level(&self, mac_pj: f64, macs_per_cycle: f64) -> (FreqClass, f64, f64) {
+        let cfg = &self.cfg;
+        let mut chosen = (FreqClass::Base, cfg.ladder.levels[0].ghz, cfg.ladder.levels[0].volts);
+        for class in FreqClass::ALL {
+            let lvl = cfg.ladder.level(class);
+            let v2 = (lvl.volts / 1.0).powi(2);
+            let dyn_w = mac_pj * v2 * macs_per_cycle * lvl.ghz * 1e9 * 1e-12;
+            let static_w = cfg.static_w * lvl.volts;
+            if cfg.constant_w + static_w + dyn_w <= cfg.power_budget_w {
+                chosen = (class, lvl.ghz, lvl.volts);
+            }
+        }
+        (chosen.0, chosen.1, chosen.2)
+    }
+
+    /// Simulate one inference pass.
+    pub fn run(
+        &self,
+        model: &ModelShapes,
+        phase: Phase,
+        quants: &[LayerQuant],
+        method: &str,
+    ) -> GpuReport {
+        assert_eq!(quants.len(), model.gemms.len());
+        let cfg = &self.cfg;
+        let profile = MacProfile::cached();
+        let e_full = profile.full_range_energy_pj();
+
+        let mut compute_s = 0.0f64;
+        let mut bytes = 0.0f64;
+        let mut dyn_j = 0.0f64;
+        let mut class_ghz = [0.0f64; 3];
+        let mut classes_used = [false; 3];
+
+        for (g, lq) in model.gemms.iter().zip(quants) {
+            let layer_macs = (phase.m * g.k * g.n * g.count) as f64;
+            let macs_per_cycle = (cfg.sms
+                * if lq.is_fp16 { cfg.fp16_macs_per_sm } else { cfg.int8_macs_per_sm })
+                as f64;
+
+            for class in FreqClass::ALL {
+                let frac = lq.class_frac(class) + if class == FreqClass::Base {
+                    lq.sparse_frac
+                } else {
+                    0.0
+                };
+                if frac <= 0.0 {
+                    continue;
+                }
+                // Per-op energy of this class's weight values, relative to
+                // the full int8 range, scales the GPU's MAC energy.
+                let mac_pj = cfg.mac_pj * lq.energy_pj[class as usize] / e_full
+                    * if lq.is_fp16 { 2.0 } else { 1.0 };
+                let (sel, ghz, volts) = self.select_level(mac_pj, macs_per_cycle);
+                classes_used[sel as usize] = true;
+                class_ghz[class as usize] = ghz;
+                let t = layer_macs * frac / (macs_per_cycle * ghz * 1e9);
+                compute_s += t;
+                dyn_j += layer_macs * frac * mac_pj * (volts / 1.0).powi(2) * 1e-12;
+            }
+
+            bytes += (g.k * g.n * g.count) as f64 * lq.bits_eff / 8.0
+                + lq.sparse_frac * (g.k * g.n * g.count) as f64 * 5.0
+                + (phase.m * (g.k + g.n) * g.count) as f64
+                    * if lq.is_fp16 { 2.0 } else { 1.0 };
+        }
+
+        let mem_s = bytes / cfg.dram_bw;
+        let transitions = classes_used.iter().filter(|&&u| u).count();
+        let time_s = compute_s.max(mem_s) + transitions as f64 * TRANSITION_S;
+        dyn_j += bytes * cfg.dram_pj_per_byte * 1e-12;
+
+        GpuReport {
+            method: method.to_string(),
+            model: model.name.to_string(),
+            time_s,
+            compute_s,
+            mem_s,
+            class_ghz,
+            transitions,
+            energy_constant: cfg.constant_w * time_s,
+            energy_static: cfg.static_w * time_s,
+            energy_dynamic: dyn_j,
+        }
+    }
+
+    /// Canonical-method convenience mirror of `Simulator::run_method`.
+    pub fn run_method(
+        &self,
+        model: &ModelShapes,
+        phase: Phase,
+        method: &str,
+        tile: usize,
+        seed: u64,
+    ) -> GpuReport {
+        let quants: Vec<LayerQuant> = model
+            .gemms
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let n_tiles = g.k.div_ceil(tile) * g.n.div_ceil(tile);
+                LayerQuant::for_method(method, n_tiles, tile, MacProfile::cached(),
+                                       seed ^ (i as u64) << 8)
+            })
+            .collect();
+        self.run(model, phase, &quants, method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(method: &str) -> GpuReport {
+        GpuSim::new(GpuConfig::default()).run_method(
+            &ModelShapes::opt_1p3b(),
+            Phase::decode(8),
+            method,
+            128,
+            42,
+        )
+    }
+
+    #[test]
+    fn fig12_halo_beats_w8a8() {
+        let w8 = run("w8a8").time_s;
+        let halo = run("halo-bal").time_s;
+        assert!(halo < w8, "halo {halo} vs w8 {w8}");
+        // Decode is memory-bound: speedup roughly tracks bits (8 / ~3.6).
+        let ratio = w8 / halo;
+        assert!((1.3..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig13_energy_shape() {
+        // W8A8 lowest energy (paper: "lowest overall energy due to
+        // uniformly low precision... but performance stagnation");
+        // HALO variants trade a marginal increase for speed; FP16 worst.
+        let w8 = run("w8a8");
+        let halo = run("halo-bal");
+        let fp16 = run("fp16");
+        assert!(fp16.energy_total() > halo.energy_total());
+        assert!(halo.energy_total() < 1.35 * w8.energy_total());
+    }
+
+    #[test]
+    fn dvfs_governor_gives_halo_higher_clock() {
+        let w8 = run("w8a8");
+        let halo = run("halo-perf");
+        let max_ghz = |r: &GpuReport| r.class_ghz.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max_ghz(&halo) >= max_ghz(&w8),
+            "halo {:?} w8 {:?}",
+            halo.class_ghz,
+            w8.class_ghz
+        );
+    }
+
+    #[test]
+    fn bigger_model_slower() {
+        let s = GpuSim::new(GpuConfig::default());
+        let small = s
+            .run_method(&ModelShapes::opt_1p3b(), Phase::decode(8), "w8a8", 128, 1)
+            .time_s;
+        let big = s
+            .run_method(&ModelShapes::opt_30b(), Phase::decode(8), "w8a8", 128, 1)
+            .time_s;
+        assert!(big > 10.0 * small);
+    }
+
+    #[test]
+    fn constant_energy_tracks_time() {
+        let r = run("w8a8");
+        assert!((r.energy_constant / r.time_s - 55.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,39 @@
+//! # HALO — Hardware-Aware Quantization with Low Critical-Path-Delay Weights
+//!
+//! Full-system reproduction of *HALO* (Juneja et al., AAAI 2026): a
+//! hardware-aware post-training-quantization framework that selects weight
+//! values with short MAC critical paths so tiles can be clocked faster, and
+//! co-optimizes the quantization with a DVFS schedule.
+//!
+//! The crate is Layer 3 of a three-layer Rust + JAX + Pallas stack
+//! (see `DESIGN.md`):
+//!
+//! - [`mac`] — gate-level Booth–Wallace MAC circuit model: per-weight static
+//!   timing analysis and switching-activity power (paper §II, Figs 3–5).
+//! - [`quant`] — the HALO quantization framework (Algorithm 1) and all the
+//!   paper's baselines (RTN, SmoothQuant, GPTQ, ZeroQuant).
+//! - [`dvfs`] — DVFS levels (Table I), tile→frequency-class assignment and
+//!   transition scheduling (§III-C).
+//! - [`systolic`] — cycle-level weight-stationary systolic-array simulator
+//!   with per-tile clocking and energy decomposition (Figs 8–11).
+//! - [`gpu`] — analytic RTX-2080-Ti-class GPU model (Figs 12–13).
+//! - [`workload`] — LLM GEMM traces (LLaMA2 / OPT shapes) + synthetic data.
+//! - [`runtime`] — PJRT client wrapper that loads the AOT HLO artifacts.
+//! - [`model`] — perplexity evaluation + Fisher calibration over artifacts.
+//! - [`coordinator`] — tokio serving loop (router → batcher → executor).
+//! - [`experiments`] — one generator per paper table/figure.
+
+pub mod coordinator;
+pub mod util;
+pub mod dvfs;
+pub mod experiments;
+pub mod gpu;
+pub mod mac;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod systolic;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

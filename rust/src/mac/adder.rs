@@ -1,0 +1,100 @@
+//! Final carry-propagate adder: Kogge–Stone parallel prefix.
+//!
+//! Synthesis of DW02_MAC maps the final CPA onto a log-depth prefix adder;
+//! a ripple adder would flatten the per-weight delay variation the paper
+//! exploits (its linear carry chain would dominate every path), so the
+//! prefix structure matters for fidelity, not just speed.
+
+use super::gate::{NetBuilder, NodeId};
+
+/// `width`-bit Kogge–Stone adder (no carry-in); returns sum bits LSB-first.
+/// Carry-out is discarded (two's-complement wrap, matching the accumulator
+/// register width).
+pub fn kogge_stone(nb: &mut NetBuilder, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+    assert_eq!(a.len(), b.len());
+    let w = a.len();
+    // Bit-level generate/propagate.
+    let mut g: Vec<NodeId> = (0..w).map(|i| nb.and(a[i], b[i])).collect();
+    let mut p: Vec<NodeId> = (0..w).map(|i| nb.xor(a[i], b[i])).collect();
+    let p0 = p.clone(); // save half-sum bits
+
+    let mut dist = 1;
+    while dist < w {
+        let mut g2 = g.clone();
+        let mut p2 = p.clone();
+        for i in dist..w {
+            // G' = G | (P & G_{i-dist}); P' = P & P_{i-dist}
+            let t = nb.and(p[i], g[i - dist]);
+            g2[i] = nb.or(g[i], t);
+            p2[i] = nb.and(p[i], p[i - dist]);
+        }
+        g = g2;
+        p = p2;
+        dist <<= 1;
+    }
+
+    // sum_i = p0_i ^ carry_{i-1}, carry_{i-1} = G_{i-1} (prefix over [0, i-1])
+    let mut sum = Vec::with_capacity(w);
+    sum.push(p0[0]);
+    for i in 1..w {
+        sum.push(nb.xor(p0[i], g[i - 1]));
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::gate::Netlist;
+
+    fn add(width: usize, x: u64, y: u64) -> u64 {
+        let mut nb = NetBuilder::new();
+        let a: Vec<NodeId> = nb.inputs(width);
+        let b: Vec<NodeId> = nb.inputs(width);
+        let s = kogge_stone(&mut nb, &a, &b);
+        let net: Netlist = nb.finish(s);
+        let mut vals = vec![false; net.len()];
+        for i in 0..width {
+            vals[a[i] as usize] = (x >> i) & 1 != 0;
+            vals[b[i] as usize] = (y >> i) & 1 != 0;
+        }
+        net.eval_into(&mut vals);
+        net.read_outputs(&vals)
+    }
+
+    #[test]
+    fn adds_exhaustive_6bit() {
+        for x in 0..64u64 {
+            for y in 0..64u64 {
+                assert_eq!(add(6, x, y), (x + y) & 63, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn adds_random_24bit() {
+        let mut state = 0x12345678u64;
+        for _ in 0..200 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let x = state >> 20 & 0xffffff;
+            let y = state >> 40 & 0xffffff;
+            assert_eq!(add(24, x, y), (x + y) & 0xffffff);
+        }
+    }
+
+    #[test]
+    fn depth_is_logarithmic() {
+        // Count the longest topological chain; must be O(log w), not O(w).
+        let mut nb = NetBuilder::new();
+        let a = nb.inputs(24);
+        let b = nb.inputs(24);
+        let s = kogge_stone(&mut nb, &a, &b);
+        let net = nb.finish(s);
+        let mut depth = vec![0u32; net.len()];
+        for (i, g) in net.gates.iter().enumerate() {
+            depth[i] = g.inputs().map(|j| depth[j as usize] + 1).max().unwrap_or(0);
+        }
+        let max = net.outputs.iter().map(|&o| depth[o as usize]).max().unwrap();
+        assert!(max <= 14, "depth {max} too deep for Kogge-Stone");
+    }
+}

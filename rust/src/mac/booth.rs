@@ -1,0 +1,129 @@
+//! Radix-4 (modified) Booth encoding and partial-product generation.
+//!
+//! The weight is the Booth-encoded multiplier — this is where the paper's
+//! core circuit effect lives (§II): weight bit patterns with few non-zero
+//! Booth digits produce constant-zero partial-product rows, killing the
+//! signal paths through them and shortening the sensitizable critical path.
+
+use super::gate::{NetBuilder, NodeId};
+
+/// One Booth digit's control signals (digit ∈ {-2,-1,0,+1,+2}).
+#[derive(Debug, Clone, Copy)]
+pub struct BoothDigit {
+    /// |digit| == 1
+    pub one: NodeId,
+    /// |digit| == 2
+    pub two: NodeId,
+    /// digit < 0 (drives row inversion + the +1 LSB correction)
+    pub neg: NodeId,
+}
+
+/// Encode an 8-bit weight (LSB-first node list) into 4 radix-4 Booth digits.
+///
+/// Digit i examines bits (w[2i+1], w[2i], w[2i-1]) with w[-1] = 0:
+///   one = w[2i] ^ w[2i-1]
+///   two = (w[2i+1] & !w[2i] & !w[2i-1]) | (!w[2i+1] & w[2i] & w[2i-1])
+///   neg = w[2i+1] & !(w[2i] & w[2i-1])
+pub fn encode(nb: &mut NetBuilder, w: &[NodeId]) -> Vec<BoothDigit> {
+    assert_eq!(w.len(), 8);
+    let zero = nb.constant(false);
+    (0..4)
+        .map(|i| {
+            let lo = if i == 0 { zero } else { w[2 * i - 1] };
+            let mid = w[2 * i];
+            let hi = w[2 * i + 1];
+            let one = nb.xor(mid, lo);
+            let nmid = nb.not(mid);
+            let nlo = nb.not(lo);
+            let nhi = nb.not(hi);
+            let t1 = nb.and3(hi, nmid, nlo);
+            let t2 = nb.and3(nhi, mid, lo);
+            let two = nb.or(t1, t2);
+            let both = nb.and(mid, lo);
+            let nboth = nb.not(both);
+            let neg = nb.and(hi, nboth);
+            BoothDigit { one, two, neg }
+        })
+        .collect()
+}
+
+/// Build the 9-bit partial-product row for one Booth digit over a signed
+/// 8-bit activation `a` (LSB-first).
+///
+/// Row bit j (j = 0..=8) in invert-if-negative form:
+///   pp_j = neg ^ ((one & a_j) | (two & a_{j-1}))
+/// with a_{-1} = 0 and a_8 = a_7 (sign extension for the ×2 shift).
+/// The missing `+neg` LSB correction is returned separately by the caller's
+/// reduction tree (standard Booth two's-complement completion).
+pub fn partial_product(nb: &mut NetBuilder, d: BoothDigit, a: &[NodeId]) -> Vec<NodeId> {
+    assert_eq!(a.len(), 8);
+    let zero = nb.constant(false);
+    (0..=8)
+        .map(|j| {
+            let aj = if j < 8 { a[j] } else { a[7] };
+            let ajm1 = if j == 0 { zero } else { a[j - 1] };
+            let t1 = nb.and(d.one, aj);
+            let t2 = nb.and(d.two, ajm1);
+            let m = nb.or(t1, t2);
+            nb.xor(d.neg, m)
+        })
+        .collect()
+}
+
+/// Software Booth digits for an 8-bit weight (reference/testing).
+pub fn digits_of(w: i8) -> [i32; 4] {
+    let wu = w as u8 as u32;
+    let mut out = [0i32; 4];
+    for (i, o) in out.iter_mut().enumerate() {
+        let lo = if i == 0 { 0 } else { (wu >> (2 * i - 1)) & 1 };
+        let mid = (wu >> (2 * i)) & 1;
+        let hi = (wu >> (2 * i + 1)) & 1;
+        *o = (mid + lo) as i32 - 2 * hi as i32;
+    }
+    out
+}
+
+/// Number of non-zero Booth digits — the structural predictor of the
+/// per-weight critical path (paper Fig. 4 peaks).
+pub fn nonzero_digits(w: i8) -> usize {
+    digits_of(w).iter().filter(|&&d| d != 0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_reconstruct_weight() {
+        for w in i8::MIN..=i8::MAX {
+            let d = digits_of(w);
+            let v: i32 = d.iter().enumerate().map(|(i, &di)| di << (2 * i)).sum();
+            assert_eq!(v, w as i32, "w={w} digits={d:?}");
+        }
+    }
+
+    #[test]
+    fn digit_range_is_radix4() {
+        for w in i8::MIN..=i8::MAX {
+            for d in digits_of(w) {
+                assert!((-2..=2).contains(&d));
+            }
+        }
+    }
+
+    #[test]
+    fn single_digit_weights() {
+        // Radix-4 Booth single-digit values: +4^k (digit +1), every negative
+        // power of two (-4^k as -1, -2·4^k as -2). Positive 2·4^k values
+        // like +2, +8 encode as (-2·4^k) + (+1·4^{k+1}) — two digits.
+        assert_eq!(nonzero_digits(0), 0);
+        for w in [1i8, 4, 16, 64, -1, -2, -4, -8, -16, -32, -64, -128] {
+            assert_eq!(nonzero_digits(w), 1, "w={w}");
+        }
+        for w in [2i8, 8, 32] {
+            assert_eq!(nonzero_digits(w), 2, "w={w}");
+        }
+        assert!(nonzero_digits(-127) >= 2);
+        assert!(nonzero_digits(85) >= 3);
+    }
+}

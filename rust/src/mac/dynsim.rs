@@ -1,0 +1,198 @@
+//! Event/transition-level dynamic timing + switching-activity simulation.
+//!
+//! For a fixed weight, applies an (activation, accumulator) input transition
+//! and computes (a) the settle time — when the last output reaches its final
+//! value — and (b) the toggle count — how many gate outputs changed. The
+//! settle-time histogram over many transitions is the paper's Fig. 3; mean
+//! toggles drive the Fig. 5 power model.
+//!
+//! Approximation: zero-delay glitches are not modeled (a gate whose stable
+//! value is unchanged contributes no event). This underestimates switching
+//! power uniformly but preserves the per-weight ordering, which is what the
+//! quantizer consumes.
+
+use crate::util::Rng;
+
+use super::gate::{Gate, Netlist};
+use super::mac8::{self, MacPorts};
+
+/// Result of one input transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transition {
+    /// Settle time in pre-calibration delay units.
+    pub settle: u32,
+    /// Number of gate outputs that changed value.
+    pub toggles: u32,
+}
+
+/// Reusable simulator state for one netlist + fixed weight.
+pub struct DynSim<'a> {
+    net: &'a Netlist,
+    ports: &'a MacPorts,
+    w: i8,
+    vals: Vec<bool>,
+    /// scratch: settle time per node for the current transition
+    settle: Vec<u32>,
+}
+
+impl<'a> DynSim<'a> {
+    pub fn new(net: &'a Netlist, ports: &'a MacPorts, w: i8, a0: i8, acc0: i32) -> Self {
+        let mut vals = vec![false; net.len()];
+        mac8::set_inputs(ports, &mut vals, w, a0, acc0);
+        net.eval_into(&mut vals);
+        Self { net, ports, w, vals, settle: vec![0; net.len()] }
+    }
+
+    /// Apply a transition to new (a, acc); weight stays constant.
+    pub fn step(&mut self, a: i8, acc: i32) -> Transition {
+        let old = std::mem::take(&mut self.vals);
+        let mut new = old.clone();
+        mac8::set_inputs(self.ports, &mut new, self.w, a, acc);
+
+        let settle = &mut self.settle;
+        let mut toggles = 0u32;
+        for (i, g) in self.net.gates.iter().enumerate() {
+            let v = match *g {
+                Gate::Input => new[i],
+                Gate::Const(c) => c,
+                Gate::Not(x) => !new[x as usize],
+                Gate::And(x, y) => new[x as usize] && new[y as usize],
+                Gate::Or(x, y) => new[x as usize] || new[y as usize],
+                Gate::Xor(x, y) => new[x as usize] ^ new[y as usize],
+            };
+            new[i] = v;
+            if v != old[i] {
+                toggles += 1;
+                let latest = g
+                    .inputs()
+                    .filter(|&j| new[j as usize] != old[j as usize])
+                    .map(|j| settle[j as usize])
+                    .max()
+                    .unwrap_or(0);
+                settle[i] = latest + g.delay();
+            } else {
+                settle[i] = 0;
+            }
+        }
+
+        let out_settle = self
+            .net
+            .outputs
+            .iter()
+            .map(|&o| settle[o as usize])
+            .max()
+            .unwrap_or(0);
+        self.vals = new;
+        Transition { settle: out_settle, toggles }
+    }
+}
+
+/// Per-weight transition statistics over `samples` random transitions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WeightStats {
+    pub max_settle: u32,
+    pub mean_settle: f64,
+    pub mean_toggles: f64,
+}
+
+/// Sample random (a, acc) transitions for a fixed weight.
+pub fn weight_stats(
+    net: &Netlist,
+    ports: &MacPorts,
+    w: i8,
+    samples: usize,
+    seed: u64,
+) -> WeightStats {
+    let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
+    let mut sim = DynSim::new(net, ports, w, rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
+    let mut max_settle = 0u32;
+    let (mut sum_settle, mut sum_toggles) = (0u64, 0u64);
+    for _ in 0..samples {
+        let t = sim.step(rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
+        max_settle = max_settle.max(t.settle);
+        sum_settle += t.settle as u64;
+        sum_toggles += t.toggles as u64;
+    }
+    WeightStats {
+        max_settle,
+        mean_settle: sum_settle as f64 / samples as f64,
+        mean_toggles: sum_toggles as f64 / samples as f64,
+    }
+}
+
+/// Settle-time histogram for Fig. 3: (settle units → count).
+pub fn settle_histogram(
+    net: &Netlist,
+    ports: &MacPorts,
+    w: i8,
+    samples: usize,
+    seed: u64,
+) -> Vec<(u32, u32)> {
+    let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
+    let mut sim = DynSim::new(net, ports, w, rng.gen_i8(), 0);
+    let mut counts = std::collections::BTreeMap::new();
+    for _ in 0..samples {
+        let t = sim.step(rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
+        *counts.entry(t.settle).or_insert(0u32) += 1;
+    }
+    counts.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::mac8;
+    use crate::mac::sta;
+
+    #[test]
+    fn functional_values_stay_correct_across_steps() {
+        let (net, ports) = mac8::build();
+        let w = -45i8;
+        let mut sim = DynSim::new(&net, &ports, w, 3, 100);
+        for (a, acc) in [(7i8, -5i32), (-128, 0), (127, 0x1234), (0, -1)] {
+            sim.step(a, acc);
+            assert_eq!(net.read_outputs(&sim.vals) as u32, mac8::mac_ref(w, a, acc));
+        }
+    }
+
+    #[test]
+    fn settle_bounded_by_sta() {
+        // Dynamic settle can never exceed the constant-prop STA bound.
+        let (net, ports) = mac8::build();
+        for &w in &[0i8, 1, 64, -127, 85, -86, 37] {
+            let bound = sta::weight_delay(&net, &ports, w);
+            let st = weight_stats(&net, &ports, w, 300, 42);
+            assert!(
+                st.max_settle <= bound,
+                "w={w}: dyn {} > sta {bound}",
+                st.max_settle
+            );
+        }
+    }
+
+    #[test]
+    fn identical_inputs_no_toggles() {
+        let (net, ports) = mac8::build();
+        let mut sim = DynSim::new(&net, &ports, 23, 17, 99);
+        sim.step(5, -3);
+        let t = sim.step(5, -3);
+        assert_eq!(t.toggles, 0);
+        assert_eq!(t.settle, 0);
+    }
+
+    #[test]
+    fn fast_weight_lower_power(){
+        let (net, ports) = mac8::build();
+        let fast = weight_stats(&net, &ports, 64, 400, 7);
+        let slow = weight_stats(&net, &ports, -127, 400, 7);
+        assert!(fast.mean_toggles < slow.mean_toggles,
+            "64:{} -127:{}", fast.mean_toggles, slow.mean_toggles);
+    }
+
+    #[test]
+    fn histogram_counts_sum_to_samples() {
+        let (net, ports) = mac8::build();
+        let h = settle_histogram(&net, &ports, 64, 200, 1);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<u32>(), 200);
+    }
+}

@@ -1,0 +1,268 @@
+//! Gate-level netlist substrate for the MAC circuit model.
+//!
+//! The paper's §II analysis runs Synopsys PrimeTime on the DesignWare
+//! `DW02_MAC`; we rebuild the equivalent circuit from 2-input gates so the
+//! same analyses (per-weight STA, transition simulation, toggle counting)
+//! can run anywhere. Gate delays are rough 22 nm-class relative numbers;
+//! absolute calibration happens in [`crate::mac::profile`].
+
+/// Gate delay in picoseconds (pre-calibration units).
+pub type Delay = u32;
+
+pub const D_NOT: Delay = 8;
+pub const D_AND: Delay = 15;
+pub const D_OR: Delay = 15;
+pub const D_XOR: Delay = 22;
+
+/// Node index into [`Netlist::gates`].
+pub type NodeId = u32;
+
+/// A combinational node. Inputs always precede the gate in the vector, so
+/// the vector order is a topological order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// External input bit (activation, weight, accumulator).
+    Input,
+    /// Constant 0/1.
+    Const(bool),
+    Not(NodeId),
+    And(NodeId, NodeId),
+    Or(NodeId, NodeId),
+    Xor(NodeId, NodeId),
+}
+
+impl Gate {
+    pub fn delay(&self) -> Delay {
+        match self {
+            Gate::Input | Gate::Const(_) => 0,
+            Gate::Not(_) => D_NOT,
+            Gate::And(..) => D_AND,
+            Gate::Or(..) => D_OR,
+            Gate::Xor(..) => D_XOR,
+        }
+    }
+
+    pub fn inputs(&self) -> impl Iterator<Item = NodeId> {
+        let (a, b) = match *self {
+            Gate::Input | Gate::Const(_) => (None, None),
+            Gate::Not(x) => (Some(x), None),
+            Gate::And(x, y) | Gate::Or(x, y) | Gate::Xor(x, y) => (Some(x), Some(y)),
+        };
+        a.into_iter().chain(b)
+    }
+}
+
+/// A combinational netlist in topological order, with named input groups and
+/// an ordered list of output nodes.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Netlist {
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    /// Evaluate the netlist for a full input assignment.
+    ///
+    /// `values` must be pre-sized to `gates.len()` with input nodes already
+    /// set; all other entries are overwritten in topological order.
+    pub fn eval_into(&self, values: &mut [bool]) {
+        debug_assert_eq!(values.len(), self.gates.len());
+        for (i, g) in self.gates.iter().enumerate() {
+            let v = match *g {
+                Gate::Input => values[i],
+                Gate::Const(c) => c,
+                Gate::Not(a) => !values[a as usize],
+                Gate::And(a, b) => values[a as usize] && values[b as usize],
+                Gate::Or(a, b) => values[a as usize] || values[b as usize],
+                Gate::Xor(a, b) => values[a as usize] ^ values[b as usize],
+            };
+            values[i] = v;
+        }
+    }
+
+    /// Read the output bits from an evaluated value vector.
+    pub fn read_outputs(&self, values: &[bool]) -> u64 {
+        let mut out = 0u64;
+        for (k, &o) in self.outputs.iter().enumerate() {
+            out |= (values[o as usize] as u64) << k;
+        }
+        out
+    }
+}
+
+/// Builder with tiny peephole constant folding — keeps the netlist close to
+/// what synthesis would emit for a fixed structure (folding only touches
+/// structurally-constant nodes, e.g. sign-extension zeros, never
+/// weight-dependent ones; weight constants are handled later by STA
+/// constant propagation).
+#[derive(Debug, Default)]
+pub struct NetBuilder {
+    pub gates: Vec<Gate>,
+}
+
+impl NetBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, g: Gate) -> NodeId {
+        let id = self.gates.len() as NodeId;
+        self.gates.push(g);
+        id
+    }
+
+    pub fn input(&mut self) -> NodeId {
+        self.push(Gate::Input)
+    }
+
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.push(Gate::Const(v))
+    }
+
+    fn const_of(&self, id: NodeId) -> Option<bool> {
+        match self.gates[id as usize] {
+            Gate::Const(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        match self.const_of(a) {
+            Some(c) => self.constant(!c),
+            None => self.push(Gate::Not(a)),
+        }
+    }
+
+    pub fn and(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(false), _) | (_, Some(false)) => self.constant(false),
+            (Some(true), _) => b,
+            (_, Some(true)) => a,
+            _ => self.push(Gate::And(a, b)),
+        }
+    }
+
+    pub fn or(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(true), _) | (_, Some(true)) => self.constant(true),
+            (Some(false), _) => b,
+            (_, Some(false)) => a,
+            _ => self.push(Gate::Or(a, b)),
+        }
+    }
+
+    pub fn xor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(false), _) => b,
+            (_, Some(false)) => a,
+            (Some(true), _) => self.not(b),
+            (_, Some(true)) => self.not(a),
+            _ => self.push(Gate::Xor(a, b)),
+        }
+    }
+
+    pub fn and3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        let ab = self.and(a, b);
+        self.and(ab, c)
+    }
+
+    pub fn or3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        let ab = self.or(a, b);
+        self.or(ab, c)
+    }
+
+    /// 2:1 mux as gates: sel ? a : b.
+    pub fn mux(&mut self, sel: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        let ns = self.not(sel);
+        let ta = self.and(sel, a);
+        let tb = self.and(ns, b);
+        self.or(ta, tb)
+    }
+
+    /// Full adder; returns (sum, carry).
+    pub fn full_adder(&mut self, a: NodeId, b: NodeId, c: NodeId) -> (NodeId, NodeId) {
+        let axb = self.xor(a, b);
+        let sum = self.xor(axb, c);
+        let ab = self.and(a, b);
+        let cx = self.and(axb, c);
+        let carry = self.or(ab, cx);
+        (sum, carry)
+    }
+
+    /// Half adder; returns (sum, carry).
+    pub fn half_adder(&mut self, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    pub fn finish(self, outputs: Vec<NodeId>) -> Netlist {
+        Netlist { gates: self.gates, outputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        for bits in 0..8u32 {
+            let (a, b, c) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            let mut nb = NetBuilder::new();
+            let (ia, ib, ic) = (nb.input(), nb.input(), nb.input());
+            let (s, cy) = nb.full_adder(ia, ib, ic);
+            let net = nb.finish(vec![s, cy]);
+            let mut vals = vec![false; net.len()];
+            vals[ia as usize] = a;
+            vals[ib as usize] = b;
+            vals[ic as usize] = c;
+            net.eval_into(&mut vals);
+            let got = net.read_outputs(&vals);
+            let want = (a as u64) + (b as u64) + (c as u64);
+            assert_eq!(got, want, "a={a} b={b} c={c}");
+        }
+    }
+
+    #[test]
+    fn mux_select() {
+        for (sel, a, b) in [(false, true, false), (true, true, false)] {
+            let mut nb = NetBuilder::new();
+            let (is, ia, ib) = (nb.input(), nb.input(), nb.input());
+            let m = nb.mux(is, ia, ib);
+            let net = nb.finish(vec![m]);
+            let mut vals = vec![false; net.len()];
+            vals[is as usize] = sel;
+            vals[ia as usize] = a;
+            vals[ib as usize] = b;
+            net.eval_into(&mut vals);
+            assert_eq!(net.read_outputs(&vals) != 0, if sel { a } else { b });
+        }
+    }
+
+    #[test]
+    fn constant_folding() {
+        let mut nb = NetBuilder::new();
+        let a = nb.input();
+        let zero = nb.constant(false);
+        let one = nb.constant(true);
+        let az = nb.and(a, zero);
+        assert!(matches!(nb.gates[az as usize], Gate::Const(false)));
+        assert_eq!(nb.and(a, one), a);
+        assert_eq!(nb.or(a, zero), a);
+        assert_eq!(nb.xor(a, zero), a);
+        // xor with 1 becomes NOT
+        let n = nb.xor(a, one);
+        assert!(matches!(nb.gates[n as usize], Gate::Not(x) if x == a));
+    }
+}

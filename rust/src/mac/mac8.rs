@@ -1,0 +1,151 @@
+//! The assembled 8-bit Booth–Wallace MAC: `y_n = w · a + y_{n-1}`.
+//!
+//! Mirrors the DesignWare `DW02_MAC` the paper analyzes (§II): signed 8×8
+//! multiply via radix-4 Booth partial products, Wallace reduction of the
+//! four PP rows + Booth corrections + the 24-bit accumulator input, and a
+//! Kogge–Stone final CPA. ~1 k gates.
+
+use super::adder::kogge_stone;
+use super::booth;
+use super::gate::{NetBuilder, Netlist, NodeId};
+use super::wallace;
+
+/// Accumulator width (bits). 8×8 products need 16; headroom for 256-long
+/// dot-product chains pushes the register to 24 bits, as in TPU-class PEs.
+pub const ACC_BITS: usize = 24;
+
+/// Input node ids of the assembled MAC, grouped by port.
+#[derive(Debug, Clone)]
+pub struct MacPorts {
+    pub w: Vec<NodeId>,
+    pub a: Vec<NodeId>,
+    pub acc: Vec<NodeId>,
+}
+
+/// Build the MAC netlist. Outputs are the ACC_BITS sum bits (LSB-first).
+pub fn build() -> (Netlist, MacPorts) {
+    let mut nb = NetBuilder::new();
+    let w = nb.inputs(8);
+    let a = nb.inputs(8);
+    let acc = nb.inputs(ACC_BITS);
+
+    let digits = booth::encode(&mut nb, &w);
+
+    let zero = nb.constant(false);
+    let mut rows: Vec<Vec<NodeId>> = Vec::new();
+
+    // Four shifted, sign-extended partial-product rows.
+    for (i, &d) in digits.iter().enumerate() {
+        let pp = booth::partial_product(&mut nb, d, &a);
+        let shift = 2 * i;
+        let mut row = vec![zero; ACC_BITS];
+        for (j, &bit) in pp.iter().enumerate() {
+            row[shift + j] = bit;
+        }
+        // Sign-extend: ~(sext M) == sext(~M), so extending pp[8] upward is
+        // correct for both positive and inverted rows.
+        for k in (shift + 9)..ACC_BITS {
+            row[k] = pp[8];
+        }
+        rows.push(row);
+    }
+
+    // Booth +neg corrections, packed into one sparse row (positions 0,2,4,6).
+    let mut corr = vec![zero; ACC_BITS];
+    for (i, &d) in digits.iter().enumerate() {
+        corr[2 * i] = d.neg;
+    }
+    rows.push(corr);
+
+    // Accumulator input is just another addend row.
+    rows.push(acc.clone());
+
+    let (r0, r1) = wallace::reduce(&mut nb, rows, ACC_BITS);
+    let sum = kogge_stone(&mut nb, &r0, &r1);
+
+    (nb.finish(sum), MacPorts { w, a, acc })
+}
+
+/// Software reference: (w·a + acc) mod 2^ACC_BITS.
+pub fn mac_ref(w: i8, a: i8, acc: i32) -> u32 {
+    let full = (w as i32) * (a as i32) + acc;
+    (full as u32) & ((1u32 << ACC_BITS) - 1)
+}
+
+/// Assign the three ports into a value vector sized for the netlist.
+pub fn set_inputs(ports: &MacPorts, vals: &mut [bool], w: i8, a: i8, acc: i32) {
+    for (i, &n) in ports.w.iter().enumerate() {
+        vals[n as usize] = (w as u8 >> i) & 1 != 0;
+    }
+    for (i, &n) in ports.a.iter().enumerate() {
+        vals[n as usize] = (a as u8 >> i) & 1 != 0;
+    }
+    for (i, &n) in ports.acc.iter().enumerate() {
+        vals[n as usize] = (acc as u32 >> i) & 1 != 0;
+    }
+}
+
+/// Evaluate the netlist functionally (testing / dynamic sim setup).
+pub fn eval(net: &Netlist, ports: &MacPorts, w: i8, a: i8, acc: i32) -> u32 {
+    let mut vals = vec![false; net.len()];
+    set_inputs(ports, &mut vals, w, a, acc);
+    net.eval_into(&mut vals);
+    net.read_outputs(&vals) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_on_corners() {
+        let (net, ports) = build();
+        for &w in &[0i8, 1, -1, 2, 64, 127, -127, -128, 85, -86] {
+            for &a in &[0i8, 1, -1, 127, -128, 77, -3] {
+                for &acc in &[0i32, 1, -1, 0x7fffff, -0x800000, 12345, -54321] {
+                    assert_eq!(
+                        eval(&net, &ports, w, a, acc),
+                        mac_ref(w, a, acc),
+                        "w={w} a={a} acc={acc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_randomized() {
+        let (net, ports) = build();
+        let mut state = 0xdeadbeefu64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state
+        };
+        for _ in 0..2000 {
+            let r = next();
+            let w = (r >> 8) as u8 as i8;
+            let a = (r >> 16) as u8 as i8;
+            let acc = ((r >> 24) as u32 & 0xffffff) as i32 - 0x800000;
+            assert_eq!(eval(&net, &ports, w, a, acc), mac_ref(w, a, acc), "w={w} a={a} acc={acc}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_multiply_no_acc() {
+        let (net, ports) = build();
+        for w in i8::MIN..=i8::MAX {
+            // all activations for a few weights would be 64k evals; stride a.
+            for a in (i16::from(i8::MIN)..=i16::from(i8::MAX)).step_by(7) {
+                let a = a as i8;
+                assert_eq!(eval(&net, &ports, w, a, 0), mac_ref(w, a, 0), "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_size_sane() {
+        let (net, _) = build();
+        assert!(net.len() > 400 && net.len() < 3000, "gates={}", net.len());
+        assert_eq!(net.outputs.len(), ACC_BITS);
+    }
+}

@@ -1,0 +1,20 @@
+//! Gate-level MAC circuit model (paper §II: timing and energy analysis).
+//!
+//! Substitutes for the paper's Synopsys DW02_MAC + PrimeTime flow
+//! (DESIGN.md §Substitutions): a radix-4 Booth × Wallace-tree × Kogge–Stone
+//! 8-bit MAC built from 2-input gates, with per-weight case-analysis STA,
+//! transition-level dynamic timing, and switching-activity power. The
+//! derived [`profile::MacProfile`] feeds the quantizer ([`crate::quant`]),
+//! the DVFS ladder ([`crate::dvfs`]) and both simulators.
+
+pub mod adder;
+pub mod booth;
+pub mod dynsim;
+pub mod gate;
+pub mod mac8;
+pub mod power;
+pub mod profile;
+pub mod sta;
+pub mod wallace;
+
+pub use profile::MacProfile;

@@ -1,0 +1,75 @@
+//! MAC power model: switching activity → dynamic power, plus leakage.
+//!
+//! Standard CMOS decomposition (paper Fig. 5 + §IV energy figures):
+//!
+//!   P_dyn  = E_toggle · N_toggles · f · (V / V_NOM)²
+//!   P_stat = P_LEAK · (V / V_NOM)
+//!
+//! `N_toggles` comes from [`crate::mac::dynsim`]; E_toggle is a 22 nm-class
+//! per-gate switching energy. Absolute numbers are calibration; the paper's
+//! effect is the per-weight *ordering* (fast Booth-sparse weights toggle
+//! fewer gates → less power), which carries through any positive E_toggle.
+
+/// Nominal supply voltage (V) — Table I systolic base level.
+pub const V_NOM: f64 = 1.0;
+
+/// Energy per gate toggle at V_NOM, femtojoules (22 nm-class standard cell
+/// with local wire load).
+pub const E_TOGGLE_FJ: f64 = 1.1;
+
+/// Per-MAC leakage power at V_NOM, microwatts.
+pub const P_LEAK_UW: f64 = 2.0;
+
+/// Dynamic energy of one MAC operation (pJ) given its mean toggle count.
+pub fn dynamic_energy_pj(mean_toggles: f64, v: f64) -> f64 {
+    mean_toggles * E_TOGGLE_FJ * 1e-3 * (v / V_NOM) * (v / V_NOM)
+}
+
+/// Dynamic power (mW) of one MAC at frequency `f_ghz`, voltage `v`.
+pub fn dynamic_power_mw(mean_toggles: f64, f_ghz: f64, v: f64) -> f64 {
+    // pJ * GHz = mW
+    dynamic_energy_pj(mean_toggles, v) * f_ghz
+}
+
+/// Leakage power (mW) at voltage `v`.
+pub fn leakage_power_mw(v: f64) -> f64 {
+    P_LEAK_UW * 1e-3 * (v / V_NOM)
+}
+
+/// Total per-MAC power (mW).
+pub fn total_power_mw(mean_toggles: f64, f_ghz: f64, v: f64) -> f64 {
+    dynamic_power_mw(mean_toggles, f_ghz, v) + leakage_power_mw(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_quadratically_with_voltage() {
+        let p1 = dynamic_power_mw(100.0, 2.0, 1.0);
+        let p2 = dynamic_power_mw(100.0, 2.0, 1.2);
+        assert!((p2 / p1 - 1.44).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scales_linearly_with_frequency_and_activity() {
+        assert!(
+            (dynamic_power_mw(100.0, 3.0, 1.0) / dynamic_power_mw(100.0, 1.0, 1.0) - 3.0).abs()
+                < 1e-9
+        );
+        assert!(
+            (dynamic_power_mw(200.0, 1.0, 1.0) / dynamic_power_mw(100.0, 1.0, 1.0) - 2.0).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn energy_per_op_independent_of_frequency() {
+        // Energy/op depends on V and activity only — the reason HALO's
+        // overclocked fast tiles still save energy (shorter runtime at the
+        // same per-op energy).
+        assert_eq!(dynamic_energy_pj(50.0, 1.1), dynamic_energy_pj(50.0, 1.1));
+        assert!(dynamic_energy_pj(50.0, 1.2) > dynamic_energy_pj(50.0, 1.0));
+    }
+}

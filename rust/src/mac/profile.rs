@@ -1,0 +1,367 @@
+//! The per-weight MAC profile: the bridge from circuit analysis to the
+//! quantizer and the simulators.
+//!
+//! For every int8 weight value this records the STA critical-path delay
+//! (calibrated to picoseconds), the achievable frequency (Fig. 4), and the
+//! mean switching activity / dynamic energy (Fig. 5). From the ranking it
+//! derives the two codebooks the paper uses: the 9 fastest values
+//! (low-sensitivity tiles, ~3.7 GHz) and the 16 fastest (high-sensitivity
+//! tiles, ~2.4 GHz).
+//!
+//! Calibration pins the full-range worst case to the Table I base level
+//! (1.9 GHz): one ps-per-unit factor, everything else is derived.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use crate::util::Json;
+
+use super::{dynsim, mac8, sta};
+
+/// Table I systolic base frequency: the clock a fully general int8 weight
+/// (outliers/salient, RTN W8) must meet.
+pub const BASE_FREQ_GHZ: f64 = 1.9;
+
+/// Codebook sizes from the paper (§III-C2).
+pub const FAST_SET: usize = 9;
+pub const MED_SET: usize = 16;
+
+/// Default number of sampled transitions per weight for timing/power stats.
+/// The paper sweeps all activation transitions; we sample (documented in
+/// DESIGN.md) — 2048 transitions bounds the max-settle estimate tightly
+/// (the settle distribution has a short upper tail, see Fig 3 histograms).
+pub const DEFAULT_SAMPLES: usize = 2048;
+
+fn widx(w: i8) -> usize {
+    w as u8 as usize
+}
+
+/// Per-weight timing/power profile of the 8-bit Booth–Wallace MAC.
+///
+/// `delay_ps` is the paper's quantity (Figs 3–4): the **maximum settle time
+/// across activation/accumulator transitions** with the weight held
+/// constant — dynamic path sensitization, which is what bounds the clock of
+/// a weight-stationary PE. `sta_delay_ps` is the topological
+/// constant-propagation bound (always ≥ the dynamic value); it is kept for
+/// validation and as the conservative margin the DVFS unit would sign off.
+#[derive(Debug, Clone)]
+pub struct MacProfile {
+    /// Calibrated max-transition (dynamic) critical-path delay (ps),
+    /// indexed by `w as u8`.
+    pub delay_ps: Vec<f64>,
+    /// Topological STA bound per weight (ps), same calibration.
+    pub sta_delay_ps: Vec<f64>,
+    /// Achievable frequency (GHz) = 1000 / delay_ps.
+    pub freq_ghz: Vec<f64>,
+    /// Mean gate toggles per MAC operation.
+    pub mean_toggles: Vec<f64>,
+    /// Dynamic energy per MAC op at V_NOM (pJ).
+    pub energy_pj: Vec<f64>,
+    /// The 9 lowest-delay weight values (low-sensitivity codebook).
+    pub codebook_fast: Vec<i8>,
+    /// The 16 lowest-delay weight values (high-sensitivity codebook).
+    pub codebook_med: Vec<i8>,
+    /// Achievable frequency of each derived class (GHz).
+    pub f_fast_ghz: f64,
+    pub f_med_ghz: f64,
+    /// = BASE_FREQ_GHZ by calibration.
+    pub f_base_ghz: f64,
+    /// ps per pre-calibration delay unit.
+    pub ps_per_unit: f64,
+    /// Transitions sampled per weight.
+    pub samples: usize,
+}
+
+impl MacProfile {
+    /// Build the profile: dynamic max-settle + toggle stats over sampled
+    /// transitions for all 256 weights, plus the STA bound per weight.
+    pub fn compute(samples: usize, seed: u64) -> Self {
+        let (net, ports) = mac8::build();
+
+        let mut delay_units = vec![0u32; 256];
+        let mut sta_units = vec![0u32; 256];
+        let mut mean_toggles = vec![0f64; 256];
+        for w in i8::MIN..=i8::MAX {
+            let stats = dynsim::weight_stats(&net, &ports, w, samples, seed);
+            delay_units[widx(w)] = stats.max_settle;
+            mean_toggles[widx(w)] = stats.mean_toggles;
+            sta_units[widx(w)] = sta::weight_delay(&net, &ports, w);
+        }
+
+        let worst = *delay_units.iter().max().expect("non-empty") as f64;
+        let ps_per_unit = (1000.0 / BASE_FREQ_GHZ) / worst;
+
+        let delay_ps: Vec<f64> =
+            delay_units.iter().map(|&d| d as f64 * ps_per_unit).collect();
+        let sta_delay_ps: Vec<f64> =
+            sta_units.iter().map(|&d| d as f64 * ps_per_unit).collect();
+        let freq_ghz: Vec<f64> = delay_ps
+            .iter()
+            .map(|&d| if d > 0.0 { 1000.0 / d } else { f64::INFINITY })
+            .collect();
+        let energy_pj: Vec<f64> = mean_toggles
+            .iter()
+            .map(|&t| super::power::dynamic_energy_pj(t, super::power::V_NOM))
+            .collect();
+
+        // Rank all weights by (delay, |w|, w) — deterministic; ties broken
+        // toward small magnitudes purely for reproducibility.
+        let mut order: Vec<i8> = (i8::MIN..=i8::MAX).collect();
+        order.sort_by_key(|&w| (delay_units[widx(w)], (w as i32).abs(), w));
+
+        let codebook_fast: Vec<i8> = Self::pick_codebook(&order, FAST_SET);
+        let codebook_med: Vec<i8> = Self::pick_codebook(&order, MED_SET);
+
+        let class_freq = |cb: &[i8]| {
+            cb.iter()
+                .map(|&w| freq_ghz[widx(w)])
+                .fold(f64::INFINITY, f64::min)
+        };
+        let f_fast_ghz = class_freq(&codebook_fast);
+        let f_med_ghz = class_freq(&codebook_med);
+
+        Self {
+            delay_ps,
+            sta_delay_ps,
+            freq_ghz,
+            mean_toggles,
+            energy_pj,
+            codebook_fast,
+            codebook_med,
+            f_fast_ghz,
+            f_med_ghz,
+            f_base_ghz: BASE_FREQ_GHZ,
+            ps_per_unit,
+            samples,
+        }
+    }
+
+    /// Select a `size`-value codebook from the delay ranking.
+    ///
+    /// Greedy with a usability constraint: always include 0, keep the set
+    /// sign-balanced (the paper's sets are symmetric — weight distributions
+    /// are zero-centered), and otherwise take the fastest remaining values.
+    fn pick_codebook(order: &[i8], size: usize) -> Vec<i8> {
+        let mut cb: Vec<i8> = Vec::with_capacity(size);
+        cb.push(0);
+        let mut pos = 0usize; // count of positive entries
+        let mut neg = 0usize;
+        let half = size / 2; // e.g. 4 for 9, 7..8 for 16
+        for &w in order.iter() {
+            if cb.len() >= size {
+                break;
+            }
+            if w == 0 || cb.contains(&w) {
+                continue;
+            }
+            if w > 0 && pos >= size - 1 - half {
+                continue;
+            }
+            if w < 0 && neg >= size - 1 - half {
+                continue;
+            }
+            cb.push(w);
+            if w > 0 {
+                pos += 1;
+            } else {
+                neg += 1;
+            }
+        }
+        // Fallback: if balance constraints starved the set, fill fastest.
+        for &w in order.iter() {
+            if cb.len() >= size {
+                break;
+            }
+            if !cb.contains(&w) {
+                cb.push(w);
+            }
+        }
+        cb.sort_unstable();
+        cb
+    }
+
+    /// Worst-case delay (ps) over an arbitrary set of int8 weight values.
+    pub fn set_delay_ps(&self, set: &[i8]) -> f64 {
+        set.iter().map(|&w| self.delay_ps[widx(w)]).fold(0.0, f64::max)
+    }
+
+    /// Achievable frequency (GHz) for a set of weight values.
+    pub fn set_freq_ghz(&self, set: &[i8]) -> f64 {
+        1000.0 / self.set_delay_ps(set).max(1e-9)
+    }
+
+    pub fn delay_of(&self, w: i8) -> f64 {
+        self.delay_ps[widx(w)]
+    }
+
+    pub fn freq_of(&self, w: i8) -> f64 {
+        self.freq_ghz[widx(w)]
+    }
+
+    pub fn toggles_of(&self, w: i8) -> f64 {
+        self.mean_toggles[widx(w)]
+    }
+
+    pub fn energy_of(&self, w: i8) -> f64 {
+        self.energy_pj[widx(w)]
+    }
+
+    /// Mean dynamic energy per MAC over a codebook (pJ) — tile energy proxy.
+    pub fn mean_energy_pj(&self, set: &[i8]) -> f64 {
+        if set.is_empty() {
+            return 0.0;
+        }
+        set.iter().map(|&w| self.energy_of(w)).sum::<f64>() / set.len() as f64
+    }
+
+    /// Mean dynamic energy over the full int8 range (uniform-quant tiles).
+    pub fn full_range_energy_pj(&self) -> f64 {
+        self.energy_pj.iter().sum::<f64>() / 256.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let f64s = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        let i8s = |v: &[i8]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let mut o = Json::obj();
+        o.set("delay_ps", f64s(&self.delay_ps))
+            .set("sta_delay_ps", f64s(&self.sta_delay_ps))
+            .set("freq_ghz", f64s(&self.freq_ghz))
+            .set("mean_toggles", f64s(&self.mean_toggles))
+            .set("energy_pj", f64s(&self.energy_pj))
+            .set("codebook_fast", i8s(&self.codebook_fast))
+            .set("codebook_med", i8s(&self.codebook_med))
+            .set("f_fast_ghz", self.f_fast_ghz)
+            .set("f_med_ghz", self.f_med_ghz)
+            .set("f_base_ghz", self.f_base_ghz)
+            .set("ps_per_unit", self.ps_per_unit)
+            .set("samples", self.samples);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let f64s = |k: &str| -> crate::Result<Vec<f64>> {
+            j.req(k)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
+        };
+        let i8s = |k: &str| -> crate::Result<Vec<i8>> {
+            Ok(f64s(k)?.into_iter().map(|x| x as i8).collect())
+        };
+        Ok(Self {
+            delay_ps: f64s("delay_ps")?,
+            sta_delay_ps: f64s("sta_delay_ps")?,
+            freq_ghz: f64s("freq_ghz")?,
+            mean_toggles: f64s("mean_toggles")?,
+            energy_pj: f64s("energy_pj")?,
+            codebook_fast: i8s("codebook_fast")?,
+            codebook_med: i8s("codebook_med")?,
+            f_fast_ghz: j.req("f_fast_ghz")?.as_f64()?,
+            f_med_ghz: j.req("f_med_ghz")?.as_f64()?,
+            f_base_ghz: j.req("f_base_ghz")?.as_f64()?,
+            ps_per_unit: j.req("ps_per_unit")?.as_f64()?,
+            samples: j.req("samples")?.as_usize()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    /// Process-wide cached profile (computed once; STA+dynsim ≈ a second).
+    pub fn cached() -> &'static MacProfile {
+        static CACHE: OnceLock<MacProfile> = OnceLock::new();
+        CACHE.get_or_init(|| MacProfile::compute(DEFAULT_SAMPLES, 0x4A10))
+    }
+}
+
+/// Fig. 3 data: settle-time histogram (ps → count) for one weight value.
+pub fn delay_histogram_ps(w: i8, samples: usize, seed: u64) -> Vec<(f64, u32)> {
+    let (net, ports) = mac8::build();
+    let prof = MacProfile::cached();
+    dynsim::settle_histogram(&net, &ports, w, samples, seed)
+        .into_iter()
+        .map(|(u, c)| (u as f64 * prof.ps_per_unit, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> &'static MacProfile {
+        MacProfile::cached()
+    }
+
+    #[test]
+    fn calibration_pins_worst_case_to_base_freq() {
+        let p = prof();
+        let worst = p.delay_ps.iter().cloned().fold(0.0, f64::max);
+        assert!((worst - 1000.0 / BASE_FREQ_GHZ).abs() < 1e-6);
+        let fmin = p.freq_ghz.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((fmin - BASE_FREQ_GHZ).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codebook_sizes_match_paper() {
+        let p = prof();
+        assert_eq!(p.codebook_fast.len(), FAST_SET);
+        assert_eq!(p.codebook_med.len(), MED_SET);
+        assert!(p.codebook_fast.contains(&0));
+    }
+
+    #[test]
+    fn class_frequencies_ordered() {
+        // fast class > med class > base — the DVFS ladder shape of Table I.
+        let p = prof();
+        assert!(p.f_fast_ghz > p.f_med_ghz, "{} vs {}", p.f_fast_ghz, p.f_med_ghz);
+        assert!(p.f_med_ghz > p.f_base_ghz, "{} vs {}", p.f_med_ghz, p.f_base_ghz);
+    }
+
+    #[test]
+    fn fast_codebook_is_booth_sparse() {
+        // The fast set is dominated by Booth-sparse values: strictly fewer
+        // mean non-zero digits than the full range (2.99 on average), and
+        // no member uses more than 2 digits.
+        let p = prof();
+        let mean_digits = |ws: &[i8]| {
+            ws.iter().map(|&w| crate::mac::booth::nonzero_digits(w)).sum::<usize>() as f64
+                / ws.len() as f64
+        };
+        let all: Vec<i8> = (i8::MIN..=i8::MAX).collect();
+        assert!(mean_digits(&p.codebook_fast) < mean_digits(&all) - 0.5);
+    }
+
+    #[test]
+    fn fast_codebook_subset_of_medium() {
+        // The quantizer's shared 16-entry codebook table relies on this.
+        let p = prof();
+        for w in &p.codebook_fast {
+            assert!(p.codebook_med.contains(w), "{w} not in medium codebook");
+        }
+    }
+
+    #[test]
+    fn codebook_energy_below_full_range() {
+        // Fig. 4/5 correlation: fast weights also switch less.
+        let p = prof();
+        assert!(p.mean_energy_pj(&p.codebook_fast) < p.full_range_energy_pj());
+        assert!(p.mean_energy_pj(&p.codebook_med) <= p.full_range_energy_pj());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = MacProfile::compute(32, 1);
+        let path = std::env::temp_dir().join("halo_mac_profile_test.json");
+        p.save(&path).unwrap();
+        let q = MacProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(p.codebook_fast, q.codebook_fast);
+        assert_eq!(p.delay_ps, q.delay_ps);
+    }
+}

@@ -1,0 +1,171 @@
+//! Per-weight static timing analysis with constant propagation.
+//!
+//! PrimeTime-style "case analysis": the weight port is tied to a constant
+//! (the value the PE will hold for a whole tile), constants propagate, and
+//! any gate whose output is logically constant no longer launches timing
+//! paths. The remaining longest path from a variable input (activation or
+//! accumulator) to an output bit is the weight's critical-path delay — the
+//! quantity behind the paper's Fig. 4.
+//!
+//! Gates keep their silicon delay even when an input is constant (the
+//! circuit is fixed; only *constant-output* gates stop propagating events).
+
+use super::gate::{Gate, Netlist};
+use super::mac8::MacPorts;
+
+/// Constant-propagated knowledge about each node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Known {
+    Const(bool),
+    Var,
+}
+
+/// Propagate a fixed weight value through the netlist.
+/// Returns per-node [`Known`] (activations/accumulator stay variable).
+pub fn propagate_weight(net: &Netlist, ports: &MacPorts, w: i8) -> Vec<Known> {
+    let mut known = vec![Known::Var; net.len()];
+    // Mark weight bits.
+    let mut is_w_input = vec![false; net.len()];
+    for (i, &n) in ports.w.iter().enumerate() {
+        is_w_input[n as usize] = true;
+        known[n as usize] = Known::Const((w as u8 >> i) & 1 != 0);
+    }
+    for (i, g) in net.gates.iter().enumerate() {
+        if is_w_input[i] {
+            continue;
+        }
+        known[i] = match *g {
+            Gate::Input => Known::Var,
+            Gate::Const(c) => Known::Const(c),
+            Gate::Not(a) => match known[a as usize] {
+                Known::Const(v) => Known::Const(!v),
+                Known::Var => Known::Var,
+            },
+            Gate::And(a, b) => match (known[a as usize], known[b as usize]) {
+                (Known::Const(false), _) | (_, Known::Const(false)) => Known::Const(false),
+                (Known::Const(true), Known::Const(true)) => Known::Const(true),
+                _ => Known::Var,
+            },
+            Gate::Or(a, b) => match (known[a as usize], known[b as usize]) {
+                (Known::Const(true), _) | (_, Known::Const(true)) => Known::Const(true),
+                (Known::Const(false), Known::Const(false)) => Known::Const(false),
+                _ => Known::Var,
+            },
+            Gate::Xor(a, b) => match (known[a as usize], known[b as usize]) {
+                (Known::Const(x), Known::Const(y)) => Known::Const(x ^ y),
+                _ => Known::Var,
+            },
+        };
+    }
+    known
+}
+
+/// Longest sensitizable path (in pre-calibration delay units) for a fixed
+/// weight: max arrival time over all output bits, where constant nodes
+/// launch no events.
+pub fn weight_delay(net: &Netlist, ports: &MacPorts, w: i8) -> u32 {
+    let known = propagate_weight(net, ports, w);
+    let mut arrival: Vec<Option<u32>> = vec![None; net.len()];
+    for (i, g) in net.gates.iter().enumerate() {
+        if matches!(known[i], Known::Const(_)) {
+            continue; // constant: no timing event
+        }
+        arrival[i] = match g {
+            Gate::Input => Some(0),
+            Gate::Const(_) => None,
+            _ => {
+                let latest = g
+                    .inputs()
+                    .filter_map(|j| arrival[j as usize])
+                    .max();
+                // A variable gate must have at least one variable input.
+                latest.map(|t| t + g.delay())
+            }
+        };
+    }
+    net.outputs
+        .iter()
+        .filter_map(|&o| arrival[o as usize])
+        .max()
+        .unwrap_or(0)
+}
+
+/// Count of gates still switching (non-constant) under a fixed weight —
+/// the structural proxy for dynamic power (refined by `dynsim` toggles).
+pub fn live_gates(net: &Netlist, ports: &MacPorts, w: i8) -> usize {
+    propagate_weight(net, ports, w)
+        .iter()
+        .filter(|k| matches!(k, Known::Var))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::booth::nonzero_digits;
+    use crate::mac::mac8;
+
+    #[test]
+    fn zero_weight_is_fastest() {
+        let (net, ports) = mac8::build();
+        let d0 = weight_delay(&net, &ports, 0);
+        for w in [1i8, 64, -127, 85, 127] {
+            assert!(d0 <= weight_delay(&net, &ports, w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn fewer_booth_digits_is_never_slower_much() {
+        // Aggregate trend (paper Fig. 4): average delay grows with the
+        // number of non-zero Booth digits.
+        let (net, ports) = mac8::build();
+        let mut by_digits = vec![(0u64, 0u64); 5];
+        for w in i8::MIN..=i8::MAX {
+            let d = weight_delay(&net, &ports, w) as u64;
+            let n = nonzero_digits(w);
+            by_digits[n].0 += d;
+            by_digits[n].1 += 1;
+        }
+        let avg: Vec<f64> = by_digits
+            .iter()
+            .map(|&(s, c)| if c == 0 { 0.0 } else { s as f64 / c as f64 })
+            .collect();
+        assert!(avg[1] < avg[2] && avg[2] < avg[4], "avg by digits: {avg:?}");
+    }
+
+    #[test]
+    fn weight_64_faster_than_minus_127() {
+        // The paper's Fig. 3 pair: w=64 reaches 3.7 GHz, w=-127 only 1.9.
+        let (net, ports) = mac8::build();
+        assert!(
+            weight_delay(&net, &ports, 64) < weight_delay(&net, &ports, -127),
+            "64 should be faster than -127"
+        );
+    }
+
+    #[test]
+    fn propagation_agrees_with_eval() {
+        // Any node marked Const must evaluate to that constant for every
+        // activation/accumulator assignment (spot-checked).
+        let (net, ports) = mac8::build();
+        let w = -37i8;
+        let known = propagate_weight(&net, &ports, w);
+        for (a, acc) in [(0i8, 0i32), (127, -1), (-128, 0x3fffff), (55, -12345)] {
+            let mut vals = vec![false; net.len()];
+            mac8::set_inputs(&ports, &mut vals, w, a, acc);
+            net.eval_into(&mut vals);
+            for (i, k) in known.iter().enumerate() {
+                if let Known::Const(c) = k {
+                    assert_eq!(vals[i], *c, "node {i} a={a} acc={acc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_gates_fewer_for_simple_weights() {
+        let (net, ports) = mac8::build();
+        assert!(live_gates(&net, &ports, 0) < live_gates(&net, &ports, -127));
+        assert!(live_gates(&net, &ports, 64) < live_gates(&net, &ports, 85));
+    }
+}

@@ -1,0 +1,116 @@
+//! Wallace/CSA reduction tree: compress N addend rows into two.
+//!
+//! Rows are `WIDTH`-bit columns of gate nodes (LSB-first); missing bits are
+//! structural constants folded away by the builder. Each reduction level
+//! applies full adders to triples and half adders to pairs per column —
+//! classic Wallace reduction, so the tree depth (and thus the sensitizable
+//! path length) shrinks when Booth rows are constant-zero for a given
+//! weight.
+
+use super::gate::{NetBuilder, NodeId};
+
+/// Reduce `rows` (each a WIDTH-long bit vector) to exactly two rows.
+pub fn reduce(nb: &mut NetBuilder, rows: Vec<Vec<NodeId>>, width: usize) -> (Vec<NodeId>, Vec<NodeId>) {
+    assert!(rows.iter().all(|r| r.len() == width));
+    // Column-major working set.
+    let mut cols: Vec<Vec<NodeId>> = vec![Vec::new(); width];
+    let zero = nb.constant(false);
+    for row in &rows {
+        for (k, &b) in row.iter().enumerate() {
+            cols[k].push(b);
+        }
+    }
+
+    while cols.iter().any(|c| c.len() > 2) {
+        let mut next: Vec<Vec<NodeId>> = vec![Vec::new(); width];
+        for k in 0..width {
+            let col = std::mem::take(&mut cols[k]);
+            let mut it = col.into_iter().peekable();
+            let mut pending: Vec<NodeId> = Vec::new();
+            while it.peek().is_some() {
+                pending.clear();
+                for _ in 0..3 {
+                    if let Some(b) = it.next() {
+                        pending.push(b);
+                    }
+                }
+                match pending.len() {
+                    3 => {
+                        let (s, c) = nb.full_adder(pending[0], pending[1], pending[2]);
+                        next[k].push(s);
+                        if k + 1 < width {
+                            next[k + 1].push(c);
+                        }
+                    }
+                    2 => {
+                        let (s, c) = nb.half_adder(pending[0], pending[1]);
+                        next[k].push(s);
+                        if k + 1 < width {
+                            next[k + 1].push(c);
+                        }
+                    }
+                    1 => next[k].push(pending[0]),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        cols = next;
+    }
+
+    let mut r0 = Vec::with_capacity(width);
+    let mut r1 = Vec::with_capacity(width);
+    for col in cols {
+        let mut it = col.into_iter();
+        r0.push(it.next().unwrap_or(zero));
+        r1.push(it.next().unwrap_or(zero));
+    }
+    (r0, r1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::gate::Netlist;
+
+    /// Reduce a set of constant rows and check sum == carry-save sum.
+    fn check(rows_vals: &[u32], width: usize) {
+        let mut nb = NetBuilder::new();
+        let rows: Vec<Vec<NodeId>> = rows_vals
+            .iter()
+            .map(|&v| (0..width).map(|k| nb.constant((v >> k) & 1 != 0)).collect())
+            .collect();
+        let (r0, r1) = reduce(&mut nb, rows, width);
+        let outs: Vec<NodeId> = r0.iter().chain(r1.iter()).copied().collect();
+        let net: Netlist = nb.finish(outs);
+        let mut vals = vec![false; net.len()];
+        net.eval_into(&mut vals);
+        let bits = net.read_outputs(&vals);
+        let s0 = bits & ((1u64 << width) - 1);
+        let s1 = (bits >> width) & ((1u64 << width) - 1);
+        let want: u64 = rows_vals.iter().map(|&v| v as u64).sum::<u64>() & ((1u64 << width) - 1);
+        assert_eq!((s0 + s1) & ((1u64 << width) - 1), want, "rows={rows_vals:?}");
+    }
+
+    #[test]
+    fn reduces_to_correct_carry_save_sum() {
+        check(&[0b1011, 0b0110, 0b1110], 6);
+        check(&[1, 2, 3, 4, 5, 6], 8);
+        check(&[0xff, 0xff, 0xff, 0xff, 0xff], 10);
+        check(&[0, 0, 0], 4);
+    }
+
+    #[test]
+    fn tree_shrinks_with_fewer_rows() {
+        // Structural property behind the paper's effect: fewer live rows →
+        // fewer gates (and shallower tree).
+        let size = |n_rows: usize| {
+            let mut nb = NetBuilder::new();
+            let rows: Vec<Vec<NodeId>> =
+                (0..n_rows).map(|_| (0..16).map(|_| nb.input()).collect()).collect();
+            let (r0, r1) = reduce(&mut nb, rows, 16);
+            nb.finish(r0.into_iter().chain(r1).collect()).len()
+        };
+        assert!(size(2) < size(4));
+        assert!(size(4) < size(6));
+    }
+}

@@ -1,0 +1,280 @@
+//! `halo` — the L3 coordinator binary.
+//!
+//! Subcommands regenerate every table/figure of the paper (DESIGN.md
+//! experiment index) and run the serving demo. See `halo help`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use halo::experiments::{figs, table2, write_report};
+use halo::mac::{profile::delay_histogram_ps, MacProfile};
+use halo::runtime::Store;
+use halo::util::cli::Args;
+
+const HELP: &str = "\
+halo — HALO (AAAI'26) reproduction: hardware-aware quantization + DVFS
+
+USAGE: halo <command> [options]
+
+COMMANDS
+  mac profile            Figs 4+5: per-weight MAC frequency/power profile
+  mac histogram --w N    Fig 3: delay histogram for weight value(s) N
+  quantize --model M --method Q [--tile T]   quantize + report one model
+  table2 [--models a,b] [--max-batches N]    Table II (PJRT end-to-end)
+  fig8 | fig10 | fig11 | fig12 [--tile T]    simulator figures
+  ablate dram|dvfs-overhead|derived-ladder   ablation studies
+  serve --model M [--requests N]             serving coordinator demo
+  all [--max-batches N]                      regenerate everything → results/
+
+OPTIONS
+  --artifacts DIR   artifact root (default: ./artifacts or $HALO_ARTIFACTS)
+  --out DIR         report output dir (default: ./results)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let t0 = Instant::now();
+    match args.subcommand() {
+        Some("mac") => cmd_mac(&args, &out)?,
+        Some("quantize") => cmd_quantize(&args)?,
+        Some("table2") => cmd_table2(&args, &out)?,
+        Some("fig8") => {
+            write_report(&out.join("fig8.md"), &figs::fig8(args.usize_or("tile", 128)?))?
+        }
+        Some("fig10") => {
+            write_report(&out.join("fig10.md"), &figs::fig10(args.usize_or("tile", 128)?))?
+        }
+        Some("fig11") => write_report(&out.join("fig11.md"), &figs::fig11())?,
+        Some("fig12") | Some("fig13") => {
+            write_report(&out.join("fig12_13.md"), &figs::fig12_13())?
+        }
+        Some("ablate") => cmd_ablate(&args, &out)?,
+        Some("serve") => cmd_serve(&args)?,
+        Some("all") => cmd_all(&args, &out)?,
+        _ => {
+            print!("{HELP}");
+            return Ok(());
+        }
+    }
+    eprintln!("done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_mac(args: &Args, out: &std::path::Path) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str());
+    let profile = MacProfile::cached();
+    match sub {
+        Some("histogram") => {
+            let ws = args.get_all("w");
+            let ws: Vec<i8> = if ws.is_empty() {
+                vec![64, -127] // the paper's Fig 3 pair
+            } else {
+                ws.iter().map(|s| s.parse().unwrap()).collect()
+            };
+            let samples = args.usize_or("samples", 4096)?;
+            let mut md = String::from("## Fig 3 — settle-time histograms\n\n");
+            for w in ws {
+                md.push_str(&format!(
+                    "### weight {w} (max {:.0} ps → {:.2} GHz)\n\n",
+                    profile.delay_of(w),
+                    profile.freq_of(w).min(99.0)
+                ));
+                for (ps, count) in delay_histogram_ps(w, samples, 3) {
+                    md.push_str(&format!("{ps:7.0} ps: {count}\n"));
+                }
+                md.push('\n');
+            }
+            print!("{md}");
+            write_report(&out.join("fig3.md"), &md)?;
+        }
+        _ => {
+            let md = figs::mac_figures(profile);
+            print!("{md}");
+            write_report(&out.join("fig4_5.md"), &md)?;
+            profile.save(&out.join("mac_profile.json"))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    use halo::model::calibrate_fisher;
+    use halo::quant::baselines::by_name;
+    use halo::runtime::Runtime;
+
+    let store = open_store(args)?;
+    let model_name = args.str_or("model", "base").to_string();
+    let method = args.str_or("method", "halo-bal");
+    let tile = args.usize_or("tile", 128)?;
+    let rt = Runtime::cpu()?;
+    let model = store.model(&model_name)?;
+    let calib = store.corpus_calib()?;
+    let grads = calibrate_fisher(&rt, &model, &calib, 4)?;
+    let profile = MacProfile::cached();
+    let q = by_name(method, profile, tile)
+        .ok_or_else(|| anyhow::anyhow!("unknown method {method}"))?;
+
+    println!("# quantize {model_name} with {method} (tile {tile})\n");
+    let mut total_bits = 0.0;
+    let mut total_w = 0.0;
+    for p in model.linear_params() {
+        let w = p.as_matrix()?;
+        let ctx = match grads.get(&p.name) {
+            Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
+            None => halo::quant::LayerCtx::new(&p.name),
+        };
+        let res = q.quantize(&w, &ctx);
+        let (fast, med, base) = res.class_counts(profile);
+        println!(
+            "{:<22} {:>4}x{:<4} bw={:.2} mse={:.2e} tiles fast/med/base={}/{}/{} sparse={}",
+            p.name,
+            w.rows,
+            w.cols,
+            res.bits_eff,
+            res.dequant.mse(&w),
+            fast,
+            med,
+            base,
+            res.sparse_nnz
+        );
+        total_bits += res.bits_eff * w.numel() as f64;
+        total_w += w.numel() as f64;
+    }
+    println!("\neffective bit-width (B_eff): {:.3}", total_bits / total_w);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args, out: &std::path::Path) -> Result<()> {
+    let store = open_store(args)?;
+    let models: Vec<String> = match args.get("models") {
+        Some(s) => s.split(',').map(String::from).collect(),
+        None => {
+            let mut m = store.model_names()?;
+            m.sort_by_key(|n| {
+                ["tiny", "small", "base", "large"]
+                    .iter()
+                    .position(|x| x == n)
+                    .unwrap_or(9)
+            });
+            m
+        }
+    };
+    let max_batches = args.usize_or("max-batches", 24)?;
+    let calib_batches = args.usize_or("calib-batches", 4)?;
+    let rows = table2::run(&store, &models, table2::METHODS, max_batches, calib_batches)?;
+    let md = table2::render(&rows, &models);
+    println!("{md}");
+    write_report(&out.join("table2.md"), &md)?;
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args, out: &std::path::Path) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str());
+    let md = match what {
+        Some("dram") => figs::ablate_dram(),
+        Some("dvfs-overhead") => figs::ablate_dvfs_overhead(),
+        Some("derived-ladder") => figs::ablate_derived_ladder(MacProfile::cached()),
+        _ => anyhow::bail!("ablate dram|dvfs-overhead|derived-ladder"),
+    };
+    println!("{md}");
+    write_report(
+        &out.join(format!("ablate_{}.md", what.unwrap().replace('-', "_"))),
+        &md,
+    )
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use halo::coordinator::server::PjrtExecutor;
+    use halo::coordinator::{BatcherConfig, Coordinator};
+    use halo::dvfs::Schedule;
+    use halo::model::calibrate_fisher;
+    use halo::quant::{HaloConfig, HaloQuantizer, Quantizer, Variant};
+    use halo::runtime::Runtime;
+    use std::collections::BTreeMap;
+
+    let store = open_store(args)?;
+    let model_name = args.str_or("model", "base").to_string();
+    let n_requests = args.usize_or("requests", 64)?;
+    let root = store.root.clone();
+
+    let coord = Coordinator::start(BatcherConfig::default(), move || {
+        let rt = Runtime::cpu()?;
+        let store = Store::open(root)?;
+        let model = store.model(&model_name)?;
+        // Quantize with HALO-bal before serving (the paper's deployment).
+        let calib = store.corpus_calib()?;
+        let grads = calibrate_fisher(&rt, &model, &calib, 2)?;
+        let profile = MacProfile::cached();
+        let q = HaloQuantizer::new(HaloConfig::new(128, Variant::Bal), profile);
+        let mut replace = BTreeMap::new();
+        let mut classes = Vec::new();
+        for p in model.linear_params() {
+            let w = p.as_matrix()?;
+            let ctx = match grads.get(&p.name) {
+                Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
+                None => halo::quant::LayerCtx::new(&p.name),
+            };
+            let res = q.quantize(&w, &ctx);
+            for &f in &res.tile_freq_ghz {
+                classes.push(halo::dvfs::classify(f, profile));
+            }
+            replace.insert(p.name.clone(), res.dequant);
+        }
+        let schedule = Schedule::cluster(&classes);
+        eprintln!(
+            "[serve] quantized {} tiles, schedule groups={} transitions={}",
+            classes.len(),
+            schedule.groups.len(),
+            schedule.transitions()
+        );
+        let exec = PjrtExecutor::new(rt, &model, &replace, schedule)?;
+        Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+    });
+
+    // Fire a synthetic request stream sampled from the corpus.
+    let store2 = open_store(args)?;
+    let stream = store2.corpus_eval("wikisyn")?;
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let start = (i * 37) % (stream.len() - 64);
+        let prefix: Vec<i32> =
+            stream[start..start + 32].iter().map(|&t| t as i32).collect();
+        rxs.push(coord.submit(prefix));
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        anyhow::ensure!((0..256).contains(&resp.next_token));
+        ok += 1;
+    }
+    println!("[serve] {ok}/{n_requests} responses; {}", coord.metrics.summary());
+    coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_all(args: &Args, out: &std::path::Path) -> Result<()> {
+    let profile = MacProfile::cached();
+    write_report(&out.join("fig4_5.md"), &figs::mac_figures(profile))?;
+    write_report(&out.join("fig8.md"), &figs::fig8(128))?;
+    write_report(&out.join("fig10.md"), &figs::fig10(128))?;
+    write_report(&out.join("fig11.md"), &figs::fig11())?;
+    write_report(&out.join("fig12_13.md"), &figs::fig12_13())?;
+    write_report(&out.join("ablate_dram.md"), &figs::ablate_dram())?;
+    write_report(&out.join("ablate_dvfs_overhead.md"), &figs::ablate_dvfs_overhead())?;
+    write_report(
+        &out.join("ablate_derived_ladder.md"),
+        &figs::ablate_derived_ladder(profile),
+    )?;
+    cmd_table2(args, out)?;
+    Ok(())
+}
+
+fn open_store(args: &Args) -> Result<Store> {
+    match args.get("artifacts") {
+        Some(dir) => Store::open(dir),
+        None => Store::open_default(),
+    }
+}

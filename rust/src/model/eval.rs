@@ -1,0 +1,122 @@
+//! Perplexity evaluation (Table II): run the `nll_fp` / `nll_a8` graphs
+//! with (quantized) parameter literals over a corpus stream.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::quant::{LayerCtx, Matrix, Quantizer};
+use crate::runtime::{artifacts::nll_batches, literal_i32, Executable, ModelArtifacts, Runtime};
+
+/// Evaluator bound to one model's artifacts.
+pub struct Evaluator<'r> {
+    pub model: &'r ModelArtifacts,
+    rt: &'r Runtime,
+    nll_fp: Executable,
+    nll_a8: Executable,
+}
+
+/// One Table II cell.
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub method: String,
+    pub corpus: String,
+    pub ppl: f64,
+    pub nll: f64,
+    pub bits_eff: f64,
+    pub batches: usize,
+}
+
+impl<'r> Evaluator<'r> {
+    pub fn new(rt: &'r Runtime, model: &'r ModelArtifacts) -> Result<Self> {
+        Ok(Self {
+            model,
+            rt,
+            nll_fp: rt.load(&model.graph_path("nll_fp"))?,
+            nll_a8: rt.load(&model.graph_path("nll_a8"))?,
+        })
+    }
+
+    /// Mean NLL over up to `max_batches` of the stream, with weights
+    /// optionally replaced and A8 activation quantization toggled.
+    ///
+    /// Parameters are uploaded to device buffers once and stay resident
+    /// across batches (§Perf L3); only the token batch is re-uploaded.
+    pub fn mean_nll(
+        &self,
+        replace: &BTreeMap<String, Matrix>,
+        stream: &[u16],
+        a8: bool,
+        max_batches: usize,
+    ) -> Result<(f64, usize)> {
+        let (b, s) = (self.model.eval_batch, self.model.seq_len);
+        let param_bufs = self.rt.upload_all(&self.model.param_literals(replace)?)?;
+
+        let exe = if a8 { &self.nll_a8 } else { &self.nll_fp };
+        let batches = nll_batches(stream, b, s);
+        let n = batches.len().min(max_batches).max(1);
+        let mut total = 0.0f64;
+        for tokens in batches.iter().take(n) {
+            let tok_buf = self.rt.upload(&literal_i32(tokens, &[b, s + 1])?)?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+            inputs.push(&tok_buf);
+            total += exe.run_scalar_b(&inputs)? as f64;
+        }
+        Ok((total / n as f64, n))
+    }
+
+    /// Evaluate a quantizer end-to-end: quantize every linear weight (with
+    /// Fisher gradients when provided), substitute, measure perplexity.
+    pub fn eval_quantizer(
+        &self,
+        q: &dyn Quantizer,
+        grads: &BTreeMap<String, Matrix>,
+        stream: &[u16],
+        corpus: &str,
+        max_batches: usize,
+        a8: bool,
+    ) -> Result<PplResult> {
+        let mut replace = BTreeMap::new();
+        let mut bits_weighted = 0.0f64;
+        let mut total_w = 0.0f64;
+        for p in self.model.linear_params() {
+            let w = p.as_matrix()?;
+            let g = grads.get(&p.name);
+            let ctx = match g {
+                Some(g) => LayerCtx::with_grad(&p.name, g),
+                None => LayerCtx::new(&p.name),
+            };
+            let res = q.quantize(&w, &ctx);
+            bits_weighted += res.bits_eff * w.numel() as f64;
+            total_w += w.numel() as f64;
+            replace.insert(p.name.clone(), res.dequant);
+        }
+        let (nll, batches) = self.mean_nll(&replace, stream, a8, max_batches)?;
+        Ok(PplResult {
+            method: q.name(),
+            corpus: corpus.to_string(),
+            ppl: nll.exp(),
+            nll,
+            bits_eff: bits_weighted / total_w.max(1.0),
+            batches,
+        })
+    }
+
+    /// FP16 reference row (no substitution, no activation quantization).
+    pub fn eval_fp16(
+        &self,
+        stream: &[u16],
+        corpus: &str,
+        max_batches: usize,
+    ) -> Result<PplResult> {
+        let (nll, batches) = self.mean_nll(&BTreeMap::new(), stream, false, max_batches)?;
+        Ok(PplResult {
+            method: "fp16".into(),
+            corpus: corpus.into(),
+            ppl: nll.exp(),
+            nll,
+            bits_eff: 16.0,
+            batches,
+        })
+    }
+}

@@ -1,0 +1,62 @@
+//! Fisher calibration (paper Eq. 1): run the `grad` graph over calibration
+//! batches and accumulate mean-squared gradients per linear weight — the
+//! saliency and tile-sensitivity inputs of Algorithm 1.
+//!
+//! The grad graph returns `(loss, dW for each linear weight in canonical
+//! order)`; averaging g over batches then squaring elementwise downstream
+//! (saliency uses g², so we return the RMS gradient matrix).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::quant::Matrix;
+use crate::runtime::{artifacts::nll_batches, literal_i32, ModelArtifacts, Runtime};
+
+/// Accumulated calibration gradients: name → RMS-gradient matrix.
+pub fn calibrate_fisher(
+    rt: &Runtime,
+    model: &ModelArtifacts,
+    calib: &[u16],
+    max_batches: usize,
+) -> Result<BTreeMap<String, Matrix>> {
+    let exe = rt.load(&model.graph_path("grad"))?;
+    let (b, s) = (model.eval_batch, model.seq_len);
+    // Parameters resident on device across calibration batches (§Perf L3).
+    let param_bufs = rt.upload_all(&model.param_literals(&BTreeMap::new())?)?;
+
+    let lin: Vec<_> = model.linear_params().collect();
+    let mut acc: Vec<Vec<f64>> = lin.iter().map(|p| vec![0.0; p.data.len()]).collect();
+
+    let batches = nll_batches(calib, b, s);
+    let n = batches.len().min(max_batches).max(1);
+    for tokens in batches.iter().take(n) {
+        let tok_buf = rt.upload(&literal_i32(tokens, &[b, s + 1])?)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+        inputs.push(&tok_buf);
+        let outputs = exe.run_b(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == lin.len() + 1,
+            "grad graph returned {} outputs, expected {}",
+            outputs.len(),
+            lin.len() + 1
+        );
+        for (i, out) in outputs.iter().skip(1).enumerate() {
+            let g: Vec<f32> = out.to_vec()?;
+            anyhow::ensure!(g.len() == acc[i].len(), "grad shape mismatch");
+            for (a, &x) in acc[i].iter_mut().zip(&g) {
+                *a += (x as f64) * (x as f64);
+            }
+        }
+    }
+
+    let mut out = BTreeMap::new();
+    for (p, a) in lin.iter().zip(acc) {
+        let rms: Vec<f32> = a.iter().map(|&x| ((x / n as f64).sqrt()) as f32).collect();
+        out.insert(
+            p.name.clone(),
+            Matrix::from_vec(p.shape[0], p.shape[1], rms),
+        );
+    }
+    Ok(out)
+}

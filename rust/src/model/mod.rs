@@ -1,0 +1,8 @@
+//! Model evaluation over the AOT artifacts: perplexity (Table II) and
+//! Fisher gradient calibration (Algorithm 1's inputs), all through PJRT.
+
+pub mod eval;
+pub mod fisher;
+
+pub use eval::Evaluator;
+pub use fisher::calibrate_fisher;

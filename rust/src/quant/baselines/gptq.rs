@@ -1,0 +1,197 @@
+//! GPTQ (Frantar et al., 2023): Hessian-guided one-shot weight
+//! quantization. Quantizes weight columns (input channels) in order,
+//! propagating each column's rounding error into the not-yet-quantized
+//! columns via the inverse-Hessian Cholesky factor — the OBQ update
+//!
+//!   W[:, j:] -= err_j · Hinv[j, j:] / Hinv[j, j]
+//!
+//! Hessian H = E[x xᵀ] over the calibration set (paper: 128 samples).
+//! Offline substitution (DESIGN.md): calibration activations are synthetic
+//! — unit-variance channels scaled by the same lognormal-with-outliers
+//! activation model SmoothQuant uses, so H = diag(act)² + low-rank noise.
+//! That preserves what GPTQ exploits: ill-conditioned, outlier-dominated
+//! input covariance.
+
+use crate::mac::MacProfile;
+use crate::util::Rng;
+
+use super::super::tensor::{inverse_cholesky_upper, Matrix, TileGrid};
+use super::super::uniform::{pe_image, q, qmax};
+use super::super::{tile_hw_stats, LayerCtx, QuantResult, Quantizer};
+use super::smoothquant::synthetic_act_absmax;
+
+/// Synthetic calibration Hessian H = (1/n) Σ x xᵀ with `n_samples` draws.
+pub fn synthetic_hessian(k: usize, seed: u64, n_samples: usize) -> Vec<f64> {
+    let act = synthetic_act_absmax(k, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x6970);
+    let mut h = vec![0.0f64; k * k];
+    // Low-rank structured samples: x = act ⊙ (z + ρ·u·g) — correlated noise.
+    let u: Vec<f64> = (0..k).map(|_| rng.gen_normal()).collect();
+    for _ in 0..n_samples {
+        let g = rng.gen_normal();
+        let x: Vec<f64> = (0..k)
+            .map(|j| act[j] as f64 * (rng.gen_normal() + 0.5 * u[j] * g))
+            .collect();
+        for i in 0..k {
+            let xi = x[i] / n_samples as f64;
+            for j in 0..k {
+                h[i * k + j] += xi * x[j];
+            }
+        }
+    }
+    h
+}
+
+pub struct Gptq<'p> {
+    pub bits: u32,
+    pub profile: &'p MacProfile,
+    pub tile: usize,
+    /// Relative dampening λ = percdamp · mean(diag H) (reference: 0.01).
+    pub percdamp: f64,
+    pub n_calib: usize,
+}
+
+impl<'p> Gptq<'p> {
+    pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
+        Self { bits, profile, tile, percdamp: 0.01, n_calib: 128 }
+    }
+
+    /// Core GPTQ: quantize `w` (K×N, column j = input channel j is row j
+    /// here — we quantize along rows of Wᵀ). Our W is (in, out), so GPTQ's
+    /// "columns" are our *rows*; error propagates down remaining rows.
+    fn run(&self, w: &Matrix, hinv_u: &[f64], scales: &[f32]) -> (Matrix, Vec<i8>) {
+        let (k, n) = (w.rows, w.cols);
+        let mut work = w.clone(); // rows get updated as we go
+        let mut deq = Matrix::zeros(k, n);
+        let mut img = vec![0i8; k * n];
+        for j in 0..k {
+            let d = hinv_u[j * k + j];
+            for c in 0..n {
+                let v = work.get(j, c);
+                let s = scales[c];
+                let qv = q(v, s, self.bits);
+                let dq = qv as f32 * s;
+                deq.set(j, c, dq);
+                img[j * n + c] = pe_image(qv, self.bits);
+                let err = ((v - dq) as f64) / d;
+                // Propagate into remaining rows via Hinv upper row j.
+                for jj in (j + 1)..k {
+                    let u = hinv_u[j * k + jj];
+                    if u != 0.0 {
+                        let nv = work.get(jj, c) as f64 - err * u;
+                        work.set(jj, c, nv as f32);
+                    }
+                }
+            }
+        }
+        (deq, img)
+    }
+}
+
+impl<'p> Quantizer for Gptq<'p> {
+    fn name(&self) -> String {
+        format!("gptq-w{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &LayerCtx) -> QuantResult {
+        let k = w.rows;
+        let mut h = synthetic_hessian(k, ctx.seed, self.n_calib);
+        // Dampen: H += λ I.
+        let mean_diag = (0..k).map(|i| h[i * k + i]).sum::<f64>() / k as f64;
+        let lambda = self.percdamp * mean_diag.max(1e-12);
+        for i in 0..k {
+            h[i * k + i] += lambda;
+        }
+        let hinv_u = inverse_cholesky_upper(&h, k);
+
+        // Per-output-channel scales from the *original* weights.
+        let m = qmax(self.bits) as f32;
+        let scales: Vec<f32> = w.col_absmax().iter().map(|&a| a / m).collect();
+
+        let (dequant, img) = self.run(w, &hinv_u, &scales);
+        let grid = TileGrid::new(w.rows, w.cols, self.tile);
+        let (tile_freq_ghz, tile_energy_pj) = tile_hw_stats(&img, &grid, self.profile);
+        QuantResult {
+            method: self.name(),
+            dequant,
+            grid,
+            tile_freq_ghz,
+            tile_energy_pj,
+            bits_eff: self.bits as f64,
+            sparse_nnz: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_invariants;
+    use super::super::rtn::Rtn;
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn hessian_is_symmetric_positive() {
+        let k = 16;
+        let h = synthetic_hessian(k, 3, 64);
+        for i in 0..k {
+            assert!(h[i * k + i] > 0.0);
+            for j in 0..k {
+                assert!((h[i * k + j] - h[j * k + i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_beats_rtn_in_hessian_metric() {
+        // GPTQ minimizes tr((W-Ŵ)ᵀ H (W-Ŵ)); it must beat RTN there.
+        let mut rng = Rng::seed_from_u64(70);
+        let k = 48;
+        let w = Matrix::random_normal(k, 32, 0.02, &mut rng);
+        let ctx = LayerCtx { name: "t", grad: None, seed: 9 };
+        let p = MacProfile::cached();
+        let h = synthetic_hessian(k, ctx.seed, 128);
+
+        let hess_err = |deq: &Matrix| -> f64 {
+            let mut total = 0.0;
+            for c in 0..w.cols {
+                // eᵀ H e per output column
+                let e: Vec<f64> =
+                    (0..k).map(|r| (deq.get(r, c) - w.get(r, c)) as f64).collect();
+                for i in 0..k {
+                    for j in 0..k {
+                        total += e[i] * h[i * k + j] * e[j];
+                    }
+                }
+            }
+            total
+        };
+
+        let gptq = Gptq::new(4, p, 16).quantize(&w, &ctx);
+        let rtn = Rtn::new(4, p, 16).quantize(&w, &ctx);
+        let (eg, er) = (hess_err(&gptq.dequant), hess_err(&rtn.dequant));
+        assert!(eg < er, "gptq {eg} !< rtn {er}");
+    }
+
+    #[test]
+    fn invariants() {
+        let mut rng = Rng::seed_from_u64(71);
+        let w = Matrix::random_normal(64, 48, 0.02, &mut rng);
+        check_invariants(
+            &Gptq::new(4, MacProfile::cached(), 32),
+            &w,
+            &LayerCtx::new("t"),
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::seed_from_u64(72);
+        let w = Matrix::random_normal(32, 16, 0.02, &mut rng);
+        let p = MacProfile::cached();
+        let ctx = LayerCtx { name: "t", grad: None, seed: 4 };
+        let a = Gptq::new(4, p, 16).quantize(&w, &ctx);
+        let b = Gptq::new(4, p, 16).quantize(&w, &ctx);
+        assert_eq!(a.dequant, b.dequant);
+    }
+}

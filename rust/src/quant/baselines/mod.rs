@@ -1,0 +1,87 @@
+//! Baseline quantizers the paper evaluates against (Table II, Figs 8–13):
+//! RTN, SmoothQuant, GPTQ, ZeroQuant-Local/Global, plus the FP16 identity.
+
+pub mod gptq;
+pub mod rtn;
+pub mod smoothquant;
+pub mod zeroquant;
+
+pub use gptq::Gptq;
+pub use rtn::{Fp16, Rtn};
+pub use smoothquant::SmoothQuant;
+pub use zeroquant::{ZqGlobal, ZqLocal};
+
+use super::Quantizer;
+#[cfg(test)]
+use super::{LayerCtx, QuantResult};
+
+/// All baselines + HALO variants by canonical name, for the CLI/harness.
+pub fn by_name<'p>(
+    name: &str,
+    profile: &'p crate::mac::MacProfile,
+    tile: usize,
+) -> Option<Box<dyn Quantizer + 'p>> {
+    use super::halo::{HaloConfig, HaloQuantizer, Variant};
+    let q: Box<dyn Quantizer + 'p> = match name {
+        "fp16" => Box::new(Fp16::new(profile, tile)),
+        "rtn-w8" | "w8a8" => Box::new(Rtn::new(8, profile, tile)),
+        "rtn-w4" | "w4a8" => Box::new(Rtn::new(4, profile, tile)),
+        "rtn-w3" | "w3a8" => Box::new(Rtn::new(3, profile, tile)),
+        "smoothquant-w8" | "sq-w8" => Box::new(SmoothQuant::new(8, profile, tile)),
+        "smoothquant-w4" | "sq-w4" => Box::new(SmoothQuant::new(4, profile, tile)),
+        "smoothquant-w3" | "sq-w3" => Box::new(SmoothQuant::new(3, profile, tile)),
+        "gptq" | "gptq-w4" => Box::new(Gptq::new(4, profile, tile)),
+        "zq-local" => Box::new(ZqLocal::new(4, profile, tile)),
+        "zq-global" => Box::new(ZqGlobal::new(4, profile, tile)),
+        "halo-perf" => Box::new(HaloQuantizer::new(
+            HaloConfig::new(tile, Variant::PerfOpt),
+            profile,
+        )),
+        "halo-acc" => Box::new(HaloQuantizer::new(
+            HaloConfig::new(tile, Variant::AccOpt),
+            profile,
+        )),
+        "halo-bal" | "halo" => Box::new(HaloQuantizer::new(
+            HaloConfig::new(tile, Variant::Bal),
+            profile,
+        )),
+        _ => return None,
+    };
+    Some(q)
+}
+
+/// Canonical method list for the paper figures.
+pub const FIGURE_METHODS: &[&str] = &[
+    "fp16", "w8a8", "w4a8", "w3a8", "halo-perf", "halo-acc", "halo-bal",
+];
+
+/// Canonical method list for Table II.
+pub const TABLE2_METHODS: &[&str] = &[
+    "fp16",
+    "rtn-w8",
+    "rtn-w4",
+    "rtn-w3",
+    "smoothquant-w8",
+    "smoothquant-w4",
+    "smoothquant-w3",
+    "gptq",
+    "zq-local",
+    "zq-global",
+    "halo-perf",
+    "halo-acc",
+    "halo-bal",
+];
+
+/// Run any quantizer and sanity-check its invariants (shared test helper).
+#[cfg(test)]
+pub fn check_invariants(q: &dyn Quantizer, w: &super::Matrix, ctx: &LayerCtx) -> QuantResult {
+    let res = q.quantize(w, ctx);
+    assert_eq!((res.dequant.rows, res.dequant.cols), (w.rows, w.cols));
+    assert_eq!(res.tile_freq_ghz.len(), res.grid.n_tiles());
+    assert_eq!(res.tile_energy_pj.len(), res.grid.n_tiles());
+    assert!(res.bits_eff > 0.0 && res.bits_eff <= 16.0);
+    for &f in &res.tile_freq_ghz {
+        assert!(f >= crate::mac::profile::BASE_FREQ_GHZ - 1e-9, "freq {f}");
+    }
+    res
+}

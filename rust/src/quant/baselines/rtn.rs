@@ -1,0 +1,124 @@
+//! Round-To-Nearest (RTN) WxA8 and the FP16 identity baseline.
+//!
+//! RTN is the paper's simplest baseline: symmetric per-output-channel
+//! uniform quantization, no calibration. It collapses at W3 (Table II shows
+//! perplexities in the thousands) because a 7-level grid cannot cover
+//! normal-tailed weights with a per-channel scale.
+
+use crate::mac::MacProfile;
+
+use super::super::tensor::{Matrix, TileGrid};
+use super::super::uniform::per_channel;
+use super::super::{tile_hw_stats, LayerCtx, QuantResult, Quantizer};
+
+pub struct Rtn<'p> {
+    pub bits: u32,
+    pub profile: &'p MacProfile,
+    pub tile: usize,
+}
+
+impl<'p> Rtn<'p> {
+    pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
+        Self { bits, profile, tile }
+    }
+}
+
+impl<'p> Quantizer for Rtn<'p> {
+    fn name(&self) -> String {
+        format!("rtn-w{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &LayerCtx) -> QuantResult {
+        let (dequant, img) = per_channel(w, self.bits);
+        let grid = TileGrid::new(w.rows, w.cols, self.tile);
+        let (tile_freq_ghz, tile_energy_pj) = tile_hw_stats(&img, &grid, self.profile);
+        QuantResult {
+            method: self.name(),
+            dequant,
+            grid,
+            tile_freq_ghz,
+            tile_energy_pj,
+            bits_eff: self.bits as f64,
+            sparse_nnz: 0,
+        }
+    }
+}
+
+/// FP16 "Ideal" row: identity weights, 16-bit storage/energy accounting.
+/// The FP16 datapath runs at the base clock and a wide-MAC energy penalty
+/// (handled by the simulators via `bits_eff = 16`).
+pub struct Fp16<'p> {
+    pub profile: &'p MacProfile,
+    pub tile: usize,
+}
+
+impl<'p> Fp16<'p> {
+    pub fn new(profile: &'p MacProfile, tile: usize) -> Self {
+        Self { profile, tile }
+    }
+}
+
+impl<'p> Quantizer for Fp16<'p> {
+    fn name(&self) -> String {
+        "fp16".into()
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &LayerCtx) -> QuantResult {
+        let grid = TileGrid::new(w.rows, w.cols, self.tile);
+        let n = grid.n_tiles();
+        QuantResult {
+            method: self.name(),
+            dequant: w.clone(),
+            grid,
+            tile_freq_ghz: vec![self.profile.f_base_ghz; n],
+            // FP16 MACs switch ~2x the gates of the worst int8 case.
+            tile_energy_pj: vec![self.profile.full_range_energy_pj() * 2.0; n],
+            bits_eff: 16.0,
+            sparse_nnz: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_invariants;
+    use super::*;
+    use crate::util::Rng;
+
+    fn w(seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::random_normal(96, 64, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn rtn_bits_control_error() {
+        let w = w(50);
+        let ctx = LayerCtx::new("t");
+        let p = MacProfile::cached();
+        let e8 = check_invariants(&Rtn::new(8, p, 32), &w, &ctx).dequant.mse(&w);
+        let e4 = check_invariants(&Rtn::new(4, p, 32), &w, &ctx).dequant.mse(&w);
+        let e3 = check_invariants(&Rtn::new(3, p, 32), &w, &ctx).dequant.mse(&w);
+        assert!(e8 < e4 && e4 < e3);
+    }
+
+    #[test]
+    fn rtn_tiles_land_at_base_class() {
+        // Uniform grids contain slow weight values -> tiles cannot beat the
+        // medium class, and W8 tiles sit essentially at base.
+        let w = w(51);
+        let p = MacProfile::cached();
+        let res = Rtn::new(8, p, 32).quantize(&w, &LayerCtx::new("t"));
+        let avg: f64 =
+            res.tile_freq_ghz.iter().sum::<f64>() / res.tile_freq_ghz.len() as f64;
+        assert!(avg < p.f_med_ghz, "avg={avg}");
+    }
+
+    #[test]
+    fn fp16_identity() {
+        let w = w(52);
+        let p = MacProfile::cached();
+        let res = Fp16::new(p, 32).quantize(&w, &LayerCtx::new("t"));
+        assert_eq!(res.dequant, w);
+        assert_eq!(res.bits_eff, 16.0);
+    }
+}

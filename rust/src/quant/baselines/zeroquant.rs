@@ -1,0 +1,211 @@
+//! ZeroQuant (Yao et al., NeurIPS'22) — the two variants the paper
+//! compares against (numbers in its Table II come from the LoRC follow-up):
+//!
+//! - **ZQ-Local**: fine-grained quantization on 128×128 tiles with per-tile
+//!   scale and zero-point, compensation ratio 1.0.
+//! - **ZQ-Global**: fuses groups of 64 input channels into one quantization
+//!   group and applies a global compensation factor of 0.8 per tile
+//!   (cheaper calibration, coarser scales).
+
+use crate::mac::MacProfile;
+
+use super::super::tensor::{Matrix, TileGrid};
+use super::super::uniform::pe_image;
+use super::super::{tile_hw_stats, LayerCtx, QuantResult, Quantizer};
+
+/// Asymmetric (scale + zero-point) quantization of one value.
+#[inline]
+fn q_asym(v: f32, lo: f32, hi: f32, bits: u32) -> (i32, f32, f32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let range = (hi - lo).max(1e-12);
+    let s = range / levels;
+    let z = (-lo / s).round();
+    let qv = ((v / s) + z).round().clamp(0.0, levels) as i32;
+    (qv, s, z)
+}
+
+#[inline]
+fn deq_asym(qv: i32, s: f32, z: f32) -> f32 {
+    (qv as f32 - z) * s
+}
+
+/// Signed PE image of an asymmetric b-bit code (shift to signed, then
+/// MSB-align onto the int8 datapath).
+#[inline]
+fn pe_image_asym(qv: i32, bits: u32) -> i8 {
+    pe_image(qv - (1 << (bits - 1)), bits)
+}
+
+pub struct ZqLocal<'p> {
+    pub bits: u32,
+    pub profile: &'p MacProfile,
+    pub tile: usize,
+    pub compensation: f32,
+}
+
+impl<'p> ZqLocal<'p> {
+    pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
+        Self { bits, profile, tile, compensation: 1.0 }
+    }
+}
+
+impl<'p> Quantizer for ZqLocal<'p> {
+    fn name(&self) -> String {
+        format!("zq-local-w{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &LayerCtx) -> QuantResult {
+        let grid = TileGrid::new(w.rows, w.cols, self.tile);
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        let mut img = vec![0i8; w.numel()];
+        for t in 0..grid.n_tiles() {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            grid.for_each(t, |r, c| {
+                let v = w.get(r, c);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            });
+            grid.for_each(t, |r, c| {
+                let (qv, s, z) = q_asym(w.get(r, c), lo, hi, self.bits);
+                dequant.set(r, c, deq_asym(qv, s, z) * self.compensation);
+                img[r * w.cols + c] = pe_image_asym(qv, self.bits);
+            });
+        }
+        let (tile_freq_ghz, tile_energy_pj) = tile_hw_stats(&img, &grid, self.profile);
+        QuantResult {
+            method: self.name(),
+            dequant,
+            grid,
+            tile_freq_ghz,
+            tile_energy_pj,
+            bits_eff: self.bits as f64,
+            sparse_nnz: 0,
+        }
+    }
+}
+
+pub struct ZqGlobal<'p> {
+    pub bits: u32,
+    pub profile: &'p MacProfile,
+    pub tile: usize,
+    pub group_channels: usize,
+    pub compensation: f32,
+}
+
+impl<'p> ZqGlobal<'p> {
+    pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
+        Self { bits, profile, tile, group_channels: 64, compensation: 0.8 }
+    }
+}
+
+impl<'p> Quantizer for ZqGlobal<'p> {
+    fn name(&self) -> String {
+        format!("zq-global-w{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &LayerCtx) -> QuantResult {
+        // Fuse blocks of `group_channels` input rows: one (lo, hi) per group.
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        let mut img = vec![0i8; w.numel()];
+        let g = self.group_channels;
+        let mut r0 = 0usize;
+        while r0 < w.rows {
+            let r1 = (r0 + g).min(w.rows);
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in r0..r1 {
+                for &v in w.row(r) {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            for r in r0..r1 {
+                for c in 0..w.cols {
+                    let (qv, s, z) = q_asym(w.get(r, c), lo, hi, self.bits);
+                    // Global compensation: shrink toward zero to offset the
+                    // coarse-grid clipping bias (LoRC's 0.8 factor), blended
+                    // with the raw dequant.
+                    let d = deq_asym(qv, s, z);
+                    let comp = self.compensation + (1.0 - self.compensation) * 0.5;
+                    dequant.set(r, c, d * comp);
+                    img[r * w.cols + c] = pe_image_asym(qv, self.bits);
+                }
+            }
+            r0 = r1;
+        }
+        let grid = TileGrid::new(w.rows, w.cols, self.tile);
+        let (tile_freq_ghz, tile_energy_pj) = tile_hw_stats(&img, &grid, self.profile);
+        QuantResult {
+            method: self.name(),
+            dequant,
+            grid,
+            tile_freq_ghz,
+            tile_energy_pj,
+            bits_eff: self.bits as f64,
+            sparse_nnz: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_invariants;
+    use super::super::rtn::Rtn;
+    use super::*;
+    use crate::util::Rng;
+
+    fn w(seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from_u64(seed);
+        Matrix::random_normal(128, 64, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn asym_roundtrip_exact_on_grid() {
+        let (qv, s, z) = q_asym(0.5, -1.0, 1.0, 4);
+        let d = deq_asym(qv, s, z);
+        assert!((d - 0.5).abs() <= s / 2.0 + 1e-6);
+        // Extremes map to grid ends.
+        assert_eq!(q_asym(-1.0, -1.0, 1.0, 4).0, 0);
+        assert_eq!(q_asym(1.0, -1.0, 1.0, 4).0, 15);
+    }
+
+    #[test]
+    fn local_beats_rtn_on_tile_banded_magnitudes() {
+        // ZeroQuant's fine-granularity claim: when magnitude structure is
+        // tile-local (every tile roughly homogeneous, every *column*
+        // passing through a high-magnitude band somewhere), per-tile scales
+        // adapt and per-output-channel RTN scales cannot.
+        let mut rng = Rng::seed_from_u64(80);
+        let m = Matrix::from_fn(128, 128, |r, c| {
+            let band = (r / 32 + c / 32) % 4;
+            rng.gen_normal() as f32 * 0.01 * (2.0f32).powi(band as i32 * 3)
+        });
+        let p = MacProfile::cached();
+        let ctx = LayerCtx::new("t");
+        let zq = ZqLocal::new(4, p, 32).quantize(&m, &ctx);
+        let rtn = Rtn::new(4, p, 32).quantize(&m, &ctx);
+        assert!(
+            zq.dequant.mse(&m) < rtn.dequant.mse(&m),
+            "zq {} rtn {}",
+            zq.dequant.mse(&m),
+            rtn.dequant.mse(&m)
+        );
+    }
+
+    #[test]
+    fn global_coarser_than_local() {
+        let m = w(81);
+        let p = MacProfile::cached();
+        let ctx = LayerCtx::new("t");
+        let local = ZqLocal::new(4, p, 32).quantize(&m, &ctx);
+        let global = ZqGlobal::new(4, p, 32).quantize(&m, &ctx);
+        assert!(local.dequant.mse(&m) <= global.dequant.mse(&m));
+    }
+
+    #[test]
+    fn invariants_both_variants() {
+        let m = w(82);
+        let p = MacProfile::cached();
+        check_invariants(&ZqLocal::new(4, p, 32), &m, &LayerCtx::new("t"));
+        check_invariants(&ZqGlobal::new(4, p, 32), &m, &LayerCtx::new("t"));
+    }
+}

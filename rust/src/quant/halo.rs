@@ -1,0 +1,394 @@
+//! HALO quantization pipeline — the paper's Algorithm 1.
+//!
+//! 1. Extract salient weights (top 0.05 % by Fisher) and 3σ outliers →
+//!    hypersparse full-precision side matrix (SpMV engine).
+//! 2. Tile the remainder (default 128×128), compute per-tile sensitivity
+//!    (Eq. 2), derive the adaptive threshold k from the cumulative
+//!    sensitivity curve.
+//! 3. Low-sensitivity tiles → 9-value fast codebook; high-sensitivity
+//!    tiles → 16-value medium codebook (both derived from the MAC circuit
+//!    model).
+//! 4. The [`Variant`] (perf-opt / acc-opt / bal) sets the cumulative
+//!    coverage target — the paper's "optimization feedback mechanism
+//!    constrain[ing] the number of tiles allocated to each DVFS level".
+
+use crate::mac::MacProfile;
+
+use super::nonuniform::{dequantize_tile, quantize_tile, Codebook, TileQuant};
+use super::outliers::extract_outliers;
+use super::saliency::extract_salient;
+use super::sparse::SparseMatrix;
+use super::tensor::{Matrix, TileGrid};
+use super::tiles::{adaptive_k, low_sensitivity_mask, tile_sensitivity};
+use super::{LayerCtx, QuantResult, Quantizer};
+
+/// User-facing design-goal presets (paper Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Maximize tiles in the fast class (lowest BW, highest clock).
+    PerfOpt,
+    /// Protect accuracy: most sensitivity mass stays on the 16-value book.
+    AccOpt,
+    /// The knee-point configuration (paper's recommended default).
+    Bal,
+}
+
+impl Variant {
+    /// Cumulative sensitivity coverage the high-sensitivity class must
+    /// retain (paper example: 95 %). Lower coverage → more fast tiles.
+    pub fn keep_frac(self) -> f64 {
+        match self {
+            Variant::PerfOpt => 0.50,
+            Variant::AccOpt => 0.98,
+            Variant::Bal => 0.90,
+        }
+    }
+
+    /// Fraction of weights preserved as salient (paper: 0.05 %, acc-opt
+    /// doubles it; still ≪ the 0.5 % total sparse budget).
+    pub fn salient_frac(self) -> f64 {
+        match self {
+            Variant::PerfOpt => 0.0003,
+            Variant::AccOpt => 0.0010,
+            Variant::Bal => 0.0005,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::PerfOpt => "perf-opt",
+            Variant::AccOpt => "acc-opt",
+            Variant::Bal => "bal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "perf-opt" | "perf" => Some(Variant::PerfOpt),
+            "acc-opt" | "acc" => Some(Variant::AccOpt),
+            "bal" | "balanced" => Some(Variant::Bal),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HaloConfig {
+    pub tile: usize,
+    pub variant: Variant,
+    /// 3σ outlier cut (paper §III-A).
+    pub sigma: f64,
+}
+
+impl HaloConfig {
+    pub fn new(tile: usize, variant: Variant) -> Self {
+        Self { tile, variant, sigma: 3.0 }
+    }
+}
+
+/// The serving-side payload: exactly the operands of the `fwd_halo` graph /
+/// L1 Pallas kernel (idx + codebook + per-tile scales + sparse val/pos).
+#[derive(Debug, Clone)]
+pub struct HaloPayload {
+    /// Codebook index per weight, row-major (K, N). Indices refer to the
+    /// tile's class codebook padded into a single 16-entry table.
+    pub idx: Vec<u8>,
+    /// 16-entry f32 codebook table (fast book occupies the first 9 slots
+    /// re-mapped; see `codebook_table`).
+    pub codebook: Vec<f32>,
+    /// Per-tile scale, row-major tile order.
+    pub scales: Vec<f32>,
+    /// `true` per tile ⇒ fast (9-value) class.
+    pub tile_fast: Vec<bool>,
+    pub sparse: SparseMatrix,
+}
+
+/// The HALO quantizer (owns a reference profile + config).
+pub struct HaloQuantizer<'p> {
+    pub cfg: HaloConfig,
+    pub profile: &'p MacProfile,
+}
+
+impl<'p> HaloQuantizer<'p> {
+    pub fn new(cfg: HaloConfig, profile: &'p MacProfile) -> Self {
+        Self { cfg, profile }
+    }
+
+    /// Full Algorithm 1 on one weight matrix. `grad` drives saliency and
+    /// tile sensitivity; without it every tile is low-sensitivity (k = 1).
+    pub fn quantize_full(&self, w: &Matrix, ctx: &LayerCtx) -> (QuantResult, HaloPayload) {
+        let prof = self.profile;
+        let cb_fast = Codebook::new(prof.codebook_fast.clone());
+        let cb_med = Codebook::new(prof.codebook_med.clone());
+        // Payload indices live in the shared 16-entry table (= medium book);
+        // fast-book index i maps to the medium-book position of the same
+        // int8 value. The MacProfile construction guarantees fast ⊆ med.
+        let fast_to_med: Vec<u8> = cb_fast
+            .values
+            .iter()
+            .map(|v| {
+                cb_med
+                    .values
+                    .iter()
+                    .position(|m| m == v)
+                    .expect("fast codebook must be a subset of the medium codebook")
+                    as u8
+            })
+            .collect();
+
+        // --- 1. salient + outlier extraction (Alg. 1 lines 1-3) ---
+        let (after_salient, mut coords) = match ctx.grad {
+            Some(g) => extract_salient(w, g, self.cfg.variant.salient_frac()),
+            None => (w.clone(), Vec::new()),
+        };
+        let ex = extract_outliers(&after_salient, self.cfg.sigma);
+        coords.extend(ex.coords.iter().copied());
+        let cleaned = ex.cleaned;
+        let sparse = SparseMatrix::from_coords(w.rows, w.cols, &coords);
+
+        // --- 2. tile sensitivity + adaptive k (lines 4-6) ---
+        let grid = TileGrid::new(w.rows, w.cols, self.cfg.tile);
+        let (k, sens) = match ctx.grad {
+            Some(g) => {
+                let sens = tile_sensitivity(g, &grid);
+                (adaptive_k(&sens, self.cfg.variant.keep_frac()), sens)
+            }
+            None => (1.0, vec![0.0; grid.n_tiles()]),
+        };
+        let low_mask = low_sensitivity_mask(&sens, k);
+
+        // --- 3. per-tile codebook quantization (lines 7-9) ---
+        let mut dequant = Matrix::zeros(w.rows, w.cols);
+        let mut idx = vec![0u8; w.numel()];
+        let mut scales = Vec::with_capacity(grid.n_tiles());
+        let mut tile_freq = Vec::with_capacity(grid.n_tiles());
+        let mut tile_energy = Vec::with_capacity(grid.n_tiles());
+        for t in 0..grid.n_tiles() {
+            let (cb, f_class) = if low_mask[t] {
+                (&cb_fast, prof.f_fast_ghz)
+            } else {
+                (&cb_med, prof.f_med_ghz)
+            };
+            let tq: TileQuant = quantize_tile(&cleaned, &grid, t, cb);
+            dequantize_tile(&mut dequant, &grid, t, cb, &tq);
+            // Record flat indices in shared-table space.
+            let mut i = 0usize;
+            grid.for_each(t, |r, c| {
+                idx[r * w.cols + c] = if low_mask[t] {
+                    fast_to_med[tq.idx[i] as usize]
+                } else {
+                    tq.idx[i]
+                };
+                i += 1;
+            });
+            scales.push(tq.scale);
+            tile_freq.push(f_class);
+            tile_energy.push(prof.mean_energy_pj(&cb.values));
+        }
+
+        // --- sparse correction back into the dense reconstruction ---
+        sparse.scatter_into(&mut dequant);
+
+        // --- effective bit-width (Table II BW) ---
+        let n = w.numel() as f64;
+        let frac_sparse = sparse.nnz as f64 / n;
+        let n_low: usize = (0..grid.n_tiles())
+            .filter(|&t| low_mask[t])
+            .map(|t| grid.tile_numel(t))
+            .sum();
+        let frac_low = n_low as f64 / n;
+        let frac_high = 1.0 - frac_low - frac_sparse;
+        let bits_eff = frac_low * cb_fast.bits()
+            + frac_high.max(0.0) * cb_med.bits()
+            + frac_sparse * 16.0;
+
+        let result = QuantResult {
+            method: format!(
+                "halo-{}-t{}",
+                self.cfg.variant.name(),
+                self.cfg.tile
+            ),
+            dequant,
+            grid,
+            tile_freq_ghz: tile_freq,
+            tile_energy_pj: tile_energy,
+            bits_eff,
+            sparse_nnz: sparse.nnz,
+        };
+        let payload = HaloPayload {
+            idx,
+            codebook: codebook_table(&cb_fast, &cb_med),
+            scales,
+            tile_fast: low_mask,
+            sparse,
+        };
+        (result, payload)
+    }
+}
+
+/// The 16-entry codebook table shipped to the `fwd_halo` graph. Fast tiles
+/// index into the fast book's values; since both books share the table we
+/// ship the *medium* book (16 entries) and re-map fast indices onto the
+/// nearest medium entries at payload build time. To keep fast tiles
+/// codebook-pure we instead require (and the MacProfile guarantees) the
+/// fast book ⊆ medium book, so fast indices map exactly.
+pub fn codebook_table(cb_fast: &Codebook, cb_med: &Codebook) -> Vec<f32> {
+    debug_assert!(
+        cb_fast.values.iter().all(|v| cb_med.values.contains(v)),
+        "fast codebook must be a subset of the medium codebook"
+    );
+    let mut table: Vec<f32> = cb_med.values.iter().map(|&v| v as f32).collect();
+    table.resize(16, 0.0);
+    table
+}
+
+impl<'p> Quantizer for HaloQuantizer<'p> {
+    fn name(&self) -> String {
+        format!("halo-{}-t{}", self.cfg.variant.name(), self.cfg.tile)
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &LayerCtx) -> QuantResult {
+        self.quantize_full(w, ctx).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn prof() -> &'static MacProfile {
+        MacProfile::cached()
+    }
+
+    fn wg(rows: usize, cols: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = Matrix::random_normal(rows, cols, 0.02, &mut rng);
+        // Gradients with structure: first tile row much more sensitive.
+        let g = Matrix::from_fn(rows, cols, |r, _| {
+            let base = rng.gen_normal() as f32;
+            if r < rows / 4 {
+                base * 10.0
+            } else {
+                base * 0.1
+            }
+        });
+        (w, g)
+    }
+
+    #[test]
+    fn variant_class_populations_ordered() {
+        // perf-opt must put >= as many tiles in the fast class as bal,
+        // which must put >= as many as acc-opt.
+        let (w, g) = wg(128, 128, 40);
+        let counts: Vec<usize> = [Variant::PerfOpt, Variant::Bal, Variant::AccOpt]
+            .iter()
+            .map(|&v| {
+                let q = HaloQuantizer::new(HaloConfig::new(32, v), prof());
+                let ctx = LayerCtx::with_grad("t", &g);
+                let (res, pay) = q.quantize_full(&w, &ctx);
+                assert_eq!(res.tile_freq_ghz.len(), 16);
+                pay.tile_fast.iter().filter(|&&f| f).count()
+            })
+            .collect();
+        assert!(counts[0] >= counts[1] && counts[1] >= counts[2], "{counts:?}");
+        assert!(counts[0] > counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn bits_eff_between_3_and_5() {
+        let (w, g) = wg(128, 128, 41);
+        for v in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt] {
+            let q = HaloQuantizer::new(HaloConfig::new(32, v), prof());
+            let res = q.quantize(&w, &LayerCtx::with_grad("t", &g));
+            assert!(
+                res.bits_eff > 3.0 && res.bits_eff < 5.0,
+                "{}: {}",
+                v.name(),
+                res.bits_eff
+            );
+        }
+        // perf-opt uses fewer bits than acc-opt.
+        let bits = |v| {
+            HaloQuantizer::new(HaloConfig::new(32, v), prof())
+                .quantize(&w, &LayerCtx::with_grad("t", &g))
+                .bits_eff
+        };
+        assert!(bits(Variant::PerfOpt) < bits(Variant::AccOpt));
+    }
+
+    #[test]
+    fn reconstruction_error_reasonable() {
+        let (w, g) = wg(64, 64, 42);
+        let q = HaloQuantizer::new(HaloConfig::new(32, Variant::Bal), prof());
+        let res = q.quantize(&w, &LayerCtx::with_grad("t", &g));
+        let rel = res.dequant.mse(&w).sqrt() / w.std();
+        assert!(rel < 0.35, "relative RMSE {rel}");
+        // acc-opt strictly better than perf-opt on average error.
+        let e_acc = HaloQuantizer::new(HaloConfig::new(32, Variant::AccOpt), prof())
+            .quantize(&w, &LayerCtx::with_grad("t", &g))
+            .dequant
+            .mse(&w);
+        let e_perf = HaloQuantizer::new(HaloConfig::new(32, Variant::PerfOpt), prof())
+            .quantize(&w, &LayerCtx::with_grad("t", &g))
+            .dequant
+            .mse(&w);
+        assert!(e_acc <= e_perf, "{e_acc} vs {e_perf}");
+    }
+
+    #[test]
+    fn sparse_fraction_under_budget() {
+        let (w, g) = wg(128, 128, 43);
+        let q = HaloQuantizer::new(HaloConfig::new(64, Variant::Bal), prof());
+        let res = q.quantize(&w, &LayerCtx::with_grad("t", &g));
+        let frac = res.sparse_nnz as f64 / w.numel() as f64;
+        assert!(frac < 0.01, "sparse frac {frac}"); // paper: < 0.5% typical
+        assert!(frac > 0.0);
+    }
+
+    #[test]
+    fn no_grad_all_tiles_fast() {
+        let (w, _) = wg(64, 64, 44);
+        let q = HaloQuantizer::new(HaloConfig::new(32, Variant::Bal), prof());
+        let (res, pay) = q.quantize_full(&w, &LayerCtx::new("t"));
+        assert!(pay.tile_fast.iter().all(|&f| f));
+        assert!(res
+            .tile_freq_ghz
+            .iter()
+            .all(|&f| (f - prof().f_fast_ghz).abs() < 1e-9));
+    }
+
+    #[test]
+    fn fast_tiles_run_faster_than_uniform() {
+        let (w, g) = wg(64, 64, 45);
+        let q = HaloQuantizer::new(HaloConfig::new(32, Variant::Bal), prof());
+        let res = q.quantize(&w, &LayerCtx::with_grad("t", &g));
+        for &f in &res.tile_freq_ghz {
+            assert!(f >= prof().f_med_ghz - 1e-9);
+            assert!(f > prof().f_base_ghz);
+        }
+    }
+
+    #[test]
+    fn payload_dequant_consistency() {
+        // idx/codebook/scales + sparse must reconstruct exactly the dequant
+        // matrix in the QuantResult — the contract with fwd_halo.
+        let (w, g) = wg(64, 64, 46);
+        let q = HaloQuantizer::new(HaloConfig::new(32, Variant::Bal), prof());
+        let (res, pay) = q.quantize_full(&w, &LayerCtx::with_grad("t", &g));
+        let grid = res.grid;
+        // Decode strictly through the shared 16-entry table, exactly as the
+        // fwd_halo graph does.
+        let mut rec = Matrix::zeros(64, 64);
+        for t in 0..grid.n_tiles() {
+            grid.for_each(t, |r, c| {
+                let v = pay.codebook[pay.idx[r * 64 + c] as usize] * pay.scales[t];
+                rec.set(r, c, v);
+            });
+        }
+        pay.sparse.scatter_into(&mut rec);
+        for (a, b) in rec.data.iter().zip(&res.dequant.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! The HALO quantization framework (Algorithm 1) and baselines.
+//!
+//! Every quantizer consumes a dense f32 weight matrix (+ optional gradients
+//! for sensitivity) and produces a [`QuantResult`]: the dequantized weights
+//! (for accuracy evaluation through the PJRT graphs), the per-tile
+//! achievable frequency and per-op MAC energy (for the simulators, computed
+//! from the circuit-model [`crate::mac::MacProfile`]), and the effective
+//! bit-width (Table II's `BW` column).
+//!
+//! The per-tile frequency is *honest*: whatever int8 values a quantizer
+//! actually places in a tile determine the tile's achievable clock via the
+//! MAC profile. Uniform baselines (RTN/SmoothQuant/GPTQ/ZeroQuant) span
+//! delay-unfriendly values and land at the base class; HALO's tiles are
+//! codebook-pure by construction and land at the fast/med classes.
+
+pub mod baselines;
+pub mod halo;
+pub mod nonuniform;
+pub mod outliers;
+pub mod saliency;
+pub mod sparse;
+pub mod tensor;
+pub mod tiles;
+pub mod uniform;
+
+pub use halo::{HaloConfig, HaloQuantizer, Variant};
+pub use tensor::{Matrix, TileGrid};
+
+use crate::mac::MacProfile;
+
+/// Per-layer context handed to quantizers.
+pub struct LayerCtx<'a> {
+    pub name: &'a str,
+    /// Loss gradients w.r.t. this weight matrix (Fisher inputs, Eq. 1).
+    pub grad: Option<&'a Matrix>,
+    /// Seed for methods that need synthetic calibration data.
+    pub seed: u64,
+}
+
+impl<'a> LayerCtx<'a> {
+    pub fn new(name: &'a str) -> Self {
+        Self { name, grad: None, seed: 0 }
+    }
+
+    pub fn with_grad(name: &'a str, grad: &'a Matrix) -> Self {
+        Self { name, grad: Some(grad), seed: 0 }
+    }
+}
+
+/// What every quantizer produces.
+#[derive(Debug, Clone)]
+pub struct QuantResult {
+    pub method: String,
+    /// Reconstructed dense weights (substituted into the eval graphs).
+    pub dequant: Matrix,
+    pub grid: TileGrid,
+    /// Achievable clock per tile (GHz) from the MAC profile — before
+    /// snapping to a DVFS ladder.
+    pub tile_freq_ghz: Vec<f64>,
+    /// Mean dynamic MAC energy per op per tile (pJ at V_NOM).
+    pub tile_energy_pj: Vec<f64>,
+    /// Effective stored bits per weight (Table II BW column).
+    pub bits_eff: f64,
+    /// Non-zeros routed to the SpMV engine (outliers + salient).
+    pub sparse_nnz: usize,
+}
+
+impl QuantResult {
+    /// Weight-memory traffic in bytes for one pass over the layer
+    /// (bits_eff per dense weight + 40 bits per sparse entry: f32 value +
+    /// position). Drives the DRAM model and the §V DRAM-reduction ablation.
+    pub fn weight_bytes(&self) -> f64 {
+        let dense = self.dequant.numel() as f64 * self.bits_eff / 8.0;
+        let sparse = self.sparse_nnz as f64 * 5.0;
+        dense + sparse
+    }
+
+    /// Histogram of tiles per achievable-frequency bucket, using the
+    /// derived codebook class frequencies as bucket edges.
+    pub fn class_counts(&self, profile: &MacProfile) -> (usize, usize, usize) {
+        let (mut fast, mut med, mut base) = (0, 0, 0);
+        for &f in &self.tile_freq_ghz {
+            if f >= profile.f_fast_ghz - 1e-9 {
+                fast += 1;
+            } else if f >= profile.f_med_ghz - 1e-9 {
+                med += 1;
+            } else {
+                base += 1;
+            }
+        }
+        (fast, med, base)
+    }
+}
+
+/// Common interface over HALO and all baselines.
+pub trait Quantizer {
+    fn name(&self) -> String;
+    fn quantize(&self, w: &Matrix, ctx: &LayerCtx) -> QuantResult;
+}
+
+/// Compute per-tile achievable frequency + mean energy from the int8 values
+/// a quantizer actually stored (shared by all methods).
+pub fn tile_hw_stats(
+    q_i8: &[i8],
+    grid: &TileGrid,
+    profile: &MacProfile,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut freqs = Vec::with_capacity(grid.n_tiles());
+    let mut energies = Vec::with_capacity(grid.n_tiles());
+    for t in 0..grid.n_tiles() {
+        let mut worst = 0.0f64;
+        let mut esum = 0.0f64;
+        let mut n = 0usize;
+        grid.for_each(t, |r, c| {
+            let v = q_i8[r * grid.cols + c];
+            worst = worst.max(profile.delay_of(v));
+            esum += profile.energy_of(v);
+            n += 1;
+        });
+        freqs.push(if worst > 0.0 { 1000.0 / worst } else { f64::INFINITY });
+        energies.push(esum / n.max(1) as f64);
+    }
+    (freqs, energies)
+}

@@ -1,0 +1,185 @@
+//! Critical-path-delay-aware non-uniform quantization (paper §III-B).
+//!
+//! Weights are mapped onto a small codebook of int8 values chosen for their
+//! short MAC critical paths (from [`crate::mac::MacProfile`]), with one
+//! dequant scale per tile: deq(w) = codebook[i] · s_tile. Because every
+//! stored value is a codebook member, the tile's achievable clock is the
+//! codebook class frequency by construction.
+
+use super::tensor::{Matrix, TileGrid};
+
+/// A codebook = sorted int8 values + their f32 images.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    pub values: Vec<i8>,
+    f: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut values: Vec<i8>) -> Self {
+        values.sort_unstable();
+        values.dedup();
+        let f = values.iter().map(|&v| v as f32).collect();
+        Self { values, f }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.f.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Index of the nearest codebook entry to `x` (f32 domain).
+    pub fn nearest(&self, x: f32) -> usize {
+        // Binary search on the sorted values, then compare neighbours.
+        let mut lo = 0usize;
+        let mut hi = self.f.len() - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.f[mid] <= x {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        if (x - self.f[lo]).abs() <= (x - self.f[hi]).abs() {
+            lo
+        } else {
+            hi
+        }
+    }
+
+    /// Storage bits per weight for this codebook (Table II BW accounting).
+    pub fn bits(&self) -> f64 {
+        (self.len() as f64).log2()
+    }
+}
+
+/// Result of quantizing one tile set onto a codebook.
+#[derive(Debug, Clone)]
+pub struct TileQuant {
+    /// Codebook index per element of the tile (row-major within tile).
+    pub idx: Vec<u8>,
+    pub scale: f32,
+}
+
+/// Quantize the elements of tile `t` of `w` onto `cb`.
+/// Scale maps the tile's absmax onto the codebook's absmax.
+pub fn quantize_tile(w: &Matrix, grid: &TileGrid, t: usize, cb: &Codebook) -> TileQuant {
+    let mut amax = 0.0f32;
+    grid.for_each(t, |r, c| amax = amax.max(w.get(r, c).abs()));
+    let scale = if amax > 0.0 { amax / cb.max_abs() } else { 1.0 };
+    let mut idx = Vec::with_capacity(grid.tile_numel(t));
+    grid.for_each(t, |r, c| {
+        idx.push(cb.nearest(w.get(r, c) / scale) as u8);
+    });
+    TileQuant { idx, scale }
+}
+
+/// Write the dequantized values of a quantized tile back into `out`.
+pub fn dequantize_tile(
+    out: &mut Matrix,
+    grid: &TileGrid,
+    t: usize,
+    cb: &Codebook,
+    tq: &TileQuant,
+) {
+    let mut i = 0usize;
+    grid.for_each(t, |r, c| {
+        out.set(r, c, cb.values[tq.idx[i] as usize] as f32 * tq.scale);
+        i += 1;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cb9() -> Codebook {
+        Codebook::new(vec![-128, -112, -32, -16, 0, 2, 3, 16, 112])
+    }
+
+    #[test]
+    fn nearest_exhaustive_against_linear_scan() {
+        let cb = cb9();
+        let mut rng = Rng::seed_from_u64(20);
+        for _ in 0..2000 {
+            let x = (rng.gen_f64() * 300.0 - 150.0) as f32;
+            let got = cb.nearest(x);
+            let want = (0..cb.len())
+                .min_by(|&a, &b| {
+                    (x - cb.values[a] as f32)
+                        .abs()
+                        .partial_cmp(&(x - cb.values[b] as f32).abs())
+                        .unwrap()
+                })
+                .unwrap();
+            let d_got = (x - cb.values[got] as f32).abs();
+            let d_want = (x - cb.values[want] as f32).abs();
+            assert!((d_got - d_want).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn codebook_members_quantize_exactly() {
+        let cb = cb9();
+        let grid = TileGrid::new(3, 3, 3);
+        // Tile values are exactly scale * codebook entries.
+        let scale = 0.01f32;
+        let vals: Vec<f32> = cb.values.iter().map(|&v| v as f32 * scale).collect();
+        let w = Matrix::from_vec(3, 3, vals.clone());
+        let tq = quantize_tile(&w, &grid, 0, &cb);
+        let mut out = Matrix::zeros(3, 3);
+        dequantize_tile(&mut out, &grid, 0, &cb, &tq);
+        for (a, b) in out.data.iter().zip(&vals) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_max_gap() {
+        let cb = cb9();
+        let mut rng = Rng::seed_from_u64(21);
+        let w = Matrix::random_normal(16, 16, 0.05, &mut rng);
+        let grid = TileGrid::new(16, 16, 16);
+        let tq = quantize_tile(&w, &grid, 0, &cb);
+        let mut out = Matrix::zeros(16, 16);
+        dequantize_tile(&mut out, &grid, 0, &cb, &tq);
+        // Max gap between adjacent codebook values (int8 domain) = 80.
+        let max_gap = cb
+            .values
+            .windows(2)
+            .map(|p| p[1] as i32 - p[0] as i32)
+            .max()
+            .unwrap() as f32;
+        let bound = tq.scale * max_gap / 2.0 + 1e-6;
+        for (a, b) in out.data.iter().zip(&w.data) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn zero_tile_is_stable() {
+        let cb = cb9();
+        let w = Matrix::zeros(4, 4);
+        let grid = TileGrid::new(4, 4, 4);
+        let tq = quantize_tile(&w, &grid, 0, &cb);
+        let mut out = Matrix::from_fn(4, 4, |_, _| 9.0);
+        dequantize_tile(&mut out, &grid, 0, &cb, &tq);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((cb9().bits() - 9f64.log2()).abs() < 1e-12);
+        let cb16 = Codebook::new((0..16).map(|i| (i * 8 - 64) as i8).collect());
+        assert!((cb16.bits() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,92 @@
+//! Weight-sensitivity analysis (paper §III-A, Eq. 1).
+//!
+//! The Hessian is approximated by the empirical Fisher information
+//! F = 1/|D| Σ g g^T; per-weight saliency uses the diagonal, i.e. the mean
+//! squared gradient from the calibration batches. The top `frac` (paper:
+//! 0.05 %) of weights by saliency are preserved in full precision next to
+//! the 3σ outliers.
+
+use super::outliers::Coord;
+use super::tensor::Matrix;
+
+/// Per-weight saliency Λ_W = diag(F) = mean g² (the grad matrix passed in
+/// is already averaged over the calibration set by the caller).
+pub fn fisher_diag(grad: &Matrix) -> Matrix {
+    Matrix::from_fn(grad.rows, grad.cols, |r, c| {
+        let g = grad.get(r, c);
+        g * g
+    })
+}
+
+/// Extract the top `frac` of weights by Fisher saliency.
+/// Returns the cleaned matrix (salient entries zeroed) and their coords.
+pub fn extract_salient(w: &Matrix, grad: &Matrix, frac: f64) -> (Matrix, Vec<Coord>) {
+    assert_eq!((w.rows, w.cols), (grad.rows, grad.cols));
+    let n_keep = ((w.numel() as f64 * frac).ceil() as usize).min(w.numel());
+    if n_keep == 0 {
+        return (w.clone(), Vec::new());
+    }
+
+    // Threshold = n_keep-th largest g² (selection without full sort).
+    let mut scores: Vec<f32> = grad.data.iter().map(|&g| g * g).collect();
+    let k = scores.len() - n_keep;
+    scores.select_nth_unstable_by(k, |a, b| a.partial_cmp(b).unwrap());
+    let threshold = scores[k];
+
+    let mut cleaned = w.clone();
+    let mut coords = Vec::with_capacity(n_keep);
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            let g = grad.get(r, c);
+            if g * g >= threshold && coords.len() < n_keep {
+                coords.push((r, c, w.get(r, c)));
+                cleaned.set(r, c, 0.0);
+            }
+        }
+    }
+    (cleaned, coords)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn keeps_exactly_top_fraction() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = Matrix::random_normal(100, 100, 0.02, &mut rng);
+        let g = Matrix::random_normal(100, 100, 1.0, &mut rng);
+        let (_, coords) = extract_salient(&w, &g, 0.0005);
+        assert_eq!(coords.len(), 5); // ceil(10000 * 0.0005)
+    }
+
+    #[test]
+    fn selects_highest_gradient_weights() {
+        let w = Matrix::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
+        let mut g = Matrix::zeros(4, 4);
+        g.set(2, 3, 10.0);
+        g.set(0, 0, -20.0); // saliency uses g², sign irrelevant
+        let (cleaned, coords) = extract_salient(&w, &g, 2.0 / 16.0);
+        let pos: Vec<(usize, usize)> = coords.iter().map(|&(r, c, _)| (r, c)).collect();
+        assert!(pos.contains(&(0, 0)) && pos.contains(&(2, 3)));
+        assert_eq!(cleaned.get(2, 3), 0.0);
+        assert_eq!(cleaned.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn zero_fraction_is_noop() {
+        let mut rng = Rng::seed_from_u64(4);
+        let w = Matrix::random_normal(8, 8, 1.0, &mut rng);
+        let g = Matrix::random_normal(8, 8, 1.0, &mut rng);
+        let (cleaned, coords) = extract_salient(&w, &g, 0.0);
+        assert!(coords.is_empty());
+        assert_eq!(cleaned, w);
+    }
+
+    #[test]
+    fn fisher_diag_is_squared_grad() {
+        let g = Matrix::from_vec(1, 3, vec![1.0, -2.0, 3.0]);
+        assert_eq!(fisher_diag(&g).data, vec![1.0, 4.0, 9.0]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Hypersparse packaging + SpMV for outlier/salient weights (§III-C1).
+//!
+//! The < 0.5 % extracted weights are stored as `(val, pos)` vectors —
+//! value + flattened row-major position — exactly the layout the L1 Pallas
+//! SpMV kernel and the `fwd_halo` graph consume (zero-padded to a block
+//! multiple). `res[i] = val[i] * b[idx[i]]` per the paper.
+
+use super::outliers::Coord;
+use super::tensor::Matrix;
+
+/// Padding granularity — matches `SPARSE_PAD` in python/compile/aot.py.
+pub const PAD: usize = 256;
+
+#[derive(Debug, Clone, Default)]
+pub struct SparseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zero values, zero-padded to a multiple of [`PAD`].
+    pub val: Vec<f32>,
+    /// Flattened positions (row * cols + col), one per `val` entry.
+    pub pos: Vec<u32>,
+    /// Live entries (before padding).
+    pub nnz: usize,
+}
+
+impl SparseMatrix {
+    pub fn from_coords(rows: usize, cols: usize, coords: &[Coord]) -> Self {
+        let nnz = coords.len();
+        let padded = nnz.div_ceil(PAD).max(1) * PAD;
+        let mut val = Vec::with_capacity(padded);
+        let mut pos = Vec::with_capacity(padded);
+        for &(r, c, v) in coords {
+            debug_assert!(r < rows && c < cols);
+            val.push(v);
+            pos.push((r * cols + c) as u32);
+        }
+        val.resize(padded, 0.0);
+        pos.resize(padded, 0);
+        Self { rows, cols, val, pos, nnz }
+    }
+
+    /// Pad/trim to exactly `len` entries (to match a lowered graph's shape).
+    pub fn with_len(mut self, len: usize) -> Self {
+        assert!(self.nnz <= len, "sparse overflow: {} > {len}", self.nnz);
+        self.val.resize(len, 0.0);
+        self.pos.resize(len, 0);
+        self
+    }
+
+    /// y = x @ W_sparse for a dense row-major x (m, rows) -> (m, cols).
+    /// This is the Rust mirror of the L1 SpMV kernel / ref.py oracle.
+    pub fn spmv(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.rows);
+        let mut y = Matrix::zeros(x.rows, self.cols);
+        for (i, &v) in self.val.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let p = self.pos[i] as usize;
+            let (r, c) = (p / self.cols, p % self.cols);
+            for m in 0..x.rows {
+                let add = x.get(m, r) * v;
+                y.set(m, c, y.get(m, c) + add);
+            }
+        }
+        y
+    }
+
+    /// Scatter back into a dense matrix (adds to existing values).
+    pub fn scatter_into(&self, out: &mut Matrix) {
+        assert_eq!((out.rows, out.cols), (self.rows, self.cols));
+        for (i, &v) in self.val.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let p = self.pos[i] as usize;
+            out.data[p] += v;
+        }
+    }
+
+    /// Dense reconstruction (tests / eval).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        self.scatter_into(&mut m);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_coords(rng: &mut Rng, rows: usize, cols: usize, n: usize) -> Vec<Coord> {
+        let mut used = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        while out.len() < n {
+            let r = rng.gen_usize(rows);
+            let c = rng.gen_usize(cols);
+            if used.insert((r, c)) {
+                out.push((r, c, rng.gen_normal() as f32));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn padding_is_block_multiple() {
+        let s = SparseMatrix::from_coords(10, 10, &[(1, 2, 3.0)]);
+        assert_eq!(s.val.len(), PAD);
+        assert_eq!(s.nnz, 1);
+        let s2 = s.with_len(2 * PAD);
+        assert_eq!(s2.val.len(), 2 * PAD);
+    }
+
+    #[test]
+    fn spmv_matches_dense_matmul() {
+        let mut rng = Rng::seed_from_u64(30);
+        let coords = random_coords(&mut rng, 24, 16, 40);
+        let s = SparseMatrix::from_coords(24, 16, &coords);
+        let x = Matrix::random_normal(4, 24, 1.0, &mut rng);
+        let got = s.spmv(&x);
+        let want = x.matmul(&s.to_dense());
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let coords = vec![(0usize, 0usize, 1.5f32), (2, 3, -2.5)];
+        let s = SparseMatrix::from_coords(4, 4, &coords);
+        let d = s.to_dense();
+        assert_eq!(d.get(0, 0), 1.5);
+        assert_eq!(d.get(2, 3), -2.5);
+        assert_eq!(d.data.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "sparse overflow")]
+    fn with_len_rejects_truncation() {
+        let coords: Vec<Coord> = (0..300).map(|i| (i / 20, i % 20, 1.0)).collect();
+        SparseMatrix::from_coords(20, 20, &coords).with_len(256);
+    }
+}

@@ -1,0 +1,346 @@
+//! Dense f32 matrix substrate for the quantizers.
+//!
+//! Row-major `(rows, cols)`; weight matrices follow the L2 convention
+//! `y = x @ W` with `W: (in_features, out_features)` — a column of `W` is
+//! one output channel. Includes the small dense-linear-algebra kernel set
+//! GPTQ needs (symmetric Cholesky, triangular inversion).
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// N(0, std) entries — synthetic weight generator for sims/tests.
+    pub fn random_normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.gen_normal() as f32 * std)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.numel().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let mu = self.mean();
+        let var = self
+            .data
+            .iter()
+            .map(|&x| (x as f64 - mu) * (x as f64 - mu))
+            .sum::<f64>()
+            / self.numel().max(1) as f64;
+        var.sqrt()
+    }
+
+    /// Per-column (output-channel) absolute maximum.
+    pub fn col_absmax(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (c, &x) in self.row(r).iter().enumerate() {
+                m[c] = m[c].max(x.abs());
+            }
+        }
+        m
+    }
+
+    /// Per-row (input-channel) absolute maximum.
+    pub fn row_absmax(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().fold(0.0f32, |m, &x| m.max(x.abs())))
+            .collect()
+    }
+
+    /// Mean squared difference — quantization error metric.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as f64 - b as f64) * (a as f64 - b as f64))
+            .sum::<f64>()
+            / self.numel().max(1) as f64
+    }
+
+    /// Dense matmul (small sizes: tests, GPTQ Hessian assembly).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(r);
+                for (c, &b) in orow.iter().enumerate() {
+                    out_row[c] += a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Tile grid geometry over a matrix (paper: 128×128 default).
+///
+/// Ragged edges are allowed (`PadMatrix` in Algorithm 1 pads, we clamp tile
+/// bounds instead — equivalent because padded weights are zero and zero is
+/// in every codebook).
+#[derive(Debug, Clone, Copy)]
+pub struct TileGrid {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    pub tiles_r: usize,
+    pub tiles_c: usize,
+}
+
+impl TileGrid {
+    pub fn new(rows: usize, cols: usize, tile: usize) -> Self {
+        assert!(tile > 0);
+        Self {
+            rows,
+            cols,
+            tile,
+            tiles_r: rows.div_ceil(tile),
+            tiles_c: cols.div_ceil(tile),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_r * self.tiles_c
+    }
+
+    /// (row range, col range) of tile `t` (row-major tile index).
+    pub fn bounds(&self, t: usize) -> (std::ops::Range<usize>, std::ops::Range<usize>) {
+        let tr = t / self.tiles_c;
+        let tc = t % self.tiles_c;
+        let r0 = tr * self.tile;
+        let c0 = tc * self.tile;
+        (
+            r0..(r0 + self.tile).min(self.rows),
+            c0..(c0 + self.tile).min(self.cols),
+        )
+    }
+
+    /// Apply `f(r, c)` over every element of tile `t`.
+    pub fn for_each(&self, t: usize, mut f: impl FnMut(usize, usize)) {
+        let (rr, cc) = self.bounds(t);
+        for r in rr {
+            for c in cc.clone() {
+                f(r, c);
+            }
+        }
+    }
+
+    /// Number of elements in tile `t` (edge tiles may be smaller).
+    pub fn tile_numel(&self, t: usize) -> usize {
+        let (rr, cc) = self.bounds(t);
+        rr.len() * cc.len()
+    }
+}
+
+// ---- dense linear algebra for GPTQ ----
+
+/// Cholesky decomposition of a symmetric positive-definite matrix (f64):
+/// returns lower-triangular L with A = L Lᵀ. Panics if not SPD.
+pub fn cholesky(a: &[f64], n: usize) -> Vec<f64> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                assert!(s > 0.0, "matrix not positive definite at {i} (s={s})");
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    l
+}
+
+/// Invert a lower-triangular matrix (forward substitution per column).
+pub fn invert_lower(l: &[f64], n: usize) -> Vec<f64> {
+    let mut inv = vec![0.0f64; n * n];
+    for c in 0..n {
+        inv[c * n + c] = 1.0 / l[c * n + c];
+        for r in (c + 1)..n {
+            let mut s = 0.0;
+            for k in c..r {
+                s += l[r * n + k] * inv[k * n + c];
+            }
+            inv[r * n + c] = -s / l[r * n + r];
+        }
+    }
+    inv
+}
+
+/// Upper-triangular U with UᵀU = A⁻¹ — exactly what GPTQ's error
+/// propagation consumes (`torch.linalg.cholesky(cholesky_inverse(...),
+/// upper=True)` in the reference implementation).
+///
+/// Steps: A = L Lᵀ → A⁻¹ = L⁻ᵀ L⁻¹ (formed explicitly) → lower Cholesky
+/// of A⁻¹ → transpose.
+pub fn inverse_cholesky_upper(a: &[f64], n: usize) -> Vec<f64> {
+    let l = cholesky(a, n);
+    let linv = invert_lower(&l, n);
+    // A⁻¹[i][j] = Σ_k Linv[k][i] · Linv[k][j]  (k ≥ max(i,j); Linv lower)
+    let mut ainv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0;
+            for k in i..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            ainv[i * n + j] = s;
+            ainv[j * n + i] = s;
+        }
+    }
+    let lm = cholesky(&ainv, n);
+    // U = LMᵀ  ⇒  UᵀU = LM LMᵀ = A⁻¹.
+    let mut u = vec![0.0f64; n * n];
+    for r in 0..n {
+        for c in 0..=r {
+            u[c * n + r] = lm[r * n + c];
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn tile_grid_ragged() {
+        let g = TileGrid::new(100, 70, 32);
+        assert_eq!((g.tiles_r, g.tiles_c), (4, 3));
+        // Last tile is 4 x 6.
+        let (rr, cc) = g.bounds(g.n_tiles() - 1);
+        assert_eq!((rr.len(), cc.len()), (4, 6));
+        // All tiles cover the matrix exactly once.
+        let mut seen = vec![0u8; 100 * 70];
+        for t in 0..g.n_tiles() {
+            g.for_each(t, |r, c| seen[r * 70 + c] += 1);
+        }
+        assert!(seen.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = B Bᵀ + I is SPD.
+        let n = 8;
+        let mut rng = Rng::seed_from_u64(5);
+        let b = Matrix::random_normal(n, n, 1.0, &mut rng);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += b.get(i, k) as f64 * b.get(j, k) as f64;
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let l = cholesky(&a, n);
+        // L Lᵀ == A
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-9);
+            }
+        }
+        // UᵀU == A⁻¹  (check A · (UᵀU) == I) and U is upper-triangular.
+        let u = inverse_cholesky_upper(&a, n);
+        for r in 1..n {
+            for c in 0..r {
+                assert_eq!(u[r * n + c], 0.0, "U not upper at ({r},{c})");
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    // (A · UᵀU)[i][j]
+                    let utu_kj: f64 = (0..n).map(|m| u[m * n + k] * u[m * n + j]).sum();
+                    s += a[i * n + k] * utu_kj;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({i},{j}): {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats() {
+        let m = Matrix::from_vec(2, 2, vec![1., -3., 2., 0.]);
+        assert_eq!(m.max_abs(), 3.0);
+        assert_eq!(m.col_absmax(), vec![2.0, 3.0]);
+        assert_eq!(m.row_absmax(), vec![3.0, 2.0]);
+        assert_eq!(m.mean(), 0.0);
+    }
+}

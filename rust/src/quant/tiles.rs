@@ -1,0 +1,140 @@
+//! Tile-based sensitivity analysis and the adaptive-k mapping (paper §III-B).
+//!
+//! Per-tile sensitivity (Eq. 2) is the mean squared gradient over the tile.
+//! The adaptive mapping sorts tiles by sensitivity, accumulates until a
+//! target fraction of the layer's total sensitivity (e.g. 95 %) is covered,
+//! and classifies the covering tiles as high-sensitivity; the remainder
+//! (fraction k of all tiles) is low-sensitivity and can be quantized
+//! aggressively onto the fast codebook.
+
+use super::tensor::{Matrix, TileGrid};
+
+/// Per-tile sensitivity Λ_Tk = Σ g² / numel (Eq. 2). Row-major tile order.
+pub fn tile_sensitivity(grad: &Matrix, grid: &TileGrid) -> Vec<f64> {
+    assert_eq!((grad.rows, grad.cols), (grid.rows, grid.cols));
+    (0..grid.n_tiles())
+        .map(|t| {
+            let mut s = 0.0f64;
+            let mut n = 0usize;
+            grid.for_each(t, |r, c| {
+                let g = grad.get(r, c) as f64;
+                s += g * g;
+                n += 1;
+            });
+            s / n.max(1) as f64
+        })
+        .collect()
+}
+
+/// Compute the adaptive threshold k (paper §III-B, "ComputeAdaptiveK"):
+/// the fraction of tiles classified *low*-sensitivity after the
+/// highest-sensitivity tiles covering `keep_frac` of the cumulative
+/// sensitivity are marked high. Defaults to 1.0 (all low) when the layer
+/// has no gradient signal.
+pub fn adaptive_k(sens: &[f64], keep_frac: f64) -> f64 {
+    let total: f64 = sens.iter().sum();
+    if total <= 0.0 || sens.is_empty() {
+        return 1.0;
+    }
+    let mut order: Vec<usize> = (0..sens.len()).collect();
+    order.sort_by(|&a, &b| sens[b].partial_cmp(&sens[a]).unwrap());
+    let mut cum = 0.0;
+    for (i, &t) in order.iter().enumerate() {
+        cum += sens[t];
+        if cum / total >= keep_frac {
+            // Tiles 0..=i (sorted) are high-sensitivity.
+            let high = i + 1;
+            return (sens.len() - high) as f64 / sens.len() as f64;
+        }
+    }
+    1.0
+}
+
+/// Boolean masks: `true` = low-sensitivity tile (aggressive quantization).
+/// `k` is the fraction of tiles classified low (lowest-sensitivity first).
+pub fn low_sensitivity_mask(sens: &[f64], k: f64) -> Vec<bool> {
+    let n = sens.len();
+    let n_low = ((n as f64) * k).round() as usize;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| sens[a].partial_cmp(&sens[b]).unwrap());
+    let mut mask = vec![false; n];
+    for &t in order.iter().take(n_low) {
+        mask[t] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sensitivity_matches_manual() {
+        let g = Matrix::from_vec(2, 4, vec![1., 1., 2., 2., 1., 1., 2., 2.]);
+        let grid = TileGrid::new(2, 4, 2);
+        let s = tile_sensitivity(&g, &grid);
+        assert_eq!(s, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn adaptive_k_uniform_sensitivity() {
+        // Uniform tiles: covering 95% needs 95% of tiles -> k ≈ 0.05.
+        let sens = vec![1.0; 100];
+        let k = adaptive_k(&sens, 0.95);
+        assert!((k - 0.05).abs() < 0.011, "k={k}");
+    }
+
+    #[test]
+    fn adaptive_k_concentrated_sensitivity() {
+        // One dominant tile: k -> (n-1)/n.
+        let mut sens = vec![1e-12; 10];
+        sens[3] = 1.0;
+        let k = adaptive_k(&sens, 0.95);
+        assert!((k - 0.9).abs() < 1e-9, "k={k}");
+    }
+
+    #[test]
+    fn adaptive_k_no_signal_defaults_to_one() {
+        assert_eq!(adaptive_k(&[0.0; 5], 0.95), 1.0);
+        assert_eq!(adaptive_k(&[], 0.95), 1.0);
+    }
+
+    #[test]
+    fn mask_marks_lowest_sensitivity_tiles() {
+        let sens = vec![5.0, 1.0, 3.0, 0.5];
+        let mask = low_sensitivity_mask(&sens, 0.5);
+        assert_eq!(mask, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn mask_count_matches_k() {
+        let mut rng = Rng::seed_from_u64(9);
+        let sens: Vec<f64> = (0..64).map(|_| rng.gen_f64()).collect();
+        for &k in &[0.0, 0.25, 0.5, 1.0] {
+            let mask = low_sensitivity_mask(&sens, k);
+            assert_eq!(mask.iter().filter(|&&m| m).count(), (64.0 * k) as usize);
+        }
+    }
+
+    #[test]
+    fn cumulative_coverage_property() {
+        // The high-sensitivity set must cover >= keep_frac of total
+        // sensitivity for random inputs.
+        let mut rng = Rng::seed_from_u64(10);
+        for _ in 0..20 {
+            let sens: Vec<f64> = (0..50).map(|_| rng.gen_f64().powi(3)).collect();
+            let keep = 0.9;
+            let k = adaptive_k(&sens, keep);
+            let mask = low_sensitivity_mask(&sens, k);
+            let total: f64 = sens.iter().sum();
+            let high: f64 = sens
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &low)| !low)
+                .map(|(&s, _)| s)
+                .sum();
+            assert!(high / total >= keep - 0.02, "cover={}", high / total);
+        }
+    }
+}

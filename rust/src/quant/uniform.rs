@@ -1,0 +1,133 @@
+//! Symmetric uniform quantization helpers shared by the baselines.
+//!
+//! All baselines store weights as signed integers on a uniform grid with a
+//! scale per channel / tensor / tile; the *int8 image* of the grid (what the
+//! PE register holds) is what determines timing via the MAC profile.
+
+use super::tensor::{Matrix, TileGrid};
+
+/// qmax for b-bit symmetric quantization (e.g. 127 for 8, 7 for 4, 3 for 3).
+pub fn qmax(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Quantize one value to the b-bit grid with scale `s`; returns the integer.
+#[inline]
+pub fn q(v: f32, s: f32, bits: u32) -> i32 {
+    if s == 0.0 {
+        return 0;
+    }
+    let m = qmax(bits);
+    (v / s).round().clamp(-(m as f32) - 1.0, m as f32) as i32
+}
+
+/// The int8 value the PE holds for a b-bit integer `qv`: the hardware maps
+/// the b-bit grid onto the int8 datapath MSB-aligned (shift left), which is
+/// how a W4 value -8..7 appears to the multiplier circuit.
+#[inline]
+pub fn pe_image(qv: i32, bits: u32) -> i8 {
+    (qv << (8 - bits)).clamp(-128, 127) as i8
+}
+
+/// Per-output-channel (column) symmetric quantization.
+/// Returns (dequantized matrix, int8 PE image of every weight).
+pub fn per_channel(w: &Matrix, bits: u32) -> (Matrix, Vec<i8>) {
+    let m = qmax(bits) as f32;
+    let scales: Vec<f32> = w.col_absmax().iter().map(|&a| a / m).collect();
+    let mut deq = Matrix::zeros(w.rows, w.cols);
+    let mut img = vec![0i8; w.numel()];
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            let s = scales[c];
+            let qv = q(w.get(r, c), s, bits);
+            deq.set(r, c, qv as f32 * s);
+            img[r * w.cols + c] = pe_image(qv, bits);
+        }
+    }
+    (deq, img)
+}
+
+/// Per-tile symmetric quantization (ZeroQuant-style fine granularity).
+pub fn per_tile(w: &Matrix, grid: &TileGrid, bits: u32) -> (Matrix, Vec<i8>, Vec<f32>) {
+    let m = qmax(bits) as f32;
+    let mut deq = Matrix::zeros(w.rows, w.cols);
+    let mut img = vec![0i8; w.numel()];
+    let mut scales = Vec::with_capacity(grid.n_tiles());
+    for t in 0..grid.n_tiles() {
+        let mut amax = 0.0f32;
+        grid.for_each(t, |r, c| amax = amax.max(w.get(r, c).abs()));
+        let s = amax / m;
+        scales.push(s);
+        grid.for_each(t, |r, c| {
+            let qv = q(w.get(r, c), s, bits);
+            deq.set(r, c, qv as f32 * s);
+            img[r * w.cols + c] = pe_image(qv, bits);
+        });
+    }
+    (deq, img, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(8), 127);
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(3), 3);
+    }
+
+    #[test]
+    fn pe_image_msb_aligned() {
+        assert_eq!(pe_image(7, 4), 112);
+        assert_eq!(pe_image(-8, 4), -128);
+        assert_eq!(pe_image(3, 3), 96);
+        assert_eq!(pe_image(127, 8), 127);
+    }
+
+    #[test]
+    fn per_channel_error_bound() {
+        // |w - deq(w)| <= scale/2 for every weight.
+        let mut rng = Rng::seed_from_u64(11);
+        let w = Matrix::random_normal(32, 16, 0.05, &mut rng);
+        let (deq, _) = per_channel(&w, 8);
+        let scales: Vec<f32> = w.col_absmax().iter().map(|&a| a / 127.0).collect();
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let err = (w.get(r, c) - deq.get(r, c)).abs();
+                assert!(err <= scales[c] / 2.0 + 1e-7, "err={err} s={}", scales[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let mut rng = Rng::seed_from_u64(12);
+        let w = Matrix::random_normal(64, 64, 0.05, &mut rng);
+        let e8 = w.mse(&per_channel(&w, 8).0);
+        let e4 = w.mse(&per_channel(&w, 4).0);
+        let e3 = w.mse(&per_channel(&w, 3).0);
+        assert!(e8 < e4 && e4 < e3, "{e8} {e4} {e3}");
+    }
+
+    #[test]
+    fn per_tile_scales_isolate_tiles() {
+        // A huge value in one tile must not degrade other tiles.
+        let mut rng = Rng::seed_from_u64(13);
+        let mut w = Matrix::random_normal(8, 8, 0.05, &mut rng);
+        w.set(0, 0, 100.0);
+        let grid = TileGrid::new(8, 8, 4);
+        let (deq, _, scales) = per_tile(&w, &grid, 4);
+        assert_eq!(scales.len(), 4);
+        // Tile 3 (bottom-right) unaffected by the outlier in tile 0.
+        let mut err = 0.0f32;
+        for r in 4..8 {
+            for c in 4..8 {
+                err = err.max((w.get(r, c) - deq.get(r, c)).abs());
+            }
+        }
+        assert!(err < 0.05 / 7.0, "err={err}");
+    }
+}

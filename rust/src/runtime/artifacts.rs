@@ -1,0 +1,205 @@
+//! Artifact store: the contract with `python/compile/aot.py`.
+//!
+//! Loads the manifest, per-model param tables + trained weights, corpora
+//! token streams, and resolves HLO graph paths. Parameter order in every
+//! lowered graph is the canonical order of `config.json`'s table, followed
+//! by the token batch — the Rust side never guesses.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Matrix;
+use crate::util::Json;
+
+/// One named parameter tensor.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    pub linear: bool,
+}
+
+impl Param {
+    /// View a 2-D linear weight as a Matrix (copies).
+    pub fn as_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            bail!("{} is not 2-D: {:?}", self.name, self.shape);
+        }
+        Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+}
+
+/// A trained model's artifacts.
+#[derive(Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub dir: PathBuf,
+    pub params: Vec<Param>,
+    pub eval_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl ModelArtifacts {
+    pub fn load(root: &Path, name: &str) -> Result<Self> {
+        let dir = root.join("models").join(name);
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("config.json"))
+                .with_context(|| format!("reading {}/config.json", dir.display()))?,
+        )?;
+        let flat = read_f32(&dir.join("params.f32.bin"))?;
+        let n_params = meta.req("n_params")?.as_usize()?;
+        anyhow::ensure!(flat.len() == n_params, "params.f32.bin length mismatch");
+
+        let mut params = Vec::new();
+        for e in meta.req("params")?.as_arr()? {
+            let offset = e.req("offset")?.as_usize()?;
+            let numel = e.req("numel")?.as_usize()?;
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?;
+            params.push(Param {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape,
+                data: flat[offset..offset + numel].to_vec(),
+                linear: e.req("linear")?.as_bool()?,
+            });
+        }
+        let cfg = meta.req("config")?;
+        Ok(Self {
+            name: name.to_string(),
+            dir,
+            params,
+            eval_batch: meta.req("eval_batch")?.as_usize()?,
+            seq_len: cfg.req("seq_len")?.as_usize()?,
+            vocab: cfg.req("vocab")?.as_usize()?,
+        })
+    }
+
+    pub fn graph_path(&self, graph: &str) -> PathBuf {
+        self.dir.join(format!("{graph}.hlo.txt"))
+    }
+
+    pub fn param(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn linear_params(&self) -> impl Iterator<Item = &Param> {
+        self.params.iter().filter(|p| p.linear)
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(|p| p.data.len()).sum()
+    }
+
+    /// Literals for all params in canonical order, with the linear weights
+    /// optionally substituted by (de)quantized replacements.
+    pub fn param_literals(
+        &self,
+        replace: &BTreeMap<String, Matrix>,
+    ) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .map(|p| {
+                if let Some(m) = replace.get(&p.name) {
+                    anyhow::ensure!(
+                        m.rows == p.shape[0] && m.cols == p.shape[1],
+                        "shape mismatch for {}",
+                        p.name
+                    );
+                    super::client::literal_f32(&m.data, &p.shape)
+                } else {
+                    super::client::literal_f32(&p.data, &p.shape)
+                }
+            })
+            .collect()
+    }
+}
+
+/// The artifact root (manifest + corpora + models).
+#[derive(Debug)]
+pub struct Store {
+    pub root: PathBuf,
+    pub manifest: Json,
+}
+
+impl Store {
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        let manifest = Json::parse(
+            &std::fs::read_to_string(root.join("manifest.json")).with_context(|| {
+                format!(
+                    "no artifacts at {} — run `make artifacts` first",
+                    root.display()
+                )
+            })?,
+        )?;
+        Ok(Self { root, manifest })
+    }
+
+    /// Default location relative to the repo root, overridable by env.
+    pub fn open_default() -> Result<Self> {
+        let root = std::env::var("HALO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(root)
+    }
+
+    pub fn model_names(&self) -> Result<Vec<String>> {
+        Ok(self
+            .manifest
+            .req("models")?
+            .as_obj()?
+            .keys()
+            .cloned()
+            .collect())
+    }
+
+    pub fn model(&self, name: &str) -> Result<ModelArtifacts> {
+        ModelArtifacts::load(&self.root, name)
+    }
+
+    /// Evaluation token stream for a corpus ("wikisyn" / "c4syn").
+    pub fn corpus_eval(&self, corpus: &str) -> Result<Vec<u16>> {
+        read_u16(&self.root.join("corpora").join(format!("{corpus}_eval.u16.bin")))
+    }
+
+    pub fn corpus_calib(&self) -> Result<Vec<u16>> {
+        read_u16(&self.root.join("corpora").join("calib.u16.bin"))
+    }
+
+    pub fn kernel_path(&self, name: &str) -> PathBuf {
+        self.root.join("kernels").join(format!("{name}.hlo.txt"))
+    }
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "misaligned f32 file");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u16(path: &Path) -> Result<Vec<u16>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 2 == 0, "misaligned u16 file");
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+/// Batch a token stream into (batch, seq+1) i32 batches for the NLL graphs.
+pub fn nll_batches(stream: &[u16], batch: usize, seq: usize) -> Vec<Vec<i32>> {
+    let per = batch * (seq + 1);
+    stream
+        .chunks_exact(per)
+        .map(|c| c.iter().map(|&t| t as i32).collect())
+        .collect()
+}

@@ -1,0 +1,132 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Mirrors /opt/xla-example/load_hlo: HLO *text* is the interchange format
+//! (jax ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1; the
+//! text parser reassigns instruction ids). Every lowered graph returns a
+//! tuple (`return_tuple=True`), so outputs decompose with `to_tuple()`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a literal to a device buffer once; reuse it across many
+    /// `Executable::run_b` calls. This keeps large parameter sets resident
+    /// (§Perf L3: the literal-input `execute` path re-transfers — and, in
+    /// xla_extension 0.5.1, leaks — every argument on every call).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        // A null device segfaults the CPU plugin — always pin device 0.
+        let devices = self.client.addressable_devices();
+        let dev = devices.first().context("no addressable device")?;
+        let buf = self.client.buffer_from_host_literal(Some(dev), lit)?;
+        // BufferFromHostLiteral is asynchronous and the C wrapper does not
+        // await the transfer; the host literal must stay alive (and the
+        // buffer ready) before any execute_b. Round-tripping the buffer to
+        // a literal forces readiness while `lit` is still borrowed.
+        let _ = buf.to_literal_sync()?;
+        Ok(buf)
+    }
+
+    pub fn upload_all(&self, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        lits.iter().map(|l| self.upload(l)).collect()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation ready for repeated execution.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with positional literal inputs; returns the flattened output
+    /// tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and return the single scalar f32 output (NLL graphs).
+    pub fn run_scalar(&self, inputs: &[xla::Literal]) -> Result<f32> {
+        let out = self.run(inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path: parameters
+    /// stay resident, only small operands are re-uploaded per call).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and return the single scalar f32 output (NLL graphs).
+    pub fn run_scalar_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<f32> {
+        let out = self.run_b(inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an int8 literal (codebook indices) of the given shape.
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        dims,
+        bytes,
+    )?)
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime + artifact store: everything the L3 binary needs to load
+//! and execute the AOT-lowered L1/L2 graphs. Python never runs here.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ModelArtifacts, Param, Store};
+pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_batches_shape() {
+        let stream: Vec<u16> = (0..1000).map(|i| (i % 256) as u16).collect();
+        let b = artifacts::nll_batches(&stream, 2, 9);
+        assert_eq!(b.len(), 50);
+        assert_eq!(b[0].len(), 20);
+        assert_eq!(b[0][0], 0);
+    }
+}

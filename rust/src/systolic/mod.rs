@@ -1,0 +1,14 @@
+//! Cycle-level weight-stationary systolic-array simulator (Figs 8–11).
+//!
+//! Models a TPU-class 128×128 int8 PE array with a global DVFS unit
+//! (the paper's custom SystemVerilog simulator, rebuilt in Rust): per-class
+//! clocking from the DVFS ladder, a dedicated SpMV engine for the
+//! hypersparse outlier/salient weights, double-buffered weight loads, a
+//! DRAM/SRAM traffic model, and the full static/dynamic × core/buffer/
+//! memory energy decomposition of Fig 10.
+
+pub mod energy;
+pub mod sim;
+
+pub use energy::EnergyBreakdown;
+pub use sim::{SimConfig, SimReport, Simulator};

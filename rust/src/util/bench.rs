@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (offline build: no criterion).
+//!
+//! Criterion-style protocol: warm-up, then timed batches until a target
+//! wall time, reporting mean / p50 / p95 per iteration. Used by the
+//! `benches/` targets (declared `harness = false`) and the §Perf pass.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// criterion-like one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_dur(self.p50),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`target` seconds (after warm-up) and collect stats.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchStats {
+    // Warm-up: run until 10% of target or at least once.
+    let warm_end = Instant::now() + target / 10;
+    f();
+    while Instant::now() < warm_end {
+        f();
+    }
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let end = Instant::now() + target;
+    while Instant::now() < end {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    stats_from(name, samples)
+}
+
+/// Fixed iteration count variant (for slow end-to-end cases).
+pub fn bench_n<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchStats {
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, samples)
+}
+
+fn stats_from(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let iters = samples.len() as u64;
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[(((samples.len() - 1) as f64) * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_stats() {
+        let s = bench_n("noop", 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.p50 <= s.p95);
+        assert!(s.report().contains("noop"));
+    }
+
+    #[test]
+    fn time_budget_respected() {
+        let t0 = Instant::now();
+        bench("sleepless", Duration::from_millis(50), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

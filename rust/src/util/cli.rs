@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `cmd subcmd --flag value --switch positional` with typed
+//! accessors and repeated flags.
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse everything after the program name. A token `--name` consumes
+    /// the following token as its value unless that token is itself a flag.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => Some(it.next().unwrap()),
+                    _ => None,
+                };
+                out.flags.push((name.to_string(), val));
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    /// All values of a repeated flag, e.g. `-w 64 -w -127`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(n, _)| n == name)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+        }
+    }
+
+    pub fn i64_of(&self, name: &str) -> Result<Option<i64>> {
+        self.get(name)
+            .map(|v| v.parse().with_context(|| format!("--{name} must be an integer")))
+            .transpose()
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn rest(&self) -> Args {
+        Args {
+            positional: self.positional.iter().skip(1).cloned().collect(),
+            flags: self.flags.clone(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("sim systolic --model llama2-7b --method halo-bal --verbose");
+        assert_eq!(a.subcommand(), Some("sim"));
+        assert_eq!(a.positional, vec!["sim", "systolic"]);
+        assert_eq!(a.get("model"), Some("llama2-7b"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn repeated_and_negative_values() {
+        // Negative numbers are values, not flags.
+        let a = parse("mac histogram --w 64 --w -127");
+        assert_eq!(a.get_all("w"), vec!["64", "-127"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42 --frac 0.5");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.f64_or("frac", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("frac", 0).is_err());
+    }
+}

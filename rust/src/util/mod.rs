@@ -1,0 +1,10 @@
+//! In-crate substitutes for unavailable third-party crates (offline build):
+//! RNG, JSON, CLI parsing, bench harness. See DESIGN.md §Key decisions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,253 @@
+//! Integration tests across the three layers: artifacts → runtime →
+//! quantizers → evaluation → coordinator. All tests that need artifacts
+//! skip cleanly when `make artifacts` has not run.
+
+use std::collections::BTreeMap;
+
+use halo::coordinator::server::PjrtExecutor;
+use halo::coordinator::{BatcherConfig, Coordinator};
+use halo::dvfs::Schedule;
+use halo::mac::MacProfile;
+use halo::model::{calibrate_fisher, Evaluator};
+use halo::quant::baselines::by_name;
+use halo::quant::nonuniform::{dequantize_tile, quantize_tile, Codebook};
+use halo::quant::{LayerCtx, Matrix, TileGrid};
+use halo::runtime::{literal_f32, literal_i8, Runtime, Store};
+use halo::util::Rng;
+
+macro_rules! need_artifacts {
+    () => {
+        match Store::open_default() {
+            Ok(s) => s,
+            Err(_) => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn store_loads_models_and_corpora() {
+    let store = need_artifacts!();
+    let names = store.model_names().unwrap();
+    assert!(names.contains(&"tiny".to_string()));
+    let model = store.model("tiny").unwrap();
+    assert!(model.n_weights() > 100_000);
+    assert!(model.linear_params().count() >= 9);
+    for corpus in ["wikisyn", "c4syn"] {
+        let s = store.corpus_eval(corpus).unwrap();
+        assert!(s.len() > 10_000);
+        assert!(s.iter().all(|&t| (t as usize) < model.vocab));
+    }
+}
+
+#[test]
+fn fp16_perplexity_sane() {
+    let store = need_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = store.model("tiny").unwrap();
+    let ev = Evaluator::new(&rt, &model).unwrap();
+    let stream = store.corpus_eval("wikisyn").unwrap();
+    let (nll, n) = ev.mean_nll(&BTreeMap::new(), &stream, false, 3).unwrap();
+    assert!(n >= 1);
+    let ppl = nll.exp();
+    // Trained: far below uniform (vocab=256); above the corpus entropy floor.
+    assert!(ppl < 150.0, "ppl {ppl}");
+    assert!(ppl > 5.0, "ppl {ppl}");
+}
+
+#[test]
+fn w8_quantization_is_nearly_free_and_w3_hurts() {
+    let store = need_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = store.model("tiny").unwrap();
+    let ev = Evaluator::new(&rt, &model).unwrap();
+    let stream = store.corpus_eval("wikisyn").unwrap();
+    let profile = MacProfile::cached();
+    let grads = BTreeMap::new();
+
+    let ppl = |method: &str| {
+        let q = by_name(method, profile, 128).unwrap();
+        ev.eval_quantizer(q.as_ref(), &grads, &stream, "wikisyn", 3, true)
+            .unwrap()
+            .ppl
+    };
+    let (fp, _) = ev.mean_nll(&BTreeMap::new(), &stream, false, 3).unwrap();
+    let fp = fp.exp();
+    let w8 = ppl("rtn-w8");
+    let w3 = ppl("rtn-w3");
+    assert!((w8 - fp).abs() / fp < 0.05, "w8 {w8} vs fp {fp}");
+    assert!(w3 > w8, "w3 {w3} !> w8 {w8}");
+}
+
+#[test]
+fn halo_beats_rtn_w3_with_calibration() {
+    let store = need_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = store.model("tiny").unwrap();
+    let calib = store.corpus_calib().unwrap();
+    let grads = calibrate_fisher(&rt, &model, &calib, 2).unwrap();
+    // Fisher gradients exist for every linear weight and are non-trivial.
+    assert_eq!(grads.len(), model.linear_params().count());
+    for (name, g) in &grads {
+        assert!(g.data.iter().any(|&x| x != 0.0), "{name} all-zero grads");
+    }
+
+    let ev = Evaluator::new(&rt, &model).unwrap();
+    let stream = store.corpus_eval("wikisyn").unwrap();
+    let profile = MacProfile::cached();
+    let halo = ev
+        .eval_quantizer(
+            by_name("halo-bal", profile, 128).unwrap().as_ref(),
+            &grads,
+            &stream,
+            "wikisyn",
+            3,
+            true,
+        )
+        .unwrap();
+    let w3 = ev
+        .eval_quantizer(
+            by_name("rtn-w3", profile, 128).unwrap().as_ref(),
+            &grads,
+            &stream,
+            "wikisyn",
+            3,
+            true,
+        )
+        .unwrap();
+    assert!(halo.ppl < w3.ppl, "halo {} !< w3 {}", halo.ppl, w3.ppl);
+    assert!(halo.bits_eff < 4.5, "bits {}", halo.bits_eff);
+}
+
+#[test]
+fn l1_kernel_matches_rust_oracle_through_pjrt() {
+    // The three-layer agreement: the Pallas halo_matmul kernel (lowered to
+    // HLO, executed via PJRT) must equal the Rust dequant + matmul oracle.
+    let store = need_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let exe = match rt.load(&store.kernel_path("halo_matmul")) {
+        Ok(e) => e,
+        Err(e) => panic!("kernel artifact missing: {e}"),
+    };
+    let (m, k, n, tile) = (128usize, 256, 1024, 128);
+    let mut rng = Rng::seed_from_u64(77);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.gen_normal() as f32).collect();
+    let idx: Vec<i8> = (0..k * n).map(|_| rng.gen_usize(16) as i8).collect();
+    let cb: Vec<f32> = (0..16).map(|_| rng.gen_normal() as f32).collect();
+    let sc: Vec<f32> = (0..(k / tile) * (n / tile))
+        .map(|_| 0.5 + rng.gen_f64() as f32)
+        .collect();
+
+    let out = exe
+        .run(&[
+            literal_f32(&x, &[m, k]).unwrap(),
+            literal_i8(&idx, &[k, n]).unwrap(),
+            literal_f32(&cb, &[16]).unwrap(),
+            literal_f32(&sc, &[k / tile, n / tile]).unwrap(),
+        ])
+        .unwrap();
+    let y: Vec<f32> = out[0].to_vec().unwrap();
+
+    // Rust oracle: dense dequant then matmul.
+    let mut wd = Matrix::zeros(k, n);
+    for r in 0..k {
+        for c in 0..n {
+            let t = (r / tile) * (n / tile) + c / tile;
+            wd.set(r, c, cb[idx[r * n + c] as usize] * sc[t]);
+        }
+    }
+    let want = Matrix::from_vec(m, k, x).matmul(&wd);
+    assert_eq!(y.len(), want.data.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in y.iter().zip(&want.data) {
+        max_err = max_err.max((a - b).abs() / (1.0 + b.abs()));
+    }
+    assert!(max_err < 1e-3, "max rel err {max_err}");
+}
+
+#[test]
+fn codebook_quantizer_consistent_with_kernel_layout() {
+    // quantize_tile indices must decode identically via the shared table.
+    let profile = MacProfile::cached();
+    let cb = Codebook::new(profile.codebook_med.clone());
+    let mut rng = Rng::seed_from_u64(5);
+    let w = Matrix::random_normal(64, 64, 0.02, &mut rng);
+    let grid = TileGrid::new(64, 64, 32);
+    for t in 0..grid.n_tiles() {
+        let tq = quantize_tile(&w, &grid, t, &cb);
+        let mut out = Matrix::zeros(64, 64);
+        dequantize_tile(&mut out, &grid, t, &cb, &tq);
+        let mut i = 0;
+        grid.for_each(t, |r, c| {
+            let decoded = cb.values[tq.idx[i] as usize] as f32 * tq.scale;
+            assert_eq!(out.get(r, c), decoded);
+            i += 1;
+        });
+    }
+}
+
+#[test]
+fn coordinator_serves_real_model_end_to_end() {
+    let store = need_artifacts!();
+    let root = store.root.clone();
+    let coord = Coordinator::start(BatcherConfig::default(), move || {
+        let rt = Runtime::cpu()?;
+        let store = Store::open(root)?;
+        let model = store.model("tiny")?;
+        let exec = PjrtExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default())?;
+        Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+    });
+    let stream = store.corpus_eval("wikisyn").unwrap();
+    let rxs: Vec<_> = (0..20)
+        .map(|i| {
+            let s = (i * 101) % (stream.len() - 40);
+            coord.submit(stream[s..s + 24].iter().map(|&t| t as i32).collect())
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!((0..256).contains(&r.next_token));
+    }
+    assert_eq!(coord.metrics.responses.load(std::sync::atomic::Ordering::Relaxed), 20);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn quantized_serving_prediction_quality_preserved() {
+    // Next-token agreement between FP16 and HALO-quantized serving should
+    // be high (they share most of the distribution mass).
+    let store = need_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = store.model("tiny").unwrap();
+    let calib = store.corpus_calib().unwrap();
+    let grads = calibrate_fisher(&rt, &model, &calib, 2).unwrap();
+    let profile = MacProfile::cached();
+    let q = by_name("halo-acc", profile, 128).unwrap();
+    let mut replace = BTreeMap::new();
+    for p in model.linear_params() {
+        let w = p.as_matrix().unwrap();
+        let ctx = match grads.get(&p.name) {
+            Some(g) => LayerCtx::with_grad(&p.name, g),
+            None => LayerCtx::new(&p.name),
+        };
+        replace.insert(p.name.clone(), q.quantize(&w, &ctx).dequant);
+    }
+
+    use halo::coordinator::BatchExecutor;
+    let rt2 = Runtime::cpu().unwrap();
+    let mut fp = PjrtExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default()).unwrap();
+    let mut hq = PjrtExecutor::new(rt2, &model, &replace, Schedule::default()).unwrap();
+    let stream = store.corpus_eval("wikisyn").unwrap();
+    let prefixes: Vec<Vec<i32>> = (0..8)
+        .map(|i| {
+            let s = (i * 313) % (stream.len() - 40);
+            stream[s..s + 32].iter().map(|&t| t as i32).collect()
+        })
+        .collect();
+    let a = fp.run(&prefixes).unwrap();
+    let b = hq.run(&prefixes).unwrap();
+    let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    assert!(agree >= 5, "only {agree}/8 next-token agreement");
+}

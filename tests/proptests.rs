@@ -1,0 +1,174 @@
+//! Property-based tests (hand-rolled generators — no proptest crate in the
+//! offline build) over the coordinator and quantizer invariants that the
+//! paper's correctness argument rests on (§III-C3: scheduling transparency;
+//! Algorithm 1: losslessness of the sparse split; DVFS schedule validity).
+
+use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator};
+use halo::dvfs::{FreqClass, Schedule};
+use halo::mac::MacProfile;
+use halo::quant::baselines::by_name;
+use halo::quant::outliers::extract_outliers;
+use halo::quant::saliency::extract_salient;
+use halo::quant::sparse::SparseMatrix;
+use halo::quant::{LayerCtx, Matrix};
+use halo::util::Rng;
+
+const CASES: usize = 25;
+
+#[test]
+fn prop_schedule_partitions_tiles() {
+    // For any class assignment: the clustered schedule executes every tile
+    // exactly once, in class-homogeneous groups, with ≤ 3 transitions.
+    let mut rng = Rng::seed_from_u64(100);
+    for case in 0..CASES {
+        let n = 1 + rng.gen_usize(400);
+        let classes: Vec<FreqClass> =
+            (0..n).map(|_| *rng.choose(&FreqClass::ALL)).collect();
+        let s = Schedule::cluster(&classes);
+        assert!(s.validate(n, &classes), "case {case}");
+        assert!(s.transitions() <= 3);
+        assert_eq!(s.n_tiles(), n);
+    }
+}
+
+#[test]
+fn prop_sparse_split_is_lossless() {
+    // outliers + salient extraction followed by scatter-back reconstructs
+    // the original matrix exactly, for any weights/gradients.
+    let mut rng = Rng::seed_from_u64(200);
+    for case in 0..CASES {
+        let r = 8 + rng.gen_usize(60);
+        let c = 8 + rng.gen_usize(60);
+        let scale = 10f32.powi(rng.gen_range_i64(-3, 2) as i32);
+        let w = Matrix::random_normal(r, c, scale, &mut rng);
+        let g = Matrix::random_normal(r, c, 1.0, &mut rng);
+
+        let (w1, salient) = extract_salient(&w, &g, 0.001);
+        let ex = extract_outliers(&w1, 3.0);
+        let mut coords = salient.clone();
+        coords.extend(ex.coords.iter().copied());
+        let sp = SparseMatrix::from_coords(r, c, &coords);
+        let mut rec = ex.cleaned.clone();
+        sp.scatter_into(&mut rec);
+        assert_eq!(rec, w, "case {case} ({r}x{c})");
+    }
+}
+
+#[test]
+fn prop_spmv_equals_dense_matmul() {
+    let mut rng = Rng::seed_from_u64(300);
+    for case in 0..CASES {
+        let k = 4 + rng.gen_usize(40);
+        let n = 4 + rng.gen_usize(40);
+        let m = 1 + rng.gen_usize(6);
+        let nnz = rng.gen_usize(k * n / 2);
+        let mut used = std::collections::HashSet::new();
+        let coords: Vec<_> = (0..nnz)
+            .filter_map(|_| {
+                let r = rng.gen_usize(k);
+                let c = rng.gen_usize(n);
+                used.insert((r, c)).then(|| (r, c, rng.gen_normal() as f32))
+            })
+            .collect();
+        let sp = SparseMatrix::from_coords(k, n, &coords);
+        let x = Matrix::random_normal(m, k, 1.0, &mut rng);
+        let got = sp.spmv(&x);
+        let want = x.matmul(&sp.to_dense());
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3, "case {case}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn prop_every_quantizer_preserves_shape_and_clock_floor() {
+    // Any method on any shape: dequant has the input shape, per-tile
+    // frequencies are >= the base class, bits are positive.
+    let profile = MacProfile::cached();
+    let methods = ["rtn-w8", "rtn-w4", "rtn-w3", "smoothquant-w4", "zq-local",
+                   "zq-global", "halo-perf", "halo-bal", "halo-acc"];
+    let mut rng = Rng::seed_from_u64(400);
+    for case in 0..12 {
+        let r = 16 + rng.gen_usize(100);
+        let c = 16 + rng.gen_usize(100);
+        let tile = *rng.choose(&[16usize, 32, 64]);
+        let w = Matrix::random_normal(r, c, 0.05, &mut rng);
+        let g = Matrix::random_normal(r, c, 1.0, &mut rng);
+        let method = methods[case % methods.len()];
+        let q = by_name(method, profile, tile).unwrap();
+        let res = q.quantize(&w, &LayerCtx::with_grad("p", &g));
+        assert_eq!((res.dequant.rows, res.dequant.cols), (r, c), "{method}");
+        assert_eq!(res.tile_freq_ghz.len(), res.grid.n_tiles());
+        assert!(res.bits_eff > 0.0);
+        for &f in &res.tile_freq_ghz {
+            assert!(f >= profile.f_base_ghz - 1e-9, "{method}: {f}");
+        }
+    }
+}
+
+#[test]
+fn prop_coordinator_conserves_requests_under_random_load() {
+    // Deterministic executor; random request sizes/counts; every request
+    // answered once with the right payload.
+    struct Sum;
+    impl BatchExecutor for Sum {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn run(&mut self, p: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+            Ok(p.iter().map(|t| t.iter().sum()).collect())
+        }
+    }
+    let mut rng = Rng::seed_from_u64(500);
+    for _case in 0..8 {
+        let coord = Coordinator::start(
+            BatcherConfig { batch_size: 4, timeout: std::time::Duration::from_millis(1) },
+            || Ok(Box::new(Sum) as Box<dyn BatchExecutor>),
+        );
+        let n = 1 + rng.gen_usize(60);
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            let toks: Vec<i32> =
+                (0..1 + rng.gen_usize(16)).map(|_| rng.gen_usize(100) as i32).collect();
+            expected.push(toks.iter().sum::<i32>());
+            rxs.push(coord.submit(toks));
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            assert_eq!(rx.recv().unwrap().next_token, want);
+        }
+        coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn prop_halo_monotone_accuracy_vs_variant() {
+    // For random layers: acc-opt reconstruction error <= perf-opt error
+    // (more med-codebook tiles can only help).
+    use halo::quant::{HaloConfig, HaloQuantizer, Quantizer, Variant};
+    let profile = MacProfile::cached();
+    let mut rng = Rng::seed_from_u64(600);
+    let mut acc_wins = 0;
+    for _ in 0..10 {
+        let w = Matrix::random_normal(96, 96, 0.03, &mut rng);
+        let g = Matrix::from_fn(96, 96, |r, _| {
+            rng.gen_normal() as f32 * if r < 32 { 3.0 } else { 0.1 }
+        });
+        let ctx = LayerCtx::with_grad("p", &g);
+        let e_acc = HaloQuantizer::new(HaloConfig::new(32, Variant::AccOpt), profile)
+            .quantize(&w, &ctx)
+            .dequant
+            .mse(&w);
+        let e_perf = HaloQuantizer::new(HaloConfig::new(32, Variant::PerfOpt), profile)
+            .quantize(&w, &ctx)
+            .dequant
+            .mse(&w);
+        if e_acc <= e_perf + 1e-12 {
+            acc_wins += 1;
+        }
+    }
+    assert!(acc_wins >= 9, "acc-opt lost too often: {acc_wins}/10");
+}
