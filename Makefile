@@ -1,0 +1,39 @@
+# HALO reproduction — top-level targets.
+#
+#   make artifacts       train the tiny LMs + lower every graph (needs JAX)
+#   make artifacts-fast  tiny-only, few steps (CI smoke / quick iteration)
+#   make test            tier-1 verify: cargo build --release && cargo test -q
+#   make bench           run every harness-free benchmark
+#   make fmt             rustfmt check (same as CI)
+
+ARTIFACTS ?= artifacts
+PYTHON ?= python3
+
+.PHONY: artifacts artifacts-fast build test bench fmt clean
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+
+artifacts-fast:
+	cd python && HALO_FAST=1 $(PYTHON) -m compile.aot --out ../$(ARTIFACTS) --fast
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench fig8_exec_time
+	cargo bench --bench fig10_energy
+	cargo bench --bench fig11_tile_size
+	cargo bench --bench fig12_gpu_exec
+	cargo bench --bench fig13_gpu_energy
+	cargo bench --bench l3_coordinator
+
+fmt:
+	cargo fmt --check
+
+clean:
+	cargo clean
+	rm -rf results

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use halo::coordinator::server::PjrtExecutor;
+use halo::coordinator::server::GraphExecutor;
 use halo::coordinator::{BatcherConfig, Coordinator};
 use halo::dvfs::Schedule;
 use halo::mac::MacProfile;
@@ -96,7 +96,7 @@ fn main() -> halo::Result<()> {
         let rt = Runtime::cpu()?;
         let store = Store::open(root)?;
         let model = store.model(&model_name2)?;
-        let exec = PjrtExecutor::new(rt, &model, &replace2, schedule2)?;
+        let exec = GraphExecutor::new(rt, &model, &replace2, schedule2)?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
     });
 

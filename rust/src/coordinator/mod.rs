@@ -3,7 +3,9 @@
 //! The offline build has no tokio, so the coordinator is built directly on
 //! std threads + channels (arguably closer to the deterministic lockstep
 //! the paper's systolic target wants anyway). Python never appears here:
-//! the executor thread owns the PJRT executable loaded from `artifacts/`.
+//! the executor thread owns the graph executable loaded from `artifacts/`
+//! through the runtime backend (sim by default, PJRT with `--features
+//! xla`).
 //!
 //! DVFS-awareness (§III-C3): each quantized model carries a
 //! [`crate::dvfs::Schedule`]; the executor executes whole batches and

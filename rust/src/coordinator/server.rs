@@ -1,10 +1,11 @@
 //! The coordinator: router → batcher → executor threads.
 //!
 //! The executor is abstracted behind [`BatchExecutor`] so the coordinator's
-//! routing/batching invariants are testable without PJRT; the production
-//! executor ([`PjrtExecutor`]) owns the compiled `fwd` graph and the
-//! quantized parameter literals (PJRT handles are not `Send`, so the
-//! executor is *constructed inside* its thread via a factory closure).
+//! routing/batching invariants are testable without a model; the production
+//! executor ([`GraphExecutor`]) owns the loaded `fwd` graph and the
+//! quantized parameter buffers on whichever runtime backend is active
+//! (PJRT handles are not `Send`, so the executor is *constructed inside*
+//! its thread via a factory closure).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -19,7 +20,7 @@ use super::batch::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use crate::dvfs::Schedule;
 use crate::quant::Matrix;
-use crate::runtime::{literal_i32, ModelArtifacts, Runtime};
+use crate::runtime::{literal_i32, Buffer, ModelArtifacts, Runtime};
 
 /// One inference request: a token prefix; the response carries the argmax
 /// next token at the prefix end.
@@ -52,19 +53,20 @@ pub trait BatchExecutor {
     }
 }
 
-/// Production executor: fwd graph + (quantized) parameter literals.
-pub struct PjrtExecutor {
+/// Production executor: fwd graph + (quantized) parameter buffers, on
+/// whichever runtime backend is active (sim or PJRT).
+pub struct GraphExecutor {
     rt: Runtime,
     exe: crate::runtime::Executable,
     /// Parameters resident on device across batches (§Perf L3).
-    params: Vec<xla::PjRtBuffer>,
+    params: Vec<Buffer>,
     batch: usize,
     seq: usize,
     vocab: usize,
     schedule: Schedule,
 }
 
-impl PjrtExecutor {
+impl GraphExecutor {
     /// Build inside the executor thread. `replace` substitutes quantized
     /// linear weights; `schedule` is the model's DVFS class schedule.
     pub fn new(
@@ -87,7 +89,7 @@ impl PjrtExecutor {
     }
 }
 
-impl BatchExecutor for PjrtExecutor {
+impl BatchExecutor for GraphExecutor {
     fn batch_capacity(&self) -> usize {
         self.batch
     }
@@ -107,7 +109,7 @@ impl BatchExecutor for PjrtExecutor {
         let tok_buf = self
             .rt
             .upload(&literal_i32(&tokens, &[self.batch, self.seq])?)?;
-        let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        let mut inputs: Vec<&Buffer> = self.params.iter().collect();
         inputs.push(&tok_buf);
         let out = self.exe.run_b(&inputs)?;
         let logits: Vec<f32> = out[0].to_vec()?;
@@ -116,7 +118,9 @@ impl BatchExecutor for PjrtExecutor {
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                let pos = p.len().min(self.seq) - 1;
+                // Empty prefixes read position 0 (all-padding row) instead
+                // of underflowing.
+                let pos = p.len().clamp(1, self.seq) - 1;
                 let base = (i * self.seq + pos) * self.vocab;
                 let row = &logits[base..base + self.vocab];
                 row.iter()

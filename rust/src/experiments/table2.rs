@@ -1,5 +1,6 @@
 //! Table II: perplexity across methods × models × corpora, evaluated
-//! end-to-end through the PJRT graphs with quantized weights substituted.
+//! end-to-end through the runtime-backend graphs (sim or PJRT) with
+//! quantized weights substituted.
 
 use std::collections::BTreeMap;
 

@@ -18,9 +18,12 @@
 //!   with per-tile clocking and energy decomposition (Figs 8–11).
 //! - [`gpu`] — analytic RTX-2080-Ti-class GPU model (Figs 12–13).
 //! - [`workload`] — LLM GEMM traces (LLaMA2 / OPT shapes) + synthetic data.
-//! - [`runtime`] — PJRT client wrapper that loads the AOT HLO artifacts.
+//! - [`runtime`] — pluggable execution backend over the AOT artifacts: a
+//!   pure-Rust dense-f32 interpreter ([`runtime::sim`], the default) and a
+//!   PJRT/XLA client behind the `xla` cargo feature.
 //! - [`model`] — perplexity evaluation + Fisher calibration over artifacts.
-//! - [`coordinator`] — tokio serving loop (router → batcher → executor).
+//! - [`coordinator`] — std-thread + mpsc serving loop (router → dynamic
+//!   batcher → executor thread; no tokio in the offline build).
 //! - [`experiments`] — one generator per paper table/figure.
 
 pub mod coordinator;

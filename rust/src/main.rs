@@ -22,7 +22,7 @@ COMMANDS
   mac profile            Figs 4+5: per-weight MAC frequency/power profile
   mac histogram --w N    Fig 3: delay histogram for weight value(s) N
   quantize --model M --method Q [--tile T]   quantize + report one model
-  table2 [--models a,b] [--max-batches N]    Table II (PJRT end-to-end)
+  table2 [--models a,b] [--max-batches N]    Table II (end-to-end eval)
   fig8 | fig10 | fig11 | fig12 [--tile T]    simulator figures
   ablate dram|dvfs-overhead|derived-ladder   ablation studies
   serve --model M [--requests N]             serving coordinator demo
@@ -187,7 +187,7 @@ fn cmd_ablate(args: &Args, out: &std::path::Path) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use halo::coordinator::server::PjrtExecutor;
+    use halo::coordinator::server::GraphExecutor;
     use halo::coordinator::{BatcherConfig, Coordinator};
     use halo::dvfs::Schedule;
     use halo::model::calibrate_fisher;
@@ -230,7 +230,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             schedule.groups.len(),
             schedule.transitions()
         );
-        let exec = PjrtExecutor::new(rt, &model, &replace, schedule)?;
+        let exec = GraphExecutor::new(rt, &model, &replace, schedule)?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
     });
 

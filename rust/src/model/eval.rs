@@ -1,12 +1,15 @@
 //! Perplexity evaluation (Table II): run the `nll_fp` / `nll_a8` graphs
-//! with (quantized) parameter literals over a corpus stream.
+//! with (quantized) parameter literals over a corpus stream, on whichever
+//! runtime backend is active (sim or PJRT).
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::quant::{LayerCtx, Matrix, Quantizer};
-use crate::runtime::{artifacts::nll_batches, literal_i32, Executable, ModelArtifacts, Runtime};
+use crate::runtime::{
+    artifacts::nll_batches, literal_i32, Buffer, Executable, ModelArtifacts, Runtime,
+};
 
 /// Evaluator bound to one model's artifacts.
 pub struct Evaluator<'r> {
@@ -58,7 +61,7 @@ impl<'r> Evaluator<'r> {
         let mut total = 0.0f64;
         for tokens in batches.iter().take(n) {
             let tok_buf = self.rt.upload(&literal_i32(tokens, &[b, s + 1])?)?;
-            let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+            let mut inputs: Vec<&Buffer> = param_bufs.iter().collect();
             inputs.push(&tok_buf);
             total += exe.run_scalar_b(&inputs)? as f64;
         }

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::quant::Matrix;
-use crate::runtime::{artifacts::nll_batches, literal_i32, ModelArtifacts, Runtime};
+use crate::runtime::{artifacts::nll_batches, literal_i32, Buffer, ModelArtifacts, Runtime};
 
 /// Accumulated calibration gradients: name → RMS-gradient matrix.
 pub fn calibrate_fisher(
@@ -32,7 +32,7 @@ pub fn calibrate_fisher(
     let n = batches.len().min(max_batches).max(1);
     for tokens in batches.iter().take(n) {
         let tok_buf = rt.upload(&literal_i32(tokens, &[b, s + 1])?)?;
-        let mut inputs: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+        let mut inputs: Vec<&Buffer> = param_bufs.iter().collect();
         inputs.push(&tok_buf);
         let outputs = exe.run_b(&inputs)?;
         anyhow::ensure!(

@@ -1,5 +1,6 @@
 //! Model evaluation over the AOT artifacts: perplexity (Table II) and
-//! Fisher gradient calibration (Algorithm 1's inputs), all through PJRT.
+//! Fisher gradient calibration (Algorithm 1's inputs), all through the
+//! pluggable runtime backend (sim by default, PJRT with `--features xla`).
 
 pub mod eval;
 pub mod fisher;

@@ -13,6 +13,8 @@ use anyhow::{bail, Context, Result};
 use crate::quant::Matrix;
 use crate::util::Json;
 
+use super::backend::Literal;
+
 /// One named parameter tensor.
 #[derive(Debug, Clone)]
 pub struct Param {
@@ -103,7 +105,7 @@ impl ModelArtifacts {
     pub fn param_literals(
         &self,
         replace: &BTreeMap<String, Matrix>,
-    ) -> Result<Vec<xla::Literal>> {
+    ) -> Result<Vec<Literal>> {
         self.params
             .iter()
             .map(|p| {
@@ -113,9 +115,9 @@ impl ModelArtifacts {
                         "shape mismatch for {}",
                         p.name
                     );
-                    super::client::literal_f32(&m.data, &p.shape)
+                    Literal::f32(&m.data, &p.shape)
                 } else {
-                    super::client::literal_f32(&p.data, &p.shape)
+                    Literal::f32(&p.data, &p.shape)
                 }
             })
             .collect()

@@ -1,0 +1,204 @@
+//! The pluggable execution backend surface: host [`Literal`]s, device
+//! [`Buffer`]s, and the [`Backend`]/[`ExecutableImpl`] traits every runtime
+//! implements.
+//!
+//! Two backends exist:
+//!
+//! - [`super::sim::SimBackend`] (always available, the default): a pure-Rust
+//!   dense-f32 interpreter of the stored AOT artifacts. No native deps, so
+//!   the offline build is always green.
+//! - `super::xla::PjrtBackend` (behind the `xla` cargo feature): the real
+//!   PJRT path that parses and compiles the lowered HLO text. The in-tree
+//!   `third_party/xla` crate is an API stub; vendor the real bindings to
+//!   make it execute.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// A host tensor: typed flat data plus row-major dims. Scalars use `dims:
+/// vec![]` (numel 1, like an XLA rank-0 literal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    pub dims: Vec<usize>,
+    pub data: LiteralData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+impl Literal {
+    pub fn f32(data: &[f32], dims: &[usize]) -> Result<Self> {
+        Self::check(data.len(), dims)?;
+        Ok(Self { dims: dims.to_vec(), data: LiteralData::F32(data.to_vec()) })
+    }
+
+    pub fn i32(data: &[i32], dims: &[usize]) -> Result<Self> {
+        Self::check(data.len(), dims)?;
+        Ok(Self { dims: dims.to_vec(), data: LiteralData::I32(data.to_vec()) })
+    }
+
+    pub fn i8(data: &[i8], dims: &[usize]) -> Result<Self> {
+        Self::check(data.len(), dims)?;
+        Ok(Self { dims: dims.to_vec(), data: LiteralData::I8(data.to_vec()) })
+    }
+
+    /// Rank-0 f32 literal (the NLL graph outputs).
+    pub fn scalar_f32(x: f32) -> Self {
+        Self { dims: Vec::new(), data: LiteralData::F32(vec![x]) }
+    }
+
+    fn check(len: usize, dims: &[usize]) -> Result<()> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == len, "shape {:?} vs len {}", dims, len);
+        Ok(())
+    }
+
+    pub fn numel(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::I8(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            other => bail!("literal is not f32: {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            LiteralData::I32(v) => Ok(v),
+            other => bail!("literal is not i32: {other:?}"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            LiteralData::I8(v) => Ok(v),
+            other => bail!("literal is not i8: {other:?}"),
+        }
+    }
+
+    /// Copy out as a typed vector (type inferred at the call site).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first().copied().ok_or_else(|| anyhow::anyhow!("empty literal"))
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy + Sized {
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<f32>> {
+        Ok(lit.as_f32()?.to_vec())
+    }
+}
+
+impl Element for i32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<i32>> {
+        Ok(lit.as_i32()?.to_vec())
+    }
+}
+
+impl Element for i8 {
+    fn from_literal(lit: &Literal) -> Result<Vec<i8>> {
+        Ok(lit.as_i8()?.to_vec())
+    }
+}
+
+/// A backend-owned device buffer. Parameters are uploaded once and stay
+/// resident across executions (§Perf L3); the sim backend's "device" is the
+/// host, so its buffers simply own the literal.
+pub enum Buffer {
+    Host(Literal),
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl Buffer {
+    pub fn as_host(&self) -> Result<&Literal> {
+        match self {
+            Buffer::Host(l) => Ok(l),
+            #[cfg(feature = "xla")]
+            Buffer::Pjrt(_) => bail!("buffer belongs to the PJRT backend, not the sim backend"),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    pub fn as_pjrt(&self) -> Result<&xla::PjRtBuffer> {
+        match self {
+            Buffer::Pjrt(b) => Ok(b),
+            Buffer::Host(_) => bail!("buffer belongs to the sim backend, not the PJRT backend"),
+        }
+    }
+}
+
+/// What every runtime backend provides. Deliberately NOT `Send`: real PJRT
+/// handles must stay on the thread that created them (the coordinator
+/// constructs its executor inside the executor thread for this reason).
+pub trait Backend {
+    fn platform_name(&self) -> String;
+    /// Upload a host literal into a resident device buffer.
+    fn upload(&self, lit: &Literal) -> Result<Buffer>;
+    /// Load (and for PJRT, compile) a graph artifact.
+    fn load(&self, path: &Path) -> Result<Box<dyn ExecutableImpl>>;
+}
+
+/// A loaded computation ready for repeated execution.
+pub trait ExecutableImpl {
+    /// Execute with positional host literals; returns the flattened output
+    /// tuple elements.
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+    /// Execute with pre-uploaded device buffers (the hot path).
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Literal>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(Literal::f32(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = Literal::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.numel(), 4);
+        assert_eq!(l.dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let s = Literal::scalar_f32(2.5);
+        assert_eq!(s.numel(), 1);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn typed_extraction() {
+        let l = Literal::i32(&[7, 8], &[2]).unwrap();
+        let v: Vec<i32> = l.to_vec().unwrap();
+        assert_eq!(v, vec![7, 8]);
+        assert!(l.to_vec::<f32>().is_err());
+        let b = Buffer::Host(l);
+        assert_eq!(b.as_host().unwrap().numel(), 2);
+    }
+}

@@ -1,132 +1,174 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Runtime facade: load AOT artifacts once, execute many — over whichever
+//! [`Backend`] is active.
 //!
-//! Mirrors /opt/xla-example/load_hlo: HLO *text* is the interchange format
-//! (jax ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1; the
-//! text parser reassigns instruction ids). Every lowered graph returns a
-//! tuple (`return_tuple=True`), so outputs decompose with `to_tuple()`.
+//! Backend selection: the pure-Rust [`super::sim::SimBackend`] by default;
+//! the PJRT backend when built with `--features xla`. The `HALO_BACKEND`
+//! env var (`sim` / `xla`) overrides either way, so a PJRT build can still
+//! run the reference interpreter for differential testing.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-/// Shared PJRT CPU client.
+use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
+use super::sim::SimBackend;
+
+/// A handle to the active execution backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
+    /// The standard constructor used everywhere: host-CPU execution on the
+    /// default backend for this build (see module docs).
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
+        match std::env::var("HALO_BACKEND") {
+            Ok(v) if v == "sim" => Ok(Self::sim()),
+            Ok(v) if v == "xla" => Self::pjrt(),
+            Ok(other) => anyhow::bail!("unknown HALO_BACKEND `{other}` (expected sim|xla)"),
+            Err(_) => Self::default_backend(),
+        }
+    }
+
+    /// The pure-Rust interpreter backend (always available).
+    pub fn sim() -> Self {
+        Self { backend: Box::new(SimBackend) }
+    }
+
+    /// The PJRT backend (requires the `xla` cargo feature).
+    #[cfg(feature = "xla")]
+    pub fn pjrt() -> Result<Self> {
+        Ok(Self { backend: Box::new(super::xla::PjrtBackend::cpu()?) })
+    }
+
+    /// The PJRT backend (requires the `xla` cargo feature).
+    #[cfg(not(feature = "xla"))]
+    pub fn pjrt() -> Result<Self> {
+        anyhow::bail!("built without the `xla` feature; rebuild with `--features xla`")
+    }
+
+    #[cfg(feature = "xla")]
+    fn default_backend() -> Result<Self> {
+        Self::pjrt()
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn default_backend() -> Result<Self> {
+        Ok(Self::sim())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform_name()
     }
 
     /// Upload a literal to a device buffer once; reuse it across many
     /// `Executable::run_b` calls. This keeps large parameter sets resident
-    /// (§Perf L3: the literal-input `execute` path re-transfers — and, in
-    /// xla_extension 0.5.1, leaks — every argument on every call).
-    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        // A null device segfaults the CPU plugin — always pin device 0.
-        let devices = self.client.addressable_devices();
-        let dev = devices.first().context("no addressable device")?;
-        let buf = self.client.buffer_from_host_literal(Some(dev), lit)?;
-        // BufferFromHostLiteral is asynchronous and the C wrapper does not
-        // await the transfer; the host literal must stay alive (and the
-        // buffer ready) before any execute_b. Round-tripping the buffer to
-        // a literal forces readiness while `lit` is still borrowed.
-        let _ = buf.to_literal_sync()?;
-        Ok(buf)
+    /// (§Perf L3).
+    pub fn upload(&self, lit: &Literal) -> Result<Buffer> {
+        self.backend.upload(lit)
     }
 
-    pub fn upload_all(&self, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+    pub fn upload_all(&self, lits: &[Literal]) -> Result<Vec<Buffer>> {
         lits.iter().map(|l| self.upload(l)).collect()
     }
 
-    /// Load + compile an HLO text artifact.
+    /// Load (and, on PJRT, compile) a graph artifact.
     pub fn load(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+        let imp = self
+            .backend
+            .load(path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        Ok(Executable { imp, name: path.display().to_string() })
     }
 }
 
-/// A compiled computation ready for repeated execution.
+/// A loaded computation ready for repeated execution.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn ExecutableImpl>,
     pub name: String,
 }
 
 impl Executable {
     /// Execute with positional literal inputs; returns the flattened output
     /// tuple elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple()?)
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let refs: Vec<&Literal> = inputs.iter().collect();
+        self.imp
+            .run(&refs)
+            .with_context(|| format!("executing {}", self.name))
     }
 
     /// Execute and return the single scalar f32 output (NLL graphs).
-    pub fn run_scalar(&self, inputs: &[xla::Literal]) -> Result<f32> {
+    pub fn run_scalar(&self, inputs: &[Literal]) -> Result<f32> {
         let out = self.run(inputs)?;
         anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
-        Ok(out[0].get_first_element::<f32>()?)
+        out[0].get_first_element::<f32>()
     }
 
     /// Execute with pre-uploaded device buffers (the hot path: parameters
     /// stay resident, only small operands are re-uploaded per call).
-    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .with_context(|| format!("executing {}", self.name))?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple()?)
+    pub fn run_b(&self, inputs: &[&Buffer]) -> Result<Vec<Literal>> {
+        self.imp
+            .run_buffers(inputs)
+            .with_context(|| format!("executing {}", self.name))
     }
 
     /// Execute and return the single scalar f32 output (NLL graphs).
-    pub fn run_scalar_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<f32> {
+    pub fn run_scalar_b(&self, inputs: &[&Buffer]) -> Result<f32> {
         let out = self.run_b(inputs)?;
         anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
-        Ok(out[0].get_first_element::<f32>()?)
+        out[0].get_first_element::<f32>()
     }
 }
 
 /// Build an f32 literal of the given shape.
-pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    Literal::f32(data, dims)
 }
 
 /// Build an i32 literal of the given shape.
-pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    Literal::i32(data, dims)
 }
 
 /// Build an int8 literal (codebook indices) of the given shape.
-pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {:?} vs len {}", dims, data.len());
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S8,
-        dims,
-        bytes,
-    )?)
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
+    Literal::i8(data, dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_constructors_check_shapes() {
+        assert!(literal_f32(&[1.0; 6], &[2, 3]).is_ok());
+        assert!(literal_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(literal_i32(&[1, 2], &[2]).is_ok());
+        assert!(literal_i8(&[1, 2, 3], &[4]).is_err());
+    }
+
+    #[test]
+    fn sim_runtime_always_available() {
+        let rt = Runtime::sim();
+        assert_eq!(rt.platform(), "sim-cpu");
+        let buf = rt.upload(&Literal::scalar_f32(1.0)).unwrap();
+        assert_eq!(buf.as_host().unwrap().get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn default_backend_is_sim_offline() {
+        // Guard against env overrides leaking in from the harness.
+        if std::env::var("HALO_BACKEND").is_err() {
+            let rt = Runtime::cpu().unwrap();
+            assert_eq!(rt.platform(), "sim-cpu");
+        }
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let rt = Runtime::sim();
+        assert!(rt.load(Path::new("/nonexistent/nll_fp.hlo.txt")).is_err());
+    }
 }

@@ -1,10 +1,20 @@
-//! PJRT runtime + artifact store: everything the L3 binary needs to load
-//! and execute the AOT-lowered L1/L2 graphs. Python never runs here.
+//! Runtime + artifact store: everything the L3 binary needs to load and
+//! execute the AOT-lowered L1/L2 graphs. Python never runs here.
+//!
+//! Execution goes through a pluggable [`Backend`]: the pure-Rust
+//! [`sim::SimBackend`] interpreter by default (always buildable offline),
+//! or the PJRT/XLA path when compiled with `--features xla` (see
+//! `DESIGN.md` §Backends).
 
 pub mod artifacts;
+pub mod backend;
 pub mod client;
+pub mod sim;
+#[cfg(feature = "xla")]
+pub mod xla;
 
 pub use artifacts::{ModelArtifacts, Param, Store};
+pub use backend::{Backend, Buffer, Literal, LiteralData};
 pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
 
 #[cfg(test)]

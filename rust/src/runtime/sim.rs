@@ -1,0 +1,1136 @@
+//! `SimBackend`: a pure-Rust, dense-f32 interpreter of the AOT artifacts.
+//!
+//! The offline build cannot compile HLO (no XLA), but it does not need to:
+//! every lowered graph is one of a small closed set produced by
+//! `python/compile/aot.py` (`nll_fp` / `nll_a8` / `fwd_fp` / `grad` per
+//! model, plus the standalone `halo_matmul` / `spmv` kernels). This backend
+//! recognizes the graph by artifact name, reads the model hyper-parameters
+//! from the sibling `config.json` / `kernels.json`, and evaluates the same
+//! computation in plain Rust — numerically validated against the JAX
+//! definitions in `python/compile/model.py` (forward, A8 fake-quant, NLL,
+//! and the linear-weight gradients, incl. a finite-difference check below).
+//!
+//! Fidelity over speed: this is the reference semantics for the serving
+//! path; the PJRT backend (`--features xla`) replaces it for performance.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Matrix;
+use crate::util::Json;
+
+use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
+
+/// sqrt(2/pi) for the tanh GELU approximation (jax.nn.gelu default).
+const GELU_C: f32 = 0.797_884_56;
+
+pub struct SimBackend;
+
+impl Backend for SimBackend {
+    fn platform_name(&self) -> String {
+        "sim-cpu".into()
+    }
+
+    fn upload(&self, lit: &Literal) -> Result<Buffer> {
+        Ok(Buffer::Host(lit.clone()))
+    }
+
+    fn load(&self, path: &Path) -> Result<Box<dyn ExecutableImpl>> {
+        anyhow::ensure!(
+            path.exists(),
+            "no graph artifact at {} — run `make artifacts` first",
+            path.display()
+        );
+        let stem = graph_stem(path)?;
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        let graph = match stem.as_str() {
+            "nll_fp" => SimGraph::Model { spec: ModelSpec::load(dir)?, kind: ModelKind::NllFp },
+            "nll_a8" => SimGraph::Model { spec: ModelSpec::load(dir)?, kind: ModelKind::NllA8 },
+            "fwd_fp" => SimGraph::Model { spec: ModelSpec::load(dir)?, kind: ModelKind::FwdFp },
+            "grad" => SimGraph::Model { spec: ModelSpec::load(dir)?, kind: ModelKind::Grad },
+            "halo_matmul" => SimGraph::HaloMatmul,
+            "spmv" => SimGraph::Spmv { out_dim: spmv_out_dim(dir)? },
+            other => bail!(
+                "sim backend cannot interpret graph `{other}` ({}); \
+                 build with --features xla for arbitrary HLO",
+                path.display()
+            ),
+        };
+        Ok(Box::new(graph))
+    }
+}
+
+/// `models/tiny/nll_fp.hlo.txt` → `nll_fp`.
+fn graph_stem(path: &Path) -> Result<String> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("bad artifact path {}", path.display()))?;
+    Ok(name
+        .strip_suffix(".hlo.txt")
+        .unwrap_or(name.strip_suffix(".txt").unwrap_or(name))
+        .to_string())
+}
+
+/// Output width of the spmv kernel, from the sibling `kernels.json`.
+fn spmv_out_dim(dir: &Path) -> Result<usize> {
+    let meta = Json::parse(
+        &std::fs::read_to_string(dir.join("kernels.json"))
+            .with_context(|| format!("sim backend needs {}/kernels.json", dir.display()))?,
+    )?;
+    meta.path(&["spmv", "n"])?.as_usize()
+}
+
+/// Which lowered model graph is being interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// `(params..., tokens (B, S+1)) -> (mean NLL,)` — f32 activations.
+    NllFp,
+    /// Same, with per-token A8 fake-quantized activations at every GEMM.
+    NllA8,
+    /// `(params..., tokens (B, S)) -> (logits (B, S, V),)`.
+    FwdFp,
+    /// `(params..., tokens (B, S+1)) -> (loss, dW per linear weight)`.
+    Grad,
+}
+
+enum SimGraph {
+    Model { spec: ModelSpec, kind: ModelKind },
+    HaloMatmul,
+    Spmv { out_dim: usize },
+}
+
+impl ExecutableImpl for SimGraph {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        match self {
+            SimGraph::Model { spec, kind } => run_model_graph(spec, *kind, inputs),
+            SimGraph::HaloMatmul => run_halo_matmul(inputs),
+            SimGraph::Spmv { out_dim } => run_spmv(*out_dim, inputs),
+        }
+    }
+
+    fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Literal>> {
+        let lits: Vec<&Literal> = inputs
+            .iter()
+            .map(|b| b.as_host())
+            .collect::<Result<_>>()?;
+        self.run(&lits)
+    }
+}
+
+// ---------------------------------------------------------------- model spec
+
+/// The transformer hyper-parameters + canonical parameter table, parsed from
+/// the artifact `config.json` (the same contract `artifacts.rs` loads).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub linear: Vec<bool>,
+}
+
+impl ModelSpec {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("config.json"))
+                .with_context(|| format!("sim backend needs {}/config.json", dir.display()))?,
+        )?;
+        Self::from_json(&meta)
+    }
+
+    pub fn from_json(meta: &Json) -> Result<Self> {
+        let cfg = meta.req("config")?;
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut linear = Vec::new();
+        for e in meta.req("params")?.as_arr()? {
+            names.push(e.req("name")?.as_str()?.to_string());
+            shapes.push(
+                e.req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+            );
+            linear.push(e.req("linear")?.as_bool()?);
+        }
+        let spec = Self {
+            vocab: cfg.req("vocab")?.as_usize()?,
+            d_model: cfg.req("d_model")?.as_usize()?,
+            n_layers: cfg.req("n_layers")?.as_usize()?,
+            n_heads: cfg.req("n_heads")?.as_usize()?,
+            d_ff: cfg.req("d_ff")?.as_usize()?,
+            seq_len: cfg.req("seq_len")?.as_usize()?,
+            names,
+            shapes,
+            linear,
+        };
+        anyhow::ensure!(
+            spec.n_heads > 0 && spec.d_model % spec.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            spec.d_model,
+            spec.n_heads
+        );
+        Ok(spec)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Positional inputs mapped back to named parameters (canonical order).
+struct Params<'a> {
+    map: BTreeMap<&'a str, (&'a [usize], &'a [f32])>,
+}
+
+impl<'a> Params<'a> {
+    fn bind(spec: &'a ModelSpec, inputs: &[&'a Literal]) -> Result<Self> {
+        anyhow::ensure!(
+            inputs.len() == spec.names.len(),
+            "expected {} parameter inputs, got {}",
+            spec.names.len(),
+            inputs.len()
+        );
+        let mut map = BTreeMap::new();
+        for (i, name) in spec.names.iter().enumerate() {
+            let want: usize = spec.shapes[i].iter().product();
+            let data = inputs[i]
+                .as_f32()
+                .with_context(|| format!("parameter {name} must be f32"))?;
+            anyhow::ensure!(
+                data.len() == want,
+                "parameter {name}: numel {} != expected {want}",
+                data.len()
+            );
+            map.insert(name.as_str(), (spec.shapes[i].as_slice(), data));
+        }
+        Ok(Self { map })
+    }
+
+    fn vec1(&self, name: &str) -> Result<&'a [f32]> {
+        let (_, data) = self.get(name)?;
+        Ok(data)
+    }
+
+    fn mat(&self, name: &str) -> Result<Matrix> {
+        let (shape, data) = self.get(name)?;
+        anyhow::ensure!(shape.len() == 2, "parameter {name} is not 2-D: {shape:?}");
+        Ok(Matrix::from_vec(shape[0], shape[1], data.to_vec()))
+    }
+
+    fn get(&self, name: &str) -> Result<(&'a [usize], &'a [f32])> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))
+    }
+}
+
+// ------------------------------------------------------------- linear algebra
+
+/// aᵀ @ b for a (n, r), b (n, c) → (r, c). Used for weight gradients.
+fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows);
+    let mut out = Matrix::zeros(a.cols, b.cols);
+    for k in 0..a.rows {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = out.row_mut(i);
+            for (j, &bv) in brow.iter().enumerate() {
+                orow[j] += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// a @ bᵀ for a (n, c), b (m, c) → (n, m). Used to push gradients back
+/// through `y = x @ W` (dx = dy @ Wᵀ).
+fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols);
+    let mut out = Matrix::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            orow[j] = acc;
+        }
+    }
+    out
+}
+
+fn add_into(a: &mut Matrix, b: &Matrix) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Per-token (row) symmetric A8 fake quantization — mirror of
+/// `python/compile/kernels/ref.py::fake_quant_act`.
+pub fn fake_quant_rows(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let s = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+        for v in row.iter_mut() {
+            // Ties-to-even matches jnp.round in ref.py::fake_quant_act.
+            *v = (*v / s).round_ties_even().clamp(-128.0, 127.0) * s;
+        }
+    }
+    out
+}
+
+/// Row-wise layer norm; returns (y, x̂, 1/σ per row) — the caches the
+/// backward pass needs.
+fn layernorm(x: &Matrix, scale: &[f32], bias: &[f32]) -> (Matrix, Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut y = Matrix::zeros(x.rows, d);
+    let mut xhat = Matrix::zeros(x.rows, d);
+    let mut istd = Vec::with_capacity(x.rows);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mu = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row
+            .iter()
+            .map(|&v| {
+                let e = v as f64 - mu;
+                e * e
+            })
+            .sum::<f64>()
+            / d as f64;
+        let is = 1.0 / (var + 1e-5).sqrt();
+        istd.push(is as f32);
+        for c in 0..d {
+            let xh = ((row[c] as f64 - mu) * is) as f32;
+            xhat.set(r, c, xh);
+            y.set(r, c, xh * scale[c] + bias[c]);
+        }
+    }
+    (y, xhat, istd)
+}
+
+/// dx for y = x̂·γ + β:  dx = (dx̂ − mean(dx̂) − x̂·mean(dx̂·x̂)) / σ.
+fn layernorm_backward(dy: &Matrix, xhat: &Matrix, istd: &[f32], scale: &[f32]) -> Matrix {
+    let d = dy.cols;
+    let mut dx = Matrix::zeros(dy.rows, d);
+    for r in 0..dy.rows {
+        let mut m1 = 0.0f64;
+        let mut m2 = 0.0f64;
+        for c in 0..d {
+            let dxh = (dy.get(r, c) * scale[c]) as f64;
+            m1 += dxh;
+            m2 += dxh * xhat.get(r, c) as f64;
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        for c in 0..d {
+            let dxh = (dy.get(r, c) * scale[c]) as f64;
+            let v = (dxh - m1 - xhat.get(r, c) as f64 * m2) * istd[r] as f64;
+            dx.set(r, c, v as f32);
+        }
+    }
+    dx
+}
+
+// ----------------------------------------------------------------- attention
+
+/// Multi-head causal attention over projected q/k/v (each (b·s, d)).
+/// Returns the merged output and, per (batch, head), the softmax weights.
+fn attention(
+    b: usize,
+    s: usize,
+    heads: usize,
+    hd: usize,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+) -> (Matrix, Vec<Matrix>) {
+    let d = heads * hd;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut ao = Matrix::zeros(b * s, d);
+    let mut atts = Vec::with_capacity(b * heads);
+    for bi in 0..b {
+        for h in 0..heads {
+            let c0 = h * hd;
+            let mut att = Matrix::zeros(s, s);
+            for qi in 0..s {
+                let qrow = &q.row(bi * s + qi)[c0..c0 + hd];
+                let mut logits = vec![0.0f32; qi + 1];
+                let mut maxv = f32::NEG_INFINITY;
+                for (ki, l) in logits.iter_mut().enumerate() {
+                    let krow = &k.row(bi * s + ki)[c0..c0 + hd];
+                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    *l = (dot as f64 * scale) as f32;
+                    maxv = maxv.max(*l);
+                }
+                let mut denom = 0.0f64;
+                for l in logits.iter_mut() {
+                    let e = ((*l - maxv) as f64).exp();
+                    *l = e as f32;
+                    denom += e;
+                }
+                for (ki, &e) in logits.iter().enumerate() {
+                    att.set(qi, ki, (e as f64 / denom) as f32);
+                }
+                for j in 0..hd {
+                    let mut acc = 0.0f32;
+                    for ki in 0..=qi {
+                        acc += att.get(qi, ki) * v.row(bi * s + ki)[c0 + j];
+                    }
+                    ao.set(bi * s + qi, c0 + j, acc);
+                }
+            }
+            atts.push(att);
+        }
+    }
+    (ao, atts)
+}
+
+/// Backward through causal attention given the cached softmax weights.
+/// Returns (dq, dk, dv), each (b·s, d).
+#[allow(clippy::too_many_arguments)]
+fn attention_backward(
+    b: usize,
+    s: usize,
+    heads: usize,
+    hd: usize,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    atts: &[Matrix],
+    dao: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let d = heads * hd;
+    let scale = (1.0 / (hd as f64).sqrt()) as f32;
+    let mut dq = Matrix::zeros(b * s, d);
+    let mut dk = Matrix::zeros(b * s, d);
+    let mut dv = Matrix::zeros(b * s, d);
+    for bi in 0..b {
+        for h in 0..heads {
+            let c0 = h * hd;
+            let att = &atts[bi * heads + h];
+            for qi in 0..s {
+                let dorow = &dao.row(bi * s + qi)[c0..c0 + hd];
+                // datt[ki] = ⟨dao_qi, v_ki⟩ over this head's slice.
+                let mut datt = vec![0.0f32; qi + 1];
+                for (ki, dl) in datt.iter_mut().enumerate() {
+                    let vrow = &v.row(bi * s + ki)[c0..c0 + hd];
+                    *dl = dorow.iter().zip(vrow).map(|(a, b)| a * b).sum();
+                }
+                // Softmax backward: dz = att ⊙ (datt − Σ datt·att).
+                let rowsum: f64 = datt
+                    .iter()
+                    .enumerate()
+                    .map(|(ki, &dl)| dl as f64 * att.get(qi, ki) as f64)
+                    .sum();
+                for (ki, &dl) in datt.iter().enumerate() {
+                    let a = att.get(qi, ki);
+                    let dz = a * (dl - rowsum as f32);
+                    let qrow = q.row(bi * s + qi);
+                    let krow = k.row(bi * s + ki);
+                    let dqrow = dq.row_mut(bi * s + qi);
+                    for j in 0..hd {
+                        dqrow[c0 + j] += dz * krow[c0 + j] * scale;
+                    }
+                    let dkrow = dk.row_mut(bi * s + ki);
+                    for j in 0..hd {
+                        dkrow[c0 + j] += dz * qrow[c0 + j] * scale;
+                    }
+                    let dvrow = dv.row_mut(bi * s + ki);
+                    for j in 0..hd {
+                        dvrow[c0 + j] += a * dorow[j];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// ------------------------------------------------------------------- forward
+
+struct LayerCache {
+    xhat1: Matrix,
+    istd1: Vec<f32>,
+    /// GEMM input for q/k/v (fake-quantized under A8).
+    a_in1: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    atts: Vec<Matrix>,
+    a_ao: Matrix,
+    xhat2: Matrix,
+    istd2: Vec<f32>,
+    a_hn2: Matrix,
+    pre_act: Matrix,
+    a_h1: Matrix,
+}
+
+struct FinalCache {
+    xhat_f: Matrix,
+    istd_f: Vec<f32>,
+    a_xf: Matrix,
+}
+
+/// The shared forward pass (mirror of `model.py::_forward`), caching every
+/// intermediate the backward pass needs. `tokens` is (b, s) row-major.
+fn forward(
+    spec: &ModelSpec,
+    p: &Params,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    a8: bool,
+) -> Result<(Matrix, Vec<LayerCache>, FinalCache)> {
+    let d = spec.d_model;
+    anyhow::ensure!(s >= 1 && tokens.len() == b * s, "bad token batch shape");
+    anyhow::ensure!(
+        s <= spec.seq_len,
+        "sequence length {s} exceeds the model's {}",
+        spec.seq_len
+    );
+    let act = |m: &Matrix| if a8 { fake_quant_rows(m) } else { m.clone() };
+
+    // Embedding + positional embedding.
+    let embed = p.vec1("embed")?;
+    let pos = p.vec1("pos_embed")?;
+    let mut x = Matrix::zeros(b * s, d);
+    for bi in 0..b {
+        for si in 0..s {
+            let t = tokens[bi * s + si];
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < spec.vocab,
+                "token {t} out of vocab range {}",
+                spec.vocab
+            );
+            let erow = &embed[t as usize * d..(t as usize + 1) * d];
+            let prow = &pos[si * d..(si + 1) * d];
+            let xrow = x.row_mut(bi * s + si);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+    }
+
+    let mut caches = Vec::with_capacity(spec.n_layers);
+    for i in 0..spec.n_layers {
+        let pre = format!("layer{i}.");
+        let (hn1, xhat1, istd1) = layernorm(
+            &x,
+            p.vec1(&format!("{pre}ln1.scale"))?,
+            p.vec1(&format!("{pre}ln1.bias"))?,
+        );
+        let a_in1 = act(&hn1);
+        let wq = p.mat(&format!("{pre}attn.wq"))?;
+        let wk = p.mat(&format!("{pre}attn.wk"))?;
+        let wv = p.mat(&format!("{pre}attn.wv"))?;
+        let q = a_in1.matmul(&wq);
+        let k = a_in1.matmul(&wk);
+        let v = a_in1.matmul(&wv);
+        let (ao, atts) = attention(b, s, spec.n_heads, spec.head_dim(), &q, &k, &v);
+        let a_ao = act(&ao);
+        let wo = p.mat(&format!("{pre}attn.wo"))?;
+        add_into(&mut x, &a_ao.matmul(&wo));
+
+        let (hn2, xhat2, istd2) = layernorm(
+            &x,
+            p.vec1(&format!("{pre}ln2.scale"))?,
+            p.vec1(&format!("{pre}ln2.bias"))?,
+        );
+        let a_hn2 = act(&hn2);
+        let w1 = p.mat(&format!("{pre}mlp.w1"))?;
+        let b1 = p.vec1(&format!("{pre}mlp.b1"))?;
+        let mut pre_act = a_hn2.matmul(&w1);
+        for r in 0..pre_act.rows {
+            let row = pre_act.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += b1[c];
+            }
+        }
+        let mut h1 = pre_act.clone();
+        for v in h1.data.iter_mut() {
+            *v = gelu(*v);
+        }
+        let a_h1 = act(&h1);
+        let w2 = p.mat(&format!("{pre}mlp.w2"))?;
+        let b2 = p.vec1(&format!("{pre}mlp.b2"))?;
+        let mut mlp_out = a_h1.matmul(&w2);
+        for r in 0..mlp_out.rows {
+            let row = mlp_out.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += b2[c];
+            }
+        }
+        add_into(&mut x, &mlp_out);
+
+        caches.push(LayerCache {
+            xhat1,
+            istd1,
+            a_in1,
+            q,
+            k,
+            v,
+            atts,
+            a_ao,
+            xhat2,
+            istd2,
+            a_hn2,
+            pre_act,
+            a_h1,
+        });
+    }
+
+    let (xf, xhat_f, istd_f) =
+        layernorm(&x, p.vec1("ln_f.scale")?, p.vec1("ln_f.bias")?);
+    let a_xf = act(&xf);
+    let head = p.mat("head")?;
+    let logits = a_xf.matmul(&head);
+    Ok((logits, caches, FinalCache { xhat_f, istd_f, a_xf }))
+}
+
+/// Mean next-token NLL and ∂loss/∂logits = (softmax − onehot)/n.
+fn nll_and_dlogits(logits: &Matrix, targets: &[i32]) -> Result<(f32, Matrix)> {
+    let (n, v) = (logits.rows, logits.cols);
+    anyhow::ensure!(targets.len() == n, "target length mismatch");
+    let mut d = Matrix::zeros(n, v);
+    let mut total = 0.0f64;
+    for r in 0..n {
+        let row = logits.row(r);
+        let t = targets[r];
+        anyhow::ensure!(t >= 0 && (t as usize) < v, "target {t} out of range {v}");
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut denom = 0.0f64;
+        for &x in row {
+            denom += ((x - maxv) as f64).exp();
+        }
+        total += maxv as f64 + denom.ln() - row[t as usize] as f64;
+        let drow = d.row_mut(r);
+        for c in 0..v {
+            let mut g = ((row[c] - maxv) as f64).exp() / denom;
+            if c == t as usize {
+                g -= 1.0;
+            }
+            drow[c] = (g / n as f64) as f32;
+        }
+    }
+    Ok(((total / n as f64) as f32, d))
+}
+
+/// Mean NLL over a (b, s+1) token batch — the `nll_fp` / `nll_a8` graphs.
+pub fn model_loss(spec: &ModelSpec, inputs: &[&Literal], a8: bool) -> Result<f32> {
+    let (p, tokens, b, t) = split_model_inputs(spec, inputs)?;
+    anyhow::ensure!(t >= 2, "NLL graphs need (b, s+1) tokens with s >= 1");
+    let s = t - 1;
+    let (inp, tgt) = split_next_token(tokens, b, s);
+    let (logits, _, _) = forward(spec, &p, &inp, b, s, a8)?;
+    let (loss, _) = nll_and_dlogits(&logits, &tgt)?;
+    Ok(loss)
+}
+
+/// `(loss, dW per linear weight in canonical order)` — the `grad` graph.
+/// Backward mirrors the JAX autodiff of `model.py::loss_fn` (validated by
+/// the finite-difference test below).
+pub fn model_grads(
+    spec: &ModelSpec,
+    inputs: &[&Literal],
+) -> Result<(f32, Vec<(String, Matrix)>)> {
+    let (p, tokens, b, t) = split_model_inputs(spec, inputs)?;
+    anyhow::ensure!(t >= 2, "grad graph needs (b, s+1) tokens with s >= 1");
+    let s = t - 1;
+    let (inp, tgt) = split_next_token(tokens, b, s);
+    let (logits, caches, fin) = forward(spec, &p, &inp, b, s, false)?;
+    let (loss, dlogits) = nll_and_dlogits(&logits, &tgt)?;
+
+    let mut grads: BTreeMap<String, Matrix> = BTreeMap::new();
+    grads.insert("head".into(), matmul_tn(&fin.a_xf, &dlogits));
+    let dxf = matmul_nt(&dlogits, &p.mat("head")?);
+    let mut dx = layernorm_backward(&dxf, &fin.xhat_f, &fin.istd_f, p.vec1("ln_f.scale")?);
+
+    for i in (0..spec.n_layers).rev() {
+        let pre = format!("layer{i}.");
+        let c = &caches[i];
+        // MLP: x = x_mid + gelu(hn2 @ w1 + b1) @ w2 + b2
+        grads.insert(format!("{pre}mlp.w2"), matmul_tn(&c.a_h1, &dx));
+        let dh1 = matmul_nt(&dx, &p.mat(&format!("{pre}mlp.w2"))?);
+        let mut dpre = dh1;
+        for (v, &x) in dpre.data.iter_mut().zip(&c.pre_act.data) {
+            *v *= gelu_grad(x);
+        }
+        grads.insert(format!("{pre}mlp.w1"), matmul_tn(&c.a_hn2, &dpre));
+        let dhn2 = matmul_nt(&dpre, &p.mat(&format!("{pre}mlp.w1"))?);
+        add_into(
+            &mut dx,
+            &layernorm_backward(&dhn2, &c.xhat2, &c.istd2, p.vec1(&format!("{pre}ln2.scale"))?),
+        );
+
+        // Attention: x_mid = x_in + attn(hn1) @ wo
+        grads.insert(format!("{pre}attn.wo"), matmul_tn(&c.a_ao, &dx));
+        let dao = matmul_nt(&dx, &p.mat(&format!("{pre}attn.wo"))?);
+        let (dq, dk, dv) = attention_backward(
+            b,
+            s,
+            spec.n_heads,
+            spec.head_dim(),
+            &c.q,
+            &c.k,
+            &c.v,
+            &c.atts,
+            &dao,
+        );
+        grads.insert(format!("{pre}attn.wq"), matmul_tn(&c.a_in1, &dq));
+        grads.insert(format!("{pre}attn.wk"), matmul_tn(&c.a_in1, &dk));
+        grads.insert(format!("{pre}attn.wv"), matmul_tn(&c.a_in1, &dv));
+        let mut dhn1 = matmul_nt(&dq, &p.mat(&format!("{pre}attn.wq"))?);
+        add_into(&mut dhn1, &matmul_nt(&dk, &p.mat(&format!("{pre}attn.wk"))?));
+        add_into(&mut dhn1, &matmul_nt(&dv, &p.mat(&format!("{pre}attn.wv"))?));
+        add_into(
+            &mut dx,
+            &layernorm_backward(&dhn1, &c.xhat1, &c.istd1, p.vec1(&format!("{pre}ln1.scale"))?),
+        );
+    }
+
+    // Canonical linear order, exactly like the lowered grad graph's outputs.
+    let mut out = Vec::new();
+    for (i, name) in spec.names.iter().enumerate() {
+        if spec.linear[i] {
+            let g = grads
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("missing gradient for {name}"))?;
+            out.push((name.clone(), g));
+        }
+    }
+    Ok((loss, out))
+}
+
+/// Logits for a (b, s) token batch — the `fwd_fp` graph.
+pub fn model_forward(spec: &ModelSpec, inputs: &[&Literal]) -> Result<(Matrix, usize, usize)> {
+    let (p, tokens, b, s) = split_model_inputs(spec, inputs)?;
+    let (logits, _, _) = forward(spec, &p, &tokens, b, s, false)?;
+    Ok((logits, b, s))
+}
+
+fn split_model_inputs<'a>(
+    spec: &'a ModelSpec,
+    inputs: &[&'a Literal],
+) -> Result<(Params<'a>, Vec<i32>, usize, usize)> {
+    anyhow::ensure!(
+        inputs.len() == spec.names.len() + 1,
+        "expected {} inputs (params + tokens), got {}",
+        spec.names.len() + 1,
+        inputs.len()
+    );
+    let p = Params::bind(spec, &inputs[..spec.names.len()])?;
+    let tok = inputs[spec.names.len()];
+    anyhow::ensure!(
+        tok.dims().len() == 2,
+        "token batch must be 2-D, got dims {:?}",
+        tok.dims()
+    );
+    let (b, t) = (tok.dims()[0], tok.dims()[1]);
+    Ok((p, tok.as_i32()?.to_vec(), b, t))
+}
+
+/// Split a (b, s+1) stream into inputs (b, s) and next-token targets (b·s).
+fn split_next_token(tokens: Vec<i32>, b: usize, s: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut inp = Vec::with_capacity(b * s);
+    let mut tgt = Vec::with_capacity(b * s);
+    for bi in 0..b {
+        let row = &tokens[bi * (s + 1)..(bi + 1) * (s + 1)];
+        inp.extend_from_slice(&row[..s]);
+        tgt.extend_from_slice(&row[1..]);
+    }
+    (inp, tgt)
+}
+
+fn run_model_graph(spec: &ModelSpec, kind: ModelKind, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    match kind {
+        ModelKind::NllFp => Ok(vec![Literal::scalar_f32(model_loss(spec, inputs, false)?)]),
+        ModelKind::NllA8 => Ok(vec![Literal::scalar_f32(model_loss(spec, inputs, true)?)]),
+        ModelKind::FwdFp => {
+            let (logits, b, s) = model_forward(spec, inputs)?;
+            Ok(vec![Literal::f32(&logits.data, &[b, s, spec.vocab])?])
+        }
+        ModelKind::Grad => {
+            let (loss, grads) = model_grads(spec, inputs)?;
+            let mut out = vec![Literal::scalar_f32(loss)];
+            for (_, g) in grads {
+                out.push(Literal::f32(&g.data, &[g.rows, g.cols])?);
+            }
+            Ok(out)
+        }
+    }
+}
+
+// ------------------------------------------------------------------- kernels
+
+/// `y = x @ (codebook[idx] · per_tile_scale)` — mirror of
+/// `python/compile/kernels/ref.py::halo_matmul`.
+pub fn run_halo_matmul(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    anyhow::ensure!(inputs.len() == 4, "halo_matmul takes (x, idx, codebook, scales)");
+    let (x, idx, cb, sc) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+    anyhow::ensure!(x.dims().len() == 2 && idx.dims().len() == 2 && sc.dims().len() == 2);
+    let (m, k) = (x.dims()[0], x.dims()[1]);
+    let (ki, n) = (idx.dims()[0], idx.dims()[1]);
+    let (kt, nt) = (sc.dims()[0], sc.dims()[1]);
+    anyhow::ensure!(k == ki, "x/idx inner dims disagree: {k} vs {ki}");
+    anyhow::ensure!(kt > 0 && k % kt == 0, "scales rows {kt} do not tile K={k}");
+    let tile = k / kt;
+    anyhow::ensure!(nt > 0 && n % nt == 0 && n / nt == tile, "non-square tiling");
+    let (xv, iv, cv, sv) = (x.as_f32()?, idx.as_i8()?, cb.as_f32()?, sc.as_f32()?);
+
+    let mut wd = Matrix::zeros(k, n);
+    for r in 0..k {
+        for c in 0..n {
+            let i = iv[r * n + c];
+            anyhow::ensure!(
+                i >= 0 && (i as usize) < cv.len(),
+                "codebook index {i} out of range {}",
+                cv.len()
+            );
+            wd.set(r, c, cv[i as usize] * sv[(r / tile) * nt + c / tile]);
+        }
+    }
+    let y = Matrix::from_vec(m, k, xv.to_vec()).matmul(&wd);
+    Ok(vec![Literal::f32(&y.data, &[m, n])?])
+}
+
+/// `y = x @ W_sparse` for (val, pos) hypersparse storage — mirror of
+/// `python/compile/kernels/ref.py::spmv`.
+pub fn run_spmv(out_dim: usize, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    anyhow::ensure!(inputs.len() == 3, "spmv takes (val, pos, x)");
+    let (val, pos, x) = (inputs[0], inputs[1], inputs[2]);
+    anyhow::ensure!(x.dims().len() == 2, "spmv x must be 2-D");
+    let (m, k) = (x.dims()[0], x.dims()[1]);
+    let (vv, pv, xv) = (val.as_f32()?, pos.as_i32()?, x.as_f32()?);
+    anyhow::ensure!(vv.len() == pv.len(), "val/pos length mismatch");
+
+    let mut y = Matrix::zeros(m, out_dim);
+    for (i, &v) in vv.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let p = pv[i];
+        anyhow::ensure!(p >= 0, "negative sparse position");
+        let (r, c) = (p as usize / out_dim, p as usize % out_dim);
+        anyhow::ensure!(r < k, "sparse position {p} outside ({k}, {out_dim})");
+        for mi in 0..m {
+            let add = xv[mi * k + r] * v;
+            y.set(mi, c, y.get(mi, c) + add);
+        }
+    }
+    Ok(vec![Literal::f32(&y.data, &[m, out_dim])?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sparse::SparseMatrix;
+    use crate::util::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        // Mirror model.py::param_specs for a 1-layer toy config.
+        let (v, d, ff, s) = (11usize, 8usize, 16usize, 6usize);
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut linear = Vec::new();
+        let mut push = |n: &str, sh: Vec<usize>, lin: bool| {
+            names.push(n.to_string());
+            shapes.push(sh);
+            linear.push(lin);
+        };
+        push("embed", vec![v, d], false);
+        push("pos_embed", vec![s, d], false);
+        push("layer0.ln1.scale", vec![d], false);
+        push("layer0.ln1.bias", vec![d], false);
+        push("layer0.attn.wq", vec![d, d], true);
+        push("layer0.attn.wk", vec![d, d], true);
+        push("layer0.attn.wv", vec![d, d], true);
+        push("layer0.attn.wo", vec![d, d], true);
+        push("layer0.ln2.scale", vec![d], false);
+        push("layer0.ln2.bias", vec![d], false);
+        push("layer0.mlp.w1", vec![d, ff], true);
+        push("layer0.mlp.b1", vec![ff], false);
+        push("layer0.mlp.w2", vec![ff, d], true);
+        push("layer0.mlp.b2", vec![d], false);
+        push("ln_f.scale", vec![d], false);
+        push("ln_f.bias", vec![d], false);
+        push("head", vec![d, v], true);
+        ModelSpec {
+            vocab: v,
+            d_model: d,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: ff,
+            seq_len: s,
+            names,
+            shapes,
+            linear,
+        }
+    }
+
+    fn tiny_inputs(spec: &ModelSpec, seed: u64) -> Vec<Literal> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut out = Vec::new();
+        for (name, shape) in spec.names.iter().zip(&spec.shapes) {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".scale") {
+                vec![1.0; n]
+            } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+                vec![0.0; n]
+            } else {
+                let std = 1.0 / (shape[0] as f32).sqrt();
+                (0..n).map(|_| rng.gen_normal() as f32 * std).collect()
+            };
+            out.push(Literal::f32(&data, shape).unwrap());
+        }
+        // Token batch (2, s+1).
+        let (b, s) = (2usize, spec.seq_len);
+        let toks: Vec<i32> = (0..b * (s + 1))
+            .map(|_| rng.gen_usize(spec.vocab) as i32)
+            .collect();
+        out.push(Literal::i32(&toks, &[b, s + 1]).unwrap());
+        out
+    }
+
+    fn refs(v: &[Literal]) -> Vec<&Literal> {
+        v.iter().collect()
+    }
+
+    #[test]
+    fn loss_is_finite_and_deterministic() {
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 1);
+        let a = model_loss(&spec, &refs(&inputs), false).unwrap();
+        let b = model_loss(&spec, &refs(&inputs), false).unwrap();
+        assert!(a.is_finite() && a > 0.0, "loss {a}");
+        assert_eq!(a, b);
+        // A near-untrained model sits near the uniform ceiling ln(vocab).
+        let ceiling = (spec.vocab as f32).ln();
+        assert!(a < 2.0 * ceiling, "loss {a} vs ceiling {ceiling}");
+    }
+
+    #[test]
+    fn a8_close_to_fp_but_not_identical() {
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 2);
+        let fp = model_loss(&spec, &refs(&inputs), false).unwrap();
+        let a8 = model_loss(&spec, &refs(&inputs), true).unwrap();
+        assert!((fp - a8).abs() / fp < 0.2, "fp {fp} vs a8 {a8}");
+        assert_ne!(fp, a8);
+    }
+
+    #[test]
+    fn grad_loss_matches_nll_graph() {
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 3);
+        let nll = model_loss(&spec, &refs(&inputs), false).unwrap();
+        let (loss, grads) = model_grads(&spec, &refs(&inputs)).unwrap();
+        assert_eq!(nll, loss);
+        assert_eq!(grads.len(), spec.linear.iter().filter(|&&l| l).count());
+        for (name, g) in &grads {
+            assert!(g.data.iter().any(|&x| x != 0.0), "{name} all-zero grad");
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Central differences on the largest-|grad| entry of every linear
+        // weight — the correctness anchor for the whole backward pass.
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 4);
+        let (_, grads) = model_grads(&spec, &refs(&inputs)).unwrap();
+        let eps = 1e-2f32;
+        for (name, g) in &grads {
+            let (argmax, &gv) = g
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .unwrap();
+            let pidx = spec.names.iter().position(|n| n == name).unwrap();
+            let loss_at = |delta: f32| {
+                let mut shifted = inputs.clone();
+                if let crate::runtime::backend::LiteralData::F32(v) = &mut shifted[pidx].data {
+                    v[argmax] += delta;
+                }
+                model_loss(&spec, &refs(&shifted), false).unwrap()
+            };
+            let fd = (loss_at(eps) - loss_at(-eps)) / (2.0 * eps);
+            let tol = 0.15 * fd.abs().max(gv.abs()) + 1e-4;
+            assert!(
+                (fd - gv).abs() <= tol,
+                "{name}[{argmax}]: analytic {gv} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn fwd_logits_consistent_with_nll() {
+        // Computing the NLL from the fwd graph's logits must equal the NLL
+        // graph's own output.
+        let spec = tiny_spec();
+        let mut inputs = tiny_inputs(&spec, 5);
+        let nll = model_loss(&spec, &refs(&inputs), false).unwrap();
+        // Re-shape the token literal to the (b, s) fwd layout.
+        let toks = inputs.pop().unwrap();
+        let (b, t) = (toks.dims()[0], toks.dims()[1]);
+        let (s, all) = (t - 1, toks.as_i32().unwrap().to_vec());
+        let (inp, tgt) = split_next_token(all, b, s);
+        inputs.push(Literal::i32(&inp, &[b, s]).unwrap());
+        let (logits, lb, ls) = model_forward(&spec, &refs(&inputs)).unwrap();
+        assert_eq!((lb, ls), (b, s));
+        let (from_logits, _) = nll_and_dlogits(&logits, &tgt).unwrap();
+        assert!((from_logits - nll).abs() < 1e-5, "{from_logits} vs {nll}");
+    }
+
+    #[test]
+    fn halo_matmul_matches_dense_oracle() {
+        let (m, k, n, tile) = (16usize, 32, 64, 16);
+        let mut rng = Rng::seed_from_u64(10);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.gen_normal() as f32).collect();
+        let idx: Vec<i8> = (0..k * n).map(|_| rng.gen_usize(16) as i8).collect();
+        let cb: Vec<f32> = (0..16).map(|_| rng.gen_normal() as f32).collect();
+        let sc: Vec<f32> = (0..(k / tile) * (n / tile))
+            .map(|_| 0.5 + rng.gen_f64() as f32)
+            .collect();
+        let lits = vec![
+            Literal::f32(&x, &[m, k]).unwrap(),
+            Literal::i8(&idx, &[k, n]).unwrap(),
+            Literal::f32(&cb, &[16]).unwrap(),
+            Literal::f32(&sc, &[k / tile, n / tile]).unwrap(),
+        ];
+        let out = run_halo_matmul(&refs(&lits)).unwrap();
+        let y: Vec<f32> = out[0].to_vec().unwrap();
+
+        let mut wd = Matrix::zeros(k, n);
+        for r in 0..k {
+            for c in 0..n {
+                let t = (r / tile) * (n / tile) + c / tile;
+                wd.set(r, c, cb[idx[r * n + c] as usize] * sc[t]);
+            }
+        }
+        let want = Matrix::from_vec(m, k, x).matmul(&wd);
+        for (a, b) in y.iter().zip(&want.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn spmv_matches_sparse_oracle() {
+        let (m, k, n) = (4usize, 24, 16);
+        let mut rng = Rng::seed_from_u64(11);
+        let mut used = std::collections::HashSet::new();
+        let coords: Vec<(usize, usize, f32)> = (0..40)
+            .filter_map(|_| {
+                let r = rng.gen_usize(k);
+                let c = rng.gen_usize(n);
+                used.insert((r, c)).then(|| (r, c, rng.gen_normal() as f32))
+            })
+            .collect();
+        let sp = SparseMatrix::from_coords(k, n, &coords);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.gen_normal() as f32).collect();
+        let pos_i32: Vec<i32> = sp.pos.iter().map(|&p| p as i32).collect();
+        let lits = vec![
+            Literal::f32(&sp.val, &[sp.val.len()]).unwrap(),
+            Literal::i32(&pos_i32, &[pos_i32.len()]).unwrap(),
+            Literal::f32(&x, &[m, k]).unwrap(),
+        ];
+        let out = run_spmv(n, &refs(&lits)).unwrap();
+        let y: Vec<f32> = out[0].to_vec().unwrap();
+        let want = sp.spmv(&Matrix::from_vec(m, k, x));
+        for (a, b) in y.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fake_quant_properties() {
+        let mut rng = Rng::seed_from_u64(12);
+        let x = Matrix::random_normal(8, 32, 1.0, &mut rng);
+        let q = fake_quant_rows(&x);
+        for r in 0..x.rows {
+            let amax = x.row(r).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let s = amax / 127.0;
+            for (a, b) in x.row(r).iter().zip(q.row(r)) {
+                assert!((a - b).abs() <= s / 2.0 + 1e-6, "{a} vs {b}");
+            }
+        }
+        // Zero rows stay exactly zero.
+        let z = fake_quant_rows(&Matrix::zeros(2, 4));
+        assert!(z.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn backend_load_and_run_via_files() {
+        // End-to-end through the Backend trait: a real artifact directory
+        // with config.json + (empty) hlo.txt markers.
+        let spec = tiny_spec();
+        let dir = std::env::temp_dir().join(format!("halo_sim_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut params_j = Vec::new();
+        for (i, name) in spec.names.iter().enumerate() {
+            let mut e = Json::obj();
+            e.set("name", name.as_str())
+                .set("shape", spec.shapes[i].iter().map(|&x| x as f64).collect::<Vec<f64>>())
+                .set("offset", 0usize)
+                .set("numel", spec.shapes[i].iter().product::<usize>())
+                .set("linear", spec.linear[i]);
+            params_j.push(e);
+        }
+        let mut cfg = Json::obj();
+        cfg.set("vocab", spec.vocab)
+            .set("d_model", spec.d_model)
+            .set("n_layers", spec.n_layers)
+            .set("n_heads", spec.n_heads)
+            .set("d_ff", spec.d_ff)
+            .set("seq_len", spec.seq_len);
+        let mut meta = Json::obj();
+        meta.set("config", cfg).set("params", Json::Arr(params_j));
+        std::fs::write(dir.join("config.json"), meta.to_string_pretty()).unwrap();
+        std::fs::write(dir.join("nll_fp.hlo.txt"), "(sim backend marker)").unwrap();
+
+        let backend = SimBackend;
+        let exe = backend.load(&dir.join("nll_fp.hlo.txt")).unwrap();
+        let inputs = tiny_inputs(&spec, 6);
+        let out = exe.run(&refs(&inputs)).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].get_first_element::<f32>().unwrap();
+        let want = model_loss(&spec, &refs(&inputs), false).unwrap();
+        assert_eq!(got, want);
+        // Missing artifacts must error (the skip-cleanly contract).
+        assert!(backend.load(&dir.join("grad.hlo.txt")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -430,4 +430,44 @@ mod tests {
         o.set("n", 42usize);
         assert_eq!(o.to_string_compact(), r#"{"n":42}"#);
     }
+
+    #[test]
+    fn string_escaping_roundtrip() {
+        // Every escape class the emitter produces must parse back exactly:
+        // quotes, backslashes, the named controls, and \uXXXX controls.
+        let nasty = "a\"b\\c\nd\re\tf\u{1}g\u{1f}h/ü—é";
+        let mut o = Json::obj();
+        o.set("s", nasty);
+        let emitted = o.to_string_compact();
+        assert!(emitted.contains("\\\"") && emitted.contains("\\\\"));
+        assert!(emitted.contains("\\n") && emitted.contains("\\u0001"));
+        let back = Json::parse(&emitted).unwrap();
+        assert_eq!(back.req("s").unwrap().as_str().unwrap(), nasty);
+        // Explicit \u escapes on the way in, too.
+        let v = Json::parse("\"x\\u0041\\u00e9y\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "xA\u{e9}y");
+    }
+
+    #[test]
+    fn nested_emit_pretty_and_compact() {
+        let mut inner = Json::obj();
+        inner
+            .set("freqs", vec![1.9f64, 2.4, 3.7])
+            .set("name", "ladder")
+            .set("derived", false);
+        let mut o = Json::obj();
+        o.set("meta", inner).set("count", 3usize).set("none", Json::Null);
+
+        let compact = o.to_string_compact();
+        assert!(!compact.contains('\n'));
+        let pretty = o.to_string_pretty();
+        assert!(pretty.lines().count() > 3, "pretty output should be multi-line");
+        // Both forms parse back to the same structure.
+        let a = Json::parse(&compact).unwrap();
+        let b = Json::parse(&pretty).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.path(&["meta", "name"]).unwrap().as_str().unwrap(), "ladder");
+        assert_eq!(a.path(&["meta", "freqs"]).unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(a.req("none").unwrap(), &Json::Null);
+    }
 }

@@ -166,6 +166,52 @@ mod tests {
     }
 
     #[test]
+    fn gen_usize_bounds_and_coverage() {
+        let mut r = Rng::seed_from_u64(7);
+        for n in [1usize, 2, 7, 100] {
+            let mut seen = vec![false; n];
+            for _ in 0..5_000 {
+                let x = r.gen_usize(n);
+                assert!(x < n, "gen_usize({n}) produced {x}");
+                seen[x] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "gen_usize({n}) missed a residue");
+        }
+        // n = 1 is always 0.
+        for _ in 0..100 {
+            assert_eq!(r.gen_usize(1), 0);
+        }
+    }
+
+    #[test]
+    fn seeded_determinism_across_all_generators() {
+        // Same seed → identical stream across every generator method;
+        // different seeds diverge immediately.
+        let mut a = Rng::seed_from_u64(99);
+        let mut b = Rng::seed_from_u64(99);
+        for _ in 0..200 {
+            assert_eq!(a.gen_usize(1000), b.gen_usize(1000));
+            assert_eq!(a.gen_f64(), b.gen_f64());
+            assert_eq!(a.gen_normal(), b.gen_normal());
+            assert_eq!(a.gen_bool(), b.gen_bool());
+            assert_eq!(a.gen_i8(), b.gen_i8());
+        }
+        let mut c = Rng::seed_from_u64(100);
+        let first: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let other: Vec<u64> = (0..4).map(|_| c.next_u64()).collect();
+        assert_ne!(first, other);
+    }
+
+    #[test]
+    fn choose_returns_member() {
+        let xs = [10, 20, 30];
+        let mut r = Rng::seed_from_u64(8);
+        for _ in 0..100 {
+            assert!(xs.contains(r.choose(&xs)));
+        }
+    }
+
+    #[test]
     fn shuffle_is_permutation() {
         let mut r = Rng::seed_from_u64(4);
         let mut v: Vec<u32> = (0..50).collect();

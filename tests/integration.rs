@@ -1,10 +1,11 @@
 //! Integration tests across the three layers: artifacts → runtime →
 //! quantizers → evaluation → coordinator. All tests that need artifacts
-//! skip cleanly when `make artifacts` has not run.
+//! skip cleanly when `make artifacts` has not run; they execute through
+//! whichever runtime backend the build selected (sim by default).
 
 use std::collections::BTreeMap;
 
-use halo::coordinator::server::PjrtExecutor;
+use halo::coordinator::server::GraphExecutor;
 use halo::coordinator::{BatcherConfig, Coordinator};
 use halo::dvfs::Schedule;
 use halo::mac::MacProfile;
@@ -122,9 +123,10 @@ fn halo_beats_rtn_w3_with_calibration() {
 }
 
 #[test]
-fn l1_kernel_matches_rust_oracle_through_pjrt() {
+fn l1_kernel_matches_rust_oracle_through_runtime() {
     // The three-layer agreement: the Pallas halo_matmul kernel (lowered to
-    // HLO, executed via PJRT) must equal the Rust dequant + matmul oracle.
+    // HLO, executed via the runtime backend) must equal the Rust dequant +
+    // matmul oracle.
     let store = need_artifacts!();
     let rt = Runtime::cpu().unwrap();
     let exe = match rt.load(&store.kernel_path("halo_matmul")) {
@@ -196,7 +198,7 @@ fn coordinator_serves_real_model_end_to_end() {
         let rt = Runtime::cpu()?;
         let store = Store::open(root)?;
         let model = store.model("tiny")?;
-        let exec = PjrtExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default())?;
+        let exec = GraphExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default())?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
     });
     let stream = store.corpus_eval("wikisyn").unwrap();
@@ -237,8 +239,8 @@ fn quantized_serving_prediction_quality_preserved() {
 
     use halo::coordinator::BatchExecutor;
     let rt2 = Runtime::cpu().unwrap();
-    let mut fp = PjrtExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default()).unwrap();
-    let mut hq = PjrtExecutor::new(rt2, &model, &replace, Schedule::default()).unwrap();
+    let mut fp = GraphExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default()).unwrap();
+    let mut hq = GraphExecutor::new(rt2, &model, &replace, Schedule::default()).unwrap();
     let stream = store.corpus_eval("wikisyn").unwrap();
     let prefixes: Vec<Vec<i32>> = (0..8)
         .map(|i| {

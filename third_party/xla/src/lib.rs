@@ -1,0 +1,166 @@
+//! API stub of the `xla` (xla_extension / PJRT bindings) crate.
+//!
+//! The offline build environment cannot fetch or build the real bindings,
+//! so this crate exposes exactly the API surface `halo`'s PJRT backend
+//! (`rust/src/runtime/xla.rs`) compiles against. The only reachable entry
+//! point, [`PjRtClient::cpu`], returns an error directing the user to
+//! vendor the real crate; every other body is therefore unreachable and
+//! panics if called directly.
+//!
+//! To enable real PJRT execution, replace this directory with the actual
+//! `xla` crate (elixir-nx xla_extension bindings) — the `halo` side needs
+//! no code changes beyond what its `xla` feature already gates.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB_MSG: &str =
+    "the bundled `xla` crate is an API stub; vendor the real xla/PJRT bindings at \
+     third_party/xla to enable the PJRT backend (see README.md)";
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of the XLA type system (subset used by halo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    S8,
+}
+
+/// Native Rust types a literal can be built from / read into.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+pub struct PjRtDevice(());
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The single reachable stub entry point: always errors, so no other
+    /// stub body can ever execute.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unreachable!("{STUB_MSG}")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("{STUB_MSG}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must not create a client");
+        assert!(err.to_string().contains("stub"));
+    }
+}
