@@ -4,12 +4,13 @@
 #   make artifacts-fast  tiny-only, few steps (CI smoke / quick iteration)
 #   make test            tier-1 verify: cargo build --release && cargo test -q
 #   make bench           run every harness-free benchmark
+#   make bench-json      hot-path bench → BENCH_PR2.json (perf trajectory)
 #   make fmt             rustfmt check (same as CI)
 
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench fmt clean
+.PHONY: artifacts artifacts-fast build test bench bench-json fmt clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -24,12 +25,18 @@ test:
 	cargo build --release && cargo test -q
 
 bench:
+	cargo bench --bench l1_hotpaths
 	cargo bench --bench fig8_exec_time
 	cargo bench --bench fig10_energy
 	cargo bench --bench fig11_tile_size
 	cargo bench --bench fig12_gpu_exec
 	cargo bench --bench fig13_gpu_energy
 	cargo bench --bench l3_coordinator
+
+# Machine-readable hot-path numbers (MacProfile::compute, 64-lane vs
+# scalar netlist eval, blocked vs naive matmul, SimBackend forward).
+bench-json:
+	cargo bench --bench l1_hotpaths -- --json BENCH_PR2.json
 
 fmt:
 	cargo fmt --check

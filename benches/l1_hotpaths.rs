@@ -1,0 +1,280 @@
+//! Bench: the two L1/L3 compute hot paths rebuilt in PR 2 — gate-level
+//! MAC profiling (bit-sliced + parallel vs the seed scalar loop) and the
+//! `SimBackend` matmul/forward kernels (blocked + parallel vs naive).
+//!
+//! Run: `cargo bench --bench l1_hotpaths [-- --smoke] [-- --json FILE]`
+//!
+//! `--smoke` shrinks every workload to a CI-sized single iteration;
+//! `--json FILE` writes the measured numbers (used by `make bench-json`,
+//! which produces `BENCH_PR2.json` so the perf trajectory accumulates).
+
+use std::time::{Duration, Instant};
+
+use halo::mac::profile::{MacProfile, DEFAULT_SAMPLES};
+use halo::mac::{dynsim, mac8, sta};
+use halo::quant::Matrix;
+use halo::runtime::backend::Literal;
+use halo::runtime::kernels::{self, naive};
+use halo::runtime::sim::{model_loss, ModelSpec};
+use halo::util::bench::{bench_n, fmt_dur};
+use halo::util::{parallel, Json, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut report = Json::obj();
+    report.set("bench", "l1_hotpaths").set("smoke", smoke);
+
+    bench_profile(smoke, &mut report);
+    bench_netlist_eval(smoke, &mut report);
+    bench_matmul(smoke, &mut report);
+    bench_forward(smoke, &mut report);
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_string_pretty()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}
+
+/// MacProfile::compute: pre-PR serial scalar loop vs the bit-sliced +
+/// parallel rebuild (plus the disk-cache hit path).
+fn bench_profile(smoke: bool, report: &mut Json) {
+    println!("=== MacProfile::compute (cold) ===");
+    let samples = if smoke { 32 } else { DEFAULT_SAMPLES };
+    let seed = 0x4A10u64;
+    let (net, ports) = mac8::build();
+
+    // Pre-PR baseline: the seed implementation was a serial scalar loop
+    // over all 256 weights. Measure a subset and scale linearly (per-weight
+    // cost is near-uniform).
+    let scalar_weights: Vec<i8> = if smoke {
+        vec![0, 64, -127]
+    } else {
+        (i8::MIN..=i8::MAX).step_by(8).collect() // 32 of 256
+    };
+    let t0 = Instant::now();
+    for &w in &scalar_weights {
+        std::hint::black_box(dynsim::weight_stats_scalar(&net, &ports, w, samples, seed));
+        std::hint::black_box(sta::weight_delay(&net, &ports, w));
+    }
+    let scalar_est = t0.elapsed().as_secs_f64() * (256.0 / scalar_weights.len() as f64);
+
+    let t0 = Instant::now();
+    let prof = MacProfile::compute(samples, seed);
+    let new_s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&prof);
+
+    // Disk-cache round trip (hit path = load + validate only).
+    let dir = std::env::temp_dir().join(format!("halo_bench_profile_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    MacProfile::cached_or_compute_in(&dir, samples, seed);
+    let t0 = Instant::now();
+    MacProfile::cached_or_compute_in(&dir, samples, seed);
+    let hit_s = t0.elapsed().as_secs_f64();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let speedup = scalar_est / new_s.max(1e-12);
+    println!(
+        "profile/compute ({samples} samples/weight): {} \
+         (pre-PR scalar est {}, speedup {speedup:.1}x; cache hit {})",
+        fmt_dur(Duration::from_secs_f64(new_s)),
+        fmt_dur(Duration::from_secs_f64(scalar_est)),
+        fmt_dur(Duration::from_secs_f64(hit_s)),
+    );
+    let mut j = Json::obj();
+    j.set("samples", samples)
+        .set("scalar_est_s", scalar_est)
+        .set("bitsliced_parallel_s", new_s)
+        .set("speedup", speedup)
+        .set("cache_hit_s", hit_s);
+    report.set("mac_profile_compute", j);
+}
+
+/// Raw netlist evaluation throughput: 64 scalar passes vs one bit-sliced
+/// pass over the same 64 assignments.
+fn bench_netlist_eval(smoke: bool, report: &mut Json) {
+    println!("\n=== netlist eval: 64 scalar passes vs one 64-lane pass ===");
+    let (net, ports) = mac8::build();
+    let mut rng = Rng::seed_from_u64(1);
+    let xs: Vec<(i8, i32)> = (0..64)
+        .map(|_| (rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32))
+        .collect();
+    let w = -77i8;
+    let iters = if smoke { 1 } else { 400 };
+
+    let mut vals = vec![false; net.len()];
+    let scalar = bench_n("netlist_eval/scalar_x64", iters, || {
+        for &(a, acc) in &xs {
+            mac8::set_inputs(&ports, &mut vals, w, a, acc);
+            net.eval_into(&mut vals);
+            std::hint::black_box(net.read_outputs(&vals));
+        }
+    });
+    println!("{}", scalar.report());
+
+    let mut words = vec![0u64; net.len()];
+    let sliced = bench_n("netlist_eval/bitsliced_x64", iters, || {
+        mac8::set_inputs64(&ports, &mut words, w, &xs);
+        net.eval64_into(&mut words);
+        std::hint::black_box(net.read_outputs_lane(&words, 63));
+    });
+    println!("{}", sliced.report());
+
+    let speedup = scalar.mean_s() / sliced.mean_s().max(1e-12);
+    println!("speedup: {speedup:.1}x");
+    let mut j = Json::obj();
+    j.set("scalar_x64_s", scalar.mean_s())
+        .set("bitsliced_s", sliced.mean_s())
+        .set("speedup", speedup);
+    report.set("netlist_eval", j);
+}
+
+/// Blocked matmul kernels vs the seed naive implementations.
+fn bench_matmul(smoke: bool, report: &mut Json) {
+    println!("\n=== matmul kernels: blocked+parallel vs naive ===");
+    let (m, k, n) = if smoke { (16, 24, 20) } else { (256, 512, 512) };
+    let iters = if smoke { 1 } else { 8 };
+    let mut rng = Rng::seed_from_u64(2);
+    let a = Matrix::random_normal(m, k, 1.0, &mut rng);
+    let b = Matrix::random_normal(k, n, 1.0, &mut rng);
+    let at = Matrix::random_normal(k, m, 1.0, &mut rng);
+    let bt = Matrix::random_normal(n, k, 1.0, &mut rng);
+
+    let mut j = Json::obj();
+    j.set("shape_mkn", Json::Arr(vec![(m as f64).into(), (k as f64).into(), (n as f64).into()]));
+    let run = |label: &str, f_new: &dyn Fn() -> Matrix, f_old: &dyn Fn() -> Matrix| {
+        let old = bench_n(&format!("matmul/{label}/naive"), iters, || {
+            std::hint::black_box(f_old());
+        });
+        let new = bench_n(&format!("matmul/{label}/blocked"), iters, || {
+            std::hint::black_box(f_new());
+        });
+        println!("{}", old.report());
+        println!("{}", new.report());
+        let speedup = old.mean_s() / new.mean_s().max(1e-12);
+        println!("speedup: {speedup:.1}x");
+        let mut e = Json::obj();
+        e.set("naive_s", old.mean_s())
+            .set("blocked_s", new.mean_s())
+            .set("speedup", speedup);
+        e
+    };
+    let nn = run("nn", &|| kernels::matmul(&a, &b), &|| naive::matmul(&a, &b));
+    j.set("nn", nn);
+    let tn = run("tn", &|| kernels::matmul_tn(&at, &b), &|| naive::matmul_tn(&at, &b));
+    j.set("tn", tn);
+    let nt = run("nt", &|| kernels::matmul_nt(&a, &bt), &|| naive::matmul_nt(&a, &bt));
+    j.set("nt", nt);
+    report.set("matmul", j);
+}
+
+/// End-to-end `SimBackend` forward pass (NLL graph) — pre-PR configuration
+/// (naive kernels, single thread) vs the rebuilt path.
+fn bench_forward(smoke: bool, report: &mut Json) {
+    println!("\n=== SimBackend forward pass (nll graph) ===");
+    let spec = bench_spec(smoke);
+    let inputs = bench_inputs(&spec, 3);
+    let refs: Vec<&Literal> = inputs.iter().collect();
+    let iters = if smoke { 1 } else { 5 };
+
+    kernels::set_force_naive(true);
+    parallel::set_max_threads(1);
+    let old = bench_n("forward/pre_pr(naive,1thread)", iters, || {
+        std::hint::black_box(model_loss(&spec, &refs, false).unwrap());
+    });
+    kernels::set_force_naive(false);
+    parallel::set_max_threads(0);
+    println!("{}", old.report());
+
+    let new = bench_n("forward/blocked_parallel", iters, || {
+        std::hint::black_box(model_loss(&spec, &refs, false).unwrap());
+    });
+    println!("{}", new.report());
+
+    let speedup = old.mean_s() / new.mean_s().max(1e-12);
+    println!("speedup: {speedup:.1}x");
+    let mut j = Json::obj();
+    j.set("d_model", spec.d_model)
+        .set("n_layers", spec.n_layers)
+        .set("seq_len", spec.seq_len)
+        .set("naive_serial_s", old.mean_s())
+        .set("blocked_parallel_s", new.mean_s())
+        .set("speedup", speedup);
+    report.set("forward_pass", j);
+}
+
+/// Synthetic model spec for the forward bench (bigger than the unit-test
+/// tiny model so the kernels see realistic GEMM shapes).
+fn bench_spec(smoke: bool) -> ModelSpec {
+    let (v, d, ff, s, layers, heads) = if smoke {
+        (64usize, 32usize, 64usize, 8usize, 1usize, 2usize)
+    } else {
+        (512, 256, 1024, 64, 2, 4)
+    };
+    let mut names = Vec::new();
+    let mut shapes = Vec::new();
+    let mut linear = Vec::new();
+    let mut push = |n: String, sh: Vec<usize>, lin: bool| {
+        names.push(n);
+        shapes.push(sh);
+        linear.push(lin);
+    };
+    push("embed".into(), vec![v, d], false);
+    push("pos_embed".into(), vec![s, d], false);
+    for l in 0..layers {
+        push(format!("layer{l}.ln1.scale"), vec![d], false);
+        push(format!("layer{l}.ln1.bias"), vec![d], false);
+        push(format!("layer{l}.attn.wq"), vec![d, d], true);
+        push(format!("layer{l}.attn.wk"), vec![d, d], true);
+        push(format!("layer{l}.attn.wv"), vec![d, d], true);
+        push(format!("layer{l}.attn.wo"), vec![d, d], true);
+        push(format!("layer{l}.ln2.scale"), vec![d], false);
+        push(format!("layer{l}.ln2.bias"), vec![d], false);
+        push(format!("layer{l}.mlp.w1"), vec![d, ff], true);
+        push(format!("layer{l}.mlp.b1"), vec![ff], false);
+        push(format!("layer{l}.mlp.w2"), vec![ff, d], true);
+        push(format!("layer{l}.mlp.b2"), vec![d], false);
+    }
+    push("ln_f.scale".into(), vec![d], false);
+    push("ln_f.bias".into(), vec![d], false);
+    push("head".into(), vec![d, v], true);
+    ModelSpec {
+        vocab: v,
+        d_model: d,
+        n_layers: layers,
+        n_heads: heads,
+        d_ff: ff,
+        seq_len: s,
+        names,
+        shapes,
+        linear,
+    }
+}
+
+fn bench_inputs(spec: &ModelSpec, seed: u64) -> Vec<Literal> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::new();
+    for (name, shape) in spec.names.iter().zip(&spec.shapes) {
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; numel]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; numel]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..numel).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        out.push(Literal::f32(&data, shape).unwrap());
+    }
+    let (b, s) = (2usize, spec.seq_len);
+    let toks: Vec<i32> = (0..b * (s + 1))
+        .map(|_| rng.gen_usize(spec.vocab) as i32)
+        .collect();
+    out.push(Literal::i32(&toks, &[b, s + 1]).unwrap());
+    out
+}

@@ -10,6 +10,23 @@
 //! value is unchanged contributes no event). This underestimates switching
 //! power uniformly but preserves the per-weight ordering, which is what the
 //! quantizer consumes.
+//!
+//! Two engines share those semantics:
+//!
+//! - [`DynSim`] — the scalar reference: one transition per netlist pass,
+//!   allocation-free (double-buffered value vectors).
+//! - [`DynSim64`] — the bit-sliced hot path: lane `l` of every `u64` node
+//!   word carries an independent input state, so one topological pass
+//!   evaluates 64 transitions. Toggle counts accumulate in vertical
+//!   (bit-transposed) counters; per-lane settle times are only written —
+//!   and only read — for `(node, lane)` pairs whose value actually
+//!   changed, keeping settle bookkeeping proportional to real switching
+//!   activity instead of lanes × gates.
+//!
+//! The sampling entry points ([`weight_stats`], [`settle_histogram`]) run
+//! bit-sliced; [`weight_stats_scalar`] keeps the scalar path alive as the
+//! equivalence oracle (both produce identical per-transition results from
+//! the same RNG stream — see the tests below and `tests/hotpaths.rs`).
 
 use crate::util::Rng;
 
@@ -17,7 +34,7 @@ use super::gate::{Gate, Netlist};
 use super::mac8::{self, MacPorts};
 
 /// Result of one input transition.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Transition {
     /// Settle time in pre-calibration delay units.
     pub settle: u32,
@@ -25,12 +42,14 @@ pub struct Transition {
     pub toggles: u32,
 }
 
-/// Reusable simulator state for one netlist + fixed weight.
+/// Reusable scalar simulator state for one netlist + fixed weight.
 pub struct DynSim<'a> {
     net: &'a Netlist,
     ports: &'a MacPorts,
     w: i8,
     vals: Vec<bool>,
+    /// previous stable state (double buffer — no per-step allocation)
+    prev: Vec<bool>,
     /// scratch: settle time per node for the current transition
     settle: Vec<u32>,
 }
@@ -40,15 +59,26 @@ impl<'a> DynSim<'a> {
         let mut vals = vec![false; net.len()];
         mac8::set_inputs(ports, &mut vals, w, a0, acc0);
         net.eval_into(&mut vals);
-        Self { net, ports, w, vals, settle: vec![0; net.len()] }
+        let prev = vals.clone();
+        Self { net, ports, w, vals, prev, settle: vec![0; net.len()] }
+    }
+
+    /// Current stable node values (outputs readable via
+    /// [`Netlist::read_outputs`]).
+    pub fn values(&self) -> &[bool] {
+        &self.vals
     }
 
     /// Apply a transition to new (a, acc); weight stays constant.
     pub fn step(&mut self, a: i8, acc: i32) -> Transition {
-        let old = std::mem::take(&mut self.vals);
-        let mut new = old.clone();
-        mac8::set_inputs(self.ports, &mut new, self.w, a, acc);
+        // Swap buffers: `prev` becomes the old stable state, `vals` is
+        // rebuilt in place from it (no allocation).
+        std::mem::swap(&mut self.vals, &mut self.prev);
+        self.vals.copy_from_slice(&self.prev);
+        mac8::set_inputs(self.ports, &mut self.vals, self.w, a, acc);
 
+        let old = &self.prev;
+        let new = &mut self.vals;
         let settle = &mut self.settle;
         let mut toggles = 0u32;
         for (i, g) in self.net.gates.iter().enumerate() {
@@ -82,20 +112,162 @@ impl<'a> DynSim<'a> {
             .map(|&o| settle[o as usize])
             .max()
             .unwrap_or(0);
-        self.vals = new;
         Transition { settle: out_settle, toggles }
     }
 }
 
+/// 64-lane bit-sliced transition simulator for one netlist + fixed weight.
+///
+/// Each `(a, acc)` pair fully determines the circuit state (the netlist is
+/// combinational), so an arbitrary transition *chain* can be packed into
+/// lanes: pass `states[t..t+n]` as `from` and `states[t+1..t+1+n]` as `to`
+/// and lane `l` reproduces scalar step `t + l` exactly.
+pub struct DynSim64<'a> {
+    net: &'a Netlist,
+    ports: &'a MacPorts,
+    w: i8,
+    old: Vec<u64>,
+    new: Vec<u64>,
+    /// per-node toggle mask of the current batch (old ^ new)
+    diff: Vec<u64>,
+    /// settle[node * 64 + lane]; valid only where `diff[node]` has the
+    /// lane bit set (reads are guarded, so stale entries are never seen)
+    settle: Vec<u32>,
+}
+
+impl<'a> DynSim64<'a> {
+    pub fn new(net: &'a Netlist, ports: &'a MacPorts, w: i8) -> Self {
+        assert!(net.len() < (1 << 16), "toggle counters assume < 65536 gates");
+        Self {
+            net,
+            ports,
+            w,
+            old: vec![0; net.len()],
+            new: vec![0; net.len()],
+            diff: vec![0; net.len()],
+            settle: vec![0; net.len() * 64],
+        }
+    }
+
+    /// Simulate one batch of transitions: lane `l` goes from input state
+    /// `from[l]` to `to[l]`. Writes one [`Transition`] per lane into `out`
+    /// (`from`, `to` and `out` must have equal length ≤ 64).
+    pub fn run_batch(&mut self, from: &[(i8, i32)], to: &[(i8, i32)], out: &mut [Transition]) {
+        let lanes = from.len();
+        assert!(lanes == to.len() && lanes == out.len() && lanes <= 64);
+        if lanes == 0 {
+            return;
+        }
+        mac8::set_inputs64(self.ports, &mut self.old, self.w, from);
+        self.net.eval64_into(&mut self.old);
+        mac8::set_inputs64(self.ports, &mut self.new, self.w, to);
+
+        // Fused pass: evaluate the new state, diff against the old one,
+        // count toggles and propagate settle times — all 64 lanes at once.
+        let new = &mut self.new;
+        let old = &self.old;
+        let diff = &mut self.diff;
+        let settle = &mut self.settle;
+        // Vertical per-lane toggle counters: plane `p` holds bit `p` of
+        // every lane's running count (16 planes cover the gate-count bound
+        // asserted in `new`).
+        let mut planes = [0u64; 16];
+        for (i, g) in self.net.gates.iter().enumerate() {
+            let v = match *g {
+                Gate::Input => new[i],
+                Gate::Const(c) => {
+                    if c {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                Gate::Not(x) => !new[x as usize],
+                Gate::And(x, y) => new[x as usize] & new[y as usize],
+                Gate::Or(x, y) => new[x as usize] | new[y as usize],
+                Gate::Xor(x, y) => new[x as usize] ^ new[y as usize],
+            };
+            new[i] = v;
+            let d = v ^ old[i];
+            diff[i] = d;
+            if d == 0 {
+                continue;
+            }
+            // toggle_count[lane] += 1 for every set lane bit: ripple-carry
+            // add of `d` into the bit-transposed counters.
+            let mut carry = d;
+            for p in planes.iter_mut() {
+                let t = *p & carry;
+                *p ^= carry;
+                carry = t;
+                if carry == 0 {
+                    break;
+                }
+            }
+            // Same settle recurrence as `DynSim::step`, applied only to
+            // the lanes that actually toggled.
+            let delay = g.delay();
+            let mut m = d;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let mut latest = 0u32;
+                for j in g.inputs() {
+                    let j = j as usize;
+                    if (diff[j] >> l) & 1 != 0 {
+                        latest = latest.max(settle[j * 64 + l]);
+                    }
+                }
+                settle[i * 64 + l] = latest + delay;
+            }
+        }
+
+        for (l, t) in out.iter_mut().enumerate() {
+            let mut s = 0u32;
+            for &o in &self.net.outputs {
+                let o = o as usize;
+                if (diff[o] >> l) & 1 != 0 {
+                    s = s.max(settle[o * 64 + l]);
+                }
+            }
+            let mut toggles = 0u32;
+            for (p, &plane) in planes.iter().enumerate() {
+                toggles |= (((plane >> l) & 1) as u32) << p;
+            }
+            *t = Transition { settle: s, toggles };
+        }
+    }
+}
+
 /// Per-weight transition statistics over `samples` random transitions.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WeightStats {
     pub max_settle: u32,
     pub mean_settle: f64,
     pub mean_toggles: f64,
 }
 
-/// Sample random (a, acc) transitions for a fixed weight.
+/// The shared input-state stream: the exact RNG call sequence of the seed
+/// scalar implementation (initial state, then one `(a, acc)` per sample),
+/// so scalar and bit-sliced engines replay identical transitions.
+fn sample_states(rng: &mut Rng, samples: usize, random_acc0: bool) -> Vec<(i8, i32)> {
+    let mut states = Vec::with_capacity(samples + 1);
+    let a0 = rng.gen_i8();
+    let acc0 = if random_acc0 {
+        rng.gen_range_i64(-0x400000, 0x400000) as i32
+    } else {
+        0
+    };
+    states.push((a0, acc0));
+    for _ in 0..samples {
+        states.push((rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32));
+    }
+    states
+}
+
+/// Sample random (a, acc) transitions for a fixed weight — bit-sliced:
+/// 64 transitions per pair of netlist passes. Produces results identical
+/// to [`weight_stats_scalar`].
 pub fn weight_stats(
     net: &Netlist,
     ports: &MacPorts,
@@ -104,7 +276,47 @@ pub fn weight_stats(
     seed: u64,
 ) -> WeightStats {
     let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
-    let mut sim = DynSim::new(net, ports, w, rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
+    let states = sample_states(&mut rng, samples, true);
+
+    let mut sim = DynSim64::new(net, ports, w);
+    let mut batch = [Transition::default(); 64];
+    let mut max_settle = 0u32;
+    let (mut sum_settle, mut sum_toggles) = (0u64, 0u64);
+    let mut t = 0usize;
+    while t < samples {
+        let n = (samples - t).min(64);
+        sim.run_batch(&states[t..t + n], &states[t + 1..t + 1 + n], &mut batch[..n]);
+        for tr in &batch[..n] {
+            max_settle = max_settle.max(tr.settle);
+            sum_settle += tr.settle as u64;
+            sum_toggles += tr.toggles as u64;
+        }
+        t += n;
+    }
+    WeightStats {
+        max_settle,
+        mean_settle: sum_settle as f64 / samples as f64,
+        mean_toggles: sum_toggles as f64 / samples as f64,
+    }
+}
+
+/// The seed scalar implementation of [`weight_stats`] — kept as the
+/// equivalence oracle and the pre-PR baseline for `benches/l1_hotpaths.rs`.
+pub fn weight_stats_scalar(
+    net: &Netlist,
+    ports: &MacPorts,
+    w: i8,
+    samples: usize,
+    seed: u64,
+) -> WeightStats {
+    let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
+    let mut sim = DynSim::new(
+        net,
+        ports,
+        w,
+        rng.gen_i8(),
+        rng.gen_range_i64(-0x400000, 0x400000) as i32,
+    );
     let mut max_settle = 0u32;
     let (mut sum_settle, mut sum_toggles) = (0u64, 0u64);
     for _ in 0..samples {
@@ -120,7 +332,9 @@ pub fn weight_stats(
     }
 }
 
-/// Settle-time histogram for Fig. 3: (settle units → count).
+/// Settle-time histogram for Fig. 3: (settle units → count). Bit-sliced;
+/// replays the seed implementation's exact transition stream (initial
+/// accumulator pinned to 0).
 pub fn settle_histogram(
     net: &Netlist,
     ports: &MacPorts,
@@ -129,11 +343,19 @@ pub fn settle_histogram(
     seed: u64,
 ) -> Vec<(u32, u32)> {
     let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
-    let mut sim = DynSim::new(net, ports, w, rng.gen_i8(), 0);
+    let states = sample_states(&mut rng, samples, false);
+
+    let mut sim = DynSim64::new(net, ports, w);
+    let mut batch = [Transition::default(); 64];
     let mut counts = std::collections::BTreeMap::new();
-    for _ in 0..samples {
-        let t = sim.step(rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
-        *counts.entry(t.settle).or_insert(0u32) += 1;
+    let mut t = 0usize;
+    while t < samples {
+        let n = (samples - t).min(64);
+        sim.run_batch(&states[t..t + n], &states[t + 1..t + 1 + n], &mut batch[..n]);
+        for tr in &batch[..n] {
+            *counts.entry(tr.settle).or_insert(0u32) += 1;
+        }
+        t += n;
     }
     counts.into_iter().collect()
 }
@@ -151,7 +373,7 @@ mod tests {
         let mut sim = DynSim::new(&net, &ports, w, 3, 100);
         for (a, acc) in [(7i8, -5i32), (-128, 0), (127, 0x1234), (0, -1)] {
             sim.step(a, acc);
-            assert_eq!(net.read_outputs(&sim.vals) as u32, mac8::mac_ref(w, a, acc));
+            assert_eq!(net.read_outputs(sim.values()) as u32, mac8::mac_ref(w, a, acc));
         }
     }
 
@@ -181,7 +403,45 @@ mod tests {
     }
 
     #[test]
-    fn fast_weight_lower_power(){
+    fn bitsliced_matches_scalar_per_transition() {
+        // Lane l of a batch must reproduce scalar step t + l exactly.
+        let (net, ports) = mac8::build();
+        let mut rng = crate::util::Rng::seed_from_u64(0x5EED);
+        for &w in &[0i8, 64, -127, 37] {
+            let states: Vec<(i8, i32)> = (0..100)
+                .map(|_| (rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32))
+                .collect();
+            let mut scalar = DynSim::new(&net, &ports, w, states[0].0, states[0].1);
+            let want: Vec<Transition> =
+                states[1..].iter().map(|&(a, acc)| scalar.step(a, acc)).collect();
+
+            let mut sim = DynSim64::new(&net, &ports, w);
+            let mut got = vec![Transition::default(); states.len() - 1];
+            let samples = states.len() - 1;
+            let mut t = 0usize;
+            while t < samples {
+                let n = (samples - t).min(64);
+                sim.run_batch(&states[t..t + n], &states[t + 1..t + 1 + n], &mut got[t..t + n]);
+                t += n;
+            }
+            assert_eq!(got, want, "w={w}");
+        }
+    }
+
+    #[test]
+    fn bitsliced_weight_stats_match_scalar() {
+        let (net, ports) = mac8::build();
+        for &w in &[0i8, 1, 64, -127, 85] {
+            for &samples in &[1usize, 63, 64, 65, 130] {
+                let a = weight_stats(&net, &ports, w, samples, 7);
+                let b = weight_stats_scalar(&net, &ports, w, samples, 7);
+                assert_eq!(a, b, "w={w} samples={samples}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_weight_lower_power() {
         let (net, ports) = mac8::build();
         let fast = weight_stats(&net, &ports, 64, 400, 7);
         let slow = weight_stats(&net, &ports, -127, 400, 7);

@@ -96,6 +96,76 @@ impl Netlist {
         }
         out
     }
+
+    /// Bit-sliced evaluation: 64 independent input assignments at once,
+    /// one per bit lane of every `u64` word (classic bit-parallel logic
+    /// simulation — each gate becomes one bitwise op over all lanes).
+    ///
+    /// `values` must be pre-sized to `gates.len()` with the input-node
+    /// words already set (lane `l` of word `i` = input `i` of assignment
+    /// `l`); all other entries are overwritten in topological order.
+    pub fn eval64_into(&self, values: &mut [u64]) {
+        debug_assert_eq!(values.len(), self.gates.len());
+        for (i, g) in self.gates.iter().enumerate() {
+            let v = match *g {
+                Gate::Input => values[i],
+                Gate::Const(c) => {
+                    if c {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                Gate::Not(a) => !values[a as usize],
+                Gate::And(a, b) => values[a as usize] & values[b as usize],
+                Gate::Or(a, b) => values[a as usize] | values[b as usize],
+                Gate::Xor(a, b) => values[a as usize] ^ values[b as usize],
+            };
+            values[i] = v;
+        }
+    }
+
+    /// Read one lane's output bits from a 64-lane evaluated value vector.
+    pub fn read_outputs_lane(&self, values: &[u64], lane: usize) -> u64 {
+        debug_assert!(lane < 64);
+        let mut out = 0u64;
+        for (k, &o) in self.outputs.iter().enumerate() {
+            out |= ((values[o as usize] >> lane) & 1) << k;
+        }
+        out
+    }
+
+    /// Structural FNV-1a hash over gates + outputs — the cache key for
+    /// artifacts derived from this netlist (e.g. the on-disk MAC profile).
+    pub fn structural_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            for shift in [0u32, 16, 32, 48] {
+                h ^= (x >> shift) & 0xffff;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for g in &self.gates {
+            let (tag, a, b) = match *g {
+                Gate::Input => (1u64, 0u64, 0u64),
+                Gate::Const(c) => (2, c as u64, 0),
+                Gate::Not(x) => (3, x as u64, 0),
+                Gate::And(x, y) => (4, x as u64, y as u64),
+                Gate::Or(x, y) => (5, x as u64, y as u64),
+                Gate::Xor(x, y) => (6, x as u64, y as u64),
+            };
+            mix(tag);
+            mix(a);
+            mix(b);
+        }
+        mix(0xffff_ffff);
+        for &o in &self.outputs {
+            mix(o as u64);
+        }
+        h
+    }
 }
 
 /// Builder with tiny peephole constant folding — keeps the netlist close to
@@ -248,6 +318,43 @@ mod tests {
             net.eval_into(&mut vals);
             assert_eq!(net.read_outputs(&vals) != 0, if sel { a } else { b });
         }
+    }
+
+    #[test]
+    fn eval64_matches_scalar_full_adder() {
+        // All 8 input combinations live in 8 lanes of one bit-sliced pass.
+        let mut nb = NetBuilder::new();
+        let (ia, ib, ic) = (nb.input(), nb.input(), nb.input());
+        let (s, cy) = nb.full_adder(ia, ib, ic);
+        let net = nb.finish(vec![s, cy]);
+
+        let mut words = vec![0u64; net.len()];
+        for lane in 0..8u64 {
+            words[ia as usize] |= (lane & 1) << lane;
+            words[ib as usize] |= ((lane >> 1) & 1) << lane;
+            words[ic as usize] |= ((lane >> 2) & 1) << lane;
+        }
+        net.eval64_into(&mut words);
+        for lane in 0..8usize {
+            let want = (lane & 1) as u64 + ((lane >> 1) & 1) as u64 + ((lane >> 2) & 1) as u64;
+            assert_eq!(net.read_outputs_lane(&words, lane), want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn structural_hash_distinguishes_netlists() {
+        let build = |flip: bool| {
+            let mut nb = NetBuilder::new();
+            let a = nb.input();
+            let b = nb.input();
+            let g = if flip { nb.and(a, b) } else { nb.or(a, b) };
+            nb.finish(vec![g])
+        };
+        let h1 = build(false).structural_hash();
+        let h2 = build(true).structural_hash();
+        let h1b = build(false).structural_hash();
+        assert_eq!(h1, h1b, "hash must be deterministic");
+        assert_ne!(h1, h2, "different gates must hash differently");
     }
 
     #[test]

@@ -85,6 +85,31 @@ pub fn set_inputs(ports: &MacPorts, vals: &mut [bool], w: i8, a: i8, acc: i32) {
     }
 }
 
+/// Assign the three ports across 64 bit-sliced lanes: lane `l` of every
+/// input word carries `xs[l]`'s bits (`xs[l] = (a, acc)`); the weight is
+/// broadcast to all lanes. Lanes ≥ `xs.len()` are zero-filled — callers
+/// must ignore their outputs.
+pub fn set_inputs64(ports: &MacPorts, vals: &mut [u64], w: i8, xs: &[(i8, i32)]) {
+    debug_assert!(xs.len() <= 64);
+    for (i, &n) in ports.w.iter().enumerate() {
+        vals[n as usize] = if (w as u8 >> i) & 1 != 0 { u64::MAX } else { 0 };
+    }
+    for (i, &n) in ports.a.iter().enumerate() {
+        let mut word = 0u64;
+        for (l, &(a, _)) in xs.iter().enumerate() {
+            word |= (((a as u8 >> i) & 1) as u64) << l;
+        }
+        vals[n as usize] = word;
+    }
+    for (i, &n) in ports.acc.iter().enumerate() {
+        let mut word = 0u64;
+        for (l, &(_, acc)) in xs.iter().enumerate() {
+            word |= (((acc as u32 >> i) & 1) as u64) << l;
+        }
+        vals[n as usize] = word;
+    }
+}
+
 /// Evaluate the netlist functionally (testing / dynamic sim setup).
 pub fn eval(net: &Netlist, ports: &MacPorts, w: i8, a: i8, acc: i32) -> u32 {
     let mut vals = vec![false; net.len()];
@@ -138,6 +163,28 @@ mod tests {
             for a in (i16::from(i8::MIN)..=i16::from(i8::MAX)).step_by(7) {
                 let a = a as i8;
                 assert_eq!(eval(&net, &ports, w, a, 0), mac_ref(w, a, 0), "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitsliced_eval_matches_reference() {
+        // 64 random MACs in one bit-parallel pass.
+        let (net, ports) = build();
+        let mut rng = crate::util::Rng::seed_from_u64(0xB17);
+        let xs: Vec<(i8, i32)> = (0..64)
+            .map(|_| (rng.gen_i8(), rng.gen_range_i64(-0x800000, 0x800000) as i32))
+            .collect();
+        for &w in &[0i8, 1, 64, -127, 85, -86] {
+            let mut words = vec![0u64; net.len()];
+            set_inputs64(&ports, &mut words, w, &xs);
+            net.eval64_into(&mut words);
+            for (l, &(a, acc)) in xs.iter().enumerate() {
+                assert_eq!(
+                    net.read_outputs_lane(&words, l) as u32,
+                    mac_ref(w, a, acc),
+                    "w={w} lane={l} a={a} acc={acc}"
+                );
             }
         }
     }

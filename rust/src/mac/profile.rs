@@ -11,10 +11,10 @@
 //! Calibration pins the full-range worst case to the Table I base level
 //! (1.9 GHz): one ps-per-unit factor, everything else is derived.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::OnceLock;
 
-use crate::util::Json;
+use crate::util::{parallel, Json};
 
 use super::{dynsim, mac8, sta};
 
@@ -78,15 +78,17 @@ impl MacProfile {
     pub fn compute(samples: usize, seed: u64) -> Self {
         let (net, ports) = mac8::build();
 
-        let mut delay_units = vec![0u32; 256];
-        let mut sta_units = vec![0u32; 256];
-        let mut mean_toggles = vec![0f64; 256];
-        for w in i8::MIN..=i8::MAX {
-            let stats = dynsim::weight_stats(&net, &ports, w, samples, seed);
-            delay_units[widx(w)] = stats.max_settle;
-            mean_toggles[widx(w)] = stats.mean_toggles;
-            sta_units[widx(w)] = sta::weight_delay(&net, &ports, w);
-        }
+        // Dynamic stats: one independent RNG stream per weight value,
+        // fanned out over the worker pool (each item is a full bit-sliced
+        // transition simulation — the crate's heaviest computation).
+        let stats = parallel::par_map(256, |i| {
+            dynsim::weight_stats(&net, &ports, i as u8 as i8, samples, seed)
+        });
+        let sta_units: Vec<u32> = sta::weight_delays_all(&net, &ports);
+
+        // `stats[i]` is the weight whose bit pattern is `i` (== widx).
+        let delay_units: Vec<u32> = stats.iter().map(|s| s.max_settle).collect();
+        let mean_toggles: Vec<f64> = stats.iter().map(|s| s.mean_toggles).collect();
 
         let worst = *delay_units.iter().max().expect("non-empty") as f64;
         let ps_per_unit = (1000.0 / BASE_FREQ_GHZ) / worst;
@@ -263,9 +265,15 @@ impl MacProfile {
 
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
         }
-        std::fs::write(path, self.to_json().to_string_pretty())?;
+        // Write-then-rename: concurrent test binaries may race on the same
+        // cache key, and a torn file must never be loadable.
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -273,10 +281,72 @@ impl MacProfile {
         Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }
 
-    /// Process-wide cached profile (computed once; STA+dynsim ≈ a second).
+    /// Sanity of a deserialized profile (guards against stale/corrupt
+    /// cache files written by older code).
+    fn valid_for(&self, samples: usize) -> bool {
+        self.samples == samples
+            && self.delay_ps.len() == 256
+            && self.sta_delay_ps.len() == 256
+            && self.freq_ghz.len() == 256
+            && self.mean_toggles.len() == 256
+            && self.energy_pj.len() == 256
+            && self.codebook_fast.len() == FAST_SET
+            && self.codebook_med.len() == MED_SET
+    }
+
+    /// Directory for on-disk profile caches: `$HALO_PROFILE_DIR`, else
+    /// `artifacts/` (the tree `make artifacts` populates).
+    pub fn cache_dir() -> PathBuf {
+        std::env::var_os("HALO_PROFILE_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Cache file inside `dir`, keyed so any input change invalidates:
+    /// netlist structural hash + samples + seed.
+    pub fn cache_path_in(dir: &Path, samples: usize, seed: u64) -> PathBuf {
+        // The netlist is a fixed structure; hash it once per process so
+        // cache-hit lookups don't rebuild the circuit.
+        static NET_HASH: OnceLock<u64> = OnceLock::new();
+        let hash = *NET_HASH.get_or_init(|| mac8::build().0.structural_hash());
+        dir.join(format!("mac_profile_{hash:016x}_s{samples}_r{seed:x}.json"))
+    }
+
+    /// Load through the on-disk cache, computing + saving on a miss.
+    /// Logs one line per lookup so test/CLI wall-clock wins are visible.
+    pub fn cached_or_compute_in(dir: &Path, samples: usize, seed: u64) -> MacProfile {
+        let path = Self::cache_path_in(dir, samples, seed);
+        match Self::load(&path) {
+            Ok(p) if p.valid_for(samples) => {
+                eprintln!("[mac] profile cache hit: {}", path.display());
+                return p;
+            }
+            Ok(_) => eprintln!("[mac] profile cache stale, recomputing: {}", path.display()),
+            Err(_) => eprintln!(
+                "[mac] profile cache miss ({} transitions/weight × 256 weights): {}",
+                samples,
+                path.display()
+            ),
+        }
+        let p = Self::compute(samples, seed);
+        if let Err(e) = p.save(&path) {
+            eprintln!("[mac] profile cache write failed ({e}); continuing uncached");
+        }
+        p
+    }
+
+    /// [`cached_or_compute_in`](Self::cached_or_compute_in) in the default
+    /// [`cache_dir`](Self::cache_dir).
+    pub fn cached_or_compute(samples: usize, seed: u64) -> MacProfile {
+        Self::cached_or_compute_in(&Self::cache_dir(), samples, seed)
+    }
+
+    /// Process-wide cached profile: the `OnceLock` memoizes within the
+    /// process, the disk cache across processes (so repeat test/bench/CLI
+    /// runs skip circuit simulation entirely).
     pub fn cached() -> &'static MacProfile {
         static CACHE: OnceLock<MacProfile> = OnceLock::new();
-        CACHE.get_or_init(|| MacProfile::compute(DEFAULT_SAMPLES, 0x4A10))
+        CACHE.get_or_init(|| MacProfile::cached_or_compute(DEFAULT_SAMPLES, 0x4A10))
     }
 }
 
@@ -352,6 +422,38 @@ mod tests {
         let p = prof();
         assert!(p.mean_energy_pj(&p.codebook_fast) < p.full_range_energy_pj());
         assert!(p.mean_energy_pj(&p.codebook_med) <= p.full_range_energy_pj());
+    }
+
+    #[test]
+    fn disk_cache_roundtrip_and_keying() {
+        let dir = std::env::temp_dir().join(format!("halo_profile_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let a = MacProfile::cached_or_compute_in(&dir, 16, 7); // miss → compute + save
+        assert!(MacProfile::cache_path_in(&dir, 16, 7).exists());
+        let b = MacProfile::cached_or_compute_in(&dir, 16, 7); // hit → load
+        assert_eq!(a.delay_ps, b.delay_ps);
+        assert_eq!(a.codebook_med, b.codebook_med);
+        assert_eq!(a.samples, b.samples);
+        // Different samples/seed key different files (no false sharing).
+        let p16 = MacProfile::cache_path_in(&dir, 16, 7);
+        assert_ne!(p16, MacProfile::cache_path_in(&dir, 17, 7));
+        assert_ne!(p16, MacProfile::cache_path_in(&dir, 16, 8));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_compute_matches_serial() {
+        // Thread count must never change the profile (per-weight RNG
+        // streams are independent of scheduling).
+        let _guard = crate::util::parallel::THREAD_CAP_TEST_LOCK.lock().unwrap();
+        let par = MacProfile::compute(24, 3);
+        crate::util::parallel::set_max_threads(1);
+        let ser = MacProfile::compute(24, 3);
+        crate::util::parallel::set_max_threads(0);
+        assert_eq!(par.delay_ps, ser.delay_ps);
+        assert_eq!(par.mean_toggles, ser.mean_toggles);
+        assert_eq!(par.sta_delay_ps, ser.sta_delay_ps);
+        assert_eq!(par.codebook_fast, ser.codebook_fast);
     }
 
     #[test]

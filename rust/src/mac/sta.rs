@@ -23,19 +23,24 @@ pub enum Known {
 /// Propagate a fixed weight value through the netlist.
 /// Returns per-node [`Known`] (activations/accumulator stay variable).
 pub fn propagate_weight(net: &Netlist, ports: &MacPorts, w: i8) -> Vec<Known> {
-    let mut known = vec![Known::Var; net.len()];
-    // Mark weight bits.
-    let mut is_w_input = vec![false; net.len()];
+    let mut known = Vec::new();
+    propagate_weight_into(net, ports, w, &mut known);
+    known
+}
+
+/// [`propagate_weight`] into a caller-owned buffer — the profile loop calls
+/// this 256 times, so the scratch is reused instead of reallocated.
+pub fn propagate_weight_into(net: &Netlist, ports: &MacPorts, w: i8, known: &mut Vec<Known>) {
+    known.clear();
+    known.resize(net.len(), Known::Var);
+    // Pin weight bits; every other input stays Var (the `Gate::Input` arm
+    // below keeps whatever is already in the buffer).
     for (i, &n) in ports.w.iter().enumerate() {
-        is_w_input[n as usize] = true;
         known[n as usize] = Known::Const((w as u8 >> i) & 1 != 0);
     }
     for (i, g) in net.gates.iter().enumerate() {
-        if is_w_input[i] {
-            continue;
-        }
-        known[i] = match *g {
-            Gate::Input => Known::Var,
+        let ki = match *g {
+            Gate::Input => known[i],
             Gate::Const(c) => Known::Const(c),
             Gate::Not(a) => match known[a as usize] {
                 Known::Const(v) => Known::Const(!v),
@@ -56,21 +61,35 @@ pub fn propagate_weight(net: &Netlist, ports: &MacPorts, w: i8) -> Vec<Known> {
                 _ => Known::Var,
             },
         };
+        known[i] = ki;
     }
-    known
 }
 
 /// Longest sensitizable path (in pre-calibration delay units) for a fixed
 /// weight: max arrival time over all output bits, where constant nodes
 /// launch no events.
 pub fn weight_delay(net: &Netlist, ports: &MacPorts, w: i8) -> u32 {
-    let known = propagate_weight(net, ports, w);
-    let mut arrival: Vec<Option<u32>> = vec![None; net.len()];
+    let mut known = Vec::new();
+    let mut arrival = Vec::new();
+    weight_delay_into(net, ports, w, &mut known, &mut arrival)
+}
+
+/// [`weight_delay`] with caller-owned scratch buffers (profile hot path).
+pub fn weight_delay_into(
+    net: &Netlist,
+    ports: &MacPorts,
+    w: i8,
+    known: &mut Vec<Known>,
+    arrival: &mut Vec<Option<u32>>,
+) -> u32 {
+    propagate_weight_into(net, ports, w, known);
+    arrival.clear();
+    arrival.resize(net.len(), None);
     for (i, g) in net.gates.iter().enumerate() {
         if matches!(known[i], Known::Const(_)) {
             continue; // constant: no timing event
         }
-        arrival[i] = match g {
+        let at = match g {
             Gate::Input => Some(0),
             Gate::Const(_) => None,
             _ => {
@@ -82,12 +101,31 @@ pub fn weight_delay(net: &Netlist, ports: &MacPorts, w: i8) -> u32 {
                 latest.map(|t| t + g.delay())
             }
         };
+        arrival[i] = at;
     }
     net.outputs
         .iter()
         .filter_map(|&o| arrival[o as usize])
         .max()
         .unwrap_or(0)
+}
+
+/// STA bound for all 256 int8 weight values (indexed by `w as u8`):
+/// chunked over the worker pool with per-chunk scratch reuse — the
+/// profile's companion pass to the dynamic simulation.
+pub fn weight_delays_all(net: &Netlist, ports: &MacPorts) -> Vec<u32> {
+    const CHUNK: usize = 32;
+    let chunks = crate::util::parallel::par_map(256 / CHUNK, |c| {
+        let mut known = Vec::new();
+        let mut arrival = Vec::new();
+        let mut out = [0u32; CHUNK];
+        for (k, slot) in out.iter_mut().enumerate() {
+            let w = (c * CHUNK + k) as u8 as i8;
+            *slot = weight_delay_into(net, ports, w, &mut known, &mut arrival);
+        }
+        out
+    });
+    chunks.into_iter().flatten().collect()
 }
 
 /// Count of gates still switching (non-constant) under a fixed weight —
@@ -159,6 +197,16 @@ mod tests {
                     assert_eq!(vals[i], *c, "node {i} a={a} acc={acc}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn batch_delays_match_single_queries() {
+        let (net, ports) = mac8::build();
+        let all = weight_delays_all(&net, &ports);
+        assert_eq!(all.len(), 256);
+        for &w in &[0i8, 1, -1, 64, -127, 85, 127, -128] {
+            assert_eq!(all[w as u8 as usize], weight_delay(&net, &ports, w), "w={w}");
         }
     }
 

@@ -1,0 +1,304 @@
+//! Blocked, thread-parallel f32 matmul micro-kernels for the pure-Rust
+//! backend's GEMM-shaped hot paths (forward, attention projections, and
+//! the whole gradient path).
+//!
+//! One register-blocked kernel serves all three layouts. [`matmul`]
+//! processes `MR` output rows per pass so every streamed row of `B` is
+//! reused `MR`× from registers, walks the output in `NC`-wide column
+//! panels so the accumulator rows stay L1-resident, and parallelizes over
+//! output row blocks ([`crate::util::parallel::par_chunks_mut`] — each
+//! thread owns disjoint rows, so results are deterministic). The TN/NT
+//! layouts pack the non-streaming operand into a transposed panel first
+//! ([`transpose`]) and reuse the same kernel, which also preserves the
+//! per-element summation order of the naive implementations (ascending
+//! `k`), keeping results bit-for-bit reproducible.
+//!
+//! The seed implementations live on in [`naive`] as the equivalence
+//! oracles for `tests/hotpaths.rs` and the pre-PR baseline for
+//! `benches/l1_hotpaths.rs`; [`set_force_naive`] routes the public entry
+//! points through them for differential benchmarking.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::quant::Matrix;
+use crate::util::parallel;
+
+/// Output rows per register-blocked micro-kernel pass.
+const MR: usize = 4;
+/// Output-column panel width: MR accumulator rows × NC f32 ≤ 32 KiB (L1).
+const NC: usize = 2048;
+/// Below this many MACs the thread fan-out costs more than it saves
+/// (spawn/join ≫ compute for the unit-test-sized GEMMs); run serial.
+const PAR_MIN_MACS: usize = 1 << 17;
+
+static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+/// Route [`matmul`]/[`matmul_tn`]/[`matmul_nt`] through the seed
+/// implementations (pre-PR baseline measurements; equivalence tests).
+pub fn set_force_naive(on: bool) {
+    FORCE_NAIVE.store(on, Ordering::Relaxed);
+}
+
+pub fn force_naive() -> bool {
+    FORCE_NAIVE.load(Ordering::Relaxed)
+}
+
+/// `a @ b` for a (m, k), b (k, n) → (m, n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul: inner dims {} vs {}", a.cols, b.rows);
+    if force_naive() {
+        return naive::matmul(a, b);
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return out;
+    }
+    let (a_data, b_data) = (a.data.as_slice(), b.data.as_slice());
+    if m * k * n < PAR_MIN_MACS {
+        for (tile, chunk) in out.data.chunks_mut(MR * n).enumerate() {
+            block_rows(a_data, b_data, k, n, tile * MR, chunk);
+        }
+    } else {
+        parallel::par_chunks_mut(&mut out.data, MR * n, |tile, chunk| {
+            block_rows(a_data, b_data, k, n, tile * MR, chunk);
+        });
+    }
+    out
+}
+
+/// `aᵀ @ b` for a (n, r), b (n, c) → (r, c). Weight-gradient layout
+/// (`dW = xᵀ @ dy`): packs `aᵀ` and reuses the blocked kernel.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn: outer dims {} vs {}", a.rows, b.rows);
+    if force_naive() {
+        return naive::matmul_tn(a, b);
+    }
+    matmul(&transpose(a), b)
+}
+
+/// `a @ bᵀ` for a (n, c), b (m, c) → (n, m). Gradient pushback layout
+/// (`dx = dy @ Wᵀ`): packs `bᵀ` and reuses the blocked kernel.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt: inner dims {} vs {}", a.cols, b.cols);
+    if force_naive() {
+        return naive::matmul_nt(a, b);
+    }
+    matmul(a, &transpose(b))
+}
+
+/// Blocked transpose — the packing step for the TN/NT layouts.
+pub fn transpose(a: &Matrix) -> Matrix {
+    const TB: usize = 32;
+    let mut out = Matrix::zeros(a.cols, a.rows);
+    for r0 in (0..a.rows).step_by(TB) {
+        let r1 = (r0 + TB).min(a.rows);
+        for c0 in (0..a.cols).step_by(TB) {
+            let c1 = (c0 + TB).min(a.cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    out.data[c * a.rows + r] = a.data[r * a.cols + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One output row block: `chunk` holds `chunk.len() / n` rows of the
+/// output starting at row `i0`. Walks `NC`-wide column panels; within a
+/// panel, `MR = 4` rows accumulate together so each streamed `b` row is
+/// reused 4× (plus a tail loop for the last `rows % 4`).
+fn block_rows(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = (n - j0).min(NC);
+        let mut r = 0usize;
+        while r + MR <= rows {
+            let i = i0 + r;
+            let (r01, r23) = chunk[r * n..(r + MR) * n].split_at_mut(2 * n);
+            let (row0, row1) = r01.split_at_mut(n);
+            let (row2, row3) = r23.split_at_mut(n);
+            let o0 = &mut row0[j0..j0 + jw];
+            let o1 = &mut row1[j0..j0 + jw];
+            let o2 = &mut row2[j0..j0 + jw];
+            let o3 = &mut row3[j0..j0 + jw];
+            for kk in 0..k {
+                let a0 = a[i * k + kk];
+                let a1 = a[(i + 1) * k + kk];
+                let a2 = a[(i + 2) * k + kk];
+                let a3 = a[(i + 3) * k + kk];
+                let brow = &b[kk * n + j0..kk * n + j0 + jw];
+                for (j, &bv) in brow.iter().enumerate() {
+                    o0[j] += a0 * bv;
+                    o1[j] += a1 * bv;
+                    o2[j] += a2 * bv;
+                    o3[j] += a3 * bv;
+                }
+            }
+            r += MR;
+        }
+        while r < rows {
+            let i = i0 + r;
+            let orow = &mut chunk[r * n + j0..r * n + j0 + jw];
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n + j0..kk * n + j0 + jw];
+                for (j, &bv) in brow.iter().enumerate() {
+                    orow[j] += av * bv;
+                }
+            }
+            r += 1;
+        }
+        j0 += jw;
+    }
+}
+
+/// Dot product with four independent accumulators: serial f32 adds form a
+/// dependency chain the compiler may not reassociate, so splitting the sum
+/// exposes ILP/SIMD while staying deterministic. Used by the attention
+/// logits and gradient reductions in `runtime::sim`.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0usize;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    while i < a.len() {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// The seed implementations, kept verbatim as equivalence oracles and the
+/// pre-PR baseline (`benches/l1_hotpaths.rs`).
+pub mod naive {
+    use crate::quant::Matrix;
+
+    /// Single-pass `a @ b` (the seed `Matrix::matmul`).
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        a.matmul(b)
+    }
+
+    /// aᵀ @ b for a (n, r), b (n, c) → (r, c).
+    pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows);
+        let mut out = Matrix::zeros(a.cols, b.cols);
+        for k in 0..a.rows {
+            let arow = a.row(k);
+            let brow = b.row(k);
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (j, &bv) in brow.iter().enumerate() {
+                    orow[j] += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// a @ bᵀ for a (n, c), b (m, c) → (n, m).
+    pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols);
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn assert_close(got: &Matrix, want: &Matrix, what: &str) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what}: shape");
+        for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "{what}[{i}]: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_small_exact() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        assert_eq!(matmul(&a, &b).data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Matrix::random_normal(37, 53, 1.0, &mut rng);
+        let t = transpose(&a);
+        assert_eq!((t.rows, t.cols), (53, 37));
+        assert_eq!(transpose(&t), a);
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes() {
+        // Shapes deliberately not divisible by MR / the panel width.
+        let mut rng = Rng::seed_from_u64(42);
+        for case in 0..12 {
+            let m = 1 + rng.gen_usize(37);
+            let k = 1 + rng.gen_usize(45);
+            let n = 1 + rng.gen_usize(41);
+            let a = Matrix::random_normal(m, k, 1.0, &mut rng);
+            let b = Matrix::random_normal(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive::matmul(&a, &b), &format!("mm case {case}"));
+
+            let at = Matrix::random_normal(k, m, 1.0, &mut rng);
+            assert_close(
+                &matmul_tn(&at, &b),
+                &naive::matmul_tn(&at, &b),
+                &format!("tn case {case}"),
+            );
+
+            let bt = Matrix::random_normal(n, k, 1.0, &mut rng);
+            assert_close(
+                &matmul_nt(&a, &bt),
+                &naive::matmul_nt(&a, &bt),
+                &format!("nt case {case}"),
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_serial_sum() {
+        let mut rng = Rng::seed_from_u64(9);
+        for len in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f32> = (0..len).map(|_| rng.gen_normal() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gen_normal() as f32).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() <= 1e-4 * (1.0 + want.abs()), "len {len}");
+        }
+    }
+}

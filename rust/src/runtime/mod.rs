@@ -9,6 +9,7 @@
 pub mod artifacts;
 pub mod backend;
 pub mod client;
+pub mod kernels;
 pub mod sim;
 #[cfg(feature = "xla")]
 pub mod xla;

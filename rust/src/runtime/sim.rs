@@ -19,9 +19,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::quant::Matrix;
-use crate::util::Json;
+use crate::util::{parallel, Json};
 
 use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
+use super::kernels::{self, dot, matmul_nt, matmul_tn};
 
 /// sqrt(2/pi) for the tanh GELU approximation (jax.nn.gelu default).
 const GELU_C: f32 = 0.797_884_56;
@@ -236,46 +237,11 @@ impl<'a> Params<'a> {
 }
 
 // ------------------------------------------------------------- linear algebra
-
-/// aᵀ @ b for a (n, r), b (n, c) → (r, c). Used for weight gradients.
-fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows, b.rows);
-    let mut out = Matrix::zeros(a.cols, b.cols);
-    for k in 0..a.rows {
-        let arow = a.row(k);
-        let brow = b.row(k);
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = out.row_mut(i);
-            for (j, &bv) in brow.iter().enumerate() {
-                orow[j] += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// a @ bᵀ for a (n, c), b (m, c) → (n, m). Used to push gradients back
-/// through `y = x @ W` (dx = dy @ Wᵀ).
-fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.cols);
-    let mut out = Matrix::zeros(a.rows, b.rows);
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for j in 0..b.rows {
-            let brow = b.row(j);
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            orow[j] = acc;
-        }
-    }
-    out
-}
+//
+// All GEMM-shaped work goes through the blocked, thread-parallel kernels
+// in `runtime::kernels` (`matmul`/`matmul_tn`/`matmul_nt`); the seed
+// single-pass implementations survive as `kernels::naive` and are compared
+// against in `tests/hotpaths.rs`.
 
 fn add_into(a: &mut Matrix, b: &Matrix) {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
@@ -366,8 +332,17 @@ fn layernorm_backward(dy: &Matrix, xhat: &Matrix, istd: &[f32], scale: &[f32]) -
 
 // ----------------------------------------------------------------- attention
 
+/// Below this much per-call work (≈ MACs across all heads), attention runs
+/// its (batch, head) tasks serially instead of spawning scoped threads.
+const ATTN_PAR_MIN_WORK: usize = 1 << 15;
+
 /// Multi-head causal attention over projected q/k/v (each (b·s, d)).
 /// Returns the merged output and, per (batch, head), the softmax weights.
+///
+/// One task per (batch, head) pair, fanned out over the worker pool; each
+/// task fills its own (s, s) softmax table and (s, hd) output slice, so
+/// the merge below is a plain copy and results are thread-count-
+/// independent.
 fn attention(
     b: usize,
     s: usize,
@@ -379,47 +354,62 @@ fn attention(
 ) -> (Matrix, Vec<Matrix>) {
     let d = heads * hd;
     let scale = 1.0 / (hd as f64).sqrt();
+    let head_task = |t: usize| {
+        let (bi, h) = (t / heads, t % heads);
+        let c0 = h * hd;
+        let mut att = Matrix::zeros(s, s);
+        let mut ao_h = Matrix::zeros(s, hd);
+        for qi in 0..s {
+            let qrow = &q.row(bi * s + qi)[c0..c0 + hd];
+            let mut logits = vec![0.0f32; qi + 1];
+            let mut maxv = f32::NEG_INFINITY;
+            for (ki, l) in logits.iter_mut().enumerate() {
+                let krow = &k.row(bi * s + ki)[c0..c0 + hd];
+                *l = (dot(qrow, krow) as f64 * scale) as f32;
+                maxv = maxv.max(*l);
+            }
+            let mut denom = 0.0f64;
+            for l in logits.iter_mut() {
+                let e = ((*l - maxv) as f64).exp();
+                *l = e as f32;
+                denom += e;
+            }
+            for (ki, &e) in logits.iter().enumerate() {
+                att.set(qi, ki, (e as f64 / denom) as f32);
+            }
+            for j in 0..hd {
+                let mut acc = 0.0f32;
+                for ki in 0..=qi {
+                    acc += att.get(qi, ki) * v.row(bi * s + ki)[c0 + j];
+                }
+                ao_h.set(qi, j, acc);
+            }
+        }
+        (att, ao_h)
+    };
+    // Unit-test-sized heads aren't worth a thread spawn per call.
+    let per_head = if b * heads * s * s * hd >= ATTN_PAR_MIN_WORK {
+        parallel::par_map(b * heads, &head_task)
+    } else {
+        (0..b * heads).map(head_task).collect()
+    };
+
     let mut ao = Matrix::zeros(b * s, d);
     let mut atts = Vec::with_capacity(b * heads);
-    for bi in 0..b {
-        for h in 0..heads {
-            let c0 = h * hd;
-            let mut att = Matrix::zeros(s, s);
-            for qi in 0..s {
-                let qrow = &q.row(bi * s + qi)[c0..c0 + hd];
-                let mut logits = vec![0.0f32; qi + 1];
-                let mut maxv = f32::NEG_INFINITY;
-                for (ki, l) in logits.iter_mut().enumerate() {
-                    let krow = &k.row(bi * s + ki)[c0..c0 + hd];
-                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                    *l = (dot as f64 * scale) as f32;
-                    maxv = maxv.max(*l);
-                }
-                let mut denom = 0.0f64;
-                for l in logits.iter_mut() {
-                    let e = ((*l - maxv) as f64).exp();
-                    *l = e as f32;
-                    denom += e;
-                }
-                for (ki, &e) in logits.iter().enumerate() {
-                    att.set(qi, ki, (e as f64 / denom) as f32);
-                }
-                for j in 0..hd {
-                    let mut acc = 0.0f32;
-                    for ki in 0..=qi {
-                        acc += att.get(qi, ki) * v.row(bi * s + ki)[c0 + j];
-                    }
-                    ao.set(bi * s + qi, c0 + j, acc);
-                }
-            }
-            atts.push(att);
+    for (t, (att, ao_h)) in per_head.into_iter().enumerate() {
+        let (bi, h) = (t / heads, t % heads);
+        let c0 = h * hd;
+        for qi in 0..s {
+            ao.row_mut(bi * s + qi)[c0..c0 + hd].copy_from_slice(ao_h.row(qi));
         }
+        atts.push(att);
     }
     (ao, atts)
 }
 
 /// Backward through causal attention given the cached softmax weights.
-/// Returns (dq, dk, dv), each (b·s, d).
+/// Returns (dq, dk, dv), each (b·s, d). Parallel over (batch, head) like
+/// the forward pass: each task accumulates into its own (s, hd) slices.
 #[allow(clippy::too_many_arguments)]
 fn attention_backward(
     b: usize,
@@ -434,46 +424,64 @@ fn attention_backward(
 ) -> (Matrix, Matrix, Matrix) {
     let d = heads * hd;
     let scale = (1.0 / (hd as f64).sqrt()) as f32;
+    let head_task = |t: usize| {
+        let (bi, h) = (t / heads, t % heads);
+        let c0 = h * hd;
+        let att = &atts[bi * heads + h];
+        let mut dq_h = Matrix::zeros(s, hd);
+        let mut dk_h = Matrix::zeros(s, hd);
+        let mut dv_h = Matrix::zeros(s, hd);
+        for qi in 0..s {
+            let dorow = &dao.row(bi * s + qi)[c0..c0 + hd];
+            // datt[ki] = ⟨dao_qi, v_ki⟩ over this head's slice.
+            let mut datt = vec![0.0f32; qi + 1];
+            for (ki, dl) in datt.iter_mut().enumerate() {
+                let vrow = &v.row(bi * s + ki)[c0..c0 + hd];
+                *dl = dot(dorow, vrow);
+            }
+            // Softmax backward: dz = att ⊙ (datt − Σ datt·att).
+            let rowsum: f64 = datt
+                .iter()
+                .enumerate()
+                .map(|(ki, &dl)| dl as f64 * att.get(qi, ki) as f64)
+                .sum();
+            for (ki, &dl) in datt.iter().enumerate() {
+                let aw = att.get(qi, ki);
+                let dz = aw * (dl - rowsum as f32);
+                let qrow = &q.row(bi * s + qi)[c0..c0 + hd];
+                let krow = &k.row(bi * s + ki)[c0..c0 + hd];
+                let dqrow = dq_h.row_mut(qi);
+                for j in 0..hd {
+                    dqrow[j] += dz * krow[j] * scale;
+                }
+                let dkrow = dk_h.row_mut(ki);
+                for j in 0..hd {
+                    dkrow[j] += dz * qrow[j] * scale;
+                }
+                let dvrow = dv_h.row_mut(ki);
+                for j in 0..hd {
+                    dvrow[j] += aw * dorow[j];
+                }
+            }
+        }
+        (dq_h, dk_h, dv_h)
+    };
+    let per_head = if b * heads * s * s * hd >= ATTN_PAR_MIN_WORK {
+        parallel::par_map(b * heads, &head_task)
+    } else {
+        (0..b * heads).map(head_task).collect()
+    };
+
     let mut dq = Matrix::zeros(b * s, d);
     let mut dk = Matrix::zeros(b * s, d);
     let mut dv = Matrix::zeros(b * s, d);
-    for bi in 0..b {
-        for h in 0..heads {
-            let c0 = h * hd;
-            let att = &atts[bi * heads + h];
-            for qi in 0..s {
-                let dorow = &dao.row(bi * s + qi)[c0..c0 + hd];
-                // datt[ki] = ⟨dao_qi, v_ki⟩ over this head's slice.
-                let mut datt = vec![0.0f32; qi + 1];
-                for (ki, dl) in datt.iter_mut().enumerate() {
-                    let vrow = &v.row(bi * s + ki)[c0..c0 + hd];
-                    *dl = dorow.iter().zip(vrow).map(|(a, b)| a * b).sum();
-                }
-                // Softmax backward: dz = att ⊙ (datt − Σ datt·att).
-                let rowsum: f64 = datt
-                    .iter()
-                    .enumerate()
-                    .map(|(ki, &dl)| dl as f64 * att.get(qi, ki) as f64)
-                    .sum();
-                for (ki, &dl) in datt.iter().enumerate() {
-                    let a = att.get(qi, ki);
-                    let dz = a * (dl - rowsum as f32);
-                    let qrow = q.row(bi * s + qi);
-                    let krow = k.row(bi * s + ki);
-                    let dqrow = dq.row_mut(bi * s + qi);
-                    for j in 0..hd {
-                        dqrow[c0 + j] += dz * krow[c0 + j] * scale;
-                    }
-                    let dkrow = dk.row_mut(bi * s + ki);
-                    for j in 0..hd {
-                        dkrow[c0 + j] += dz * qrow[c0 + j] * scale;
-                    }
-                    let dvrow = dv.row_mut(bi * s + ki);
-                    for j in 0..hd {
-                        dvrow[c0 + j] += a * dorow[j];
-                    }
-                }
-            }
+    for (t, (dq_h, dk_h, dv_h)) in per_head.into_iter().enumerate() {
+        let (bi, h) = (t / heads, t % heads);
+        let c0 = h * hd;
+        for r in 0..s {
+            dq.row_mut(bi * s + r)[c0..c0 + hd].copy_from_slice(dq_h.row(r));
+            dk.row_mut(bi * s + r)[c0..c0 + hd].copy_from_slice(dk_h.row(r));
+            dv.row_mut(bi * s + r)[c0..c0 + hd].copy_from_slice(dv_h.row(r));
         }
     }
     (dq, dk, dv)
@@ -556,13 +564,13 @@ fn forward(
         let wq = p.mat(&format!("{pre}attn.wq"))?;
         let wk = p.mat(&format!("{pre}attn.wk"))?;
         let wv = p.mat(&format!("{pre}attn.wv"))?;
-        let q = a_in1.matmul(&wq);
-        let k = a_in1.matmul(&wk);
-        let v = a_in1.matmul(&wv);
+        let q = kernels::matmul(&a_in1, &wq);
+        let k = kernels::matmul(&a_in1, &wk);
+        let v = kernels::matmul(&a_in1, &wv);
         let (ao, atts) = attention(b, s, spec.n_heads, spec.head_dim(), &q, &k, &v);
         let a_ao = act(&ao);
         let wo = p.mat(&format!("{pre}attn.wo"))?;
-        add_into(&mut x, &a_ao.matmul(&wo));
+        add_into(&mut x, &kernels::matmul(&a_ao, &wo));
 
         let (hn2, xhat2, istd2) = layernorm(
             &x,
@@ -572,7 +580,7 @@ fn forward(
         let a_hn2 = act(&hn2);
         let w1 = p.mat(&format!("{pre}mlp.w1"))?;
         let b1 = p.vec1(&format!("{pre}mlp.b1"))?;
-        let mut pre_act = a_hn2.matmul(&w1);
+        let mut pre_act = kernels::matmul(&a_hn2, &w1);
         for r in 0..pre_act.rows {
             let row = pre_act.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -586,7 +594,7 @@ fn forward(
         let a_h1 = act(&h1);
         let w2 = p.mat(&format!("{pre}mlp.w2"))?;
         let b2 = p.vec1(&format!("{pre}mlp.b2"))?;
-        let mut mlp_out = a_h1.matmul(&w2);
+        let mut mlp_out = kernels::matmul(&a_h1, &w2);
         for r in 0..mlp_out.rows {
             let row = mlp_out.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -616,7 +624,7 @@ fn forward(
         layernorm(&x, p.vec1("ln_f.scale")?, p.vec1("ln_f.bias")?);
     let a_xf = act(&xf);
     let head = p.mat("head")?;
-    let logits = a_xf.matmul(&head);
+    let logits = kernels::matmul(&a_xf, &head);
     Ok((logits, caches, FinalCache { xhat_f, istd_f, a_xf }))
 }
 
@@ -822,7 +830,7 @@ pub fn run_halo_matmul(inputs: &[&Literal]) -> Result<Vec<Literal>> {
             wd.set(r, c, cv[i as usize] * sv[(r / tile) * nt + c / tile]);
         }
     }
-    let y = Matrix::from_vec(m, k, xv.to_vec()).matmul(&wd);
+    let y = kernels::matmul(&Matrix::from_vec(m, k, xv.to_vec()), &wd);
     Ok(vec![Literal::f32(&y.data, &[m, n])?])
 }
 

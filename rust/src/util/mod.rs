@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 
 pub use json::Json;

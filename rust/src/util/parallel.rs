@@ -1,0 +1,161 @@
+//! Scoped-thread data parallelism (offline build: no rayon).
+//!
+//! Two primitives cover every compute hot path in the crate:
+//! [`par_map`] (index-ordered fan-out over a work list with dynamic load
+//! balancing — the MAC profile's 256 weight values, attention's
+//! batch × head tasks) and [`par_chunks_mut`] (static partition of a
+//! mutable buffer into fixed-size chunks — the matmul kernels' output row
+//! blocks). Both degrade to plain serial loops when one thread is
+//! available, and every index/chunk runs the same code path regardless of
+//! the thread count, so results are deterministic by construction.
+//!
+//! Thread count: `HALO_THREADS` env override, else the machine's available
+//! parallelism, optionally capped by [`set_max_threads`] (benches use the
+//! cap to measure serial baselines).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = auto (env / available parallelism); anything else caps the pool.
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes tests that toggle the process-global thread cap (they would
+/// otherwise race and silently weaken each other's serial leg).
+#[cfg(test)]
+pub(crate) static THREAD_CAP_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Cap the number of worker threads (0 restores the default). Intended for
+/// benchmarks and tests that need a serial baseline; normal code never
+/// calls this.
+pub fn set_max_threads(n: usize) {
+    MAX_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Worker threads to use right now.
+pub fn available_threads() -> usize {
+    let cap = MAX_THREADS.load(Ordering::Relaxed);
+    if cap == 1 {
+        return 1;
+    }
+    let n = std::env::var("HALO_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    if cap == 0 {
+        n
+    } else {
+        n.min(cap)
+    }
+}
+
+/// Map `f` over `0..n` on scoped threads; results returned in index order.
+/// Indices are claimed dynamically through an atomic counter so uneven
+/// per-item cost still balances.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = available_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut pairs: Vec<(usize, T)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let (f, next) = (&f, &next);
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    });
+    pairs.sort_unstable_by_key(|p| p.0);
+    pairs.into_iter().map(|p| p.1).collect()
+}
+
+/// Split `data` into `chunk_len`-sized chunks (the last may be short) and
+/// process them on scoped threads. `f` receives `(chunk_index, chunk)`
+/// exactly once per chunk; each thread owns a contiguous run of chunks, so
+/// the partition is static and deterministic.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = available_threads().min(n_chunks.max(1));
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Chunks per thread, rounded up: at most `threads` spawns.
+    let per = n_chunks.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, run) in data.chunks_mut(per * chunk_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (k, chunk) in run.chunks_mut(chunk_len).enumerate() {
+                    f(t * per + k, chunk);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        let got = par_map(100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_chunk_once() {
+        let mut data = vec![0u32; 103]; // ragged: 103 = 25 chunks of 4 + 3
+        par_chunks_mut(&mut data, 4, |idx, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + idx as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1 + (i / 4) as u32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn results_identical_serial_vs_parallel() {
+        let _guard = THREAD_CAP_TEST_LOCK.lock().unwrap();
+        let parallel: Vec<u64> = par_map(64, |i| (i as u64).wrapping_mul(0x9E37));
+        set_max_threads(1);
+        let serial: Vec<u64> = par_map(64, |i| (i as u64).wrapping_mul(0x9E37));
+        set_max_threads(0);
+        assert_eq!(parallel, serial);
+    }
+}

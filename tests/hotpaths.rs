@@ -1,0 +1,287 @@
+//! Property/equivalence tests for the PR-2 hot-path rebuild: the 64-lane
+//! bit-sliced netlist evaluator, the bit-sliced dynamic simulator, and the
+//! blocked matmul kernels must be indistinguishable (bit-identical for the
+//! gate sim, within tight FP tolerance for the kernels) from the seed
+//! scalar implementations they replaced.
+
+use std::sync::Mutex;
+
+use halo::mac::dynsim::{self, DynSim, DynSim64, Transition};
+use halo::mac::gate::{Gate, Netlist};
+use halo::mac::mac8;
+use halo::quant::Matrix;
+use halo::runtime::backend::Literal;
+use halo::runtime::kernels::{self, naive};
+use halo::runtime::sim::{model_loss, ModelSpec};
+use halo::util::Rng;
+
+/// Serializes the tests that flip the global `force_naive` kernel switch.
+static KERNEL_FLAG: Mutex<()> = Mutex::new(());
+
+// ------------------------------------------------------------ gate eval
+
+/// Random topologically-ordered DAG netlist (raw `Netlist` construction —
+/// deliberately bypasses the builder's constant folding so Const gates
+/// survive into the evaluator).
+fn random_netlist(rng: &mut Rng, n_inputs: usize, n_gates: usize) -> Netlist {
+    let mut gates = vec![Gate::Input; n_inputs];
+    gates.push(Gate::Const(false));
+    gates.push(Gate::Const(true));
+    while gates.len() < n_inputs + 2 + n_gates {
+        let a = rng.gen_usize(gates.len()) as u32;
+        let b = rng.gen_usize(gates.len()) as u32;
+        gates.push(match rng.gen_usize(4) {
+            0 => Gate::Not(a),
+            1 => Gate::And(a, b),
+            2 => Gate::Or(a, b),
+            _ => Gate::Xor(a, b),
+        });
+    }
+    let len = gates.len();
+    let outputs: Vec<u32> = (0..8).map(|_| rng.gen_usize(len) as u32).collect();
+    Netlist { gates, outputs }
+}
+
+#[test]
+fn prop_eval64_equals_64_scalar_evals() {
+    let mut rng = Rng::seed_from_u64(0xE64);
+    for case in 0..20 {
+        let n_inputs = 1 + rng.gen_usize(24);
+        let net = random_netlist(&mut rng, n_inputs, 5 + rng.gen_usize(200));
+
+        // 64 random input assignments, packed one per lane.
+        let assignments: Vec<Vec<bool>> = (0..64)
+            .map(|_| (0..n_inputs).map(|_| rng.gen_bool()).collect())
+            .collect();
+        let mut words = vec![0u64; net.len()];
+        for (lane, bits) in assignments.iter().enumerate() {
+            for (i, &bit) in bits.iter().enumerate() {
+                words[i] |= (bit as u64) << lane;
+            }
+        }
+        net.eval64_into(&mut words);
+
+        for (lane, bits) in assignments.iter().enumerate() {
+            let mut vals = vec![false; net.len()];
+            vals[..n_inputs].copy_from_slice(bits);
+            net.eval_into(&mut vals);
+            for i in 0..net.len() {
+                assert_eq!(
+                    (words[i] >> lane) & 1 != 0,
+                    vals[i],
+                    "case {case} lane {lane} node {i}"
+                );
+            }
+            assert_eq!(
+                net.read_outputs_lane(&words, lane),
+                net.read_outputs(&vals),
+                "case {case} lane {lane} outputs"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ dynamic sim
+
+#[test]
+fn prop_bitsliced_dynsim_equals_scalar_chain() {
+    // Toggle counts and settle times of every transition in a random chain
+    // must match the scalar simulator bit-for-bit, at every batch split.
+    let (net, ports) = mac8::build();
+    let mut rng = Rng::seed_from_u64(0xD5);
+    for case in 0..6 {
+        let w = rng.gen_i8();
+        let len = 2 + rng.gen_usize(150);
+        let states: Vec<(i8, i32)> = (0..len)
+            .map(|_| (rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32))
+            .collect();
+
+        let mut scalar = DynSim::new(&net, &ports, w, states[0].0, states[0].1);
+        let want: Vec<Transition> =
+            states[1..].iter().map(|&(a, acc)| scalar.step(a, acc)).collect();
+
+        let samples = len - 1;
+        let mut sim = DynSim64::new(&net, &ports, w);
+        let mut got = vec![Transition::default(); samples];
+        let mut t = 0usize;
+        while t < samples {
+            // Random batch sizes exercise every lane-count path.
+            let n = (1 + rng.gen_usize(64)).min(samples - t);
+            sim.run_batch(&states[t..t + n], &states[t + 1..t + 1 + n], &mut got[t..t + n]);
+            t += n;
+        }
+        assert_eq!(got, want, "case {case} w={w}");
+    }
+}
+
+#[test]
+fn prop_weight_stats_bitsliced_equals_scalar() {
+    let (net, ports) = mac8::build();
+    let mut rng = Rng::seed_from_u64(0x57A7);
+    for _ in 0..8 {
+        let w = rng.gen_i8();
+        let samples = 1 + rng.gen_usize(200);
+        let seed = rng.next_u64();
+        assert_eq!(
+            dynsim::weight_stats(&net, &ports, w, samples, seed),
+            dynsim::weight_stats_scalar(&net, &ports, w, samples, seed),
+            "w={w} samples={samples} seed={seed:#x}"
+        );
+    }
+}
+
+#[test]
+fn settle_histogram_matches_scalar_replay() {
+    // The bit-sliced histogram must reproduce the seed implementation:
+    // scalar DynSim over the same RNG stream (initial acc pinned to 0).
+    let (net, ports) = mac8::build();
+    for &(w, samples, seed) in &[(64i8, 100usize, 1u64), (-127, 130, 9), (5, 64, 3)] {
+        let got = dynsim::settle_histogram(&net, &ports, w, samples, seed);
+
+        let mut rng = Rng::seed_from_u64(seed ^ ((w as u8 as u64) << 32));
+        let mut sim = DynSim::new(&net, &ports, w, rng.gen_i8(), 0);
+        let mut counts = std::collections::BTreeMap::new();
+        for _ in 0..samples {
+            let t = sim.step(rng.gen_i8(), rng.gen_range_i64(-0x400000, 0x400000) as i32);
+            *counts.entry(t.settle).or_insert(0u32) += 1;
+        }
+        let want: Vec<(u32, u32)> = counts.into_iter().collect();
+        assert_eq!(got, want, "w={w} samples={samples}");
+    }
+}
+
+// ------------------------------------------------------------ matmul kernels
+
+fn assert_close(got: &Matrix, want: &Matrix, what: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what}: shape");
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{what}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_equals_naive_on_random_shapes() {
+    let _guard = KERNEL_FLAG.lock().unwrap();
+    let mut rng = Rng::seed_from_u64(0xB10C);
+    for case in 0..16 {
+        // Ragged shapes: nothing divisible by the register block.
+        let m = 1 + rng.gen_usize(70);
+        let k = 1 + rng.gen_usize(90);
+        let n = 1 + rng.gen_usize(80);
+        let a = Matrix::random_normal(m, k, 1.0, &mut rng);
+        let b = Matrix::random_normal(k, n, 1.0, &mut rng);
+        assert_close(
+            &kernels::matmul(&a, &b),
+            &naive::matmul(&a, &b),
+            &format!("matmul case {case} ({m}x{k}x{n})"),
+        );
+
+        let at = Matrix::random_normal(k, m, 1.0, &mut rng);
+        assert_close(
+            &kernels::matmul_tn(&at, &b),
+            &naive::matmul_tn(&at, &b),
+            &format!("matmul_tn case {case}"),
+        );
+
+        let bt = Matrix::random_normal(n, k, 1.0, &mut rng);
+        assert_close(
+            &kernels::matmul_nt(&a, &bt),
+            &naive::matmul_nt(&a, &bt),
+            &format!("matmul_nt case {case}"),
+        );
+    }
+}
+
+// ------------------------------------------------------------ full model
+
+fn tiny_spec() -> ModelSpec {
+    let (v, d, ff, s) = (13usize, 16usize, 32usize, 9usize);
+    let mut names = Vec::new();
+    let mut shapes = Vec::new();
+    let mut linear = Vec::new();
+    let mut push = |n: &str, sh: Vec<usize>, lin: bool| {
+        names.push(n.to_string());
+        shapes.push(sh);
+        linear.push(lin);
+    };
+    push("embed", vec![v, d], false);
+    push("pos_embed", vec![s, d], false);
+    for l in 0..2 {
+        push(&format!("layer{l}.ln1.scale"), vec![d], false);
+        push(&format!("layer{l}.ln1.bias"), vec![d], false);
+        push(&format!("layer{l}.attn.wq"), vec![d, d], true);
+        push(&format!("layer{l}.attn.wk"), vec![d, d], true);
+        push(&format!("layer{l}.attn.wv"), vec![d, d], true);
+        push(&format!("layer{l}.attn.wo"), vec![d, d], true);
+        push(&format!("layer{l}.ln2.scale"), vec![d], false);
+        push(&format!("layer{l}.ln2.bias"), vec![d], false);
+        push(&format!("layer{l}.mlp.w1"), vec![d, ff], true);
+        push(&format!("layer{l}.mlp.b1"), vec![ff], false);
+        push(&format!("layer{l}.mlp.w2"), vec![ff, d], true);
+        push(&format!("layer{l}.mlp.b2"), vec![d], false);
+    }
+    push("ln_f.scale", vec![d], false);
+    push("ln_f.bias", vec![d], false);
+    push("head", vec![d, v], true);
+    ModelSpec {
+        vocab: v,
+        d_model: d,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: ff,
+        seq_len: s,
+        names,
+        shapes,
+        linear,
+    }
+}
+
+fn tiny_inputs(spec: &ModelSpec, seed: u64) -> Vec<Literal> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::new();
+    for (name, shape) in spec.names.iter().zip(&spec.shapes) {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; n]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; n]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..n).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        out.push(Literal::f32(&data, shape).unwrap());
+    }
+    let (b, s) = (2usize, spec.seq_len);
+    let toks: Vec<i32> = (0..b * (s + 1))
+        .map(|_| rng.gen_usize(spec.vocab) as i32)
+        .collect();
+    out.push(Literal::i32(&toks, &[b, s + 1]).unwrap());
+    out
+}
+
+#[test]
+fn model_loss_blocked_matches_naive_kernels() {
+    let _guard = KERNEL_FLAG.lock().unwrap();
+    let spec = tiny_spec();
+    let inputs = tiny_inputs(&spec, 11);
+    let refs: Vec<&Literal> = inputs.iter().collect();
+
+    kernels::set_force_naive(true);
+    let naive_fp = model_loss(&spec, &refs, false).unwrap();
+    let naive_a8 = model_loss(&spec, &refs, true).unwrap();
+    kernels::set_force_naive(false);
+    let blocked_fp = model_loss(&spec, &refs, false).unwrap();
+    let blocked_a8 = model_loss(&spec, &refs, true).unwrap();
+
+    assert!(
+        (naive_fp - blocked_fp).abs() <= 1e-4 * (1.0 + naive_fp.abs()),
+        "fp loss: naive {naive_fp} vs blocked {blocked_fp}"
+    );
+    assert!(
+        (naive_a8 - blocked_a8).abs() <= 1e-4 * (1.0 + naive_a8.abs()),
+        "a8 loss: naive {naive_a8} vs blocked {blocked_a8}"
+    );
+}
