@@ -10,7 +10,7 @@
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench bench-json fmt clean
+.PHONY: artifacts artifacts-fast build test bench bench-json bench-check fmt clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -26,6 +26,7 @@ test:
 
 bench:
 	cargo bench --bench l1_hotpaths
+	cargo bench --bench l2_serving
 	cargo bench --bench fig8_exec_time
 	cargo bench --bench fig10_energy
 	cargo bench --bench fig11_tile_size
@@ -33,10 +34,23 @@ bench:
 	cargo bench --bench fig13_gpu_energy
 	cargo bench --bench l3_coordinator
 
-# Machine-readable hot-path numbers (MacProfile::compute, 64-lane vs
-# scalar netlist eval, blocked vs naive matmul, SimBackend forward).
+# Machine-readable perf-trajectory numbers: hot paths (MacProfile::compute,
+# 64-lane vs scalar netlist eval, blocked vs naive matmul, SimBackend
+# forward) and sharded serving throughput (1 shard vs N).
 bench-json:
-	cargo bench --bench l1_hotpaths -- --json BENCH_PR2.json
+	cargo bench --bench l1_hotpaths -- --smoke --json BENCH_PR2.json
+	cargo bench --bench l2_serving -- --smoke --json BENCH_PR3.json
+
+# The CI regression gate, runnable locally: fresh smoke JSONs compared
+# against the committed baselines (ratio keys only, see tools/bench_check.rs).
+bench-check:
+	cargo bench --bench l1_hotpaths -- --smoke --json /tmp/halo_l1_smoke.json
+	cargo bench --bench l2_serving -- --smoke --json /tmp/halo_l2_smoke.json
+	cargo run --release --bin bench_check -- --baseline BENCH_PR2.json \
+	  --current /tmp/halo_l1_smoke.json --tol 0.5 \
+	  --keys mac_profile_compute.speedup,netlist_eval.speedup,forward_pass.speedup
+	cargo run --release --bin bench_check -- --baseline BENCH_PR3.json \
+	  --current /tmp/halo_l2_smoke.json --tol 0.3 --keys scaling_throughput
 
 fmt:
 	cargo fmt --check

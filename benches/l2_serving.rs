@@ -1,0 +1,90 @@
+//! Bench: sharded serving throughput (PR 3) — the router → per-shard
+//! batcher → executor path under synthetic CPU-bound load, 1 shard vs N.
+//!
+//! Run: `cargo bench --bench l2_serving [-- --smoke] [-- --json FILE]
+//!       [-- --shards N] [-- --requests M]`
+//!
+//! `--smoke` shrinks the workload to a CI-sized run; `--json FILE` writes
+//! the measured numbers (used by `make bench-json`, which produces
+//! `BENCH_PR3.json` so the perf trajectory accumulates). The per-sequence
+//! busywork is single-threaded (naive kernels), so shard scaling measures
+//! the serving architecture, not the matmul pool. On a 4-core runner the
+//! multi-shard run is expected to clear 1.5× single-shard throughput.
+
+use std::time::Duration;
+
+use halo::coordinator::loadgen::{run, LoadgenConfig};
+use halo::util::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let flag = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let json_path = flag("--json");
+    let shards: usize = flag("--shards")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(4)
+        })
+        .max(2);
+    let requests: usize = flag("--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 96 } else { 768 });
+
+    let base = LoadgenConfig {
+        shards: 1,
+        batch_size: 8,
+        batch_timeout: Duration::from_millis(1),
+        queue_cap: 0,
+        deadline: None,
+        requests,
+        rps: 0.0, // closed firehose: measure the ceiling
+        max_new_tokens: if smoke { 2 } else { 4 },
+        prefix_len: 12,
+        // Same busywork dose in smoke mode: the per-batch cost must stay
+        // comfortably above timer noise or the scaling ratio is mush.
+        work_dim: 48,
+        seed: 0x10AD,
+    };
+
+    let mut report = Json::obj();
+    report.set("bench", "l2_serving").set("smoke", smoke);
+    let mut j_cfg = Json::obj();
+    j_cfg
+        .set("requests", base.requests)
+        .set("max_new_tokens", base.max_new_tokens)
+        .set("work_dim", base.work_dim)
+        .set("multi_shards", shards);
+    report.set("config", j_cfg);
+
+    println!("=== sharded serving throughput (synthetic executor) ===");
+    let one = run(&base).expect("single-shard run");
+    println!("shards=1: {}", one.summary());
+    assert_eq!(one.verified_ok, requests, "single-shard decode verification failed");
+
+    let multi_cfg = LoadgenConfig { shards, ..base.clone() };
+    let multi = run(&multi_cfg).expect("multi-shard run");
+    println!("shards={shards}: {}", multi.summary());
+    assert_eq!(multi.verified_ok, requests, "multi-shard decode verification failed");
+
+    let scaling = multi.throughput_rps() / one.throughput_rps().max(1e-12);
+    println!(
+        "scaling: {:.0} → {:.0} req/s = {scaling:.2}x with {shards} shards",
+        one.throughput_rps(),
+        multi.throughput_rps()
+    );
+
+    report.set("single_shard", one.to_json());
+    report.set("multi_shard", multi.to_json());
+    report.set("scaling_throughput", scaling);
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_string_pretty()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

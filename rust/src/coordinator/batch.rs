@@ -108,4 +108,84 @@ mod tests {
         assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
         assert!(b.next_batch().is_none());
     }
+
+    #[test]
+    fn timeout_counts_from_first_request_under_slow_trickle() {
+        // Items arriving every ~8 ms must NOT keep resetting the window:
+        // the batch closes one timeout after the FIRST pending item, so a
+        // 25 ms window admits only ~3 trickled items, never all 10.
+        let (tx, rx) = channel();
+        let feeder = std::thread::spawn(move || {
+            for i in 0..10 {
+                if tx.send(i).is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(8));
+            }
+        });
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 64, timeout: Duration::from_millis(25) },
+            rx,
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let elapsed = t0.elapsed();
+        assert!(batch.len() < 10, "timeout window slid with the trickle: {batch:?}");
+        assert!(!batch.is_empty());
+        // Closed within roughly one timeout of the first item (generous
+        // upper bound for loaded CI machines).
+        assert!(elapsed < Duration::from_millis(500), "took {elapsed:?}");
+        // Drain the rest so the feeder thread can finish.
+        while b.next_batch().is_some() {}
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn close_mid_batch_drains_the_remainder() {
+        // Sender disconnects while a batch is filling: the in-flight batch
+        // must still deliver everything already queued, then end.
+        let (tx, rx) = channel();
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 8, timeout: Duration::from_secs(5) },
+            rx,
+        );
+        let feeder = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+            tx.send(3).unwrap();
+            // Channel closes here, mid-window, long before the 5 s timeout.
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        // Returned on disconnect, not after the full timeout.
+        assert!(t0.elapsed() < Duration::from_secs(4));
+        assert!(b.next_batch().is_none());
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn burst_arrival_never_exceeds_batch_size() {
+        let (tx, rx) = channel();
+        for i in 0..1000 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(
+            BatcherConfig { batch_size: 7, timeout: Duration::from_millis(50) },
+            rx,
+        );
+        let mut total = 0;
+        let mut next_expected = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 7, "over-full batch: {}", batch.len());
+            // FIFO order is preserved across batch boundaries.
+            for x in batch {
+                assert_eq!(x, next_expected);
+                next_expected += 1;
+                total += 1;
+            }
+        }
+        assert_eq!(total, 1000);
+    }
 }

@@ -1,8 +1,16 @@
 //! Serving metrics: counters + latency reservoir, lock-light.
+//!
+//! Each shard owns a `Metrics`; the coordinator also keeps a global
+//! aggregate that every shard records into, so live counters stay O(1) to
+//! read. [`Metrics::merged`] folds any set of per-shard views into one
+//! [`MetricsSnapshot`] (p50/p95/p99 over the union of latency samples),
+//! which is what `halo loadgen` and `benches/l2_serving.rs` report.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::util::Json;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -10,6 +18,15 @@ pub struct Metrics {
     pub responses: AtomicU64,
     pub batches: AtomicU64,
     pub batch_tokens: AtomicU64,
+    /// Tokens produced by autoregressive decode.
+    pub generated_tokens: AtomicU64,
+    /// Requests dropped after admission: deadline expired in queue, or the
+    /// executor failed their batch.
+    pub shed: AtomicU64,
+    /// Requests refused at admission (every shard queue at capacity).
+    pub rejected: AtomicU64,
+    /// Batches whose executor returned an error (logged + shed).
+    pub exec_errors: AtomicU64,
     /// Simulated DVFS transitions accounted by the executor.
     pub dvfs_transitions: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
@@ -41,23 +58,151 @@ impl Metrics {
         self.responses.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Point-in-time copy of everything (percentiles computed over this
+    /// view's own latency samples).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_tokens: self.batch_tokens.load(Ordering::Relaxed),
+            generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            exec_errors: self.exec_errors.load(Ordering::Relaxed),
+            dvfs_transitions: self.dvfs_transitions.load(Ordering::Relaxed),
+            latencies_us: lat,
+        }
+    }
+
+    /// Aggregate per-shard views: counters sum, latency percentiles are
+    /// computed over the union of all samples.
+    pub fn merged<M: AsRef<Metrics>>(views: &[M]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::default();
+        for v in views {
+            let s = v.as_ref().snapshot();
+            out.requests += s.requests;
+            out.responses += s.responses;
+            out.batches += s.batches;
+            out.batch_tokens += s.batch_tokens;
+            out.generated_tokens += s.generated_tokens;
+            out.shed += s.shed;
+            out.rejected += s.rejected;
+            out.exec_errors += s.exec_errors;
+            out.dvfs_transitions += s.dvfs_transitions;
+            out.latencies_us.extend_from_slice(&s.latencies_us);
+        }
+        out.latencies_us.sort_unstable();
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        self.snapshot().summary()
+    }
+}
+
+// `Arc<Metrics>` gets `AsRef<Metrics>` from std's blanket impl; this
+// reflexive impl lets `merged` also take plain `&[&Metrics]` slices.
+impl AsRef<Metrics> for Metrics {
+    fn as_ref(&self) -> &Metrics {
+        self
+    }
+}
+
+/// Plain-data view of [`Metrics`] for reporting/JSON.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub batch_tokens: u64,
+    pub generated_tokens: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub exec_errors: u64,
+    pub dvfs_transitions: u64,
+    /// Sorted ascending.
+    pub latencies_us: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let i = ((self.latencies_us.len() - 1) as f64 * p) as usize;
+        Some(Duration::from_micros(self.latencies_us[i]))
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.responses as f64 / self.batches as f64
+    }
+
+    /// Generated tokens per second over a measured wall-clock window.
+    pub fn tokens_per_sec(&self, wall: Duration) -> f64 {
+        let s = wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / s
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} batches={} occupancy={:.2} p50={:?} p95={:?} dvfs_transitions={}",
-            self.requests.load(Ordering::Relaxed),
-            self.responses.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
+            "requests={} responses={} shed={} rejected={} batches={} occupancy={:.2} \
+             p50={:?} p95={:?} p99={:?} generated={} dvfs_transitions={}",
+            self.requests,
+            self.responses,
+            self.shed,
+            self.rejected,
+            self.batches,
             self.mean_batch_occupancy(),
             self.percentile_latency(0.5).unwrap_or_default(),
             self.percentile_latency(0.95).unwrap_or_default(),
-            self.dvfs_transitions.load(Ordering::Relaxed),
+            self.percentile_latency(0.99).unwrap_or_default(),
+            self.generated_tokens,
+            self.dvfs_transitions,
         )
+    }
+
+    /// JSON object for bench/loadgen reports. `wall` enables tokens/sec
+    /// and requests/sec rates.
+    pub fn to_json(&self, wall: Option<Duration>) -> Json {
+        let us = |p: f64| {
+            self.percentile_latency(p).map_or(Json::Null, |d| Json::Num(d.as_micros() as f64))
+        };
+        let mut j = Json::obj();
+        j.set("requests", self.requests as f64)
+            .set("responses", self.responses as f64)
+            .set("shed", self.shed as f64)
+            .set("rejected", self.rejected as f64)
+            .set("exec_errors", self.exec_errors as f64)
+            .set("batches", self.batches as f64)
+            .set("occupancy", self.mean_batch_occupancy())
+            .set("generated_tokens", self.generated_tokens as f64)
+            .set("dvfs_transitions", self.dvfs_transitions as f64)
+            .set("p50_us", us(0.50))
+            .set("p95_us", us(0.95))
+            .set("p99_us", us(0.99));
+        if let Some(w) = wall {
+            let s = w.as_secs_f64().max(1e-12);
+            j.set("wall_s", s)
+                .set("tokens_per_sec", self.tokens_per_sec(w))
+                .set("requests_per_sec", self.responses as f64 / s);
+        }
+        j
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn percentiles() {
@@ -68,6 +213,10 @@ mod tests {
         assert_eq!(m.percentile_latency(0.5).unwrap(), Duration::from_micros(300));
         assert_eq!(m.percentile_latency(1.0).unwrap(), Duration::from_micros(1000));
         assert!(m.percentile_latency(0.0).unwrap() <= Duration::from_micros(100));
+        assert_eq!(
+            m.snapshot().percentile_latency(0.99).unwrap(),
+            Duration::from_micros(1000)
+        );
     }
 
     #[test]
@@ -76,5 +225,38 @@ mod tests {
         m.responses.store(24, Ordering::Relaxed);
         m.batches.store(4, Ordering::Relaxed);
         assert_eq!(m.mean_batch_occupancy(), 6.0);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_unions_latencies() {
+        let a = Arc::new(Metrics::default());
+        let b = Arc::new(Metrics::default());
+        a.responses.store(3, Ordering::Relaxed);
+        b.responses.store(5, Ordering::Relaxed);
+        a.generated_tokens.store(30, Ordering::Relaxed);
+        b.generated_tokens.store(50, Ordering::Relaxed);
+        a.record_latency(Duration::from_micros(100));
+        b.record_latency(Duration::from_micros(900));
+        let s = Metrics::merged(&[a, b]);
+        assert_eq!(s.responses, 8);
+        assert_eq!(s.generated_tokens, 80);
+        assert_eq!(s.latencies_us, vec![100, 900]);
+        assert_eq!(s.percentile_latency(1.0).unwrap(), Duration::from_micros(900));
+        assert_eq!(s.tokens_per_sec(Duration::from_secs(2)), 40.0);
+    }
+
+    #[test]
+    fn snapshot_json_has_percentiles_and_rates() {
+        let m = Metrics::default();
+        m.responses.store(10, Ordering::Relaxed);
+        m.generated_tokens.store(20, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(500));
+        let j = m.snapshot().to_json(Some(Duration::from_secs(2)));
+        assert_eq!(j.req("p50_us").unwrap().as_f64().unwrap(), 500.0);
+        assert_eq!(j.req("tokens_per_sec").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.req("requests_per_sec").unwrap().as_f64().unwrap(), 5.0);
+        // Round-trips through the in-crate JSON emitter/parser.
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.req("responses").unwrap().as_f64().unwrap(), 10.0);
     }
 }

@@ -1,21 +1,41 @@
-//! L3 serving coordinator: request router → dynamic batcher → executor.
+//! L3 serving coordinator: router → sharded batchers → executor threads.
 //!
 //! The offline build has no tokio, so the coordinator is built directly on
 //! std threads + channels (arguably closer to the deterministic lockstep
 //! the paper's systolic target wants anyway). Python never appears here:
-//! the executor thread owns the graph executable loaded from `artifacts/`
+//! each executor thread owns a graph executable loaded from `artifacts/`
 //! through the runtime backend (sim by default, PJRT with `--features
 //! xla`).
 //!
+//! Architecture (PR 3):
+//!
+//! ```text
+//!            submit / submit_spec
+//!                    │ round-robin + least-loaded stealing,
+//!                    │ bounded queues (admission control)
+//!        ┌───────────┼───────────┐
+//!     shard 0     shard 1  …  shard N-1        (threads)
+//!     Batcher     Batcher     Batcher          (dynamic batching)
+//!     Executor    Executor    Executor         (GraphExecutor / fake)
+//!        │           │           │   deadline shed, decode loop
+//!        └───────────┴───────────┘
+//!          per-shard Metrics  →  Metrics::merged (p50/p95/p99, tok/s)
+//! ```
+//!
 //! DVFS-awareness (§III-C3): each quantized model carries a
-//! [`crate::dvfs::Schedule`]; the executor executes whole batches and
-//! accounts the simulated per-class residency + transition overhead into
-//! the metrics, mirroring how the systolic array would clock the pass.
+//! [`crate::dvfs::Schedule`]; [`Schedule::shard`](crate::dvfs::Schedule::shard)
+//! splits it so every executor accounts its own per-class residency +
+//! transition overhead into the metrics, mirroring how each slice of the
+//! systolic array would clock its pass.
 
 pub mod batch;
+pub mod loadgen;
 pub mod metrics;
 pub mod server;
 
 pub use batch::{Batcher, BatcherConfig};
-pub use metrics::Metrics;
-pub use server::{BatchExecutor, Coordinator, Request, Response};
+pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{
+    BatchExecutor, Coordinator, CoordinatorConfig, Request, Response, SubmitSpec,
+};

@@ -1,18 +1,29 @@
-//! The coordinator: router → batcher → executor threads.
+//! The coordinator: router → per-shard batcher → executor threads.
 //!
-//! The executor is abstracted behind [`BatchExecutor`] so the coordinator's
-//! routing/batching invariants are testable without a model; the production
-//! executor ([`GraphExecutor`]) owns the loaded `fwd` graph and the
-//! quantized parameter buffers on whichever runtime backend is active
-//! (PJRT handles are not `Send`, so the executor is *constructed inside*
-//! its thread via a factory closure).
+//! PR 3 scales the serving path from one executor to **N sharded executor
+//! threads**. Each shard owns a bounded request queue, a [`Batcher`], and a
+//! [`BatchExecutor`] constructed *inside* the shard thread via a factory
+//! closure (PJRT handles are not `Send`). The router round-robins across
+//! shards but steals toward the least-loaded queue; admission control
+//! rejects new work when every queue is at capacity, and requests whose
+//! deadline expired while queued are shed before execution instead of
+//! burning executor time.
+//!
+//! The executor is abstracted behind [`BatchExecutor`] so the
+//! routing/batching/shedding invariants are testable without a model; the
+//! production executor ([`GraphExecutor`]) owns the loaded `fwd` graph and
+//! the quantized parameter buffers on whichever runtime backend is active.
+//! Full autoregressive decode is a provided method
+//! ([`BatchExecutor::generate`]): run the forward pass, take the argmax
+//! next token per sequence, re-feed it, repeat — reusing the padded-batch
+//! plumbing of [`BatchExecutor::run`].
 
 use std::collections::BTreeMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -22,12 +33,18 @@ use crate::dvfs::Schedule;
 use crate::quant::Matrix;
 use crate::runtime::{literal_i32, Buffer, ModelArtifacts, Runtime};
 
-/// One inference request: a token prefix; the response carries the argmax
-/// next token at the prefix end.
+/// One inference request: a token prefix plus decode/deadline metadata.
+/// The response carries the autoregressively generated tokens.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// How many tokens to decode (1 = classic next-token serving).
+    pub max_new_tokens: usize,
+    /// Absolute shed deadline: if it passes while the request is queued,
+    /// the executor sheds it (empty `tokens`, `shed = true`) instead of
+    /// running it.
+    pub deadline: Option<Instant>,
     pub respond: Sender<Response>,
     pub submitted: Instant,
 }
@@ -35,8 +52,17 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// First generated token (back-compat with next-token serving); 0 when
+    /// shed.
     pub next_token: i32,
-    pub latency: std::time::Duration,
+    /// All generated tokens, in order (empty when shed).
+    pub tokens: Vec<i32>,
+    pub latency: Duration,
+    /// Which shard executed (or shed) the request.
+    pub shard: usize,
+    /// True when the request was dropped by deadline shedding or admission
+    /// control instead of executed.
+    pub shed: bool,
 }
 
 /// What the executor thread runs per batch: padded token matrix in, one
@@ -51,6 +77,48 @@ pub trait BatchExecutor {
     fn dvfs_transitions(&self) -> usize {
         0
     }
+
+    /// Autoregressive decode: repeatedly [`run`](Self::run) the batch,
+    /// append each sequence's argmax token, and re-feed it, until sequence
+    /// `i` has `max_new[i]` generated tokens. Sequences at the model's
+    /// context window slide (drop-front) so every generated token
+    /// conditions on the `seq_len` most recent tokens. Finished sequences
+    /// drop out of later forward passes. Returns the generated tokens per
+    /// sequence.
+    fn generate(&mut self, prefixes: &[Vec<i32>], max_new: &[usize]) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(prefixes.len() == max_new.len(), "prefixes/max_new length mismatch");
+        let cap = self.seq_len();
+        let mut seqs: Vec<Vec<i32>> = prefixes
+            .iter()
+            .map(|p| p[p.len().saturating_sub(cap)..].to_vec())
+            .collect();
+        let mut out: Vec<Vec<i32>> = prefixes.iter().map(|_| Vec::new()).collect();
+        let steps = max_new.iter().copied().max().unwrap_or(0);
+        for _ in 0..steps {
+            let active: Vec<usize> =
+                (0..seqs.len()).filter(|&i| out[i].len() < max_new[i]).collect();
+            if active.is_empty() {
+                break;
+            }
+            // Finished sequences are compacted out so they stop paying for
+            // forward passes; the full-batch common case avoids the copy.
+            let next = if active.len() == seqs.len() {
+                self.run(&seqs)?
+            } else {
+                let batch: Vec<Vec<i32>> = active.iter().map(|&i| seqs[i].clone()).collect();
+                self.run(&batch)?
+            };
+            anyhow::ensure!(next.len() == active.len(), "executor returned wrong batch size");
+            for (&i, &tok) in active.iter().zip(&next) {
+                out[i].push(tok);
+                if seqs[i].len() >= cap {
+                    seqs[i].remove(0); // slide the context window
+                }
+                seqs[i].push(tok);
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// Production executor: fwd graph + (quantized) parameter buffers, on
@@ -64,11 +132,15 @@ pub struct GraphExecutor {
     seq: usize,
     vocab: usize,
     schedule: Schedule,
+    /// Sim backend accepts any leading batch dim, so partial batches pad
+    /// only to their own size; PJRT compiled a static (B, S).
+    dynamic_batch: bool,
 }
 
 impl GraphExecutor {
     /// Build inside the executor thread. `replace` substitutes quantized
-    /// linear weights; `schedule` is the model's DVFS class schedule.
+    /// linear weights; `schedule` is this executor's DVFS class schedule
+    /// (a whole-model schedule, or one shard of [`Schedule::shard`]).
     pub fn new(
         rt: Runtime,
         model: &ModelArtifacts,
@@ -77,6 +149,7 @@ impl GraphExecutor {
     ) -> Result<Self> {
         let exe = rt.load(&model.graph_path("fwd_fp"))?;
         let params = rt.upload_all(&model.param_literals(replace)?)?;
+        let dynamic_batch = rt.dynamic_batch();
         Ok(Self {
             rt,
             exe,
@@ -85,6 +158,7 @@ impl GraphExecutor {
             seq: model.seq_len,
             vocab: model.vocab,
             schedule,
+            dynamic_batch,
         })
     }
 }
@@ -100,37 +174,33 @@ impl BatchExecutor for GraphExecutor {
 
     fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
         anyhow::ensure!(prefixes.len() <= self.batch, "over-full batch");
-        // Pad to the static (B, S) shape; causality makes right-padding safe.
-        let mut tokens = vec![0i32; self.batch * self.seq];
+        anyhow::ensure!(!prefixes.is_empty(), "empty batch");
+        // Pad to the static (B, S) shape; causality makes right-padding
+        // safe. The sim backend reads B from the literal, so partial
+        // batches only pay for the rows they actually carry. Prefixes
+        // longer than the context window keep their LAST seq tokens — the
+        // newest context is what the next token must condition on.
+        let b = if self.dynamic_batch { prefixes.len() } else { self.batch };
+        let mut tokens = vec![0i32; b * self.seq];
         for (i, p) in prefixes.iter().enumerate() {
             let n = p.len().min(self.seq);
-            tokens[i * self.seq..i * self.seq + n].copy_from_slice(&p[..n]);
+            tokens[i * self.seq..i * self.seq + n].copy_from_slice(&p[p.len() - n..]);
         }
-        let tok_buf = self
-            .rt
-            .upload(&literal_i32(&tokens, &[self.batch, self.seq])?)?;
+        let tok_buf = self.rt.upload(&literal_i32(&tokens, &[b, self.seq])?)?;
         let mut inputs: Vec<&Buffer> = self.params.iter().collect();
         inputs.push(&tok_buf);
-        let out = self.exe.run_b(&inputs)?;
-        let logits: Vec<f32> = out[0].to_vec()?;
-        // logits: (B, S, vocab); read the argmax at each prefix's last pos.
-        let next = prefixes
+        let logits = self.exe.run_b1(&inputs)?;
+        // logits: (b, S, vocab); read the argmax at each prefix's last pos.
+        prefixes
             .iter()
             .enumerate()
             .map(|(i, p)| {
                 // Empty prefixes read position 0 (all-padding row) instead
                 // of underflowing.
                 let pos = p.len().clamp(1, self.seq) - 1;
-                let base = (i * self.seq + pos) * self.vocab;
-                let row = &logits[base..base + self.vocab];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(t, _)| t as i32)
-                    .unwrap_or(0)
+                logits.argmax_span((i * self.seq + pos) * self.vocab, self.vocab)
             })
-            .collect();
-        Ok(next)
+            .collect()
     }
 
     fn dvfs_transitions(&self) -> usize {
@@ -138,77 +208,228 @@ impl BatchExecutor for GraphExecutor {
     }
 }
 
+/// Coordinator-wide configuration: per-shard batching plus routing and
+/// admission-control knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    /// Executor shards (threads). Each owns its own queue + executor.
+    pub shards: usize,
+    /// Per-shard queue bound for admission control; 0 = unbounded.
+    pub queue_cap: usize,
+    /// Deadline applied to requests submitted without an explicit one.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            shards: 1,
+            queue_cap: 0,
+            default_deadline: None,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn sharded(shards: usize) -> Self {
+        Self { shards: shards.max(1), ..Self::default() }
+    }
+}
+
+/// Everything `submit_spec` needs to route one request.
+#[derive(Debug, Clone)]
+pub struct SubmitSpec {
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitSpec {
+    pub fn next_token(tokens: Vec<i32>) -> Self {
+        Self { tokens, max_new_tokens: 1, deadline: None }
+    }
+
+    pub fn generate(tokens: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { tokens, max_new_tokens: max_new_tokens.max(1), deadline: None }
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(Instant::now() + d);
+        self
+    }
+}
+
+struct Shard {
+    tx: Option<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    /// Requests queued (sent, not yet pulled into a batch).
+    depth: Arc<AtomicUsize>,
+    /// Set by the shard thread when its executor failed to construct: the
+    /// router must skip it (its instant drain-and-shed would otherwise
+    /// keep its queue depth near zero and attract all least-loaded
+    /// routing, starving healthy shards).
+    dead: Arc<std::sync::atomic::AtomicBool>,
+    metrics: Arc<Metrics>,
+}
+
 /// The running coordinator.
 pub struct Coordinator {
-    tx: Option<Sender<Request>>,
-    handle: Option<JoinHandle<Result<()>>>,
+    shards: Vec<Shard>,
+    cfg: CoordinatorConfig,
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    /// Aggregate metrics across all shards (live counters; per-shard views
+    /// via [`Coordinator::shard_metrics`]).
     pub metrics: Arc<Metrics>,
-    next_id: std::sync::atomic::AtomicU64,
 }
 
 impl Coordinator {
-    /// Start with an executor factory (runs on the executor thread — PJRT
-    /// handles never cross threads).
+    /// Single-shard back-compat constructor: one executor thread, unbounded
+    /// queue, no default deadline.
     pub fn start<F>(cfg: BatcherConfig, make_executor: F) -> Self
     where
         F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
     {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let coord_cfg = CoordinatorConfig { batcher: cfg, ..CoordinatorConfig::default() };
+        Self::start_with(coord_cfg, vec![Box::new(make_executor) as ShardFactory])
+    }
+
+    /// Start `cfg.shards` executor threads. `make_executor(shard)` runs on
+    /// each shard's own thread (PJRT handles never cross threads).
+    pub fn start_sharded<F>(cfg: CoordinatorConfig, make_executor: F) -> Self
+    where
+        F: Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
+    {
+        let n = cfg.shards.max(1);
+        let f = Arc::new(make_executor);
+        let factories: Vec<ShardFactory> = (0..n)
+            .map(|s| {
+                let f = f.clone();
+                Box::new(move || f(s)) as ShardFactory
+            })
+            .collect();
+        Self::start_with(cfg, factories)
+    }
+
+    fn start_with(cfg: CoordinatorConfig, factories: Vec<ShardFactory>) -> Self {
         let metrics = Arc::new(Metrics::default());
-        let m = metrics.clone();
-        let handle = std::thread::spawn(move || -> Result<()> {
-            let mut exec = make_executor()?;
-            let cfg = BatcherConfig {
-                batch_size: cfg.batch_size.min(exec.batch_capacity()),
-                ..cfg
-            };
-            let batcher = Batcher::new(cfg, rx);
-            while let Some(batch) = batcher.next_batch() {
-                let prefixes: Vec<Vec<i32>> =
-                    batch.iter().map(|r| r.tokens.clone()).collect();
-                let next = exec.run(&prefixes)?;
-                m.batches.fetch_add(1, Ordering::Relaxed);
-                m.batch_tokens
-                    .fetch_add(prefixes.iter().map(|p| p.len() as u64).sum(), Ordering::Relaxed);
-                m.dvfs_transitions
-                    .fetch_add(exec.dvfs_transitions() as u64, Ordering::Relaxed);
-                for (req, tok) in batch.into_iter().zip(next) {
-                    let latency = req.submitted.elapsed();
-                    m.record_latency(latency);
-                    m.responses.fetch_add(1, Ordering::Relaxed);
-                    // Receiver may have gone away; that's the client's loss.
-                    let _ = req.respond.send(Response { id: req.id, next_token: tok, latency });
-                }
-            }
-            Ok(())
-        });
+        let shards: Vec<Shard> = factories
+            .into_iter()
+            .enumerate()
+            .map(|(s, f)| spawn_shard(s, f, cfg.batcher.clone(), metrics.clone()))
+            .collect();
         Self {
-            tx: Some(tx),
-            handle: Some(handle),
+            shards,
+            cfg,
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
             metrics,
-            next_id: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
-    /// Submit a prefix; returns the response channel.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard metrics views (index = shard id).
+    pub fn shard_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.metrics.clone()).collect()
+    }
+
+    /// Aggregate snapshot: per-shard serving metrics merged (percentiles
+    /// over the union of latency samples) plus the submission-side
+    /// counters (arrivals, admission rejections) that only the
+    /// coordinator's global view records.
+    pub fn merged_snapshot(&self) -> super::metrics::MetricsSnapshot {
+        let mut s = Metrics::merged(&self.shard_metrics());
+        let g = self.metrics.snapshot();
+        s.requests = g.requests;
+        s.rejected = g.rejected;
+        s
+    }
+
+    /// Submit a next-token request (back-compat). Never panics: when the
+    /// request cannot be accepted (all queues full or all executors gone),
+    /// the returned channel yields a `shed` response instead.
     pub fn submit(&self, tokens: Vec<i32>) -> Receiver<Response> {
+        self.submit_spec(SubmitSpec::next_token(tokens))
+    }
+
+    /// Submit with full control over decode length and deadline.
+    pub fn submit_spec(&self, spec: SubmitSpec) -> Receiver<Response> {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, tokens, respond: rtx, submitted: Instant::now() };
-        self.tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(req)
-            .expect("executor thread died");
+        let deadline = spec
+            .deadline
+            .or_else(|| self.cfg.default_deadline.map(|d| Instant::now() + d));
+        let mut req = Request {
+            id,
+            tokens: spec.tokens,
+            max_new_tokens: spec.max_new_tokens.max(1),
+            deadline,
+            respond: rtx,
+            submitted: Instant::now(),
+        };
+
+        // Route: start at the round-robin cursor, prefer the least-loaded
+        // shard (ties keep the round-robin order), skip shards over the
+        // queue bound or with a dead executor.
+        let n = self.shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
+        // Snapshot each depth exactly once: re-reading the live atomics per
+        // comparison could present the sort with an inconsistent order
+        // (which std's sort detects by panicking).
+        order.sort_by_cached_key(|&s| self.shards[s].depth.load(Ordering::Relaxed));
+        for &s in &order {
+            let shard = &self.shards[s];
+            if shard.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            let Some(tx) = shard.tx.as_ref() else { continue };
+            // Reserve the queue slot before sending (a check-then-add gap
+            // would let concurrent submitters overshoot the cap).
+            let prev = shard.depth.fetch_add(1, Ordering::Relaxed);
+            if self.cfg.queue_cap > 0 && prev >= self.cfg.queue_cap {
+                shard.depth.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            match tx.send(req) {
+                Ok(()) => return rrx,
+                Err(std::sync::mpsc::SendError(r)) => {
+                    // Executor thread died; try the next shard.
+                    shard.depth.fetch_sub(1, Ordering::Relaxed);
+                    req = r;
+                }
+            }
+        }
+
+        // Rejected: every queue is full (backpressure) or every executor is
+        // gone. Answer on the caller's channel rather than panicking.
+        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(Response {
+            id,
+            next_token: 0,
+            tokens: Vec::new(),
+            latency: req.submitted.elapsed(),
+            shard: usize::MAX,
+            shed: true,
+        });
         rrx
     }
 
-    /// Drain and stop the executor thread.
+    /// Drain and stop every shard.
     pub fn shutdown(mut self) -> Result<()> {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            h.join().expect("executor thread panicked")?;
+        for s in &mut self.shards {
+            drop(s.tx.take());
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                h.join().expect("shard thread panicked");
+            }
         }
         Ok(())
     }
@@ -216,11 +437,132 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for s in &mut self.shards {
+            drop(s.tx.take());
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
         }
     }
+}
+
+type ShardFactory = Box<dyn FnOnce() -> Result<Box<dyn BatchExecutor>> + Send>;
+
+/// Spawn one shard: queue + batcher + executor loop. The loop never
+/// propagates per-batch errors out of the thread — a failed batch or a
+/// client that dropped its receiver is logged and the shard keeps serving
+/// (the seed implementation `?`-ed out and wedged every queued client).
+fn spawn_shard(
+    shard_id: usize,
+    make_executor: ShardFactory,
+    batcher_cfg: BatcherConfig,
+    global: Arc<Metrics>,
+) -> Shard {
+    let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+    let metrics = Arc::new(Metrics::default());
+    let m = metrics.clone();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let d = depth.clone();
+    let dead = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let dead_flag = dead.clone();
+    let handle = std::thread::spawn(move || {
+        let mut exec = match make_executor() {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("[coordinator] shard {shard_id}: executor construction failed: {e:#}");
+                // Take the shard out of rotation, then drain anything that
+                // raced in so those clients get shed responses instead of
+                // hanging.
+                dead_flag.store(true, Ordering::Relaxed);
+                while let Ok(req) = rx.recv() {
+                    d.fetch_sub(1, Ordering::Relaxed);
+                    shed_one(shard_id, req, &m, &global);
+                }
+                return;
+            }
+        };
+        let cfg = BatcherConfig {
+            batch_size: batcher_cfg.batch_size.min(exec.batch_capacity()).max(1),
+            ..batcher_cfg
+        };
+        let batcher = Batcher::new(cfg, rx);
+        while let Some(batch) = batcher.next_batch() {
+            d.fetch_sub(batch.len(), Ordering::Relaxed);
+            // Shed-on-deadline: drop requests that expired while queued.
+            let now = Instant::now();
+            let (live, expired): (Vec<Request>, Vec<Request>) =
+                batch.into_iter().partition(|r| match r.deadline {
+                    Some(dl) => now <= dl,
+                    None => true,
+                });
+            for req in expired {
+                shed_one(shard_id, req, &m, &global);
+            }
+            if live.is_empty() {
+                continue;
+            }
+
+            let prefixes: Vec<Vec<i32>> = live.iter().map(|r| r.tokens.clone()).collect();
+            let max_new: Vec<usize> = live.iter().map(|r| r.max_new_tokens).collect();
+            let generated = match exec.generate(&prefixes, &max_new) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("[coordinator] shard {shard_id}: batch failed: {e:#}");
+                    for g in [&m, &global] {
+                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for req in live {
+                        shed_one(shard_id, req, &m, &global);
+                    }
+                    continue;
+                }
+            };
+
+            let n_tokens: u64 = generated.iter().map(|g| g.len() as u64).sum();
+            let batch_tokens: u64 = prefixes.iter().map(|p| p.len() as u64).sum();
+            let transitions = exec.dvfs_transitions() as u64;
+            for g in [&m, &global] {
+                g.batches.fetch_add(1, Ordering::Relaxed);
+                g.batch_tokens.fetch_add(batch_tokens, Ordering::Relaxed);
+                g.generated_tokens.fetch_add(n_tokens, Ordering::Relaxed);
+                g.dvfs_transitions.fetch_add(transitions, Ordering::Relaxed);
+            }
+            for (req, toks) in live.into_iter().zip(generated) {
+                let latency = req.submitted.elapsed();
+                for g in [&m, &global] {
+                    g.record_latency(latency);
+                    g.responses.fetch_add(1, Ordering::Relaxed);
+                }
+                // Receiver may have gone away (client disconnect); that
+                // must never unwind or stall the shard.
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    next_token: toks.first().copied().unwrap_or(0),
+                    tokens: toks,
+                    latency,
+                    shard: shard_id,
+                    shed: false,
+                });
+            }
+        }
+    });
+    Shard { tx: Some(tx), handle: Some(handle), depth, dead, metrics }
+}
+
+fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics) {
+    for g in [m, global] {
+        g.shed.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = req.respond.send(Response {
+        id: req.id,
+        next_token: 0,
+        tokens: Vec::new(),
+        latency: req.submitted.elapsed(),
+        shard: shard_id,
+        shed: true,
+    });
 }
 
 #[cfg(test)]
@@ -256,6 +598,17 @@ mod tests {
         )
     }
 
+    fn start_shards(n: usize, batch: usize) -> Coordinator {
+        Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: batch, timeout: Duration::from_millis(2) },
+                shards: n,
+                ..CoordinatorConfig::default()
+            },
+            move |_shard| Ok(Box::new(Echo { cap: batch }) as Box<dyn BatchExecutor>),
+        )
+    }
+
     #[test]
     fn every_request_answered_exactly_once() {
         let c = start(4);
@@ -272,6 +625,7 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.id, id);
             assert_eq!(resp.next_token, tok);
+            assert!(!resp.shed);
             // one response only
             assert!(rx.recv_timeout(Duration::from_millis(1)).is_err());
         }
@@ -312,5 +666,277 @@ mod tests {
         let rx = c.submit(vec![1, 2, 3]);
         c.shutdown().unwrap();
         assert_eq!(rx.recv().unwrap().next_token, 6);
+    }
+
+    // ------------------------------------------------- sharded serving
+
+    #[test]
+    fn sharded_answers_every_request_and_spreads_load() {
+        let c = start_shards(4, 4);
+        assert_eq!(c.n_shards(), 4);
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..200i32 {
+            want.push((i % 50) % 97);
+            rxs.push(c.submit(vec![i % 50]));
+        }
+        for (rx, want) in rxs.into_iter().zip(want) {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.next_token, want);
+            assert!(r.shard < 4);
+        }
+        // Router spread work across shards: no shard did everything.
+        let busy: Vec<u64> = c
+            .shard_metrics()
+            .iter()
+            .map(|m| m.responses.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(busy.iter().sum::<u64>(), 200);
+        assert!(busy.iter().filter(|&&b| b > 0).count() >= 2, "one shard took all: {busy:?}");
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn generate_decodes_multiple_tokens() {
+        // Echo's next token is (sum of prefix) % 97, so the decode chain is
+        // deterministic and checkable in plain code.
+        let c = start_shards(2, 4);
+        let prefix = vec![3, 5];
+        let rx = c.submit_spec(SubmitSpec::generate(prefix.clone(), 4));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let mut seq = prefix;
+        let mut want = Vec::new();
+        for _ in 0..4 {
+            let t = seq.iter().sum::<i32>() % 97;
+            want.push(t);
+            seq.push(t);
+        }
+        assert_eq!(r.tokens, want);
+        assert_eq!(r.next_token, want[0]);
+        assert_eq!(c.metrics.generated_tokens.load(Ordering::Relaxed), 4);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn generate_slides_context_at_seq_cap() {
+        // seq_len = 16; a 16-token prefix forces the slide path.
+        let c = start(2);
+        let rx = c.submit_spec(SubmitSpec::generate(vec![1; 16], 3));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.tokens.len(), 3);
+        c.shutdown().unwrap();
+    }
+
+    /// Echo's decode chain under the sliding window, mirrored in plain code.
+    fn echo_chain(prefix: &[i32], cap: usize, steps: usize) -> Vec<i32> {
+        let mut seq: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+        let mut want = Vec::new();
+        for _ in 0..steps {
+            let t = seq.iter().sum::<i32>() % 97;
+            want.push(t);
+            if seq.len() >= cap {
+                seq.remove(0);
+            }
+            seq.push(t);
+        }
+        want
+    }
+
+    #[test]
+    fn generate_conditions_on_newest_context_for_long_prefixes() {
+        // A 40-token prefix against seq_len = 16: decode must condition on
+        // the LAST 16 tokens, not the first.
+        let c = start(4);
+        let prefix: Vec<i32> = (0..40).collect();
+        let rx = c.submit_spec(SubmitSpec::generate(prefix.clone(), 3));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.tokens, echo_chain(&prefix, 16, 3));
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn mixed_decode_lengths_in_one_batch() {
+        // Different max_new in one batch: short requests finish early (and
+        // drop out of later forward passes), long ones keep decoding.
+        let c = start(4);
+        let rx1 = c.submit_spec(SubmitSpec::generate(vec![1], 1));
+        let rx2 = c.submit_spec(SubmitSpec::generate(vec![2], 5));
+        let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.tokens, echo_chain(&[1], 16, 1));
+        assert_eq!(r2.tokens, echo_chain(&[2], 16, 5));
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_shard_is_skipped_and_healthy_shards_serve() {
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                shards: 2,
+                ..CoordinatorConfig::default()
+            },
+            move |shard| {
+                if shard == 0 {
+                    anyhow::bail!("shard 0 never comes up");
+                }
+                Ok(Box::new(Echo { cap: 2 }) as Box<dyn BatchExecutor>)
+            },
+        );
+        // Let shard 0 mark itself out of rotation; afterwards everything
+        // must be served by shard 1 rather than shed by the dead shard.
+        std::thread::sleep(Duration::from_millis(200));
+        let rxs: Vec<_> = (0..20).map(|i| c.submit(vec![i])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(!r.shed, "request {i} shed despite a healthy shard");
+            assert_eq!(r.shard, 1);
+        }
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_not_run() {
+        // Deadline already in the past: the shard must shed, not execute.
+        let c = start(4);
+        let spec = SubmitSpec {
+            tokens: vec![1, 2, 3],
+            max_new_tokens: 1,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+        };
+        let r = c.submit_spec(spec).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.shed);
+        assert!(r.tokens.is_empty());
+        assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.responses.load(Ordering::Relaxed), 0);
+        c.shutdown().unwrap();
+    }
+
+    /// Executor that blocks until released — lets tests fill queues
+    /// deterministically.
+    struct Gate {
+        release: Receiver<()>,
+    }
+
+    impl BatchExecutor for Gate {
+        fn batch_capacity(&self) -> usize {
+            1
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            let _ = self.release.recv();
+            Ok(vec![0; prefixes.len()])
+        }
+    }
+
+    #[test]
+    fn full_queues_reject_with_backpressure() {
+        let (gate_tx, gate_rx) = channel::<()>();
+        let gate_rx = std::sync::Mutex::new(Some(gate_rx));
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
+                shards: 1,
+                queue_cap: 2,
+                ..CoordinatorConfig::default()
+            },
+            move |_s| {
+                let rx = gate_rx.lock().unwrap().take().expect("single shard");
+                Ok(Box::new(Gate { release: rx }) as Box<dyn BatchExecutor>)
+            },
+        );
+        // First request occupies the executor; then fill the queue beyond
+        // the cap. Depth only decrements when the batcher pulls, so after
+        // cap is reached submissions must come back shed immediately.
+        let mut rxs = Vec::new();
+        for i in 0..8i32 {
+            rxs.push(c.submit(vec![i]));
+            // Give the shard a beat to pull the first request into a batch.
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        let rejected = c.metrics.rejected.load(Ordering::Relaxed);
+        assert!(rejected >= 1, "queue_cap=2 never rejected under an 8-deep burst");
+        // Release the gate for every possible run call, then drain.
+        for _ in 0..16 {
+            let _ = gate_tx.send(());
+        }
+        let mut shed = 0;
+        let mut ok = 0;
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            if r.shed {
+                shed += 1;
+            } else {
+                ok += 1;
+            }
+        }
+        assert_eq!(shed as u64, rejected);
+        assert!(ok >= 2); // executor slot + queued requests under the cap
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dropped_receiver_does_not_wedge_the_shard() {
+        let c = start(2);
+        // Client gives up immediately: drop the receiver before the shard
+        // responds.
+        drop(c.submit(vec![1, 2]));
+        // The shard must still be alive and serving.
+        let rx = c.submit(vec![4, 4]);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().next_token, 8);
+        c.shutdown().unwrap();
+    }
+
+    /// Executor whose first run() fails — the shard must shed the batch
+    /// and keep serving rather than kill the thread.
+    struct Faulty {
+        fail_first: u32,
+    }
+
+    impl BatchExecutor for Faulty {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            if self.fail_first > 0 {
+                self.fail_first -= 1;
+                anyhow::bail!("injected executor fault");
+            }
+            Ok(prefixes.iter().map(|p| p.len() as i32).collect())
+        }
+    }
+
+    #[test]
+    fn executor_error_sheds_batch_and_shard_survives() {
+        let c = Coordinator::start(
+            BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
+            || Ok(Box::new(Faulty { fail_first: 1 }) as Box<dyn BatchExecutor>),
+        );
+        let r1 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r1.shed, "failed batch must shed its requests");
+        let r2 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r2.shed);
+        assert_eq!(r2.next_token, 3);
+        assert_eq!(c.metrics.exec_errors.load(Ordering::Relaxed), 1);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_after_total_executor_loss_sheds_instead_of_panicking() {
+        // Executor construction fails: the shard drains with shed
+        // responses and later submissions still answer.
+        let c = Coordinator::start(BatcherConfig::default(), || {
+            anyhow::bail!("no executor today")
+        });
+        let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.shed);
+        c.shutdown().unwrap();
     }
 }

@@ -55,6 +55,29 @@ impl Schedule {
         self.groups.iter().map(|g| g.tiles.len()).sum()
     }
 
+    /// Partition a whole-model schedule across `n` executor shards
+    /// (round-robin within each class group, preserving class order), so
+    /// each shard applies — and accounts — only its own slice of the DVFS
+    /// plan. Class grouping is preserved per shard, so per-shard
+    /// transitions never exceed the parent schedule's; the union of shard
+    /// tiles is exactly the parent's tile set. `n = 1` returns a clone.
+    pub fn shard(&self, n: usize) -> Vec<Schedule> {
+        let n = n.max(1);
+        let mut out: Vec<Schedule> = (0..n).map(|_| Schedule::default()).collect();
+        for g in &self.groups {
+            let mut per: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for (i, &t) in g.tiles.iter().enumerate() {
+                per[i % n].push(t);
+            }
+            for (s, tiles) in per.into_iter().enumerate() {
+                if !tiles.is_empty() {
+                    out[s].groups.push(Group { class: g.class, tiles });
+                }
+            }
+        }
+        out
+    }
+
     /// Invariant check: every input tile appears exactly once and groups
     /// are class-homogeneous. Used by tests and the coordinator.
     pub fn validate(&self, n_tiles: usize, classes: &[FreqClass]) -> bool {
@@ -110,6 +133,38 @@ mod tests {
         let s = Schedule::cluster(&all_fast);
         assert_eq!(s.transitions(), 1);
         assert_eq!(s.n_tiles(), 64);
+    }
+
+    #[test]
+    fn shard_partitions_tiles_and_keeps_class_grouping() {
+        for n in [1usize, 2, 3, 4, 7] {
+            let classes = random_classes(100, 3);
+            let s = Schedule::cluster(&classes);
+            let shards = s.shard(n);
+            assert_eq!(shards.len(), n);
+            // Union of shard tiles == parent tiles, each exactly once.
+            let mut seen = vec![0u32; 100];
+            for sh in &shards {
+                assert!(sh.transitions() <= s.transitions());
+                for g in &sh.groups {
+                    for &t in &g.tiles {
+                        assert_eq!(classes[t], g.class, "shard group not class-homogeneous");
+                        seen[t] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "tiles lost or duplicated (n={n})");
+        }
+    }
+
+    #[test]
+    fn shard_one_is_identity() {
+        let classes = random_classes(64, 4);
+        let s = Schedule::cluster(&classes);
+        let one = &s.shard(1)[0];
+        assert_eq!(one.transitions(), s.transitions());
+        assert_eq!(one.n_tiles(), s.n_tiles());
+        assert!(one.validate(64, &classes));
     }
 
     #[test]

@@ -25,12 +25,23 @@ COMMANDS
   table2 [--models a,b] [--max-batches N]    Table II (end-to-end eval)
   fig8 | fig10 | fig11 | fig12 [--tile T]    simulator figures
   ablate dram|dvfs-overhead|derived-ladder   ablation studies
-  serve --model M [--requests N]             serving coordinator demo
+  serve --model M [--shards N] [--requests R] [--max-new T]
+                         sharded serving demo (quantize → route → decode)
+  loadgen [--shards N] [--rps R] [--requests M] [--json FILE]
+                         synthetic serving load (no artifacts needed)
   all [--max-batches N]                      regenerate everything → results/
 
 OPTIONS
   --artifacts DIR   artifact root (default: ./artifacts or $HALO_ARTIFACTS)
   --out DIR         report output dir (default: ./results)
+
+SERVING OPTIONS (serve / loadgen)
+  --shards N        executor shards/threads (serve: 1, loadgen: 4)
+  --max-new T       tokens to decode per request (default 1 / 4)
+  --queue-cap Q     per-shard admission bound, 0 = unbounded
+  --deadline-ms D   shed requests older than D ms, 0 = no deadline
+  --rps R           loadgen arrival rate, 0 = as fast as possible
+  --work W          loadgen per-sequence busywork matmul side (default 48)
 ";
 
 fn main() -> Result<()> {
@@ -53,6 +64,7 @@ fn main() -> Result<()> {
         }
         Some("ablate") => cmd_ablate(&args, &out)?,
         Some("serve") => cmd_serve(&args)?,
+        Some("loadgen") => cmd_loadgen(&args)?,
         Some("all") => cmd_all(&args, &out)?,
         _ => {
             print!("{HELP}");
@@ -188,70 +200,142 @@ fn cmd_ablate(args: &Args, out: &std::path::Path) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use halo::coordinator::server::GraphExecutor;
-    use halo::coordinator::{BatcherConfig, Coordinator};
+    use halo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, SubmitSpec};
     use halo::dvfs::Schedule;
     use halo::model::calibrate_fisher;
     use halo::quant::{HaloConfig, HaloQuantizer, Quantizer, Variant};
     use halo::runtime::Runtime;
     use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Duration;
 
     let store = open_store(args)?;
     let model_name = args.str_or("model", "base").to_string();
     let n_requests = args.usize_or("requests", 64)?;
-    let root = store.root.clone();
+    let n_shards = args.usize_or("shards", 1)?.max(1);
+    let max_new = args.usize_or("max-new", 1)?.max(1);
+    let queue_cap = args.usize_or("queue-cap", 0)?;
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
 
-    let coord = Coordinator::start(BatcherConfig::default(), move || {
-        let rt = Runtime::cpu()?;
-        let store = Store::open(root)?;
-        let model = store.model(&model_name)?;
-        // Quantize with HALO-bal before serving (the paper's deployment).
-        let calib = store.corpus_calib()?;
-        let grads = calibrate_fisher(&rt, &model, &calib, 2)?;
-        let profile = MacProfile::cached();
-        let q = HaloQuantizer::new(HaloConfig::new(128, Variant::Bal), profile);
-        let mut replace = BTreeMap::new();
-        let mut classes = Vec::new();
-        for p in model.linear_params() {
-            let w = p.as_matrix()?;
-            let ctx = match grads.get(&p.name) {
-                Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
-                None => halo::quant::LayerCtx::new(&p.name),
-            };
-            let res = q.quantize(&w, &ctx);
-            for &f in &res.tile_freq_ghz {
-                classes.push(halo::dvfs::classify(f, profile));
-            }
-            replace.insert(p.name.clone(), res.dequant);
+    // Quantize once on the main thread (HALO-bal, the paper's deployment),
+    // then share the artifacts + replacements across the shard factories.
+    let rt = Runtime::cpu()?;
+    let model = store.model(&model_name)?;
+    let calib = store.corpus_calib()?;
+    let grads = calibrate_fisher(&rt, &model, &calib, 2)?;
+    let profile = MacProfile::cached();
+    let q = HaloQuantizer::new(HaloConfig::new(128, Variant::Bal), profile);
+    let mut replace = BTreeMap::new();
+    let mut classes = Vec::new();
+    for p in model.linear_params() {
+        let w = p.as_matrix()?;
+        let ctx = match grads.get(&p.name) {
+            Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
+            None => halo::quant::LayerCtx::new(&p.name),
+        };
+        let res = q.quantize(&w, &ctx);
+        for &f in &res.tile_freq_ghz {
+            classes.push(halo::dvfs::classify(f, profile));
         }
-        let schedule = Schedule::cluster(&classes);
-        eprintln!(
-            "[serve] quantized {} tiles, schedule groups={} transitions={}",
-            classes.len(),
-            schedule.groups.len(),
-            schedule.transitions()
-        );
-        let exec = GraphExecutor::new(rt, &model, &replace, schedule)?;
+        replace.insert(p.name.clone(), res.dequant);
+    }
+    let schedule = Schedule::cluster(&classes);
+    eprintln!(
+        "[serve] quantized {} tiles, schedule groups={} transitions={}, shards={n_shards}",
+        classes.len(),
+        schedule.groups.len(),
+        schedule.transitions()
+    );
+
+    let model = Arc::new(model);
+    let replace = Arc::new(replace);
+    let shard_schedules = Arc::new(schedule.shard(n_shards));
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig::default(),
+        shards: n_shards,
+        queue_cap,
+        default_deadline: if deadline_ms > 0 {
+            Some(Duration::from_millis(deadline_ms))
+        } else {
+            None
+        },
+    };
+    let (m, r, ss) = (model.clone(), replace.clone(), shard_schedules.clone());
+    let coord = Coordinator::start_sharded(cfg, move |shard| {
+        // Each shard owns its runtime + resident parameter buffers (PJRT
+        // handles never cross threads) and applies its own schedule slice.
+        let rt = Runtime::cpu()?;
+        let exec = GraphExecutor::new(rt, &m, &r, ss[shard].clone())?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
     });
 
     // Fire a synthetic request stream sampled from the corpus.
-    let store2 = open_store(args)?;
-    let stream = store2.corpus_eval("wikisyn")?;
+    let stream = store.corpus_eval("wikisyn")?;
+    let t0 = Instant::now();
     let mut rxs = Vec::new();
     for i in 0..n_requests {
         let start = (i * 37) % (stream.len() - 64);
         let prefix: Vec<i32> =
             stream[start..start + 32].iter().map(|&t| t as i32).collect();
-        rxs.push(coord.submit(prefix));
+        rxs.push(coord.submit_spec(SubmitSpec::generate(prefix, max_new)));
     }
-    let mut ok = 0;
+    let (mut ok, mut shed) = (0, 0);
     for rx in rxs {
         let resp = rx.recv()?;
-        anyhow::ensure!((0..256).contains(&resp.next_token));
+        if resp.shed {
+            shed += 1;
+            continue;
+        }
+        anyhow::ensure!(resp.tokens.len() == max_new, "short decode");
+        anyhow::ensure!(resp.tokens.iter().all(|t| (0..model.vocab as i32).contains(t)));
         ok += 1;
     }
-    println!("[serve] {ok}/{n_requests} responses; {}", coord.metrics.summary());
+    let wall = t0.elapsed();
+    anyhow::ensure!(
+        ok > 0 || n_requests == 0,
+        "all {n_requests} requests shed — no healthy executor shard"
+    );
+    let merged = coord.merged_snapshot();
+    println!(
+        "[serve] {ok}/{n_requests} served ({shed} shed) in {:.2}s — {:.1} tokens/s",
+        wall.as_secs_f64(),
+        merged.tokens_per_sec(wall)
+    );
+    println!("[serve] {}", merged.summary());
+    for (s, sm) in coord.shard_metrics().iter().enumerate() {
+        println!("[serve]   shard {s}: {}", sm.summary());
+    }
     coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use halo::coordinator::loadgen::{self, LoadgenConfig};
+    use std::time::Duration;
+
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let cfg = LoadgenConfig {
+        shards: args.usize_or("shards", 4)?.max(1),
+        batch_size: args.usize_or("batch", 8)?.max(1),
+        batch_timeout: Duration::from_millis(args.u64_or("batch-timeout-ms", 2)?),
+        queue_cap: args.usize_or("queue-cap", 0)?,
+        deadline: if deadline_ms > 0 { Some(Duration::from_millis(deadline_ms)) } else { None },
+        requests: args.usize_or("requests", 512)?,
+        rps: args.f64_or("rps", 0.0)?,
+        max_new_tokens: args.usize_or("max-new", 4)?.max(1),
+        prefix_len: args.usize_or("prefix", 12)?.max(1),
+        work_dim: args.usize_or("work", 48)?.max(1),
+        seed: args.u64_or("seed", 0x10AD)?,
+    };
+    let report = loadgen::run(&cfg)?;
+    println!("[loadgen] {}", report.summary());
+    for (s, m) in report.per_shard.iter().enumerate() {
+        println!("[loadgen]   shard {s}: {}", m.summary());
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("[loadgen] wrote {path}");
+    }
     Ok(())
 }
 

@@ -100,6 +100,29 @@ impl Literal {
         let v = self.to_vec::<T>()?;
         v.first().copied().ok_or_else(|| anyhow::anyhow!("empty literal"))
     }
+
+    /// Argmax index over the f32 span `[base, base + width)` of the flat
+    /// data — how the serving decode loop reads one vocab row out of a
+    /// (B, S, V) logits literal without copying it out. NaNs lose ties.
+    pub fn argmax_span(&self, base: usize, width: usize) -> Result<i32> {
+        anyhow::ensure!(width > 0, "argmax over an empty span");
+        let data = self.as_f32()?;
+        anyhow::ensure!(
+            base + width <= data.len(),
+            "span {base}..{} outside literal of {} elements",
+            base + width,
+            data.len()
+        );
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in data[base..base + width].iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        Ok(best as i32)
+    }
 }
 
 /// Element types a [`Literal`] can hold.
@@ -161,6 +184,12 @@ pub trait Backend {
     fn upload(&self, lit: &Literal) -> Result<Buffer>;
     /// Load (and for PJRT, compile) a graph artifact.
     fn load(&self, path: &Path) -> Result<Box<dyn ExecutableImpl>>;
+    /// True when loaded model graphs accept any leading batch dimension
+    /// (the sim interpreter reads B from the token literal). PJRT compiles
+    /// a static (B, S), so its executables must be fed full-size batches.
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
 }
 
 /// A loaded computation ready for repeated execution.
@@ -190,6 +219,18 @@ mod tests {
         assert_eq!(s.numel(), 1);
         assert!(s.dims().is_empty());
         assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn argmax_span_reads_one_row() {
+        // Two "vocab rows" of width 4 packed flat.
+        let l = Literal::f32(&[0.1, 0.9, 0.2, 0.3, 5.0, -1.0, 4.0, 4.5], &[2, 4]).unwrap();
+        assert_eq!(l.argmax_span(0, 4).unwrap(), 1);
+        assert_eq!(l.argmax_span(4, 4).unwrap(), 0);
+        assert!(l.argmax_span(6, 4).is_err()); // out of range
+        assert!(l.argmax_span(0, 0).is_err()); // empty span
+        let i = Literal::i32(&[1, 2], &[2]).unwrap();
+        assert!(i.argmax_span(0, 2).is_err()); // not f32
     }
 
     #[test]

@@ -61,6 +61,13 @@ impl Runtime {
         self.backend.platform_name()
     }
 
+    /// Whether model graphs on this backend accept any leading batch dim
+    /// (see [`Backend::supports_dynamic_batch`]). The serving executor uses
+    /// this to pad partial batches only to their own size.
+    pub fn dynamic_batch(&self) -> bool {
+        self.backend.supports_dynamic_batch()
+    }
+
     /// Upload a literal to a device buffer once; reuse it across many
     /// `Executable::run_b` calls. This keeps large parameter sets resident
     /// (§Perf L3).
@@ -119,6 +126,15 @@ impl Executable {
         anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
         out[0].get_first_element::<f32>()
     }
+
+    /// Execute with device buffers and return the single output literal
+    /// (the `fwd_fp` logits path — avoids the Vec wrapper on the serving
+    /// decode loop's per-step call).
+    pub fn run_b1(&self, inputs: &[&Buffer]) -> Result<Literal> {
+        let mut out = self.run_b(inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.pop().expect("len checked above"))
+    }
 }
 
 /// Build an f32 literal of the given shape.
@@ -164,6 +180,11 @@ mod tests {
             let rt = Runtime::cpu().unwrap();
             assert_eq!(rt.platform(), "sim-cpu");
         }
+    }
+
+    #[test]
+    fn sim_backend_reports_dynamic_batch() {
+        assert!(Runtime::sim().dynamic_batch());
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl Backend for SimBackend {
         "sim-cpu".into()
     }
 
+    /// The interpreter reads (B, S) from the token literal itself
+    /// (`split_model_inputs`), so any leading batch dim works — partial
+    /// serving batches only pay for the rows they carry.
+    fn supports_dynamic_batch(&self) -> bool {
+        true
+    }
+
     fn upload(&self, lit: &Literal) -> Result<Buffer> {
         Ok(Buffer::Host(lit.clone()))
     }

@@ -67,6 +67,13 @@ impl Args {
         }
     }
 
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -125,8 +132,10 @@ mod tests {
     fn typed_accessors() {
         let a = parse("x --n 42 --frac 0.5");
         assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.u64_or("n", 0).unwrap(), 42);
         assert_eq!(a.f64_or("frac", 0.0).unwrap(), 0.5);
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.u64_or("missing", 9).unwrap(), 9);
         assert!(a.usize_or("frac", 0).is_err());
     }
 }

@@ -1,0 +1,174 @@
+//! `bench_check` — the CI bench-regression gate.
+//!
+//! Compares a freshly measured bench JSON against a committed baseline and
+//! fails (exit 1) when any gated metric regressed beyond the tolerance:
+//!
+//! ```sh
+//! bench_check --baseline BENCH_PR2.json --current /tmp/bench.json \
+//!             [--tol 0.30] [--keys matmul.nn.speedup,forward_pass.speedup]
+//! ```
+//!
+//! Gated metrics are **dimensionless ratios** (speedups, shard-scaling
+//! factors), not absolute seconds — absolute timings vary wildly across
+//! runner generations, but "the blocked kernel is N× the naive oracle" and
+//! "N shards are M× one shard" are portable. A metric passes when
+//! `current >= baseline * (1 - tol)`; running *faster* than baseline is
+//! never an error. Keys default to every `speedup`/`scaling_*` leaf found
+//! in the baseline, so new bench sections are gated automatically once
+//! they land in the committed file.
+
+use std::process::ExitCode;
+
+use halo::util::cli::Args;
+use halo::util::Json;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench_check: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<bool> {
+    let baseline_path = args.require("baseline")?;
+    let current_path = args.require("current")?;
+    let tol = args.f64_or("tol", 0.30)?;
+    anyhow::ensure!((0.0..1.0).contains(&tol), "--tol must be in [0, 1)");
+
+    let baseline = Json::parse(&std::fs::read_to_string(baseline_path)?)?;
+    let current = Json::parse(&std::fs::read_to_string(current_path)?)?;
+
+    let keys: Vec<String> = match args.get("keys") {
+        Some(s) => s.split(',').map(|k| k.trim().to_string()).collect(),
+        None => ratio_keys(&baseline),
+    };
+    anyhow::ensure!(!keys.is_empty(), "no gated keys (baseline has no ratio leaves)");
+
+    let mut ok = true;
+    for key in &keys {
+        let base = match lookup(&baseline, key).and_then(|j| j.as_f64().ok()) {
+            Some(b) => b,
+            None => {
+                eprintln!("FAIL {key}: missing or non-numeric in baseline {baseline_path}");
+                ok = false;
+                continue;
+            }
+        };
+        let cur = match lookup(&current, key).and_then(|j| j.as_f64().ok()) {
+            Some(c) => c,
+            None => {
+                eprintln!("FAIL {key}: missing in current {current_path} (baseline {base:.2})");
+                ok = false;
+                continue;
+            }
+        };
+        let floor = base * (1.0 - tol);
+        if cur >= floor {
+            println!("ok   {key}: {cur:.2} (baseline {base:.2}, floor {floor:.2})");
+        } else {
+            eprintln!("FAIL {key}: {cur:.2} < floor {floor:.2} (baseline {base:.2}, tol {tol})");
+            ok = false;
+        }
+    }
+    if ok {
+        println!("bench_check: {} gated metric(s) within tolerance {tol}", keys.len());
+    }
+    Ok(ok)
+}
+
+/// Dotted-path lookup: `matmul.nn.speedup`.
+fn lookup<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = j;
+    for part in path.split('.') {
+        cur = cur.get(part)?;
+    }
+    Some(cur)
+}
+
+/// Every leaf named `speedup` or starting with `scaling` (dotted paths),
+/// in sorted order.
+fn ratio_keys(j: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    walk(j, String::new(), &mut out);
+    out.sort();
+    out
+}
+
+fn walk(j: &Json, prefix: String, out: &mut Vec<String>) {
+    if let Json::Obj(m) = j {
+        for (k, v) in m {
+            let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+            if matches!(v, Json::Num(_)) && (k == "speedup" || k.starts_with("scaling")) {
+                out.push(path);
+            } else {
+                walk(v, path, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn ratio_keys_found_recursively() {
+        let b = j(r#"{"matmul":{"nn":{"speedup":3.0,"naive_s":1.0}},
+                      "scaling_throughput":2.5,"smoke":true}"#);
+        assert_eq!(ratio_keys(&b), vec!["matmul.nn.speedup", "scaling_throughput"]);
+    }
+
+    #[test]
+    fn lookup_dotted_paths() {
+        let b = j(r#"{"a":{"b":{"c":1.5}}}"#);
+        assert_eq!(lookup(&b, "a.b.c").unwrap().as_f64().unwrap(), 1.5);
+        assert!(lookup(&b, "a.x").is_none());
+    }
+
+    #[test]
+    fn gate_passes_and_fails_on_tolerance() {
+        let dir = std::env::temp_dir().join(format!("halo_bench_check_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let cur = dir.join("cur.json");
+        std::fs::write(&base, r#"{"x":{"speedup":4.0}}"#).unwrap();
+
+        let argv = |cur_path: &std::path::Path, tol: &str| {
+            Args::parse(
+                [
+                    "--baseline",
+                    base.to_str().unwrap(),
+                    "--current",
+                    cur_path.to_str().unwrap(),
+                    "--tol",
+                    tol,
+                ]
+                .into_iter()
+                .map(String::from),
+            )
+        };
+
+        // Within tolerance (3.0 >= 4.0 * 0.7).
+        std::fs::write(&cur, r#"{"x":{"speedup":3.0}}"#).unwrap();
+        assert!(run(&argv(&cur, "0.30")).unwrap());
+        // Improvement always passes.
+        std::fs::write(&cur, r#"{"x":{"speedup":9.0}}"#).unwrap();
+        assert!(run(&argv(&cur, "0.30")).unwrap());
+        // Regression beyond tolerance fails.
+        std::fs::write(&cur, r#"{"x":{"speedup":2.0}}"#).unwrap();
+        assert!(!run(&argv(&cur, "0.30")).unwrap());
+        // Missing key in current fails.
+        std::fs::write(&cur, r#"{"y":1.0}"#).unwrap();
+        assert!(!run(&argv(&cur, "0.30")).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
