@@ -4,13 +4,14 @@
 #   make artifacts-fast  tiny-only, few steps (CI smoke / quick iteration)
 #   make test            tier-1 verify: cargo build --release && cargo test -q
 #   make bench           run every harness-free benchmark
-#   make bench-json      hot-path bench → BENCH_PR2.json (perf trajectory)
+#   make bench-json      JSON benches → BENCH_PR2/PR3/PR4.json (perf trajectory)
+#   make docs            rustdoc with -D warnings + build all examples (same as CI)
 #   make fmt             rustfmt check (same as CI)
 
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench bench-json bench-check fmt clean
+.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -27,6 +28,7 @@ test:
 bench:
 	cargo bench --bench l1_hotpaths
 	cargo bench --bench l2_serving
+	cargo bench --bench l4_quant_exec
 	cargo bench --bench fig8_exec_time
 	cargo bench --bench fig10_energy
 	cargo bench --bench fig11_tile_size
@@ -36,21 +38,36 @@ bench:
 
 # Machine-readable perf-trajectory numbers: hot paths (MacProfile::compute,
 # 64-lane vs scalar netlist eval, blocked vs naive matmul, SimBackend
-# forward) and sharded serving throughput (1 shard vs N).
+# forward), sharded serving throughput (1 shard vs N), and quantized vs
+# dense execution (packed LUT matmul + fused SpMV vs dequantize-then-dense).
 bench-json:
 	cargo bench --bench l1_hotpaths -- --smoke --json BENCH_PR2.json
 	cargo bench --bench l2_serving -- --smoke --json BENCH_PR3.json
+	cargo bench --bench l4_quant_exec -- --smoke --json BENCH_PR4.json
 
 # The CI regression gate, runnable locally: fresh smoke JSONs compared
 # against the committed baselines (ratio keys only, see tools/bench_check.rs).
 bench-check:
 	cargo bench --bench l1_hotpaths -- --smoke --json /tmp/halo_l1_smoke.json
 	cargo bench --bench l2_serving -- --smoke --json /tmp/halo_l2_smoke.json
+	cargo bench --bench l4_quant_exec -- --smoke --json /tmp/halo_l4_smoke.json
 	cargo run --release --bin bench_check -- --baseline BENCH_PR2.json \
 	  --current /tmp/halo_l1_smoke.json --tol 0.5 \
 	  --keys mac_profile_compute.speedup,netlist_eval.speedup,forward_pass.speedup
 	cargo run --release --bin bench_check -- --baseline BENCH_PR3.json \
 	  --current /tmp/halo_l2_smoke.json --tol 0.3 --keys scaling_throughput
+	cargo run --release --bin bench_check -- --baseline BENCH_PR4.json \
+	  --current /tmp/halo_l4_smoke.json --tol 0.5 \
+	  --keys layer.throughput_ratio,decode.throughput_ratio
+	cargo run --release --bin bench_check -- --baseline BENCH_PR4.json \
+	  --current /tmp/halo_l4_smoke.json --tol 0.3 \
+	  --keys memory.bytes_saving,model_cost.modeled_speedup
+
+# Documentation gate: rustdoc is warning-clean (missing_docs + intra-doc
+# links) and every example builds.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib
+	cargo build --examples
 
 fmt:
 	cargo fmt --check

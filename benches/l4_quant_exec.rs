@@ -1,0 +1,262 @@
+//! Bench: native quantized execution (PR 4) — packed LUT matmul + fused
+//! SpMV vs the dequantize-then-dense path, at the layer level and through
+//! the full decode loop, plus the deterministic bytes-touched and
+//! modeled-DVFS ratios from the per-tile cost model.
+//!
+//! Run: `cargo bench --bench l4_quant_exec [-- --smoke] [-- --json FILE]`
+//!
+//! `--smoke` shrinks shapes/reps to a CI-sized run; `--json FILE` writes
+//! the measured numbers (`make bench-json` → `BENCH_PR4.json`). Gated
+//! ratio keys (see `tools/bench_check.rs` + the bench-smoke CI job):
+//!
+//! - `layer.throughput_ratio`   — qmatmul wall-clock vs blocked dense matmul
+//! - `decode.throughput_ratio`  — packed decode tokens/s vs dense decode
+//! - `memory.bytes_saving`      — dense f32 bytes / packed bytes (deterministic)
+//! - `model_cost.modeled_speedup` — DVFS class clocks vs all-base (deterministic)
+//!
+//! The documented floor: smoke-mode quantized execution must hold at least
+//! ~25 % of dense f32 throughput (baseline ratio × (1 − tol) with the
+//! committed BENCH_PR4.json values) while touching >3× fewer weight bytes.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use halo::coordinator::{BatchExecutor, QuantExecutor};
+use halo::dvfs::Ladder;
+use halo::mac::MacProfile;
+use halo::quant::packed::PackedLayer;
+use halo::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
+use halo::runtime::sim::{model_forward, ModelSpec};
+use halo::runtime::{argmax_slice, kernels, qmatmul, Literal, PackedModel};
+use halo::util::{Json, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let mut report = Json::obj();
+    report.set("bench", "l4_quant_exec").set("smoke", smoke);
+
+    println!("=== quantized execution vs dequantize-then-dense ===");
+    let layer_ratio = bench_layer(smoke, &mut report);
+    let (decode_ratio, bytes_saving, modeled) = bench_decode(smoke, &mut report);
+
+    println!(
+        "\nsummary: layer ratio {layer_ratio:.2}, decode ratio {decode_ratio:.2}, \
+         bytes saving {bytes_saving:.2}x, modeled speedup {modeled:.2}x"
+    );
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_string_pretty()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}
+
+/// Layer-level: y = x @ W on one packed layer vs the blocked dense kernel
+/// fed the dequantized weights.
+fn bench_layer(smoke: bool, report: &mut Json) -> f64 {
+    let (k, n, m) = if smoke { (256, 256, 64) } else { (768, 768, 128) };
+    let reps = if smoke { 5 } else { 20 };
+    let profile = MacProfile::cached();
+    let mut rng = Rng::seed_from_u64(0x9A10);
+    let w = Matrix::random_normal(k, n, 0.02, &mut rng);
+    let g = Matrix::random_normal(k, n, 1.0, &mut rng);
+    let q = HaloQuantizer::new(HaloConfig::new(64, Variant::Bal), profile);
+    let (res, pay) = q.quantize_full(&w, &LayerCtx::with_grad("bench", &g));
+    let layer = PackedLayer::pack("bench", &res, &pay, profile);
+    let dense = layer.dequantize();
+    let x = Matrix::random_normal(m, k, 1.0, &mut rng);
+
+    // Warm both paths once, then alternate to cancel drift.
+    let mut acc = 0.0f32;
+    acc += qmatmul(&x, &layer).data[0];
+    acc += kernels::matmul(&x, &dense).data[0];
+    let (mut t_quant, mut t_dense) = (0.0f64, 0.0f64);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        acc += qmatmul(&x, &layer).data[0];
+        t_quant += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        acc += kernels::matmul(&x, &dense).data[0];
+        t_dense += t0.elapsed().as_secs_f64();
+    }
+    std::hint::black_box(acc);
+
+    let ratio = t_dense / t_quant.max(1e-12);
+    println!(
+        "layer {k}x{n} (m={m}, tile 64): quant {:.2}ms dense {:.2}ms → ratio {ratio:.2}",
+        t_quant / reps as f64 * 1e3,
+        t_dense / reps as f64 * 1e3
+    );
+    let mut j = Json::obj();
+    j.set("k", k)
+        .set("n", n)
+        .set("m", m)
+        .set("quant_ms", t_quant / reps as f64 * 1e3)
+        .set("dense_ms", t_dense / reps as f64 * 1e3)
+        .set("throughput_ratio", ratio);
+    report.set("layer", j);
+    ratio
+}
+
+/// Dense oracle executor: the dequantize-then-dense serving path this PR
+/// retires, kept as the bench baseline (same interpreter, dense weights
+/// substituted as literals).
+struct DenseExec {
+    spec: ModelSpec,
+    params: Vec<Literal>,
+    batch: usize,
+}
+
+impl BatchExecutor for DenseExec {
+    fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.spec.seq_len
+    }
+
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+        let (b, s) = (prefixes.len(), self.spec.seq_len);
+        let mut tokens = vec![0i32; b * s];
+        for (i, p) in prefixes.iter().enumerate() {
+            let np = p.len().min(s);
+            tokens[i * s..i * s + np].copy_from_slice(&p[p.len() - np..]);
+        }
+        let mut inputs: Vec<&Literal> = self.params.iter().collect();
+        let tok = Literal::i32(&tokens, &[b, s])?;
+        inputs.push(&tok);
+        let (logits, _, _) = model_forward(&self.spec, &inputs)?;
+        Ok(prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let pos = p.len().clamp(1, s) - 1;
+                argmax_slice(logits.row(i * s + pos)) as i32
+            })
+            .collect())
+    }
+}
+
+/// Bench model off the shared canonical layout ([`ModelSpec::synthetic`]),
+/// so the bench and the `tests/qexec.rs` oracle exercise the same contract.
+fn bench_spec(smoke: bool) -> ModelSpec {
+    if smoke {
+        ModelSpec::synthetic(64, 48, 2, 4, 96, 16)
+    } else {
+        ModelSpec::synthetic(128, 96, 2, 4, 192, 32)
+    }
+}
+
+/// Full decode loop: packed executor vs the dense oracle on the same
+/// synthetic model, same prefixes, same decode length.
+fn bench_decode(smoke: bool, report: &mut Json) -> (f64, f64, f64) {
+    let spec = bench_spec(smoke);
+    let mut rng = Rng::seed_from_u64(0xDEC0);
+    let mut params = Vec::new();
+    let mut grads = BTreeMap::new();
+    for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; numel]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; numel]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..numel).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        if spec.linear[i] {
+            grads.insert(
+                name.clone(),
+                Matrix::from_fn(shape[0], shape[1], |_, _| rng.gen_normal() as f32),
+            );
+        }
+        params.push((name.clone(), shape.clone(), data));
+    }
+    let profile = MacProfile::cached();
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let pm = PackedModel::pack_from(spec.clone(), views, Variant::Bal, 32, &grads, profile)
+        .expect("pack");
+
+    let cost = pm.cost(&Ladder::paper_systolic());
+    let bytes_saving = cost.bytes_saving();
+    let modeled = cost.modeled_speedup();
+    println!("cost model: {}", cost.summary());
+
+    // Dense oracle literals: the packed model's own dequantized weights.
+    let dense_params: Vec<Literal> = spec
+        .names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            if spec.linear[i] {
+                let dq = pm.layer(name).expect("packed").dequantize();
+                Literal::f32(&dq.data, &spec.shapes[i]).unwrap()
+            } else {
+                Literal::f32(&params[i].2, &spec.shapes[i]).unwrap()
+            }
+        })
+        .collect();
+
+    let batch = 8usize;
+    let max_new = if smoke { 2 } else { 4 };
+    let reps = if smoke { 3 } else { 8 };
+    let prefixes: Vec<Vec<i32>> = (0..batch)
+        .map(|_| (0..8).map(|_| rng.gen_usize(spec.vocab) as i32).collect())
+        .collect();
+    let new_lens = vec![max_new; batch];
+
+    let mut quant_exec = QuantExecutor::new(std::sync::Arc::new(pm), batch);
+    let mut dense_exec = DenseExec { spec: spec.clone(), params: dense_params, batch };
+
+    // Warm-up + verification: both paths produce in-vocab tokens.
+    let gq = quant_exec.generate(&prefixes, &new_lens).expect("quant decode");
+    let gd = dense_exec.generate(&prefixes, &new_lens).expect("dense decode");
+    for g in gq.iter().chain(gd.iter()) {
+        assert_eq!(g.len(), max_new);
+        assert!(g.iter().all(|&t| (0..spec.vocab as i32).contains(&t)));
+    }
+
+    let (mut t_quant, mut t_dense) = (0.0f64, 0.0f64);
+    let mut tokens_out = 0usize;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let g = quant_exec.generate(&prefixes, &new_lens).expect("quant decode");
+        t_quant += t0.elapsed().as_secs_f64();
+        tokens_out += g.iter().map(|v| v.len()).sum::<usize>();
+        let t0 = Instant::now();
+        std::hint::black_box(dense_exec.generate(&prefixes, &new_lens).expect("dense decode"));
+        t_dense += t0.elapsed().as_secs_f64();
+    }
+    let quant_tps = tokens_out as f64 / t_quant.max(1e-12);
+    let dense_tps = tokens_out as f64 / t_dense.max(1e-12);
+    let ratio = quant_tps / dense_tps.max(1e-12);
+    println!(
+        "decode (b={batch}, max_new={max_new}, {} layers d={}): quant {quant_tps:.0} tok/s, \
+         dense {dense_tps:.0} tok/s → ratio {ratio:.2}",
+        spec.n_layers, spec.d_model
+    );
+
+    let mut j = Json::obj();
+    j.set("batch", batch)
+        .set("max_new", max_new)
+        .set("quant_tokens_per_sec", quant_tps)
+        .set("dense_tokens_per_sec", dense_tps)
+        .set("throughput_ratio", ratio);
+    report.set("decode", j);
+    let mut jm = Json::obj();
+    jm.set("packed_bytes", cost.packed_bytes)
+        .set("dense_bytes", cost.dense_bytes)
+        .set("bytes_saving", bytes_saving);
+    report.set("memory", jm);
+    let mut jc = Json::obj();
+    jc.set("modeled_speedup", modeled).set("sparse_nnz", cost.sparse_nnz);
+    report.set("model_cost", jc);
+    (ratio, bytes_saving, modeled)
+}

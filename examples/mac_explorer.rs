@@ -5,6 +5,12 @@
 //! for the paper's example pair (w = 64 vs w = −127).
 //!
 //! Run: `cargo run --release --example mac_explorer [-- --samples 4096]`
+//!
+//! Expected output: an ASCII bar chart of achievable GHz across all 256
+//! weight values (Booth-sparse values like 0/±64 peak, dense values like
+//! −127 trough), a power-ordering sample (toggles/energy grow with Booth
+//! digits), per-weight settle histograms for w=64 vs w=−127 (the latter
+//! wider and slower), and the derived fast/med/base class summary line.
 
 use halo::mac::{booth, profile::delay_histogram_ps, MacProfile};
 use halo::util::cli::Args;

@@ -7,6 +7,12 @@
 //! the Pareto front and marks the knee.
 //!
 //! Run: `cargo run --release --example pareto_sweep -- [--model small]`
+//!
+//! Expected output: a 9-row candidate table (3 variants × tiles 128/64/32
+//! with time/energy/accuracy columns), the surviving Pareto front (typically
+//! 3–6 rows; perf-opt fastest, acc-opt most accurate), and a final
+//! `knee (balanced goals): bal tile ...` line. Runs without artifacts
+//! (falls back to weight-MSE as the accuracy proxy).
 
 use std::collections::BTreeMap;
 

@@ -6,6 +6,12 @@
 //!
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example serve_llm -- [--model base] [--requests 128]
+//!
+//! Expected output: model stats, Fisher-calibration timing, a quantization
+//! summary (B_eff ≈ 3.5–4.5 bits, ≤ 3 DVFS transitions/pass), per-corpus
+//! perplexity before/after (small Δ for halo-bal), then
+//! `served N requests in X.XXs = Y req/s` and a final `serve_llm OK`.
+//! Errors out with a `make artifacts` hint when the store is missing.
 
 use std::collections::BTreeMap;
 use std::time::Instant;

@@ -5,6 +5,12 @@
 //! exist.
 //!
 //! Run: `cargo run --release --example tile_sweep -- [--model small]`
+//!
+//! Expected output: per-model speedup ratios where smaller tiles are
+//! faster (t32 > t64 > t128 ≡ 1.0x, Fig 11's shape), then — artifacts
+//! permitting — a perplexity-vs-tile table where smaller tiles cost a bit
+//! of accuracy at lower B_eff; otherwise a clean skip message pointing at
+//! `make artifacts`.
 
 use std::collections::BTreeMap;
 

@@ -161,24 +161,57 @@ impl LoadgenReport {
 
 /// Run one synthetic serving experiment: start `cfg.shards` executors,
 /// fire `cfg.requests` paced arrivals, wait for every response, and
-/// aggregate per-shard metrics.
+/// aggregate per-shard metrics. Responses are verified against the
+/// deterministic synthetic decode chain.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let seq = 64usize.max(cfg.prefix_len + cfg.max_new_tokens);
+    let (batch, work, seed) = (cfg.batch_size, cfg.work_dim, cfg.seed);
+    let verify = |prefix: &[i32], tokens: &[i32], max_new: usize| {
+        // Re-derive the expected decode chain end to end.
+        let mut seq = prefix.to_vec();
+        if tokens.len() != max_new {
+            return false;
+        }
+        for &tok in tokens {
+            if tok != SyntheticExecutor::next_token(&seq) {
+                return false;
+            }
+            seq.push(tok);
+        }
+        true
+    };
+    run_with(cfg, 250, &verify, move |shard| {
+        Ok(Box::new(SyntheticExecutor::new(batch, seq, work, seed ^ shard as u64))
+            as Box<dyn BatchExecutor>)
+    })
+}
+
+/// Drive the coordinator with paced arrivals against caller-supplied
+/// executors — the `halo loadgen --quant` path, where each shard serves a
+/// real quantized model. `vocab` bounds the sampled prefix tokens;
+/// `verify(prefix, generated, max_new)` judges each served response.
+pub fn run_with<F>(
+    cfg: &LoadgenConfig,
+    vocab: usize,
+    verify: &dyn Fn(&[i32], &[i32], usize) -> bool,
+    make_executor: F,
+) -> Result<LoadgenReport>
+where
+    F: Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
+{
     let coord_cfg = CoordinatorConfig {
         batcher: BatcherConfig { batch_size: cfg.batch_size, timeout: cfg.batch_timeout },
         shards: cfg.shards,
         queue_cap: cfg.queue_cap,
         default_deadline: cfg.deadline,
     };
-    let seq = 64usize.max(cfg.prefix_len + cfg.max_new_tokens);
-    let (batch, work, seed) = (cfg.batch_size, cfg.work_dim, cfg.seed);
-    let coord = Coordinator::start_sharded(coord_cfg, move |shard| {
-        Ok(Box::new(SyntheticExecutor::new(batch, seq, work, seed ^ shard as u64))
-            as Box<dyn BatchExecutor>)
-    });
+    let coord = Coordinator::start_sharded(coord_cfg, make_executor);
 
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let prefixes: Vec<Vec<i32>> = (0..cfg.requests)
-        .map(|_| (0..cfg.prefix_len.max(1)).map(|_| rng.gen_usize(250) as i32).collect())
+        .map(|_| {
+            (0..cfg.prefix_len.max(1)).map(|_| rng.gen_usize(vocab.max(1)) as i32).collect()
+        })
         .collect();
 
     let t0 = Instant::now();
@@ -194,29 +227,24 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         rxs.push(coord.submit_spec(SubmitSpec::generate(p.clone(), cfg.max_new_tokens)));
     }
 
+    // Collect every response before verifying, so the measured wall clock
+    // covers serving only — client-side chain re-derivation (which the
+    // quantized path does against the real model) stays off the clock.
+    let mut responses = Vec::with_capacity(cfg.requests);
+    for rx in rxs {
+        responses.push(rx.recv_timeout(Duration::from_secs(120))?);
+    }
+    let wall = t0.elapsed();
+
     let mut verified_ok = 0usize;
     let mut shed = 0usize;
-    for (rx, p) in rxs.into_iter().zip(&prefixes) {
-        let resp = rx.recv_timeout(Duration::from_secs(120))?;
+    for (resp, p) in responses.iter().zip(&prefixes) {
         if resp.shed {
             shed += 1;
-            continue;
-        }
-        // Re-derive the expected decode chain and verify it end to end.
-        let mut seq = p.clone();
-        let mut ok = resp.tokens.len() == cfg.max_new_tokens;
-        for &tok in &resp.tokens {
-            if tok != SyntheticExecutor::next_token(&seq) {
-                ok = false;
-                break;
-            }
-            seq.push(tok);
-        }
-        if ok {
+        } else if verify(p.as_slice(), &resp.tokens, cfg.max_new_tokens) {
             verified_ok += 1;
         }
     }
-    let wall = t0.elapsed();
 
     let per: Vec<MetricsSnapshot> =
         coord.shard_metrics().iter().map(|m| m.snapshot()).collect();

@@ -37,5 +37,5 @@ pub use batch::{Batcher, BatcherConfig};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{
-    BatchExecutor, Coordinator, CoordinatorConfig, Request, Response, SubmitSpec,
+    BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitSpec,
 };

@@ -31,7 +31,7 @@ use super::batch::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use crate::dvfs::Schedule;
 use crate::quant::Matrix;
-use crate::runtime::{literal_i32, Buffer, ModelArtifacts, Runtime};
+use crate::runtime::{literal_i32, Buffer, ModelArtifacts, PackedModel, Runtime};
 
 /// One inference request: a token prefix plus decode/deadline metadata.
 /// The response carries the autoregressively generated tokens.
@@ -160,6 +160,78 @@ impl GraphExecutor {
             schedule,
             dynamic_batch,
         })
+    }
+}
+
+/// Native quantized executor (PR 4): decode runs directly on the packed
+/// codebook tiles of a [`PackedModel`] — LUT matmul kernels + fused SpMV —
+/// so no dense f32 weight matrix is ever materialized for a quantized
+/// layer. Always dynamic-batch (the packed forward reads `b` from its
+/// inputs), so partial batches only pay for the rows they carry.
+pub struct QuantExecutor {
+    model: Arc<PackedModel>,
+    batch: usize,
+    schedule: Schedule,
+}
+
+impl QuantExecutor {
+    /// Executor over a shared packed model, using the model's own
+    /// whole-model DVFS schedule.
+    pub fn new(model: Arc<PackedModel>, batch: usize) -> Self {
+        let schedule = model.schedule.clone();
+        Self::with_schedule(model, batch, schedule)
+    }
+
+    /// Executor with an explicit schedule slice (one shard of
+    /// [`Schedule::shard`] under sharded serving).
+    pub fn with_schedule(model: Arc<PackedModel>, batch: usize, schedule: Schedule) -> Self {
+        Self { model, batch: batch.max(1), schedule }
+    }
+}
+
+impl BatchExecutor for QuantExecutor {
+    fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.spec.seq_len
+    }
+
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+        anyhow::ensure!(prefixes.len() <= self.batch, "over-full batch");
+        anyhow::ensure!(!prefixes.is_empty(), "empty batch");
+        let b = prefixes.len();
+        // Right-pad only to the batch's longest live prefix (capped at the
+        // context window) — the packed forward accepts any s ≤ seq_len,
+        // and causal attention + from-zero positions make every live
+        // row's logits bit-identical to the full-S pass, so short decode
+        // batches don't pay for dead positions. Prefixes beyond the
+        // window keep their newest tokens (same contract as
+        // GraphExecutor::run).
+        let cap = self.model.spec.seq_len;
+        let s = prefixes.iter().map(|p| p.len().min(cap)).max().unwrap_or(1).max(1);
+        let mut tokens = vec![0i32; b * s];
+        for (i, p) in prefixes.iter().enumerate() {
+            let n = p.len().min(s);
+            tokens[i * s..i * s + n].copy_from_slice(&p[p.len() - n..]);
+        }
+        let logits = self.model.forward(&tokens, b, s)?;
+        let vocab = self.model.spec.vocab;
+        prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let pos = p.len().clamp(1, s) - 1;
+                let row = logits.row(i * s + pos);
+                anyhow::ensure!(row.len() == vocab, "logit row width mismatch");
+                Ok(crate::runtime::argmax_slice(row) as i32)
+            })
+            .collect()
+    }
+
+    fn dvfs_transitions(&self) -> usize {
+        self.schedule.transitions()
     }
 }
 

@@ -13,7 +13,9 @@ use crate::mac::MacProfile;
 /// A voltage/frequency operating point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Level {
+    /// Supply voltage (V).
     pub volts: f64,
+    /// Clock frequency (GHz).
     pub ghz: f64,
 }
 
@@ -29,8 +31,10 @@ pub enum FreqClass {
 }
 
 impl FreqClass {
+    /// Every class, slow → fast (ladder/schedule iteration order).
     pub const ALL: [FreqClass; 3] = [FreqClass::Base, FreqClass::Med, FreqClass::Fast];
 
+    /// Short class name (`base` / `med` / `fast`).
     pub fn name(self) -> &'static str {
         match self {
             FreqClass::Base => "base",
@@ -55,7 +59,9 @@ pub fn classify(achievable_ghz: f64, profile: &MacProfile) -> FreqClass {
 /// An ordered (Base → Med → Fast) set of operating points.
 #[derive(Debug, Clone)]
 pub struct Ladder {
+    /// Ladder label (`paper-systolic` / `paper-gpu` / `derived`).
     pub name: &'static str,
+    /// Operating points indexed by `FreqClass as usize`.
     pub levels: [Level; 3],
 }
 
@@ -96,6 +102,7 @@ impl Ladder {
         }
     }
 
+    /// The operating point a frequency class runs at.
     pub fn level(&self, class: FreqClass) -> Level {
         self.levels[class as usize]
     }

@@ -9,9 +9,13 @@ use crate::quant::Variant;
 /// One candidate operating point.
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// HALO design-goal preset of the candidate.
     pub variant: Variant,
+    /// Tile edge length.
     pub tile: usize,
+    /// Predicted inference latency (s, systolic simulator).
     pub time_s: f64,
+    /// Predicted inference energy (J).
     pub energy_j: f64,
     /// Accuracy proxy (weight reconstruction MSE or measured perplexity).
     pub accuracy_cost: f64,

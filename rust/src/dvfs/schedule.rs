@@ -10,13 +10,16 @@ use super::levels::{FreqClass, TRANSITION_S};
 /// One contiguous execution group: every tile in it runs at `class`.
 #[derive(Debug, Clone)]
 pub struct Group {
+    /// The frequency class the whole group clocks at.
     pub class: FreqClass,
+    /// Member tile indices, input order preserved.
     pub tiles: Vec<usize>,
 }
 
 /// The per-pass schedule: groups in execution order.
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
+    /// Execution groups, Base → Med → Fast.
     pub groups: Vec<Group>,
 }
 
@@ -51,6 +54,7 @@ impl Schedule {
         self.transitions() as f64 * TRANSITION_S
     }
 
+    /// Total tiles across all groups.
     pub fn n_tiles(&self) -> usize {
         self.groups.iter().map(|g| g.tiles.len()).sum()
     }

@@ -130,8 +130,10 @@ pub fn fig11() -> String {
     )
 }
 
-/// Figs 12+13: GPU execution time and energy.
-pub fn fig12_13() -> String {
+/// Shared GPU sweep behind Figs 12 and 13: (normalized-time rows,
+/// normalized-energy rows). [`fig12_13`] renders both from one sweep;
+/// the per-figure entry points each pay for their own.
+fn gpu_rows() -> (Vec<Vec<String>>, Vec<Vec<String>>) {
     let sim = GpuSim::new(GpuConfig::default());
     let mut time_rows = Vec::new();
     let mut energy_rows = Vec::new();
@@ -153,12 +155,40 @@ pub fn fig12_13() -> String {
         time_rows.push(trow);
         energy_rows.push(erow);
     }
+    (time_rows, energy_rows)
+}
+
+fn render_fig12(time_rows: &[Vec<String>]) -> String {
     format!(
-        "## Fig 12 — normalized GPU execution time (W8A8=1.0, decode batch=8)\n\n{}\n\
-         ## Fig 13 — normalized GPU energy (W8A8=1.0; constant/static/dynamic)\n\n{}",
-        markdown_table(&headers(), &time_rows),
-        markdown_table(&headers(), &energy_rows)
+        "## Fig 12 — normalized GPU execution time (W8A8=1.0, decode batch=8)\n\n{}",
+        markdown_table(&headers(), time_rows)
     )
+}
+
+fn render_fig13(energy_rows: &[Vec<String>]) -> String {
+    format!(
+        "## Fig 13 — normalized GPU energy (W8A8=1.0; constant/static/dynamic)\n\n{}",
+        markdown_table(&headers(), energy_rows)
+    )
+}
+
+/// Fig 12: normalized GPU execution time.
+pub fn fig12() -> String {
+    let (time_rows, _) = gpu_rows();
+    render_fig12(&time_rows)
+}
+
+/// Fig 13: normalized GPU energy with the constant/static/dynamic split.
+pub fn fig13() -> String {
+    let (_, energy_rows) = gpu_rows();
+    render_fig13(&energy_rows)
+}
+
+/// Both GPU figures from a single simulator sweep — (fig12 md, fig13 md).
+/// `halo all` uses this so the sweep runs once.
+pub fn fig12_13() -> (String, String) {
+    let (time_rows, energy_rows) = gpu_rows();
+    (render_fig12(&time_rows), render_fig13(&energy_rows))
 }
 
 /// Fig 3/4/5 data: MAC circuit profile.

@@ -19,29 +19,57 @@ halo — HALO (AAAI'26) reproduction: hardware-aware quantization + DVFS
 USAGE: halo <command> [options]
 
 COMMANDS
-  mac profile            Figs 4+5: per-weight MAC frequency/power profile
-  mac histogram --w N    Fig 3: delay histogram for weight value(s) N
-  quantize --model M --method Q [--tile T]   quantize + report one model
-  table2 [--models a,b] [--max-batches N]    Table II (end-to-end eval)
-  fig8 | fig10 | fig11 | fig12 [--tile T]    simulator figures
-  ablate dram|dvfs-overhead|derived-ladder   ablation studies
-  serve --model M [--shards N] [--requests R] [--max-new T]
-                         sharded serving demo (quantize → route → decode)
+  mac profile [--samples N]
+        Figs 4+5: per-weight MAC frequency/power profile → fig4_5.md
+        (--samples: sampled transitions per weight, default 4096)
+  mac histogram [--w N]... [--samples N]
+        Fig 3: settle-time histogram per weight value → fig3.md
+        (default weights: 64 and -127, the paper's example pair)
+  quantize --model M [--method Q] [--tile T] [--calib-batches N]
+        Quantize one trained model and report per-layer bits/error/
+        tile classes (--method: fp16|rtn-w8|w8a8|w4a8|w3a8|
+        smoothquant-w{8,4,3}|gptq|zq-local|zq-global|halo-{perf,acc,bal};
+        default halo-bal. --tile: tile edge, default 128)
+  table2 [--models a,b] [--max-batches N] [--calib-batches N]
+        Table II end-to-end perplexity eval → table2.md
+  fig8 | fig10 | fig11 [--tile T]
+        Systolic simulator figures → fig8.md / fig10.md / fig11.md
+  fig12 | fig13
+        GPU simulator figures → fig12.md / fig13.md
+  ablate dram|dvfs-overhead|derived-ladder
+        Ablation studies → ablate_<name>.md
+  serve --model M [--quant Q] [--shards N] [--requests R] [--max-new T]
+        Sharded serving demo (quantize → route → batch → decode).
+        --quant halo-bal|halo-perf|halo-acc executes natively on packed
+        codebook tiles (LUT matmul + fused SpMV; never densifies) and
+        reports the modeled DVFS speedup/energy next to wall-clock;
+        --quant none (default) serves the dequantized dense weights.
   loadgen [--shards N] [--rps R] [--requests M] [--json FILE]
-                         synthetic serving load (no artifacts needed)
-  all [--max-batches N]                      regenerate everything → results/
+          [--quant Q --model M]
+        Paced serving load. Default: deterministic synthetic executor,
+        no artifacts needed. With --quant: drives the packed quantized
+        model from the artifact store instead.
+  all [--max-batches N]
+        Regenerate every report → results/
 
 OPTIONS
   --artifacts DIR   artifact root (default: ./artifacts or $HALO_ARTIFACTS)
   --out DIR         report output dir (default: ./results)
 
 SERVING OPTIONS (serve / loadgen)
-  --shards N        executor shards/threads (serve: 1, loadgen: 4)
-  --max-new T       tokens to decode per request (default 1 / 4)
-  --queue-cap Q     per-shard admission bound, 0 = unbounded
-  --deadline-ms D   shed requests older than D ms, 0 = no deadline
-  --rps R           loadgen arrival rate, 0 = as fast as possible
-  --work W          loadgen per-sequence busywork matmul side (default 48)
+  --quant Q           packed-execution method (see serve above)
+  --shards N          executor shards/threads (serve: 1, loadgen: 4)
+  --max-new T         tokens to decode per request (default 1 / 4)
+  --batch B           loadgen max batch size per shard (default 8)
+  --batch-timeout-ms  loadgen batcher flush timeout (default 2)
+  --queue-cap Q       per-shard admission bound, 0 = unbounded
+  --deadline-ms D     shed requests older than D ms, 0 = no deadline
+  --rps R             loadgen arrival rate, 0 = as fast as possible
+  --prefix P          loadgen prefix length per request (default 12)
+  --work W            loadgen busywork matmul side, synthetic only (48)
+  --seed S            loadgen RNG seed (default 0x10AD)
+  --json FILE         loadgen: write the full JSON report to FILE
+  --tile T            quantization tile size under --quant (default 128)
 ";
 
 fn main() -> Result<()> {
@@ -59,16 +87,19 @@ fn main() -> Result<()> {
             write_report(&out.join("fig10.md"), &figs::fig10(args.usize_or("tile", 128)?))?
         }
         Some("fig11") => write_report(&out.join("fig11.md"), &figs::fig11())?,
-        Some("fig12") | Some("fig13") => {
-            write_report(&out.join("fig12_13.md"), &figs::fig12_13())?
-        }
+        Some("fig12") => write_report(&out.join("fig12.md"), &figs::fig12())?,
+        Some("fig13") => write_report(&out.join("fig13.md"), &figs::fig13())?,
         Some("ablate") => cmd_ablate(&args, &out)?,
         Some("serve") => cmd_serve(&args)?,
         Some("loadgen") => cmd_loadgen(&args)?,
         Some("all") => cmd_all(&args, &out)?,
-        _ => {
+        Some("help") | None => {
             print!("{HELP}");
             return Ok(());
+        }
+        Some(other) => {
+            eprint!("{HELP}");
+            anyhow::bail!("unknown command `{other}` — full usage above");
         }
     }
     eprintln!("done in {:.1}s", t0.elapsed().as_secs_f64());
@@ -198,13 +229,28 @@ fn cmd_ablate(args: &Args, out: &std::path::Path) -> Result<()> {
     )
 }
 
+/// `--quant halo-bal|halo-perf|halo-acc|bal|perf|acc` → a packed-execution
+/// variant; `none` (the default) → dense dequantized serving.
+fn parse_quant_variant(s: &str) -> Result<Option<halo::quant::Variant>> {
+    if s == "none" {
+        return Ok(None);
+    }
+    halo::quant::Variant::parse(s.strip_prefix("halo-").unwrap_or(s))
+        .map(Some)
+        .ok_or_else(|| {
+            anyhow::anyhow!("--quant must be none or halo-bal|halo-perf|halo-acc, got `{s}`")
+        })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use halo::coordinator::server::GraphExecutor;
-    use halo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, SubmitSpec};
-    use halo::dvfs::Schedule;
+    use halo::coordinator::{
+        BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, SubmitSpec,
+    };
+    use halo::dvfs::{Ladder, Schedule};
     use halo::model::calibrate_fisher;
     use halo::quant::{HaloConfig, HaloQuantizer, Quantizer, Variant};
-    use halo::runtime::Runtime;
+    use halo::runtime::{PackedModel, Runtime};
     use std::collections::BTreeMap;
     use std::sync::Arc;
     use std::time::Duration;
@@ -216,40 +262,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 1)?.max(1);
     let queue_cap = args.usize_or("queue-cap", 0)?;
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let tile = args.usize_or("tile", 128)?;
+    let quant = parse_quant_variant(args.str_or("quant", "none"))?;
 
-    // Quantize once on the main thread (HALO-bal, the paper's deployment),
-    // then share the artifacts + replacements across the shard factories.
+    // Calibrate + quantize once on the main thread, then share the result
+    // across the shard factories.
     let rt = Runtime::cpu()?;
     let model = store.model(&model_name)?;
+    let vocab = model.vocab;
+    let eval_batch = model.eval_batch;
     let calib = store.corpus_calib()?;
     let grads = calibrate_fisher(&rt, &model, &calib, 2)?;
     let profile = MacProfile::cached();
-    let q = HaloQuantizer::new(HaloConfig::new(128, Variant::Bal), profile);
-    let mut replace = BTreeMap::new();
-    let mut classes = Vec::new();
-    for p in model.linear_params() {
-        let w = p.as_matrix()?;
-        let ctx = match grads.get(&p.name) {
-            Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
-            None => halo::quant::LayerCtx::new(&p.name),
-        };
-        let res = q.quantize(&w, &ctx);
-        for &f in &res.tile_freq_ghz {
-            classes.push(halo::dvfs::classify(f, profile));
-        }
-        replace.insert(p.name.clone(), res.dequant);
-    }
-    let schedule = Schedule::cluster(&classes);
-    eprintln!(
-        "[serve] quantized {} tiles, schedule groups={} transitions={}, shards={n_shards}",
-        classes.len(),
-        schedule.groups.len(),
-        schedule.transitions()
-    );
-
-    let model = Arc::new(model);
-    let replace = Arc::new(replace);
-    let shard_schedules = Arc::new(schedule.shard(n_shards));
     let cfg = CoordinatorConfig {
         batcher: BatcherConfig::default(),
         shards: n_shards,
@@ -260,14 +284,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None
         },
     };
-    let (m, r, ss) = (model.clone(), replace.clone(), shard_schedules.clone());
-    let coord = Coordinator::start_sharded(cfg, move |shard| {
-        // Each shard owns its runtime + resident parameter buffers (PJRT
-        // handles never cross threads) and applies its own schedule slice.
-        let rt = Runtime::cpu()?;
-        let exec = GraphExecutor::new(rt, &m, &r, ss[shard].clone())?;
-        Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
-    });
+
+    let coord = if let Some(variant) = quant {
+        // Native quantized serving: every shard decodes directly on the
+        // shared packed codebook tiles — dense f32 weights never exist.
+        let packed = PackedModel::pack_artifacts(&model, variant, tile, &grads, profile)?;
+        let cost = packed.cost(&Ladder::paper_systolic());
+        eprintln!(
+            "[serve] packed {} layers (halo-{}, tile {tile}), schedule transitions={}, shards={n_shards}",
+            packed.n_packed(),
+            variant.name(),
+            packed.schedule.transitions()
+        );
+        eprintln!("[serve] cost model: {}", cost.summary());
+        let pm = Arc::new(packed);
+        let ss = Arc::new(pm.schedule.shard(n_shards));
+        Coordinator::start_sharded(cfg, move |shard| {
+            Ok(Box::new(QuantExecutor::with_schedule(
+                pm.clone(),
+                eval_batch,
+                ss[shard].clone(),
+            )) as Box<dyn halo::coordinator::BatchExecutor>)
+        })
+    } else {
+        // Dense path: quantize, dequantize back to f32, substitute into
+        // the lowered fwd graph (HALO-bal, the paper's deployment).
+        let q = HaloQuantizer::new(HaloConfig::new(tile, Variant::Bal), profile);
+        let mut replace = BTreeMap::new();
+        let mut classes = Vec::new();
+        for p in model.linear_params() {
+            let w = p.as_matrix()?;
+            let ctx = match grads.get(&p.name) {
+                Some(g) => halo::quant::LayerCtx::with_grad(&p.name, g),
+                None => halo::quant::LayerCtx::new(&p.name),
+            };
+            let res = q.quantize(&w, &ctx);
+            for &f in &res.tile_freq_ghz {
+                classes.push(halo::dvfs::classify(f, profile));
+            }
+            replace.insert(p.name.clone(), res.dequant);
+        }
+        let schedule = Schedule::cluster(&classes);
+        eprintln!(
+            "[serve] quantized {} tiles (dense dequant), schedule groups={} transitions={}, shards={n_shards}",
+            classes.len(),
+            schedule.groups.len(),
+            schedule.transitions()
+        );
+        let model = Arc::new(model);
+        let replace = Arc::new(replace);
+        let ss = Arc::new(schedule.shard(n_shards));
+        Coordinator::start_sharded(cfg, move |shard| {
+            // Each shard owns its runtime + resident parameter buffers
+            // (PJRT handles never cross threads) and applies its own
+            // schedule slice.
+            let rt = Runtime::cpu()?;
+            let exec = GraphExecutor::new(rt, &model, &replace, ss[shard].clone())?;
+            Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+        })
+    };
 
     // Fire a synthetic request stream sampled from the corpus.
     let stream = store.corpus_eval("wikisyn")?;
@@ -287,7 +362,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             continue;
         }
         anyhow::ensure!(resp.tokens.len() == max_new, "short decode");
-        anyhow::ensure!(resp.tokens.iter().all(|t| (0..model.vocab as i32).contains(t)));
+        anyhow::ensure!(resp.tokens.iter().all(|t| (0..vocab as i32).contains(t)));
         ok += 1;
     }
     let wall = t0.elapsed();
@@ -314,6 +389,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     use std::time::Duration;
 
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let quant = parse_quant_variant(args.str_or("quant", "none"))?;
     let cfg = LoadgenConfig {
         shards: args.usize_or("shards", 4)?.max(1),
         batch_size: args.usize_or("batch", 8)?.max(1),
@@ -327,7 +403,68 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         work_dim: args.usize_or("work", 48)?.max(1),
         seed: args.u64_or("seed", 0x10AD)?,
     };
-    let report = loadgen::run(&cfg)?;
+
+    let report = if let Some(variant) = quant {
+        // Real quantized model behind the same paced-arrival harness:
+        // every shard decodes on the shared packed tiles.
+        use halo::coordinator::QuantExecutor;
+        use halo::model::calibrate_fisher;
+        use halo::runtime::{PackedModel, Runtime};
+        use std::sync::Arc;
+
+        let store = open_store(args)?;
+        let model = store.model(args.str_or("model", "base"))?;
+        let rt = Runtime::cpu()?;
+        let calib = store.corpus_calib()?;
+        let grads = calibrate_fisher(&rt, &model, &calib, 1)?;
+        let tile = args.usize_or("tile", 128)?;
+        let packed = PackedModel::pack_artifacts(
+            &model,
+            variant,
+            tile,
+            &grads,
+            MacProfile::cached(),
+        )?;
+        eprintln!(
+            "[loadgen] packed {} layers (halo-{}, tile {tile}); {}",
+            packed.n_packed(),
+            variant.name(),
+            packed.cost(&halo::dvfs::Ladder::paper_systolic()).summary()
+        );
+        let vocab = packed.spec.vocab;
+        let batch = cfg.batch_size;
+        let ss = Arc::new(packed.schedule.shard(cfg.shards));
+        let pm = Arc::new(packed);
+        let max_new = cfg.max_new_tokens;
+        // Verify shape/range on every response, and re-derive the exact
+        // greedy decode chain against the packed model for a bounded
+        // sample — enough to catch a broken decode loop without doubling
+        // the whole run's compute client-side.
+        const EXACT_CHECKS: usize = 32;
+        let pmv = pm.clone();
+        let exact_left = std::cell::Cell::new(EXACT_CHECKS);
+        let verify = move |p: &[i32], tokens: &[i32], _m: usize| {
+            if tokens.len() != max_new
+                || !tokens.iter().all(|&t| (0..vocab as i32).contains(&t))
+            {
+                return false;
+            }
+            if exact_left.get() == 0 {
+                return true;
+            }
+            exact_left.set(exact_left.get() - 1);
+            match pmv.decode_greedy(p, max_new) {
+                Ok(want) => want == tokens,
+                Err(_) => false,
+            }
+        };
+        loadgen::run_with(&cfg, vocab, &verify, move |shard| {
+            Ok(Box::new(QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone()))
+                as Box<dyn halo::coordinator::BatchExecutor>)
+        })?
+    } else {
+        loadgen::run(&cfg)?
+    };
     println!("[loadgen] {}", report.summary());
     for (s, m) in report.per_shard.iter().enumerate() {
         println!("[loadgen]   shard {s}: {}", m.summary());
@@ -345,7 +482,9 @@ fn cmd_all(args: &Args, out: &std::path::Path) -> Result<()> {
     write_report(&out.join("fig8.md"), &figs::fig8(128))?;
     write_report(&out.join("fig10.md"), &figs::fig10(128))?;
     write_report(&out.join("fig11.md"), &figs::fig11())?;
-    write_report(&out.join("fig12_13.md"), &figs::fig12_13())?;
+    let (f12, f13) = figs::fig12_13();
+    write_report(&out.join("fig12.md"), &f12)?;
+    write_report(&out.join("fig13.md"), &f13)?;
     write_report(&out.join("ablate_dram.md"), &figs::ablate_dram())?;
     write_report(&out.join("ablate_dvfs_overhead.md"), &figs::ablate_dvfs_overhead())?;
     write_report(

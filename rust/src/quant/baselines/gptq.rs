@@ -42,16 +42,22 @@ pub fn synthetic_hessian(k: usize, seed: u64, n_samples: usize) -> Vec<f64> {
     h
 }
 
+/// GPTQ with the synthetic-Hessian calibration substitution.
 pub struct Gptq<'p> {
+    /// Weight bit-width.
     pub bits: u32,
+    /// MAC circuit profile for the per-tile timing/energy stats.
     pub profile: &'p MacProfile,
+    /// Tile edge for the hardware-stats grid.
     pub tile: usize,
     /// Relative dampening λ = percdamp · mean(diag H) (reference: 0.01).
     pub percdamp: f64,
+    /// Synthetic calibration samples for the Hessian (paper: 128).
     pub n_calib: usize,
 }
 
 impl<'p> Gptq<'p> {
+    /// GPTQ at `bits` with the reference dampening and calibration size.
     pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
         Self { bits, profile, tile, percdamp: 0.01, n_calib: 128 }
     }

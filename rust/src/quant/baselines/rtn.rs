@@ -11,13 +11,18 @@ use super::super::tensor::{Matrix, TileGrid};
 use super::super::uniform::per_channel;
 use super::super::{tile_hw_stats, LayerCtx, QuantResult, Quantizer};
 
+/// Round-To-Nearest WxA8: per-output-channel symmetric uniform grids.
 pub struct Rtn<'p> {
+    /// Weight bit-width (8 / 4 / 3 in the paper's sweeps).
     pub bits: u32,
+    /// MAC circuit profile for the per-tile timing/energy stats.
     pub profile: &'p MacProfile,
+    /// Tile edge for the hardware-stats grid.
     pub tile: usize,
 }
 
 impl<'p> Rtn<'p> {
+    /// RTN at `bits` with hardware stats over `tile × tile` tiles.
     pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
         Self { bits, profile, tile }
     }
@@ -48,11 +53,14 @@ impl<'p> Quantizer for Rtn<'p> {
 /// The FP16 datapath runs at the base clock and a wide-MAC energy penalty
 /// (handled by the simulators via `bits_eff = 16`).
 pub struct Fp16<'p> {
+    /// MAC circuit profile (base-clock/energy accounting).
     pub profile: &'p MacProfile,
+    /// Tile edge for the hardware-stats grid.
     pub tile: usize,
 }
 
 impl<'p> Fp16<'p> {
+    /// FP16 identity with hardware stats over `tile × tile` tiles.
     pub fn new(profile: &'p MacProfile, tile: usize) -> Self {
         Self { profile, tile }
     }

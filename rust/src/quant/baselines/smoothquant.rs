@@ -32,14 +32,20 @@ pub fn synthetic_act_absmax(k: usize, seed: u64) -> Vec<f32> {
         .collect()
 }
 
+/// SmoothQuant WxA8 with the synthetic activation-statistics substitution.
 pub struct SmoothQuant<'p> {
+    /// Weight bit-width.
     pub bits: u32,
+    /// Migration strength α (reference default 0.5).
     pub alpha: f32,
+    /// MAC circuit profile for the per-tile timing/energy stats.
     pub profile: &'p MacProfile,
+    /// Tile edge for the hardware-stats grid.
     pub tile: usize,
 }
 
 impl<'p> SmoothQuant<'p> {
+    /// SmoothQuant at `bits` with the reference α = 0.5.
     pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
         Self { bits, alpha: 0.5, profile, tile }
     }

@@ -36,14 +36,20 @@ fn pe_image_asym(qv: i32, bits: u32) -> i8 {
     pe_image(qv - (1 << (bits - 1)), bits)
 }
 
+/// ZeroQuant-Local: per-tile asymmetric quantization, compensation 1.0.
 pub struct ZqLocal<'p> {
+    /// Weight bit-width.
     pub bits: u32,
+    /// MAC circuit profile for the per-tile timing/energy stats.
     pub profile: &'p MacProfile,
+    /// Tile edge (quantization groups AND hardware-stats grid).
     pub tile: usize,
+    /// Post-dequant compensation factor (Local: 1.0).
     pub compensation: f32,
 }
 
 impl<'p> ZqLocal<'p> {
+    /// ZQ-Local at `bits` over `tile × tile` quantization groups.
     pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
         Self { bits, profile, tile, compensation: 1.0 }
     }
@@ -84,15 +90,22 @@ impl<'p> Quantizer for ZqLocal<'p> {
     }
 }
 
+/// ZeroQuant-Global: fused input-channel groups, compensation 0.8.
 pub struct ZqGlobal<'p> {
+    /// Weight bit-width.
     pub bits: u32,
+    /// MAC circuit profile for the per-tile timing/energy stats.
     pub profile: &'p MacProfile,
+    /// Tile edge for the hardware-stats grid.
     pub tile: usize,
+    /// Input channels fused into one quantization group.
     pub group_channels: usize,
+    /// Global compensation factor (LoRC's 0.8).
     pub compensation: f32,
 }
 
 impl<'p> ZqGlobal<'p> {
+    /// ZQ-Global at `bits` with 64-channel groups and 0.8 compensation.
     pub fn new(bits: u32, profile: &'p MacProfile, tile: usize) -> Self {
         Self { bits, profile, tile, group_channels: 64, compensation: 0.8 }
     }

@@ -10,7 +10,7 @@
 //!    model).
 //! 4. The [`Variant`] (perf-opt / acc-opt / bal) sets the cumulative
 //!    coverage target — the paper's "optimization feedback mechanism
-//!    constrain[ing] the number of tiles allocated to each DVFS level".
+//!    constraining the number of tiles allocated to each DVFS level".
 
 use crate::mac::MacProfile;
 
@@ -54,6 +54,7 @@ impl Variant {
         }
     }
 
+    /// Canonical short name (`perf-opt` / `acc-opt` / `bal`).
     pub fn name(self) -> &'static str {
         match self {
             Variant::PerfOpt => "perf-opt",
@@ -62,6 +63,7 @@ impl Variant {
         }
     }
 
+    /// Parse a variant from its canonical or short CLI spelling.
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
             "perf-opt" | "perf" => Some(Variant::PerfOpt),
@@ -72,15 +74,19 @@ impl Variant {
     }
 }
 
+/// Knobs of one HALO quantization run.
 #[derive(Debug, Clone)]
 pub struct HaloConfig {
+    /// Tile edge length (paper default: 128).
     pub tile: usize,
+    /// Design-goal preset (coverage target + salient budget).
     pub variant: Variant,
     /// 3σ outlier cut (paper §III-A).
     pub sigma: f64,
 }
 
 impl HaloConfig {
+    /// Config with the paper's 3σ outlier cut.
     pub fn new(tile: usize, variant: Variant) -> Self {
         Self { tile, variant, sigma: 3.0 }
     }
@@ -100,16 +106,20 @@ pub struct HaloPayload {
     pub scales: Vec<f32>,
     /// `true` per tile ⇒ fast (9-value) class.
     pub tile_fast: Vec<bool>,
+    /// Full-precision outlier/salient side matrix (SpMV operand).
     pub sparse: SparseMatrix,
 }
 
 /// The HALO quantizer (owns a reference profile + config).
 pub struct HaloQuantizer<'p> {
+    /// Tile size / variant / outlier-cut knobs.
     pub cfg: HaloConfig,
+    /// The MAC circuit profile the codebooks derive from.
     pub profile: &'p MacProfile,
 }
 
 impl<'p> HaloQuantizer<'p> {
+    /// Quantizer over a config + circuit profile.
     pub fn new(cfg: HaloConfig, profile: &'p MacProfile) -> Self {
         Self { cfg, profile }
     }

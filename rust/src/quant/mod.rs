@@ -17,6 +17,7 @@ pub mod baselines;
 pub mod halo;
 pub mod nonuniform;
 pub mod outliers;
+pub mod packed;
 pub mod saliency;
 pub mod sparse;
 pub mod tensor;
@@ -24,12 +25,14 @@ pub mod tiles;
 pub mod uniform;
 
 pub use halo::{HaloConfig, HaloQuantizer, Variant};
+pub use packed::{PackedLayer, PackedTile};
 pub use tensor::{Matrix, TileGrid};
 
 use crate::mac::MacProfile;
 
 /// Per-layer context handed to quantizers.
 pub struct LayerCtx<'a> {
+    /// Layer/parameter name (reporting + per-layer calibration seeds).
     pub name: &'a str,
     /// Loss gradients w.r.t. this weight matrix (Fisher inputs, Eq. 1).
     pub grad: Option<&'a Matrix>,
@@ -38,10 +41,12 @@ pub struct LayerCtx<'a> {
 }
 
 impl<'a> LayerCtx<'a> {
+    /// Context without gradients (every tile is treated low-sensitivity).
     pub fn new(name: &'a str) -> Self {
         Self { name, grad: None, seed: 0 }
     }
 
+    /// Context with Fisher gradients for saliency + tile sensitivity.
     pub fn with_grad(name: &'a str, grad: &'a Matrix) -> Self {
         Self { name, grad: Some(grad), seed: 0 }
     }
@@ -50,9 +55,11 @@ impl<'a> LayerCtx<'a> {
 /// What every quantizer produces.
 #[derive(Debug, Clone)]
 pub struct QuantResult {
+    /// Canonical method name (e.g. `halo-bal-t128`, `rtn-w8`).
     pub method: String,
     /// Reconstructed dense weights (substituted into the eval graphs).
     pub dequant: Matrix,
+    /// Tile geometry the per-tile stats below are indexed by.
     pub grid: TileGrid,
     /// Achievable clock per tile (GHz) from the MAC profile — before
     /// snapping to a DVFS ladder.
@@ -94,7 +101,9 @@ impl QuantResult {
 
 /// Common interface over HALO and all baselines.
 pub trait Quantizer {
+    /// Canonical method name (Table II row label).
     fn name(&self) -> String;
+    /// Quantize one weight matrix under the given layer context.
     fn quantize(&self, w: &Matrix, ctx: &LayerCtx) -> QuantResult;
 }
 

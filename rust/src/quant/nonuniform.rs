@@ -2,7 +2,7 @@
 //!
 //! Weights are mapped onto a small codebook of int8 values chosen for their
 //! short MAC critical paths (from [`crate::mac::MacProfile`]), with one
-//! dequant scale per tile: deq(w) = codebook[i] · s_tile. Because every
+//! dequant scale per tile: `deq(w) = codebook[i] · s_tile`. Because every
 //! stored value is a codebook member, the tile's achievable clock is the
 //! codebook class frequency by construction.
 
@@ -11,11 +11,13 @@ use super::tensor::{Matrix, TileGrid};
 /// A codebook = sorted int8 values + their f32 images.
 #[derive(Debug, Clone)]
 pub struct Codebook {
+    /// The member int8 values, sorted ascending, deduplicated.
     pub values: Vec<i8>,
     f: Vec<f32>,
 }
 
 impl Codebook {
+    /// Build from member values (sorted + deduplicated internally).
     pub fn new(mut values: Vec<i8>) -> Self {
         values.sort_unstable();
         values.dedup();
@@ -23,14 +25,17 @@ impl Codebook {
         Self { values, f }
     }
 
+    /// Number of codebook entries.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// True when the codebook has no entries.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
 
+    /// Largest absolute member value (scale-mapping anchor).
     pub fn max_abs(&self) -> f32 {
         self.f.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
@@ -66,6 +71,7 @@ impl Codebook {
 pub struct TileQuant {
     /// Codebook index per element of the tile (row-major within tile).
     pub idx: Vec<u8>,
+    /// Dequantization scale: `w = codebook[idx] * scale`.
     pub scale: f32,
 }
 

@@ -13,8 +13,11 @@ pub type Coord = (usize, usize, f32);
 /// Extraction output: the cleaned matrix and the extracted coordinates.
 #[derive(Debug, Clone)]
 pub struct Extracted {
+    /// The input with every extracted entry zeroed.
     pub cleaned: Matrix,
+    /// Extracted `(row, col, original value)` entries.
     pub coords: Vec<Coord>,
+    /// The absolute cut applied (`k · σ`).
     pub sigma_cut: f64,
 }
 

@@ -1,0 +1,238 @@
+//! The packed execution format: HALO-quantized layers as contiguous
+//! codebook-index tiles, ready for native execution.
+//!
+//! [`super::halo::HaloPayload`] is the *wire* format (whole-matrix index
+//! plane + shared table — the operands of the lowered `fwd_halo` graph).
+//! [`PackedLayer`] is the *execution* format the pure-Rust engine in
+//! [`crate::runtime::qkernels`] consumes: one contiguous `u8` code block
+//! per tile (row-major within the tile), the shared 16-entry codebook
+//! table, a per-tile scale, and the tile's DVFS class/frequency/energy
+//! tags from the MAC circuit model. The hypersparse outlier/salient side
+//! matrix rides along untouched so the execution engine can fuse it as an
+//! SpMV epilogue instead of scattering it into a dense copy.
+//!
+//! Nothing here ever materializes a dense f32 weight matrix;
+//! [`PackedLayer::dequantize`] exists only as the test/bench oracle.
+
+use crate::dvfs::{classify, FreqClass};
+use crate::mac::MacProfile;
+
+use super::halo::HaloPayload;
+use super::sparse::SparseMatrix;
+use super::tensor::{Matrix, TileGrid};
+use super::QuantResult;
+
+/// Number of entries in the shared codebook table (the medium book; the
+/// fast book is a subset occupying 9 of the 16 slots).
+pub const TABLE_LEN: usize = 16;
+
+/// One quantized tile in execution form: contiguous codebook indices plus
+/// the hardware tags the per-tile cycle-cost model reads.
+#[derive(Debug, Clone)]
+pub struct PackedTile {
+    /// Codebook index per element, row-major within the tile, indices in
+    /// shared-table space (`0..TABLE_LEN`). Edge tiles are smaller.
+    pub codes: Vec<u8>,
+    /// Tile height (rows actually covered — edge tiles may be short).
+    pub rows: usize,
+    /// Tile width (columns actually covered).
+    pub cols: usize,
+    /// Dequantization scale: `w = table[code] * scale`.
+    pub scale: f32,
+    /// True ⇒ the tile is codebook-pure over the 9-value fast book.
+    pub fast: bool,
+    /// DVFS class of the tile (fast/med from the codebook; never base —
+    /// HALO tiles are codebook-pure by construction).
+    pub class: FreqClass,
+    /// Achievable clock of the tile's codebook class (GHz, circuit model).
+    pub freq_ghz: f64,
+    /// Mean dynamic MAC energy per op over the tile's codebook (pJ, V_NOM).
+    pub energy_pj: f64,
+}
+
+impl PackedTile {
+    /// Multiply-accumulate operations this tile contributes per activation
+    /// row.
+    pub fn macs(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// A whole linear layer in packed execution form.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    /// Parameter name (e.g. `layer0.attn.wq`).
+    pub name: String,
+    /// Tile geometry over the layer's `(rows, cols)` — also the single
+    /// source of the layer's dimensions ([`Self::rows`] / [`Self::cols`]).
+    pub grid: TileGrid,
+    /// The shared 16-entry codebook table (medium book; fast ⊆ med).
+    pub table: [f32; TABLE_LEN],
+    /// One packed tile per grid cell, row-major tile order.
+    pub tiles: Vec<PackedTile>,
+    /// Full-precision outlier/salient side matrix (SpMV epilogue operand).
+    pub sparse: SparseMatrix,
+    /// Modeled stored bits per weight (Table II BW accounting).
+    pub bits_eff: f64,
+}
+
+impl PackedLayer {
+    /// Pack a quantization result + payload into execution form. The
+    /// payload's whole-matrix index plane is re-tiled into contiguous
+    /// per-tile code blocks; every tile is tagged with its DVFS class from
+    /// `profile`.
+    pub fn pack(
+        name: &str,
+        result: &QuantResult,
+        payload: &HaloPayload,
+        profile: &MacProfile,
+    ) -> Self {
+        let grid = result.grid;
+        let (rows, cols) = (grid.rows, grid.cols);
+        debug_assert_eq!(payload.idx.len(), rows * cols);
+        let mut table = [0.0f32; TABLE_LEN];
+        for (slot, &v) in table.iter_mut().zip(payload.codebook.iter()) {
+            *slot = v;
+        }
+        let mut tiles = Vec::with_capacity(grid.n_tiles());
+        for t in 0..grid.n_tiles() {
+            let (rr, cc) = grid.bounds(t);
+            let (th, tw) = (rr.len(), cc.len());
+            let mut codes = Vec::with_capacity(th * tw);
+            grid.for_each(t, |r, c| codes.push(payload.idx[r * cols + c]));
+            let freq_ghz = result.tile_freq_ghz[t];
+            tiles.push(PackedTile {
+                codes,
+                rows: th,
+                cols: tw,
+                scale: payload.scales[t],
+                fast: payload.tile_fast[t],
+                class: classify(freq_ghz, profile),
+                freq_ghz,
+                energy_pj: result.tile_energy_pj[t],
+            });
+        }
+        Self {
+            name: name.to_string(),
+            grid,
+            table,
+            tiles,
+            sparse: payload.sparse.clone(),
+            bits_eff: result.bits_eff,
+        }
+    }
+
+    /// Input features (K of `y = x @ W`).
+    pub fn rows(&self) -> usize {
+        self.grid.rows
+    }
+
+    /// Output features (N).
+    pub fn cols(&self) -> usize {
+        self.grid.cols
+    }
+
+    /// DVFS class per tile, row-major tile order (schedule input).
+    pub fn classes(&self) -> Vec<FreqClass> {
+        self.tiles.iter().map(|t| t.class).collect()
+    }
+
+    /// Bytes the packed representation actually touches per pass: one `u8`
+    /// code per dense weight, the shared table, a scale per tile, and
+    /// `(f32 val, u32 pos)` per live sparse entry (padding excluded — it
+    /// is an alignment artifact, not traffic).
+    pub fn packed_bytes(&self) -> usize {
+        let codes: usize = self.tiles.iter().map(|t| t.codes.len()).sum();
+        codes
+            + TABLE_LEN * std::mem::size_of::<f32>()
+            + self.tiles.len() * std::mem::size_of::<f32>()
+            + self.sparse.nnz * 8
+    }
+
+    /// Bytes a dense f32 copy of the layer would touch per pass.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows() * self.cols() * std::mem::size_of::<f32>()
+    }
+
+    /// Dense reconstruction — the dequantize-then-dense **oracle** for the
+    /// equivalence tests and benchmarks. The serving path never calls this.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows(), self.cols());
+        for (t, tile) in self.tiles.iter().enumerate() {
+            let mut i = 0usize;
+            self.grid.for_each(t, |r, c| {
+                out.set(r, c, self.table[tile.codes[i] as usize] * tile.scale);
+                i += 1;
+            });
+        }
+        self.sparse.scatter_into(&mut out);
+        out
+    }
+
+    /// Total multiply-accumulates per activation row (`rows * cols`).
+    pub fn macs_per_row(&self) -> usize {
+        self.rows() * self.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mac::MacProfile;
+    use crate::quant::{HaloConfig, HaloQuantizer, LayerCtx, Variant};
+    use crate::util::Rng;
+
+    fn quantize(rows: usize, cols: usize, tile: usize, seed: u64) -> (Matrix, PackedLayer) {
+        let profile = MacProfile::cached();
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = Matrix::random_normal(rows, cols, 0.02, &mut rng);
+        let g = Matrix::random_normal(rows, cols, 1.0, &mut rng);
+        let q = HaloQuantizer::new(HaloConfig::new(tile, Variant::Bal), profile);
+        let (res, pay) = q.quantize_full(&w, &LayerCtx::with_grad("t", &g));
+        let packed = PackedLayer::pack("t", &res, &pay, profile);
+        (res.dequant, packed)
+    }
+
+    #[test]
+    fn pack_dequantize_matches_quant_result() {
+        for (rows, cols, tile) in [(64, 64, 32), (100, 70, 32), (48, 96, 16)] {
+            let (dequant, packed) = quantize(rows, cols, tile, 7);
+            let rec = packed.dequantize();
+            for (a, b) in rec.data.iter().zip(&dequant.data) {
+                assert!((a - b).abs() < 1e-6, "{a} vs {b} ({rows}x{cols} t{tile})");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tiles_pack_their_true_extent() {
+        let (_, packed) = quantize(100, 70, 32, 8);
+        let last = packed.tiles.last().unwrap();
+        assert_eq!((last.rows, last.cols), (4, 6));
+        assert_eq!(last.codes.len(), 24);
+        let total: usize = packed.tiles.iter().map(|t| t.codes.len()).sum();
+        assert_eq!(total, 100 * 70);
+    }
+
+    #[test]
+    fn packed_bytes_beat_dense_by_over_3x() {
+        let (_, packed) = quantize(128, 128, 32, 9);
+        let saving = packed.dense_bytes() as f64 / packed.packed_bytes() as f64;
+        assert!(saving > 3.0, "saving {saving}");
+    }
+
+    #[test]
+    fn tiles_tagged_fast_or_med_never_base() {
+        let (_, packed) = quantize(128, 128, 32, 10);
+        assert!(packed
+            .tiles
+            .iter()
+            .all(|t| matches!(t.class, FreqClass::Fast | FreqClass::Med)));
+        // Class agrees with the fast flag.
+        for t in &packed.tiles {
+            if t.fast {
+                assert_eq!(t.class, FreqClass::Fast);
+            }
+        }
+    }
+}

@@ -11,9 +11,12 @@ use super::tensor::Matrix;
 /// Padding granularity — matches `SPARSE_PAD` in python/compile/aot.py.
 pub const PAD: usize = 256;
 
+/// The hypersparse outlier/salient side matrix in `(val, pos)` form.
 #[derive(Debug, Clone, Default)]
 pub struct SparseMatrix {
+    /// Logical row count of the dense matrix the entries were lifted from.
     pub rows: usize,
+    /// Logical column count.
     pub cols: usize,
     /// Non-zero values, zero-padded to a multiple of [`PAD`].
     pub val: Vec<f32>,
@@ -24,6 +27,8 @@ pub struct SparseMatrix {
 }
 
 impl SparseMatrix {
+    /// Package extracted `(row, col, value)` coordinates, zero-padding the
+    /// `(val, pos)` vectors to a [`PAD`] multiple.
     pub fn from_coords(rows: usize, cols: usize, coords: &[Coord]) -> Self {
         let nnz = coords.len();
         let padded = nnz.div_ceil(PAD).max(1) * PAD;
@@ -50,8 +55,18 @@ impl SparseMatrix {
     /// y = x @ W_sparse for a dense row-major x (m, rows) -> (m, cols).
     /// This is the Rust mirror of the L1 SpMV kernel / ref.py oracle.
     pub fn spmv(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.rows);
         let mut y = Matrix::zeros(x.rows, self.cols);
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// `y += x @ W_sparse` — the fused-epilogue form the packed execution
+    /// engine ([`crate::runtime::qkernels`]) uses: the outlier/salient
+    /// contribution lands directly in the matmul output without ever
+    /// scattering the sparse weights into a dense copy.
+    pub fn spmv_into(&self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols, self.rows);
+        assert_eq!((y.rows, y.cols), (x.rows, self.cols));
         for (i, &v) in self.val.iter().enumerate() {
             if v == 0.0 {
                 continue;
@@ -63,7 +78,6 @@ impl SparseMatrix {
                 y.set(m, c, y.get(m, c) + add);
             }
         }
-        y
     }
 
     /// Scatter back into a dense matrix (adds to existing values).
@@ -124,6 +138,26 @@ mod tests {
         for (a, b) in got.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn spmv_into_accumulates() {
+        let mut rng = Rng::seed_from_u64(31);
+        let coords = random_coords(&mut rng, 8, 6, 10);
+        let s = SparseMatrix::from_coords(8, 6, &coords);
+        let x = Matrix::random_normal(3, 8, 1.0, &mut rng);
+        let mut y = Matrix::from_fn(3, 6, |r, c| (r * 6 + c) as f32);
+        let base = y.clone();
+        s.spmv_into(&x, &mut y);
+        let delta = s.spmv(&x);
+        for i in 0..y.data.len() {
+            assert!((y.data[i] - (base.data[i] + delta.data[i])).abs() < 1e-5);
+        }
+        // Empty sparse set: epilogue is a no-op.
+        let empty = SparseMatrix::from_coords(8, 6, &[]);
+        let mut z = base.clone();
+        empty.spmv_into(&x, &mut z);
+        assert_eq!(z, base);
     }
 
     #[test]

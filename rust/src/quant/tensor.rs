@@ -7,23 +7,31 @@
 
 use crate::util::Rng;
 
+/// A dense row-major f32 matrix — the substrate every quantizer and the
+/// pure-Rust interpreter operate on.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` elements.
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer (length must match the shape).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Self { rows, cols, data }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
@@ -39,36 +47,44 @@ impl Matrix {
         Self::from_fn(rows, cols, |_, _| rng.gen_normal() as f32 * std)
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Overwrite the element at `(r, c)`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable slice.
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Total element count (`rows * cols`).
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Largest absolute value (quantization range input).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
+    /// Mean over all elements (f64 accumulation).
     pub fn mean(&self) -> f64 {
         self.data.iter().map(|&x| x as f64).sum::<f64>() / self.numel().max(1) as f64
     }
 
+    /// Population standard deviation (the 3σ outlier-cut input).
     pub fn std(&self) -> f64 {
         let mu = self.mean();
         let var = self
@@ -137,14 +153,20 @@ impl Matrix {
 /// in every codebook).
 #[derive(Debug, Clone, Copy)]
 pub struct TileGrid {
+    /// Matrix row count the grid covers.
     pub rows: usize,
+    /// Matrix column count.
     pub cols: usize,
+    /// Tile edge length (tiles are `tile × tile`, clamped at the edges).
     pub tile: usize,
+    /// Tile rows (`ceil(rows / tile)`).
     pub tiles_r: usize,
+    /// Tile columns (`ceil(cols / tile)`).
     pub tiles_c: usize,
 }
 
 impl TileGrid {
+    /// Grid of `tile × tile` tiles over a `(rows, cols)` matrix.
     pub fn new(rows: usize, cols: usize, tile: usize) -> Self {
         assert!(tile > 0);
         Self {
@@ -156,6 +178,7 @@ impl TileGrid {
         }
     }
 
+    /// Total tile count (`tiles_r * tiles_c`).
     pub fn n_tiles(&self) -> usize {
         self.tiles_r * self.tiles_c
     }

@@ -113,16 +113,23 @@ impl Literal {
             base + width,
             data.len()
         );
-        let mut best = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for (i, &v) in data[base..base + width].iter().enumerate() {
-            if v > best_v {
-                best_v = v;
-                best = i;
-            }
-        }
-        Ok(best as i32)
+        Ok(argmax_slice(&data[base..base + width]) as i32)
     }
+}
+
+/// Index of the largest value in `row` (first wins ties; NaNs lose) — the
+/// single argmax every decode path shares, so packed and dense serving can
+/// never diverge on tie-breaking. Returns 0 for an empty slice.
+pub fn argmax_slice(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Element types a [`Literal`] can hold.

@@ -10,13 +10,15 @@ pub mod artifacts;
 pub mod backend;
 pub mod client;
 pub mod kernels;
+pub mod qkernels;
 pub mod sim;
 #[cfg(feature = "xla")]
 pub mod xla;
 
 pub use artifacts::{ModelArtifacts, Param, Store};
-pub use backend::{Backend, Buffer, Literal, LiteralData};
+pub use backend::{argmax_slice, Backend, Buffer, Literal, LiteralData};
 pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
+pub use qkernels::{qmatmul, PackedModel, QCost};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,547 @@
+//! Native quantized execution engine: matmul directly on packed HALO
+//! codebook tiles, with the hypersparse outlier matrix fused as an SpMV
+//! epilogue and a per-tile DVFS cycle-cost model.
+//!
+//! This is the serving-side counterpart of the paper's premise that the
+//! quantized form *is* the execution format. The dense path dequantizes
+//! every layer back to f32 before the graph runs; here the forward pass
+//! consumes [`PackedLayer`]s as-is:
+//!
+//! - [`qmatmul`] walks the layer one tile-column panel at a time. Each
+//!   tile's `u8` codes are expanded through its 16-entry LUT
+//!   (`table[code] * scale`) into an L1-resident panel, which a 4-row
+//!   register-blocked micro-kernel (the blocking scheme of
+//!   [`super::kernels`]) accumulates against the activations. Panels are
+//!   fanned out over the worker pool; each task owns disjoint output
+//!   columns and walks `k` in ascending order, so results are
+//!   deterministic and thread-count independent.
+//! - The `< 0.5 %` outlier/salient side matrix lands via
+//!   [`crate::quant::sparse::SparseMatrix::spmv_into`] **after** the dense
+//!   accumulation — a fused epilogue, not a scatter into a dense copy.
+//! - [`QCost`] prices every tile at its DVFS class frequency
+//!   ([`crate::mac::MacProfile`] classes mapped onto a
+//!   [`crate::dvfs::Ladder`]), giving the modeled speedup/energy that the
+//!   serving CLI reports alongside wall-clock throughput.
+//!
+//! [`PackedModel`] is the parameter store for this path: packed tiles for
+//! every linear weight, dense data only for the non-linear parameters
+//! (embeddings, norms, biases). It never materializes a dense f32 linear
+//! weight — [`PackedModel::dense_linear_count`] exists so tests can assert
+//! exactly that.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::dvfs::{FreqClass, Ladder, Schedule};
+use crate::mac::MacProfile;
+use crate::quant::packed::PackedLayer;
+use crate::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
+use crate::util::parallel;
+
+use super::artifacts::ModelArtifacts;
+use super::sim::{self, ModelSpec, ParamSource};
+
+/// Output rows accumulated together per micro-kernel pass (register
+/// blocking factor, mirroring `runtime::kernels::MR`).
+const MR: usize = 4;
+
+/// Below this many MACs the panel fan-out costs more than it saves; run
+/// the tile columns serially (mirrors `kernels::PAR_MIN_MACS`).
+const PAR_MIN_MACS: usize = 1 << 17;
+
+/// `y = x @ W` executed natively on a packed layer, outliers fused as an
+/// SpMV epilogue. `x` is `(m, K)` row-major; the result is `(m, N)`.
+///
+/// Bit-for-bit deterministic: per output element, `k` ascends tile-row by
+/// tile-row exactly like the dense blocked kernel, and the parallel panel
+/// tasks own disjoint columns.
+pub fn qmatmul(x: &Matrix, layer: &PackedLayer) -> Matrix {
+    assert_eq!(
+        x.cols,
+        layer.rows(),
+        "qmatmul: inner dims {} vs {} ({})",
+        x.cols,
+        layer.rows(),
+        layer.name
+    );
+    let (m, n) = (x.rows, layer.cols());
+    let grid = layer.grid;
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || layer.rows() == 0 {
+        return out;
+    }
+
+    let panel_task = |tc: usize| -> Vec<f32> {
+        let c0 = tc * grid.tile;
+        let nw = (c0 + grid.tile).min(n) - c0;
+        let mut y = vec![0.0f32; m * nw];
+        let mut wbuf = vec![0.0f32; grid.tile * nw];
+        for tr in 0..grid.tiles_r {
+            let tile = &layer.tiles[tr * grid.tiles_c + tc];
+            debug_assert_eq!(tile.cols, nw);
+            let (k0, kh) = (tr * grid.tile, tile.rows);
+            // LUT expansion: 16 multiplies, then one table read per code.
+            let mut lut = [0.0f32; crate::quant::packed::TABLE_LEN];
+            for (slot, &v) in lut.iter_mut().zip(layer.table.iter()) {
+                *slot = v * tile.scale;
+            }
+            for (wv, &code) in wbuf[..kh * nw].iter_mut().zip(tile.codes.iter()) {
+                *wv = lut[code as usize];
+            }
+            accumulate_panel(x, k0, kh, &wbuf[..kh * nw], nw, &mut y, m);
+        }
+        y
+    };
+
+    let work = m * layer.rows() * n;
+    let panels: Vec<Vec<f32>> = if work < PAR_MIN_MACS {
+        (0..grid.tiles_c).map(panel_task).collect()
+    } else {
+        parallel::par_map(grid.tiles_c, panel_task)
+    };
+    for (tc, panel) in panels.into_iter().enumerate() {
+        let c0 = tc * grid.tile;
+        let nw = (c0 + grid.tile).min(n) - c0;
+        for r in 0..m {
+            out.row_mut(r)[c0..c0 + nw].copy_from_slice(&panel[r * nw..(r + 1) * nw]);
+        }
+    }
+
+    // Fused epilogue: the hypersparse side matrix adds straight into the
+    // output — the dense weight plane is never reconstructed.
+    layer.sparse.spmv_into(x, &mut out);
+    out
+}
+
+/// Accumulate `y[(m, nw)] += x[:, k0..k0+kh] @ w[(kh, nw)]` with 4-row
+/// register blocking: each streamed `w` row is reused `MR`× from
+/// registers, and `k` ascends so the summation order matches the dense
+/// oracle.
+fn accumulate_panel(
+    x: &Matrix,
+    k0: usize,
+    kh: usize,
+    w: &[f32],
+    nw: usize,
+    y: &mut [f32],
+    m: usize,
+) {
+    let xk = x.cols;
+    let xd = &x.data;
+    let mut r = 0usize;
+    while r + MR <= m {
+        let (r01, r23) = y[r * nw..(r + MR) * nw].split_at_mut(2 * nw);
+        let (o0, o1) = r01.split_at_mut(nw);
+        let (o2, o3) = r23.split_at_mut(nw);
+        for kk in 0..kh {
+            let a0 = xd[r * xk + k0 + kk];
+            let a1 = xd[(r + 1) * xk + k0 + kk];
+            let a2 = xd[(r + 2) * xk + k0 + kk];
+            let a3 = xd[(r + 3) * xk + k0 + kk];
+            let wrow = &w[kk * nw..(kk + 1) * nw];
+            for (j, &wv) in wrow.iter().enumerate() {
+                o0[j] += a0 * wv;
+                o1[j] += a1 * wv;
+                o2[j] += a2 * wv;
+                o3[j] += a3 * wv;
+            }
+        }
+        r += MR;
+    }
+    while r < m {
+        let orow = &mut y[r * nw..(r + 1) * nw];
+        for kk in 0..kh {
+            let av = xd[r * xk + k0 + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * nw..(kk + 1) * nw];
+            for (j, &wv) in wrow.iter().enumerate() {
+                orow[j] += av * wv;
+            }
+        }
+        r += 1;
+    }
+}
+
+// ---------------------------------------------------------------- cost model
+
+/// Per-tile cycle-cost model over one or more packed layers: every tile is
+/// priced at its DVFS class frequency, the SpMV side at the base level on
+/// its own engine (concurrent, like the systolic simulator's dataflow).
+/// All times are per activation row, single-MAC-lane normalized — the
+/// absolute scale cancels in the speedup/energy ratios this model exists
+/// to report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QCost {
+    /// Modeled dense-tile time per activation row (s), tiles at class clocks.
+    pub modeled_s: f64,
+    /// The same work priced entirely at the base clock (the uniform-quant
+    /// reference point).
+    pub base_s: f64,
+    /// SpMV engine time per activation row (s), base clock.
+    pub spmv_s: f64,
+    /// Dynamic MAC energy per activation row (pJ), V²-scaled per class.
+    pub energy_pj: f64,
+    /// Bytes the packed representation touches per pass.
+    pub packed_bytes: usize,
+    /// Bytes a dense f32 copy would touch per pass.
+    pub dense_bytes: usize,
+    /// Tiles per DVFS class, indexed by `FreqClass as usize`.
+    pub class_tiles: [usize; 3],
+    /// Live sparse entries routed to the SpMV engine.
+    pub sparse_nnz: usize,
+}
+
+impl QCost {
+    /// Accumulate the cost of `layer` under `ladder` clocks.
+    pub fn add_layer(&mut self, layer: &PackedLayer, ladder: &Ladder) {
+        let v_nom = crate::mac::power::V_NOM;
+        for tile in &layer.tiles {
+            let level = ladder.level(tile.class);
+            let macs = tile.macs() as f64;
+            self.modeled_s += macs / (level.ghz * 1e9);
+            self.energy_pj += macs * tile.energy_pj * (level.volts / v_nom).powi(2);
+            self.class_tiles[tile.class as usize] += 1;
+        }
+        let base = ladder.level(FreqClass::Base);
+        self.base_s += layer.macs_per_row() as f64 / (base.ghz * 1e9);
+        self.spmv_s += layer.sparse.nnz as f64 / (base.ghz * 1e9);
+        self.packed_bytes += layer.packed_bytes();
+        self.dense_bytes += layer.dense_bytes();
+        self.sparse_nnz += layer.sparse.nnz;
+    }
+
+    /// Modeled speedup of class-clocked packed execution over the same
+    /// MACs at the base clock (SpMV engine runs concurrently, so the
+    /// slower stream bounds the pass).
+    pub fn modeled_speedup(&self) -> f64 {
+        self.base_s / self.modeled_s.max(self.spmv_s).max(1e-30)
+    }
+
+    /// Weight-traffic reduction: dense f32 bytes over packed bytes.
+    pub fn bytes_saving(&self) -> f64 {
+        self.dense_bytes as f64 / self.packed_bytes.max(1) as f64
+    }
+
+    /// One-line human summary for the serving CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "modeled speedup {:.2}x vs base clock, bytes {:.2}x smaller ({} fast / {} med / {} base tiles, {} sparse nnz)",
+            self.modeled_speedup(),
+            self.bytes_saving(),
+            self.class_tiles[FreqClass::Fast as usize],
+            self.class_tiles[FreqClass::Med as usize],
+            self.class_tiles[FreqClass::Base as usize],
+            self.sparse_nnz
+        )
+    }
+}
+
+// ------------------------------------------------------------- packed store
+
+/// Parameter store for native quantized execution: every linear weight as
+/// a [`PackedLayer`], dense data only for embeddings/norms/biases. The
+/// whole-model DVFS [`Schedule`] (class-clustered over all layers' tiles)
+/// rides along for the serving executors.
+#[derive(Debug)]
+pub struct PackedModel {
+    /// Transformer hyper-parameters + canonical parameter table.
+    pub spec: ModelSpec,
+    /// Non-linear parameters by name: (shape, flat data).
+    dense: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    /// Packed quantized linear layers by name.
+    layers: BTreeMap<String, PackedLayer>,
+    /// Class-clustered DVFS schedule over every layer's tiles, in
+    /// canonical layer order.
+    pub schedule: Schedule,
+}
+
+impl PackedModel {
+    /// Quantize and pack every linear parameter of `spec`. `params` yields
+    /// borrowed `(name, shape, data)` views in any order (names must match
+    /// the spec) — only one layer's dense weights are materialized at a
+    /// time, so packing never doubles the resident model. `grads` supplies
+    /// Fisher gradients for saliency/sensitivity where available.
+    pub fn pack_from<'a>(
+        spec: ModelSpec,
+        params: impl IntoIterator<Item = (&'a str, &'a [usize], &'a [f32])>,
+        variant: Variant,
+        tile: usize,
+        grads: &BTreeMap<String, Matrix>,
+        profile: &MacProfile,
+    ) -> Result<Self> {
+        let q = HaloQuantizer::new(HaloConfig::new(tile, variant), profile);
+        let mut dense = BTreeMap::new();
+        let mut layers = BTreeMap::new();
+        let mut classes = Vec::new();
+        for (name, shape, data) in params {
+            let i = spec
+                .names
+                .iter()
+                .position(|n| n == name)
+                .with_context(|| format!("parameter {name} not in model spec"))?;
+            // Fail at pack time, not deep inside a shard's forward pass.
+            anyhow::ensure!(
+                shape == spec.shapes[i].as_slice(),
+                "parameter {name}: shape {shape:?} != spec {:?}",
+                spec.shapes[i]
+            );
+            anyhow::ensure!(
+                data.len() == shape.iter().product::<usize>(),
+                "parameter {name}: data length {} != shape {shape:?}",
+                data.len()
+            );
+            if spec.linear[i] {
+                anyhow::ensure!(shape.len() == 2, "linear parameter {name} is not 2-D");
+                let w = Matrix::from_vec(shape[0], shape[1], data.to_vec());
+                let ctx = match grads.get(name) {
+                    Some(g) => LayerCtx::with_grad(name, g),
+                    None => LayerCtx::new(name),
+                };
+                let (res, pay) = q.quantize_full(&w, &ctx);
+                let packed = PackedLayer::pack(name, &res, &pay, profile);
+                classes.extend(packed.classes());
+                let prev = layers.insert(name.to_string(), packed);
+                anyhow::ensure!(prev.is_none(), "duplicate parameter {name}");
+            } else {
+                let prev = dense.insert(name.to_string(), (shape.to_vec(), data.to_vec()));
+                anyhow::ensure!(prev.is_none(), "duplicate parameter {name}");
+            }
+        }
+        for (i, name) in spec.names.iter().enumerate() {
+            let present = if spec.linear[i] {
+                layers.contains_key(name)
+            } else {
+                dense.contains_key(name)
+            };
+            anyhow::ensure!(present, "model parameter {name} missing from pack input");
+        }
+        let schedule = Schedule::cluster(&classes);
+        Ok(Self { spec, dense, layers, schedule })
+    }
+
+    /// Pack a trained model from the artifact store (the `halo serve
+    /// --quant` path). Reads the spec from the sibling `config.json`;
+    /// parameter data is borrowed, never bulk-cloned.
+    pub fn pack_artifacts(
+        model: &ModelArtifacts,
+        variant: Variant,
+        tile: usize,
+        grads: &BTreeMap<String, Matrix>,
+        profile: &MacProfile,
+    ) -> Result<Self> {
+        let spec = ModelSpec::load(&model.dir)?;
+        let params = model
+            .params
+            .iter()
+            .map(|p| (p.name.as_str(), p.shape.as_slice(), p.data.as_slice()));
+        Self::pack_from(spec, params, variant, tile, grads, profile)
+    }
+
+    /// Logits for a `(b, s)` token batch, executed natively on the packed
+    /// layers (codebook kernels + fused SpMV). Returns a `(b·s, vocab)`
+    /// matrix.
+    pub fn forward(&self, tokens: &[i32], b: usize, s: usize) -> Result<Matrix> {
+        let src = PackedParams(self);
+        let (logits, _, _) = sim::forward(&self.spec, &src, tokens, b, s, false)?;
+        Ok(logits)
+    }
+
+    /// Greedy (argmax) single-sequence decode on the packed layers —
+    /// `max_new` tokens, sliding the context window at `seq_len` exactly
+    /// like the serving decode loop (each step runs only the live
+    /// positions; causality makes that bit-identical to a padded pass).
+    /// The client-side oracle `halo loadgen --quant` re-derives sampled
+    /// response chains against.
+    pub fn decode_greedy(&self, prefix: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let cap = self.spec.seq_len;
+        let mut seq: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let n = seq.len().min(cap).max(1);
+            let mut tokens = vec![0i32; n];
+            let live = seq.len().min(n);
+            tokens[..live].copy_from_slice(&seq[seq.len() - live..]);
+            let logits = self.forward(&tokens, 1, n)?;
+            let t = super::backend::argmax_slice(logits.row(n - 1)) as i32;
+            out.push(t);
+            if seq.len() >= cap {
+                seq.remove(0);
+            }
+            seq.push(t);
+        }
+        Ok(out)
+    }
+
+    /// The packed layer for a linear parameter, if packed.
+    pub fn layer(&self, name: &str) -> Option<&PackedLayer> {
+        self.layers.get(name)
+    }
+
+    /// Iterate over every packed layer in name order.
+    pub fn packed_layers(&self) -> impl Iterator<Item = &PackedLayer> {
+        self.layers.values()
+    }
+
+    /// Number of packed (linear) layers.
+    pub fn n_packed(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Dense flat data for a non-linear parameter, if stored dense.
+    pub fn dense_param(&self, name: &str) -> Option<&[f32]> {
+        self.dense.get(name).map(|(_, d)| d.as_slice())
+    }
+
+    /// How many *linear* parameters are held as dense f32 — always 0: the
+    /// store keeps linear weights only in packed form. Tests assert this
+    /// to pin the never-densify guarantee.
+    pub fn dense_linear_count(&self) -> usize {
+        self.spec
+            .names
+            .iter()
+            .enumerate()
+            .filter(|(i, name)| self.spec.linear[*i] && self.dense.contains_key(*name))
+            .count()
+    }
+
+    /// Aggregate per-tile cycle-cost model under `ladder` clocks.
+    pub fn cost(&self, ladder: &Ladder) -> QCost {
+        let mut c = QCost::default();
+        for layer in self.layers.values() {
+            c.add_layer(layer, ladder);
+        }
+        c
+    }
+}
+
+/// [`ParamSource`] adapter: dense lookups from the non-linear map, linear
+/// GEMMs through [`qmatmul`]. `mat()` on a packed layer is an error by
+/// design — that is the densification this engine exists to avoid.
+struct PackedParams<'a>(&'a PackedModel);
+
+impl ParamSource for PackedParams<'_> {
+    fn vec1(&self, name: &str) -> Result<&[f32]> {
+        self.0
+            .dense_param(name)
+            .ok_or_else(|| anyhow::anyhow!("missing dense parameter {name}"))
+    }
+
+    fn mat(&self, name: &str) -> Result<Matrix> {
+        if self.0.layers.contains_key(name) {
+            anyhow::bail!("{name} is packed; the quantized path never densifies it");
+        }
+        let (shape, data) = self
+            .0
+            .dense
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))?;
+        anyhow::ensure!(shape.len() == 2, "parameter {name} is not 2-D: {shape:?}");
+        Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
+    }
+
+    fn linmul(&self, x: &Matrix, name: &str) -> Result<Matrix> {
+        let layer = self
+            .0
+            .layers
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing packed layer {name}"))?;
+        Ok(qmatmul(x, layer))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernels;
+    use crate::util::Rng;
+
+    fn packed_layer(rows: usize, cols: usize, tile: usize, seed: u64) -> (Matrix, PackedLayer) {
+        let profile = MacProfile::cached();
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = Matrix::random_normal(rows, cols, 0.02, &mut rng);
+        let g = Matrix::random_normal(rows, cols, 1.0, &mut rng);
+        let q = HaloQuantizer::new(HaloConfig::new(tile, Variant::Bal), profile);
+        let (res, pay) = q.quantize_full(&w, &LayerCtx::with_grad("t", &g));
+        (w, PackedLayer::pack("t", &res, &pay, profile))
+    }
+
+    #[test]
+    fn qmatmul_matches_dequantize_then_dense() {
+        let mut rng = Rng::seed_from_u64(100);
+        for (m, k, n, tile) in [(4, 32, 32, 16), (7, 96, 64, 32), (1, 64, 96, 32)] {
+            let (_, layer) = packed_layer(k, n, tile, 200 + m as u64);
+            let x = Matrix::random_normal(m, k, 1.0, &mut rng);
+            let got = qmatmul(&x, &layer);
+            let want = kernels::matmul(&x, &layer.dequantize());
+            for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "({m},{k},{n},t{tile})[{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qmatmul_thread_count_independent() {
+        let _guard = crate::util::parallel::THREAD_CAP_TEST_LOCK.lock().unwrap();
+        let (_, layer) = packed_layer(128, 128, 32, 77);
+        let mut rng = Rng::seed_from_u64(78);
+        let x = Matrix::random_normal(16, 128, 1.0, &mut rng);
+        let par = qmatmul(&x, &layer);
+        crate::util::parallel::set_max_threads(1);
+        let ser = qmatmul(&x, &layer);
+        crate::util::parallel::set_max_threads(0);
+        assert_eq!(par.data, ser.data, "qmatmul must be deterministic");
+    }
+
+    #[test]
+    fn pack_from_rejects_bad_shapes_and_duplicates() {
+        let spec = ModelSpec::synthetic(11, 8, 1, 2, 16, 6);
+        let profile = MacProfile::cached();
+        let grads = BTreeMap::new();
+        let base: Vec<(String, Vec<usize>, Vec<f32>)> = spec
+            .names
+            .iter()
+            .zip(&spec.shapes)
+            .map(|(n, sh)| (n.clone(), sh.clone(), vec![0.01f32; sh.iter().product()]))
+            .collect();
+        let pack = |p: &[(String, Vec<usize>, Vec<f32>)]| {
+            let views = p.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+            PackedModel::pack_from(spec.clone(), views, Variant::Bal, 4, &grads, profile)
+        };
+
+        assert!(pack(&base).is_ok());
+
+        // Mis-shaped pos_embed must fail at pack time, not at serve time.
+        let mut bad = base.clone();
+        bad[1].1 = vec![3, 8];
+        bad[1].2 = vec![0.01f32; 24];
+        assert!(pack(&bad).is_err());
+
+        // Duplicate parameter names must be rejected, not silently merged.
+        let mut dup = base.clone();
+        let first = dup[2].clone();
+        dup.push(first);
+        assert!(pack(&dup).is_err());
+    }
+
+    #[test]
+    fn cost_model_speedup_and_bytes() {
+        let (_, layer) = packed_layer(128, 128, 32, 5);
+        let mut c = QCost::default();
+        c.add_layer(&layer, &Ladder::paper_systolic());
+        // Codebook-pure tiles clock above base: strict modeled speedup.
+        assert!(c.modeled_speedup() > 1.0, "{}", c.modeled_speedup());
+        assert!(c.modeled_speedup() <= 3.7 / 1.9 + 1e-9);
+        assert!(c.bytes_saving() > 3.0, "{}", c.bytes_saving());
+        let tiles: usize = c.class_tiles.iter().sum();
+        assert_eq!(tiles, layer.tiles.len());
+        assert!(c.energy_pj > 0.0);
+    }
+}

@@ -193,6 +193,78 @@ impl ModelSpec {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
+
+    /// Synthetic spec with the canonical parameter layout of
+    /// `model.py::param_specs` — the single source of the
+    /// name/shape/linear table for artifact-free tests and benches
+    /// (`tests/qexec.rs`, `benches/l4_quant_exec.rs`, the in-crate sim
+    /// tests), so test oracles and bench baselines always exercise the
+    /// same model contract.
+    pub fn synthetic(
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        seq_len: usize,
+    ) -> Self {
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut linear = Vec::new();
+        let mut push = |nm: String, sh: Vec<usize>, lin: bool| {
+            names.push(nm);
+            shapes.push(sh);
+            linear.push(lin);
+        };
+        push("embed".into(), vec![vocab, d_model], false);
+        push("pos_embed".into(), vec![seq_len, d_model], false);
+        for l in 0..n_layers {
+            push(format!("layer{l}.ln1.scale"), vec![d_model], false);
+            push(format!("layer{l}.ln1.bias"), vec![d_model], false);
+            push(format!("layer{l}.attn.wq"), vec![d_model, d_model], true);
+            push(format!("layer{l}.attn.wk"), vec![d_model, d_model], true);
+            push(format!("layer{l}.attn.wv"), vec![d_model, d_model], true);
+            push(format!("layer{l}.attn.wo"), vec![d_model, d_model], true);
+            push(format!("layer{l}.ln2.scale"), vec![d_model], false);
+            push(format!("layer{l}.ln2.bias"), vec![d_model], false);
+            push(format!("layer{l}.mlp.w1"), vec![d_model, d_ff], true);
+            push(format!("layer{l}.mlp.b1"), vec![d_ff], false);
+            push(format!("layer{l}.mlp.w2"), vec![d_ff, d_model], true);
+            push(format!("layer{l}.mlp.b2"), vec![d_model], false);
+        }
+        push("ln_f.scale".into(), vec![d_model], false);
+        push("ln_f.bias".into(), vec![d_model], false);
+        push("head".into(), vec![d_model, vocab], true);
+        Self {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            seq_len,
+            names,
+            shapes,
+            linear,
+        }
+    }
+}
+
+/// Named parameter access for the shared forward pass.
+///
+/// Two implementations exist: [`Params`] (positional literals with dense
+/// f32 linear weights — the lowered-graph contract) and the packed
+/// quantized store in [`super::qkernels`], whose `linmul` runs the
+/// LUT-expanded codebook kernels + fused SpMV instead of a dense matmul.
+pub(crate) trait ParamSource {
+    /// Flat data of a parameter by name (embeddings, norm scales, biases).
+    fn vec1(&self, name: &str) -> Result<&[f32]>;
+    /// Dense 2-D parameter by name (backward pass; dense linear weights).
+    fn mat(&self, name: &str) -> Result<Matrix>;
+    /// `x @ W[name]` for a linear weight. The default densifies; packed
+    /// sources override it to execute natively on the quantized form.
+    fn linmul(&self, x: &Matrix, name: &str) -> Result<Matrix> {
+        Ok(kernels::matmul(x, &self.mat(name)?))
+    }
 }
 
 /// Positional inputs mapped back to named parameters (canonical order).
@@ -224,7 +296,16 @@ impl<'a> Params<'a> {
         Ok(Self { map })
     }
 
-    fn vec1(&self, name: &str) -> Result<&'a [f32]> {
+    fn get(&self, name: &str) -> Result<(&'a [usize], &'a [f32])> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))
+    }
+}
+
+impl<'a> ParamSource for Params<'a> {
+    fn vec1(&self, name: &str) -> Result<&[f32]> {
         let (_, data) = self.get(name)?;
         Ok(data)
     }
@@ -233,13 +314,6 @@ impl<'a> Params<'a> {
         let (shape, data) = self.get(name)?;
         anyhow::ensure!(shape.len() == 2, "parameter {name} is not 2-D: {shape:?}");
         Ok(Matrix::from_vec(shape[0], shape[1], data.to_vec()))
-    }
-
-    fn get(&self, name: &str) -> Result<(&'a [usize], &'a [f32])> {
-        self.map
-            .get(name)
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))
     }
 }
 
@@ -496,7 +570,7 @@ fn attention_backward(
 
 // ------------------------------------------------------------------- forward
 
-struct LayerCache {
+pub(crate) struct LayerCache {
     xhat1: Matrix,
     istd1: Vec<f32>,
     /// GEMM input for q/k/v (fake-quantized under A8).
@@ -513,7 +587,7 @@ struct LayerCache {
     a_h1: Matrix,
 }
 
-struct FinalCache {
+pub(crate) struct FinalCache {
     xhat_f: Matrix,
     istd_f: Vec<f32>,
     a_xf: Matrix,
@@ -521,9 +595,11 @@ struct FinalCache {
 
 /// The shared forward pass (mirror of `model.py::_forward`), caching every
 /// intermediate the backward pass needs. `tokens` is (b, s) row-major.
-fn forward(
+/// Every linear GEMM routes through [`ParamSource::linmul`], so the same
+/// code serves dense literals and the packed quantized store.
+pub(crate) fn forward(
     spec: &ModelSpec,
-    p: &Params,
+    p: &dyn ParamSource,
     tokens: &[i32],
     b: usize,
     s: usize,
@@ -568,16 +644,12 @@ fn forward(
             p.vec1(&format!("{pre}ln1.bias"))?,
         );
         let a_in1 = act(&hn1);
-        let wq = p.mat(&format!("{pre}attn.wq"))?;
-        let wk = p.mat(&format!("{pre}attn.wk"))?;
-        let wv = p.mat(&format!("{pre}attn.wv"))?;
-        let q = kernels::matmul(&a_in1, &wq);
-        let k = kernels::matmul(&a_in1, &wk);
-        let v = kernels::matmul(&a_in1, &wv);
+        let q = p.linmul(&a_in1, &format!("{pre}attn.wq"))?;
+        let k = p.linmul(&a_in1, &format!("{pre}attn.wk"))?;
+        let v = p.linmul(&a_in1, &format!("{pre}attn.wv"))?;
         let (ao, atts) = attention(b, s, spec.n_heads, spec.head_dim(), &q, &k, &v);
         let a_ao = act(&ao);
-        let wo = p.mat(&format!("{pre}attn.wo"))?;
-        add_into(&mut x, &kernels::matmul(&a_ao, &wo));
+        add_into(&mut x, &p.linmul(&a_ao, &format!("{pre}attn.wo"))?);
 
         let (hn2, xhat2, istd2) = layernorm(
             &x,
@@ -585,9 +657,8 @@ fn forward(
             p.vec1(&format!("{pre}ln2.bias"))?,
         );
         let a_hn2 = act(&hn2);
-        let w1 = p.mat(&format!("{pre}mlp.w1"))?;
         let b1 = p.vec1(&format!("{pre}mlp.b1"))?;
-        let mut pre_act = kernels::matmul(&a_hn2, &w1);
+        let mut pre_act = p.linmul(&a_hn2, &format!("{pre}mlp.w1"))?;
         for r in 0..pre_act.rows {
             let row = pre_act.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -599,9 +670,8 @@ fn forward(
             *v = gelu(*v);
         }
         let a_h1 = act(&h1);
-        let w2 = p.mat(&format!("{pre}mlp.w2"))?;
         let b2 = p.vec1(&format!("{pre}mlp.b2"))?;
-        let mut mlp_out = kernels::matmul(&a_h1, &w2);
+        let mut mlp_out = p.linmul(&a_h1, &format!("{pre}mlp.w2"))?;
         for r in 0..mlp_out.rows {
             let row = mlp_out.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -630,8 +700,7 @@ fn forward(
     let (xf, xhat_f, istd_f) =
         layernorm(&x, p.vec1("ln_f.scale")?, p.vec1("ln_f.bias")?);
     let a_xf = act(&xf);
-    let head = p.mat("head")?;
-    let logits = kernels::matmul(&a_xf, &head);
+    let logits = p.linmul(&a_xf, "head")?;
     Ok((logits, caches, FinalCache { xhat_f, istd_f, a_xf }))
 }
 
@@ -875,44 +944,9 @@ mod tests {
     use crate::util::Rng;
 
     fn tiny_spec() -> ModelSpec {
-        // Mirror model.py::param_specs for a 1-layer toy config.
-        let (v, d, ff, s) = (11usize, 8usize, 16usize, 6usize);
-        let mut names = Vec::new();
-        let mut shapes = Vec::new();
-        let mut linear = Vec::new();
-        let mut push = |n: &str, sh: Vec<usize>, lin: bool| {
-            names.push(n.to_string());
-            shapes.push(sh);
-            linear.push(lin);
-        };
-        push("embed", vec![v, d], false);
-        push("pos_embed", vec![s, d], false);
-        push("layer0.ln1.scale", vec![d], false);
-        push("layer0.ln1.bias", vec![d], false);
-        push("layer0.attn.wq", vec![d, d], true);
-        push("layer0.attn.wk", vec![d, d], true);
-        push("layer0.attn.wv", vec![d, d], true);
-        push("layer0.attn.wo", vec![d, d], true);
-        push("layer0.ln2.scale", vec![d], false);
-        push("layer0.ln2.bias", vec![d], false);
-        push("layer0.mlp.w1", vec![d, ff], true);
-        push("layer0.mlp.b1", vec![ff], false);
-        push("layer0.mlp.w2", vec![ff, d], true);
-        push("layer0.mlp.b2", vec![d], false);
-        push("ln_f.scale", vec![d], false);
-        push("ln_f.bias", vec![d], false);
-        push("head", vec![d, v], true);
-        ModelSpec {
-            vocab: v,
-            d_model: d,
-            n_layers: 1,
-            n_heads: 2,
-            d_ff: ff,
-            seq_len: s,
-            names,
-            shapes,
-            linear,
-        }
+        // 1-layer toy config off the shared canonical layout
+        // (ModelSpec::synthetic mirrors model.py::param_specs).
+        ModelSpec::synthetic(11, 8, 1, 2, 16, 6)
     }
 
     fn tiny_inputs(spec: &ModelSpec, seed: u64) -> Vec<Literal> {

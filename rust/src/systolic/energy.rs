@@ -35,15 +35,22 @@ impl Default for EnergyParams {
 /// Energy report (joules).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EnergyBreakdown {
+    /// PE switching energy (V²-scaled per class).
     pub core_dynamic: f64,
+    /// PE leakage over class residency + idle tail.
     pub core_static: f64,
+    /// SRAM buffer access energy.
     pub buffer_dynamic: f64,
+    /// Buffer leakage over the pass.
     pub buffer_static: f64,
+    /// DRAM access energy.
     pub mem_dynamic: f64,
+    /// DRAM background power over the pass.
     pub mem_static: f64,
 }
 
 impl EnergyBreakdown {
+    /// Sum of all six components (J).
     pub fn total(&self) -> f64 {
         self.core_dynamic
             + self.core_static

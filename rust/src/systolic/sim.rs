@@ -24,7 +24,9 @@ pub struct SimConfig {
     pub dram_bw: f64,
     /// Activation bit-width (paper: A8 everywhere).
     pub act_bits: u32,
+    /// DVFS operating points per class (paper Table I by default).
     pub ladder: Ladder,
+    /// Technology/energy constants for the Fig 10 decomposition.
     pub energy: EnergyParams,
 }
 
@@ -44,18 +46,25 @@ impl Default for SimConfig {
 /// Simulation output for one inference pass.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Quantization method simulated.
     pub method: String,
+    /// Model shape set simulated.
     pub model: String,
     /// End-to-end latency (s).
     pub time_s: f64,
     /// Dense compute time per class (s).
     pub compute_s: [f64; 3],
+    /// SpMV engine time (s, concurrent with the dense array).
     pub spmv_s: f64,
+    /// DRAM traffic time (s, overlapped by double buffering).
     pub mem_s: f64,
+    /// DVFS transitions the class-clustered schedule needed.
     pub dvfs_transitions: usize,
+    /// Fig 10 energy decomposition.
     pub energy: EnergyBreakdown,
     /// Total MAC operations simulated.
     pub macs: f64,
+    /// Weight DRAM traffic (bytes).
     pub weight_bytes: f64,
 }
 
@@ -66,11 +75,14 @@ impl SimReport {
     }
 }
 
+/// The systolic-array simulator (see module docs).
 pub struct Simulator {
+    /// Hardware configuration of the simulated array.
     pub cfg: SimConfig,
 }
 
 impl Simulator {
+    /// Simulator over a hardware configuration.
     pub fn new(cfg: SimConfig) -> Self {
         Self { cfg }
     }

@@ -1,0 +1,318 @@
+//! Equivalence suite for the native quantized execution engine (PR 4):
+//! packed LUT matmul + fused SpMV vs the dequantize-then-dense oracle,
+//! across all three HALO variants and the tile-geometry edge cases, plus
+//! the end-to-end serving contract (decode through the coordinator on a
+//! `PackedModel` store that holds packed tiles and never a dense f32
+//! linear weight).
+//!
+//! No artifacts needed: models are synthesized in-memory from a tiny
+//! `ModelSpec`, exactly like the sim backend's own validation tests.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use halo::coordinator::{BatcherConfig, Coordinator, QuantExecutor, SubmitSpec};
+use halo::dvfs::Ladder;
+use halo::mac::MacProfile;
+use halo::quant::packed::PackedLayer;
+use halo::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
+use halo::runtime::sim::{model_forward, ModelSpec};
+use halo::runtime::{argmax_slice, kernels, qmatmul, Literal, PackedModel};
+use halo::util::Rng;
+
+fn pack_one(w: &Matrix, grad: Option<&Matrix>, tile: usize, variant: Variant) -> PackedLayer {
+    let profile = MacProfile::cached();
+    let q = HaloQuantizer::new(HaloConfig::new(tile, variant), profile);
+    let ctx = match grad {
+        Some(g) => LayerCtx::with_grad("t", g),
+        None => LayerCtx::new("t"),
+    };
+    let (res, pay) = q.quantize_full(w, &ctx);
+    PackedLayer::pack("t", &res, &pay, profile)
+}
+
+fn assert_close(got: &Matrix, want: &Matrix, what: &str, tol: f32) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{what}: shape");
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{what}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn packed_matmul_matches_oracle_all_variants() {
+    let mut rng = Rng::seed_from_u64(1);
+    for variant in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt] {
+        let w = Matrix::random_normal(96, 64, 0.02, &mut rng);
+        let g = Matrix::random_normal(96, 64, 1.0, &mut rng);
+        let layer = pack_one(&w, Some(&g), 32, variant);
+        let x = Matrix::random_normal(9, 96, 1.0, &mut rng);
+        let want = kernels::matmul(&x, &layer.dequantize());
+        let got = qmatmul(&x, &layer);
+        assert_close(&got, &want, variant.name(), 1e-4);
+    }
+}
+
+#[test]
+fn packed_matmul_ragged_last_tiles() {
+    // 100x70 with tile 32: ragged tiles on both edges (last is 4x6).
+    let mut rng = Rng::seed_from_u64(2);
+    let w = Matrix::random_normal(100, 70, 0.02, &mut rng);
+    let g = Matrix::random_normal(100, 70, 1.0, &mut rng);
+    let layer = pack_one(&w, Some(&g), 32, Variant::Bal);
+    assert_eq!(layer.tiles.last().unwrap().codes.len(), 4 * 6);
+    for m in [1usize, 3, 8] {
+        let x = Matrix::random_normal(m, 100, 1.0, &mut rng);
+        let want = kernels::matmul(&x, &layer.dequantize());
+        assert_close(&qmatmul(&x, &layer), &want, &format!("ragged m={m}"), 1e-4);
+    }
+}
+
+#[test]
+fn packed_matmul_all_sparse_tile() {
+    // Plant a tile whose every entry is an extreme outlier: the 3σ cut
+    // routes the whole tile to the SpMV side and the dense tile quantizes
+    // pure zeros. The fused epilogue must reproduce it exactly.
+    let mut rng = Rng::seed_from_u64(3);
+    let mut w = Matrix::random_normal(64, 64, 0.02, &mut rng);
+    for r in 0..16 {
+        for c in 0..16 {
+            w.set(r, c, 1.5 * if (r + c) % 2 == 0 { 1.0 } else { -1.0 });
+        }
+    }
+    let layer = pack_one(&w, None, 16, Variant::Bal);
+    assert!(
+        layer.sparse.nnz >= 16 * 16,
+        "planted tile not extracted: nnz={}",
+        layer.sparse.nnz
+    );
+    let x = Matrix::random_normal(5, 64, 1.0, &mut rng);
+    let want = kernels::matmul(&x, &layer.dequantize());
+    assert_close(&qmatmul(&x, &layer), &want, "all-sparse tile", 1e-4);
+}
+
+#[test]
+fn packed_matmul_empty_outlier_set() {
+    // Bounded values, no gradients: nothing is salient and nothing crosses
+    // 3σ, so the sparse side is empty and the epilogue must be a no-op.
+    let w = Matrix::from_fn(48, 32, |r, c| ((r + 2 * c) % 5) as f32 * 0.01 - 0.02);
+    let layer = pack_one(&w, None, 16, Variant::Bal);
+    assert_eq!(layer.sparse.nnz, 0, "expected an empty outlier set");
+    let mut rng = Rng::seed_from_u64(4);
+    let x = Matrix::random_normal(6, 48, 1.0, &mut rng);
+    let want = kernels::matmul(&x, &layer.dequantize());
+    assert_close(&qmatmul(&x, &layer), &want, "empty outliers", 1e-4);
+}
+
+// ---------------------------------------------------------------- model path
+
+/// 1-layer toy config off the shared canonical layout
+/// ([`ModelSpec::synthetic`] mirrors model.py::param_specs).
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::synthetic(13, 8, 1, 2, 16, 8)
+}
+
+/// Owned parameter list the helpers build; borrowed into
+/// `PackedModel::pack_from` as `(name, shape, data)` views.
+type ParamList = Vec<(String, Vec<usize>, Vec<f32>)>;
+
+/// Synthesize parameters + per-layer gradients for `spec`.
+fn tiny_params(spec: &ModelSpec, seed: u64) -> (ParamList, BTreeMap<String, Matrix>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut params = Vec::new();
+    let mut grads = BTreeMap::new();
+    for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; n]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; n]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..n).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        if spec.linear[i] {
+            let g = Matrix::from_fn(shape[0], shape[1], |r, _| {
+                let base = rng.gen_normal() as f32;
+                if r < shape[0] / 2 {
+                    base * 5.0
+                } else {
+                    base * 0.1
+                }
+            });
+            grads.insert(name.clone(), g);
+        }
+        params.push((name.clone(), shape.clone(), data));
+    }
+    (params, grads)
+}
+
+fn pack_tiny(seed: u64, variant: Variant) -> (ModelSpec, PackedModel) {
+    let spec = tiny_spec();
+    let (params, grads) = tiny_params(&spec, seed);
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let profile = MacProfile::cached();
+    let pm = PackedModel::pack_from(spec.clone(), views, variant, 4, &grads, profile).unwrap();
+    (spec, pm)
+}
+
+/// Literal inputs for the dense oracle: the packed model's own dequantized
+/// weights (the dequantize-then-dense path this PR retires) + dense
+/// params, in canonical order, followed by the (b, s) token batch.
+fn oracle_inputs(
+    spec: &ModelSpec,
+    pm: &PackedModel,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+) -> Vec<Literal> {
+    let mut out = Vec::new();
+    for (i, name) in spec.names.iter().enumerate() {
+        if spec.linear[i] {
+            let dq = pm.layer(name).expect("linear layer packed").dequantize();
+            out.push(Literal::f32(&dq.data, &spec.shapes[i]).unwrap());
+        } else {
+            let data = pm.dense_param(name).expect("dense param present");
+            out.push(Literal::f32(data, &spec.shapes[i]).unwrap());
+        }
+    }
+    out.push(Literal::i32(tokens, &[b, s]).unwrap());
+    out
+}
+
+#[test]
+fn packed_forward_matches_dense_oracle() {
+    let (spec, pm) = pack_tiny(10, Variant::Bal);
+    let (b, s) = (2usize, spec.seq_len);
+    let mut rng = Rng::seed_from_u64(11);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+
+    let got = pm.forward(&tokens, b, s).unwrap();
+    let inputs = oracle_inputs(&spec, &pm, &tokens, b, s);
+    let refs: Vec<&Literal> = inputs.iter().collect();
+    let (want, ob, os) = model_forward(&spec, &refs).unwrap();
+    assert_eq!((ob, os), (b, s));
+    assert_close(&got, &want, "packed forward", 1e-3);
+}
+
+#[test]
+fn store_holds_packed_tiles_never_dense_linear() {
+    // The acceptance-criterion test: the serving store keeps every linear
+    // weight ONLY as packed codebook tiles.
+    let (spec, pm) = pack_tiny(12, Variant::Bal);
+    assert_eq!(pm.dense_linear_count(), 0, "a linear weight is stored dense");
+    let mut n_linear = 0;
+    for (i, name) in spec.names.iter().enumerate() {
+        if spec.linear[i] {
+            n_linear += 1;
+            let layer = pm.layer(name).unwrap_or_else(|| panic!("{name} not packed"));
+            assert!(!layer.tiles.is_empty(), "{name} has no packed tiles");
+            assert!(
+                layer.tiles.iter().all(|t| !t.codes.is_empty()),
+                "{name} has an empty code tile"
+            );
+            assert!(pm.dense_param(name).is_none(), "{name} also stored dense");
+        } else {
+            assert!(pm.layer(name).is_none());
+            assert!(pm.dense_param(name).is_some(), "{name} missing from dense store");
+        }
+    }
+    assert_eq!(pm.n_packed(), n_linear);
+    // The cost model sees every tile and prices the packed form smaller.
+    let cost = pm.cost(&Ladder::paper_systolic());
+    assert!(cost.modeled_speedup() > 1.0);
+    assert!(cost.bytes_saving() > 3.0, "bytes saving {}", cost.bytes_saving());
+}
+
+#[test]
+fn quant_executor_serves_decode_end_to_end() {
+    let (spec, pm) = pack_tiny(13, Variant::Bal);
+    let pm = Arc::new(pm);
+    let max_new = 4usize;
+
+    // Expected decode chains straight off the packed forward (sliding
+    // window at the context cap), computed in-test.
+    let chain = |prefix: &[i32]| -> Vec<i32> {
+        let cap = spec.seq_len;
+        let mut seq: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let s = cap;
+            let mut tokens = vec![0i32; s];
+            let n = seq.len().min(s);
+            tokens[..n].copy_from_slice(&seq[seq.len() - n..]);
+            let logits = pm.forward(&tokens, 1, s).unwrap();
+            let t = argmax_slice(logits.row(n.max(1) - 1)) as i32;
+            out.push(t);
+            if seq.len() >= cap {
+                seq.remove(0);
+            }
+            seq.push(t);
+        }
+        out
+    };
+
+    let pm2 = pm.clone();
+    let coord = Coordinator::start(
+        BatcherConfig { batch_size: 4, timeout: std::time::Duration::from_millis(2) },
+        move || {
+            Ok(Box::new(QuantExecutor::new(pm2, 4))
+                as Box<dyn halo::coordinator::BatchExecutor>)
+        },
+    );
+    let mut rng = Rng::seed_from_u64(14);
+    let prefixes: Vec<Vec<i32>> = (0..12)
+        .map(|i| {
+            (0..2 + (i % 9)).map(|_| rng.gen_usize(spec.vocab) as i32).collect()
+        })
+        .collect();
+    let rxs: Vec<_> = prefixes
+        .iter()
+        .map(|p| coord.submit_spec(SubmitSpec::generate(p.clone(), max_new)))
+        .collect();
+    for (rx, p) in rxs.into_iter().zip(&prefixes) {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(!r.shed, "request shed");
+        assert_eq!(r.tokens.len(), max_new);
+        assert!(r.tokens.iter().all(|&t| (0..spec.vocab as i32).contains(&t)));
+        assert_eq!(r.tokens, chain(p), "decode chain mismatch for prefix {p:?}");
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn packed_decode_agrees_with_dense_oracle_decode() {
+    // Walk both decode chains in lockstep. If they ever pick different
+    // tokens, the dense logits at the two candidates must be within float
+    // noise of a tie (same computation, different summation order for the
+    // sparse contribution); otherwise it is a real divergence.
+    let (spec, pm) = pack_tiny(15, Variant::AccOpt);
+    let s = spec.seq_len;
+    let mut seq: Vec<i32> = vec![1, 5, 2];
+    for _ in 0..5 {
+        let mut tokens = vec![0i32; s];
+        let n = seq.len().min(s);
+        tokens[..n].copy_from_slice(&seq[seq.len() - n..]);
+        let pos = n.max(1) - 1;
+
+        let packed_logits = pm.forward(&tokens, 1, s).unwrap();
+        let inputs = oracle_inputs(&spec, &pm, &tokens, 1, s);
+        let refs: Vec<&Literal> = inputs.iter().collect();
+        let (dense_logits, _, _) = model_forward(&spec, &refs).unwrap();
+
+        let tp = argmax_slice(packed_logits.row(pos));
+        let td = argmax_slice(dense_logits.row(pos));
+        if tp != td {
+            let row = dense_logits.row(pos);
+            let gap = (row[tp] - row[td]).abs();
+            assert!(gap < 1e-3, "decode diverged beyond a float tie: gap {gap}");
+            break;
+        }
+        if seq.len() >= s {
+            seq.remove(0);
+        }
+        seq.push(tp as i32);
+    }
+}

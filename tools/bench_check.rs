@@ -90,8 +90,11 @@ fn lookup<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
     Some(cur)
 }
 
-/// Every leaf named `speedup` or starting with `scaling` (dotted paths),
-/// in sorted order.
+/// Every dimensionless-ratio leaf, in sorted order: keys named `speedup`
+/// or ending in `_speedup` / `_ratio` / `_saving`, or starting with
+/// `scaling`. BENCH_PR2 contributes `speedup` leaves, BENCH_PR3
+/// `scaling_throughput`, BENCH_PR4 `throughput_ratio` / `bytes_saving` /
+/// `modeled_speedup` — all gated automatically once committed.
 fn ratio_keys(j: &Json) -> Vec<String> {
     let mut out = Vec::new();
     walk(j, String::new(), &mut out);
@@ -99,11 +102,19 @@ fn ratio_keys(j: &Json) -> Vec<String> {
     out
 }
 
+fn is_ratio_key(k: &str) -> bool {
+    k == "speedup"
+        || k.starts_with("scaling")
+        || k.ends_with("_speedup")
+        || k.ends_with("_ratio")
+        || k.ends_with("_saving")
+}
+
 fn walk(j: &Json, prefix: String, out: &mut Vec<String>) {
     if let Json::Obj(m) = j {
         for (k, v) in m {
             let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
-            if matches!(v, Json::Num(_)) && (k == "speedup" || k.starts_with("scaling")) {
+            if matches!(v, Json::Num(_)) && is_ratio_key(k) {
                 out.push(path);
             } else {
                 walk(v, path, out);
@@ -125,6 +136,22 @@ mod tests {
         let b = j(r#"{"matmul":{"nn":{"speedup":3.0,"naive_s":1.0}},
                       "scaling_throughput":2.5,"smoke":true}"#);
         assert_eq!(ratio_keys(&b), vec!["matmul.nn.speedup", "scaling_throughput"]);
+    }
+
+    #[test]
+    fn ratio_keys_cover_pr4_metrics() {
+        // The BENCH_PR4 leaves must be auto-gated when no --keys are given.
+        let b = j(r#"{"layer":{"throughput_ratio":0.8,"quant_ms":2.0},
+                      "memory":{"bytes_saving":3.6,"packed_bytes":1000},
+                      "model_cost":{"modeled_speedup":1.3,"sparse_nnz":4}}"#);
+        assert_eq!(
+            ratio_keys(&b),
+            vec![
+                "layer.throughput_ratio",
+                "memory.bytes_saving",
+                "model_cost.modeled_speedup"
+            ]
+        );
     }
 
     #[test]
