@@ -212,7 +212,11 @@ fn bench_decode(smoke: bool, report: &mut Json) -> (f64, f64, f64) {
         .collect();
     let new_lens = vec![max_new; batch];
 
-    let mut quant_exec = QuantExecutor::new(std::sync::Arc::new(pm), batch);
+    // KV caching off: this bench isolates the packed-vs-dense *execution
+    // format* (LUT matmul + fused SpMV vs dense f32), so both sides must
+    // run the same full-recompute decode algorithm. The caching win is
+    // measured separately in benches/l5_decode.rs.
+    let mut quant_exec = QuantExecutor::new(std::sync::Arc::new(pm), batch).with_kv_cache(false);
     let mut dense_exec = DenseExec { spec: spec.clone(), params: dense_params, batch };
 
     // Warm-up + verification: both paths produce in-vocab tokens.

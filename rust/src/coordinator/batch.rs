@@ -1,14 +1,24 @@
 //! Dynamic batcher: collect requests until the batch fills or the timeout
-//! since the *first* pending request expires (vLLM-style continuous
-//! batching, simplified to fixed-shape batches because the AOT graph has a
-//! static (B, S)).
+//! since the *first* pending request expires.
+//!
+//! Under continuous batching (PR 5) the shard loop uses the batcher in two
+//! modes: [`Batcher::next_batch`] blocks for work when the shard is idle
+//! (classic timeout batching), and [`Batcher::try_fill`] drains whatever
+//! is already queued — without blocking — between decode steps, so queued
+//! requests join the in-flight decode set as soon as a step boundary
+//! passes instead of waiting for the current "batch" to finish.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
+/// Batch-forming knobs for one shard.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Max requests pulled per blocking batch (clamped to the executor's
+    /// batch capacity by the shard loop).
     pub batch_size: usize,
+    /// Window after the first pending request in which more requests may
+    /// join the batch.
     pub timeout: Duration,
 }
 
@@ -20,11 +30,13 @@ impl Default for BatcherConfig {
 
 /// Pulls from a channel and yields batches.
 pub struct Batcher<T> {
+    /// The batch-forming knobs this batcher was built with.
     pub cfg: BatcherConfig,
     rx: Receiver<T>,
 }
 
 impl<T> Batcher<T> {
+    /// Wrap a request channel with batch-forming logic.
     pub fn new(cfg: BatcherConfig, rx: Receiver<T>) -> Self {
         Self { cfg, rx }
     }
@@ -51,6 +63,20 @@ impl<T> Batcher<T> {
             }
         }
         Some(batch)
+    }
+
+    /// Drain up to `max` already-queued items without blocking — the
+    /// continuous-batching top-up between decode steps. Returns an empty
+    /// vec when nothing is queued (or `max == 0`); never waits.
+    pub fn try_fill(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.rx.try_recv() {
+                Ok(x) => out.push(x),
+                Err(_) => break,
+            }
+        }
+        out
     }
 }
 
@@ -162,6 +188,24 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(4));
         assert!(b.next_batch().is_none());
         feeder.join().unwrap();
+    }
+
+    #[test]
+    fn try_fill_never_blocks_and_respects_the_cap() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(BatcherConfig::default(), rx);
+        // Empty queue: instant empty result, no waiting.
+        let t0 = Instant::now();
+        assert!(b.try_fill(8).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(b.try_fill(0), Vec::<i32>::new());
+        assert_eq!(b.try_fill(3), vec![0, 1, 2]);
+        assert_eq!(b.try_fill(8), vec![3, 4]);
+        drop(tx);
+        assert!(b.try_fill(8).is_empty(), "closed + drained yields nothing");
     }
 
     #[test]

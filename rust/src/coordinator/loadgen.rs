@@ -76,8 +76,11 @@ impl BatchExecutor for SyntheticExecutor {
 /// One loadgen run's knobs.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
+    /// Executor shards (threads).
     pub shards: usize,
+    /// Max live requests per shard decode step.
     pub batch_size: usize,
+    /// Batch-forming window after the first pending request.
     pub batch_timeout: Duration,
     /// Per-shard queue bound; 0 = unbounded.
     pub queue_cap: usize,
@@ -93,6 +96,7 @@ pub struct LoadgenConfig {
     pub prefix_len: usize,
     /// Busywork matmul side per sequence per step.
     pub work_dim: usize,
+    /// RNG seed for prefixes and pacing.
     pub seed: u64,
 }
 
@@ -117,21 +121,27 @@ impl Default for LoadgenConfig {
 /// What one run measured.
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
+    /// Shards the run was configured with.
     pub cfg_shards: usize,
+    /// Wall-clock time from first submit to last response.
     pub wall: Duration,
     /// Aggregate across shards (percentiles over the union of samples).
     pub merged: MetricsSnapshot,
+    /// Per-shard snapshots (index = shard id).
     pub per_shard: Vec<MetricsSnapshot>,
     /// Responses whose decoded tokens matched the deterministic model.
     pub verified_ok: usize,
+    /// Responses shed (deadline, admission, or executor failure).
     pub shed: usize,
 }
 
 impl LoadgenReport {
+    /// Served responses per wall-clock second.
     pub fn throughput_rps(&self) -> f64 {
         self.merged.responses as f64 / self.wall.as_secs_f64().max(1e-12)
     }
 
+    /// Full machine-readable report (the `--json` output).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("shards", self.cfg_shards)
@@ -145,6 +155,7 @@ impl LoadgenReport {
         j
     }
 
+    /// One-line human summary (the `halo loadgen` console output).
     pub fn summary(&self) -> String {
         format!(
             "shards={} wall={:.3}s throughput={:.0} req/s tokens/s={:.0} ok={} shed={} | {}",

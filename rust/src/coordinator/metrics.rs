@@ -12,11 +12,18 @@ use std::time::Duration;
 
 use crate::util::Json;
 
+/// Live serving counters + latency reservoir for one shard (or the
+/// coordinator's global aggregate).
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests submitted (global view only).
     pub requests: AtomicU64,
+    /// Requests answered with a served (non-shed) response.
     pub responses: AtomicU64,
+    /// Decode steps executed over the live set (continuous batching: one
+    /// "batch" = one step; occupancy = responses ÷ steps · decode length).
     pub batches: AtomicU64,
+    /// Prompt tokens admitted into decode (prefix lengths).
     pub batch_tokens: AtomicU64,
     /// Tokens produced by autoregressive decode.
     pub generated_tokens: AtomicU64,
@@ -27,12 +34,16 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     /// Batches whose executor returned an error (logged + shed).
     pub exec_errors: AtomicU64,
-    /// Simulated DVFS transitions accounted by the executor.
+    /// Simulated DVFS transitions accounted by the executor: one full
+    /// schedule pass per decode *step* since PR 5 (every step is a
+    /// forward pass over the schedule; pre-PR-5 counted once per request
+    /// batch, undercounting multi-token decode by ~max_new×).
     pub dvfs_transitions: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
+    /// Record one request's submit-to-respond latency (bounded reservoir).
     pub fn record_latency(&self, d: Duration) {
         let mut l = self.latencies_us.lock().unwrap();
         if l.len() < 1_000_000 {
@@ -40,6 +51,7 @@ impl Metrics {
         }
     }
 
+    /// Latency percentile `p ∈ [0, 1]` over the recorded samples.
     pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
         let mut l = self.latencies_us.lock().unwrap().clone();
         if l.is_empty() {
@@ -50,6 +62,7 @@ impl Metrics {
         Some(Duration::from_micros(l[i]))
     }
 
+    /// Served responses per executed decode step/batch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -98,6 +111,7 @@ impl Metrics {
         out
     }
 
+    /// One-line human summary of a fresh snapshot.
     pub fn summary(&self) -> String {
         self.snapshot().summary()
     }
@@ -114,20 +128,30 @@ impl AsRef<Metrics> for Metrics {
 /// Plain-data view of [`Metrics`] for reporting/JSON.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsSnapshot {
+    /// Requests submitted (global view only).
     pub requests: u64,
+    /// Requests answered with a served (non-shed) response.
     pub responses: u64,
+    /// Decode steps executed over the live set.
     pub batches: u64,
+    /// Prompt tokens admitted into decode.
     pub batch_tokens: u64,
+    /// Tokens produced by autoregressive decode.
     pub generated_tokens: u64,
+    /// Requests dropped after admission.
     pub shed: u64,
+    /// Requests refused at admission.
     pub rejected: u64,
+    /// Executor step/batch errors.
     pub exec_errors: u64,
+    /// Simulated DVFS transitions (one schedule pass per decode step).
     pub dvfs_transitions: u64,
     /// Sorted ascending.
     pub latencies_us: Vec<u64>,
 }
 
 impl MetricsSnapshot {
+    /// Latency percentile `p ∈ [0, 1]` over the snapshot's samples.
     pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
         if self.latencies_us.is_empty() {
             return None;
@@ -136,6 +160,7 @@ impl MetricsSnapshot {
         Some(Duration::from_micros(self.latencies_us[i]))
     }
 
+    /// Served responses per executed decode step/batch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
@@ -152,6 +177,7 @@ impl MetricsSnapshot {
         self.generated_tokens as f64 / s
     }
 
+    /// One-line human summary (the `halo serve` / `halo loadgen` output).
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} shed={} rejected={} batches={} occupancy={:.2} \

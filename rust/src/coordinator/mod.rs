@@ -7,7 +7,7 @@
 //! through the runtime backend (sim by default, PJRT with `--features
 //! xla`).
 //!
-//! Architecture (PR 3):
+//! Architecture (PR 3 sharding + PR 5 continuous batching):
 //!
 //! ```text
 //!            submit / submit_spec
@@ -15,12 +15,23 @@
 //!                    │ bounded queues (admission control)
 //!        ┌───────────┼───────────┐
 //!     shard 0     shard 1  …  shard N-1        (threads)
-//!     Batcher     Batcher     Batcher          (dynamic batching)
-//!     Executor    Executor    Executor         (GraphExecutor / fake)
-//!        │           │           │   deadline shed, decode loop
+//!     Batcher     Batcher     Batcher          (blocking when idle,
+//!        │           │           │              try_fill between steps)
+//!     live set    live set    live set         (per-request DecodeState
+//!        │           │           │              + KV cache; join/retire
+//!     Executor    Executor    Executor          mid-flight, one token
+//!        │           │           │              per request per step)
 //!        └───────────┴───────────┘
 //!          per-shard Metrics  →  Metrics::merged (p50/p95/p99, tok/s)
 //! ```
+//!
+//! Decode is **KV-cached and continuously batched** (PR 5): each shard
+//! steps a set of heterogeneous-length requests one token at a time,
+//! admitting queued requests into free slots at every step boundary and
+//! retiring finished ones immediately — no request ever pads to its
+//! neighbor's prefix length, and no request waits for the current batch
+//! to drain before starting. The cached path is pinned bit-identical to
+//! full-prefix recompute by `tests/decode_equiv.rs`.
 //!
 //! DVFS-awareness (§III-C3): each quantized model carries a
 //! [`crate::dvfs::Schedule`]; [`Schedule::shard`](crate::dvfs::Schedule::shard)

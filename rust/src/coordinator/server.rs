@@ -1,22 +1,31 @@
-//! The coordinator: router → per-shard batcher → executor threads.
+//! The coordinator: router → per-shard continuous-batching decode loops.
 //!
-//! PR 3 scales the serving path from one executor to **N sharded executor
-//! threads**. Each shard owns a bounded request queue, a [`Batcher`], and a
-//! [`BatchExecutor`] constructed *inside* the shard thread via a factory
-//! closure (PJRT handles are not `Send`). The router round-robins across
-//! shards but steals toward the least-loaded queue; admission control
-//! rejects new work when every queue is at capacity, and requests whose
-//! deadline expired while queued are shed before execution instead of
-//! burning executor time.
+//! PR 3 scaled the serving path to **N sharded executor threads**; PR 5
+//! replaces each shard's batch-at-a-time decode with **KV-cached
+//! continuous batching**. Each shard owns a bounded request queue, a
+//! [`Batcher`], and a [`BatchExecutor`] constructed *inside* the shard
+//! thread via a factory closure (PJRT handles are not `Send`). The router
+//! round-robins across shards but steals toward the least-loaded queue;
+//! admission control rejects new work when every queue is at capacity,
+//! and requests whose deadline expired while queued are shed before
+//! execution instead of burning executor time.
+//!
+//! The shard loop keeps a *live set* of heterogeneous-length
+//! [`DecodeState`]s: every iteration admits queued requests into free
+//! batch slots ([`Batcher::try_fill`] — joins happen mid-flight, no
+//! request waits for the current batch to drain), advances every live
+//! request by exactly one token ([`BatchExecutor::step`]), and retires
+//! finished requests immediately. There is no longest-prefix padding:
+//! with a KV cache each step evaluates only each request's uncached
+//! window suffix, and without one each request recomputes its *own*
+//! window, never its neighbors'.
 //!
 //! The executor is abstracted behind [`BatchExecutor`] so the
 //! routing/batching/shedding invariants are testable without a model; the
-//! production executor ([`GraphExecutor`]) owns the loaded `fwd` graph and
-//! the quantized parameter buffers on whichever runtime backend is active.
-//! Full autoregressive decode is a provided method
-//! ([`BatchExecutor::generate`]): run the forward pass, take the argmax
-//! next token per sequence, re-feed it, repeat — reusing the padded-batch
-//! plumbing of [`BatchExecutor::run`].
+//! production executors ([`GraphExecutor`], [`QuantExecutor`]) own the
+//! loaded graph / packed tiles and override [`BatchExecutor::step`] with
+//! the KV-cached incremental path (`--no-kv-cache` falls back to the
+//! full-recompute oracle).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -31,13 +40,19 @@ use super::batch::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use crate::dvfs::Schedule;
 use crate::quant::Matrix;
-use crate::runtime::{literal_i32, Buffer, ModelArtifacts, PackedModel, Runtime};
+use crate::runtime::sim::ModelSpec;
+use crate::runtime::{
+    argmax_slice, literal_i32, Buffer, DecodeState, KvCache, ModelArtifacts, PackedModel, Runtime,
+};
+use crate::util::parallel;
 
 /// One inference request: a token prefix plus decode/deadline metadata.
 /// The response carries the autoregressively generated tokens.
 #[derive(Debug)]
 pub struct Request {
+    /// Coordinator-assigned id, echoed in the response.
     pub id: u64,
+    /// The prompt prefix.
     pub tokens: Vec<i32>,
     /// How many tokens to decode (1 = classic next-token serving).
     pub max_new_tokens: usize,
@@ -45,18 +60,23 @@ pub struct Request {
     /// the executor sheds it (empty `tokens`, `shed = true`) instead of
     /// running it.
     pub deadline: Option<Instant>,
+    /// Where the (single) response is delivered.
     pub respond: Sender<Response>,
+    /// Submission time (latency measurement).
     pub submitted: Instant,
 }
 
+/// What the caller's channel yields for one [`Request`].
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request's coordinator-assigned id.
     pub id: u64,
     /// First generated token (back-compat with next-token serving); 0 when
     /// shed.
     pub next_token: i32,
     /// All generated tokens, in order (empty when shed).
     pub tokens: Vec<i32>,
+    /// Submit-to-respond latency.
     pub latency: Duration,
     /// Which shard executed (or shed) the request.
     pub shard: usize,
@@ -65,11 +85,19 @@ pub struct Response {
     pub shed: bool,
 }
 
-/// What the executor thread runs per batch: padded token matrix in, one
-/// next-token per request out.
+/// What the executor thread runs: per-request [`DecodeState`]s in, one
+/// generated token per live request per [`step`](BatchExecutor::step).
+///
+/// Implementors must provide the single-shot [`run`](BatchExecutor::run)
+/// (full-prefix next-token, the recompute oracle); everything else has
+/// provided defaults built on it. Executors with a fast path override
+/// [`begin`](BatchExecutor::begin) (attach a KV cache) and
+/// [`step`](BatchExecutor::step) (evaluate only each request's uncached
+/// window suffix) — see [`QuantExecutor`] / [`GraphExecutor`].
 pub trait BatchExecutor {
     /// Max sequences per executed batch (the AOT graph's B).
     fn batch_capacity(&self) -> usize;
+    /// The model's context window (decode states slide at this length).
     fn seq_len(&self) -> usize;
     /// `prefixes` has ≤ batch_capacity entries, each ≤ seq_len tokens.
     fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>>;
@@ -78,51 +106,80 @@ pub trait BatchExecutor {
         0
     }
 
-    /// Autoregressive decode: repeatedly [`run`](Self::run) the batch,
-    /// append each sequence's argmax token, and re-feed it, until sequence
+    /// Admit one request: build its [`DecodeState`] (window = the
+    /// `seq_len` newest prefix tokens). Cache-capable executors override
+    /// this to attach a per-request KV cache.
+    fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
+        Ok(DecodeState::new(prefix, max_new, self.seq_len()))
+    }
+
+    /// Advance every state by exactly one token. The default recomputes
+    /// each request's own window via [`run`](Self::run) (no KV cache, no
+    /// cross-request padding); overrides run the cached incremental path.
+    fn step(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+        self.step_recompute(states)
+    }
+
+    /// The full-recompute step (the equivalence oracle): one
+    /// [`run`](Self::run) over the live windows, one argmax-token pushed
+    /// per state. Cache-capable executors fall back to this under
+    /// `--no-kv-cache` and for states without a cache.
+    fn step_recompute(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+        if states.is_empty() {
+            return Ok(());
+        }
+        let windows: Vec<Vec<i32>> = states.iter().map(|s| s.window().to_vec()).collect();
+        let next = self.run(&windows)?;
+        anyhow::ensure!(next.len() == states.len(), "executor returned wrong batch size");
+        for (s, &tok) in states.iter_mut().zip(&next) {
+            s.push_token(tok);
+        }
+        Ok(())
+    }
+
+    /// Autoregressive decode over a fixed request set: [`begin`] every
+    /// prefix, then [`step`] the unfinished states until each request
     /// `i` has `max_new[i]` generated tokens. Sequences at the model's
     /// context window slide (drop-front) so every generated token
-    /// conditions on the `seq_len` most recent tokens. Finished sequences
-    /// drop out of later forward passes. Returns the generated tokens per
-    /// sequence.
+    /// conditions on the `seq_len` most recent tokens; finished sequences
+    /// drop out of later steps. Returns the generated tokens per request.
+    /// (The serving shard loop uses [`begin`]/[`step`] directly so
+    /// requests can also *join* mid-flight — continuous batching.)
+    ///
+    /// [`begin`]: BatchExecutor::begin
+    /// [`step`]: BatchExecutor::step
     fn generate(&mut self, prefixes: &[Vec<i32>], max_new: &[usize]) -> Result<Vec<Vec<i32>>> {
         anyhow::ensure!(prefixes.len() == max_new.len(), "prefixes/max_new length mismatch");
-        let cap = self.seq_len();
-        let mut seqs: Vec<Vec<i32>> = prefixes
-            .iter()
-            .map(|p| p[p.len().saturating_sub(cap)..].to_vec())
-            .collect();
-        let mut out: Vec<Vec<i32>> = prefixes.iter().map(|_| Vec::new()).collect();
-        let steps = max_new.iter().copied().max().unwrap_or(0);
-        for _ in 0..steps {
-            let active: Vec<usize> =
-                (0..seqs.len()).filter(|&i| out[i].len() < max_new[i]).collect();
+        let mut states = Vec::with_capacity(prefixes.len());
+        for (p, &m) in prefixes.iter().zip(max_new) {
+            states.push(self.begin(p, m)?);
+        }
+        loop {
+            let mut active: Vec<&mut DecodeState> =
+                states.iter_mut().filter(|s| !s.done()).collect();
             if active.is_empty() {
                 break;
             }
-            // Finished sequences are compacted out so they stop paying for
-            // forward passes; the full-batch common case avoids the copy.
-            let next = if active.len() == seqs.len() {
-                self.run(&seqs)?
-            } else {
-                let batch: Vec<Vec<i32>> = active.iter().map(|&i| seqs[i].clone()).collect();
-                self.run(&batch)?
-            };
-            anyhow::ensure!(next.len() == active.len(), "executor returned wrong batch size");
-            for (&i, &tok) in active.iter().zip(&next) {
-                out[i].push(tok);
-                if seqs[i].len() >= cap {
-                    seqs[i].remove(0); // slide the context window
-                }
-                seqs[i].push(tok);
-            }
+            let before: usize = active.iter().map(|s| s.generated().len()).sum();
+            self.step(&mut active)?;
+            let after: usize = active.iter().map(|s| s.generated().len()).sum();
+            // A step that generates nothing would loop forever — make a
+            // broken executor a hard error instead.
+            anyhow::ensure!(after > before, "executor step made no decode progress");
         }
-        Ok(out)
+        Ok(states.into_iter().map(DecodeState::into_generated).collect())
     }
 }
 
 /// Production executor: fwd graph + (quantized) parameter buffers, on
 /// whichever runtime backend is active (sim or PJRT).
+///
+/// On backends whose fwd graphs support incremental decode (the sim
+/// interpreter), [`BatchExecutor::step`] routes each live request through
+/// `Executable::run_decode_step` with the request's own KV cache —
+/// evaluating only the uncached window suffix. PJRT (fixed-shape graphs)
+/// and [`GraphExecutor::with_kv_cache`]`(false)` fall back to the
+/// full-recompute oracle path.
 pub struct GraphExecutor {
     rt: Runtime,
     exe: crate::runtime::Executable,
@@ -135,6 +192,11 @@ pub struct GraphExecutor {
     /// Sim backend accepts any leading batch dim, so partial batches pad
     /// only to their own size; PJRT compiled a static (B, S).
     dynamic_batch: bool,
+    /// KV-cached decode enabled (`--no-kv-cache` clears it).
+    use_kv: bool,
+    /// `(n_layers, d_model)` for sizing per-request KV caches; `None`
+    /// when the model config is unavailable (decode then recomputes).
+    kv_dims: Option<(usize, usize)>,
 }
 
 impl GraphExecutor {
@@ -150,6 +212,19 @@ impl GraphExecutor {
         let exe = rt.load(&model.graph_path("fwd_fp"))?;
         let params = rt.upload_all(&model.param_literals(replace)?)?;
         let dynamic_batch = rt.dynamic_batch();
+        // Cache dimensions come from the model spec; a model without a
+        // readable spec still serves, but on the recompute path — say so
+        // instead of silently degrading to O(S²)-per-token decode.
+        let kv_dims = match ModelSpec::load(&model.dir) {
+            Ok(s) => Some((s.n_layers, s.d_model)),
+            Err(e) => {
+                eprintln!(
+                    "[executor] KV-cached decode disabled for {}: cannot read model spec: {e:#}",
+                    model.name
+                );
+                None
+            }
+        };
         Ok(Self {
             rt,
             exe,
@@ -159,7 +234,17 @@ impl GraphExecutor {
             vocab: model.vocab,
             schedule,
             dynamic_batch,
+            use_kv: true,
+            kv_dims,
         })
+    }
+
+    /// Toggle KV-cached incremental decode (on by default where the
+    /// backend supports it); off = every step recomputes the full window
+    /// (the `--no-kv-cache` debugging oracle).
+    pub fn with_kv_cache(mut self, on: bool) -> Self {
+        self.use_kv = on;
+        self
     }
 }
 
@@ -168,10 +253,18 @@ impl GraphExecutor {
 /// so no dense f32 weight matrix is ever materialized for a quantized
 /// layer. Always dynamic-batch (the packed forward reads `b` from its
 /// inputs), so partial batches only pay for the rows they carry.
+///
+/// PR 5: [`BatchExecutor::step`] runs KV-cached incremental decode
+/// ([`PackedModel::forward_incremental`]) — each live request evaluates
+/// only its uncached window suffix, bit-identical to the full-prefix
+/// recompute (pinned by `tests/decode_equiv.rs`).
+/// [`QuantExecutor::with_kv_cache`]`(false)` restores the oracle path.
 pub struct QuantExecutor {
     model: Arc<PackedModel>,
     batch: usize,
     schedule: Schedule,
+    use_kv: bool,
+    work_positions: u64,
 }
 
 impl QuantExecutor {
@@ -185,7 +278,24 @@ impl QuantExecutor {
     /// Executor with an explicit schedule slice (one shard of
     /// [`Schedule::shard`] under sharded serving).
     pub fn with_schedule(model: Arc<PackedModel>, batch: usize, schedule: Schedule) -> Self {
-        Self { model, batch: batch.max(1), schedule }
+        Self { model, batch: batch.max(1), schedule, use_kv: true, work_positions: 0 }
+    }
+
+    /// Toggle KV-cached incremental decode (on by default); off = every
+    /// step recomputes the full window (the `--no-kv-cache` oracle).
+    pub fn with_kv_cache(mut self, on: bool) -> Self {
+        self.use_kv = on;
+        self
+    }
+
+    /// Token positions evaluated through the layer stack so far — the
+    /// MAC-work proxy (each position pays the same per-layer GEMMs; the
+    /// padded pre-PR-5 decode paid `batch × longest-prefix` positions per
+    /// step, the continuous-batching path pays exactly the uncached
+    /// suffix). `tests/decode_equiv.rs` pins ragged-batch work to within
+    /// 1.1× of the per-request ideal with this counter.
+    pub fn work_positions(&self) -> u64 {
+        self.work_positions
     }
 }
 
@@ -216,6 +326,7 @@ impl BatchExecutor for QuantExecutor {
             let n = p.len().min(s);
             tokens[i * s..i * s + n].copy_from_slice(&p[p.len() - n..]);
         }
+        self.work_positions += (b * s) as u64;
         let logits = self.model.forward(&tokens, b, s)?;
         let vocab = self.model.spec.vocab;
         prefixes
@@ -225,7 +336,7 @@ impl BatchExecutor for QuantExecutor {
                 let pos = p.len().clamp(1, s) - 1;
                 let row = logits.row(i * s + pos);
                 anyhow::ensure!(row.len() == vocab, "logit row width mismatch");
-                Ok(crate::runtime::argmax_slice(row) as i32)
+                Ok(argmax_slice(row) as i32)
             })
             .collect()
     }
@@ -233,6 +344,70 @@ impl BatchExecutor for QuantExecutor {
     fn dvfs_transitions(&self) -> usize {
         self.schedule.transitions()
     }
+
+    /// KV states by default; plain recompute states under `--no-kv-cache`.
+    fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
+        let cap = self.model.spec.seq_len;
+        Ok(if self.use_kv {
+            DecodeState::with_cache(prefix, max_new, cap, self.model.new_cache())
+        } else {
+            DecodeState::new(prefix, max_new, cap)
+        })
+    }
+
+    /// Incremental decode: each live request evaluates only its uncached
+    /// window suffix (one token per step after prefill; the whole window
+    /// again after a slide cleared the cache) — no cross-request padding.
+    /// Requests are independent (each owns its cache; the packed model is
+    /// shared immutably), so the live set fans out over the worker pool —
+    /// single-token inner GEMMs sit below the kernels' parallel
+    /// threshold, so threads go to requests, not rows.
+    fn step(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+        if !self.use_kv || states.iter().any(|s| !s.has_cache()) {
+            return self.step_recompute(states);
+        }
+        // Work accounting up front (the fan-out below cannot touch self):
+        // the uncached suffix per state, or the 1-row scratch pass for an
+        // empty window.
+        for s in states.iter() {
+            let w = s.window().len();
+            self.work_positions += w.saturating_sub(s.cached_rows()).max(1) as u64;
+        }
+        let model: &PackedModel = &self.model;
+        let first_err = std::sync::Mutex::new(None);
+        parallel::par_chunks_mut(states, 1, |_, chunk| {
+            let s = &mut *chunk[0];
+            if let Err(e) = step_one_packed(model, s) {
+                *first_err.lock().unwrap() = Some(e);
+            }
+        });
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One KV-cached decode step for one request on the packed model:
+/// evaluate the uncached window suffix through
+/// [`PackedModel::forward_incremental`], argmax the last logits row, and
+/// record the token. Empty windows mirror `run()`'s all-padding row
+/// (token 0 at position 0) via a 1-token scratch pass — bit-identical to
+/// the padded batch by row-locality — without touching the request's
+/// cache (the window gains its first real token from the push).
+fn step_one_packed(model: &PackedModel, s: &mut DecodeState) -> Result<()> {
+    let next = if s.window().is_empty() {
+        let logits = model.forward(&[0], 1, 1)?;
+        argmax_slice(logits.row(0)) as i32
+    } else {
+        let (new, cached) = s.uncached_suffix()?;
+        let cache = s.cache_mut().expect("state has a cache");
+        let logits = model.forward_incremental(&new, cached, cache)?;
+        anyhow::ensure!(logits.cols == model.spec.vocab, "logit row width mismatch");
+        argmax_slice(logits.row(logits.rows - 1)) as i32
+    };
+    s.push_token(next);
+    Ok(())
 }
 
 impl BatchExecutor for GraphExecutor {
@@ -278,12 +453,57 @@ impl BatchExecutor for GraphExecutor {
     fn dvfs_transitions(&self) -> usize {
         self.schedule.transitions()
     }
+
+    /// KV states when the loaded graph supports incremental decode (sim
+    /// backend); plain recompute states otherwise (PJRT, `--no-kv-cache`).
+    fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
+        Ok(match self.kv_dims {
+            Some((layers, d)) if self.use_kv && self.exe.supports_incremental_decode() => {
+                DecodeState::with_cache(prefix, max_new, self.seq, KvCache::new(layers, d))
+            }
+            _ => DecodeState::new(prefix, max_new, self.seq),
+        })
+    }
+
+    /// Incremental decode through `Executable::run_decode_step`: each
+    /// live request evaluates only its uncached window suffix against its
+    /// resident parameter buffers. Serial over the live set — backend
+    /// executables are not required to be thread-safe (PJRT handles are
+    /// pinned to their thread), unlike the packed executor's fan-out.
+    fn step(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+        if !self.use_kv
+            || !self.exe.supports_incremental_decode()
+            || states.iter().any(|s| !s.has_cache())
+        {
+            return self.step_recompute(states);
+        }
+        let (layers, d) = self.kv_dims.unwrap_or((0, 0));
+        let params: Vec<&Buffer> = self.params.iter().collect();
+        for s in states.iter_mut() {
+            let next = if s.window().is_empty() {
+                // Degenerate empty prefix: mirror run()'s all-padding row
+                // (token 0 at position 0) against a scratch cache.
+                let mut scratch = KvCache::new(layers, d);
+                let logits = self.exe.run_decode_step(&params, &[0], 0, &mut scratch)?;
+                logits.argmax_span(0, self.vocab)?
+            } else {
+                let (new, cached) = s.uncached_suffix()?;
+                let n = new.len();
+                let cache = s.cache_mut().expect("state has a cache");
+                let logits = self.exe.run_decode_step(&params, &new, cached, cache)?;
+                logits.argmax_span((n - 1) * self.vocab, self.vocab)?
+            };
+            s.push_token(next);
+        }
+        Ok(())
+    }
 }
 
 /// Coordinator-wide configuration: per-shard batching plus routing and
 /// admission-control knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Per-shard batch-forming knobs.
     pub batcher: BatcherConfig,
     /// Executor shards (threads). Each owns its own queue + executor.
     pub shards: usize,
@@ -305,6 +525,7 @@ impl Default for CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
+    /// Default config with `shards` executor threads.
     pub fn sharded(shards: usize) -> Self {
         Self { shards: shards.max(1), ..Self::default() }
     }
@@ -313,20 +534,26 @@ impl CoordinatorConfig {
 /// Everything `submit_spec` needs to route one request.
 #[derive(Debug, Clone)]
 pub struct SubmitSpec {
+    /// The prompt prefix.
     pub tokens: Vec<i32>,
+    /// Tokens to decode (clamped to ≥ 1 at submit).
     pub max_new_tokens: usize,
+    /// Optional absolute shed deadline.
     pub deadline: Option<Instant>,
 }
 
 impl SubmitSpec {
+    /// Classic next-token serving: decode exactly one token.
     pub fn next_token(tokens: Vec<i32>) -> Self {
         Self { tokens, max_new_tokens: 1, deadline: None }
     }
 
+    /// Autoregressive decode of `max_new_tokens` tokens.
     pub fn generate(tokens: Vec<i32>, max_new_tokens: usize) -> Self {
         Self { tokens, max_new_tokens: max_new_tokens.max(1), deadline: None }
     }
 
+    /// Attach a relative shed deadline (from now).
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(Instant::now() + d);
         self
@@ -401,6 +628,7 @@ impl Coordinator {
         }
     }
 
+    /// Number of executor shards (threads) this coordinator runs.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -522,10 +750,25 @@ impl Drop for Coordinator {
 
 type ShardFactory = Box<dyn FnOnce() -> Result<Box<dyn BatchExecutor>> + Send>;
 
-/// Spawn one shard: queue + batcher + executor loop. The loop never
-/// propagates per-batch errors out of the thread — a failed batch or a
-/// client that dropped its receiver is logged and the shard keeps serving
-/// (the seed implementation `?`-ed out and wedged every queued client).
+/// One in-flight request on a shard: submission metadata + decode state.
+struct Live {
+    req: Request,
+    state: DecodeState,
+}
+
+/// Spawn one shard: queue + continuous-batching decode loop. The loop
+/// keeps a live set of [`DecodeState`]s; every iteration (a) admits
+/// queued requests into free slots — blocking via the [`Batcher`] only
+/// when idle, non-blocking [`Batcher::try_fill`] between steps so
+/// requests *join mid-flight* — (b) advances every live request one token
+/// ([`BatchExecutor::step`], KV-cached where supported), and (c) retires
+/// finished requests immediately instead of holding them until the
+/// longest neighbor drains. `Metrics::batches` counts decode steps.
+///
+/// The loop never propagates per-step errors out of the thread — a failed
+/// step or a client that dropped its receiver is logged and the shard
+/// keeps serving (the seed implementation `?`-ed out and wedged every
+/// queued client).
 fn spawn_shard(
     shard_id: usize,
     make_executor: ShardFactory,
@@ -555,58 +798,115 @@ fn spawn_shard(
                 return;
             }
         };
+        let cap = exec.batch_capacity().max(1);
         let cfg = BatcherConfig {
-            batch_size: batcher_cfg.batch_size.min(exec.batch_capacity()).max(1),
+            batch_size: batcher_cfg.batch_size.min(cap).max(1),
             ..batcher_cfg
         };
         let batcher = Batcher::new(cfg, rx);
-        while let Some(batch) = batcher.next_batch() {
-            d.fetch_sub(batch.len(), Ordering::Relaxed);
-            // Shed-on-deadline: drop requests that expired while queued.
+        let mut live: Vec<Live> = Vec::new();
+        loop {
+            // ---- admit: block only when idle; top up mid-flight.
+            let incoming = if live.is_empty() {
+                match batcher.next_batch() {
+                    Some(b) => b,
+                    None => break, // queue closed and drained; no work left
+                }
+            } else {
+                batcher.try_fill(cap - live.len())
+            };
+            if !incoming.is_empty() {
+                d.fetch_sub(incoming.len(), Ordering::Relaxed);
+            }
             let now = Instant::now();
-            let (live, expired): (Vec<Request>, Vec<Request>) =
-                batch.into_iter().partition(|r| match r.deadline {
-                    Some(dl) => now <= dl,
-                    None => true,
-                });
-            for req in expired {
-                shed_one(shard_id, req, &m, &global);
+            for req in incoming {
+                // Shed-on-deadline: drop requests that expired in queue.
+                if matches!(req.deadline, Some(dl) if now > dl) {
+                    shed_one(shard_id, req, &m, &global);
+                    continue;
+                }
+                match exec.begin(&req.tokens, req.max_new_tokens) {
+                    Ok(state) if state.done() => {
+                        // Zero-budget request: answer immediately.
+                        let latency = req.submitted.elapsed();
+                        for g in [&m, &global] {
+                            g.record_latency(latency);
+                            g.responses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let _ = req.respond.send(Response {
+                            id: req.id,
+                            next_token: 0,
+                            tokens: Vec::new(),
+                            latency,
+                            shard: shard_id,
+                            shed: false,
+                        });
+                    }
+                    Ok(state) => {
+                        for g in [&m, &global] {
+                            g.batch_tokens.fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
+                        }
+                        live.push(Live { req, state });
+                    }
+                    Err(e) => {
+                        eprintln!("[coordinator] shard {shard_id}: admit failed: {e:#}");
+                        for g in [&m, &global] {
+                            g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        shed_one(shard_id, req, &m, &global);
+                    }
+                }
             }
             if live.is_empty() {
                 continue;
             }
 
-            let prefixes: Vec<Vec<i32>> = live.iter().map(|r| r.tokens.clone()).collect();
-            let max_new: Vec<usize> = live.iter().map(|r| r.max_new_tokens).collect();
-            let generated = match exec.generate(&prefixes, &max_new) {
-                Ok(g) => g,
-                Err(e) => {
-                    eprintln!("[coordinator] shard {shard_id}: batch failed: {e:#}");
-                    for g in [&m, &global] {
-                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
-                    }
-                    for req in live {
-                        shed_one(shard_id, req, &m, &global);
-                    }
-                    continue;
-                }
+            // ---- one decode step across the whole live set.
+            let before: usize = live.iter().map(|l| l.state.generated().len()).sum();
+            let step_res = {
+                let mut active: Vec<&mut DecodeState> =
+                    live.iter_mut().map(|l| &mut l.state).collect();
+                exec.step(&mut active)
             };
-
-            let n_tokens: u64 = generated.iter().map(|g| g.len() as u64).sum();
-            let batch_tokens: u64 = prefixes.iter().map(|p| p.len() as u64).sum();
+            // A "successful" step that generated nothing would spin this
+            // loop forever — treat it as an executor fault.
+            let step_res = step_res.and_then(|()| {
+                let after: usize = live.iter().map(|l| l.state.generated().len()).sum();
+                anyhow::ensure!(after > before, "executor step made no decode progress");
+                Ok(())
+            });
+            if let Err(e) = step_res {
+                eprintln!("[coordinator] shard {shard_id}: decode step failed: {e:#}");
+                for g in [&m, &global] {
+                    g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                for l in live.drain(..) {
+                    shed_one(shard_id, l.req, &m, &global);
+                }
+                continue;
+            }
+            let stepped = live.len() as u64;
             let transitions = exec.dvfs_transitions() as u64;
             for g in [&m, &global] {
                 g.batches.fetch_add(1, Ordering::Relaxed);
-                g.batch_tokens.fetch_add(batch_tokens, Ordering::Relaxed);
-                g.generated_tokens.fetch_add(n_tokens, Ordering::Relaxed);
+                g.generated_tokens.fetch_add(stepped, Ordering::Relaxed);
                 g.dvfs_transitions.fetch_add(transitions, Ordering::Relaxed);
             }
-            for (req, toks) in live.into_iter().zip(generated) {
+
+            // ---- retire finished requests immediately.
+            let mut i = 0;
+            while i < live.len() {
+                if !live[i].state.done() {
+                    i += 1;
+                    continue;
+                }
+                let Live { req, state } = live.swap_remove(i);
                 let latency = req.submitted.elapsed();
                 for g in [&m, &global] {
                     g.record_latency(latency);
                     g.responses.fetch_add(1, Ordering::Relaxed);
                 }
+                let toks = state.into_generated();
                 // Receiver may have gone away (client disconnect); that
                 // must never unwind or stall the shard.
                 let _ = req.respond.send(Response {
@@ -729,6 +1029,19 @@ mod tests {
         }
         let b = c.metrics.batches.load(Ordering::Relaxed);
         assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 2 * b);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dvfs_transitions_accounted_per_decode_step() {
+        // Multi-token decode pins the PR 5 semantics: one schedule pass
+        // per decode STEP (3 steps → 3× the per-pass transitions), not
+        // one per admitted batch.
+        let c = start(4);
+        let rx = c.submit_spec(SubmitSpec::generate(vec![1, 2], 3));
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 6);
         c.shutdown().unwrap();
     }
 
@@ -997,6 +1310,100 @@ mod tests {
         assert!(!r2.shed);
         assert_eq!(r2.next_token, 3);
         assert_eq!(c.metrics.exec_errors.load(Ordering::Relaxed), 1);
+        c.shutdown().unwrap();
+    }
+
+    /// Echo that reports every run()'s batch size and then blocks until
+    /// released — makes the continuous-batching join observable and
+    /// deterministic.
+    struct StepGate {
+        release: Receiver<()>,
+        sizes: Sender<usize>,
+    }
+
+    impl BatchExecutor for StepGate {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            let _ = self.sizes.send(prefixes.len());
+            let _ = self.release.recv();
+            Ok(prefixes.iter().map(|p| p.iter().sum::<i32>() % 97).collect())
+        }
+    }
+
+    #[test]
+    fn requests_join_the_live_decode_set_mid_flight() {
+        // Continuous batching: a request submitted while another is
+        // mid-decode joins at the next step boundary instead of waiting
+        // for the whole batch to drain (the pre-PR-5 behavior).
+        let (rel_tx, rel_rx) = channel::<()>();
+        let (size_tx, size_rx) = channel::<usize>();
+        let slots = std::sync::Mutex::new(Some((rel_rx, size_tx)));
+        let c = Coordinator::start(
+            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
+            move || {
+                let (release, sizes) = slots.lock().unwrap().take().expect("single shard");
+                Ok(Box::new(StepGate { release, sizes }) as Box<dyn BatchExecutor>)
+            },
+        );
+        let rx1 = c.submit_spec(SubmitSpec::generate(vec![3, 5], 3));
+        // Step 1 begins with request 1 alone.
+        assert_eq!(size_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        // Submit request 2 while step 1 is still executing.
+        let rx2 = c.submit_spec(SubmitSpec::generate(vec![7], 1));
+        rel_tx.send(()).unwrap(); // finish step 1
+        // Step 2 must include BOTH requests: the join happened mid-flight.
+        assert_eq!(size_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 2);
+        rel_tx.send(()).unwrap(); // finish step 2; request 2 retires
+        // Step 3: request 2 retired immediately, request 1 decodes on.
+        assert_eq!(size_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        rel_tx.send(()).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Chains are per-request windows — the join never cross-pollutes.
+        assert_eq!(r1.tokens, echo_chain(&[3, 5], 16, 3));
+        assert_eq!(r2.tokens, echo_chain(&[7], 16, 1));
+        // 3 decode steps total, not 4 (= the serialized alternative).
+        assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(c.metrics.generated_tokens.load(Ordering::Relaxed), 4);
+        c.shutdown().unwrap();
+    }
+
+    /// Executor whose step "succeeds" without generating — the shard and
+    /// generate() must fail it rather than spin forever.
+    struct Stuck;
+
+    impl BatchExecutor for Stuck {
+        fn batch_capacity(&self) -> usize {
+            2
+        }
+        fn seq_len(&self) -> usize {
+            8
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            Ok(vec![0; prefixes.len()])
+        }
+        fn step(&mut self, _states: &mut [&mut DecodeState]) -> Result<()> {
+            Ok(()) // generates nothing
+        }
+    }
+
+    #[test]
+    fn zero_progress_step_is_an_error_not_a_livelock() {
+        let mut e = Stuck;
+        assert!(e.generate(&[vec![1]], &[2]).is_err());
+        // Through the coordinator: the request is shed, the shard lives.
+        let c = Coordinator::start(
+            BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+            || Ok(Box::new(Stuck) as Box<dyn BatchExecutor>),
+        );
+        let r = c.submit(vec![1, 2]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.shed);
+        assert!(c.metrics.exec_errors.load(Ordering::Relaxed) >= 1);
         c.shutdown().unwrap();
     }
 

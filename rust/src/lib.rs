@@ -31,13 +31,12 @@
 // linear-algebra kernels and the netlist/array simulators.
 #![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::too_many_arguments)]
 // Public items must carry rustdoc. Coverage is landing module-by-module:
-// `quant/`, `dvfs/`, `systolic/` and `runtime::qkernels` are fully
+// `quant/`, `dvfs/`, `systolic/`, `coordinator/` and `runtime/` are fully
 // documented and enforced (CI builds docs with RUSTDOCFLAGS="-D warnings");
 // the modules below carry an explicit allow until their pass lands
 // (tracked in ROADMAP.md).
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod util;
@@ -51,9 +50,6 @@ pub mod mac;
 #[allow(missing_docs)]
 pub mod model;
 pub mod quant;
-// runtime::qkernels re-enables the lint for itself; the rest of the
-// runtime (backend/sim/artifacts surface) is in the docs backlog.
-#[allow(missing_docs)]
 pub mod runtime;
 pub mod systolic;
 #[allow(missing_docs)]

@@ -39,16 +39,20 @@ COMMANDS
   ablate dram|dvfs-overhead|derived-ladder
         Ablation studies → ablate_<name>.md
   serve --model M [--quant Q] [--shards N] [--requests R] [--max-new T]
-        Sharded serving demo (quantize → route → batch → decode).
-        --quant halo-bal|halo-perf|halo-acc executes natively on packed
-        codebook tiles (LUT matmul + fused SpMV; never densifies) and
-        reports the modeled DVFS speedup/energy next to wall-clock;
-        --quant none (default) serves the dequantized dense weights.
+        Sharded serving demo (quantize → route → continuous batching →
+        KV-cached decode). --quant halo-bal|halo-perf|halo-acc executes
+        natively on packed codebook tiles (LUT matmul + fused SpMV;
+        never densifies) and reports the modeled DVFS speedup/energy
+        next to wall-clock; --quant none (default) serves the
+        dequantized dense weights. Decode is incremental against a
+        per-request KV cache; --no-kv-cache falls back to full-prefix
+        recompute (the equivalence oracle) for debugging.
   loadgen [--shards N] [--rps R] [--requests M] [--json FILE]
           [--quant Q --model M]
         Paced serving load. Default: deterministic synthetic executor,
         no artifacts needed. With --quant: drives the packed quantized
-        model from the artifact store instead.
+        model from the artifact store instead (KV-cached continuous
+        batching; --no-kv-cache for the recompute oracle).
   all [--max-batches N]
         Regenerate every report → results/
 
@@ -70,6 +74,8 @@ SERVING OPTIONS (serve / loadgen)
   --seed S            loadgen RNG seed (default 0x10AD)
   --json FILE         loadgen: write the full JSON report to FILE
   --tile T            quantization tile size under --quant (default 128)
+  --no-kv-cache       decode by full-prefix recompute instead of the
+                      per-request KV cache (debugging oracle)
 ";
 
 fn main() -> Result<()> {
@@ -264,6 +270,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let tile = args.usize_or("tile", 128)?;
     let quant = parse_quant_variant(args.str_or("quant", "none"))?;
+    let use_kv = !args.has("no-kv-cache");
 
     // Calibrate + quantize once on the main thread, then share the result
     // across the shard factories.
@@ -300,11 +307,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let pm = Arc::new(packed);
         let ss = Arc::new(pm.schedule.shard(n_shards));
         Coordinator::start_sharded(cfg, move |shard| {
-            Ok(Box::new(QuantExecutor::with_schedule(
-                pm.clone(),
-                eval_batch,
-                ss[shard].clone(),
-            )) as Box<dyn halo::coordinator::BatchExecutor>)
+            Ok(Box::new(
+                QuantExecutor::with_schedule(pm.clone(), eval_batch, ss[shard].clone())
+                    .with_kv_cache(use_kv),
+            ) as Box<dyn halo::coordinator::BatchExecutor>)
         })
     } else {
         // Dense path: quantize, dequantize back to f32, substitute into
@@ -339,7 +345,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // (PJRT handles never cross threads) and applies its own
             // schedule slice.
             let rt = Runtime::cpu()?;
-            let exec = GraphExecutor::new(rt, &model, &replace, ss[shard].clone())?;
+            let exec = GraphExecutor::new(rt, &model, &replace, ss[shard].clone())?
+                .with_kv_cache(use_kv);
             Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
         })
     };
@@ -458,9 +465,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 Err(_) => false,
             }
         };
+        let use_kv = !args.has("no-kv-cache");
         loadgen::run_with(&cfg, vocab, &verify, move |shard| {
-            Ok(Box::new(QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone()))
-                as Box<dyn halo::coordinator::BatchExecutor>)
+            Ok(Box::new(
+                QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone())
+                    .with_kv_cache(use_kv),
+            ) as Box<dyn halo::coordinator::BatchExecutor>)
         })?
     } else {
         loadgen::run(&cfg)?

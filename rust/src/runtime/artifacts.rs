@@ -18,9 +18,13 @@ use super::backend::Literal;
 /// One named parameter tensor.
 #[derive(Debug, Clone)]
 pub struct Param {
+    /// Canonical parameter name (e.g. `layer0.attn.wq`).
     pub name: String,
+    /// Row-major shape.
     pub shape: Vec<usize>,
+    /// Trained weights, flat f32.
     pub data: Vec<f32>,
+    /// True for linear (quantizable GEMM) weights.
     pub linear: bool,
 }
 
@@ -37,15 +41,22 @@ impl Param {
 /// A trained model's artifacts.
 #[derive(Debug)]
 pub struct ModelArtifacts {
+    /// Model name (the `models/<name>` directory).
     pub name: String,
+    /// The model's artifact directory.
     pub dir: PathBuf,
+    /// All parameters in canonical (graph-input) order.
     pub params: Vec<Param>,
+    /// Batch size the evaluation graphs were lowered with.
     pub eval_batch: usize,
+    /// Context window.
     pub seq_len: usize,
+    /// Vocabulary size.
     pub vocab: usize,
 }
 
 impl ModelArtifacts {
+    /// Load `<root>/models/<name>`: config table + trained weights.
     pub fn load(root: &Path, name: &str) -> Result<Self> {
         let dir = root.join("models").join(name);
         let meta = Json::parse(
@@ -84,18 +95,22 @@ impl ModelArtifacts {
         })
     }
 
+    /// Path of a lowered graph artifact (`fwd_fp`, `nll_a8`, …).
     pub fn graph_path(&self, graph: &str) -> PathBuf {
         self.dir.join(format!("{graph}.hlo.txt"))
     }
 
+    /// Look up one parameter by name.
     pub fn param(&self, name: &str) -> Option<&Param> {
         self.params.iter().find(|p| p.name == name)
     }
 
+    /// The linear (quantizable) weights, in canonical order.
     pub fn linear_params(&self) -> impl Iterator<Item = &Param> {
         self.params.iter().filter(|p| p.linear)
     }
 
+    /// Total scalar weight count across all parameters.
     pub fn n_weights(&self) -> usize {
         self.params.iter().map(|p| p.data.len()).sum()
     }
@@ -127,11 +142,14 @@ impl ModelArtifacts {
 /// The artifact root (manifest + corpora + models).
 #[derive(Debug)]
 pub struct Store {
+    /// The artifact root directory.
     pub root: PathBuf,
+    /// The parsed `manifest.json`.
     pub manifest: Json,
 }
 
 impl Store {
+    /// Open an artifact root (requires its `manifest.json`).
     pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
         let root = root.into();
         let manifest = Json::parse(
@@ -151,6 +169,7 @@ impl Store {
         Self::open(root)
     }
 
+    /// Names of every trained model in the manifest.
     pub fn model_names(&self) -> Result<Vec<String>> {
         Ok(self
             .manifest
@@ -161,6 +180,7 @@ impl Store {
             .collect())
     }
 
+    /// Load one model's artifacts by name.
     pub fn model(&self, name: &str) -> Result<ModelArtifacts> {
         ModelArtifacts::load(&self.root, name)
     }
@@ -170,10 +190,12 @@ impl Store {
         read_u16(&self.root.join("corpora").join(format!("{corpus}_eval.u16.bin")))
     }
 
+    /// Calibration token stream (Fisher gradients, quantizer inputs).
     pub fn corpus_calib(&self) -> Result<Vec<u16>> {
         read_u16(&self.root.join("corpora").join("calib.u16.bin"))
     }
 
+    /// Path of a standalone lowered kernel (`halo_matmul`, `spmv`).
     pub fn kernel_path(&self, name: &str) -> PathBuf {
         self.root.join("kernels").join(format!("{name}.hlo.txt"))
     }

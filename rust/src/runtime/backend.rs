@@ -16,32 +16,43 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+use super::kvcache::KvCache;
+
 /// A host tensor: typed flat data plus row-major dims. Scalars use `dims:
 /// vec![]` (numel 1, like an XLA rank-0 literal).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Literal {
+    /// Row-major dimensions (empty for a rank-0 scalar).
     pub dims: Vec<usize>,
+    /// The typed flat payload.
     pub data: LiteralData,
 }
 
+/// Typed flat storage behind a [`Literal`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum LiteralData {
+    /// 32-bit floats (parameters, activations, logits).
     F32(Vec<f32>),
+    /// 32-bit ints (token batches, sparse positions).
     I32(Vec<i32>),
+    /// 8-bit ints (codebook indices).
     I8(Vec<i8>),
 }
 
 impl Literal {
+    /// f32 literal of the given shape (length must match the shape).
     pub fn f32(data: &[f32], dims: &[usize]) -> Result<Self> {
         Self::check(data.len(), dims)?;
         Ok(Self { dims: dims.to_vec(), data: LiteralData::F32(data.to_vec()) })
     }
 
+    /// i32 literal of the given shape (length must match the shape).
     pub fn i32(data: &[i32], dims: &[usize]) -> Result<Self> {
         Self::check(data.len(), dims)?;
         Ok(Self { dims: dims.to_vec(), data: LiteralData::I32(data.to_vec()) })
     }
 
+    /// i8 literal of the given shape (length must match the shape).
     pub fn i8(data: &[i8], dims: &[usize]) -> Result<Self> {
         Self::check(data.len(), dims)?;
         Ok(Self { dims: dims.to_vec(), data: LiteralData::I8(data.to_vec()) })
@@ -58,6 +69,7 @@ impl Literal {
         Ok(())
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         match &self.data {
             LiteralData::F32(v) => v.len(),
@@ -66,10 +78,12 @@ impl Literal {
         }
     }
 
+    /// Row-major dimensions.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
 
+    /// Borrow the payload as f32 (errors on other element types).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             LiteralData::F32(v) => Ok(v),
@@ -77,6 +91,7 @@ impl Literal {
         }
     }
 
+    /// Borrow the payload as i32 (errors on other element types).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             LiteralData::I32(v) => Ok(v),
@@ -84,6 +99,7 @@ impl Literal {
         }
     }
 
+    /// Borrow the payload as i8 (errors on other element types).
     pub fn as_i8(&self) -> Result<&[i8]> {
         match &self.data {
             LiteralData::I8(v) => Ok(v),
@@ -96,6 +112,7 @@ impl Literal {
         T::from_literal(self)
     }
 
+    /// First element of the payload (the scalar-output graphs).
     pub fn get_first_element<T: Element>(&self) -> Result<T> {
         let v = self.to_vec::<T>()?;
         v.first().copied().ok_or_else(|| anyhow::anyhow!("empty literal"))
@@ -134,6 +151,7 @@ pub fn argmax_slice(row: &[f32]) -> usize {
 
 /// Element types a [`Literal`] can hold.
 pub trait Element: Copy + Sized {
+    /// Copy the literal's payload out as this element type.
     fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
 }
 
@@ -159,12 +177,15 @@ impl Element for i8 {
 /// resident across executions (§Perf L3); the sim backend's "device" is the
 /// host, so its buffers simply own the literal.
 pub enum Buffer {
+    /// The sim backend's "device" buffer: the host literal itself.
     Host(Literal),
+    /// A resident PJRT device buffer (`--features xla`).
     #[cfg(feature = "xla")]
     Pjrt(xla::PjRtBuffer),
 }
 
 impl Buffer {
+    /// Borrow as a host literal (errors on PJRT buffers).
     pub fn as_host(&self) -> Result<&Literal> {
         match self {
             Buffer::Host(l) => Ok(l),
@@ -173,6 +194,7 @@ impl Buffer {
         }
     }
 
+    /// Borrow as a PJRT device buffer (errors on host literals).
     #[cfg(feature = "xla")]
     pub fn as_pjrt(&self) -> Result<&xla::PjRtBuffer> {
         match self {
@@ -186,6 +208,7 @@ impl Buffer {
 /// handles must stay on the thread that created them (the coordinator
 /// constructs its executor inside the executor thread for this reason).
 pub trait Backend {
+    /// Human-readable platform name (e.g. `sim-cpu`).
     fn platform_name(&self) -> String;
     /// Upload a host literal into a resident device buffer.
     fn upload(&self, lit: &Literal) -> Result<Buffer>;
@@ -197,6 +220,14 @@ pub trait Backend {
     fn supports_dynamic_batch(&self) -> bool {
         false
     }
+    /// True when this backend's forward graphs can decode incrementally
+    /// against a per-request [`KvCache`] (see
+    /// [`ExecutableImpl::run_decode_step`]). The sim interpreter supports
+    /// it; PJRT compiles a fixed-shape graph with no cache inputs, so its
+    /// decode loop recomputes the full prefix every step.
+    fn supports_incremental_decode(&self) -> bool {
+        false
+    }
 }
 
 /// A loaded computation ready for repeated execution.
@@ -206,6 +237,31 @@ pub trait ExecutableImpl {
     fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
     /// Execute with pre-uploaded device buffers (the hot path).
     fn run_buffers(&self, inputs: &[&Buffer]) -> Result<Vec<Literal>>;
+    /// True when this loaded graph supports [`run_decode_step`]
+    /// (only the sim backend's `fwd` model graphs do).
+    ///
+    /// [`run_decode_step`]: ExecutableImpl::run_decode_step
+    fn supports_incremental_decode(&self) -> bool {
+        false
+    }
+    /// KV-cached incremental decode step: evaluate only `tokens` (the
+    /// window suffix at absolute positions `pos0..pos0 + tokens.len()`),
+    /// attending against — and appending to — the per-request `cache`.
+    /// `params` are the resident parameter buffers in canonical order
+    /// (no token literal). Returns the `(tokens.len(), vocab)` logits
+    /// for the new positions, bit-identical to the rows a full-prefix
+    /// [`run`](ExecutableImpl::run) would produce (pinned by
+    /// `tests/decode_equiv.rs`).
+    fn run_decode_step(
+        &self,
+        params: &[&Buffer],
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Literal> {
+        let _ = (params, tokens, pos0, cache);
+        bail!("this graph does not support incremental decode")
+    }
 }
 
 #[cfg(test)]

@@ -11,6 +11,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
+use super::kvcache::KvCache;
 use super::sim::SimBackend;
 
 /// A handle to the active execution backend.
@@ -57,8 +58,16 @@ impl Runtime {
         Ok(Self::sim())
     }
 
+    /// Human-readable platform name of the active backend.
     pub fn platform(&self) -> String {
         self.backend.platform_name()
+    }
+
+    /// Whether this backend's forward graphs can decode incrementally
+    /// against a per-request KV cache (see
+    /// [`Executable::run_decode_step`]).
+    pub fn incremental_decode(&self) -> bool {
+        self.backend.supports_incremental_decode()
     }
 
     /// Whether model graphs on this backend accept any leading batch dim
@@ -75,6 +84,7 @@ impl Runtime {
         self.backend.upload(lit)
     }
 
+    /// Upload a batch of literals (parameter sets) to resident buffers.
     pub fn upload_all(&self, lits: &[Literal]) -> Result<Vec<Buffer>> {
         lits.iter().map(|l| self.upload(l)).collect()
     }
@@ -92,6 +102,7 @@ impl Runtime {
 /// A loaded computation ready for repeated execution.
 pub struct Executable {
     imp: Box<dyn ExecutableImpl>,
+    /// The artifact path this executable was loaded from (error context).
     pub name: String,
 }
 
@@ -134,6 +145,31 @@ impl Executable {
         let mut out = self.run_b(inputs)?;
         anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
         Ok(out.pop().expect("len checked above"))
+    }
+
+    /// True when this loaded graph supports KV-cached incremental decode
+    /// (see [`Executable::run_decode_step`]). Only the sim backend's
+    /// `fwd` model graphs do.
+    pub fn supports_incremental_decode(&self) -> bool {
+        self.imp.supports_incremental_decode()
+    }
+
+    /// KV-cached incremental decode step: evaluate only `tokens` (the
+    /// window suffix at absolute positions `pos0..`) against — and
+    /// appending to — the per-request `cache`. `params` are the resident
+    /// parameter buffers in canonical order (no token literal). Returns
+    /// the `(tokens.len(), vocab)` logits for the new positions,
+    /// bit-identical to the rows of a full-prefix pass.
+    pub fn run_decode_step(
+        &self,
+        params: &[&Buffer],
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Literal> {
+        self.imp
+            .run_decode_step(params, tokens, pos0, cache)
+            .with_context(|| format!("decode step on {}", self.name))
     }
 }
 

@@ -39,6 +39,7 @@ pub fn set_force_naive(on: bool) {
     FORCE_NAIVE.store(on, Ordering::Relaxed);
 }
 
+/// Whether [`set_force_naive`] routing is currently active.
 pub fn force_naive() -> bool {
     FORCE_NAIVE.load(Ordering::Relaxed)
 }

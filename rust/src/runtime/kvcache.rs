@@ -1,0 +1,447 @@
+//! Per-request KV cache + decode state for incremental autoregressive
+//! decode (PR 5).
+//!
+//! Before this module, every decode step re-ran the *entire* prefix
+//! through the forward interpreter — O(S²) work per generated token.
+//! The KV cache stores each layer's key/value projections for every
+//! position already processed, so a step only evaluates the window
+//! suffix that is not yet cached (normally exactly one token) and
+//! attends it against the cached rows.
+//!
+//! ## Memory model
+//!
+//! - One [`KvCache`] per in-flight request (caches are never shared:
+//!   different requests have different prefixes, and a request's cache
+//!   dies with its [`DecodeState`] when the request retires).
+//! - Per layer, K and V are each a contiguous row-major `(positions,
+//!   d_model)` f32 block. Capacity grows geometrically: the first
+//!   append reserves [`INITIAL_CAP_ROWS`] positions, and each
+//!   exhaustion doubles, so a decode that runs to the model's context
+//!   window performs O(log S) reallocations and the differential suite
+//!   can place a prefix across a growth boundary deliberately.
+//! - Bytes per request ≈ `2 · n_layers · capacity_rows · d_model · 4`
+//!   ([`KvCache::reserved_bytes`]); capacity is retained across
+//!   [`KvCache::clear`] so a slide-induced re-prefill reuses the
+//!   allocation instead of re-growing from scratch.
+//! - Sliding the context window (drop-front at `seq_len`) shifts every
+//!   absolute position — positional embeddings make every cached row
+//!   stale — so [`DecodeState::push_token`] *clears* the cache on a
+//!   slide and the next step re-prefills the shifted window. That is
+//!   exactly the recompute the oracle path performs at the cap, which
+//!   keeps cached and uncached decode bit-identical there too.
+//!
+//! The cache layout is deliberately model-agnostic (rows of f32): the
+//! interpreter (`runtime::sim::forward_incremental`) owns all numerics;
+//! this module owns only storage, growth, and the per-request decode
+//! bookkeeping that the coordinator's continuous-batching loop steps.
+
+use anyhow::Result;
+
+use crate::quant::Matrix;
+
+/// Positions reserved by a layer's first append; capacity doubles from
+/// here. Small enough that short next-token requests stay cheap, large
+/// enough that a 256-token prefill performs only a handful of growths.
+pub const INITIAL_CAP_ROWS: usize = 16;
+
+/// One layer's cached key/value projections: two contiguous row-major
+/// `(rows, d_model)` f32 blocks with explicitly managed row capacity.
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    rows: usize,
+    cap_rows: usize,
+}
+
+impl LayerKv {
+    fn new(d: usize) -> Self {
+        Self { k: Vec::new(), v: Vec::new(), d, rows: 0, cap_rows: 0 }
+    }
+
+    /// Positions cached in this layer.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Positions the current allocation can hold before the next growth.
+    pub fn capacity_rows(&self) -> usize {
+        self.cap_rows
+    }
+
+    /// Cached key row for position `r`.
+    pub fn k_row(&self, r: usize) -> &[f32] {
+        &self.k[r * self.d..(r + 1) * self.d]
+    }
+
+    /// Cached value row for position `r`.
+    pub fn v_row(&self, r: usize) -> &[f32] {
+        &self.v[r * self.d..(r + 1) * self.d]
+    }
+
+    /// Geometric growth: double from [`INITIAL_CAP_ROWS`] until
+    /// `want_rows` fits. Never shrinks.
+    fn ensure(&mut self, want_rows: usize) {
+        if want_rows <= self.cap_rows {
+            return;
+        }
+        let mut cap = self.cap_rows.max(INITIAL_CAP_ROWS);
+        while cap < want_rows {
+            cap *= 2;
+        }
+        self.k.reserve_exact(cap * self.d - self.k.len());
+        self.v.reserve_exact(cap * self.d - self.v.len());
+        self.cap_rows = cap;
+    }
+
+    fn append(&mut self, k_rows: &Matrix, v_rows: &Matrix) {
+        self.ensure(self.rows + k_rows.rows);
+        self.k.extend_from_slice(&k_rows.data);
+        self.v.extend_from_slice(&v_rows.data);
+        self.rows += k_rows.rows;
+    }
+
+    /// Drop every cached position but keep the allocation (slides
+    /// re-prefill into the same capacity).
+    fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.rows = 0;
+    }
+}
+
+/// Per-request KV cache: one [`LayerKv`] per transformer layer plus a
+/// committed-position counter. See the module docs for the memory model.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    d: usize,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for a model with `n_layers` layers of width `d_model`.
+    /// No memory is reserved until the first append.
+    pub fn new(n_layers: usize, d_model: usize) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| LayerKv::new(d_model)).collect(),
+            d: d_model,
+            len: 0,
+        }
+    }
+
+    /// Number of transformer layers this cache covers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Model width (columns of every cached row).
+    pub fn d_model(&self) -> usize {
+        self.d
+    }
+
+    /// Positions fully cached across every layer (committed by
+    /// [`KvCache::commit`] at the end of a successful step).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no position is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when every layer holds exactly the committed position count.
+    /// An errored-out incremental step can leave a partial append; such a
+    /// cache must be [`KvCache::clear`]ed (re-prefilled), never resumed.
+    pub fn is_consistent(&self) -> bool {
+        self.layers.iter().all(|l| l.rows() == self.len)
+    }
+
+    /// Row capacity of the first layer (all layers grow in lockstep, so
+    /// this is the per-layer capacity the growth tests observe).
+    pub fn capacity_rows(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.capacity_rows())
+    }
+
+    /// Heap bytes currently reserved across all layers (K + V, f32).
+    pub fn reserved_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| 2 * l.capacity_rows() * self.d * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Read access to one layer's cached rows.
+    pub fn layer(&self, l: usize) -> &LayerKv {
+        &self.layers[l]
+    }
+
+    /// Append freshly projected K/V rows to `layer`. The interpreter
+    /// calls this once per layer per step, then [`KvCache::commit`]s.
+    pub fn append(&mut self, layer: usize, k_rows: &Matrix, v_rows: &Matrix) -> Result<()> {
+        anyhow::ensure!(
+            layer < self.layers.len(),
+            "KV append to layer {layer} of a {}-layer cache",
+            self.layers.len()
+        );
+        anyhow::ensure!(
+            k_rows.cols == self.d && v_rows.cols == self.d,
+            "KV rows of width {}/{} appended to a d_model={} cache",
+            k_rows.cols,
+            v_rows.cols,
+            self.d
+        );
+        anyhow::ensure!(
+            k_rows.rows == v_rows.rows,
+            "K/V row-count mismatch: {} vs {}",
+            k_rows.rows,
+            v_rows.rows
+        );
+        self.layers[layer].append(k_rows, v_rows);
+        Ok(())
+    }
+
+    /// Mark `n` new positions fully cached, verifying every layer
+    /// actually received them (a failed step that appended to only some
+    /// layers is detected here and at the next step's consistency check).
+    pub fn commit(&mut self, n: usize) -> Result<()> {
+        let want = self.len + n;
+        anyhow::ensure!(
+            self.layers.iter().all(|l| l.rows() == want),
+            "partial KV append: committing {want} positions but layer rows are {:?}",
+            self.layers.iter().map(|l| l.rows()).collect::<Vec<_>>()
+        );
+        self.len = want;
+        Ok(())
+    }
+
+    /// Invalidate every cached position, keeping the allocation. Used on
+    /// window slides and after failed steps.
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.clear();
+        }
+        self.len = 0;
+    }
+}
+
+/// Decode progress for one in-flight request: the sliding context
+/// window, the tokens generated so far, and (when the executor supports
+/// incremental decode) the request's [`KvCache`].
+///
+/// The coordinator's continuous-batching loop owns a *set* of these,
+/// admitting new states mid-flight and retiring finished ones; an
+/// executor's `step` advances each active state by exactly one token.
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    window: Vec<i32>,
+    generated: Vec<i32>,
+    max_new: usize,
+    seq_cap: usize,
+    cache: Option<KvCache>,
+}
+
+impl DecodeState {
+    /// Oracle-path state (no cache): every step recomputes the whole
+    /// window. `seq_cap` is the model context window; the window keeps
+    /// the `seq_cap` newest prefix tokens.
+    pub fn new(prefix: &[i32], max_new: usize, seq_cap: usize) -> Self {
+        let cap = seq_cap.max(1);
+        Self {
+            window: prefix[prefix.len().saturating_sub(cap)..].to_vec(),
+            generated: Vec::new(),
+            max_new,
+            seq_cap: cap,
+            cache: None,
+        }
+    }
+
+    /// Cached state: steps evaluate only the uncached window suffix.
+    pub fn with_cache(prefix: &[i32], max_new: usize, seq_cap: usize, cache: KvCache) -> Self {
+        let mut s = Self::new(prefix, max_new, seq_cap);
+        s.cache = Some(cache);
+        s
+    }
+
+    /// The current context window (the `seq_cap` newest tokens).
+    pub fn window(&self) -> &[i32] {
+        &self.window
+    }
+
+    /// Tokens generated so far, in order.
+    pub fn generated(&self) -> &[i32] {
+        &self.generated
+    }
+
+    /// This request's decode budget.
+    pub fn max_new(&self) -> usize {
+        self.max_new
+    }
+
+    /// True once `max_new` tokens have been generated (the request
+    /// retires from the live set).
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+
+    /// Whether this state carries a KV cache.
+    pub fn has_cache(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Window positions already covered by the cache (0 without one, or
+    /// right after a slide cleared it).
+    pub fn cached_rows(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.len())
+    }
+
+    /// Mutable cache access for the executor's decode step.
+    pub fn cache_mut(&mut self) -> Option<&mut KvCache> {
+        self.cache.as_mut()
+    }
+
+    /// The window suffix the next cached step must evaluate (tokens not
+    /// yet covered by the cache) plus the cached-position count — the
+    /// shared slicing contract of every cached executor step. Errors when
+    /// the cache claims more positions than the window holds (a stale
+    /// cache that somehow missed a slide invalidation).
+    pub fn uncached_suffix(&self) -> Result<(Vec<i32>, usize)> {
+        let cached = self.cached_rows();
+        anyhow::ensure!(
+            cached <= self.window.len(),
+            "KV cache covers {cached} positions but the window has {}",
+            self.window.len()
+        );
+        Ok((self.window[cached..].to_vec(), cached))
+    }
+
+    /// Record one generated token: appends to the window, sliding
+    /// (drop-front) at the context cap. A slide shifts every absolute
+    /// position — positional embeddings make all cached rows stale — so
+    /// it clears the KV cache; the next step re-prefills the shifted
+    /// window, which is exactly the recompute the oracle path performs
+    /// at the cap.
+    pub fn push_token(&mut self, tok: i32) {
+        self.generated.push(tok);
+        if self.window.len() >= self.seq_cap {
+            self.window.remove(0);
+            if let Some(c) = &mut self.cache {
+                c.clear();
+            }
+        }
+        self.window.push(tok);
+    }
+
+    /// Consume the state, yielding the generated tokens.
+    pub fn into_generated(self) -> Vec<i32> {
+        self.generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, d: usize, base: f32) -> Matrix {
+        Matrix::from_fn(n, d, |r, c| base + (r * d + c) as f32)
+    }
+
+    #[test]
+    fn append_commit_and_row_access() {
+        let mut c = KvCache::new(2, 4);
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty() && c.is_consistent());
+        for l in 0..2 {
+            c.append(l, &rows(3, 4, l as f32 * 100.0), &rows(3, 4, 500.0)).unwrap();
+        }
+        assert!(!c.is_consistent(), "uncommitted rows must read as inconsistent");
+        c.commit(3).unwrap();
+        assert_eq!(c.len(), 3);
+        assert!(c.is_consistent());
+        assert_eq!(c.layer(1).k_row(2), &[108.0, 109.0, 110.0, 111.0]);
+        assert_eq!(c.layer(0).v_row(0), &[500.0, 501.0, 502.0, 503.0]);
+    }
+
+    #[test]
+    fn capacity_grows_geometrically_and_survives_clear() {
+        let mut c = KvCache::new(1, 2);
+        assert_eq!(c.capacity_rows(), 0);
+        c.append(0, &rows(1, 2, 0.0), &rows(1, 2, 0.0)).unwrap();
+        c.commit(1).unwrap();
+        assert_eq!(c.capacity_rows(), INITIAL_CAP_ROWS);
+        // Cross the first growth boundary: 16 -> 32.
+        c.append(0, &rows(INITIAL_CAP_ROWS, 2, 1.0), &rows(INITIAL_CAP_ROWS, 2, 1.0)).unwrap();
+        c.commit(INITIAL_CAP_ROWS).unwrap();
+        assert_eq!(c.capacity_rows(), 2 * INITIAL_CAP_ROWS);
+        assert_eq!(c.len(), INITIAL_CAP_ROWS + 1);
+        // Values survive growth: row 0 is still the first append.
+        assert_eq!(c.layer(0).k_row(0), &[0.0, 1.0]);
+        let reserved = c.reserved_bytes();
+        assert_eq!(reserved, 2 * 2 * INITIAL_CAP_ROWS * 2 * 4);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.capacity_rows(), 2 * INITIAL_CAP_ROWS, "clear must keep capacity");
+        assert_eq!(c.reserved_bytes(), reserved);
+    }
+
+    #[test]
+    fn append_rejects_bad_shapes_and_commit_detects_partial() {
+        let mut c = KvCache::new(2, 4);
+        assert!(c.append(2, &rows(1, 4, 0.0), &rows(1, 4, 0.0)).is_err());
+        assert!(c.append(0, &rows(1, 3, 0.0), &rows(1, 3, 0.0)).is_err());
+        assert!(c.append(0, &rows(2, 4, 0.0), &rows(1, 4, 0.0)).is_err());
+        // Append to layer 0 only: commit must refuse.
+        c.append(0, &rows(1, 4, 0.0), &rows(1, 4, 0.0)).unwrap();
+        assert!(c.commit(1).is_err());
+        assert!(!c.is_consistent());
+        c.clear();
+        assert!(c.is_consistent());
+    }
+
+    #[test]
+    fn decode_state_window_and_slide_semantics() {
+        // Mirrors the serving decode contract: keep the newest `cap`
+        // prefix tokens, slide at the cap, clear the cache on slide.
+        let mut s = DecodeState::with_cache(&[1, 2, 3, 4, 5], 3, 4, KvCache::new(1, 2));
+        assert_eq!(s.window(), &[2, 3, 4, 5]);
+        assert!(!s.done());
+        assert_eq!(s.cached_rows(), 0);
+        // Simulate a prefill having cached the whole window.
+        {
+            let c = s.cache_mut().unwrap();
+            c.append(0, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+            c.commit(4).unwrap();
+        }
+        assert_eq!(s.cached_rows(), 4);
+        s.push_token(9); // at cap: slides and invalidates
+        assert_eq!(s.window(), &[3, 4, 5, 9]);
+        assert_eq!(s.generated(), &[9]);
+        assert_eq!(s.cached_rows(), 0, "slide must clear the cache");
+        s.push_token(8);
+        s.push_token(7);
+        assert!(s.done());
+        assert_eq!(s.into_generated(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn decode_state_short_prefix_grows_before_sliding() {
+        let mut s = DecodeState::new(&[1], 4, 4);
+        assert!(!s.has_cache());
+        s.push_token(2);
+        s.push_token(3);
+        s.push_token(4);
+        assert_eq!(s.window(), &[1, 2, 3, 4]);
+        s.push_token(5); // first slide only once the window is full
+        assert_eq!(s.window(), &[2, 3, 4, 5]);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn empty_prefix_and_zero_budget() {
+        let s = DecodeState::new(&[], 0, 8);
+        assert!(s.window().is_empty());
+        assert!(s.done(), "max_new = 0 is done before any step");
+    }
+}

@@ -10,6 +10,7 @@ pub mod artifacts;
 pub mod backend;
 pub mod client;
 pub mod kernels;
+pub mod kvcache;
 pub mod qkernels;
 pub mod sim;
 #[cfg(feature = "xla")]
@@ -18,6 +19,7 @@ pub mod xla;
 pub use artifacts::{ModelArtifacts, Param, Store};
 pub use backend::{argmax_slice, Backend, Buffer, Literal, LiteralData};
 pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
+pub use kvcache::{DecodeState, KvCache};
 pub use qkernels::{qmatmul, PackedModel, QCost};
 
 #[cfg(test)]

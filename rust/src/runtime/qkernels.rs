@@ -42,6 +42,7 @@ use crate::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
 use crate::util::parallel;
 
 use super::artifacts::ModelArtifacts;
+use super::kvcache::KvCache;
 use super::sim::{self, ModelSpec, ParamSource};
 
 /// Output rows accumulated together per micro-kernel pass (register
@@ -351,6 +352,29 @@ impl PackedModel {
         Ok(logits)
     }
 
+    /// KV-cached incremental forward step, natively on the packed layers:
+    /// evaluates only `tokens` (the window suffix at absolute positions
+    /// `pos0..`), attending against — and appending to — `cache`. Every
+    /// linear GEMM still routes through [`qmatmul`] + fused SpMV, so the
+    /// packed path gets incremental decode from the shared interpreter
+    /// for free (see [`sim::forward_incremental`]). Bit-identical to
+    /// [`PackedModel::forward`] over the whole window, pinned by
+    /// `tests/decode_equiv.rs`.
+    pub fn forward_incremental(
+        &self,
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Matrix> {
+        let src = PackedParams(self);
+        sim::forward_incremental(&self.spec, &src, tokens, pos0, cache, false)
+    }
+
+    /// Fresh, empty KV cache shaped for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.spec.n_layers, self.spec.d_model)
+    }
+
     /// Greedy (argmax) single-sequence decode on the packed layers —
     /// `max_new` tokens, sliding the context window at `seq_len` exactly
     /// like the serving decode loop (each step runs only the live
@@ -529,6 +553,48 @@ mod tests {
         let first = dup[2].clone();
         dup.push(first);
         assert!(pack(&dup).is_err());
+    }
+
+    #[test]
+    fn packed_incremental_matches_packed_full_bitexact() {
+        // The packed path inherits incremental decode from the shared
+        // interpreter: prefill + single-token steps must reproduce the
+        // full-window logits rows exactly.
+        let spec = ModelSpec::synthetic(11, 8, 1, 2, 16, 6);
+        let profile = MacProfile::cached();
+        let mut rng = Rng::seed_from_u64(321);
+        let mut params: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+        let mut grads = BTreeMap::new();
+        for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".scale") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.gen_normal() as f32 * 0.1).collect()
+            };
+            if spec.linear[i] {
+                grads.insert(
+                    name.clone(),
+                    Matrix::from_fn(shape[0], shape[1], |_, _| rng.gen_normal() as f32),
+                );
+            }
+            params.push((name.clone(), shape.clone(), data));
+        }
+        let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+        let pm =
+            PackedModel::pack_from(spec.clone(), views, Variant::Bal, 4, &grads, profile).unwrap();
+
+        let s = spec.seq_len;
+        let toks: Vec<i32> = (0..s as i32).map(|t| (t * 5 + 2) % spec.vocab as i32).collect();
+        let full = pm.forward(&toks, 1, s).unwrap();
+        let mut cache = pm.new_cache();
+        let pre = pm.forward_incremental(&toks[..2], 0, &mut cache).unwrap();
+        assert_eq!(pre.row(0), full.row(0));
+        assert_eq!(pre.row(1), full.row(1));
+        for i in 2..s {
+            let one = pm.forward_incremental(&toks[i..i + 1], i, &mut cache).unwrap();
+            assert_eq!(one.row(0), full.row(i), "packed incremental step {i}");
+        }
     }
 
     #[test]

@@ -23,10 +23,12 @@ use crate::util::{parallel, Json};
 
 use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
 use super::kernels::{self, dot, matmul_nt, matmul_tn};
+use super::kvcache::{KvCache, LayerKv};
 
 /// sqrt(2/pi) for the tanh GELU approximation (jax.nn.gelu default).
 const GELU_C: f32 = 0.797_884_56;
 
+/// The pure-Rust interpreter backend (see module docs).
 pub struct SimBackend;
 
 impl Backend for SimBackend {
@@ -38,6 +40,12 @@ impl Backend for SimBackend {
     /// (`split_model_inputs`), so any leading batch dim works — partial
     /// serving batches only pay for the rows they carry.
     fn supports_dynamic_batch(&self) -> bool {
+        true
+    }
+
+    /// The interpreter's `fwd` graphs decode incrementally against a
+    /// per-request [`KvCache`] (see [`forward_incremental`]).
+    fn supports_incremental_decode(&self) -> bool {
         true
     }
 
@@ -126,6 +134,32 @@ impl ExecutableImpl for SimGraph {
             .collect::<Result<_>>()?;
         self.run(&lits)
     }
+
+    /// Only the logits-producing `fwd` graph decodes incrementally (the
+    /// NLL/grad graphs are training-shaped; the standalone kernels have
+    /// no sequence axis at all).
+    fn supports_incremental_decode(&self) -> bool {
+        matches!(self, SimGraph::Model { kind: ModelKind::FwdFp, .. })
+    }
+
+    fn run_decode_step(
+        &self,
+        params: &[&Buffer],
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Literal> {
+        let SimGraph::Model { spec, kind: ModelKind::FwdFp } = self else {
+            bail!("incremental decode is only supported on fwd graphs");
+        };
+        let lits: Vec<&Literal> = params
+            .iter()
+            .map(|b| b.as_host())
+            .collect::<Result<_>>()?;
+        let p = Params::bind(spec, &lits)?;
+        let logits = forward_incremental(spec, &p, tokens, pos0, cache, false)?;
+        Literal::f32(&logits.data, &[logits.rows, logits.cols])
+    }
 }
 
 // ---------------------------------------------------------------- model spec
@@ -134,18 +168,28 @@ impl ExecutableImpl for SimGraph {
 /// the artifact `config.json` (the same contract `artifacts.rs` loads).
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Vocabulary size (logit width).
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention heads per layer (`d_model % n_heads == 0`).
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Context window (positional-embedding rows).
     pub seq_len: usize,
+    /// Parameter names in canonical (lowered-graph input) order.
     pub names: Vec<String>,
+    /// Parameter shapes, parallel to `names`.
     pub shapes: Vec<Vec<usize>>,
+    /// Which parameters are linear weights, parallel to `names`.
     pub linear: Vec<bool>,
 }
 
 impl ModelSpec {
+    /// Parse the spec from an artifact directory's `config.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let meta = Json::parse(
             &std::fs::read_to_string(dir.join("config.json"))
@@ -154,6 +198,7 @@ impl ModelSpec {
         Self::from_json(&meta)
     }
 
+    /// Parse the spec from an already-loaded `config.json` object.
     pub fn from_json(meta: &Json) -> Result<Self> {
         let cfg = meta.req("config")?;
         let mut names = Vec::new();
@@ -190,6 +235,7 @@ impl ModelSpec {
         Ok(spec)
     }
 
+    /// Per-head width (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -249,13 +295,15 @@ impl ModelSpec {
     }
 }
 
-/// Named parameter access for the shared forward pass.
+/// Named parameter access for the shared forward pass (full-prefix
+/// [`forward`] internals and incremental [`forward_incremental`] alike).
 ///
-/// Two implementations exist: [`Params`] (positional literals with dense
-/// f32 linear weights — the lowered-graph contract) and the packed
+/// Three implementations exist: `Params` (positional literals with dense
+/// f32 linear weights — the lowered-graph contract), [`DenseParams`] (an
+/// owned dense store for artifact-free tests and benches), and the packed
 /// quantized store in [`super::qkernels`], whose `linmul` runs the
 /// LUT-expanded codebook kernels + fused SpMV instead of a dense matmul.
-pub(crate) trait ParamSource {
+pub trait ParamSource {
     /// Flat data of a parameter by name (embeddings, norm scales, biases).
     fn vec1(&self, name: &str) -> Result<&[f32]>;
     /// Dense 2-D parameter by name (backward pass; dense linear weights).
@@ -264,6 +312,70 @@ pub(crate) trait ParamSource {
     /// sources override it to execute natively on the quantized form.
     fn linmul(&self, x: &Matrix, name: &str) -> Result<Matrix> {
         Ok(kernels::matmul(x, &self.mat(name)?))
+    }
+}
+
+/// Owned dense parameter store implementing [`ParamSource`]: drives the
+/// shared interpreter (full-prefix or incremental) without artifact files
+/// or positional literals. Used by the differential decode suites
+/// (`tests/decode_equiv.rs`) and `benches/l5_decode.rs` as the dense
+/// reference path.
+pub struct DenseParams {
+    map: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl DenseParams {
+    /// Build from `(name, shape, data)` triples; every parameter of
+    /// `spec` must appear exactly once with its canonical shape.
+    pub fn from_params<'a>(
+        spec: &ModelSpec,
+        params: impl IntoIterator<Item = (&'a str, &'a [usize], &'a [f32])>,
+    ) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (name, shape, data) in params {
+            let i = spec
+                .names
+                .iter()
+                .position(|n| n == name)
+                .with_context(|| format!("parameter {name} not in model spec"))?;
+            anyhow::ensure!(
+                shape == spec.shapes[i].as_slice(),
+                "parameter {name}: shape {shape:?} != spec {:?}",
+                spec.shapes[i]
+            );
+            anyhow::ensure!(
+                data.len() == shape.iter().product::<usize>(),
+                "parameter {name}: data length {} != shape {shape:?}",
+                data.len()
+            );
+            let prev = map.insert(name.to_string(), (shape.to_vec(), data.to_vec()));
+            anyhow::ensure!(prev.is_none(), "duplicate parameter {name}");
+        }
+        anyhow::ensure!(
+            map.len() == spec.names.len(),
+            "expected {} parameters, got {}",
+            spec.names.len(),
+            map.len()
+        );
+        Ok(Self { map })
+    }
+
+    fn get(&self, name: &str) -> Result<&(Vec<usize>, Vec<f32>)> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))
+    }
+}
+
+impl ParamSource for DenseParams {
+    fn vec1(&self, name: &str) -> Result<&[f32]> {
+        Ok(&self.get(name)?.1)
+    }
+
+    fn mat(&self, name: &str) -> Result<Matrix> {
+        let (shape, data) = self.get(name)?;
+        anyhow::ensure!(shape.len() == 2, "parameter {name} is not 2-D: {shape:?}");
+        Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
     }
 }
 
@@ -704,6 +816,198 @@ pub(crate) fn forward(
     Ok((logits, caches, FinalCache { xhat_f, istd_f, a_xf }))
 }
 
+/// Full-prefix logits for a `(b, s)` token batch through any parameter
+/// source — the recompute oracle the KV-cached incremental path is pinned
+/// against (`tests/decode_equiv.rs`).
+pub fn forward_logits(
+    spec: &ModelSpec,
+    p: &dyn ParamSource,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+) -> Result<Matrix> {
+    let (logits, _, _) = forward(spec, p, tokens, b, s, false)?;
+    Ok(logits)
+}
+
+// -------------------------------------------------------- incremental decode
+
+/// KV-cached incremental forward pass: evaluates only `tokens` (the
+/// window suffix at absolute positions `pos0..pos0 + tokens.len()`),
+/// appending each layer's new K/V rows to `cache` and attending every new
+/// query against the cached prefix. With `pos0 = 0` and an empty cache
+/// this *is* the prefill pass.
+///
+/// Bit-identical to running [`forward_logits`] over the whole window and
+/// reading the same rows (pinned by `tests/decode_equiv.rs`): every
+/// per-position computation of the full pass is row-local — embedding,
+/// layernorm, the blocked/packed GEMMs (ascending-`k` summation order,
+/// independent of the row count), GELU, A8 fake-quant — except causal
+/// attention, which `attention_cached` replays with the exact summation
+/// order of the full pass's attention kernel. Works for every
+/// [`ParamSource`], so the packed `qmatmul` path gets incremental decode
+/// for free.
+///
+/// `cache` must hold exactly `pos0` committed positions (consistent
+/// across layers) and `pos0 + tokens.len()` must stay within the model's
+/// context window — window slides shift every absolute position and must
+/// clear the cache first (see `runtime::kvcache`). Returns the
+/// `(tokens.len(), vocab)` logits rows for the new positions. On error
+/// the cache may hold a partial append; clear it before reuse (the
+/// consistency check here refuses stale caches).
+pub fn forward_incremental(
+    spec: &ModelSpec,
+    p: &dyn ParamSource,
+    tokens: &[i32],
+    pos0: usize,
+    cache: &mut KvCache,
+    a8: bool,
+) -> Result<Matrix> {
+    let d = spec.d_model;
+    let n = tokens.len();
+    anyhow::ensure!(n >= 1, "incremental step needs at least one token");
+    anyhow::ensure!(
+        pos0 + n <= spec.seq_len,
+        "window end {} exceeds the model's context {}",
+        pos0 + n,
+        spec.seq_len
+    );
+    anyhow::ensure!(
+        cache.n_layers() == spec.n_layers && cache.d_model() == d,
+        "KV cache shape ({} layers, d {}) does not match the model ({}, {})",
+        cache.n_layers(),
+        cache.d_model(),
+        spec.n_layers,
+        d
+    );
+    anyhow::ensure!(
+        cache.len() == pos0 && cache.is_consistent(),
+        "KV cache holds {} committed positions (consistent: {}), expected {pos0} — \
+         clear() and re-prefill after a slide or a failed step",
+        cache.len(),
+        cache.is_consistent()
+    );
+    let act = |m: &Matrix| if a8 { fake_quant_rows(m) } else { m.clone() };
+
+    // Embedding + positional embedding for the new rows only.
+    let embed = p.vec1("embed")?;
+    let pos = p.vec1("pos_embed")?;
+    let mut x = Matrix::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0 && (t as usize) < spec.vocab,
+            "token {t} out of vocab range {}",
+            spec.vocab
+        );
+        let erow = &embed[t as usize * d..(t as usize + 1) * d];
+        let prow = &pos[(pos0 + i) * d..(pos0 + i + 1) * d];
+        let xrow = x.row_mut(i);
+        for c in 0..d {
+            xrow[c] = erow[c] + prow[c];
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let pre = format!("layer{l}.");
+        let (hn1, _, _) = layernorm(
+            &x,
+            p.vec1(&format!("{pre}ln1.scale"))?,
+            p.vec1(&format!("{pre}ln1.bias"))?,
+        );
+        let a_in1 = act(&hn1);
+        let q = p.linmul(&a_in1, &format!("{pre}attn.wq"))?;
+        let k = p.linmul(&a_in1, &format!("{pre}attn.wk"))?;
+        let v = p.linmul(&a_in1, &format!("{pre}attn.wv"))?;
+        cache.append(l, &k, &v)?;
+        let ao = attention_cached(pos0, n, spec.n_heads, spec.head_dim(), &q, cache.layer(l));
+        let a_ao = act(&ao);
+        add_into(&mut x, &p.linmul(&a_ao, &format!("{pre}attn.wo"))?);
+
+        let (hn2, _, _) = layernorm(
+            &x,
+            p.vec1(&format!("{pre}ln2.scale"))?,
+            p.vec1(&format!("{pre}ln2.bias"))?,
+        );
+        let a_hn2 = act(&hn2);
+        let b1 = p.vec1(&format!("{pre}mlp.b1"))?;
+        let mut h1 = p.linmul(&a_hn2, &format!("{pre}mlp.w1"))?;
+        for r in 0..h1.rows {
+            let row = h1.row_mut(r);
+            for (c, hv) in row.iter_mut().enumerate() {
+                *hv = gelu(*hv + b1[c]);
+            }
+        }
+        let a_h1 = act(&h1);
+        let b2 = p.vec1(&format!("{pre}mlp.b2"))?;
+        let mut mlp_out = p.linmul(&a_h1, &format!("{pre}mlp.w2"))?;
+        for r in 0..mlp_out.rows {
+            let row = mlp_out.row_mut(r);
+            for (c, mv) in row.iter_mut().enumerate() {
+                *mv += b2[c];
+            }
+        }
+        add_into(&mut x, &mlp_out);
+    }
+    cache.commit(n)?;
+
+    let (xf, _, _) = layernorm(&x, p.vec1("ln_f.scale")?, p.vec1("ln_f.bias")?);
+    let a_xf = act(&xf);
+    p.linmul(&a_xf, "head")
+}
+
+/// Causal attention for `n` new query rows at absolute positions
+/// `pos0..pos0 + n`, against a layer's K/V cache (which already holds the
+/// new rows). Mirrors [`attention`]'s numerics exactly — f64-scaled f32
+/// logits, max-subtracted exp with an f64 softmax denominator, f32 weight
+/// rounding, keys ascending — so cached decode stays bit-identical to the
+/// full-prefix pass.
+fn attention_cached(
+    pos0: usize,
+    n: usize,
+    heads: usize,
+    hd: usize,
+    q: &Matrix,
+    kv: &LayerKv,
+) -> Matrix {
+    let d = heads * hd;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut ao = Matrix::zeros(n, d);
+    let mut weights: Vec<f32> = Vec::new();
+    for h in 0..heads {
+        let c0 = h * hd;
+        for qi in 0..n {
+            let span = pos0 + qi + 1; // keys 0..=pos0+qi
+            let qrow = &q.row(qi)[c0..c0 + hd];
+            weights.clear();
+            weights.resize(span, 0.0);
+            let mut maxv = f32::NEG_INFINITY;
+            for (ki, l) in weights.iter_mut().enumerate() {
+                let krow = &kv.k_row(ki)[c0..c0 + hd];
+                *l = (dot(qrow, krow) as f64 * scale) as f32;
+                maxv = maxv.max(*l);
+            }
+            let mut denom = 0.0f64;
+            for l in weights.iter_mut() {
+                let e = ((*l - maxv) as f64).exp();
+                *l = e as f32;
+                denom += e;
+            }
+            for l in weights.iter_mut() {
+                *l = (*l as f64 / denom) as f32;
+            }
+            let orow = &mut ao.row_mut(qi)[c0..c0 + hd];
+            for (j, ov) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (ki, &aw) in weights.iter().enumerate() {
+                    acc += aw * kv.v_row(ki)[c0 + j];
+                }
+                *ov = acc;
+            }
+        }
+    }
+    ao
+}
+
 /// Mean next-token NLL and ∂loss/∂logits = (softmax − onehot)/n.
 fn nll_and_dlogits(logits: &Matrix, targets: &[i32]) -> Result<(f32, Matrix)> {
     let (n, v) = (logits.rows, logits.cols);
@@ -1142,11 +1446,94 @@ mod tests {
     }
 
     #[test]
-    fn backend_load_and_run_via_files() {
-        // End-to-end through the Backend trait: a real artifact directory
-        // with config.json + (empty) hlo.txt markers.
+    fn incremental_decode_matches_full_forward_bitexact() {
+        // Prefill a 3-token prefix, then step the remaining positions one
+        // token at a time: every logits row must be BIT-identical to the
+        // full-prefix pass (the in-crate anchor behind the external
+        // differential suite in tests/decode_equiv.rs).
         let spec = tiny_spec();
-        let dir = std::env::temp_dir().join(format!("halo_sim_test_{}", std::process::id()));
+        let inputs = tiny_inputs(&spec, 7);
+        let all = refs(&inputs);
+        let p = Params::bind(&spec, &all[..spec.names.len()]).unwrap();
+        let s = spec.seq_len;
+        let mut rng = Rng::seed_from_u64(8);
+        let toks: Vec<i32> = (0..s).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+        let (full, _, _) = forward(&spec, &p, &toks, 1, s, false).unwrap();
+
+        let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+        let pre = forward_incremental(&spec, &p, &toks[..3], 0, &mut cache, false).unwrap();
+        assert_eq!((pre.rows, pre.cols), (3, spec.vocab));
+        for r in 0..3 {
+            assert_eq!(pre.row(r), full.row(r), "prefill row {r}");
+        }
+        for i in 3..s {
+            let one =
+                forward_incremental(&spec, &p, &toks[i..i + 1], i, &mut cache, false).unwrap();
+            assert_eq!(one.rows, 1);
+            assert_eq!(one.row(0), full.row(i), "incremental step at position {i}");
+        }
+        assert_eq!(cache.len(), s);
+        assert!(cache.is_consistent());
+    }
+
+    #[test]
+    fn incremental_decode_validates_cache_and_window() {
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 9);
+        let all = refs(&inputs);
+        let p = Params::bind(&spec, &all[..spec.names.len()]).unwrap();
+        let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+        // pos0 must equal the committed cache length.
+        assert!(forward_incremental(&spec, &p, &[1], 2, &mut cache, false).is_err());
+        // The window end must stay inside the model context.
+        let long: Vec<i32> = vec![1; spec.seq_len + 1];
+        assert!(forward_incremental(&spec, &p, &long, 0, &mut cache, false).is_err());
+        // Empty steps are rejected.
+        assert!(forward_incremental(&spec, &p, &[], 0, &mut cache, false).is_err());
+        // A mismatched cache shape is rejected.
+        let mut wrong = KvCache::new(spec.n_layers + 1, spec.d_model);
+        assert!(forward_incremental(&spec, &p, &[1], 0, &mut wrong, false).is_err());
+        // And the happy path still works afterwards.
+        assert!(forward_incremental(&spec, &p, &[1, 2], 0, &mut cache, false).is_ok());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn dense_params_matches_literal_params() {
+        // DenseParams (owned store) and Params (positional literals) are
+        // the same dense semantics: identical logits, full and cached.
+        let spec = tiny_spec();
+        let inputs = tiny_inputs(&spec, 10);
+        let all = refs(&inputs);
+        let p = Params::bind(&spec, &all[..spec.names.len()]).unwrap();
+        let triples: Vec<(String, Vec<usize>, Vec<f32>)> = spec
+            .names
+            .iter()
+            .zip(&spec.shapes)
+            .enumerate()
+            .map(|(i, (n, sh))| (n.clone(), sh.clone(), inputs[i].as_f32().unwrap().to_vec()))
+            .collect();
+        let dp = DenseParams::from_params(
+            &spec,
+            triples.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+        )
+        .unwrap();
+        let toks: Vec<i32> = (0..spec.seq_len as i32).map(|t| t % spec.vocab as i32).collect();
+        let a = forward_logits(&spec, &p, &toks, 1, spec.seq_len).unwrap();
+        let b = forward_logits(&spec, &dp, &toks, 1, spec.seq_len).unwrap();
+        assert_eq!(a.data, b.data);
+        // Missing / duplicate parameters are rejected at construction.
+        assert!(DenseParams::from_params(
+            &spec,
+            triples.iter().take(2).map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+        )
+        .is_err());
+    }
+
+    /// Write a `config.json` for `spec` into a fresh temp dir (the
+    /// artifact contract the backend `load` path reads).
+    fn write_config_dir(spec: &ModelSpec, tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("halo_sim_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let mut params_j = Vec::new();
         for (i, name) in spec.names.iter().enumerate() {
@@ -1168,6 +1555,15 @@ mod tests {
         let mut meta = Json::obj();
         meta.set("config", cfg).set("params", Json::Arr(params_j));
         std::fs::write(dir.join("config.json"), meta.to_string_pretty()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn backend_load_and_run_via_files() {
+        // End-to-end through the Backend trait: a real artifact directory
+        // with config.json + (empty) hlo.txt markers.
+        let spec = tiny_spec();
+        let dir = write_config_dir(&spec, "nll");
         std::fs::write(dir.join("nll_fp.hlo.txt"), "(sim backend marker)").unwrap();
 
         let backend = SimBackend;
@@ -1180,6 +1576,53 @@ mod tests {
         assert_eq!(got, want);
         // Missing artifacts must error (the skip-cleanly contract).
         assert!(backend.load(&dir.join("grad.hlo.txt")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_decode_step_matches_full_run() {
+        // The Backend/Executable surface for KV-cached decode: load a fwd
+        // graph, run one full pass, then replay the same window through
+        // run_decode_step — identical logits rows.
+        let spec = tiny_spec();
+        let dir = write_config_dir(&spec, "fwd");
+        std::fs::write(dir.join("fwd_fp.hlo.txt"), "(sim backend marker)").unwrap();
+        let backend = SimBackend;
+        assert!(backend.supports_incremental_decode());
+        let exe = backend.load(&dir.join("fwd_fp.hlo.txt")).unwrap();
+        assert!(exe.supports_incremental_decode());
+
+        let mut inputs = tiny_inputs(&spec, 11);
+        inputs.pop(); // drop the (b, s+1) token literal; fwd takes (b, s)
+        let s = spec.seq_len;
+        let toks: Vec<i32> = (0..s as i32).map(|t| (t * 3 + 1) % spec.vocab as i32).collect();
+        let mut full_inputs = inputs.clone();
+        full_inputs.push(Literal::i32(&toks, &[1, s]).unwrap());
+        let full = exe.run(&refs(&full_inputs)).unwrap();
+        let full_logits = full[0].as_f32().unwrap();
+
+        let bufs: Vec<Buffer> = inputs.iter().map(|l| Buffer::Host(l.clone())).collect();
+        let brefs: Vec<&Buffer> = bufs.iter().collect();
+        let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+        let pre = exe.run_decode_step(&brefs, &toks[..s - 1], 0, &mut cache).unwrap();
+        assert_eq!(pre.dims(), &[s - 1, spec.vocab]);
+        let last = exe.run_decode_step(&brefs, &toks[s - 1..], s - 1, &mut cache).unwrap();
+        assert_eq!(last.dims(), &[1, spec.vocab]);
+        let got: Vec<f32> = pre
+            .as_f32()
+            .unwrap()
+            .iter()
+            .chain(last.as_f32().unwrap())
+            .copied()
+            .collect();
+        assert_eq!(got.as_slice(), full_logits, "cached vs full logits");
+
+        // The NLL graph must refuse incremental decode.
+        std::fs::write(dir.join("nll_fp.hlo.txt"), "(sim backend marker)").unwrap();
+        let nll = backend.load(&dir.join("nll_fp.hlo.txt")).unwrap();
+        assert!(!nll.supports_incremental_decode());
+        let mut c2 = KvCache::new(spec.n_layers, spec.d_model);
+        assert!(nll.run_decode_step(&brefs, &[1], 0, &mut c2).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

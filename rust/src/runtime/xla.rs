@@ -15,11 +15,13 @@ use anyhow::{Context, Result};
 
 use super::backend::{Backend, Buffer, ExecutableImpl, Literal, LiteralData};
 
+/// The PJRT/XLA runtime backend (`--features xla`).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
 }
 
 impl PjrtBackend {
+    /// Create a CPU PJRT client (errors on the in-tree API stub).
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client })

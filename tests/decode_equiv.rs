@@ -1,0 +1,389 @@
+//! Differential decode-equivalence suite (PR 5): KV-cached incremental
+//! decode must produce BIT-IDENTICAL greedy token chains to full-prefix
+//! recompute — for the dense parameter path and all three packed HALO
+//! variants, through ragged continuous-batching joins/retires, across a
+//! KV-cache growth boundary, and past the context-window slide.
+//!
+//! These tests pin the serving fast path to the oracle: any numerical
+//! drift between `forward_incremental` and the full `forward` (summation
+//! order, softmax precision, position handling) breaks an exact token
+//! comparison here, not a tolerance.
+//!
+//! No artifacts needed: models are synthesized in-memory from a tiny
+//! `ModelSpec`, exactly like `tests/qexec.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use halo::coordinator::{
+    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, SubmitSpec,
+};
+use halo::mac::MacProfile;
+use halo::quant::{Matrix, Variant};
+use halo::runtime::kvcache::INITIAL_CAP_ROWS;
+use halo::runtime::sim::{forward_incremental, forward_logits, DenseParams, ModelSpec, ParamSource};
+use halo::runtime::{argmax_slice, DecodeState, KvCache, PackedModel};
+use halo::util::Rng;
+
+/// Tiny 2-layer model whose context window (24) exceeds the KV cache's
+/// initial capacity (16), so in-window decode crosses a growth boundary.
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::synthetic(13, 8, 2, 2, 16, 24)
+}
+
+type ParamList = Vec<(String, Vec<usize>, Vec<f32>)>;
+
+/// Synthesize parameters + per-layer gradients for `spec`.
+fn tiny_params(spec: &ModelSpec, seed: u64) -> (ParamList, BTreeMap<String, Matrix>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut params = Vec::new();
+    let mut grads = BTreeMap::new();
+    for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; n]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; n]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..n).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        if spec.linear[i] {
+            let g = Matrix::from_fn(shape[0], shape[1], |r, _| {
+                let base = rng.gen_normal() as f32;
+                if r < shape[0] / 2 {
+                    base * 5.0
+                } else {
+                    base * 0.1
+                }
+            });
+            grads.insert(name.clone(), g);
+        }
+        params.push((name.clone(), shape.clone(), data));
+    }
+    (params, grads)
+}
+
+fn dense_source(spec: &ModelSpec, params: &ParamList) -> DenseParams {
+    DenseParams::from_params(
+        spec,
+        params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+    )
+    .unwrap()
+}
+
+fn pack_tiny(seed: u64, variant: Variant) -> (ModelSpec, PackedModel) {
+    let spec = tiny_spec();
+    let (params, grads) = tiny_params(&spec, seed);
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let profile = MacProfile::cached();
+    let pm = PackedModel::pack_from(spec.clone(), views, variant, 4, &grads, profile).unwrap();
+    (spec, pm)
+}
+
+fn random_prefix(rng: &mut Rng, vocab: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.gen_usize(vocab) as i32).collect()
+}
+
+/// The recompute oracle: greedy decode where every step re-runs the whole
+/// window through the full-prefix forward pass (window slides at the
+/// context cap, identical to the serving decode contract).
+fn greedy_recompute(
+    spec: &ModelSpec,
+    p: &dyn ParamSource,
+    prefix: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let cap = spec.seq_len;
+    let mut window: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let tok = if window.is_empty() {
+            let logits = forward_logits(spec, p, &[0], 1, 1).unwrap();
+            argmax_slice(logits.row(0)) as i32
+        } else {
+            let n = window.len();
+            let logits = forward_logits(spec, p, &window, 1, n).unwrap();
+            argmax_slice(logits.row(n - 1)) as i32
+        };
+        out.push(tok);
+        if window.len() >= cap {
+            window.remove(0);
+        }
+        window.push(tok);
+    }
+    out
+}
+
+/// The KV-cached fast path: greedy decode through `forward_incremental`,
+/// evaluating only the uncached window suffix each step and re-prefilling
+/// after a slide (the `DecodeState` contract, spelled out so the test is
+/// an independent mirror of the executor logic). Also returns the peak
+/// per-layer cache capacity observed, so growth tests can assert a
+/// boundary was actually crossed.
+fn greedy_cached(
+    spec: &ModelSpec,
+    p: &dyn ParamSource,
+    prefix: &[i32],
+    max_new: usize,
+) -> (Vec<i32>, usize) {
+    let cap = spec.seq_len;
+    let mut window: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+    let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+    let mut out = Vec::new();
+    let mut peak_cap = 0usize;
+    for _ in 0..max_new {
+        let tok = if window.is_empty() {
+            let mut scratch = KvCache::new(spec.n_layers, spec.d_model);
+            let logits = forward_incremental(spec, p, &[0], 0, &mut scratch, false).unwrap();
+            argmax_slice(logits.row(0)) as i32
+        } else {
+            let cached = cache.len();
+            let new = window[cached..].to_vec();
+            let logits = forward_incremental(spec, p, &new, cached, &mut cache, false).unwrap();
+            argmax_slice(logits.row(logits.rows - 1)) as i32
+        };
+        peak_cap = peak_cap.max(cache.capacity_rows());
+        out.push(tok);
+        if window.len() >= cap {
+            window.remove(0);
+            cache.clear(); // the slide shifts every position
+        }
+        window.push(tok);
+    }
+    (out, peak_cap)
+}
+
+// ------------------------------------------------------------- dense path
+
+#[test]
+fn dense_cached_decode_is_bit_identical_to_recompute() {
+    let spec = tiny_spec();
+    let (params, _) = tiny_params(&spec, 40);
+    let p = dense_source(&spec, &params);
+    let mut rng = Rng::seed_from_u64(41);
+    // Prefix lengths: empty, short, across the cache-growth boundary
+    // (20 > INITIAL_CAP_ROWS), at the context cap, and beyond it.
+    for plen in [0usize, 1, 5, 20, 24, 30] {
+        let prefix = random_prefix(&mut rng, spec.vocab, plen);
+        let want = greedy_recompute(&spec, &p, &prefix, 6);
+        let (got, _) = greedy_cached(&spec, &p, &prefix, 6);
+        assert_eq!(got, want, "dense decode diverged for prefix length {plen}");
+    }
+}
+
+#[test]
+fn dense_decode_across_cache_growth_boundary() {
+    // A 20-token prefix prefills past the cache's initial 16-row
+    // capacity: the growth (16 -> 32) must be observed AND change nothing.
+    let spec = tiny_spec();
+    let (params, _) = tiny_params(&spec, 42);
+    let p = dense_source(&spec, &params);
+    let mut rng = Rng::seed_from_u64(43);
+    let prefix = random_prefix(&mut rng, spec.vocab, 20);
+    let (got, peak_cap) = greedy_cached(&spec, &p, &prefix, 3);
+    assert!(
+        peak_cap > INITIAL_CAP_ROWS,
+        "prefix 20 never crossed the {INITIAL_CAP_ROWS}-row boundary (peak {peak_cap})"
+    );
+    assert_eq!(got, greedy_recompute(&spec, &p, &prefix, 3));
+
+    // And the exact-boundary case: prefill 16, then step across it.
+    let prefix16 = random_prefix(&mut rng, spec.vocab, INITIAL_CAP_ROWS);
+    let (got16, _) = greedy_cached(&spec, &p, &prefix16, 4);
+    assert_eq!(got16, greedy_recompute(&spec, &p, &prefix16, 4));
+}
+
+#[test]
+fn dense_decode_past_the_context_slide() {
+    // Prefix at the cap + enough new tokens that the window slides every
+    // step: the cached path re-prefills after each slide and must still
+    // match the recompute oracle token for token.
+    let spec = tiny_spec();
+    let (params, _) = tiny_params(&spec, 44);
+    let p = dense_source(&spec, &params);
+    let mut rng = Rng::seed_from_u64(45);
+    let prefix = random_prefix(&mut rng, spec.vocab, spec.seq_len);
+    let want = greedy_recompute(&spec, &p, &prefix, 8);
+    let (got, _) = greedy_cached(&spec, &p, &prefix, 8);
+    assert_eq!(got, want);
+}
+
+// ------------------------------------------------------------ packed paths
+
+#[test]
+fn packed_cached_decode_matches_oracle_all_variants() {
+    // All three HALO variants, executor-level: the KV-cached QuantExecutor
+    // vs the same executor with the cache disabled (the recompute oracle),
+    // over a ragged batch. Chains must be identical token for token.
+    for (vi, variant) in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt]
+        .into_iter()
+        .enumerate()
+    {
+        let (spec, pm) = pack_tiny(50 + vi as u64, variant);
+        let pm = Arc::new(pm);
+        let mut rng = Rng::seed_from_u64(60 + vi as u64);
+        let prefixes: Vec<Vec<i32>> = [0usize, 3, 20, 24, 30]
+            .iter()
+            .map(|&l| random_prefix(&mut rng, spec.vocab, l))
+            .collect();
+        let max_new = vec![5usize, 1, 4, 2, 6];
+
+        let mut cached = QuantExecutor::new(pm.clone(), prefixes.len());
+        let mut oracle = QuantExecutor::new(pm.clone(), prefixes.len()).with_kv_cache(false);
+        let got = cached.generate(&prefixes, &max_new).unwrap();
+        let want = oracle.generate(&prefixes, &max_new).unwrap();
+        assert_eq!(got, want, "variant {} cached decode diverged", variant.name());
+        // And against the pre-PR-5 packed greedy oracle, per request.
+        for (p, (&m, chain)) in prefixes.iter().zip(max_new.iter().zip(&got)) {
+            if !p.is_empty() {
+                assert_eq!(
+                    chain,
+                    &pm.decode_greedy(p, m).unwrap(),
+                    "variant {} diverged from decode_greedy",
+                    variant.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn continuous_batching_join_and_retire_preserve_chains() {
+    // Drive begin/step directly with mid-flight joins and retires: two
+    // requests decode, a third joins two steps in, finished requests
+    // retire immediately. Every chain must equal the solo oracle — the
+    // continuous batch never cross-pollutes requests.
+    let (spec, pm) = pack_tiny(70, Variant::Bal);
+    let pm = Arc::new(pm);
+    let mut rng = Rng::seed_from_u64(71);
+    let p1 = random_prefix(&mut rng, spec.vocab, 7);
+    let p2 = random_prefix(&mut rng, spec.vocab, 19);
+    let p3 = random_prefix(&mut rng, spec.vocab, 2);
+
+    let mut exec = QuantExecutor::new(pm.clone(), 4);
+    let mut s1 = exec.begin(&p1, 5).unwrap();
+    let mut s2 = exec.begin(&p2, 2).unwrap();
+    // Two steps with requests 1+2 live.
+    for _ in 0..2 {
+        let mut active: Vec<&mut DecodeState> = vec![&mut s1, &mut s2];
+        exec.step(&mut active).unwrap();
+    }
+    assert!(s2.done(), "request 2 (max_new 2) retires after 2 steps");
+    // Request 3 joins mid-flight; request 2 has retired.
+    let mut s3 = exec.begin(&p3, 3).unwrap();
+    while !(s1.done() && s3.done()) {
+        let mut active: Vec<&mut DecodeState> = Vec::new();
+        if !s1.done() {
+            active.push(&mut s1);
+        }
+        if !s3.done() {
+            active.push(&mut s3);
+        }
+        exec.step(&mut active).unwrap();
+    }
+    assert_eq!(s1.into_generated(), pm.decode_greedy(&p1, 5).unwrap());
+    assert_eq!(s2.into_generated(), pm.decode_greedy(&p2, 2).unwrap());
+    assert_eq!(s3.into_generated(), pm.decode_greedy(&p3, 3).unwrap());
+}
+
+#[test]
+fn coordinator_staggered_submissions_decode_correctly() {
+    // End to end through the sharded coordinator: requests submitted in
+    // waves (so later ones join mid-decode) all come back with chains
+    // identical to the solo packed oracle.
+    let (spec, pm) = pack_tiny(80, Variant::Bal);
+    let pm = Arc::new(pm);
+    let pm2 = pm.clone();
+    let coord = Coordinator::start_sharded(
+        CoordinatorConfig {
+            batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(2) },
+            shards: 2,
+            ..CoordinatorConfig::default()
+        },
+        move |_shard| {
+            Ok(Box::new(QuantExecutor::new(pm2.clone(), 4)) as Box<dyn BatchExecutor>)
+        },
+    );
+    let mut rng = Rng::seed_from_u64(81);
+    let mut rxs = Vec::new();
+    let mut want = Vec::new();
+    for wave in 0..3 {
+        for i in 0..4 {
+            let prefix = random_prefix(&mut rng, spec.vocab, 1 + (wave * 4 + i) % 22);
+            let max_new = 1 + (i + wave) % 4;
+            want.push(pm.decode_greedy(&prefix, max_new).unwrap());
+            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix, max_new)));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for (rx, want) in rxs.into_iter().zip(want) {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(!r.shed);
+        assert_eq!(r.tokens, want, "staggered coordinator decode diverged");
+    }
+    coord.shutdown().unwrap();
+}
+
+// --------------------------------------------- work accounting (no padding)
+
+#[test]
+fn ragged_batch_work_stays_within_ideal() {
+    // The pre-PR-5 decode padded every live request to the batch's
+    // longest prefix: a ragged batch paid batch x longest work per step.
+    // With KV-cached continuous batching, total positions evaluated must
+    // stay within 1.1x of the sum of per-request ideal work
+    // (prefill + one position per extra token).
+    let (spec, pm) = pack_tiny(90, Variant::Bal);
+    let pm = Arc::new(pm);
+    let prefixes: Vec<Vec<i32>> = [1usize, 5, 9, 14]
+        .iter()
+        .map(|&l| (0..l).map(|t| (t % spec.vocab) as i32).collect())
+        .collect();
+    let max_new = vec![6usize, 4, 2, 1];
+    // No slides: longest window stays within the context cap.
+    assert!(14 + 6 <= spec.seq_len);
+
+    let mut exec = QuantExecutor::new(pm, prefixes.len());
+    exec.generate(&prefixes, &max_new).unwrap();
+
+    let ideal: u64 = prefixes
+        .iter()
+        .zip(&max_new)
+        .map(|(p, &m)| (p.len() + m - 1) as u64)
+        .sum();
+    let work = exec.work_positions();
+    assert!(work >= ideal, "work {work} below ideal {ideal}? counter is broken");
+    assert!(
+        (work as f64) <= 1.1 * ideal as f64,
+        "ragged batch executed {work} positions vs ideal {ideal} — longest-prefix blowup is back"
+    );
+
+    // The padded oracle pays strictly more on the same workload.
+    let (_, pm_oracle) = pack_tiny(90, Variant::Bal);
+    let mut oracle = QuantExecutor::new(Arc::new(pm_oracle), prefixes.len()).with_kv_cache(false);
+    oracle.generate(&prefixes, &max_new).unwrap();
+    assert!(
+        oracle.work_positions() > work,
+        "recompute oracle ({}) should exceed cached work ({work})",
+        oracle.work_positions()
+    );
+}
+
+// ------------------------------------------------------- dense + packed mix
+
+#[test]
+fn packed_forward_incremental_prefill_matches_packed_forward() {
+    // Direct PackedModel surface: prefill logits rows == full forward
+    // rows, bit for bit, for every variant.
+    for variant in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt] {
+        let (spec, pm) = pack_tiny(95, variant);
+        let toks: Vec<i32> = (0..spec.seq_len as i32).map(|t| t % spec.vocab as i32).collect();
+        let full = pm.forward(&toks, 1, spec.seq_len).unwrap();
+        let mut cache = pm.new_cache();
+        let inc = pm.forward_incremental(&toks, 0, &mut cache).unwrap();
+        assert_eq!(inc.data, full.data, "{} prefill diverged", variant.name());
+        assert_eq!(cache.len(), spec.seq_len);
+    }
+}

@@ -3,14 +3,20 @@
 //! paper's correctness argument rests on (§III-C3: scheduling transparency;
 //! Algorithm 1: losslessness of the sparse split; DVFS schedule validity).
 
-use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator, QuantExecutor, SubmitSpec};
 use halo::dvfs::{FreqClass, Schedule};
 use halo::mac::MacProfile;
 use halo::quant::baselines::by_name;
 use halo::quant::outliers::extract_outliers;
 use halo::quant::saliency::extract_salient;
 use halo::quant::sparse::SparseMatrix;
-use halo::quant::{LayerCtx, Matrix};
+use halo::quant::{LayerCtx, Matrix, Variant};
+use halo::runtime::kvcache::INITIAL_CAP_ROWS;
+use halo::runtime::sim::{forward_incremental, forward_logits, DenseParams, ModelSpec};
+use halo::runtime::{KvCache, PackedModel};
 use halo::util::Rng;
 
 const CASES: usize = 25;
@@ -139,6 +145,185 @@ fn prop_coordinator_conserves_requests_under_random_load() {
         }
         for (rx, want) in rxs.into_iter().zip(expected) {
             assert_eq!(rx.recv().unwrap().next_token, want);
+        }
+        coord.shutdown().unwrap();
+    }
+}
+
+// ------------------------------------------------ PR 5: KV-cache properties
+
+/// Owned `(name, shape, data)` parameter triples.
+type ParamList = Vec<(String, Vec<usize>, Vec<f32>)>;
+
+/// Tiny model + synthesized parameters shared by the KV-cache properties
+/// (context 24 > the cache's initial 16-row capacity, so long prefixes
+/// cross a growth boundary).
+fn kv_model(seed: u64) -> (ModelSpec, ParamList) {
+    let spec = ModelSpec::synthetic(13, 8, 2, 2, 16, 24);
+    let mut rng = Rng::seed_from_u64(seed);
+    let params = spec
+        .names
+        .iter()
+        .zip(&spec.shapes)
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".scale") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.gen_normal() as f32 * 0.1).collect()
+            };
+            (name.clone(), shape.clone(), data)
+        })
+        .collect();
+    (spec, params)
+}
+
+fn kv_packed(seed: u64) -> (ModelSpec, Arc<PackedModel>) {
+    let (spec, params) = kv_model(seed);
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let pm = PackedModel::pack_from(
+        spec.clone(),
+        views,
+        Variant::Bal,
+        4,
+        &BTreeMap::new(),
+        MacProfile::cached(),
+    )
+    .unwrap();
+    (spec, Arc::new(pm))
+}
+
+#[test]
+fn prop_kv_cached_decode_matches_oracle_for_random_schedules() {
+    // Arbitrary seeded prompt lengths (0..=2x context) and max-new
+    // schedules (including 0): the KV-cached executor must never panic
+    // and must produce exactly the recompute oracle's chains.
+    let (spec, pm) = kv_packed(700);
+    let mut rng = Rng::seed_from_u64(701);
+    for case in 0..8 {
+        let nreq = 1 + rng.gen_usize(4);
+        let prefixes: Vec<Vec<i32>> = (0..nreq)
+            .map(|_| {
+                let l = rng.gen_usize(2 * spec.seq_len + 1);
+                (0..l).map(|_| rng.gen_usize(spec.vocab) as i32).collect()
+            })
+            .collect();
+        let max_new: Vec<usize> = (0..nreq).map(|_| rng.gen_usize(6)).collect();
+        let mut cached = QuantExecutor::new(pm.clone(), nreq);
+        let mut oracle = QuantExecutor::new(pm.clone(), nreq).with_kv_cache(false);
+        let got = cached.generate(&prefixes, &max_new).unwrap();
+        let want = oracle.generate(&prefixes, &max_new).unwrap();
+        assert_eq!(got, want, "case {case}: cached chains diverged from the oracle");
+        for (g, &m) in got.iter().zip(&max_new) {
+            assert_eq!(g.len(), m, "case {case}: wrong decode length");
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_logits_bitexact_at_random_splits() {
+    // For any prefill/step split of any window: the incremental logits
+    // rows equal the full-prefix rows to 0 ulps (assert_eq on f32 bits),
+    // so the final argmax can never drift.
+    let (spec, params) = kv_model(710);
+    let p = DenseParams::from_params(
+        &spec,
+        params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(711);
+    for case in 0..8 {
+        let s = 1 + rng.gen_usize(spec.seq_len);
+        let toks: Vec<i32> = (0..s).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+        let full = forward_logits(&spec, &p, &toks, 1, s).unwrap();
+        let split = 1 + rng.gen_usize(s); // prefill 1..=s positions
+        let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+        let pre = forward_incremental(&spec, &p, &toks[..split], 0, &mut cache, false).unwrap();
+        for r in 0..split {
+            assert_eq!(pre.row(r), full.row(r), "case {case}: prefill row {r}");
+        }
+        for i in split..s {
+            let one =
+                forward_incremental(&spec, &p, &toks[i..i + 1], i, &mut cache, false).unwrap();
+            assert_eq!(one.row(0), full.row(i), "case {case}: step row {i}");
+        }
+        assert_eq!(cache.len(), s);
+        assert!(cache.is_consistent());
+    }
+}
+
+#[test]
+fn prop_kv_cache_growth_is_monotone_and_lossless() {
+    // Arbitrary append schedules: capacity only grows (doubling from the
+    // initial reservation), committed length tracks appends, and every
+    // row reads back exactly what was appended.
+    let mut rng = Rng::seed_from_u64(720);
+    for case in 0..CASES {
+        let d = 1 + rng.gen_usize(8);
+        let layers = 1 + rng.gen_usize(3);
+        let mut c = KvCache::new(layers, d);
+        let mut mirror: Vec<Vec<f32>> = vec![Vec::new(); layers];
+        let mut prev_cap = 0usize;
+        let mut total = 0usize;
+        for _ in 0..1 + rng.gen_usize(6) {
+            let n = 1 + rng.gen_usize(12);
+            for l in 0..layers {
+                let k = Matrix::from_fn(n, d, |_, _| rng.gen_normal() as f32);
+                let v = Matrix::from_fn(n, d, |_, _| rng.gen_normal() as f32);
+                mirror[l].extend_from_slice(&k.data);
+                c.append(l, &k, &v).unwrap();
+            }
+            c.commit(n).unwrap();
+            total += n;
+            assert_eq!(c.len(), total, "case {case}");
+            assert!(c.is_consistent());
+            let cap = c.capacity_rows();
+            assert!(cap >= total && cap >= prev_cap, "case {case}: capacity shrank");
+            // Doubling policy: capacity is INITIAL_CAP_ROWS << k.
+            let mut want = INITIAL_CAP_ROWS;
+            while want < total {
+                want *= 2;
+            }
+            assert_eq!(cap, want, "case {case}: unexpected growth shape");
+            prev_cap = cap;
+        }
+        // Every K row reads back exactly (growth never moved data).
+        for (l, m) in mirror.iter().enumerate() {
+            for r in 0..total {
+                assert_eq!(c.layer(l).k_row(r), &m[r * d..(r + 1) * d], "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kv_coordinator_answers_everything_without_shedding() {
+    // Random staggered load through a KV-cached coordinator with
+    // unbounded queues and no deadlines: every request must be answered
+    // exactly once, never shed, with the oracle's exact chain.
+    let (spec, pm) = kv_packed(730);
+    let mut rng = Rng::seed_from_u64(731);
+    for _case in 0..3 {
+        let pm2 = pm.clone();
+        let coord = Coordinator::start(
+            BatcherConfig { batch_size: 4, timeout: std::time::Duration::from_millis(1) },
+            move || Ok(Box::new(QuantExecutor::new(pm2, 4)) as Box<dyn BatchExecutor>),
+        );
+        let n = 3 + rng.gen_usize(10);
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for _ in 0..n {
+            let l = 1 + rng.gen_usize(spec.seq_len);
+            let prefix: Vec<i32> = (0..l).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+            let m = 1 + rng.gen_usize(3);
+            want.push(pm.decode_greedy(&prefix, m).unwrap());
+            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix, m)));
+        }
+        for (rx, want) in rxs.into_iter().zip(want) {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(!r.shed, "shed without queue pressure or deadlines");
+            assert_eq!(r.tokens, want);
+            assert!(rx.recv_timeout(std::time::Duration::from_millis(1)).is_err());
         }
         coord.shutdown().unwrap();
     }

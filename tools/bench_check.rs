@@ -5,7 +5,8 @@
 //!
 //! ```sh
 //! bench_check --baseline BENCH_PR2.json --current /tmp/bench.json \
-//!             [--tol 0.30] [--keys matmul.nn.speedup,forward_pass.speedup]
+//!             [--tol 0.30] [--keys matmul.nn.speedup,forward_pass.speedup] \
+//!             [--min decode_cached_speedup=2.0]
 //! ```
 //!
 //! Gated metrics are **dimensionless ratios** (speedups, shard-scaling
@@ -16,6 +17,13 @@
 //! never an error. Keys default to every `speedup`/`scaling_*` leaf found
 //! in the baseline, so new bench sections are gated automatically once
 //! they land in the committed file.
+//!
+//! `--min key=value` (repeatable) additionally enforces an **absolute
+//! floor** on a current-run metric, independent of the committed
+//! baseline — for acceptance bars stated as hard numbers rather than
+//! regressions. PR 5's documented floor: KV-cached decode holds ≥ 2× the
+//! full-recompute throughput at prefix length 256
+//! (`--min decode_cached_speedup=2.0` against BENCH_PR5.json).
 
 use std::process::ExitCode;
 
@@ -47,7 +55,11 @@ fn run(args: &Args) -> anyhow::Result<bool> {
         Some(s) => s.split(',').map(|k| k.trim().to_string()).collect(),
         None => ratio_keys(&baseline),
     };
-    anyhow::ensure!(!keys.is_empty(), "no gated keys (baseline has no ratio leaves)");
+    let mins = parse_mins(&args.get_all("min"))?;
+    anyhow::ensure!(
+        !keys.is_empty() || !mins.is_empty(),
+        "no gated keys (baseline has no ratio leaves and no --min floors)"
+    );
 
     let mut ok = true;
     for key in &keys {
@@ -75,10 +87,46 @@ fn run(args: &Args) -> anyhow::Result<bool> {
             ok = false;
         }
     }
+    // Absolute floors: current >= floor, no baseline involved.
+    for (key, floor) in &mins {
+        match lookup(&current, key).and_then(|j| j.as_f64().ok()) {
+            Some(cur) if cur >= *floor => {
+                println!("ok   {key}: {cur:.2} (absolute floor {floor:.2})");
+            }
+            Some(cur) => {
+                eprintln!("FAIL {key}: {cur:.2} < absolute floor {floor:.2}");
+                ok = false;
+            }
+            None => {
+                eprintln!("FAIL {key}: missing in current {current_path} (floor {floor:.2})");
+                ok = false;
+            }
+        }
+    }
     if ok {
-        println!("bench_check: {} gated metric(s) within tolerance {tol}", keys.len());
+        println!(
+            "bench_check: {} gated metric(s) within tolerance {tol}, {} absolute floor(s) held",
+            keys.len(),
+            mins.len()
+        );
     }
     Ok(ok)
+}
+
+/// Parse repeated `--min key=value` floors.
+fn parse_mins(specs: &[&str]) -> anyhow::Result<Vec<(String, f64)>> {
+    specs
+        .iter()
+        .map(|s| {
+            let (key, val) = s
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--min expects key=value, got `{s}`"))?;
+            let floor: f64 = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--min {key}: `{val}` is not a number"))?;
+            Ok((key.trim().to_string(), floor))
+        })
+        .collect()
 }
 
 /// Dotted-path lookup: `matmul.nn.speedup`.
@@ -196,6 +244,48 @@ mod tests {
         // Missing key in current fails.
         std::fs::write(&cur, r#"{"y":1.0}"#).unwrap();
         assert!(!run(&argv(&cur, "0.30")).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn min_floors_parse_and_gate() {
+        assert_eq!(
+            parse_mins(&["decode_cached_speedup=2.0"]).unwrap(),
+            vec![("decode_cached_speedup".to_string(), 2.0)]
+        );
+        assert!(parse_mins(&["oops"]).is_err());
+        assert!(parse_mins(&["k=notanum"]).is_err());
+
+        let dir = std::env::temp_dir().join(format!("halo_bench_min_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let cur = dir.join("cur.json");
+        std::fs::write(&base, r#"{"decode_cached_speedup":4.0}"#).unwrap();
+        let argv = |min: &str| {
+            Args::parse(
+                [
+                    "--baseline",
+                    base.to_str().unwrap(),
+                    "--current",
+                    cur.to_str().unwrap(),
+                    "--keys",
+                    "decode_cached_speedup",
+                    "--min",
+                    min,
+                ]
+                .into_iter()
+                .map(String::from),
+            )
+        };
+        // Above both the baseline tolerance and the absolute floor.
+        std::fs::write(&cur, r#"{"decode_cached_speedup":3.5}"#).unwrap();
+        assert!(run(&argv("decode_cached_speedup=2.0")).unwrap());
+        // Within baseline tolerance but below the absolute floor: FAIL.
+        std::fs::write(&cur, r#"{"decode_cached_speedup":3.0}"#).unwrap();
+        assert!(!run(&argv("decode_cached_speedup=3.2")).unwrap());
+        // Missing key fails the floor too.
+        std::fs::write(&cur, r#"{"other":1.0}"#).unwrap();
+        assert!(!run(&argv("decode_cached_speedup=2.0")).unwrap());
         std::fs::remove_dir_all(&dir).ok();
     }
 }
