@@ -7,11 +7,13 @@
 #   make bench-json      JSON benches → BENCH_PR2/PR3/PR4.json (perf trajectory)
 #   make docs            rustdoc with -D warnings + build all examples (same as CI)
 #   make fmt             rustfmt check (same as CI)
+#   make lint            halo-lint: panic-safety / sync-shim / unsafe-docs rules
+#   make loom            exhaustive coordinator model checks (plain + --cfg loom)
 
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt clean
+.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt lint loom clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -78,6 +80,21 @@ docs:
 
 fmt:
 	cargo fmt --check
+
+# Repo lint (CI `analysis` job): no-panic-serving-path, sync-via-shim,
+# no-undocumented-unsafe, missing-docs inventory. Audited exceptions live
+# in lint_allow.toml; the lint's own rule fixtures run first.
+lint:
+	cargo test --bin halo-lint -q
+	cargo run --release --bin halo-lint
+
+# Loom-style exhaustive model checks over the coordinator, twice: plain
+# (shim passthrough outside model()) and strict (--cfg loom: shim use
+# outside model() panics, proving the suite only exercises modeled code).
+loom:
+	cargo test --release --test loom_coordinator -- --nocapture
+	RUSTFLAGS="--cfg loom" CARGO_TARGET_DIR=target/loom \
+	  cargo test --release --test loom_coordinator
 
 clean:
 	cargo clean

@@ -7,9 +7,16 @@
 //! is already queued — without blocking — between decode steps, so queued
 //! requests join the in-flight decode set as soon as a step boundary
 //! passes instead of waiting for the current "batch" to finish.
+//!
+//! PR 6 moved the transport from `std::sync::mpsc` to the shim-backed
+//! [`RequestQueue`], which makes the whole admit→batch→retire path
+//! model-checkable (`tests/loom_coordinator.rs`) and folds the queue-depth
+//! accounting into the queue itself.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use super::queue::{Pop, RequestQueue};
+use crate::util::sync::Arc;
 
 /// Batch-forming knobs for one shard.
 #[derive(Debug, Clone)]
@@ -28,38 +35,34 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pulls from a channel and yields batches.
+/// Pulls from a [`RequestQueue`] and yields batches.
 pub struct Batcher<T> {
     /// The batch-forming knobs this batcher was built with.
     pub cfg: BatcherConfig,
-    rx: Receiver<T>,
+    queue: Arc<RequestQueue<T>>,
 }
 
 impl<T> Batcher<T> {
-    /// Wrap a request channel with batch-forming logic.
-    pub fn new(cfg: BatcherConfig, rx: Receiver<T>) -> Self {
-        Self { cfg, rx }
+    /// Wrap a request queue with batch-forming logic.
+    pub fn new(cfg: BatcherConfig, queue: Arc<RequestQueue<T>>) -> Self {
+        Self { cfg, queue }
     }
 
-    /// Block for the next batch. Returns `None` when the channel closed and
+    /// Block for the next batch. Returns `None` when the queue closed and
     /// no items remain.
+    ///
+    /// Not model-safe (the fill window branches on wall-clock time);
+    /// models exercise [`try_fill`](Self::try_fill) and the queue ops
+    /// directly.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         // Block for the first item.
-        let first = match self.rx.recv() {
-            Ok(x) => x,
-            Err(_) => return None,
-        };
+        let first = self.queue.pop()?;
         let mut batch = vec![first];
         let deadline = Instant::now() + self.cfg.timeout;
         while batch.len() < self.cfg.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(x) => batch.push(x),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            match self.queue.pop_deadline(deadline) {
+                Pop::Item(x) => batch.push(x),
+                Pop::TimedOut | Pop::Closed => break,
             }
         }
         Some(batch)
@@ -71,9 +74,9 @@ impl<T> Batcher<T> {
     pub fn try_fill(&self, max: usize) -> Vec<T> {
         let mut out = Vec::new();
         while out.len() < max {
-            match self.rx.try_recv() {
-                Ok(x) => out.push(x),
-                Err(_) => break,
+            match self.queue.try_pop() {
+                Some(x) => out.push(x),
+                None => break,
             }
         }
         out
@@ -83,17 +86,20 @@ impl<T> Batcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+
+    fn queue<T>() -> Arc<RequestQueue<T>> {
+        Arc::new(RequestQueue::bounded(0))
+    }
 
     #[test]
     fn batches_up_to_size() {
-        let (tx, rx) = channel();
+        let q = queue();
         for i in 0..10 {
-            tx.send(i).unwrap();
+            q.push(i).unwrap();
         }
         let b = Batcher::new(
             BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
-            rx,
+            q,
         );
         assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
@@ -102,11 +108,11 @@ mod tests {
 
     #[test]
     fn flushes_partial_batch_on_timeout() {
-        let (tx, rx) = channel();
-        tx.send(42).unwrap();
+        let q = queue();
+        q.push(42).unwrap();
         let b = Batcher::new(
             BatcherConfig { batch_size: 8, timeout: Duration::from_millis(10) },
-            rx,
+            q,
         );
         let t0 = Instant::now();
         assert_eq!(b.next_batch().unwrap(), vec![42]);
@@ -115,21 +121,21 @@ mod tests {
 
     #[test]
     fn none_after_close() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let b = Batcher::new(BatcherConfig::default(), rx);
+        let q = queue::<u32>();
+        q.close();
+        let b = Batcher::new(BatcherConfig::default(), q);
         assert!(b.next_batch().is_none());
     }
 
     #[test]
     fn drains_remaining_after_close() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        drop(tx);
+        let q = queue();
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
         let b = Batcher::new(
             BatcherConfig { batch_size: 8, timeout: Duration::from_millis(1) },
-            rx,
+            q,
         );
         assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
         assert!(b.next_batch().is_none());
@@ -140,18 +146,20 @@ mod tests {
         // Items arriving every ~8 ms must NOT keep resetting the window:
         // the batch closes one timeout after the FIRST pending item, so a
         // 25 ms window admits only ~3 trickled items, never all 10.
-        let (tx, rx) = channel();
+        let q = queue();
+        let q2 = q.clone();
         let feeder = std::thread::spawn(move || {
             for i in 0..10 {
-                if tx.send(i).is_err() {
+                if q2.push(i).is_err() {
                     return;
                 }
                 std::thread::sleep(Duration::from_millis(8));
             }
+            q2.close();
         });
         let b = Batcher::new(
             BatcherConfig { batch_size: 64, timeout: Duration::from_millis(25) },
-            rx,
+            q,
         );
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
@@ -168,23 +176,25 @@ mod tests {
 
     #[test]
     fn close_mid_batch_drains_the_remainder() {
-        // Sender disconnects while a batch is filling: the in-flight batch
-        // must still deliver everything already queued, then end.
-        let (tx, rx) = channel();
+        // Queue closes while a batch is filling: the in-flight batch must
+        // still deliver everything already queued, then end.
+        let q = queue();
+        let q2 = q.clone();
         let b = Batcher::new(
             BatcherConfig { batch_size: 8, timeout: Duration::from_secs(5) },
-            rx,
+            q,
         );
         let feeder = std::thread::spawn(move || {
-            tx.send(1).unwrap();
-            tx.send(2).unwrap();
-            tx.send(3).unwrap();
-            // Channel closes here, mid-window, long before the 5 s timeout.
+            q2.push(1).unwrap();
+            q2.push(2).unwrap();
+            q2.push(3).unwrap();
+            // Queue closes here, mid-window, long before the 5 s timeout.
+            q2.close();
         });
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch, vec![1, 2, 3]);
-        // Returned on disconnect, not after the full timeout.
+        // Returned on close, not after the full timeout.
         assert!(t0.elapsed() < Duration::from_secs(4));
         assert!(b.next_batch().is_none());
         feeder.join().unwrap();
@@ -192,32 +202,32 @@ mod tests {
 
     #[test]
     fn try_fill_never_blocks_and_respects_the_cap() {
-        let (tx, rx) = channel();
-        let b = Batcher::new(BatcherConfig::default(), rx);
+        let q = queue();
+        let b = Batcher::new(BatcherConfig::default(), q.clone());
         // Empty queue: instant empty result, no waiting.
         let t0 = Instant::now();
         assert!(b.try_fill(8).is_empty());
         assert!(t0.elapsed() < Duration::from_millis(50));
         for i in 0..5 {
-            tx.send(i).unwrap();
+            q.push(i).unwrap();
         }
         assert_eq!(b.try_fill(0), Vec::<i32>::new());
         assert_eq!(b.try_fill(3), vec![0, 1, 2]);
         assert_eq!(b.try_fill(8), vec![3, 4]);
-        drop(tx);
+        q.close();
         assert!(b.try_fill(8).is_empty(), "closed + drained yields nothing");
     }
 
     #[test]
     fn burst_arrival_never_exceeds_batch_size() {
-        let (tx, rx) = channel();
+        let q = queue();
         for i in 0..1000 {
-            tx.send(i).unwrap();
+            q.push(i).unwrap();
         }
-        drop(tx);
+        q.close();
         let b = Batcher::new(
             BatcherConfig { batch_size: 7, timeout: Duration::from_millis(50) },
-            rx,
+            q,
         );
         let mut total = 0;
         let mut next_expected = 0;

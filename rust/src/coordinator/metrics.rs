@@ -6,10 +6,10 @@
 //! [`MetricsSnapshot`] (p50/p95/p99 over the union of latency samples),
 //! which is what `halo loadgen` and `benches/l2_serving.rs` report.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 use crate::util::Json;
 
 /// Live serving counters + latency reservoir for one shard (or the
@@ -44,8 +44,12 @@ pub struct Metrics {
 
 impl Metrics {
     /// Record one request's submit-to-respond latency (bounded reservoir).
+    ///
+    /// Poisoning is absorbed here and below: the reservoir's only
+    /// invariant is "a Vec of samples", which holds at every await point,
+    /// and metrics must stay readable after a recording thread panicked.
     pub fn record_latency(&self, d: Duration) {
-        let mut l = self.latencies_us.lock().unwrap();
+        let mut l = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner());
         if l.len() < 1_000_000 {
             l.push(d.as_micros() as u64);
         }
@@ -53,7 +57,7 @@ impl Metrics {
 
     /// Latency percentile `p ∈ [0, 1]` over the recorded samples.
     pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
-        let mut l = self.latencies_us.lock().unwrap().clone();
+        let mut l = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
         if l.is_empty() {
             return None;
         }
@@ -74,7 +78,7 @@ impl Metrics {
     /// Point-in-time copy of everything (percentiles computed over this
     /// view's own latency samples).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
+        let mut lat = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
         lat.sort_unstable();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),

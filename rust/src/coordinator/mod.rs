@@ -42,9 +42,11 @@
 pub mod batch;
 pub mod loadgen;
 pub mod metrics;
+pub mod queue;
 pub mod server;
 
 pub use batch::{Batcher, BatcherConfig};
+pub use queue::{Pop, PushError, RequestQueue};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{

@@ -1,0 +1,307 @@
+//! Bounded MPMC request queue built on the [`crate::util::sync`] shim.
+//!
+//! Replaces the former `std::sync::mpsc` + side-channel depth counter in
+//! the shard path. Capacity check, closed check and enqueue happen under
+//! one lock, so admission control is atomic — there is no reserve-then-send
+//! window in which a burst can overshoot the cap. Being built on the shim,
+//! the queue is model-checkable: `tests/loom_coordinator.rs` exhaustively
+//! interleaves push/shed/close against the consumer.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::sync::{Condvar, Mutex, MutexGuard};
+
+/// Why a [`RequestQueue::push`] was refused; carries the item back.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity (admission control: shed or retry).
+    Full(T),
+    /// The queue was closed; no further items are accepted.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(v) | PushError::Closed(v) => v,
+        }
+    }
+}
+
+/// Outcome of a deadline-bounded pop ([`RequestQueue::pop_deadline`]).
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The queue is closed and drained; no item will ever arrive.
+    Closed,
+    /// The deadline passed with the queue still open and empty.
+    TimedOut,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer FIFO with explicit close.
+///
+/// Lock-poisoning is absorbed (`into_inner`): the queue's invariants hold
+/// at every await point, so state observed through a poisoned lock is
+/// still consistent — a panicking shard must not take the router with it.
+pub struct RequestQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    nonempty: Condvar,
+    cap: usize,
+}
+
+impl<T> RequestQueue<T> {
+    /// Create a queue admitting at most `cap` queued items (`0` =
+    /// unbounded).
+    pub fn bounded(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            nonempty: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn state(&self) -> MutexGuard<'_, QueueState<T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue `item`, or refuse it with [`PushError`] when the queue is
+    /// full or closed. Never blocks — admission control decides to shed at
+    /// the call site, not by stalling the producer.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if self.cap != 0 && st.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while the queue is open and empty. Returns `None`
+    /// only once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                if !st.items.is_empty() {
+                    // Cascade: another consumer may be parked behind us.
+                    self.nonempty.notify_one();
+                }
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.nonempty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Dequeue with a deadline. Blocks while open-and-empty until
+    /// `deadline`; an item or a close always wins over a concurrent
+    /// timeout.
+    ///
+    /// Not model-safe: branches on wall-clock time, so loom-style models
+    /// must drive the queue through [`pop`](Self::pop) /
+    /// [`try_pop`](Self::try_pop) instead.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut st = self.state();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                if !st.items.is_empty() {
+                    self.nonempty.notify_one();
+                }
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (g, timed_out) = self
+                .nonempty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+            if timed_out.timed_out() {
+                // Re-check once: an item or close that raced the timeout
+                // takes precedence over reporting TimedOut.
+                if let Some(item) = st.items.pop_front() {
+                    if !st.items.is_empty() {
+                        self.nonempty.notify_one();
+                    }
+                    return Pop::Item(item);
+                }
+                if st.closed {
+                    return Pop::Closed;
+                }
+                return Pop::TimedOut;
+            }
+        }
+    }
+
+    /// Dequeue without blocking; `None` when empty (open or closed).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state();
+        let item = st.items.pop_front();
+        if item.is_some() && !st.items.is_empty() {
+            drop(st);
+            self.nonempty.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: future pushes fail, consumers drain what remains
+    /// and then observe the close. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state();
+        st.closed = true;
+        drop(st);
+        self.nonempty.notify_all();
+    }
+
+    /// Queued-item count right now (racy by nature; used for least-loaded
+    /// routing, where staleness only costs balance, not correctness).
+    pub fn len(&self) -> usize {
+        self.state().items.len()
+    }
+
+    /// Whether the queue is empty right now (racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.state().items.is_empty()
+    }
+
+    /// Whether the queue has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.state().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::{thread, Arc};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = RequestQueue::bounded(0);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn cap_is_enforced_atomically() {
+        let q = RequestQueue::bounded(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        q.try_pop();
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_pops() {
+        let q = RequestQueue::bounded(0);
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.push(2) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 2),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(RequestQueue::bounded(0));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(42u32).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_close() {
+        let q: Arc<RequestQueue<u32>> = Arc::new(RequestQueue::bounded(0));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_on_open_empty_queue() {
+        let q: RequestQueue<u32> = RequestQueue::bounded(0);
+        let t0 = Instant::now();
+        match q.pop_deadline(t0 + Duration::from_millis(20)) {
+            Pop::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn pop_deadline_prefers_item_and_close_over_timeout() {
+        let q: RequestQueue<u32> = RequestQueue::bounded(0);
+        q.push(7).unwrap();
+        match q.pop_deadline(Instant::now()) {
+            Pop::Item(7) => {}
+            other => panic!("expected Item(7), got {other:?}"),
+        }
+        q.close();
+        match q.pop_deadline(Instant::now()) {
+            Pop::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_never_exceed_cap() {
+        let q = Arc::new(RequestQueue::bounded(4));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let q = q.clone();
+                thread::spawn(move || q.push(i).is_ok())
+            })
+            .collect();
+        let accepted = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&ok| ok)
+            .count();
+        assert!(accepted <= 4, "cap overshoot: {accepted}");
+        assert!(q.len() <= 4);
+        let mut drained = 0;
+        while q.try_pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, accepted);
+    }
+}

@@ -26,11 +26,22 @@
 //! loaded graph / packed tiles and override [`BatchExecutor::step`] with
 //! the KV-cached incremental path (`--no-kv-cache` falls back to the
 //! full-recompute oracle).
+//!
+//! **Concurrency & panic-safety (PR 6).** Requests travel through the
+//! shim-backed bounded [`RequestQueue`] (admission check and enqueue are
+//! one atomic operation — no reserve-then-send window), every sync
+//! primitive here comes from [`crate::util::sync`] (model-checked in
+//! `tests/loom_coordinator.rs`, lint-enforced by `halo-lint`), and
+//! executor calls are unwind-fenced: a *panicking* executor kills only its
+//! own shard — the shard marks itself dead, sheds its live set and queue,
+//! and the router keeps serving on the healthy shards. A merely *erring*
+//! executor sheds the affected batch and keeps its shard. No panic
+//! propagates into a client-visible hang, and shard-held locks are never
+//! poisoned across the serving path (see DESIGN.md §Concurrency model).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,6 +49,9 @@ use anyhow::Result;
 
 use super::batch::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use crate::dvfs::Schedule;
 use crate::quant::Matrix;
 use crate::runtime::sim::ModelSpec;
@@ -374,14 +388,20 @@ impl BatchExecutor for QuantExecutor {
             self.work_positions += w.saturating_sub(s.cached_rows()).max(1) as u64;
         }
         let model: &PackedModel = &self.model;
-        let first_err = std::sync::Mutex::new(None);
+        let first_err = Mutex::new(None);
         parallel::par_chunks_mut(states, 1, |_, chunk| {
             let s = &mut *chunk[0];
             if let Err(e) = step_one_packed(model, s) {
-                *first_err.lock().unwrap() = Some(e);
+                // First error wins; poisoning is absorbed (a panicked
+                // sibling worker must not turn a reportable decode error
+                // into a shard-killing panic here).
+                let mut slot = first_err.lock().unwrap_or_else(|p| p.into_inner());
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
             }
         });
-        match first_err.into_inner().unwrap() {
+        match first_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -401,7 +421,9 @@ fn step_one_packed(model: &PackedModel, s: &mut DecodeState) -> Result<()> {
         argmax_slice(logits.row(0)) as i32
     } else {
         let (new, cached) = s.uncached_suffix()?;
-        let cache = s.cache_mut().expect("state has a cache");
+        let Some(cache) = s.cache_mut() else {
+            anyhow::bail!("decode state lost its KV cache mid-step");
+        };
         let logits = model.forward_incremental(&new, cached, cache)?;
         anyhow::ensure!(logits.cols == model.spec.vocab, "logit row width mismatch");
         argmax_slice(logits.row(logits.rows - 1)) as i32
@@ -489,7 +511,9 @@ impl BatchExecutor for GraphExecutor {
             } else {
                 let (new, cached) = s.uncached_suffix()?;
                 let n = new.len();
-                let cache = s.cache_mut().expect("state has a cache");
+                let Some(cache) = s.cache_mut() else {
+                    anyhow::bail!("decode state lost its KV cache mid-step");
+                };
                 let logits = self.exe.run_decode_step(&params, &new, cached, cache)?;
                 logits.argmax_span((n - 1) * self.vocab, self.vocab)?
             };
@@ -561,15 +585,15 @@ impl SubmitSpec {
 }
 
 struct Shard {
-    tx: Option<Sender<Request>>,
+    /// Bounded request queue (admission control lives in the queue: a
+    /// `push` atomically checks cap + closed under one lock).
+    queue: Arc<RequestQueue<Request>>,
     handle: Option<JoinHandle<()>>,
-    /// Requests queued (sent, not yet pulled into a batch).
-    depth: Arc<AtomicUsize>,
-    /// Set by the shard thread when its executor failed to construct: the
-    /// router must skip it (its instant drain-and-shed would otherwise
-    /// keep its queue depth near zero and attract all least-loaded
-    /// routing, starving healthy shards).
-    dead: Arc<std::sync::atomic::AtomicBool>,
+    /// Set by the shard thread when its executor failed to construct or
+    /// panicked: the router must skip it (its instant drain-and-shed
+    /// would otherwise keep its queue depth near zero and attract all
+    /// least-loaded routing, starving healthy shards).
+    dead: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
 }
 
@@ -617,7 +641,7 @@ impl Coordinator {
         let shards: Vec<Shard> = factories
             .into_iter()
             .enumerate()
-            .map(|(s, f)| spawn_shard(s, f, cfg.batcher.clone(), metrics.clone()))
+            .map(|(s, f)| spawn_shard(s, f, cfg.batcher.clone(), cfg.queue_cap, metrics.clone()))
             .collect();
         Self {
             shards,
@@ -680,30 +704,23 @@ impl Coordinator {
         let n = self.shards.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
-        // Snapshot each depth exactly once: re-reading the live atomics per
-        // comparison could present the sort with an inconsistent order
-        // (which std's sort detects by panicking).
-        order.sort_by_cached_key(|&s| self.shards[s].depth.load(Ordering::Relaxed));
+        // Snapshot each depth exactly once: re-reading the live queue
+        // lengths per comparison could present the sort with an
+        // inconsistent order (which std's sort detects by panicking).
+        order.sort_by_cached_key(|&s| self.shards[s].queue.len());
         for &s in &order {
             let shard = &self.shards[s];
             if shard.dead.load(Ordering::Relaxed) {
                 continue;
             }
-            let Some(tx) = shard.tx.as_ref() else { continue };
-            // Reserve the queue slot before sending (a check-then-add gap
-            // would let concurrent submitters overshoot the cap).
-            let prev = shard.depth.fetch_add(1, Ordering::Relaxed);
-            if self.cfg.queue_cap > 0 && prev >= self.cfg.queue_cap {
-                shard.depth.fetch_sub(1, Ordering::Relaxed);
-                continue;
-            }
-            match tx.send(req) {
+            // The queue checks capacity and closedness atomically with the
+            // enqueue — concurrent submitters can never overshoot the cap
+            // (model-checked in tests/loom_coordinator.rs). Full or closed
+            // (shard shut down / died): take the request back, try the
+            // next shard.
+            match shard.queue.push(req) {
                 Ok(()) => return rrx,
-                Err(std::sync::mpsc::SendError(r)) => {
-                    // Executor thread died; try the next shard.
-                    shard.depth.fetch_sub(1, Ordering::Relaxed);
-                    req = r;
-                }
+                Err(e) => req = e.into_inner(),
             }
         }
 
@@ -721,24 +738,30 @@ impl Coordinator {
         rrx
     }
 
-    /// Drain and stop every shard.
+    /// Drain and stop every shard. Reports (rather than panics on) shard
+    /// threads that died of an uncaught panic — their queued clients were
+    /// already shed by the shard's own unwind fences.
     pub fn shutdown(mut self) -> Result<()> {
-        for s in &mut self.shards {
-            drop(s.tx.take());
+        for s in &self.shards {
+            s.queue.close();
         }
+        let mut crashed = 0usize;
         for s in &mut self.shards {
             if let Some(h) = s.handle.take() {
-                h.join().expect("shard thread panicked");
+                if h.join().is_err() {
+                    crashed += 1;
+                }
             }
         }
+        anyhow::ensure!(crashed == 0, "{crashed} shard thread(s) panicked outside the unwind fence");
         Ok(())
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for s in &mut self.shards {
-            drop(s.tx.take());
+        for s in &self.shards {
+            s.queue.close();
         }
         for s in &mut self.shards {
             if let Some(h) = s.handle.take() {
@@ -768,33 +791,51 @@ struct Live {
 /// The loop never propagates per-step errors out of the thread — a failed
 /// step or a client that dropped its receiver is logged and the shard
 /// keeps serving (the seed implementation `?`-ed out and wedged every
-/// queued client).
+/// queued client). Executor calls (construction, `begin`, `step`) are
+/// additionally unwind-fenced: a *panic* leaves the executor's internal
+/// state unknowable, so the shard sheds everything it holds, closes its
+/// queue, marks itself dead and exits — clients get shed responses, the
+/// router moves on, and the panic never crosses a lock (no poisoning) or
+/// reaches `join`.
 fn spawn_shard(
     shard_id: usize,
     make_executor: ShardFactory,
     batcher_cfg: BatcherConfig,
+    queue_cap: usize,
     global: Arc<Metrics>,
 ) -> Shard {
-    let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+    let queue = Arc::new(RequestQueue::bounded(queue_cap));
+    let q = queue.clone();
     let metrics = Arc::new(Metrics::default());
     let m = metrics.clone();
-    let depth = Arc::new(AtomicUsize::new(0));
-    let d = depth.clone();
-    let dead = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let dead = Arc::new(AtomicBool::new(false));
     let dead_flag = dead.clone();
     let handle = std::thread::spawn(move || {
-        let mut exec = match make_executor() {
-            Ok(e) => e,
-            Err(e) => {
-                eprintln!("[coordinator] shard {shard_id}: executor construction failed: {e:#}");
-                // Take the shard out of rotation, then drain anything that
-                // raced in so those clients get shed responses instead of
-                // hanging.
-                dead_flag.store(true, Ordering::Relaxed);
-                while let Ok(req) = rx.recv() {
-                    d.fetch_sub(1, Ordering::Relaxed);
-                    shed_one(shard_id, req, &m, &global);
-                }
+        // Take the shard out of rotation, then drain anything already
+        // queued (or racing in before the close lands) so those clients
+        // get shed responses instead of hanging.
+        let die = |msg: String, live: &mut Vec<Live>| {
+            eprintln!("[coordinator] shard {shard_id}: {msg}");
+            dead_flag.store(true, Ordering::Relaxed);
+            q.close();
+            for l in live.drain(..) {
+                shed_one(shard_id, l.req, &m, &global);
+            }
+            while let Some(req) = q.pop() {
+                shed_one(shard_id, req, &m, &global);
+            }
+        };
+        let mut exec = match catch_unwind(AssertUnwindSafe(make_executor)) {
+            Ok(Ok(e)) => e,
+            Ok(Err(e)) => {
+                die(format!("executor construction failed: {e:#}"), &mut Vec::new());
+                return;
+            }
+            Err(p) => {
+                die(
+                    format!("executor construction panicked: {}", panic_msg(&p)),
+                    &mut Vec::new(),
+                );
                 return;
             }
         };
@@ -803,7 +844,7 @@ fn spawn_shard(
             batch_size: batcher_cfg.batch_size.min(cap).max(1),
             ..batcher_cfg
         };
-        let batcher = Batcher::new(cfg, rx);
+        let batcher = Batcher::new(cfg, q.clone());
         let mut live: Vec<Live> = Vec::new();
         loop {
             // ---- admit: block only when idle; top up mid-flight.
@@ -815,9 +856,6 @@ fn spawn_shard(
             } else {
                 batcher.try_fill(cap - live.len())
             };
-            if !incoming.is_empty() {
-                d.fetch_sub(incoming.len(), Ordering::Relaxed);
-            }
             let now = Instant::now();
             for req in incoming {
                 // Shed-on-deadline: drop requests that expired in queue.
@@ -825,8 +863,18 @@ fn spawn_shard(
                     shed_one(shard_id, req, &m, &global);
                     continue;
                 }
-                match exec.begin(&req.tokens, req.max_new_tokens) {
-                    Ok(state) if state.done() => {
+                let begun =
+                    catch_unwind(AssertUnwindSafe(|| exec.begin(&req.tokens, req.max_new_tokens)));
+                match begun {
+                    Err(p) => {
+                        shed_one(shard_id, req, &m, &global);
+                        for g in [&m, &global] {
+                            g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        die(format!("executor panicked in begin: {}", panic_msg(&p)), &mut live);
+                        return;
+                    }
+                    Ok(Ok(state)) if state.done() => {
                         // Zero-budget request: answer immediately.
                         let latency = req.submitted.elapsed();
                         for g in [&m, &global] {
@@ -842,13 +890,13 @@ fn spawn_shard(
                             shed: false,
                         });
                     }
-                    Ok(state) => {
+                    Ok(Ok(state)) => {
                         for g in [&m, &global] {
                             g.batch_tokens.fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
                         }
                         live.push(Live { req, state });
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         eprintln!("[coordinator] shard {shard_id}: admit failed: {e:#}");
                         for g in [&m, &global] {
                             g.exec_errors.fetch_add(1, Ordering::Relaxed);
@@ -866,7 +914,20 @@ fn spawn_shard(
             let step_res = {
                 let mut active: Vec<&mut DecodeState> =
                     live.iter_mut().map(|l| &mut l.state).collect();
-                exec.step(&mut active)
+                catch_unwind(AssertUnwindSafe(|| exec.step(&mut active)))
+            };
+            let step_res = match step_res {
+                Err(p) => {
+                    // Executor state is unknowable after a panic: this
+                    // shard is done. Shed everything, leave the rest to
+                    // the healthy shards.
+                    for g in [&m, &global] {
+                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    die(format!("executor panicked mid-step: {}", panic_msg(&p)), &mut live);
+                    return;
+                }
+                Ok(r) => r,
             };
             // A "successful" step that generated nothing would spin this
             // loop forever — treat it as an executor fault.
@@ -920,7 +981,16 @@ fn spawn_shard(
             }
         }
     });
-    Shard { tx: Some(tx), handle: Some(handle), depth, dead, metrics }
+    Shard { queue, handle: Some(handle), dead, metrics }
+}
+
+/// Best-effort description of a caught panic payload (for shard-death
+/// logging; `&str` and `String` payloads cover `panic!`/`expect`).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string panic payload>")
 }
 
 fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics) {
@@ -1219,7 +1289,7 @@ mod tests {
     #[test]
     fn full_queues_reject_with_backpressure() {
         let (gate_tx, gate_rx) = channel::<()>();
-        let gate_rx = std::sync::Mutex::new(Some(gate_rx));
+        let gate_rx = Mutex::new(Some(gate_rx));
         let c = Coordinator::start_sharded(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
@@ -1342,7 +1412,7 @@ mod tests {
         // for the whole batch to drain (the pre-PR-5 behavior).
         let (rel_tx, rel_rx) = channel::<()>();
         let (size_tx, size_rx) = channel::<usize>();
-        let slots = std::sync::Mutex::new(Some((rel_rx, size_tx)));
+        let slots = Mutex::new(Some((rel_rx, size_tx)));
         let c = Coordinator::start(
             BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
             move || {
@@ -1413,6 +1483,100 @@ mod tests {
         // responses and later submissions still answer.
         let c = Coordinator::start(BatcherConfig::default(), || {
             anyhow::bail!("no executor today")
+        });
+        let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.shed);
+        c.shutdown().unwrap();
+    }
+
+    // ------------------------------------------------- panic safety (PR 6)
+
+    /// Executor that panics on its `fail_on`-th step — exercises the
+    /// unwind fence around `BatchExecutor::step`.
+    struct Bomb {
+        steps: u32,
+        fail_on: u32,
+    }
+
+    impl BatchExecutor for Bomb {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            self.steps += 1;
+            if self.steps >= self.fail_on {
+                panic!("injected executor panic");
+            }
+            Ok(prefixes.iter().map(|p| p.iter().sum::<i32>() % 97).collect())
+        }
+    }
+
+    #[test]
+    fn panicking_step_sheds_requests_instead_of_hanging_clients() {
+        // Single shard whose executor panics mid-step: every in-flight and
+        // queued request must come back as a shed response — no client
+        // hangs, and shutdown returns Ok (the panic never crossed the
+        // unwind fence to the thread boundary).
+        let c = Coordinator::start(
+            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(20) },
+            || Ok(Box::new(Bomb { steps: 0, fail_on: 1 }) as Box<dyn BatchExecutor>),
+        );
+        let rxs: Vec<_> = (0..6).map(|i| c.submit(vec![i])).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.shed, "request served by a panicked executor");
+        }
+        assert!(c.metrics.exec_errors.load(Ordering::Relaxed) >= 1);
+        // Later submissions find no live shard and shed immediately.
+        let r = c.submit(vec![9]).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.shed);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn panicked_shard_dies_alone_and_healthy_shards_keep_serving() {
+        // Shard-death tolerance: one shard's executor panics (which in a
+        // lock-per-shard design could poison shard-held state); the router
+        // must keep serving on the survivor. Submissions race the death,
+        // so each request either sheds (hit the dying shard) or serves
+        // (hit the healthy one) — but never hangs, and the healthy shard
+        // answers everything routed to it after the death lands.
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                shards: 2,
+                ..CoordinatorConfig::default()
+            },
+            |shard| {
+                Ok(if shard == 0 {
+                    Box::new(Bomb { steps: 0, fail_on: 1 }) as Box<dyn BatchExecutor>
+                } else {
+                    Box::new(Echo { cap: 2 }) as Box<dyn BatchExecutor>
+                })
+            },
+        );
+        // Trip the bomb, then give the death time to land.
+        let first: Vec<_> = (0..4).map(|i| c.submit(vec![i])).collect();
+        for rx in first {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        for i in 0..20i32 {
+            let r = c.submit(vec![i]).recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(!r.shed, "request {i} shed despite a healthy shard");
+            assert_eq!(r.shard, 1);
+            assert_eq!(r.next_token, i % 97);
+        }
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn panicking_construction_sheds_queued_requests() {
+        let c = Coordinator::start(BatcherConfig::default(), || {
+            panic!("injected constructor panic")
         });
         let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);

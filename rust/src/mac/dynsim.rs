@@ -55,6 +55,7 @@ pub struct DynSim<'a> {
 }
 
 impl<'a> DynSim<'a> {
+    /// Simulator settled at the initial state `(a0, acc0)` for weight `w`.
     pub fn new(net: &'a Netlist, ports: &'a MacPorts, w: i8, a0: i8, acc0: i32) -> Self {
         let mut vals = vec![false; net.len()];
         mac8::set_inputs(ports, &mut vals, w, a0, acc0);
@@ -136,6 +137,7 @@ pub struct DynSim64<'a> {
 }
 
 impl<'a> DynSim64<'a> {
+    /// Bit-sliced simulator for weight `w` (states are supplied per batch).
     pub fn new(net: &'a Netlist, ports: &'a MacPorts, w: i8) -> Self {
         assert!(net.len() < (1 << 16), "toggle counters assume < 65536 gates");
         Self {
@@ -242,8 +244,11 @@ impl<'a> DynSim64<'a> {
 /// Per-weight transition statistics over `samples` random transitions.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WeightStats {
+    /// Worst observed settle time (pre-calibration delay units).
     pub max_settle: u32,
+    /// Mean settle time over the sampled transitions.
     pub mean_settle: f64,
+    /// Mean gate-output toggle count per transition.
     pub mean_toggles: f64,
 }
 

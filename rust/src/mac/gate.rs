@@ -9,9 +9,13 @@
 /// Gate delay in picoseconds (pre-calibration units).
 pub type Delay = u32;
 
+/// Inverter delay.
 pub const D_NOT: Delay = 8;
+/// 2-input AND delay.
 pub const D_AND: Delay = 15;
+/// 2-input OR delay.
 pub const D_OR: Delay = 15;
+/// 2-input XOR delay (slowest primitive — dominates adder paths).
 pub const D_XOR: Delay = 22;
 
 /// Node index into [`Netlist::gates`].
@@ -25,13 +29,18 @@ pub enum Gate {
     Input,
     /// Constant 0/1.
     Const(bool),
+    /// Inverter.
     Not(NodeId),
+    /// 2-input AND.
     And(NodeId, NodeId),
+    /// 2-input OR.
     Or(NodeId, NodeId),
+    /// 2-input XOR.
     Xor(NodeId, NodeId),
 }
 
 impl Gate {
+    /// Propagation delay of this gate type.
     pub fn delay(&self) -> Delay {
         match self {
             Gate::Input | Gate::Const(_) => 0,
@@ -42,6 +51,7 @@ impl Gate {
         }
     }
 
+    /// The gate's fan-in nodes (0, 1 or 2 of them).
     pub fn inputs(&self) -> impl Iterator<Item = NodeId> {
         let (a, b) = match *self {
             Gate::Input | Gate::Const(_) => (None, None),
@@ -56,15 +66,19 @@ impl Gate {
 /// an ordered list of output nodes.
 #[derive(Debug, Clone, Default)]
 pub struct Netlist {
+    /// All nodes, inputs-before-users (a topological order).
     pub gates: Vec<Gate>,
+    /// Output nodes, LSB first.
     pub outputs: Vec<NodeId>,
 }
 
 impl Netlist {
+    /// Total node count (inputs + constants + gates).
     pub fn len(&self) -> usize {
         self.gates.len()
     }
 
+    /// Whether the netlist has no nodes at all.
     pub fn is_empty(&self) -> bool {
         self.gates.is_empty()
     }
@@ -175,10 +189,12 @@ impl Netlist {
 /// constant propagation).
 #[derive(Debug, Default)]
 pub struct NetBuilder {
+    /// Nodes emitted so far, in creation (= topological) order.
     pub gates: Vec<Gate>,
 }
 
 impl NetBuilder {
+    /// Fresh empty builder.
     pub fn new() -> Self {
         Self::default()
     }
@@ -189,14 +205,17 @@ impl NetBuilder {
         id
     }
 
+    /// New external input node.
     pub fn input(&mut self) -> NodeId {
         self.push(Gate::Input)
     }
 
+    /// `n` new input nodes, LSB first.
     pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
         (0..n).map(|_| self.input()).collect()
     }
 
+    /// Constant 0/1 node.
     pub fn constant(&mut self, v: bool) -> NodeId {
         self.push(Gate::Const(v))
     }
@@ -208,6 +227,7 @@ impl NetBuilder {
         }
     }
 
+    /// NOT gate (folds constant operands).
     pub fn not(&mut self, a: NodeId) -> NodeId {
         match self.const_of(a) {
             Some(c) => self.constant(!c),
@@ -215,6 +235,7 @@ impl NetBuilder {
         }
     }
 
+    /// AND gate (folds constant operands).
     pub fn and(&mut self, a: NodeId, b: NodeId) -> NodeId {
         match (self.const_of(a), self.const_of(b)) {
             (Some(false), _) | (_, Some(false)) => self.constant(false),
@@ -224,6 +245,7 @@ impl NetBuilder {
         }
     }
 
+    /// OR gate (folds constant operands).
     pub fn or(&mut self, a: NodeId, b: NodeId) -> NodeId {
         match (self.const_of(a), self.const_of(b)) {
             (Some(true), _) | (_, Some(true)) => self.constant(true),
@@ -233,6 +255,7 @@ impl NetBuilder {
         }
     }
 
+    /// XOR gate (folds constant operands; XOR-with-1 becomes NOT).
     pub fn xor(&mut self, a: NodeId, b: NodeId) -> NodeId {
         match (self.const_of(a), self.const_of(b)) {
             (Some(false), _) => b,
@@ -243,11 +266,13 @@ impl NetBuilder {
         }
     }
 
+    /// 3-input AND as two 2-input gates.
     pub fn and3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
         let ab = self.and(a, b);
         self.and(ab, c)
     }
 
+    /// 3-input OR as two 2-input gates.
     pub fn or3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
         let ab = self.or(a, b);
         self.or(ab, c)
@@ -276,6 +301,7 @@ impl NetBuilder {
         (self.xor(a, b), self.and(a, b))
     }
 
+    /// Seal the builder into a [`Netlist`] with the given output nodes.
     pub fn finish(self, outputs: Vec<NodeId>) -> Netlist {
         Netlist { gates: self.gates, outputs }
     }

@@ -17,8 +17,11 @@ pub const ACC_BITS: usize = 24;
 /// Input node ids of the assembled MAC, grouped by port.
 #[derive(Debug, Clone)]
 pub struct MacPorts {
+    /// Weight bits, LSB first (8).
     pub w: Vec<NodeId>,
+    /// Activation bits, LSB first (8).
     pub a: Vec<NodeId>,
+    /// Accumulator-in bits, LSB first ([`ACC_BITS`]).
     pub acc: Vec<NodeId>,
 }
 

@@ -22,8 +22,9 @@ use super::{dynsim, mac8, sta};
 /// (outliers/salient, RTN W8) must meet.
 pub const BASE_FREQ_GHZ: f64 = 1.9;
 
-/// Codebook sizes from the paper (§III-C2).
+/// Fast (low-sensitivity) codebook size from the paper (§III-C2).
 pub const FAST_SET: usize = 9;
+/// Medium (high-sensitivity) codebook size from the paper (§III-C2).
 pub const MED_SET: usize = 16;
 
 /// Default number of sampled transitions per weight for timing/power stats.
@@ -61,8 +62,9 @@ pub struct MacProfile {
     pub codebook_fast: Vec<i8>,
     /// The 16 lowest-delay weight values (high-sensitivity codebook).
     pub codebook_med: Vec<i8>,
-    /// Achievable frequency of each derived class (GHz).
+    /// Achievable frequency of the fast (9-value) class (GHz).
     pub f_fast_ghz: f64,
+    /// Achievable frequency of the medium (16-value) class (GHz).
     pub f_med_ghz: f64,
     /// = BASE_FREQ_GHZ by calibration.
     pub f_base_ghz: f64,
@@ -192,18 +194,22 @@ impl MacProfile {
         1000.0 / self.set_delay_ps(set).max(1e-9)
     }
 
+    /// Calibrated dynamic critical-path delay (ps) of weight `w`.
     pub fn delay_of(&self, w: i8) -> f64 {
         self.delay_ps[widx(w)]
     }
 
+    /// Achievable clock (GHz) of weight `w`.
     pub fn freq_of(&self, w: i8) -> f64 {
         self.freq_ghz[widx(w)]
     }
 
+    /// Mean gate toggles per MAC op with weight `w`.
     pub fn toggles_of(&self, w: i8) -> f64 {
         self.mean_toggles[widx(w)]
     }
 
+    /// Dynamic energy per MAC op (pJ) with weight `w`.
     pub fn energy_of(&self, w: i8) -> f64 {
         self.energy_pj[widx(w)]
     }
@@ -221,6 +227,7 @@ impl MacProfile {
         self.energy_pj.iter().sum::<f64>() / 256.0
     }
 
+    /// Serialize for the on-disk cache / Python-side consumers.
     pub fn to_json(&self) -> Json {
         let f64s = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
         let i8s = |v: &[i8]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
@@ -240,6 +247,7 @@ impl MacProfile {
         o
     }
 
+    /// Deserialize a profile produced by [`to_json`](Self::to_json).
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let f64s = |k: &str| -> crate::Result<Vec<f64>> {
             j.req(k)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
@@ -263,6 +271,7 @@ impl MacProfile {
         })
     }
 
+    /// Write the profile to `path` atomically (write-then-rename).
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -277,6 +286,7 @@ impl MacProfile {
         Ok(())
     }
 
+    /// Read a profile saved by [`save`](Self::save).
     pub fn load(path: &Path) -> crate::Result<Self> {
         Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }

@@ -34,6 +34,11 @@ fn to_xla(lit: &Literal) -> Result<xla::Literal> {
         LiteralData::F32(v) => xla::Literal::vec1(v).reshape(&dims_i64)?,
         LiteralData::I32(v) => xla::Literal::vec1(v).reshape(&dims_i64)?,
         LiteralData::I8(v) => {
+            // SAFETY: reinterpreting `&[i8]` as `&[u8]` — identical size,
+            // alignment and layout, same element count, read-only borrow
+            // whose lifetime is bounded by `v` (used before `v` drops);
+            // every bit pattern is valid for both types.
+            #[allow(unsafe_code)] // crate denies unsafe; this audited cast is the one exception
             let bytes: &[u8] =
                 unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) };
             xla::Literal::create_from_shape_and_untyped_data(

@@ -6,16 +6,23 @@
 
 use std::time::{Duration, Instant};
 
+/// Per-iteration timing statistics from one [`bench`]/[`bench_n`] run.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label (as printed by [`report`](Self::report)).
     pub name: String,
+    /// Timed iterations collected.
     pub iters: u64,
+    /// Mean per-iteration wall time.
     pub mean: Duration,
+    /// Median per-iteration wall time.
     pub p50: Duration,
+    /// 95th-percentile per-iteration wall time.
     pub p95: Duration,
 }
 
 impl BenchStats {
+    /// Mean per-iteration wall time in seconds.
     pub fn mean_s(&self) -> f64 {
         self.mean.as_secs_f64()
     }
@@ -33,6 +40,7 @@ impl BenchStats {
     }
 }
 
+/// Human-readable duration with an auto-selected unit (ns/µs/ms/s).
 pub fn fmt_dur(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {

@@ -5,9 +5,13 @@
 
 use anyhow::{anyhow, Context, Result};
 
+/// Parsed command line: positionals in order plus `--flag [value]` pairs.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Non-flag tokens, in the order given.
     pub positional: Vec<String>,
+    /// `(name, value)` per `--name [value]` occurrence, in order; `None`
+    /// for bare switches.
     pub flags: Vec<(String, Option<String>)>,
 }
 
@@ -31,14 +35,17 @@ impl Args {
         out
     }
 
+    /// Parse the process's own arguments (skipping the program name).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` appeared (with or without a value).
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|(n, _)| n == name)
     }
 
+    /// Value of the *last* `--name value` occurrence, if any.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags
             .iter()
@@ -56,10 +63,12 @@ impl Args {
             .collect()
     }
 
+    /// `--name`'s value, or `default` when absent.
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as `usize`, or `default` when absent.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -67,6 +76,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as `u64`, or `default` when absent.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -74,6 +84,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as `f64`, or `default` when absent.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -81,16 +92,20 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as `i64` when present (`None` when absent).
     pub fn i64_of(&self, name: &str) -> Result<Option<i64>> {
         self.get(name)
             .map(|v| v.parse().with_context(|| format!("--{name} must be an integer")))
             .transpose()
     }
 
+    /// First positional (the subcommand by convention).
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
 
+    /// These args with the first positional stripped (descend one
+    /// subcommand level; flags carry through).
     pub fn rest(&self) -> Args {
         Args {
             positional: self.positional.iter().skip(1).cloned().collect(),
@@ -98,6 +113,7 @@ impl Args {
         }
     }
 
+    /// `--name`'s value, or an error naming the missing flag.
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
     }

@@ -9,22 +9,32 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (stored as f64; integers < 2^53 are exact).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-sorted for deterministic emission).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors ----
+    /// Empty object, ready for chained [`set`](Self::set) calls.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert/overwrite `key` on an object (panics on non-objects —
+    /// builder misuse, not a data error).
     pub fn set(&mut self, key: &str, v: impl Into<Json>) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), v.into());
@@ -35,6 +45,7 @@ impl Json {
     }
 
     // ---- accessors ----
+    /// Object member lookup (`None` on missing key or non-object).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -42,10 +53,12 @@ impl Json {
         }
     }
 
+    /// Like [`get`](Self::get) but a missing key is an error naming it.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).ok_or_else(|| anyhow!("missing key `{key}`"))
     }
 
+    /// The number, or an error for any other variant.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -53,10 +66,12 @@ impl Json {
         }
     }
 
+    /// The number truncated to `usize` (counts/dims in manifests).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The bool, or an error for any other variant.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -64,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The string, or an error for any other variant.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -71,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or an error for any other variant.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -78,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The object map, or an error for any other variant.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -95,12 +113,14 @@ impl Json {
     }
 
     // ---- emit ----
+    /// Multi-line emission (objects indented; arrays stay on one line).
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
         s
     }
 
+    /// Single-line emission with no whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);
@@ -161,6 +181,7 @@ impl Json {
     }
 
     // ---- parse ----
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();

@@ -1,11 +1,13 @@
 //! In-crate substitutes for unavailable third-party crates (offline build):
-//! RNG, JSON, CLI parsing, bench harness. See DESIGN.md §Key decisions.
+//! RNG, JSON, CLI parsing, bench harness, and a loom-style sync shim with
+//! a built-in model checker. See DESIGN.md §Key decisions.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use rng::Rng;

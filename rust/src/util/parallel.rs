@@ -13,7 +13,7 @@
 //! parallelism, optionally capped by [`set_max_threads`] (benches use the
 //! cap to measure serial baselines).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 
 /// 0 = auto (env / available parallelism); anything else caps the pool.
 static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -21,7 +21,8 @@ static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
 /// Serializes tests that toggle the process-global thread cap (they would
 /// otherwise race and silently weaken each other's serial leg).
 #[cfg(test)]
-pub(crate) static THREAD_CAP_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+pub(crate) static THREAD_CAP_TEST_LOCK: crate::util::sync::Mutex<()> =
+    crate::util::sync::Mutex::new(());
 
 /// Cap the number of worker threads (0 restores the default). Intended for
 /// benchmarks and tests that need a serial baseline; normal code never

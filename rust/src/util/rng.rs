@@ -22,6 +22,8 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Deterministic generator from a 64-bit seed (state expanded via
+    /// SplitMix64, per the xoshiro authors' recommendation).
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -33,6 +35,7 @@ impl Rng {
         Self { s, spare_normal: None }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -50,6 +53,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 bits (the generator's high half, per the reference).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -78,15 +82,18 @@ impl Rng {
         lo + self.gen_range_u64((hi - lo) as u64) as i64
     }
 
+    /// Uniform index in `[0, n)`.
     pub fn gen_usize(&mut self, n: usize) -> usize {
         self.gen_range_u64(n as u64) as usize
     }
 
+    /// Uniform `i8` over the full range.
     #[inline]
     pub fn gen_i8(&mut self) -> i8 {
         (self.next_u64() >> 56) as u8 as i8
     }
 
+    /// Fair coin flip.
     pub fn gen_bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
@@ -112,6 +119,7 @@ impl Rng {
         r * theta.cos()
     }
 
+    /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.gen_usize(i + 1);
@@ -119,6 +127,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly chosen element (panics on an empty slice).
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.gen_usize(xs.len())]
     }

@@ -1,0 +1,109 @@
+//! Shim atomics: `std::sync::atomic` wrappers whose every operation is a
+//! scheduling point inside [`super::model`].
+//!
+//! The model runs under sequentially-consistent semantics regardless of
+//! the `Ordering` passed (the scheduler serializes operations); outside a
+//! model the ordering is forwarded to std untouched.
+
+/// Memory orderings are std's own — the shim forwards them verbatim.
+pub use std::sync::atomic::Ordering;
+
+use super::engine::ctx;
+
+#[inline]
+fn hook() {
+    if let Some((sched, tid)) = ctx() {
+        sched.op_atomic(tid);
+    }
+}
+
+macro_rules! int_atomic {
+    ($(#[$meta:meta])* $name:ident, $std:ty, $int:ty) => {
+        $(#[$meta])*
+        #[derive(Debug, Default)]
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            /// Create a new atomic with the given initial value.
+            pub const fn new(v: $int) -> Self {
+                Self { inner: <$std>::new(v) }
+            }
+
+            /// Load the current value.
+            pub fn load(&self, order: Ordering) -> $int {
+                hook();
+                self.inner.load(order)
+            }
+
+            /// Store a new value.
+            pub fn store(&self, v: $int, order: Ordering) {
+                hook();
+                self.inner.store(v, order);
+            }
+
+            /// Add `v`, returning the previous value.
+            pub fn fetch_add(&self, v: $int, order: Ordering) -> $int {
+                hook();
+                self.inner.fetch_add(v, order)
+            }
+
+            /// Subtract `v`, returning the previous value.
+            pub fn fetch_sub(&self, v: $int, order: Ordering) -> $int {
+                hook();
+                self.inner.fetch_sub(v, order)
+            }
+
+            /// Replace the value, returning the previous one.
+            pub fn swap(&self, v: $int, order: Ordering) -> $int {
+                hook();
+                self.inner.swap(v, order)
+            }
+        }
+    };
+}
+
+int_atomic!(
+    /// Shim `AtomicUsize` (scheduling point per operation in a model).
+    AtomicUsize,
+    std::sync::atomic::AtomicUsize,
+    usize
+);
+int_atomic!(
+    /// Shim `AtomicU64` (scheduling point per operation in a model).
+    AtomicU64,
+    std::sync::atomic::AtomicU64,
+    u64
+);
+
+/// Shim `AtomicBool` (scheduling point per operation in a model).
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    /// Create a new atomic flag with the given initial value.
+    pub const fn new(v: bool) -> Self {
+        Self { inner: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    /// Load the current value.
+    pub fn load(&self, order: Ordering) -> bool {
+        hook();
+        self.inner.load(order)
+    }
+
+    /// Store a new value.
+    pub fn store(&self, v: bool, order: Ordering) {
+        hook();
+        self.inner.store(v, order);
+    }
+
+    /// Replace the value, returning the previous one.
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        hook();
+        self.inner.swap(v, order)
+    }
+}

@@ -1,0 +1,490 @@
+//! The deterministic interleaving explorer behind [`model`].
+//!
+//! One *execution* runs the model body on real OS threads, but exactly one
+//! thread is ever runnable: every shim operation is a scheduling point
+//! where the [`Scheduler`] picks which thread advances next. The sequence
+//! of picks is recorded; after an execution finishes, the deepest choice
+//! with an unexplored alternative becomes the replay prefix of the next
+//! execution. The search therefore enumerates every interleaving of
+//! scheduling points exactly once (depth-first, no randomness, no
+//! wall-clock dependence).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+/// Scheduling-point budget per execution; exceeding it means the model is
+/// far too large to check exhaustively (a test-design bug, not a race).
+const MAX_STEPS: usize = 100_000;
+
+/// Default execution budget; override with `HALO_MODEL_MAX_EXECS`.
+const MAX_EXECS: usize = 50_000;
+
+thread_local! {
+    /// Set on threads spawned by the scheduler: (engine, my thread id).
+    static CTX: RefCell<Option<(Arc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The current thread's model context, if it runs under [`model`].
+pub(super) fn ctx() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Unwind payload used to tear threads down when an execution aborts; the
+/// thread wrapper swallows it so it never surfaces as a test panic.
+struct Abort;
+
+/// Why a blocked condvar waiter became runnable again.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(super) enum Wake {
+    /// `notify_one` / `notify_all` picked this waiter.
+    Notify,
+    /// The scheduler fired the waiter's timeout (`wait_timeout` only).
+    Timeout,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    /// Waiting to acquire the lock with this identity.
+    BlockedLock(usize),
+    /// Parked on a condvar; `can_timeout` waiters stay schedulable (the
+    /// scheduler picking one = its timeout fires).
+    BlockedCv { cv: usize, can_timeout: bool },
+    /// Waiting for the thread with this id to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct ThreadState {
+    status: Status,
+    woke: Option<Wake>,
+}
+
+struct SchedState {
+    threads: Vec<ThreadState>,
+    /// The one thread allowed to run user code right now.
+    current: usize,
+    /// Choice indices replayed from the previous execution.
+    prefix: Vec<usize>,
+    /// `(picked, options)` per scheduling decision this execution.
+    choices: Vec<(usize, usize)>,
+    /// Lock identity → owning thread id (absent = free).
+    locks: BTreeMap<usize, usize>,
+    steps: usize,
+    aborting: bool,
+    failure: Option<String>,
+}
+
+impl SchedState {
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        self.aborting = true;
+    }
+
+    fn all_finished(&self) -> bool {
+        self.threads.iter().all(|t| t.status == Status::Finished)
+    }
+
+    fn schedulable(&self, tid: usize) -> bool {
+        matches!(
+            self.threads[tid].status,
+            Status::Runnable | Status::BlockedCv { can_timeout: true, .. }
+        )
+    }
+}
+
+/// One model-checking engine instance (one call to [`explore`]); reused
+/// across nothing — each execution builds a fresh `Scheduler`.
+pub(super) struct Scheduler {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    fn new(prefix: Vec<usize>) -> Self {
+        Self {
+            state: StdMutex::new(SchedState {
+                threads: Vec::new(),
+                current: 0,
+                prefix,
+                choices: Vec::new(),
+                locks: BTreeMap::new(),
+                steps: 0,
+                aborting: false,
+                failure: None,
+            }),
+            cv: StdCondvar::new(),
+            handles: StdMutex::new(Vec::new()),
+        }
+    }
+
+    /// Lock the scheduler state from a *model* thread: if the execution is
+    /// aborting, unwind instead of proceeding.
+    fn lock_model(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.aborting {
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        st
+    }
+
+    /// Record one scheduling decision over `n` options (replaying the
+    /// prefix first, then defaulting to option 0 for DFS).
+    fn choose(st: &mut SchedState, n: usize) -> usize {
+        let depth = st.choices.len();
+        let k = if depth < st.prefix.len() {
+            let k = st.prefix[depth];
+            if k >= n {
+                st.fail(format!(
+                    "nondeterministic replay: choice {depth} had {n} options, prefix wanted {k} \
+                     (does the model branch on wall-clock time or an unmodeled input?)"
+                ));
+                0
+            } else {
+                k
+            }
+        } else {
+            0
+        };
+        st.choices.push((k, n));
+        k
+    }
+
+    /// Pick the next thread to run among the schedulable set and make it
+    /// current. No schedulable thread + unfinished threads = deadlock.
+    fn pick_next(&self, st: &mut SchedState) {
+        if st.aborting {
+            self.cv.notify_all();
+            return;
+        }
+        st.steps += 1;
+        if st.steps > MAX_STEPS {
+            st.fail(format!(
+                "model exceeded {MAX_STEPS} scheduling points in one execution — shrink the model"
+            ));
+            self.cv.notify_all();
+            return;
+        }
+        let options: Vec<usize> =
+            (0..st.threads.len()).filter(|&t| st.schedulable(t)).collect();
+        if options.is_empty() {
+            if !st.all_finished() {
+                let stuck: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.status != Status::Finished)
+                    .map(|(i, t)| format!("thread {i}: {:?}", t.status))
+                    .collect();
+                st.fail(format!("deadlock: no schedulable thread [{}]", stuck.join(", ")));
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let k = Self::choose(st, options.len());
+        let tid = options[k];
+        // Scheduling a timeout-able condvar waiter = its timeout fires.
+        if let Status::BlockedCv { can_timeout: true, .. } = st.threads[tid].status {
+            st.threads[tid].status = Status::Runnable;
+            st.threads[tid].woke = Some(Wake::Timeout);
+        }
+        st.current = tid;
+        self.cv.notify_all();
+    }
+
+    /// Park until this thread is current and runnable; returns the state
+    /// guard so callers can keep mutating under the same lock hold.
+    fn wait_turn<'a>(
+        &'a self,
+        mut st: std::sync::MutexGuard<'a, SchedState>,
+        tid: usize,
+    ) -> std::sync::MutexGuard<'a, SchedState> {
+        loop {
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.current == tid && st.threads[tid].status == Status::Runnable {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Plain scheduling point: any schedulable thread (including the
+    /// caller) may run next.
+    pub(super) fn op_yield(&self, tid: usize) {
+        let mut st = self.lock_model();
+        self.pick_next(&mut st);
+        let _st = self.wait_turn(st, tid);
+    }
+
+    /// Acquire the lock with identity `id` (a scheduling point; blocks —
+    /// in scheduler terms — while another thread owns it).
+    pub(super) fn lock_acquire(&self, tid: usize, id: usize) {
+        self.op_yield(tid);
+        let mut st = self.lock_model();
+        loop {
+            match st.locks.get(&id) {
+                None => {
+                    st.locks.insert(id, tid);
+                    return;
+                }
+                Some(&owner) if owner == tid => {
+                    st.fail(format!("thread {tid} re-locked a mutex it already holds"));
+                    drop(st);
+                    std::panic::panic_any(Abort);
+                }
+                Some(_) => {
+                    st.threads[tid].status = Status::BlockedLock(id);
+                    self.pick_next(&mut st);
+                    st = self.wait_turn(st, tid);
+                }
+            }
+        }
+    }
+
+    /// Release the lock with identity `id` and make its waiters runnable
+    /// (they re-contend when next scheduled). Not a scheduling point.
+    pub(super) fn lock_release(&self, tid: usize, id: usize) {
+        let mut st = match self.state.lock() {
+            Ok(st) => st,
+            Err(e) => e.into_inner(),
+        };
+        if st.aborting {
+            return; // teardown: the execution is being torn down anyway
+        }
+        if st.locks.remove(&id).is_none() {
+            st.fail(format!("thread {tid} released a mutex it does not hold"));
+            return;
+        }
+        for t in st.threads.iter_mut() {
+            if t.status == Status::BlockedLock(id) {
+                t.status = Status::Runnable;
+            }
+        }
+    }
+
+    /// Register the caller as a waiter on condvar `cv`. Must be called
+    /// *before* the associated lock is released; no scheduling happens
+    /// until [`cv_park`](Self::cv_park).
+    pub(super) fn cv_register(&self, tid: usize, cv: usize, can_timeout: bool) {
+        let mut st = self.lock_model();
+        st.threads[tid].status = Status::BlockedCv { cv, can_timeout };
+        st.threads[tid].woke = None;
+    }
+
+    /// Park on the condvar registered via [`cv_register`](Self::cv_register);
+    /// returns true when the wakeup was a timeout.
+    pub(super) fn cv_park(&self, tid: usize) -> bool {
+        let mut st = self.lock_model();
+        self.pick_next(&mut st);
+        let mut st = self.wait_turn(st, tid);
+        st.threads[tid].woke.take() == Some(Wake::Timeout)
+    }
+
+    /// Wake one waiter on condvar `cv` (which one is a scheduling choice —
+    /// exactly the nondeterminism `notify_one` has in production).
+    pub(super) fn cv_notify_one(&self, tid: usize, cv: usize) {
+        self.op_yield(tid);
+        let mut st = self.lock_model();
+        let waiters: Vec<usize> = (0..st.threads.len())
+            .filter(|&t| matches!(st.threads[t].status, Status::BlockedCv { cv: c, .. } if c == cv))
+            .collect();
+        if waiters.is_empty() {
+            return; // a lost notify is faithfully a no-op
+        }
+        let k = Self::choose(&mut st, waiters.len());
+        let w = waiters[k];
+        st.threads[w].status = Status::Runnable;
+        st.threads[w].woke = Some(Wake::Notify);
+    }
+
+    /// Wake every waiter on condvar `cv`.
+    pub(super) fn cv_notify_all(&self, tid: usize, cv: usize) {
+        self.op_yield(tid);
+        let mut st = self.lock_model();
+        for t in st.threads.iter_mut() {
+            if matches!(t.status, Status::BlockedCv { cv: c, .. } if c == cv) {
+                t.status = Status::Runnable;
+                t.woke = Some(Wake::Notify);
+            }
+        }
+    }
+
+    /// Atomic-operation scheduling point (the op itself runs on the real
+    /// std atomic immediately after, while the caller is still current).
+    pub(super) fn op_atomic(&self, tid: usize) {
+        self.op_yield(tid);
+    }
+
+    /// Register + start a new model thread running `f`; returns its id.
+    pub(super) fn spawn(self: &Arc<Self>, parent: usize, f: Box<dyn FnOnce() + Send>) -> usize {
+        self.op_yield(parent);
+        let child = {
+            let mut st = self.lock_model();
+            st.threads.push(ThreadState { status: Status::Runnable, woke: None });
+            st.threads.len() - 1
+        };
+        self.spawn_os_thread(child, f);
+        child
+    }
+
+    /// Block until thread `target` finishes (a scheduling point).
+    pub(super) fn join(&self, tid: usize, target: usize) {
+        self.op_yield(tid);
+        let mut st = self.lock_model();
+        loop {
+            if st.threads[target].status == Status::Finished {
+                return;
+            }
+            st.threads[tid].status = Status::BlockedJoin(target);
+            self.pick_next(&mut st);
+            st = self.wait_turn(st, tid);
+        }
+    }
+
+    fn spawn_os_thread(self: &Arc<Self>, tid: usize, f: Box<dyn FnOnce() + Send>) {
+        let sched = self.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("halo-model-{tid}"))
+            .spawn(move || {
+                CTX.with(|c| *c.borrow_mut() = Some((sched.clone(), tid)));
+                let in_body = sched.clone();
+                let result = catch_unwind(AssertUnwindSafe(move || {
+                    // Park until first scheduled, then run the model body.
+                    let st = in_body.lock_model();
+                    drop(in_body.wait_turn(st, tid));
+                    f();
+                }));
+                sched.finish_thread(tid, result);
+            })
+            .expect("spawning a model thread");
+        self.handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(h);
+    }
+
+    fn finish_thread(&self, tid: usize, result: std::thread::Result<()>) {
+        let mut st = match self.state.lock() {
+            Ok(st) => st,
+            Err(e) => e.into_inner(),
+        };
+        if let Err(payload) = result {
+            if !payload.is::<Abort>() && !st.aborting {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                st.fail(format!("model thread {tid} panicked: {msg}"));
+            }
+        }
+        st.threads[tid].status = Status::Finished;
+        for t in st.threads.iter_mut() {
+            if t.status == Status::BlockedJoin(tid) {
+                t.status = Status::Runnable;
+            }
+        }
+        self.pick_next(&mut st);
+        self.cv.notify_all();
+    }
+
+    /// Run one execution of the model body; returns the recorded choices
+    /// and the failure, if any.
+    fn run_one(
+        self: &Arc<Self>,
+        f: Arc<dyn Fn() + Send + Sync>,
+    ) -> (Vec<(usize, usize)>, Option<String>) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.threads.push(ThreadState { status: Status::Runnable, woke: None });
+            st.current = 0;
+        }
+        self.spawn_os_thread(0, Box::new(move || f()));
+        let (choices, failure) = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            while !st.all_finished() {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            (std::mem::take(&mut st.choices), st.failure.take())
+        };
+        let handles = std::mem::take(
+            &mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()),
+        );
+        for h in handles {
+            let _ = h.join(); // panics were already captured per-thread
+        }
+        (choices, failure)
+    }
+}
+
+/// What [`explore`] reports about a completed search.
+#[derive(Debug, Clone, Copy)]
+pub struct Exploration {
+    /// Number of distinct interleavings executed.
+    pub executions: usize,
+}
+
+/// Exhaustively explore every interleaving of `f`'s scheduling points.
+///
+/// `f` is re-run once per interleaving, so it must construct all of its
+/// shared state fresh inside the closure. Returns how many executions the
+/// search needed; panics (with the failing schedule) on deadlock, on a
+/// panic inside a model thread, or when the state space exceeds the
+/// execution budget (`HALO_MODEL_MAX_EXECS`, default 50 000).
+pub fn explore<F: Fn() + Send + Sync + 'static>(f: F) -> Exploration {
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let max_execs = std::env::var("HALO_MODEL_MAX_EXECS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(MAX_EXECS);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut executions = 0usize;
+    loop {
+        executions += 1;
+        let sched = Arc::new(Scheduler::new(prefix.clone()));
+        let (choices, failure) = sched.run_one(f.clone());
+        if let Some(msg) = failure {
+            let trace: Vec<usize> = choices.iter().map(|c| c.0).collect();
+            panic!(
+                "model failed on execution {executions}: {msg}\nfailing schedule: {trace:?}"
+            );
+        }
+        // Deepest decision with an unexplored alternative → next prefix.
+        let mut next = None;
+        for i in (0..choices.len()).rev() {
+            let (picked, options) = choices[i];
+            if picked + 1 < options {
+                let mut p: Vec<usize> = choices[..i].iter().map(|c| c.0).collect();
+                p.push(picked + 1);
+                next = Some(p);
+                break;
+            }
+        }
+        match next {
+            Some(p) => prefix = p,
+            None => return Exploration { executions },
+        }
+        if executions >= max_execs {
+            panic!(
+                "model state space exceeded {max_execs} executions — shrink the model or raise \
+                 HALO_MODEL_MAX_EXECS"
+            );
+        }
+    }
+}
+
+/// Model-check `f` across every interleaving of its scheduling points,
+/// panicking on the first failing schedule. The loom-`model()` analogue.
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) {
+    explore(f);
+}

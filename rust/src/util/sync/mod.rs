@@ -1,0 +1,45 @@
+//! Synchronization shim: the only sanctioned gateway to `Mutex`/`Condvar`
+//! (enforced by `halo-lint`'s `sync-via-shim` rule), with a built-in
+//! model-checking mode.
+//!
+//! The offline build has no `loom` crate, so this module carries its own
+//! CHESS-style systematic concurrency tester (see [`model`]): inside
+//! [`model`], every shim primitive becomes a *scheduling point* of a
+//! deterministic cooperative scheduler that explores thread interleavings
+//! exhaustively by depth-first search over scheduling choices. Outside
+//! [`model`] the types are zero-surprise wrappers that delegate straight
+//! to `std::sync` — production code pays one thread-local lookup per
+//! operation and nothing else.
+//!
+//! Two build modes:
+//!
+//! - default: passthrough outside [`model`], checked inside. The loom-style
+//!   suite (`tests/loom_coordinator.rs`) runs under plain `cargo test`.
+//! - `--cfg loom` (the strict CI leg): using a shim primitive *outside*
+//!   [`model`] panics, which proves the model-checked suite exercises only
+//!   modeled code paths.
+//!
+//! What the checker explores and what it cannot see: interleavings are
+//! enumerated at shim-operation granularity (lock/unlock, condvar
+//! wait/notify, atomic ops, spawn/join) under sequentially-consistent
+//! semantics. It detects deadlocks, lost wakeups, lost updates,
+//! check-then-act races and invariant violations on modeled state; it does
+//! *not* model weak memory orderings (loom does) nor interleave plain
+//! non-atomic memory accesses between scheduling points. All shared state
+//! in a model must therefore live behind these shim types — the same rule
+//! loom imposes.
+
+pub mod atomic;
+mod engine;
+mod primitives;
+#[cfg(test)]
+mod tests;
+pub mod thread;
+
+pub use engine::{explore, model, Exploration};
+pub use primitives::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// Re-exported so call sites migrate off `std::sync` wholesale.
+pub use std::sync::Arc;
+/// Lock results mirror `std::sync` exactly (poison carries the guard).
+pub use std::sync::{LockResult, PoisonError};

@@ -1,0 +1,237 @@
+//! [`Mutex`] and [`Condvar`]: `std::sync` wrappers that become
+//! model-checked primitives inside [`super::model`].
+//!
+//! Outside a model they delegate to the wrapped std types (the std mutex
+//! provides the real exclusion). Inside a model, *logical* ownership is
+//! granted by the scheduler — which is what makes every acquire/wait a
+//! scheduling point — and the std types underneath never contend, because
+//! only the logically-owning thread touches them.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError};
+use std::time::Duration;
+
+use super::engine::ctx;
+
+/// Panics when a shim primitive is used outside [`super::model`] in the
+/// strict build (`--cfg loom`) — the CI leg that proves the loom-style
+/// suite exercises only modeled code.
+#[inline]
+fn strict_passthrough_check() {
+    #[cfg(loom)]
+    panic!("sync shim used outside model() under --cfg loom");
+}
+
+/// Drop-in `std::sync::Mutex` replacement with a model-checked mode.
+///
+/// `const`-constructible, so process-global statics (e.g. the workload
+/// trace cache) keep working.
+#[derive(Debug, Default)]
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a new mutex guarding `value`.
+    pub const fn new(value: T) -> Self {
+        Self { inner: std::sync::Mutex::new(value) }
+    }
+
+    /// The lock's model identity (its address; stable for the `Arc`- or
+    /// static-held mutexes a model can express).
+    fn id(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    /// Acquire the lock, blocking until available. Mirrors
+    /// `std::sync::Mutex::lock`, poison semantics included.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match ctx() {
+            Some((sched, tid)) => sched.lock_acquire(tid, self.id()),
+            None => strict_passthrough_check(),
+        }
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    /// Consume the mutex, returning the inner value (poison reported as in
+    /// `std::sync::Mutex::into_inner`).
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+/// RAII guard for [`Mutex`]; releases logical (model) ownership after the
+/// physical std unlock.
+#[derive(Debug)]
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    /// `Some` until dropped or handed to a condvar wait.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Take the std guard out without running our Drop (condvar
+    /// passthrough hands the guard to `std::sync::Condvar`).
+    fn into_std(mut self) -> std::sync::MutexGuard<'a, T> {
+        let g = self.inner.take().expect("guard invariant: inner present until drop");
+        std::mem::forget(self);
+        g
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard invariant: inner present until drop")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard invariant: inner present until drop")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Physical unlock first, then logical release: by the time another
+        // thread can be granted logical ownership, the std lock is free.
+        drop(self.inner.take());
+        if let Some((sched, tid)) = ctx() {
+            sched.lock_release(tid, self.lock.id());
+        }
+    }
+}
+
+/// Result of a [`Condvar::wait_timeout`]; mirrors
+/// `std::sync::WaitTimeoutResult`.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    /// True when the wait returned because the timeout elapsed (in a
+    /// model: because the scheduler chose to fire the timeout).
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Drop-in `std::sync::Condvar` replacement with a model-checked mode.
+///
+/// In a model, `notify_one`'s choice of waiter and a timed wait's
+/// timeout-vs-notify outcome are scheduling choices, so the search covers
+/// lost-wakeup and timeout races. Untimed waits wake only on notify
+/// (spurious wakeups are not modeled; all in-crate wait loops re-check
+/// their predicate regardless).
+#[derive(Debug, Default)]
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    /// Create a new condition variable.
+    pub const fn new() -> Self {
+        Self { inner: std::sync::Condvar::new() }
+    }
+
+    fn id(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    /// Release `guard` and park until notified; reacquires before
+    /// returning. Mirrors `std::sync::Condvar::wait`.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match ctx() {
+            None => {
+                strict_passthrough_check();
+                let lock = guard.lock;
+                match self.inner.wait(guard.into_std()) {
+                    Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        inner: Some(p.into_inner()),
+                    })),
+                }
+            }
+            Some((sched, tid)) => {
+                let lock = guard.lock;
+                sched.cv_register(tid, self.id(), false);
+                drop(guard);
+                sched.cv_park(tid);
+                lock.lock()
+            }
+        }
+    }
+
+    /// Like [`wait`](Self::wait) but also wakes when `dur` elapses. In a
+    /// model the duration is ignored: whether the timeout fires is a
+    /// scheduling choice, so both outcomes are explored.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match ctx() {
+            None => {
+                strict_passthrough_check();
+                let lock = guard.lock;
+                match self.inner.wait_timeout(guard.into_std(), dur) {
+                    Ok((g, r)) => Ok((
+                        MutexGuard { lock, inner: Some(g) },
+                        WaitTimeoutResult { timed_out: r.timed_out() },
+                    )),
+                    Err(p) => {
+                        let (g, r) = p.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard { lock, inner: Some(g) },
+                            WaitTimeoutResult { timed_out: r.timed_out() },
+                        )))
+                    }
+                }
+            }
+            Some((sched, tid)) => {
+                let lock = guard.lock;
+                sched.cv_register(tid, self.id(), true);
+                drop(guard);
+                let timed_out = sched.cv_park(tid);
+                match lock.lock() {
+                    Ok(g) => Ok((g, WaitTimeoutResult { timed_out })),
+                    Err(p) => Err(PoisonError::new((
+                        p.into_inner(),
+                        WaitTimeoutResult { timed_out },
+                    ))),
+                }
+            }
+        }
+    }
+
+    /// Wake one waiter (which one is a scheduling choice in a model).
+    pub fn notify_one(&self) {
+        match ctx() {
+            Some((sched, tid)) => sched.cv_notify_one(tid, self.id()),
+            None => {
+                strict_passthrough_check();
+                self.inner.notify_one();
+            }
+        }
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        match ctx() {
+            Some((sched, tid)) => sched.cv_notify_all(tid, self.id()),
+            None => {
+                strict_passthrough_check();
+                self.inner.notify_all();
+            }
+        }
+    }
+}

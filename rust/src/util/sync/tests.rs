@@ -1,0 +1,175 @@
+//! Engine self-tests: the explorer must prove correct protocols correct,
+//! and *find* planted deadlocks, lost wakeups and lost updates.
+
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use super::atomic::{AtomicUsize, Ordering};
+use super::{explore, model, thread, Arc, Condvar, Mutex};
+
+#[test]
+fn single_threaded_model_needs_exactly_one_execution() {
+    let ex = explore(|| {
+        let m = Mutex::new(0);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 1);
+    });
+    assert_eq!(ex.executions, 1, "no concurrency → no alternatives to explore");
+}
+
+#[test]
+fn mutex_increments_never_lose_updates() {
+    let ex = explore(|| {
+        let m = Arc::new(Mutex::new(0u32));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let m = m.clone();
+                thread::spawn(move || *m.lock().unwrap() += 1)
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*m.lock().unwrap(), 2);
+    });
+    assert!(ex.executions > 1, "two racing threads must yield multiple interleavings");
+}
+
+#[test]
+fn check_then_act_lost_update_is_found() {
+    // Non-atomic increment (load; store) from two threads: the exhaustive
+    // search must witness BOTH the correct outcome (2) and the lost
+    // update (1). This is the canonical race the shim exists to catch.
+    let finals = Arc::new(std::sync::Mutex::new(HashSet::new()));
+    let sink = finals.clone();
+    explore(move || {
+        let a = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let a = a.clone();
+                thread::spawn(move || {
+                    let v = a.load(Ordering::SeqCst);
+                    a.store(v + 1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        sink.lock().unwrap().insert(a.load(Ordering::SeqCst));
+    });
+    let finals = finals.lock().unwrap();
+    assert!(finals.contains(&2), "missed the race-free interleaving: {finals:?}");
+    assert!(finals.contains(&1), "missed the lost-update interleaving: {finals:?}");
+}
+
+#[test]
+fn lock_order_inversion_deadlock_is_detected() {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        model(|| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (a.clone(), b.clone());
+            let t = thread::spawn(move || {
+                let _ga = a2.lock().unwrap();
+                let _gb = b2.lock().unwrap();
+            });
+            {
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+            }
+            t.join().unwrap();
+        });
+    }));
+    let msg = format!("{:?}", r.expect_err("AB/BA lock order must deadlock"));
+    assert!(msg.contains("deadlock"), "wrong failure: {msg}");
+}
+
+#[test]
+fn lost_wakeup_without_predicate_loop_is_detected() {
+    // The waiter waits unconditionally; if the notify lands first it is
+    // lost and the waiter parks forever. The search must find that
+    // schedule and report the deadlock.
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let waiter = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let g = m.lock().unwrap();
+                let _g = cv.wait(g).unwrap(); // BUG under test: no predicate re-check
+            });
+            let (m, cv) = &*pair;
+            *m.lock().unwrap() = true;
+            cv.notify_one();
+            waiter.join().unwrap();
+        });
+    }));
+    let msg = format!("{:?}", r.expect_err("unconditional wait must lose a wakeup"));
+    assert!(msg.contains("deadlock"), "wrong failure: {msg}");
+}
+
+#[test]
+fn predicate_loop_condvar_protocol_is_race_free() {
+    // The same handoff with the canonical while-loop protocol passes
+    // under every interleaving.
+    let ex = explore(|| {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        let waiter = thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+        });
+        let (m, cv) = &*pair;
+        *m.lock().unwrap() = true;
+        cv.notify_one();
+        waiter.join().unwrap();
+    });
+    assert!(ex.executions > 1);
+}
+
+#[test]
+fn wait_timeout_fires_when_nothing_notifies() {
+    let saw_timeout = Arc::new(std::sync::Mutex::new(false));
+    let sink = saw_timeout.clone();
+    explore(move || {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let mut g = m.lock().unwrap();
+        while !*g {
+            let (g2, r) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            g = g2;
+            if r.timed_out() {
+                *sink.lock().unwrap() = true;
+                return; // drop the guard; nothing will ever set the flag
+            }
+        }
+    });
+    assert!(*saw_timeout.lock().unwrap(), "timeout path never explored");
+}
+
+#[test]
+fn passthrough_mode_works_like_std() {
+    // Outside model(): shim types are plain std wrappers.
+    let m = Arc::new(Mutex::new(0u32));
+    let a = Arc::new(AtomicUsize::new(0));
+    let (m2, a2) = (m.clone(), a.clone());
+    let h = thread::spawn(move || {
+        *m2.lock().unwrap() += 5;
+        a2.fetch_add(1, Ordering::SeqCst);
+        7u32
+    });
+    assert_eq!(h.join().unwrap(), 7);
+    assert_eq!(*m.lock().unwrap(), 5);
+    assert_eq!(a.load(Ordering::SeqCst), 1);
+
+    // A passthrough timed wait actually times out.
+    let g = m.lock().unwrap();
+    let cv = Condvar::new();
+    let (_g, r) = cv.wait_timeout(g, Duration::from_millis(5)).unwrap();
+    assert!(r.timed_out());
+}

@@ -1,0 +1,66 @@
+//! Shim `thread::spawn`/`JoinHandle`: std threads outside a model,
+//! scheduler-managed threads inside one.
+
+use std::sync::Arc;
+
+use super::engine::{ctx, Scheduler};
+
+enum Inner<T> {
+    Std(std::thread::JoinHandle<T>),
+    Model {
+        sched: Arc<Scheduler>,
+        tid: usize,
+        result: Arc<std::sync::Mutex<Option<T>>>,
+    },
+}
+
+/// Handle to a spawned shim thread; join to collect its result.
+pub struct JoinHandle<T>(Inner<T>);
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish and return its result. Mirrors
+    /// `std::thread::JoinHandle::join` (an `Err` carries the panic
+    /// payload; in a model, a panicked thread fails the whole model
+    /// before `join` can observe it).
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Inner::Std(h) => h.join(),
+            Inner::Model { sched, tid, result } => {
+                let (_, caller) = ctx().expect("model JoinHandle joined outside its model");
+                sched.join(caller, tid);
+                let v = result
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
+                    .expect("model thread finished without storing a result");
+                Ok(v)
+            }
+        }
+    }
+}
+
+/// Spawn a thread running `f`. Inside [`super::model`] the thread is
+/// scheduler-managed (its operations become scheduling points); outside,
+/// this is `std::thread::spawn`.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match ctx() {
+        None => JoinHandle(Inner::Std(std::thread::spawn(f))),
+        Some((sched, my_tid)) => {
+            let result: Arc<std::sync::Mutex<Option<T>>> =
+                Arc::new(std::sync::Mutex::new(None));
+            let slot = result.clone();
+            let tid = sched.spawn(
+                my_tid,
+                Box::new(move || {
+                    let v = f();
+                    *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                }),
+            );
+            JoinHandle(Inner::Model { sched, tid, result })
+        }
+    }
+}

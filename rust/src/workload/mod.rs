@@ -240,14 +240,14 @@ impl LayerQuant {
         profile: &MacProfile,
         seed: u64,
     ) -> Self {
+        use crate::util::sync::Mutex;
         use std::collections::HashMap;
-        use std::sync::Mutex;
         static CACHE: Mutex<Option<HashMap<(String, usize, usize, u64), LayerQuant>>> =
             Mutex::new(None);
         let key = (method.to_string(), n_tiles, tile, seed);
         if let Some(hit) = CACHE
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get_or_insert_with(HashMap::new)
             .get(&key)
         {
@@ -256,7 +256,7 @@ impl LayerQuant {
         let out = Self::for_method_uncached(method, n_tiles, tile, profile, seed);
         CACHE
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get_or_insert_with(HashMap::new)
             .insert(key, out.clone());
         out

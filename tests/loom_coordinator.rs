@@ -1,0 +1,169 @@
+//! Loom-style exhaustive model checks over the coordinator's concurrency
+//! protocols, driven by the in-tree CHESS-style explorer in
+//! `halo::util::sync` (offline build: no `loom` crate).
+//!
+//! Every `model(..)` body below is re-run once per distinct interleaving
+//! of its scheduling points (shim lock/unlock, condvar wait/notify, atomic
+//! ops, spawn/join), so the asserts hold under *every* schedule, not just
+//! the ones a timing-dependent stress test happens to hit. The suite runs
+//! under plain `cargo test`; the CI `analysis` job additionally builds it
+//! with `--cfg loom`, which makes any shim use *outside* a model panic and
+//! thereby proves these tests exercise only modeled code.
+//!
+//! Model-safety rules (see `util::sync` docs): models only call untimed
+//! queue ops (`push`/`pop`/`try_pop`/`try_fill`/`close` — `pop_deadline`
+//! and `next_batch` branch on wall-clock time and are documented not
+//! model-safe), and every model keeps its scheduling-point count small:
+//! the DFS explores roughly C(total points, per-thread points)
+//! interleavings and must finish within the execution budget.
+
+use std::time::Duration;
+
+use halo::coordinator::{Batcher, BatcherConfig, Metrics, PushError, RequestQueue};
+use halo::util::sync::atomic::Ordering;
+use halo::util::sync::{explore, model, thread, Arc};
+
+/// Admission control vs shed vs shutdown on a cap-1 queue: two producers
+/// race a `close()`, and under every interleaving the queue accepts at
+/// most `cap` items, refuses the rest with the right error (item returned
+/// intact), and drains exactly what it accepted.
+#[test]
+fn model_bounded_admission_vs_shed_vs_shutdown() {
+    let ex = explore(|| {
+        let q = Arc::new(RequestQueue::bounded(1));
+        let (q1, q2) = (q.clone(), q.clone());
+        let p1 = thread::spawn(move || q1.push(1u32));
+        let p2 = thread::spawn(move || q2.push(2u32));
+        q.close();
+        let r1 = p1.join().unwrap();
+        let r2 = p2.join().unwrap();
+
+        let (mut accepted, mut full, mut closed) = (0, 0, 0);
+        for r in [r1, r2] {
+            match r {
+                Ok(()) => accepted += 1,
+                Err(PushError::Full(v)) => {
+                    assert!(v == 1 || v == 2, "rejected item mangled: {v}");
+                    full += 1;
+                }
+                Err(PushError::Closed(v)) => {
+                    assert!(v == 1 || v == 2, "rejected item mangled: {v}");
+                    closed += 1;
+                }
+            }
+        }
+        assert!(accepted <= 1, "cap-1 queue admitted {accepted}");
+        assert_eq!(accepted + full + closed, 2);
+        // `Full` means the other producer's item occupied the only slot
+        // (nothing pops concurrently, so the slot can't have been freed).
+        if full > 0 {
+            assert_eq!(accepted, 1, "shed as Full with an empty queue");
+        }
+        assert!(q.is_closed());
+
+        // Drain: exactly the accepted items, then a sticky closed state.
+        let mut drained = 0;
+        while q.try_pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, accepted, "accepted {accepted} but drained {drained}");
+        assert!(matches!(q.push(9), Err(PushError::Closed(9))));
+        assert_eq!(q.pop(), None, "closed+drained pop must not block");
+    });
+    assert!(ex.executions > 1, "racing producers must branch the search");
+}
+
+/// Continuous-batching top-up vs retire: a producer pushes two requests
+/// and closes while the consumer takes one blocking `pop` (the in-flight
+/// decode picking up work) and then a `Batcher::try_fill` top-up. Under
+/// every interleaving the consumer observes each item exactly once, in
+/// FIFO order, no matter how the top-up splits against the pushes.
+#[test]
+fn model_try_fill_topup_vs_producer_close() {
+    let ex = explore(|| {
+        let q = Arc::new(RequestQueue::bounded(0));
+        let batcher = Batcher::new(
+            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(5) },
+            q.clone(),
+        );
+        let qp = q.clone();
+        let producer = thread::spawn(move || {
+            qp.push(1u32).unwrap();
+            qp.push(2).unwrap();
+            qp.close();
+        });
+
+        // Blocking pop: both pushes precede the close, so the first item
+        // is always delivered (close never swallows queued work).
+        let mut got = vec![q.pop().expect("pop lost an item queued before close")];
+        // Racy top-up: may see zero or more of the remaining items.
+        let topup = batcher.try_fill(4);
+        assert!(topup.len() <= 1, "only one item can remain for the top-up");
+        got.extend(topup);
+        producer.join().unwrap();
+        // Single-threaded drain of whatever the top-up missed.
+        while let Some(v) = q.try_pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![1, 2], "items lost, duplicated or reordered");
+        assert!(q.is_closed());
+    });
+    assert!(ex.executions > 1, "producer/consumer race must branch the search");
+}
+
+/// Two shards recording into one `Metrics` concurrently: the latency
+/// reservoir (mutex) and the counters (atomics) lose no updates under any
+/// interleaving of the two recorders.
+#[test]
+fn model_concurrent_recording_loses_no_updates() {
+    model(|| {
+        let m = Arc::new(Metrics::default());
+        let (a, b) = (m.clone(), m.clone());
+        let t1 = thread::spawn(move || a.record_latency(Duration::from_micros(10)));
+        let t2 = thread::spawn(move || {
+            b.record_latency(Duration::from_micros(20));
+            b.generated_tokens.fetch_add(3, Ordering::Relaxed);
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.latencies_us, vec![10, 20], "reservoir lost or reordered a sample");
+        assert_eq!(s.generated_tokens, 3);
+    });
+}
+
+/// `Metrics::merged` taken mid-flight against a concurrent recorder: the
+/// snapshot is always internally consistent (sorted, only ever-recorded
+/// values, bounded counters) even though it races the recording, and the
+/// post-join merge is exact.
+#[test]
+fn model_merged_snapshot_vs_concurrent_recording() {
+    model(|| {
+        let m1 = Arc::new(Metrics::default());
+        let m2 = Arc::new(Metrics::default());
+        // Shard 2's history predates the race (single-threaded prelude).
+        m2.record_latency(Duration::from_micros(5));
+        m2.responses.fetch_add(1, Ordering::Relaxed);
+
+        let r = m1.clone();
+        let recorder = thread::spawn(move || {
+            r.record_latency(Duration::from_micros(10));
+            r.responses.fetch_add(1, Ordering::Relaxed);
+        });
+
+        // Mid-flight merge across both shards, racing the recorder.
+        let mid = Metrics::merged(&[&*m1, &*m2]);
+        assert!(!mid.latencies_us.is_empty() && mid.latencies_us.len() <= 2);
+        assert!(mid.latencies_us.contains(&5), "pre-race sample vanished");
+        assert!(mid.latencies_us.iter().all(|&v| v == 5 || v == 10));
+        assert!(mid.latencies_us.windows(2).all(|w| w[0] <= w[1]), "merge unsorted");
+        assert!(mid.responses >= 1 && mid.responses <= 2);
+
+        recorder.join().unwrap();
+        let fin = Metrics::merged(&[&*m1, &*m2]);
+        assert_eq!(fin.latencies_us, vec![5, 10]);
+        assert_eq!(fin.responses, 2);
+        assert_eq!(fin.percentile_latency(0.5), Some(Duration::from_micros(5)));
+        assert_eq!(fin.percentile_latency(1.0), Some(Duration::from_micros(10)));
+    });
+}

@@ -6,7 +6,9 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator, QuantExecutor, SubmitSpec};
+use halo::coordinator::{
+    BatchExecutor, BatcherConfig, Coordinator, Metrics, QuantExecutor, SubmitSpec,
+};
 use halo::dvfs::{FreqClass, Schedule};
 use halo::mac::MacProfile;
 use halo::quant::baselines::by_name;
@@ -326,6 +328,39 @@ fn prop_kv_coordinator_answers_everything_without_shedding() {
             assert!(rx.recv_timeout(std::time::Duration::from_millis(1)).is_err());
         }
         coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn prop_merged_percentiles_equal_union_recompute() {
+    // For any shard count and any per-shard sample sizes (including empty
+    // shards): Metrics::merged reports exactly the percentiles of the
+    // union of all per-shard latency samples, and counters sum exactly.
+    use halo::util::sync::atomic::Ordering;
+    use std::time::Duration;
+    let mut rng = Rng::seed_from_u64(800);
+    for case in 0..CASES {
+        let nshards = 1 + rng.gen_usize(6);
+        let shards: Vec<Metrics> = (0..nshards).map(|_| Metrics::default()).collect();
+        let mut union: Vec<u64> = Vec::new();
+        for m in &shards {
+            for _ in 0..rng.gen_usize(40) {
+                let us = rng.gen_usize(1_000_000) as u64;
+                union.push(us);
+                m.record_latency(Duration::from_micros(us));
+                m.responses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let views: Vec<&Metrics> = shards.iter().collect();
+        let merged = Metrics::merged(&views);
+        union.sort_unstable();
+        assert_eq!(merged.latencies_us, union, "case {case}: union mismatch");
+        assert_eq!(merged.responses, union.len() as u64, "case {case}");
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let want = (!union.is_empty())
+                .then(|| Duration::from_micros(union[((union.len() - 1) as f64 * p) as usize]));
+            assert_eq!(merged.percentile_latency(p), want, "case {case} p={p}");
+        }
     }
 }
 

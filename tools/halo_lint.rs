@@ -1,0 +1,815 @@
+//! halo-lint: repo-specific static analysis over `rust/src` (offline
+//! build: no `syn`, so the scanner is a hand-rolled lexer that blanks
+//! comments and string/char literals before pattern matching).
+//!
+//! Rules (see DESIGN.md §Concurrency model & static analysis):
+//!
+//! - **no-panic-serving-path** — no `.unwrap()`, `.expect(`, `panic!`,
+//!   `unreachable!`, `todo!`, `unimplemented!` in non-test code of the
+//!   serving path (`coordinator/` plus `runtime/{qkernels,kvcache,sim}.rs`);
+//!   a panicking worker takes a whole shard with it, so every failure there
+//!   must shed or return an error instead. Unchecked indexing (`x[i]`,
+//!   `x[a..b]`) is additionally flagged in `coordinator/` — the runtime
+//!   kernel files are index-dominated numeric code whose bounds are
+//!   structural; they are exercised under Miri in CI instead.
+//! - **sync-via-shim** — no direct `std::sync::Mutex`/`Condvar` outside
+//!   `util/sync/`; everything must go through the shim so the model
+//!   checker can interpose (`--cfg loom` proves the test models do).
+//! - **no-undocumented-unsafe** — every `unsafe` keyword needs a
+//!   `// SAFETY:` comment within the preceding 10 lines.
+//! - **missing-docs-inventory** — the set of `#[allow(missing_docs)]`
+//!   module allows in `lib.rs` must equal the audited list in
+//!   `lint_allow.toml` (a new allow is a docs-debt regression → error;
+//!   a removed one leaves a stale inventory entry → warning).
+//!
+//! Audited exceptions live in `lint_allow.toml` at the repo root: each
+//! `[[allow]]` entry names a rule, a file suffix, a `contains` substring
+//! of the offending line, and a one-line `why`. Unused entries warn so
+//! the allowlist can't rot. Exit status: 1 if any finding survives the
+//! allowlist, 0 otherwise.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// Findings and scope
+// ---------------------------------------------------------------------------
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone, PartialEq)]
+struct Finding {
+    rule: &'static str,
+    /// Path relative to `rust/src`, forward slashes.
+    file: String,
+    /// 1-based.
+    line: usize,
+    msg: String,
+    /// Raw (unblanked) source line, for allowlist matching and display.
+    snippet: String,
+}
+
+const RULE_PANIC: &str = "no-panic-serving-path";
+const RULE_SYNC: &str = "sync-via-shim";
+const RULE_UNSAFE: &str = "no-undocumented-unsafe";
+const RULE_DOCS: &str = "missing-docs-inventory";
+
+/// Serving-path files beyond `coordinator/` (repo-relative to `rust/src`).
+const SERVING_RUNTIME_FILES: &[&str] =
+    &["runtime/qkernels.rs", "runtime/kvcache.rs", "runtime/sim.rs"];
+
+fn in_serving_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || SERVING_RUNTIME_FILES.contains(&rel)
+}
+
+fn in_indexing_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/")
+}
+
+fn in_shim(rel: &str) -> bool {
+    rel.starts_with("util/sync/") || rel == "util/sync.rs"
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: blank comments and literals, preserving line structure
+// ---------------------------------------------------------------------------
+
+/// Return a copy of `src` with every comment, string/byte-string literal
+/// (including raw strings) and char literal replaced by spaces. Newlines
+/// are preserved, so line/column positions survive. Lifetimes (`'a`) are
+/// left intact.
+fn blank_noncode(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for slot in out.iter_mut().take(to.min(n)).skip(from) {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i;
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+                blank(&mut out, start, i);
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                while i < n {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'r' if i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') => {
+                // Raw string r"..." / r#"..."# (any hash depth).
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    let start = i;
+                    j += 1;
+                    'close: while j < n {
+                        if b[j] == b'"' {
+                            let mut k = j + 1;
+                            let mut h = 0usize;
+                            while k < n && h < hashes && b[k] == b'#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                j = k;
+                                break 'close;
+                            }
+                        }
+                        j += 1;
+                    }
+                    blank(&mut out, start, j);
+                    i = j;
+                } else {
+                    i += 1;
+                }
+            }
+            b'b' if i + 1 < n && b[i + 1] == b'"' => {
+                let start = i;
+                i += 2;
+                while i < n {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'\'' => {
+                // Char literal vs lifetime: '\x' escapes and 'c' (single
+                // char then closing quote) are literals; anything else —
+                // `'a` in `<'a>`, `&'static` — is a lifetime, left alone.
+                if i + 1 < n && b[i + 1] == b'\\' {
+                    let start = i;
+                    let mut j = i + 2;
+                    while j < n && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    blank(&mut out, start, (j + 1).min(n));
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && b[i + 2] == b'\'' {
+                    blank(&mut out, i, i + 3);
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Per-line mask: `true` where the line belongs to a `#[cfg(test)]` item
+/// (attribute line through the item's closing brace / terminating `;`).
+/// Operates on the blanked source so braces in strings don't confuse the
+/// matcher.
+fn test_mask(blanked: &str) -> Vec<bool> {
+    let lines: Vec<&str> = blanked.lines().collect();
+    let mut mask = vec![false; lines.len()];
+    let mut li = 0;
+    while li < lines.len() {
+        if !lines[li].trim_start().starts_with("#[cfg(test)]") {
+            li += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut lj = li;
+        'item: while lj < lines.len() {
+            for ch in lines[lj].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'item;
+                        }
+                    }
+                    // `#[cfg(test)] mod tests;` / `use ...;` — braceless item.
+                    ';' if !opened && lj > li => break 'item,
+                    _ => {}
+                }
+            }
+            lj += 1;
+        }
+        for m in mask.iter_mut().take((lj + 1).min(lines.len())).skip(li) {
+            *m = true;
+        }
+        li = lj + 1;
+    }
+    mask
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Positions of word-bounded occurrences of `word` in `line`.
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let lb = line.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let pre_ok = at == 0 || !is_ident(lb[at - 1]);
+        let end = at + word.len();
+        let post_ok = end >= lb.len() || !is_ident(lb[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// no-panic-serving-path over one file.
+fn rule_no_panic(rel: &str, raw: &[&str], code: &[&str], tests: &[bool], out: &mut Vec<Finding>) {
+    if !in_serving_scope(rel) {
+        return;
+    }
+    let index_scope = in_indexing_scope(rel);
+    for (i, &line) in code.iter().enumerate() {
+        if tests[i] {
+            continue;
+        }
+        let mut hits: Vec<String> = Vec::new();
+        if line.contains(".unwrap()") {
+            hits.push("`.unwrap()`".to_string());
+        }
+        if line.contains(".expect(") {
+            hits.push("`.expect(`".to_string());
+        }
+        for mac in ["panic", "unreachable", "todo", "unimplemented"] {
+            let call = format!("{mac}!");
+            if line
+                .find(&call)
+                .is_some_and(|p| p == 0 || !is_ident(line.as_bytes()[p - 1]))
+            {
+                hits.push(format!("`{call}`"));
+            }
+        }
+        for what in hits {
+            out.push(Finding {
+                rule: RULE_PANIC,
+                file: rel.to_string(),
+                line: i + 1,
+                msg: format!("{what} in serving path (shed or return an error instead)"),
+                snippet: raw[i].to_string(),
+            });
+        }
+        if index_scope && !line.trim_start().starts_with('#') {
+            let lb = line.as_bytes();
+            for (p, &c) in lb.iter().enumerate() {
+                if c == b'[' && p > 0 {
+                    let prev = lb[p - 1];
+                    if is_ident(prev) || prev == b')' || prev == b']' {
+                        out.push(Finding {
+                            rule: RULE_PANIC,
+                            file: rel.to_string(),
+                            line: i + 1,
+                            msg: "unchecked indexing in serving path (use `get`/`get_mut` \
+                                  or add an audited allow)"
+                                .to_string(),
+                            snippet: raw[i].to_string(),
+                        });
+                        break; // one finding per line
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// sync-via-shim over one file (tests included: models must use the shim
+/// too, or the checker can't interpose).
+fn rule_sync_shim(rel: &str, raw: &[&str], code: &[&str], out: &mut Vec<Finding>) {
+    if in_shim(rel) {
+        return;
+    }
+    for (i, &line) in code.iter().enumerate() {
+        if line.contains("std::sync::") && (line.contains("Mutex") || line.contains("Condvar")) {
+            out.push(Finding {
+                rule: RULE_SYNC,
+                file: rel.to_string(),
+                line: i + 1,
+                msg: "direct std::sync Mutex/Condvar (use crate::util::sync so the model \
+                      checker can interpose)"
+                    .to_string(),
+                snippet: raw[i].to_string(),
+            });
+        }
+    }
+}
+
+/// no-undocumented-unsafe over one file.
+fn rule_undocumented_unsafe(rel: &str, raw: &[&str], code: &[&str], out: &mut Vec<Finding>) {
+    for (i, &line) in code.iter().enumerate() {
+        if word_positions(line, "unsafe").is_empty() {
+            continue;
+        }
+        let lo = i.saturating_sub(10);
+        let documented = raw[lo..=i].iter().any(|l| l.contains("SAFETY:"));
+        if !documented {
+            out.push(Finding {
+                rule: RULE_UNSAFE,
+                file: rel.to_string(),
+                line: i + 1,
+                msg: "`unsafe` without a `// SAFETY:` comment in the preceding 10 lines"
+                    .to_string(),
+                snippet: raw[i].to_string(),
+            });
+        }
+    }
+}
+
+/// All per-file rules over one source file.
+fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let blanked = blank_noncode(src);
+    let raw: Vec<&str> = src.lines().collect();
+    let code: Vec<&str> = blanked.lines().collect();
+    let tests = test_mask(&blanked);
+    let mut out = Vec::new();
+    rule_no_panic(rel, &raw, &code, &tests, &mut out);
+    rule_sync_shim(rel, &raw, &code, &mut out);
+    rule_undocumented_unsafe(rel, &raw, &code, &mut out);
+    out
+}
+
+/// Module names carrying `#[allow(missing_docs)]` in `lib.rs` (the
+/// attribute line immediately followed by `pub mod <name>;`).
+fn lib_missing_docs_allows(lib_src: &str) -> Vec<String> {
+    let blanked = blank_noncode(lib_src);
+    let lines: Vec<&str> = blanked.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim() != "#[allow(missing_docs)]" {
+            continue;
+        }
+        if let Some(next) = lines.get(i + 1) {
+            let t = next.trim();
+            if let Some(rest) = t.strip_prefix("pub mod ") {
+                if let Some(name) = rest.strip_suffix(';') {
+                    out.push(name.trim().to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// missing-docs-inventory: compare lib.rs allows against the audited list.
+/// Returns (errors, warnings).
+fn check_docs_inventory(lib_src: &str, allowed: &[String]) -> (Vec<Finding>, Vec<String>) {
+    let present = lib_missing_docs_allows(lib_src);
+    let mut errors = Vec::new();
+    for m in &present {
+        if !allowed.contains(m) {
+            errors.push(Finding {
+                rule: RULE_DOCS,
+                file: "lib.rs".to_string(),
+                line: 0,
+                msg: format!(
+                    "new `#[allow(missing_docs)]` on module `{m}` — docs-debt regression \
+                     (document the module or add it to missing_docs_allowed with a plan)"
+                ),
+                snippet: format!("pub mod {m};"),
+            });
+        }
+    }
+    let mut warnings = Vec::new();
+    for m in allowed {
+        if !present.contains(m) {
+            warnings.push(format!(
+                "lint_allow.toml: missing_docs_allowed entry `{m}` is stale (module is now \
+                 documented) — remove it"
+            ));
+        }
+    }
+    (errors, warnings)
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist (minimal TOML subset: [[allow]] tables of string keys, plus one
+// top-level string array)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+struct AllowEntry {
+    rule: String,
+    file: String,
+    contains: String,
+    why: String,
+}
+
+#[derive(Debug, Default)]
+struct AllowList {
+    entries: Vec<AllowEntry>,
+    missing_docs_allowed: Vec<String>,
+}
+
+/// Extract the quoted strings from a `["a", "b"]` literal.
+fn parse_string_array(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(start) = rest.find('"') {
+        let Some(len) = rest[start + 1..].find('"') else { break };
+        out.push(rest[start + 1..start + 1 + len].to_string());
+        rest = &rest[start + 1 + len + 1..];
+    }
+    out
+}
+
+fn parse_allow_toml(text: &str) -> Result<AllowList> {
+    let mut list = AllowList::default();
+    let mut current: Option<AllowEntry> = None;
+    for (ln, raw_line) in text.lines().enumerate() {
+        let line = raw_line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = current.take() {
+                list.entries.push(e);
+            }
+            current = Some(AllowEntry::default());
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            bail!("lint_allow.toml:{}: expected `key = value`", ln + 1);
+        };
+        let (key, val) = (key.trim(), val.trim());
+        if key == "missing_docs_allowed" {
+            list.missing_docs_allowed = parse_string_array(val);
+            continue;
+        }
+        let Some(e) = current.as_mut() else {
+            bail!("lint_allow.toml:{}: key `{key}` outside an [[allow]] table", ln + 1);
+        };
+        let Some(v) = val.strip_prefix('"').and_then(|v| v.strip_suffix('"')) else {
+            bail!("lint_allow.toml:{}: `{key}` must be a double-quoted string", ln + 1);
+        };
+        match key {
+            "rule" => e.rule = v.to_string(),
+            "file" => e.file = v.to_string(),
+            "contains" => e.contains = v.to_string(),
+            "why" => e.why = v.to_string(),
+            other => bail!("lint_allow.toml:{}: unknown key `{other}`", ln + 1),
+        }
+    }
+    if let Some(e) = current.take() {
+        list.entries.push(e);
+    }
+    for (i, e) in list.entries.iter().enumerate() {
+        if e.rule.is_empty() || e.file.is_empty() || e.contains.is_empty() || e.why.is_empty() {
+            bail!("lint_allow.toml: [[allow]] entry {} needs rule, file, contains and why", i + 1);
+        }
+    }
+    Ok(list)
+}
+
+/// Partition findings into (kept, suppressed); flags which entries matched.
+fn apply_allows(findings: Vec<Finding>, allows: &[AllowEntry]) -> (Vec<Finding>, Vec<bool>) {
+    let mut used = vec![false; allows.len()];
+    let kept = findings
+        .into_iter()
+        .filter(|f| {
+            let mut suppressed = false;
+            for (i, a) in allows.iter().enumerate() {
+                if f.rule == a.rule && f.file.ends_with(&a.file) && f.snippet.contains(&a.contains)
+                {
+                    used[i] = true;
+                    suppressed = true;
+                }
+            }
+            !suppressed
+        })
+        .collect();
+    (kept, used)
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src_root = root.join("rust/src");
+    let allow_path = root.join("lint_allow.toml");
+    let allows = if allow_path.exists() {
+        parse_allow_toml(&std::fs::read_to_string(&allow_path)?)?
+    } else {
+        AllowList::default()
+    };
+
+    let mut files = Vec::new();
+    rust_files(&src_root, &mut files)?;
+
+    let mut findings = Vec::new();
+    let mut lib_src = String::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("walked under src_root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel == "lib.rs" {
+            lib_src = src.clone();
+        }
+        findings.extend(scan_source(&rel, &src));
+    }
+
+    let (docs_errors, mut warnings) = check_docs_inventory(&lib_src, &allows.missing_docs_allowed);
+    findings.extend(docs_errors);
+
+    let (kept, used) = apply_allows(findings, &allows.entries);
+    for (i, a) in allows.entries.iter().enumerate() {
+        if !used[i] {
+            warnings.push(format!(
+                "lint_allow.toml: unused [[allow]] entry (rule={}, file={}, contains={:?}) — \
+                 the code it audited is gone; remove it",
+                a.rule, a.file, a.contains
+            ));
+        }
+    }
+
+    for w in &warnings {
+        eprintln!("warning: {w}");
+    }
+    for f in &kept {
+        eprintln!("error[{}]: rust/src/{}:{}: {}", f.rule, f.file, f.line, f.msg);
+        eprintln!("    {}", f.snippet.trim());
+    }
+    let suppressed = allows.entries.iter().zip(&used).filter(|(_, &u)| u).count();
+    eprintln!(
+        "halo-lint: {} file(s), {} error(s), {} warning(s), {} audited allow(s) in use",
+        files.len(),
+        kept.len(),
+        warnings.len(),
+        suppressed
+    );
+    if !kept.is_empty() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: every rule must demonstrably fire and demonstrably pass
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn blanking_strips_comments_and_strings_keeps_lines() {
+        let src = "let a = \"x.unwrap()\"; // .expect(\nlet b = 'y'; /* panic! */ b\n";
+        let out = blank_noncode(src);
+        assert_eq!(out.lines().count(), src.lines().count());
+        assert!(!out.contains(".unwrap()"));
+        assert!(!out.contains(".expect("));
+        assert!(!out.contains("panic!"));
+        assert!(out.contains("let a"));
+        assert!(out.contains("let b"));
+    }
+
+    #[test]
+    fn blanking_handles_raw_strings_and_lifetimes() {
+        let src = "let r = r#\"a \"quoted\" .unwrap()\"#;\nfn f<'a>(x: &'a str) {}\n";
+        let out = blank_noncode(src);
+        assert!(!out.contains(".unwrap()"));
+        assert!(out.contains("fn f<'a>(x: &'a str)"), "lifetimes must survive: {out}");
+    }
+
+    #[test]
+    fn panic_rule_fires_on_each_pattern() {
+        for bad in [
+            "let x = m.lock().unwrap();",
+            "let x = rx.recv().expect(\"closed\");",
+            "panic!(\"boom\");",
+            "unreachable!()",
+            "todo!()",
+            "unimplemented!()",
+        ] {
+            let f = scan_source("coordinator/server.rs", bad);
+            assert_eq!(rules_of(&f), vec![RULE_PANIC], "pattern: {bad}");
+        }
+    }
+
+    #[test]
+    fn panic_rule_scope_and_lookalikes() {
+        // Outside the serving path: clean.
+        assert!(scan_source("mac/gate.rs", "x.unwrap();").is_empty());
+        // Poison-absorbing recovery is not unwrap.
+        let ok = "let g = m.lock().unwrap_or_else(|e| e.into_inner());";
+        assert!(scan_source("coordinator/server.rs", ok).is_empty());
+        // `panic_any` is not the macro.
+        assert!(scan_source("coordinator/server.rs", "std::panic::panic_any(Abort);").is_empty());
+    }
+
+    #[test]
+    fn panic_rule_skips_cfg_test_items() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(scan_source("coordinator/batch.rs", src).is_empty());
+        // ...but the same call outside the test module still fires.
+        let src2 = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {}\n";
+        assert_eq!(rules_of(&scan_source("coordinator/batch.rs", src2)), vec![RULE_PANIC]);
+    }
+
+    #[test]
+    fn indexing_flagged_in_coordinator_only() {
+        let idx = "let y = xs[i];";
+        assert_eq!(rules_of(&scan_source("coordinator/server.rs", idx)), vec![RULE_PANIC]);
+        let slice = "let t = &p[p.len() - n..];";
+        assert_eq!(rules_of(&scan_source("coordinator/server.rs", slice)), vec![RULE_PANIC]);
+        // Kernel files: unwrap/panic rules apply, indexing does not (Miri covers them).
+        assert!(scan_source("runtime/qkernels.rs", idx).is_empty());
+        assert_eq!(
+            rules_of(&scan_source("runtime/qkernels.rs", "x.unwrap();")),
+            vec![RULE_PANIC]
+        );
+        // vec![...] and attributes are not indexing.
+        assert!(scan_source("coordinator/server.rs", "let v = vec![1, 2];").is_empty());
+        assert!(scan_source("coordinator/server.rs", "#[derive(Debug)]\nstruct S;").is_empty());
+        // Array types/literals: `[` preceded by space or `&` — clean.
+        assert!(scan_source("coordinator/server.rs", "let a: [u8; 4] = [0; 4];").is_empty());
+    }
+
+    #[test]
+    fn sync_rule_fires_outside_shim_only() {
+        let direct = "use std::sync::Mutex;";
+        assert_eq!(rules_of(&scan_source("coordinator/metrics.rs", direct)), vec![RULE_SYNC]);
+        assert_eq!(
+            rules_of(&scan_source("mac/profile.rs", "let c = std::sync::Condvar::new();")),
+            vec![RULE_SYNC]
+        );
+        // The shim itself is the one place that may touch std::sync.
+        assert!(scan_source("util/sync/primitives.rs", direct).is_empty());
+        // Non-Mutex std::sync (mpsc, Arc, OnceLock) is fine anywhere.
+        assert!(scan_source("coordinator/server.rs", "use std::sync::mpsc;").is_empty());
+        assert!(scan_source("mac/profile.rs", "use std::sync::OnceLock;").is_empty());
+        // The shim's own re-export path is fine.
+        assert!(scan_source("coordinator/server.rs", "use crate::util::sync::Mutex;").is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_requires_nearby_safety_comment() {
+        let bad = "let p = unsafe { std::slice::from_raw_parts(a, n) };";
+        assert_eq!(rules_of(&scan_source("runtime/xla.rs", bad)), vec![RULE_UNSAFE]);
+        let good = "// SAFETY: same layout, bounded lifetime.\n\
+                    let p = unsafe { std::slice::from_raw_parts(a, n) };";
+        assert!(scan_source("runtime/xla.rs", good).is_empty());
+        // Identifiers containing the word are not the keyword...
+        assert!(scan_source("runtime/xla.rs", "#[allow(unsafe_code)]\nfn f() {}").is_empty());
+        // ...and AssertUnwindSafe is not unsafe.
+        assert!(scan_source(
+            "coordinator/server.rs",
+            "let r = catch_unwind(AssertUnwindSafe(f));"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn docs_inventory_detects_regression_and_staleness() {
+        let lib = "#[allow(missing_docs)]\npub mod experiments;\npub mod quant;\n";
+        // In the audited list: clean.
+        let (errs, warns) = check_docs_inventory(lib, &["experiments".to_string()]);
+        assert!(errs.is_empty() && warns.is_empty());
+        // Not in the list: docs-debt regression.
+        let (errs, _) = check_docs_inventory(lib, &[]);
+        assert_eq!(rules_of(&errs), vec![RULE_DOCS]);
+        // Listed but no longer present: stale warning, no error.
+        let (errs, warns) =
+            check_docs_inventory("pub mod quant;\n", &["experiments".to_string()]);
+        assert!(errs.is_empty());
+        assert_eq!(warns.len(), 1);
+    }
+
+    #[test]
+    fn allowlist_suppresses_matches_and_reports_unused() {
+        let findings = scan_source("coordinator/server.rs", "let s = &self.shards[s];");
+        assert_eq!(findings.len(), 1);
+        let allows = vec![
+            AllowEntry {
+                rule: RULE_PANIC.to_string(),
+                file: "coordinator/server.rs".to_string(),
+                contains: "self.shards[s]".to_string(),
+                why: "s from 0..shards.len()".to_string(),
+            },
+            AllowEntry {
+                rule: RULE_PANIC.to_string(),
+                file: "coordinator/server.rs".to_string(),
+                contains: "never-matches".to_string(),
+                why: "stale".to_string(),
+            },
+        ];
+        let (kept, used) = apply_allows(findings, &allows);
+        assert!(kept.is_empty());
+        assert_eq!(used, vec![true, false]);
+        // Wrong rule never suppresses.
+        let f2 = scan_source("coordinator/server.rs", "use std::sync::Mutex;");
+        let (kept2, _) = apply_allows(f2, &allows);
+        assert_eq!(kept2.len(), 1);
+    }
+
+    #[test]
+    fn allow_toml_parses_entries_and_inventory() {
+        let text = "# comment\n\
+                    missing_docs_allowed = [\"experiments\", \"gpu\"]\n\
+                    \n\
+                    [[allow]]\n\
+                    rule = \"no-panic-serving-path\"\n\
+                    file = \"coordinator/server.rs\"\n\
+                    contains = \"live[i]\"\n\
+                    why = \"i < live.len() loop bound\"\n";
+        let list = parse_allow_toml(text).unwrap();
+        assert_eq!(list.missing_docs_allowed, vec!["experiments", "gpu"]);
+        assert_eq!(list.entries.len(), 1);
+        assert_eq!(list.entries[0].contains, "live[i]");
+        // Incomplete entries are a hard error, not a silent no-op.
+        assert!(parse_allow_toml("[[allow]]\nrule = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn clean_tree_fixture_passes_all_rules() {
+        let src = "use crate::util::sync::{Arc, Mutex};\n\
+                   /// Documented.\n\
+                   pub fn serve(m: &Mutex<u32>) -> u32 {\n\
+                       *m.lock().unwrap_or_else(|e| e.into_inner())\n\
+                   }\n";
+        assert!(scan_source("coordinator/server.rs", src).is_empty());
+    }
+}
