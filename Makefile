@@ -7,13 +7,14 @@
 #   make bench-json      JSON benches → BENCH_PR2/PR3/PR4.json (perf trajectory)
 #   make docs            rustdoc with -D warnings + build all examples (same as CI)
 #   make fmt             rustfmt check (same as CI)
-#   make lint            halo-lint: panic-safety / sync-shim / unsafe-docs rules
+#   make lint            halo-lint: panic-safety / sync-shim / retry-bound / unsafe-docs
 #   make loom            exhaustive coordinator model checks (plain + --cfg loom)
+#   make chaos           seeded fault-injection soak (failpoints + shard recovery)
 
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt lint loom clean
+.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt lint loom chaos clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -82,8 +83,9 @@ fmt:
 	cargo fmt --check
 
 # Repo lint (CI `analysis` job): no-panic-serving-path, sync-via-shim,
-# no-undocumented-unsafe, missing-docs inventory. Audited exceptions live
-# in lint_allow.toml; the lint's own rule fixtures run first.
+# no-unbounded-retry, no-undocumented-unsafe, missing-docs inventory.
+# Audited exceptions live in lint_allow.toml; the lint's own rule
+# fixtures run first.
 lint:
 	cargo test --bin halo-lint -q
 	cargo run --release --bin halo-lint
@@ -95,6 +97,13 @@ loom:
 	cargo test --release --test loom_coordinator -- --nocapture
 	RUSTFLAGS="--cfg loom" CARGO_TARGET_DIR=target/loom \
 	  cargo test --release --test loom_coordinator
+
+# Chaos soak (CI `analysis` job): deterministic seeded failpoint schedules
+# driving shard kills, transient errors and delays through the supervised
+# coordinator; pins exactly-one-response, bit-identical retried decodes
+# and the metrics conservation law. See DESIGN.md Â§Fault model & recovery.
+chaos:
+	cargo test --release --test chaos -- --nocapture
 
 clean:
 	cargo clean

@@ -13,10 +13,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batch::BatcherConfig;
-use super::metrics::MetricsSnapshot;
+use super::metrics::{MetricsSnapshot, ShedReason};
 use super::server::{BatchExecutor, Coordinator, CoordinatorConfig, SubmitSpec};
 use crate::quant::Matrix;
 use crate::runtime::kernels::naive;
+use crate::util::failpoint::{self, sites, FailPlan, Fault};
 use crate::util::{Json, Rng};
 
 /// Fake model: deterministic next-token function plus a fixed dose of
@@ -98,6 +99,14 @@ pub struct LoadgenConfig {
     pub work_dim: usize,
     /// RNG seed for prefixes and pacing.
     pub seed: u64,
+    /// When set, install a seeded chaos failpoint schedule for the run
+    /// (`halo loadgen --chaos-seed`): shard kills, transient admit errors
+    /// and queue-push delays, all reproducible from this seed.
+    pub chaos_seed: Option<u64>,
+    /// Per-hit shard-kill probability for the chaos schedule (the other
+    /// fault classes fire at fractions of it); ignored without
+    /// `chaos_seed`.
+    pub kill_prob: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -114,6 +123,8 @@ impl Default for LoadgenConfig {
             prefix_len: 12,
             work_dim: 48,
             seed: 0x10AD,
+            chaos_seed: None,
+            kill_prob: 0.02,
         }
     }
 }
@@ -133,6 +144,16 @@ pub struct LoadgenReport {
     pub verified_ok: usize,
     /// Responses shed (deadline, admission, or executor failure).
     pub shed: usize,
+    /// Requests actually submitted (`< cfg.requests` iff `stopped_early`).
+    pub submitted: usize,
+    /// True when the coordinator reported total executor loss
+    /// ([`Coordinator::try_submit_spec`] returned the spec back) and the
+    /// generator stopped submitting — the remaining arrivals were never
+    /// sent, so they are *not* counted as shed (no phantom sheds).
+    pub stopped_early: bool,
+    /// Client-observed shed counts by [`ShedReason`], indexed in
+    /// [`ShedReason::ALL`] order (tallied from `Response::reason`).
+    pub shed_by_reason: [u64; 5],
 }
 
 impl LoadgenReport {
@@ -145,10 +166,17 @@ impl LoadgenReport {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("shards", self.cfg_shards)
+            .set("submitted", self.submitted)
+            .set("stopped_early", self.stopped_early)
             .set("verified_ok", self.verified_ok)
             .set("shed_total", self.shed)
             .set("throughput_rps", self.throughput_rps())
             .set("metrics", self.merged.to_json(Some(self.wall)));
+        let mut reasons = Json::obj();
+        for (r, &n) in ShedReason::ALL.iter().zip(&self.shed_by_reason) {
+            reasons.set(r.name(), n as f64);
+        }
+        j.set("shed_reasons", reasons);
         let shards: Vec<Json> =
             self.per_shard.iter().map(|s| s.to_json(Some(self.wall))).collect();
         j.set("per_shard", Json::Arr(shards));
@@ -157,14 +185,20 @@ impl LoadgenReport {
 
     /// One-line human summary (the `halo loadgen` console output).
     pub fn summary(&self) -> String {
+        let early = if self.stopped_early {
+            format!(" STOPPED-EARLY(submitted={})", self.submitted)
+        } else {
+            String::new()
+        };
         format!(
-            "shards={} wall={:.3}s throughput={:.0} req/s tokens/s={:.0} ok={} shed={} | {}",
+            "shards={} wall={:.3}s throughput={:.0} req/s tokens/s={:.0} ok={} shed={}{} | {}",
             self.cfg_shards,
             self.wall.as_secs_f64(),
             self.throughput_rps(),
             self.merged.tokens_per_sec(self.wall),
             self.verified_ok,
             self.shed,
+            early,
             self.merged.summary()
         )
     }
@@ -210,11 +244,27 @@ pub fn run_with<F>(
 where
     F: Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
 {
+    // Chaos mode: a seeded schedule of shard kills, transient admit
+    // errors and enqueue delays. The guard clears the process-global
+    // registry when the run ends (even on error).
+    let _chaos = cfg.chaos_seed.map(|seed| {
+        let p = cfg.kill_prob.clamp(0.0, 1.0);
+        failpoint::install_guarded(
+            vec![
+                FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_prob(p),
+                FailPlan::always(sites::SHARD_BEGIN, Fault::Error).with_prob(p / 2.0),
+                FailPlan::always(sites::QUEUE_PUSH, Fault::Delay(Duration::from_millis(1)))
+                    .with_prob(p / 4.0),
+            ],
+            seed,
+        )
+    });
     let coord_cfg = CoordinatorConfig {
         batcher: BatcherConfig { batch_size: cfg.batch_size, timeout: cfg.batch_timeout },
         shards: cfg.shards,
         queue_cap: cfg.queue_cap,
         default_deadline: cfg.deadline,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start_sharded(coord_cfg, make_executor);
 
@@ -227,6 +277,7 @@ where
 
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(cfg.requests);
+    let mut stopped_early = false;
     for (i, p) in prefixes.iter().enumerate() {
         if cfg.rps > 0.0 {
             let due = t0 + Duration::from_secs_f64(i as f64 / cfg.rps);
@@ -235,13 +286,24 @@ where
                 std::thread::sleep(due - now);
             }
         }
-        rxs.push(coord.submit_spec(SubmitSpec::generate(p.clone(), cfg.max_new_tokens)));
+        // Fallible submit: `Err` means every shard queue is closed (total
+        // executor loss) — stop generating load and report a partial run
+        // instead of minting phantom shed responses for arrivals that
+        // were never actually sent.
+        match coord.try_submit_spec(SubmitSpec::generate(p.clone(), cfg.max_new_tokens)) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => {
+                stopped_early = true;
+                break;
+            }
+        }
     }
+    let submitted = rxs.len();
 
     // Collect every response before verifying, so the measured wall clock
     // covers serving only — client-side chain re-derivation (which the
     // quantized path does against the real model) stays off the clock.
-    let mut responses = Vec::with_capacity(cfg.requests);
+    let mut responses = Vec::with_capacity(submitted);
     for rx in rxs {
         responses.push(rx.recv_timeout(Duration::from_secs(120))?);
     }
@@ -249,9 +311,17 @@ where
 
     let mut verified_ok = 0usize;
     let mut shed = 0usize;
+    let mut shed_by_reason = [0u64; 5];
     for (resp, p) in responses.iter().zip(&prefixes) {
         if resp.shed {
             shed += 1;
+            if let Some(reason) = resp.reason {
+                for (slot, r) in shed_by_reason.iter_mut().zip(ShedReason::ALL) {
+                    if r == reason {
+                        *slot += 1;
+                    }
+                }
+            }
         } else if verify(p.as_slice(), &resp.tokens, cfg.max_new_tokens) {
             verified_ok += 1;
         }
@@ -267,6 +337,9 @@ where
         per_shard: per,
         verified_ok,
         shed,
+        submitted,
+        stopped_early,
+        shed_by_reason,
     };
     coord.shutdown()?;
     Ok(report)
@@ -311,5 +384,38 @@ mod tests {
         };
         let r = run(&cfg).unwrap();
         assert_eq!(r.verified_ok + r.shed, 40);
+        assert_eq!(r.submitted, 40);
+        assert!(!r.stopped_early);
+    }
+
+    #[test]
+    fn total_executor_loss_stops_the_generator_without_phantom_sheds() {
+        // Every shard factory fails: the supervisor retires the shard
+        // permanently (closing its queue) within a few backoff periods.
+        // Once try_submit_spec reports the closure, the generator must
+        // stop — arrivals never sent are not counted anywhere.
+        let cfg = LoadgenConfig {
+            requests: 50,
+            shards: 1,
+            rps: 200.0, // 5 ms apart: the close lands mid-run
+            max_new_tokens: 1,
+            ..LoadgenConfig::default()
+        };
+        let verify = |_: &[i32], _: &[i32], _: usize| true;
+        let r = run_with(&cfg, 50, &verify, |_shard| {
+            anyhow::bail!("executor never comes up")
+        })
+        .unwrap();
+        assert!(r.stopped_early, "generator kept submitting into closed queues");
+        assert!(r.submitted < 50, "all 50 submitted despite total executor loss");
+        assert_eq!(r.verified_ok, 0);
+        assert_eq!(r.shed, r.submitted, "every submitted request must shed");
+        // Client-observed reasons cover every shed, and the coordinator's
+        // own arrival count matches what was actually submitted.
+        assert_eq!(r.shed_by_reason.iter().sum::<u64>(), r.shed as u64);
+        assert_eq!(r.merged.requests, r.submitted as u64);
+        let j = r.to_json();
+        assert_eq!(j.req("submitted").unwrap().as_usize().unwrap(), r.submitted);
+        assert!(j.req("shed_reasons").unwrap().req("shard_death").is_ok());
     }
 }

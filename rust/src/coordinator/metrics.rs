@@ -12,6 +12,49 @@ use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::Mutex;
 use crate::util::Json;
 
+/// Why a request was refused or dropped instead of served. Carried on
+/// every shed [`Response`](super::Response) and counted per-reason here,
+/// so traces can tell overload (deadline/admission/brown-out) apart from
+/// faults (shard death / retry exhaustion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// Deadline expired while queued or mid-decode.
+    Deadline,
+    /// Refused at admission: every open shard queue was at capacity.
+    Admission,
+    /// The owning shard died (or every shard was gone) and the request
+    /// could not be re-homed.
+    ShardDeath,
+    /// Retried after faults until the per-request or global retry budget
+    /// ran out.
+    RetryExhausted,
+    /// Dropped by brown-out degradation (low-priority work under
+    /// sustained overload / repeated shard death).
+    Brownout,
+}
+
+impl ShedReason {
+    /// All reasons, in reporting order.
+    pub const ALL: [ShedReason; 5] = [
+        ShedReason::Deadline,
+        ShedReason::Admission,
+        ShedReason::ShardDeath,
+        ShedReason::RetryExhausted,
+        ShedReason::Brownout,
+    ];
+
+    /// Stable snake_case name used in JSON reports and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::Deadline => "deadline",
+            ShedReason::Admission => "admission",
+            ShedReason::ShardDeath => "shard_death",
+            ShedReason::RetryExhausted => "retry_exhausted",
+            ShedReason::Brownout => "brownout",
+        }
+    }
+}
+
 /// Live serving counters + latency reservoir for one shard (or the
 /// coordinator's global aggregate).
 #[derive(Debug, Default)]
@@ -39,6 +82,24 @@ pub struct Metrics {
     /// forward pass over the schedule; pre-PR-5 counted once per request
     /// batch, undercounting multi-token decode by ~max_new×).
     pub dvfs_transitions: AtomicU64,
+    /// Successful shard respawns performed by the supervisor (a shard that
+    /// died and came back; permanent deaths are visible as shed requests).
+    pub shard_restarts: AtomicU64,
+    /// Requests re-enqueued after a fault (each consumes one token of the
+    /// global retry budget).
+    pub retries: AtomicU64,
+    /// Brown-out level transitions (each step up or down counts once).
+    pub brownout_steps: AtomicU64,
+    /// Sheds/rejections with [`ShedReason::Deadline`].
+    pub shed_deadline: AtomicU64,
+    /// Sheds/rejections with [`ShedReason::Admission`].
+    pub shed_admission: AtomicU64,
+    /// Sheds/rejections with [`ShedReason::ShardDeath`].
+    pub shed_shard_death: AtomicU64,
+    /// Sheds/rejections with [`ShedReason::RetryExhausted`].
+    pub shed_retry_exhausted: AtomicU64,
+    /// Sheds/rejections with [`ShedReason::Brownout`].
+    pub shed_brownout: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -66,6 +127,20 @@ impl Metrics {
         Some(Duration::from_micros(l[i]))
     }
 
+    /// The per-reason counter backing [`ShedReason`] accounting. Every
+    /// shed *or* rejected request increments exactly one of these, so
+    /// `Σ reasons == shed + rejected` at quiesce (the chaos suite pins
+    /// this conservation law).
+    pub fn shed_reason_counter(&self, reason: ShedReason) -> &AtomicU64 {
+        match reason {
+            ShedReason::Deadline => &self.shed_deadline,
+            ShedReason::Admission => &self.shed_admission,
+            ShedReason::ShardDeath => &self.shed_shard_death,
+            ShedReason::RetryExhausted => &self.shed_retry_exhausted,
+            ShedReason::Brownout => &self.shed_brownout,
+        }
+    }
+
     /// Served responses per executed decode step/batch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -90,6 +165,11 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             exec_errors: self.exec_errors.load(Ordering::Relaxed),
             dvfs_transitions: self.dvfs_transitions.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            brownout_steps: self.brownout_steps.load(Ordering::Relaxed),
+            shed_reasons: ShedReason::ALL
+                .map(|r| self.shed_reason_counter(r).load(Ordering::Relaxed)),
             latencies_us: lat,
         }
     }
@@ -109,6 +189,12 @@ impl Metrics {
             out.rejected += s.rejected;
             out.exec_errors += s.exec_errors;
             out.dvfs_transitions += s.dvfs_transitions;
+            out.shard_restarts += s.shard_restarts;
+            out.retries += s.retries;
+            out.brownout_steps += s.brownout_steps;
+            for (acc, v) in out.shed_reasons.iter_mut().zip(s.shed_reasons) {
+                *acc += v;
+            }
             out.latencies_us.extend_from_slice(&s.latencies_us);
         }
         out.latencies_us.sort_unstable();
@@ -150,11 +236,38 @@ pub struct MetricsSnapshot {
     pub exec_errors: u64,
     /// Simulated DVFS transitions (one schedule pass per decode step).
     pub dvfs_transitions: u64,
+    /// Successful shard respawns performed by the supervisor.
+    pub shard_restarts: u64,
+    /// Requests re-enqueued after a fault.
+    pub retries: u64,
+    /// Brown-out level transitions.
+    pub brownout_steps: u64,
+    /// Per-reason shed/reject counts, indexed in [`ShedReason::ALL`]
+    /// order; `Σ == shed + rejected` at quiesce.
+    pub shed_reasons: [u64; 5],
     /// Sorted ascending.
     pub latencies_us: Vec<u64>,
 }
 
 impl MetricsSnapshot {
+    /// Count recorded for one [`ShedReason`].
+    pub fn shed_for(&self, reason: ShedReason) -> u64 {
+        let [deadline, admission, shard_death, retry_exhausted, brownout] = self.shed_reasons;
+        match reason {
+            ShedReason::Deadline => deadline,
+            ShedReason::Admission => admission,
+            ShedReason::ShardDeath => shard_death,
+            ShedReason::RetryExhausted => retry_exhausted,
+            ShedReason::Brownout => brownout,
+        }
+    }
+
+    /// Sum over all per-reason shed counts (= `shed + rejected` at
+    /// quiesce).
+    pub fn shed_reason_total(&self) -> u64 {
+        self.shed_reasons.iter().sum()
+    }
+
     /// Latency percentile `p ∈ [0, 1]` over the snapshot's samples.
     pub fn percentile_latency(&self, p: f64) -> Option<Duration> {
         if self.latencies_us.is_empty() {
@@ -185,7 +298,8 @@ impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} shed={} rejected={} batches={} occupancy={:.2} \
-             p50={:?} p95={:?} p99={:?} generated={} dvfs_transitions={}",
+             p50={:?} p95={:?} p99={:?} generated={} dvfs_transitions={} \
+             restarts={} retries={} brownout_steps={}",
             self.requests,
             self.responses,
             self.shed,
@@ -197,6 +311,9 @@ impl MetricsSnapshot {
             self.percentile_latency(0.99).unwrap_or_default(),
             self.generated_tokens,
             self.dvfs_transitions,
+            self.shard_restarts,
+            self.retries,
+            self.brownout_steps,
         )
     }
 
@@ -216,9 +333,17 @@ impl MetricsSnapshot {
             .set("occupancy", self.mean_batch_occupancy())
             .set("generated_tokens", self.generated_tokens as f64)
             .set("dvfs_transitions", self.dvfs_transitions as f64)
+            .set("shard_restarts", self.shard_restarts as f64)
+            .set("retries", self.retries as f64)
+            .set("brownout_steps", self.brownout_steps as f64)
             .set("p50_us", us(0.50))
             .set("p95_us", us(0.95))
             .set("p99_us", us(0.99));
+        let mut reasons = Json::obj();
+        for r in ShedReason::ALL {
+            reasons.set(r.name(), self.shed_for(r) as f64);
+        }
+        j.set("shed_reasons", reasons);
         if let Some(w) = wall {
             let s = w.as_secs_f64().max(1e-12);
             j.set("wall_s", s)
@@ -273,6 +398,33 @@ mod tests {
         assert_eq!(s.latencies_us, vec![100, 900]);
         assert_eq!(s.percentile_latency(1.0).unwrap(), Duration::from_micros(900));
         assert_eq!(s.tokens_per_sec(Duration::from_secs(2)), 40.0);
+    }
+
+    #[test]
+    fn recovery_counters_merge_and_report() {
+        let a = Arc::new(Metrics::default());
+        let b = Arc::new(Metrics::default());
+        a.shard_restarts.store(2, Ordering::Relaxed);
+        b.shard_restarts.store(1, Ordering::Relaxed);
+        a.retries.store(5, Ordering::Relaxed);
+        b.brownout_steps.store(3, Ordering::Relaxed);
+        a.shed_reason_counter(ShedReason::Deadline).store(4, Ordering::Relaxed);
+        b.shed_reason_counter(ShedReason::Deadline).store(1, Ordering::Relaxed);
+        b.shed_reason_counter(ShedReason::RetryExhausted).store(2, Ordering::Relaxed);
+        let s = Metrics::merged(&[a, b]);
+        assert_eq!(s.shard_restarts, 3);
+        assert_eq!(s.retries, 5);
+        assert_eq!(s.brownout_steps, 3);
+        assert_eq!(s.shed_for(ShedReason::Deadline), 5);
+        assert_eq!(s.shed_for(ShedReason::RetryExhausted), 2);
+        assert_eq!(s.shed_for(ShedReason::Brownout), 0);
+        assert_eq!(s.shed_reason_total(), 7);
+        let j = s.to_json(None);
+        assert_eq!(j.req("shard_restarts").unwrap().as_f64().unwrap(), 3.0);
+        let reasons = j.req("shed_reasons").unwrap();
+        assert_eq!(reasons.req("deadline").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(reasons.req("retry_exhausted").unwrap().as_f64().unwrap(), 2.0);
+        assert!(s.summary().contains("retries=5"));
     }
 
     #[test]

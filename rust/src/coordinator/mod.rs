@@ -33,6 +33,15 @@
 //! to drain before starting. The cached path is pinned bit-identical to
 //! full-prefix recompute by `tests/decode_equiv.rs`.
 //!
+//! Shards are **supervised** (PR 7): each shard thread restarts its
+//! executor after a death (capped exponential backoff + jitter), re-homes
+//! orphaned requests onto survivors under per-request and global retry
+//! budgets, and degrades gracefully under sustained overload (brown-out:
+//! decode-budget clamping, then priority shedding). Every shed carries a
+//! [`ShedReason`](metrics::ShedReason); the fault-injection subsystem
+//! behind it lives in [`crate::util::failpoint`] and the whole layer is
+//! pinned by `tests/chaos.rs`. See DESIGN.md §Fault model & recovery.
+//!
 //! DVFS-awareness (§III-C3): each quantized model carries a
 //! [`crate::dvfs::Schedule`]; [`Schedule::shard`](crate::dvfs::Schedule::shard)
 //! splits it so every executor accounts its own per-class residency +
@@ -48,7 +57,8 @@ pub mod server;
 pub use batch::{Batcher, BatcherConfig};
 pub use queue::{Pop, PushError, RequestQueue};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShedReason};
 pub use server::{
     BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitSpec,
+    SupervisorConfig,
 };

@@ -75,7 +75,15 @@ impl<T> RequestQueue<T> {
     /// Enqueue `item`, or refuse it with [`PushError`] when the queue is
     /// full or closed. Never blocks — admission control decides to shed at
     /// the call site, not by stalling the producer.
+    ///
+    /// Carries the `queue.push` failpoint (soft site: it runs on the
+    /// submitter's thread, so injected faults surface as a transient
+    /// [`PushError::Full`] — exercising reroute/shed — never as a panic
+    /// unwinding into client code). Delay faults sleep before admission.
     pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        if crate::util::failpoint::check_soft(crate::util::failpoint::sites::QUEUE_PUSH).is_err() {
+            return Err(PushError::Full(item));
+        }
         let mut st = self.state();
         if st.closed {
             return Err(PushError::Closed(item));

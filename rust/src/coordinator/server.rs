@@ -33,11 +33,27 @@
 //! primitive here comes from [`crate::util::sync`] (model-checked in
 //! `tests/loom_coordinator.rs`, lint-enforced by `halo-lint`), and
 //! executor calls are unwind-fenced: a *panicking* executor kills only its
-//! own shard — the shard marks itself dead, sheds its live set and queue,
-//! and the router keeps serving on the healthy shards. A merely *erring*
-//! executor sheds the affected batch and keeps its shard. No panic
-//! propagates into a client-visible hang, and shard-held locks are never
-//! poisoned across the serving path (see DESIGN.md §Concurrency model).
+//! own shard. No panic propagates into a client-visible hang, and
+//! shard-held locks are never poisoned across the serving path (see
+//! DESIGN.md §Concurrency model).
+//!
+//! **Supervised recovery (PR 7).** Shard death is no longer terminal:
+//! each shard thread is a *supervisor* that runs executor "generations".
+//! When a generation dies (panicking executor, failed construction, or an
+//! injected `util::failpoint` fault), the supervisor re-homes the orphaned
+//! live set onto surviving shards (or back onto its own queue for the
+//! respawned replacement), sleeps a capped exponential backoff with
+//! seeded jitter, and respawns through its factory. Retries are bounded
+//! twice over — per request ([`SupervisorConfig::max_request_attempts`])
+//! and globally ([`SupervisorConfig::retry_budget`], a shared token pool
+//! that prevents retry storms) — and a retried request restarts decode
+//! from its *original prefix*, so greedy chains stay bit-identical to an
+//! unfaulted run. Requests that exhaust their retries are shed with
+//! [`ShedReason::RetryExhausted`] — never silently dropped. Sustained
+//! overload or repeated death raises the [brown-out](SupervisorConfig)
+//! level, which clamps `max_new_tokens` and sheds negative-priority work
+//! at admission before anything else is sacrificed. The whole layer is
+//! pinned by the chaos soak suite (`tests/chaos.rs`).
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -48,8 +64,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batch::{Batcher, BatcherConfig};
-use super::metrics::Metrics;
-use super::queue::RequestQueue;
+use super::metrics::{Metrics, ShedReason};
+use super::queue::{PushError, RequestQueue};
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::{Arc, Mutex};
 use crate::dvfs::Schedule;
@@ -58,7 +74,8 @@ use crate::runtime::sim::ModelSpec;
 use crate::runtime::{
     argmax_slice, literal_i32, Buffer, DecodeState, KvCache, ModelArtifacts, PackedModel, Runtime,
 };
-use crate::util::parallel;
+use crate::util::failpoint::{self, sites};
+use crate::util::{parallel, Rng};
 
 /// One inference request: a token prefix plus decode/deadline metadata.
 /// The response carries the autoregressively generated tokens.
@@ -78,6 +95,12 @@ pub struct Request {
     pub respond: Sender<Response>,
     /// Submission time (latency measurement).
     pub submitted: Instant,
+    /// Scheduling priority; under brown-out level ≥ 2 negative-priority
+    /// requests are shed at admission before anything else.
+    pub priority: i8,
+    /// Times this request has been re-enqueued after a fault (0 = first
+    /// execution). Bounded by [`SupervisorConfig::max_request_attempts`].
+    pub attempts: u32,
 }
 
 /// What the caller's channel yields for one [`Request`].
@@ -97,6 +120,8 @@ pub struct Response {
     /// True when the request was dropped by deadline shedding or admission
     /// control instead of executed.
     pub shed: bool,
+    /// Why the request was shed; `None` on every served response.
+    pub reason: Option<ShedReason>,
 }
 
 /// What the executor thread runs: per-request [`DecodeState`]s in, one
@@ -523,8 +548,108 @@ impl BatchExecutor for GraphExecutor {
     }
 }
 
-/// Coordinator-wide configuration: per-shard batching plus routing and
-/// admission-control knobs.
+/// Default cap on consecutive fruitless respawns before a shard is
+/// declared permanently dead (the supervisor's restart budget).
+pub const MAX_SHARD_RESTARTS: u32 = 3;
+/// Default cap on per-request re-enqueues after faults.
+pub const MAX_REQUEST_ATTEMPTS: u32 = 3;
+/// Default global retry budget: total re-enqueues across all shards for
+/// the coordinator's lifetime (a retry-storm circuit breaker).
+pub const RETRY_BUDGET: u64 = 10_000;
+
+/// Supervisor policy: restart/retry budgets, backoff shape, and the
+/// brown-out degradation thresholds. Lives in [`CoordinatorConfig`].
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Consecutive fruitless deaths (no response served since the last
+    /// respawn) before a shard is permanently dead ([`MAX_SHARD_RESTARTS`]).
+    pub max_shard_restarts: u32,
+    /// Re-enqueues allowed per request before it is shed with
+    /// [`ShedReason::RetryExhausted`] ([`MAX_REQUEST_ATTEMPTS`]).
+    pub max_request_attempts: u32,
+    /// Global retry token pool shared by every shard ([`RETRY_BUDGET`]);
+    /// once drained, faulted requests are shed instead of re-enqueued.
+    pub retry_budget: u64,
+    /// First respawn backoff; doubles per consecutive death.
+    pub backoff_base: Duration,
+    /// Backoff ceiling (exponential growth is clamped here).
+    pub backoff_cap: Duration,
+    /// Overload events (admission rejections, shard deaths) that raise
+    /// the brown-out level by one; successful admissions decay pressure.
+    pub brownout_pressure: u32,
+    /// Maximum brown-out level. Level `L ≥ 1` clamps `max_new_tokens` to
+    /// `max_new >> L`; level ≥ 2 sheds negative-priority requests at
+    /// admission. `0` disables brown-out entirely.
+    pub brownout_max_level: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            max_shard_restarts: MAX_SHARD_RESTARTS,
+            max_request_attempts: MAX_REQUEST_ATTEMPTS,
+            retry_budget: RETRY_BUDGET,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(80),
+            brownout_pressure: 8,
+            brownout_max_level: 3,
+        }
+    }
+}
+
+/// Coordinator-level brown-out state: an overload-pressure accumulator
+/// with hysteresis. Raising events are admission rejections and shard
+/// deaths; successful admissions bleed pressure off. Level transitions
+/// (both directions) are counted in `Metrics::brownout_steps`.
+struct Brownout {
+    /// `(level, pressure)` under one small lock (events only — not on the
+    /// decode hot path).
+    state: Mutex<(u32, u32)>,
+    pressure_high: u32,
+    max_level: u32,
+}
+
+impl Brownout {
+    fn new(cfg: &SupervisorConfig) -> Self {
+        Self {
+            state: Mutex::new((0, 0)),
+            pressure_high: cfg.brownout_pressure.max(1),
+            max_level: cfg.brownout_max_level,
+        }
+    }
+
+    /// Current degradation level (0 = healthy).
+    fn level(&self) -> u32 {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).0
+    }
+
+    /// One overload event; may step the level up.
+    fn overload(&self, global: &Metrics) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.1 = st.1.saturating_add(1);
+        if st.1 >= self.pressure_high && st.0 < self.max_level {
+            st.0 += 1;
+            st.1 = 0;
+            global.brownout_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One healthy-admission event; may step the level down (with
+    /// half-threshold hysteresis so the level doesn't flap).
+    fn relief(&self, global: &Metrics) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.1 > 0 {
+            st.1 -= 1;
+        } else if st.0 > 0 {
+            st.0 -= 1;
+            st.1 = self.pressure_high / 2;
+            global.brownout_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Coordinator-wide configuration: per-shard batching plus routing,
+/// admission-control, and supervisor/recovery knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Per-shard batch-forming knobs.
@@ -535,6 +660,8 @@ pub struct CoordinatorConfig {
     pub queue_cap: usize,
     /// Deadline applied to requests submitted without an explicit one.
     pub default_deadline: Option<Duration>,
+    /// Shard-supervisor restart/retry/brown-out policy.
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -544,6 +671,7 @@ impl Default for CoordinatorConfig {
             shards: 1,
             queue_cap: 0,
             default_deadline: None,
+            supervisor: SupervisorConfig::default(),
         }
     }
 }
@@ -564,17 +692,20 @@ pub struct SubmitSpec {
     pub max_new_tokens: usize,
     /// Optional absolute shed deadline.
     pub deadline: Option<Instant>,
+    /// Scheduling priority (default 0). Under brown-out level ≥ 2,
+    /// negative-priority requests are shed at admission first.
+    pub priority: i8,
 }
 
 impl SubmitSpec {
     /// Classic next-token serving: decode exactly one token.
     pub fn next_token(tokens: Vec<i32>) -> Self {
-        Self { tokens, max_new_tokens: 1, deadline: None }
+        Self { tokens, max_new_tokens: 1, deadline: None, priority: 0 }
     }
 
     /// Autoregressive decode of `max_new_tokens` tokens.
     pub fn generate(tokens: Vec<i32>, max_new_tokens: usize) -> Self {
-        Self { tokens, max_new_tokens: max_new_tokens.max(1), deadline: None }
+        Self { tokens, max_new_tokens: max_new_tokens.max(1), deadline: None, priority: 0 }
     }
 
     /// Attach a relative shed deadline (from now).
@@ -582,27 +713,40 @@ impl SubmitSpec {
         self.deadline = Some(Instant::now() + d);
         self
     }
+
+    /// Attach a scheduling priority (negative = first to shed under
+    /// brown-out).
+    pub fn with_priority(mut self, p: i8) -> Self {
+        self.priority = p;
+        self
+    }
 }
 
-struct Shard {
+/// One shard's router-visible state: its bounded queue, liveness flag and
+/// per-shard metrics. Shared (`Arc<Vec<ShardSlot>>`) between the router
+/// and every supervisor thread, so a dying shard can re-home its orphaned
+/// requests onto the survivors' queues.
+struct ShardSlot {
     /// Bounded request queue (admission control lives in the queue: a
-    /// `push` atomically checks cap + closed under one lock).
+    /// `push` atomically checks cap + closed under one lock). Stays open
+    /// across respawns — only shutdown or permanent death closes it.
     queue: Arc<RequestQueue<Request>>,
-    handle: Option<JoinHandle<()>>,
-    /// Set by the shard thread when its executor failed to construct or
-    /// panicked: the router must skip it (its instant drain-and-shed
-    /// would otherwise keep its queue depth near zero and attract all
-    /// least-loaded routing, starving healthy shards).
-    dead: Arc<AtomicBool>,
+    /// Set while the shard's executor is down (dead or between respawns):
+    /// the router prefers live shards and only queues here as a last
+    /// resort (the backlog is drained by the respawn, or re-homed at
+    /// permanent death).
+    dead: AtomicBool,
     metrics: Arc<Metrics>,
 }
 
 /// The running coordinator.
 pub struct Coordinator {
-    shards: Vec<Shard>,
+    slots: Arc<Vec<ShardSlot>>,
+    handles: Vec<Option<JoinHandle<()>>>,
     cfg: CoordinatorConfig,
     rr: AtomicUsize,
     next_id: AtomicU64,
+    brownout: Arc<Brownout>,
     /// Aggregate metrics across all shards (live counters; per-shard views
     /// via [`Coordinator::shard_metrics`]).
     pub metrics: Arc<Metrics>,
@@ -610,17 +754,27 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Single-shard back-compat constructor: one executor thread, unbounded
-    /// queue, no default deadline.
+    /// queue, no default deadline. The one-shot factory cannot build a
+    /// replacement executor, so after a death here the supervisor's respawn
+    /// attempts fail and the shard goes permanently dead once the restart
+    /// budget drains.
     pub fn start<F>(cfg: BatcherConfig, make_executor: F) -> Self
     where
         F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
     {
         let coord_cfg = CoordinatorConfig { batcher: cfg, ..CoordinatorConfig::default() };
-        Self::start_with(coord_cfg, vec![Box::new(make_executor) as ShardFactory])
+        let mut once = Some(make_executor);
+        let factory: ShardFactory = Box::new(move || match once.take() {
+            Some(f) => f(),
+            None => anyhow::bail!("one-shot executor factory already consumed"),
+        });
+        Self::start_with(coord_cfg, vec![factory])
     }
 
     /// Start `cfg.shards` executor threads. `make_executor(shard)` runs on
-    /// each shard's own thread (PJRT handles never cross threads).
+    /// each shard's own thread (PJRT handles never cross threads) — and
+    /// runs *again* whenever that shard's supervisor respawns a dead
+    /// executor, so it must hand out a fresh executor per call.
     pub fn start_sharded<F>(cfg: CoordinatorConfig, make_executor: F) -> Self
     where
         F: Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
@@ -638,39 +792,71 @@ impl Coordinator {
 
     fn start_with(cfg: CoordinatorConfig, factories: Vec<ShardFactory>) -> Self {
         let metrics = Arc::new(Metrics::default());
-        let shards: Vec<Shard> = factories
+        let brownout = Arc::new(Brownout::new(&cfg.supervisor));
+        let retry_tokens = Arc::new(Mutex::new(cfg.supervisor.retry_budget));
+        let slots: Arc<Vec<ShardSlot>> = Arc::new(
+            (0..factories.len())
+                .map(|_| ShardSlot {
+                    queue: Arc::new(RequestQueue::bounded(cfg.queue_cap)),
+                    dead: AtomicBool::new(false),
+                    metrics: Arc::new(Metrics::default()),
+                })
+                .collect(),
+        );
+        let handles = factories
             .into_iter()
             .enumerate()
-            .map(|(s, f)| spawn_shard(s, f, cfg.batcher.clone(), cfg.queue_cap, metrics.clone()))
+            .map(|(s, f)| {
+                let ctx = ShardCtx {
+                    shard_id: s,
+                    sup: cfg.supervisor.clone(),
+                    slots: slots.clone(),
+                    retry_tokens: retry_tokens.clone(),
+                    brownout: brownout.clone(),
+                    global: metrics.clone(),
+                };
+                Some(spawn_shard(ctx, f, cfg.batcher.clone()))
+            })
             .collect();
         Self {
-            shards,
+            slots,
+            handles,
             cfg,
             rr: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
+            brownout,
             metrics,
         }
     }
 
     /// Number of executor shards (threads) this coordinator runs.
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.slots.len()
     }
 
     /// Per-shard metrics views (index = shard id).
     pub fn shard_metrics(&self) -> Vec<Arc<Metrics>> {
-        self.shards.iter().map(|s| s.metrics.clone()).collect()
+        self.slots.iter().map(|s| s.metrics.clone()).collect()
+    }
+
+    /// Current brown-out degradation level (0 = healthy; see
+    /// [`SupervisorConfig`]).
+    pub fn brownout_level(&self) -> u32 {
+        self.brownout.level()
     }
 
     /// Aggregate snapshot: per-shard serving metrics merged (percentiles
-    /// over the union of latency samples) plus the submission-side
-    /// counters (arrivals, admission rejections) that only the
-    /// coordinator's global view records.
+    /// over the union of latency samples) plus the coordinator-side
+    /// counters (arrivals, admission rejections, brown-out transitions,
+    /// per-reason shed counts) that the global view records
+    /// authoritatively.
     pub fn merged_snapshot(&self) -> super::metrics::MetricsSnapshot {
         let mut s = Metrics::merged(&self.shard_metrics());
         let g = self.metrics.snapshot();
         s.requests = g.requests;
         s.rejected = g.rejected;
+        s.brownout_steps = g.brownout_steps;
+        s.shed_reasons = g.shed_reasons;
         s
     }
 
@@ -681,52 +867,147 @@ impl Coordinator {
         self.submit_spec(SubmitSpec::next_token(tokens))
     }
 
-    /// Submit with full control over decode length and deadline.
+    /// Submit with full control over decode length, deadline and priority.
+    /// Infallible from the caller's view: a request the coordinator cannot
+    /// accept still answers on the returned channel with a shed response.
     pub fn submit_spec(&self, spec: SubmitSpec) -> Receiver<Response> {
+        match self.try_submit_spec(spec) {
+            Ok(rx) => rx,
+            Err(_) => {
+                // Every queue is closed (total executor loss or shutdown):
+                // account the arrival and answer with a terminal shed.
+                let (rtx, rrx) = channel();
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .shed_reason_counter(ShedReason::ShardDeath)
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = rtx.send(Response {
+                    id,
+                    next_token: 0,
+                    tokens: Vec::new(),
+                    latency: Duration::ZERO,
+                    shard: usize::MAX,
+                    shed: true,
+                    reason: Some(ShedReason::ShardDeath),
+                });
+                rrx
+            }
+        }
+    }
+
+    /// Fallible submit: `Err(spec)` hands the request back *untouched* (no
+    /// metrics recorded, nothing queued) when every shard queue is closed —
+    /// the coordinator will never serve new work again (total executor
+    /// loss, or shutdown has begun). Load generators use this to stop
+    /// submitting instead of minting phantom shed responses.
+    ///
+    /// `Ok` means the request was admitted *or* terminally answered on the
+    /// returned channel (admission-control rejection, brown-out shed) —
+    /// exactly one response either way.
+    pub fn try_submit_spec(&self, spec: SubmitSpec) -> Result<Receiver<Response>, SubmitSpec> {
         let (rtx, rrx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let level = self.brownout.level();
+        // Brown-out level ≥ 2: negative-priority work is shed at admission
+        // before it can displace foreground requests.
+        if level >= 2 && spec.priority < 0 {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .shed_reason_counter(ShedReason::Brownout)
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = rtx.send(Response {
+                id,
+                next_token: 0,
+                tokens: Vec::new(),
+                latency: Duration::ZERO,
+                shard: usize::MAX,
+                shed: true,
+                reason: Some(ShedReason::Brownout),
+            });
+            return Ok(rrx);
+        }
+        // Brown-out level ≥ 1: clamp decode budgets (halved per level) so
+        // the backlog drains sooner; the clamp never goes below one token.
+        let requested_new = spec.max_new_tokens.max(1);
+        let max_new = if level > 0 { (requested_new >> level.min(16)).max(1) } else { requested_new };
         let deadline = spec
             .deadline
             .or_else(|| self.cfg.default_deadline.map(|d| Instant::now() + d));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request {
             id,
             tokens: spec.tokens,
-            max_new_tokens: spec.max_new_tokens.max(1),
+            max_new_tokens: max_new,
             deadline,
             respond: rtx,
             submitted: Instant::now(),
+            priority: spec.priority,
+            attempts: 0,
         };
 
         // Route: start at the round-robin cursor, prefer the least-loaded
-        // shard (ties keep the round-robin order), skip shards over the
-        // queue bound or with a dead executor.
-        let n = self.shards.len();
+        // shard (ties keep the round-robin order). Depths are snapshotted
+        // once up front: re-reading live queue lengths per comparison could
+        // present the sort with an inconsistent order (which std's sort
+        // detects by panicking).
+        let n = self.slots.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
-        let mut order: Vec<usize> = (0..n).map(|k| (start + k) % n).collect();
-        // Snapshot each depth exactly once: re-reading the live queue
-        // lengths per comparison could present the sort with an
-        // inconsistent order (which std's sort detects by panicking).
-        order.sort_by_cached_key(|&s| self.shards[s].queue.len());
-        for &s in &order {
-            let shard = &self.shards[s];
-            if shard.dead.load(Ordering::Relaxed) {
-                continue;
-            }
-            // The queue checks capacity and closedness atomically with the
-            // enqueue — concurrent submitters can never overshoot the cap
-            // (model-checked in tests/loom_coordinator.rs). Full or closed
-            // (shard shut down / died): take the request back, try the
-            // next shard.
-            match shard.queue.push(req) {
-                Ok(()) => return rrx,
-                Err(e) => req = e.into_inner(),
+        let mut order: Vec<(usize, usize)> = (0..n)
+            .map(|k| (start + k) % n)
+            .map(|s| (self.slots.get(s).map_or(usize::MAX, |sl| sl.queue.len()), s))
+            .collect();
+        order.sort_by_key(|&(depth, _)| depth); // stable sort: ties keep rr order
+        // Pass 0 targets live shards only; pass 1 accepts any open queue —
+        // a dead-but-open shard is respawning under its supervisor, which
+        // will drain the backlog (or re-home it at permanent death), so
+        // queueing there beats rejecting outright.
+        let mut any_full = false;
+        for pass in 0..2 {
+            for &(_, s) in &order {
+                let Some(slot) = self.slots.get(s) else { continue };
+                if pass == 0 && slot.dead.load(Ordering::Relaxed) {
+                    continue;
+                }
+                // The queue checks capacity and closedness atomically with
+                // the enqueue — concurrent submitters can never overshoot
+                // the cap (model-checked in tests/loom_coordinator.rs).
+                match slot.queue.push(req) {
+                    Ok(()) => {
+                        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                        self.brownout.relief(&self.metrics);
+                        return Ok(rrx);
+                    }
+                    Err(PushError::Full(r)) => {
+                        if pass == 1 {
+                            any_full = true;
+                        }
+                        req = r;
+                    }
+                    Err(PushError::Closed(r)) => req = r,
+                }
             }
         }
-
-        // Rejected: every queue is full (backpressure) or every executor is
-        // gone. Answer on the caller's channel rather than panicking.
+        if !any_full {
+            // Every queue is closed: hand the spec back so the caller can
+            // stop submitting. Nothing was recorded or queued.
+            return Err(SubmitSpec {
+                tokens: req.tokens,
+                max_new_tokens: requested_new,
+                deadline: spec.deadline,
+                priority: req.priority,
+            });
+        }
+        // Backpressure: every open queue is at capacity. Terminal
+        // admission-control rejection, surfaced as a shed response.
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .shed_reason_counter(ShedReason::Admission)
+            .fetch_add(1, Ordering::Relaxed);
+        self.brownout.overload(&self.metrics);
         let _ = req.respond.send(Response {
             id,
             next_token: 0,
@@ -734,20 +1015,21 @@ impl Coordinator {
             latency: req.submitted.elapsed(),
             shard: usize::MAX,
             shed: true,
+            reason: Some(ShedReason::Admission),
         });
-        rrx
+        Ok(rrx)
     }
 
     /// Drain and stop every shard. Reports (rather than panics on) shard
     /// threads that died of an uncaught panic — their queued clients were
     /// already shed by the shard's own unwind fences.
     pub fn shutdown(mut self) -> Result<()> {
-        for s in &self.shards {
+        for s in self.slots.iter() {
             s.queue.close();
         }
         let mut crashed = 0usize;
-        for s in &mut self.shards {
-            if let Some(h) = s.handle.take() {
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
                 if h.join().is_err() {
                     crashed += 1;
                 }
@@ -760,18 +1042,22 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for s in &self.shards {
+        for s in self.slots.iter() {
             s.queue.close();
         }
-        for s in &mut self.shards {
-            if let Some(h) = s.handle.take() {
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
                 let _ = h.join();
             }
         }
     }
 }
 
-type ShardFactory = Box<dyn FnOnce() -> Result<Box<dyn BatchExecutor>> + Send>;
+/// Executor factory: runs on the shard's own thread, once per executor
+/// *generation* — the supervisor calls it again after each death, so it
+/// must hand out a fresh executor per call (or fail, which counts as a
+/// fruitless restart).
+type ShardFactory = Box<dyn FnMut() -> Result<Box<dyn BatchExecutor>> + Send>;
 
 /// One in-flight request on a shard: submission metadata + decode state.
 struct Live {
@@ -779,7 +1065,146 @@ struct Live {
     state: DecodeState,
 }
 
-/// Spawn one shard: queue + continuous-batching decode loop. The loop
+/// Everything a shard's supervisor and decode loop need to cooperate with
+/// the rest of the coordinator: identity, recovery policy, the shared
+/// slot table (for re-homing orphans), the global retry-token pool,
+/// brown-out state and the global metrics view.
+struct ShardCtx {
+    shard_id: usize,
+    sup: SupervisorConfig,
+    slots: Arc<Vec<ShardSlot>>,
+    retry_tokens: Arc<Mutex<u64>>,
+    brownout: Arc<Brownout>,
+    global: Arc<Metrics>,
+}
+
+/// Why one executor generation ended.
+enum GenExit {
+    /// Queue closed and drained: orderly shutdown, the shard is done.
+    Clean,
+    /// The executor died (panic or injected fault). `orphans` is the live
+    /// set (plus any request caught mid-admission) to re-home; `served_any`
+    /// reports whether this generation completed at least one response
+    /// (which resets the supervisor's consecutive-death counter).
+    Died { orphans: Vec<Request>, served_any: bool },
+}
+
+fn orphaned(live: &mut Vec<Live>, extra: Option<Request>, served_any: bool) -> GenExit {
+    let mut orphans: Vec<Request> = live.drain(..).map(|l| l.req).collect();
+    orphans.extend(extra);
+    GenExit::Died { orphans, served_any }
+}
+
+/// Spawn one shard: a *supervisor* thread that runs executor generations
+/// ([`run_generation`]) until shutdown or permanent death. Each death (a
+/// panicking executor, a failed construction, or an injected
+/// [`crate::util::failpoint`] kill) takes the shard out of rotation,
+/// re-homes its orphaned requests ([`redistribute`]), raises brown-out
+/// pressure, and — while the consecutive-death count stays within
+/// [`SupervisorConfig::max_shard_restarts`] — sleeps a capped exponential
+/// backoff with seeded jitter before constructing a fresh executor
+/// through the factory. A shard whose deaths exceed the budget closes its
+/// queue and re-homes the backlog one final time; with no survivors left,
+/// those requests shed with [`ShedReason::ShardDeath`] — never silently
+/// dropped.
+fn spawn_shard(
+    ctx: ShardCtx,
+    mut make_executor: ShardFactory,
+    batcher_cfg: BatcherConfig,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let Some(slot) = ctx.slots.get(ctx.shard_id) else {
+            return; // unreachable: the slot table is built from the factory list
+        };
+        let q = slot.queue.clone();
+        let m = slot.metrics.clone();
+        // Deterministic per-shard backoff jitter (golden-ratio id spread).
+        let mut rng = Rng::seed_from_u64(0x9e37_79b9_7f4a_7c15 ^ ctx.shard_id as u64);
+        let mut deaths: u32 = 0;
+        let mut constructed_before = false;
+        loop {
+            let built = catch_unwind(AssertUnwindSafe(|| make_executor()));
+            let exec = match built {
+                Ok(Ok(e)) => Some(e),
+                Ok(Err(e)) => {
+                    eprintln!(
+                        "[coordinator] shard {}: executor construction failed: {e:#}",
+                        ctx.shard_id
+                    );
+                    None
+                }
+                Err(p) => {
+                    eprintln!(
+                        "[coordinator] shard {}: executor construction panicked: {}",
+                        ctx.shard_id,
+                        panic_msg(&p)
+                    );
+                    None
+                }
+            };
+            let outcome = match exec {
+                Some(exec) => {
+                    if constructed_before {
+                        for g in [&m, &ctx.global] {
+                            g.shard_restarts.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    constructed_before = true;
+                    slot.dead.store(false, Ordering::Relaxed); // back in rotation
+                    run_generation(&ctx, &m, &q, exec, &batcher_cfg)
+                }
+                None => GenExit::Died { orphans: Vec::new(), served_any: false },
+            };
+            let (orphans, served_any) = match outcome {
+                GenExit::Clean => break, // shutdown: queue closed + drained
+                GenExit::Died { orphans, served_any } => (orphans, served_any),
+            };
+            // Out of rotation while down; the queue stays open as a
+            // last-resort routing target unless death becomes permanent.
+            slot.dead.store(true, Ordering::Relaxed);
+            ctx.brownout.overload(&ctx.global);
+            if served_any {
+                deaths = 0; // the generation did real work: reset the streak
+            }
+            deaths += 1;
+            redistribute(&ctx, &m, orphans);
+            if deaths > ctx.sup.max_shard_restarts {
+                eprintln!(
+                    "[coordinator] shard {}: permanently dead after {deaths} consecutive deaths",
+                    ctx.shard_id
+                );
+                // Close first so no new request can slip in behind the
+                // drain, then re-home the backlog one final time.
+                q.close();
+                let mut backlog = Vec::new();
+                while let Some(r) = q.pop() {
+                    backlog.push(r);
+                }
+                redistribute(&ctx, &m, backlog);
+                break;
+            }
+            // Capped exponential backoff + seeded jitter before respawn.
+            let exp = deaths.saturating_sub(1).min(16);
+            let base = ctx.sup.backoff_base.saturating_mul(1u32 << exp);
+            let jitter_us = (ctx.sup.backoff_base.as_micros() as u64).max(1);
+            let wait =
+                base.min(ctx.sup.backoff_cap) + Duration::from_micros(rng.gen_range_u64(jitter_us));
+            std::thread::sleep(wait);
+            if q.is_closed() {
+                // Shutdown landed while we were down: re-home the backlog
+                // (which sheds once every queue is closed) and exit.
+                let mut backlog = Vec::new();
+                while let Some(r) = q.pop() {
+                    backlog.push(r);
+                }
+                redistribute(&ctx, &m, backlog);
+                break;
+            }
+        }
+    })
+}
+
+/// One executor generation: the continuous-batching decode loop. The loop
 /// keeps a live set of [`DecodeState`]s; every iteration (a) admits
 /// queued requests into free slots — blocking via the [`Batcher`] only
 /// when idle, non-blocking [`Batcher::try_fill`] between steps so
@@ -788,200 +1213,260 @@ struct Live {
 /// finished requests immediately instead of holding them until the
 /// longest neighbor drains. `Metrics::batches` counts decode steps.
 ///
-/// The loop never propagates per-step errors out of the thread — a failed
-/// step or a client that dropped its receiver is logged and the shard
-/// keeps serving (the seed implementation `?`-ed out and wedged every
-/// queued client). Executor calls (construction, `begin`, `step`) are
-/// additionally unwind-fenced: a *panic* leaves the executor's internal
-/// state unknowable, so the shard sheds everything it holds, closes its
-/// queue, marks itself dead and exits — clients get shed responses, the
-/// router moves on, and the panic never crosses a lock (no poisoning) or
-/// reaches `join`.
-fn spawn_shard(
-    shard_id: usize,
-    make_executor: ShardFactory,
-    batcher_cfg: BatcherConfig,
-    queue_cap: usize,
-    global: Arc<Metrics>,
-) -> Shard {
-    let queue = Arc::new(RequestQueue::bounded(queue_cap));
-    let q = queue.clone();
-    let metrics = Arc::new(Metrics::default());
-    let m = metrics.clone();
-    let dead = Arc::new(AtomicBool::new(false));
-    let dead_flag = dead.clone();
-    let handle = std::thread::spawn(move || {
-        // Take the shard out of rotation, then drain anything already
-        // queued (or racing in before the close lands) so those clients
-        // get shed responses instead of hanging.
-        let die = |msg: String, live: &mut Vec<Live>| {
-            eprintln!("[coordinator] shard {shard_id}: {msg}");
-            dead_flag.store(true, Ordering::Relaxed);
-            q.close();
-            for l in live.drain(..) {
-                shed_one(shard_id, l.req, &m, &global);
-            }
-            while let Some(req) = q.pop() {
-                shed_one(shard_id, req, &m, &global);
-            }
-        };
-        let mut exec = match catch_unwind(AssertUnwindSafe(make_executor)) {
-            Ok(Ok(e)) => e,
+/// Fault semantics (PR 7): *panics* — and injected `shard.loop` /
+/// `shard.begin` / `shard.step` failpoint kills — end the generation: the
+/// executor's internal state is unknowable, so the live set rides back to
+/// the supervisor as orphans for re-homing. Plain *errors* from
+/// `begin`/`step` are retryable: the executor is structurally sound, so
+/// the affected requests re-home immediately ([`redistribute`]) and the
+/// generation keeps serving. Expired requests shed with
+/// [`ShedReason::Deadline`]; a client that dropped its receiver never
+/// wedges the shard; no panic crosses a lock (no poisoning) or reaches
+/// `join`.
+fn run_generation(
+    ctx: &ShardCtx,
+    m: &Arc<Metrics>,
+    q: &Arc<RequestQueue<Request>>,
+    mut exec: Box<dyn BatchExecutor>,
+    batcher_cfg: &BatcherConfig,
+) -> GenExit {
+    let shard_id = ctx.shard_id;
+    let cap = exec.batch_capacity().max(1);
+    let cfg = BatcherConfig {
+        batch_size: batcher_cfg.batch_size.min(cap).max(1),
+        ..batcher_cfg.clone()
+    };
+    let batcher = Batcher::new(cfg, q.clone());
+    let mut live: Vec<Live> = Vec::new();
+    let mut served_any = false;
+    loop {
+        // Chaos hook: kill or stall the shard loop between steps.
+        match catch_unwind(AssertUnwindSafe(|| failpoint::check(sites::SHARD_LOOP))) {
+            Ok(Ok(())) => {}
             Ok(Err(e)) => {
-                die(format!("executor construction failed: {e:#}"), &mut Vec::new());
-                return;
+                eprintln!("[coordinator] shard {shard_id}: {e:#}");
+                return orphaned(&mut live, None, served_any);
             }
             Err(p) => {
-                die(
-                    format!("executor construction panicked: {}", panic_msg(&p)),
-                    &mut Vec::new(),
-                );
-                return;
-            }
-        };
-        let cap = exec.batch_capacity().max(1);
-        let cfg = BatcherConfig {
-            batch_size: batcher_cfg.batch_size.min(cap).max(1),
-            ..batcher_cfg
-        };
-        let batcher = Batcher::new(cfg, q.clone());
-        let mut live: Vec<Live> = Vec::new();
-        loop {
-            // ---- admit: block only when idle; top up mid-flight.
-            let incoming = if live.is_empty() {
-                match batcher.next_batch() {
-                    Some(b) => b,
-                    None => break, // queue closed and drained; no work left
-                }
-            } else {
-                batcher.try_fill(cap - live.len())
-            };
-            let now = Instant::now();
-            for req in incoming {
-                // Shed-on-deadline: drop requests that expired in queue.
-                if matches!(req.deadline, Some(dl) if now > dl) {
-                    shed_one(shard_id, req, &m, &global);
-                    continue;
-                }
-                let begun =
-                    catch_unwind(AssertUnwindSafe(|| exec.begin(&req.tokens, req.max_new_tokens)));
-                match begun {
-                    Err(p) => {
-                        shed_one(shard_id, req, &m, &global);
-                        for g in [&m, &global] {
-                            g.exec_errors.fetch_add(1, Ordering::Relaxed);
-                        }
-                        die(format!("executor panicked in begin: {}", panic_msg(&p)), &mut live);
-                        return;
-                    }
-                    Ok(Ok(state)) if state.done() => {
-                        // Zero-budget request: answer immediately.
-                        let latency = req.submitted.elapsed();
-                        for g in [&m, &global] {
-                            g.record_latency(latency);
-                            g.responses.fetch_add(1, Ordering::Relaxed);
-                        }
-                        let _ = req.respond.send(Response {
-                            id: req.id,
-                            next_token: 0,
-                            tokens: Vec::new(),
-                            latency,
-                            shard: shard_id,
-                            shed: false,
-                        });
-                    }
-                    Ok(Ok(state)) => {
-                        for g in [&m, &global] {
-                            g.batch_tokens.fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
-                        }
-                        live.push(Live { req, state });
-                    }
-                    Ok(Err(e)) => {
-                        eprintln!("[coordinator] shard {shard_id}: admit failed: {e:#}");
-                        for g in [&m, &global] {
-                            g.exec_errors.fetch_add(1, Ordering::Relaxed);
-                        }
-                        shed_one(shard_id, req, &m, &global);
-                    }
-                }
-            }
-            if live.is_empty() {
-                continue;
-            }
-
-            // ---- one decode step across the whole live set.
-            let before: usize = live.iter().map(|l| l.state.generated().len()).sum();
-            let step_res = {
-                let mut active: Vec<&mut DecodeState> =
-                    live.iter_mut().map(|l| &mut l.state).collect();
-                catch_unwind(AssertUnwindSafe(|| exec.step(&mut active)))
-            };
-            let step_res = match step_res {
-                Err(p) => {
-                    // Executor state is unknowable after a panic: this
-                    // shard is done. Shed everything, leave the rest to
-                    // the healthy shards.
-                    for g in [&m, &global] {
-                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
-                    }
-                    die(format!("executor panicked mid-step: {}", panic_msg(&p)), &mut live);
-                    return;
-                }
-                Ok(r) => r,
-            };
-            // A "successful" step that generated nothing would spin this
-            // loop forever — treat it as an executor fault.
-            let step_res = step_res.and_then(|()| {
-                let after: usize = live.iter().map(|l| l.state.generated().len()).sum();
-                anyhow::ensure!(after > before, "executor step made no decode progress");
-                Ok(())
-            });
-            if let Err(e) = step_res {
-                eprintln!("[coordinator] shard {shard_id}: decode step failed: {e:#}");
-                for g in [&m, &global] {
-                    g.exec_errors.fetch_add(1, Ordering::Relaxed);
-                }
-                for l in live.drain(..) {
-                    shed_one(shard_id, l.req, &m, &global);
-                }
-                continue;
-            }
-            let stepped = live.len() as u64;
-            let transitions = exec.dvfs_transitions() as u64;
-            for g in [&m, &global] {
-                g.batches.fetch_add(1, Ordering::Relaxed);
-                g.generated_tokens.fetch_add(stepped, Ordering::Relaxed);
-                g.dvfs_transitions.fetch_add(transitions, Ordering::Relaxed);
-            }
-
-            // ---- retire finished requests immediately.
-            let mut i = 0;
-            while i < live.len() {
-                if !live[i].state.done() {
-                    i += 1;
-                    continue;
-                }
-                let Live { req, state } = live.swap_remove(i);
-                let latency = req.submitted.elapsed();
-                for g in [&m, &global] {
-                    g.record_latency(latency);
-                    g.responses.fetch_add(1, Ordering::Relaxed);
-                }
-                let toks = state.into_generated();
-                // Receiver may have gone away (client disconnect); that
-                // must never unwind or stall the shard.
-                let _ = req.respond.send(Response {
-                    id: req.id,
-                    next_token: toks.first().copied().unwrap_or(0),
-                    tokens: toks,
-                    latency,
-                    shard: shard_id,
-                    shed: false,
-                });
+                eprintln!("[coordinator] shard {shard_id}: {}", panic_msg(&p));
+                return orphaned(&mut live, None, served_any);
             }
         }
-    });
-    Shard { queue, handle: Some(handle), dead, metrics }
+        // ---- admit: block only when idle; top up mid-flight.
+        let incoming = if live.is_empty() {
+            match batcher.next_batch() {
+                Some(b) => b,
+                None => break, // queue closed and drained; no work left
+            }
+        } else {
+            batcher.try_fill(cap - live.len())
+        };
+        let now = Instant::now();
+        for req in incoming {
+            // Shed-on-deadline: drop requests that expired in queue.
+            if matches!(req.deadline, Some(dl) if now > dl) {
+                shed_one(shard_id, req, m, &ctx.global, ShedReason::Deadline);
+                continue;
+            }
+            let begun = catch_unwind(AssertUnwindSafe(|| {
+                failpoint::check(sites::SHARD_BEGIN)?;
+                exec.begin(&req.tokens, req.max_new_tokens)
+            }));
+            match begun {
+                Err(p) => {
+                    for g in [m, &ctx.global] {
+                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    eprintln!(
+                        "[coordinator] shard {shard_id}: executor panicked in begin: {}",
+                        panic_msg(&p)
+                    );
+                    return orphaned(&mut live, Some(req), served_any);
+                }
+                Ok(Ok(state)) if state.done() => {
+                    // Zero-budget request: answer immediately.
+                    let latency = req.submitted.elapsed();
+                    for g in [m, &ctx.global] {
+                        g.record_latency(latency);
+                        g.responses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    served_any = true;
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        next_token: 0,
+                        tokens: Vec::new(),
+                        latency,
+                        shard: shard_id,
+                        shed: false,
+                        reason: None,
+                    });
+                }
+                Ok(Ok(state)) => {
+                    for g in [m, &ctx.global] {
+                        g.batch_tokens.fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
+                    }
+                    live.push(Live { req, state });
+                }
+                Ok(Err(e)) => {
+                    // Retryable: the executor survived and the request
+                    // never started — re-home it instead of shedding.
+                    eprintln!("[coordinator] shard {shard_id}: admit failed: {e:#}");
+                    for g in [m, &ctx.global] {
+                        g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    redistribute(ctx, m, vec![req]);
+                }
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+
+        // ---- one decode step across the whole live set.
+        let before: usize = live.iter().map(|l| l.state.generated().len()).sum();
+        let step_res = {
+            let mut active: Vec<&mut DecodeState> =
+                live.iter_mut().map(|l| &mut l.state).collect();
+            catch_unwind(AssertUnwindSafe(|| {
+                failpoint::check(sites::SHARD_STEP)?;
+                exec.step(&mut active)
+            }))
+        };
+        let step_res = match step_res {
+            Err(p) => {
+                // Executor state is unknowable after a panic: this
+                // generation is done. The supervisor re-homes the live set.
+                for g in [m, &ctx.global] {
+                    g.exec_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                eprintln!(
+                    "[coordinator] shard {shard_id}: executor panicked mid-step: {}",
+                    panic_msg(&p)
+                );
+                return orphaned(&mut live, None, served_any);
+            }
+            Ok(r) => r,
+        };
+        // A "successful" step that generated nothing would spin this
+        // loop forever — treat it as an executor fault.
+        let step_res = step_res.and_then(|()| {
+            let after: usize = live.iter().map(|l| l.state.generated().len()).sum();
+            anyhow::ensure!(after > before, "executor step made no decode progress");
+            Ok(())
+        });
+        if let Err(e) = step_res {
+            eprintln!("[coordinator] shard {shard_id}: decode step failed: {e:#}");
+            for g in [m, &ctx.global] {
+                g.exec_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            // Retryable fault: re-home the live set (each request restarts
+            // decode from its original prefix, so greedy chains stay
+            // bit-identical) and keep this generation serving.
+            let orphans: Vec<Request> = live.drain(..).map(|l| l.req).collect();
+            redistribute(ctx, m, orphans);
+            continue;
+        }
+        let stepped = live.len() as u64;
+        let transitions = exec.dvfs_transitions() as u64;
+        for g in [m, &ctx.global] {
+            g.batches.fetch_add(1, Ordering::Relaxed);
+            g.generated_tokens.fetch_add(stepped, Ordering::Relaxed);
+            g.dvfs_transitions.fetch_add(transitions, Ordering::Relaxed);
+        }
+
+        // ---- retire finished requests immediately.
+        let mut i = 0;
+        while i < live.len() {
+            if !live[i].state.done() {
+                i += 1;
+                continue;
+            }
+            let Live { req, state } = live.swap_remove(i);
+            let latency = req.submitted.elapsed();
+            for g in [m, &ctx.global] {
+                g.record_latency(latency);
+                g.responses.fetch_add(1, Ordering::Relaxed);
+            }
+            served_any = true;
+            let toks = state.into_generated();
+            // Receiver may have gone away (client disconnect); that
+            // must never unwind or stall the shard.
+            let _ = req.respond.send(Response {
+                id: req.id,
+                next_token: toks.first().copied().unwrap_or(0),
+                tokens: toks,
+                latency,
+                shard: shard_id,
+                shed: false,
+                reason: None,
+            });
+        }
+    }
+    GenExit::Clean
+}
+
+/// Take one token from the global retry pool, or report exhaustion. A
+/// mutex-guarded counter (the shim atomics carry no compare-exchange, and
+/// this sits far off the decode hot path).
+fn take_retry_token(tokens: &Mutex<u64>) -> bool {
+    let mut t = tokens.lock().unwrap_or_else(|e| e.into_inner());
+    if *t == 0 {
+        return false;
+    }
+    *t -= 1;
+    true
+}
+
+/// Try to place a re-homed request: pass 0 offers it to live shards
+/// (least-loaded first), pass 1 to any open queue (a dead-but-open shard
+/// is respawning and will drain — or re-home — its backlog). Returns the
+/// request when every queue refused it.
+fn try_place(slots: &[ShardSlot], mut req: Request) -> Option<Request> {
+    let mut order: Vec<(usize, usize)> =
+        slots.iter().enumerate().map(|(s, sl)| (sl.queue.len(), s)).collect();
+    order.sort_by_key(|&(depth, _)| depth);
+    for pass in 0..2 {
+        for &(_, s) in &order {
+            let Some(slot) = slots.get(s) else { continue };
+            if pass == 0 && slot.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            match slot.queue.push(req) {
+                Ok(()) => return None,
+                Err(e) => req = e.into_inner(),
+            }
+        }
+    }
+    Some(req)
+}
+
+/// Re-home requests that lost their executor. Retries are bounded twice
+/// over: a request past [`SupervisorConfig::max_request_attempts`] — or
+/// arriving after the global [`SupervisorConfig::retry_budget`] pool has
+/// drained — sheds with [`ShedReason::RetryExhausted`]. Expired requests
+/// shed with [`ShedReason::Deadline`] without consuming retry budget, and
+/// a request no queue will take (total executor loss) sheds with
+/// [`ShedReason::ShardDeath`]. Every path answers the client exactly once
+/// — re-homed requests restart decode from their original prefix, so a
+/// retried greedy chain is bit-identical to an unfaulted one.
+fn redistribute(ctx: &ShardCtx, m: &Arc<Metrics>, orphans: Vec<Request>) {
+    for mut req in orphans {
+        if matches!(req.deadline, Some(dl) if Instant::now() > dl) {
+            shed_one(ctx.shard_id, req, m, &ctx.global, ShedReason::Deadline);
+            continue;
+        }
+        req.attempts += 1;
+        if req.attempts > ctx.sup.max_request_attempts || !take_retry_token(&ctx.retry_tokens) {
+            shed_one(ctx.shard_id, req, m, &ctx.global, ShedReason::RetryExhausted);
+            continue;
+        }
+        for g in [m, &ctx.global] {
+            g.retries.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(req) = try_place(&ctx.slots, req) {
+            shed_one(ctx.shard_id, req, m, &ctx.global, ShedReason::ShardDeath);
+        }
+    }
 }
 
 /// Best-effort description of a caught panic payload (for shard-death
@@ -993,9 +1478,12 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
         .unwrap_or("<non-string panic payload>")
 }
 
-fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics) {
+/// Terminal shed: count it (with its reason) on both the shard and global
+/// metrics, and answer the client's channel exactly once.
+fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics, reason: ShedReason) {
     for g in [m, global] {
         g.shed.fetch_add(1, Ordering::Relaxed);
+        g.shed_reason_counter(reason).fetch_add(1, Ordering::Relaxed);
     }
     let _ = req.respond.send(Response {
         id: req.id,
@@ -1004,6 +1492,7 @@ fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics) {
         latency: req.submitted.elapsed(),
         shard: shard_id,
         shed: true,
+        reason: Some(reason),
     });
 }
 
@@ -1258,12 +1747,15 @@ mod tests {
             tokens: vec![1, 2, 3],
             max_new_tokens: 1,
             deadline: Some(Instant::now() - Duration::from_millis(1)),
+            priority: 0,
         };
         let r = c.submit_spec(spec).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         assert!(r.tokens.is_empty());
+        assert_eq!(r.reason, Some(ShedReason::Deadline));
         assert_eq!(c.metrics.shed.load(Ordering::Relaxed), 1);
         assert_eq!(c.metrics.responses.load(Ordering::Relaxed), 0);
+        assert_eq!(c.merged_snapshot().shed_for(ShedReason::Deadline), 1);
         c.shutdown().unwrap();
     }
 
@@ -1346,8 +1838,8 @@ mod tests {
         c.shutdown().unwrap();
     }
 
-    /// Executor whose first run() fails — the shard must shed the batch
-    /// and keep serving rather than kill the thread.
+    /// Executor whose first run() fails — the shard must retry the batch
+    /// (PR 7) and keep serving rather than kill the thread.
     struct Faulty {
         fail_first: u32,
     }
@@ -1369,17 +1861,21 @@ mod tests {
     }
 
     #[test]
-    fn executor_error_sheds_batch_and_shard_survives() {
+    fn executor_error_retries_request_and_shard_survives() {
         let c = Coordinator::start(
             BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
             || Ok(Box::new(Faulty { fail_first: 1 }) as Box<dyn BatchExecutor>),
         );
+        // A non-panic step error is retryable: the request re-homes (here
+        // back onto the same, still-healthy shard) and then serves.
         let r1 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(r1.shed, "failed batch must shed its requests");
+        assert!(!r1.shed, "retryable executor error must not shed");
+        assert_eq!(r1.next_token, 3);
+        assert_eq!(c.metrics.exec_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 1);
         let r2 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!r2.shed);
         assert_eq!(r2.next_token, 3);
-        assert_eq!(c.metrics.exec_errors.load(Ordering::Relaxed), 1);
         c.shutdown().unwrap();
     }
 
@@ -1473,6 +1969,10 @@ mod tests {
         );
         let r = c.submit(vec![1, 2]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
+        // Each zero-progress fault is retried until the per-request budget
+        // drains, then the request sheds as retry-exhausted.
+        assert_eq!(r.reason, Some(ShedReason::RetryExhausted));
+        assert_eq!(c.metrics.retries.load(Ordering::Relaxed), MAX_REQUEST_ATTEMPTS as u64);
         assert!(c.metrics.exec_errors.load(Ordering::Relaxed) >= 1);
         c.shutdown().unwrap();
     }
@@ -1580,6 +2080,148 @@ mod tests {
         });
         let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
+        c.shutdown().unwrap();
+    }
+
+    // ------------------------------------------- supervised recovery (PR 7)
+
+    #[test]
+    fn shard_respawns_after_panic_and_retried_decode_is_bit_identical() {
+        // Respawnable factory (start_sharded): the supervisor must bring
+        // the shard back, and the orphaned request must re-run from its
+        // original prefix — bit-identical to an unfaulted run.
+        let first = Arc::new(AtomicBool::new(true));
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            move |_s| {
+                Ok(if first.swap(false, Ordering::Relaxed) {
+                    Box::new(Bomb { steps: 0, fail_on: 1 }) as Box<dyn BatchExecutor>
+                } else {
+                    Box::new(Echo { cap: 2 }) as Box<dyn BatchExecutor>
+                })
+            },
+        );
+        let r = c
+            .submit_spec(SubmitSpec::generate(vec![3, 5], 3))
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(!r.shed, "orphan of a respawned shard must serve, not shed");
+        assert_eq!(r.tokens, echo_chain(&[3, 5], 16, 3));
+        assert_eq!(c.metrics.shard_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 1);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn brownout_levels_step_up_and_down_with_hysteresis() {
+        let sup = SupervisorConfig {
+            brownout_pressure: 2,
+            brownout_max_level: 2,
+            ..SupervisorConfig::default()
+        };
+        let b = Brownout::new(&sup);
+        let g = Metrics::default();
+        assert_eq!(b.level(), 0);
+        b.overload(&g);
+        assert_eq!(b.level(), 0);
+        b.overload(&g);
+        assert_eq!(b.level(), 1);
+        b.overload(&g);
+        b.overload(&g);
+        assert_eq!(b.level(), 2);
+        // max_level clamps further overload.
+        b.overload(&g);
+        b.overload(&g);
+        assert_eq!(b.level(), 2);
+        // Relief decays pressure first (hysteresis), then the level.
+        let mut reliefs = 0;
+        while b.level() > 0 {
+            b.relief(&g);
+            reliefs += 1;
+            assert!(reliefs < 100, "level never decayed");
+        }
+        // Two up-steps and two down-steps, each counted.
+        assert_eq!(g.brownout_steps.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn brownout_sheds_negative_priority_and_clamps_decode_budget() {
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                shards: 2,
+                supervisor: SupervisorConfig {
+                    brownout_pressure: 1,
+                    backoff_base: Duration::from_millis(1),
+                    backoff_cap: Duration::from_millis(2),
+                    ..SupervisorConfig::default()
+                },
+                ..CoordinatorConfig::default()
+            },
+            move |shard| {
+                if shard == 0 {
+                    anyhow::bail!("shard 0 stays down");
+                }
+                Ok(Box::new(Echo { cap: 2 }) as Box<dyn BatchExecutor>)
+            },
+        );
+        // Shard 0's fruitless restarts each raise brown-out pressure; with
+        // pressure_high = 1 the level pins at its max (3).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.brownout_level() < 3 {
+            assert!(Instant::now() < deadline, "brown-out never engaged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Level ≥ 2: negative-priority work sheds at admission...
+        let r = c
+            .submit_spec(SubmitSpec::generate(vec![1], 4).with_priority(-1))
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(r.shed);
+        assert_eq!(r.reason, Some(ShedReason::Brownout));
+        // ...and level 3 clamps an 8-token decode budget to one token.
+        let r = c
+            .submit_spec(SubmitSpec::generate(vec![2], 8))
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(!r.shed);
+        assert_eq!(r.tokens.len(), 1);
+        let snap = c.merged_snapshot();
+        assert!(snap.brownout_steps >= 3, "level 3 needs ≥ 3 counted up-steps");
+        assert_eq!(snap.shed_for(ShedReason::Brownout), 1);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_conserve_requests_under_churn() {
+        // requests == responses + shed + rejected at quiesce, and the
+        // per-reason counters sum to shed + rejected — even with a shard
+        // dying and respawning under load.
+        let c = Coordinator::start_sharded(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                shards: 2,
+                ..CoordinatorConfig::default()
+            },
+            |shard| {
+                Ok(if shard == 0 {
+                    Box::new(Bomb { steps: 0, fail_on: 3 }) as Box<dyn BatchExecutor>
+                } else {
+                    Box::new(Echo { cap: 2 }) as Box<dyn BatchExecutor>
+                })
+            },
+        );
+        let rxs: Vec<_> = (0..50).map(|i| c.submit(vec![i])).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = c.merged_snapshot();
+        assert_eq!(snap.requests, snap.responses + snap.shed + snap.rejected);
+        assert_eq!(snap.shed_reason_total(), snap.shed + snap.rejected);
         c.shutdown().unwrap();
     }
 }

@@ -48,11 +48,15 @@ COMMANDS
         per-request KV cache; --no-kv-cache falls back to full-prefix
         recompute (the equivalence oracle) for debugging.
   loadgen [--shards N] [--rps R] [--requests M] [--json FILE]
-          [--quant Q --model M]
+          [--quant Q --model M] [--chaos-seed S [--kill-prob P]]
         Paced serving load. Default: deterministic synthetic executor,
         no artifacts needed. With --quant: drives the packed quantized
         model from the artifact store instead (KV-cached continuous
-        batching; --no-kv-cache for the recompute oracle).
+        batching; --no-kv-cache for the recompute oracle). With
+        --chaos-seed: injects a seeded fault schedule (shard kills,
+        transient admit errors, enqueue delays) to exercise supervised
+        shard recovery; the report counts restarts/retries and breaks
+        sheds down by reason.
   all [--max-batches N]
         Regenerate every report → results/
 
@@ -76,6 +80,17 @@ SERVING OPTIONS (serve / loadgen)
   --tile T            quantization tile size under --quant (default 128)
   --no-kv-cache       decode by full-prefix recompute instead of the
                       per-request KV cache (debugging oracle)
+  --chaos-seed S      loadgen: install a seeded fault-injection schedule
+                      (deterministic chaos; see DESIGN.md §Fault model)
+  --kill-prob P       loadgen: per-step shard-kill probability under
+                      --chaos-seed (default 0.02)
+
+ENVIRONMENT
+  HALO_FAILPOINTS     serve/loadgen: failpoint schedule, e.g.
+                      \"shard.step=panic,0.02;queue.push=delay:1,0.3\"
+                      (sites: shard.loop shard.begin shard.step
+                      queue.push kvcache.grow sim.run)
+  HALO_FAILPOINT_SEED seed for probabilistic failpoints (default 0)
 ";
 
 fn main() -> Result<()> {
@@ -261,6 +276,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use std::sync::Arc;
     use std::time::Duration;
 
+    if halo::util::failpoint::install_from_env()? {
+        eprintln!("[serve] fault-injection schedule installed from HALO_FAILPOINTS");
+    }
     let store = open_store(args)?;
     let model_name = args.str_or("model", "base").to_string();
     let n_requests = args.usize_or("requests", 64)?;
@@ -290,6 +308,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             None
         },
+        ..CoordinatorConfig::default()
     };
 
     let coord = if let Some(variant) = quant {
@@ -395,6 +414,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     use halo::coordinator::loadgen::{self, LoadgenConfig};
     use std::time::Duration;
 
+    if halo::util::failpoint::install_from_env()? {
+        eprintln!("[loadgen] fault-injection schedule installed from HALO_FAILPOINTS");
+    }
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let quant = parse_quant_variant(args.str_or("quant", "none"))?;
     let cfg = LoadgenConfig {
@@ -409,7 +431,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         prefix_len: args.usize_or("prefix", 12)?.max(1),
         work_dim: args.usize_or("work", 48)?.max(1),
         seed: args.u64_or("seed", 0x10AD)?,
+        chaos_seed: match args.get("chaos-seed") {
+            Some(s) => Some(s.parse::<u64>().map_err(|e| {
+                anyhow::anyhow!("--chaos-seed must be an integer, got `{s}`: {e}")
+            })?),
+            None => None,
+        },
+        kill_prob: args.f64_or("kill-prob", 0.02)?,
     };
+    if cfg.chaos_seed.is_some() {
+        eprintln!(
+            "[loadgen] chaos mode: seed={} kill_prob={} (shard kills, admit errors, push delays)",
+            cfg.chaos_seed.unwrap_or(0),
+            cfg.kill_prob
+        );
+    }
 
     let report = if let Some(variant) = quant {
         // Real quantized model behind the same paced-arrival harness:

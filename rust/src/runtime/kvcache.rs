@@ -199,6 +199,13 @@ impl KvCache {
             k_rows.rows,
             v_rows.rows
         );
+        // `kvcache.grow` failpoint: models an allocation failure, so it
+        // only arms when this append would actually grow the layer. An
+        // injected error propagates as a step error (partial append ⇒ the
+        // caller must clear + re-prefill, per `is_consistent`).
+        if self.layers[layer].rows() + k_rows.rows > self.layers[layer].capacity_rows() {
+            crate::util::failpoint::check(crate::util::failpoint::sites::KVCACHE_GROW)?;
+        }
         self.layers[layer].append(k_rows, v_rows);
         Ok(())
     }

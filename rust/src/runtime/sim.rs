@@ -826,6 +826,7 @@ pub fn forward_logits(
     b: usize,
     s: usize,
 ) -> Result<Matrix> {
+    crate::util::failpoint::check(crate::util::failpoint::sites::SIM_RUN)?;
     let (logits, _, _) = forward(spec, p, tokens, b, s, false)?;
     Ok(logits)
 }
@@ -863,6 +864,7 @@ pub fn forward_incremental(
     cache: &mut KvCache,
     a8: bool,
 ) -> Result<Matrix> {
+    crate::util::failpoint::check(crate::util::failpoint::sites::SIM_RUN)?;
     let d = spec.d_model;
     let n = tokens.len();
     anyhow::ensure!(n >= 1, "incremental step needs at least one token");

@@ -1,0 +1,421 @@
+//! Deterministic, seeded fault injection ("failpoints") for chaos testing.
+//!
+//! The serving path is instrumented with a handful of *named sites* (see
+//! [`sites`]) where a fault can be injected: a panic (simulating a shard
+//! crash), an error (simulating a transient backend failure), or a delay
+//! (simulating scheduler jitter / a slow device). Which sites fire, how
+//! often, and in what order is governed entirely by a seeded schedule, so
+//! every chaos run is reproducible: same plans + same seed + same thread
+//! interleaving ⇒ same faults.
+//!
+//! # Zero cost when disabled
+//!
+//! [`check`] is a single relaxed atomic load when no schedule is
+//! installed — no lock, no allocation, no branch misprediction of note —
+//! so production binaries and benchmarks (the BENCH gates) pay nothing.
+//! The subsystem is deliberately a *runtime* switch rather than a cargo
+//! feature: the chaos suite must run under plain `cargo test` (tier-1)
+//! against the same binary the other tests exercise.
+//!
+//! # Process-global registry
+//!
+//! The registry is process-global (faults fire on shard/worker threads
+//! that know nothing about which test installed the schedule), so tests
+//! that install failpoints MUST serialize with each other and clear the
+//! registry when done — use [`install_guarded`] and keep all
+//! registry-driven chaos tests in one binary (`tests/chaos.rs`), which
+//! serializes them behind a lock.
+//!
+//! # Environment configuration
+//!
+//! `halo serve` / `halo loadgen` call [`install_from_env`]:
+//!
+//! ```text
+//! HALO_FAILPOINTS="shard.step=panic,0.02;queue.push=delay:1,0.3"
+//! HALO_FAILPOINT_SEED=7
+//! ```
+//!
+//! Each `;`-separated entry is `site=fault[,prob[,after[,max_fires]]]`
+//! where `fault` is `panic`, `error`, or `delay:<ms>`; `prob` is the
+//! per-hit fire probability (default 1.0), `after` skips the first N hits
+//! (default 0), and `max_fires` caps total fires (default 0 = unlimited).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::sync::Mutex;
+use crate::util::Rng;
+
+/// Canonical failpoint site names wired through the serving path.
+pub mod sites {
+    /// Top of a shard's batching loop (`coordinator/server.rs`); a fault
+    /// here kills the whole executor generation (supervisor respawns).
+    pub const SHARD_LOOP: &str = "shard.loop";
+    /// Admission of one request into decode (`BatchExecutor::begin`).
+    pub const SHARD_BEGIN: &str = "shard.begin";
+    /// One fused decode step over the live batch (`BatchExecutor::step`).
+    pub const SHARD_STEP: &str = "shard.step";
+    /// `RequestQueue::push` — fires on the *submitter's* thread, so panic
+    /// faults are downgraded to errors here (soft site).
+    pub const QUEUE_PUSH: &str = "queue.push";
+    /// KV-cache growth/reallocation (`runtime/kvcache.rs`).
+    pub const KVCACHE_GROW: &str = "kvcache.grow";
+    /// Backend forward entry (`runtime/sim.rs`, full and incremental).
+    pub const SIM_RUN: &str = "sim.run";
+}
+
+/// Name of the env var holding the failpoint schedule.
+pub const ENV_PLANS: &str = "HALO_FAILPOINTS";
+/// Name of the env var holding the schedule seed (default 0).
+pub const ENV_SEED: &str = "HALO_FAILPOINT_SEED";
+
+/// What a firing failpoint does to the instrumented code path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// `panic!` at the site (a shard-thread site unwinds into the
+    /// supervisor's fence and reads as a shard crash).
+    Panic,
+    /// Return an `Err` from the site (a transient backend failure).
+    Error,
+    /// Sleep for the given duration, then proceed normally.
+    Delay(Duration),
+}
+
+/// One seeded injection rule: where to fire, what to inject, how often.
+#[derive(Debug, Clone)]
+pub struct FailPlan {
+    /// Site name (one of [`sites`], or any string for tests).
+    pub site: String,
+    /// Fault to inject when the plan fires.
+    pub fault: Fault,
+    /// Per-hit fire probability in `[0, 1]`; `1.0` fires on every hit.
+    pub prob: f64,
+    /// Skip the first `after` hits at this site before arming.
+    pub after: u64,
+    /// Stop firing after this many fires (`0` = unlimited).
+    pub max_fires: u64,
+}
+
+impl FailPlan {
+    /// A plan that fires on every hit at `site`, forever.
+    pub fn always(site: &str, fault: Fault) -> Self {
+        Self { site: site.to_string(), fault, prob: 1.0, after: 0, max_fires: 0 }
+    }
+
+    /// Set the per-hit fire probability.
+    #[must_use]
+    pub fn with_prob(mut self, prob: f64) -> Self {
+        self.prob = prob;
+        self
+    }
+
+    /// Skip the first `after` hits before the plan can fire.
+    #[must_use]
+    pub fn with_after(mut self, after: u64) -> Self {
+        self.after = after;
+        self
+    }
+
+    /// Cap the total number of fires.
+    #[must_use]
+    pub fn with_max_fires(mut self, max_fires: u64) -> Self {
+        self.max_fires = max_fires;
+        self
+    }
+}
+
+struct PlanState {
+    plan: FailPlan,
+    hits: u64,
+    fires: u64,
+    rng: Rng,
+}
+
+/// Fast-path gate: `false` ⇒ `check` is a single relaxed load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Total fires across all sites since the last `install`.
+static TOTAL_FIRES: AtomicU64 = AtomicU64::new(0);
+/// Installed schedule. Shim mutex (const-constructible, lint-compliant);
+/// never locked while `ACTIVE` is false, so the disabled path stays free.
+static REGISTRY: Mutex<Vec<PlanState>> = Mutex::new(Vec::new());
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Install a seeded fault schedule, replacing any previous one.
+///
+/// Each plan gets an independent RNG stream derived from `seed`, the site
+/// name, and the plan's position, so adding a plan never perturbs the
+/// firing pattern of the others.
+pub fn install(plans: Vec<FailPlan>, seed: u64) {
+    let states: Vec<PlanState> = plans
+        .into_iter()
+        .enumerate()
+        .map(|(i, plan)| {
+            let rng = Rng::seed_from_u64(seed ^ fnv1a(&plan.site) ^ ((i as u64) << 32));
+            PlanState { plan, hits: 0, fires: 0, rng }
+        })
+        .collect();
+    let enable = !states.is_empty();
+    {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        *reg = states;
+    }
+    TOTAL_FIRES.store(0, Ordering::Relaxed);
+    ACTIVE.store(enable, Ordering::SeqCst);
+}
+
+/// Remove the installed schedule; [`check`] returns to its no-op fast path.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    reg.clear();
+}
+
+/// Whether a fault schedule is currently installed.
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Total fires across all sites since the last [`install`].
+pub fn total_fired() -> u64 {
+    TOTAL_FIRES.load(Ordering::Relaxed)
+}
+
+/// Fires recorded at `site` since the last [`install`].
+pub fn fired(site: &str) -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().filter(|s| s.plan.site == site).map(|s| s.fires).sum()
+}
+
+/// RAII guard returned by [`install_guarded`]; clears the registry on drop
+/// so a panicking test cannot leak its schedule into the next one.
+#[must_use = "dropping the guard immediately clears the failpoint schedule"]
+pub struct FailpointsGuard {
+    _priv: (),
+}
+
+impl Drop for FailpointsGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// [`install`] + a guard that [`clear`]s on drop (for tests).
+pub fn install_guarded(plans: Vec<FailPlan>, seed: u64) -> FailpointsGuard {
+    install(plans, seed);
+    FailpointsGuard { _priv: () }
+}
+
+/// Evaluate the failpoint at `site`: no-op unless a schedule is installed
+/// and a matching plan fires. `Fault::Panic` panics, `Fault::Error`
+/// returns `Err`, `Fault::Delay` sleeps then returns `Ok`.
+#[inline]
+pub fn check(site: &str) -> Result<()> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_slow(site, true)
+}
+
+/// Like [`check`], but downgrades `Fault::Panic` to an error. Used at
+/// sites that execute on a *caller's* thread (e.g. `queue.push`), where a
+/// raw panic would unwind into client code instead of a supervisor fence.
+#[inline]
+pub fn check_soft(site: &str) -> Result<()> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_slow(site, false)
+}
+
+#[cold]
+fn check_slow(site: &str, allow_panic: bool) -> Result<()> {
+    let fault = {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        let mut hit = None;
+        for st in reg.iter_mut().filter(|s| s.plan.site == site) {
+            st.hits += 1;
+            if st.hits <= st.plan.after {
+                continue;
+            }
+            if st.plan.max_fires != 0 && st.fires >= st.plan.max_fires {
+                continue;
+            }
+            if st.plan.prob < 1.0 && st.rng.gen_f64() >= st.plan.prob {
+                continue;
+            }
+            st.fires += 1;
+            hit = Some(st.plan.fault);
+            break;
+        }
+        hit
+    }; // registry lock released before sleeping/panicking
+    let Some(fault) = fault else { return Ok(()) };
+    TOTAL_FIRES.fetch_add(1, Ordering::Relaxed);
+    match fault {
+        Fault::Delay(d) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Fault::Error => Err(anyhow!("failpoint `{site}`: injected error")),
+        Fault::Panic if allow_panic => panic!("failpoint `{site}`: injected panic"),
+        Fault::Panic => Err(anyhow!("failpoint `{site}`: injected panic (soft site, downgraded)")),
+    }
+}
+
+/// Parse one `site=fault[,prob[,after[,max_fires]]]` entry.
+fn parse_plan(entry: &str) -> Result<FailPlan> {
+    let (site, spec) = entry
+        .split_once('=')
+        .with_context(|| format!("failpoint entry `{entry}` missing `site=fault`"))?;
+    let mut parts = spec.split(',');
+    let fault_s = parts.next().unwrap_or_default().trim();
+    let fault = if fault_s == "panic" {
+        Fault::Panic
+    } else if fault_s == "error" {
+        Fault::Error
+    } else if let Some(ms) = fault_s.strip_prefix("delay:") {
+        let ms: u64 = ms.parse().with_context(|| format!("bad delay in `{entry}`"))?;
+        Fault::Delay(Duration::from_millis(ms))
+    } else {
+        bail!("failpoint `{entry}`: fault must be panic | error | delay:<ms>");
+    };
+    let mut plan = FailPlan::always(site.trim(), fault);
+    if let Some(p) = parts.next() {
+        plan.prob = p.trim().parse().with_context(|| format!("bad prob in `{entry}`"))?;
+    }
+    if let Some(a) = parts.next() {
+        plan.after = a.trim().parse().with_context(|| format!("bad after in `{entry}`"))?;
+    }
+    if let Some(m) = parts.next() {
+        plan.max_fires = m.trim().parse().with_context(|| format!("bad max_fires in `{entry}`"))?;
+    }
+    Ok(plan)
+}
+
+/// Install a schedule from `HALO_FAILPOINTS` / `HALO_FAILPOINT_SEED`.
+/// Returns `Ok(true)` when a schedule was installed, `Ok(false)` when the
+/// env var is unset or empty, and `Err` on a malformed spec.
+pub fn install_from_env() -> Result<bool> {
+    let Ok(spec) = std::env::var(ENV_PLANS) else { return Ok(false) };
+    if spec.trim().is_empty() {
+        return Ok(false);
+    }
+    let plans = spec
+        .split(';')
+        .filter(|e| !e.trim().is_empty())
+        .map(|e| parse_plan(e.trim()))
+        .collect::<Result<Vec<_>>>()?;
+    let seed = match std::env::var(ENV_SEED) {
+        Ok(s) => s.trim().parse().with_context(|| format!("bad {ENV_SEED}"))?,
+        Err(_) => 0,
+    };
+    install(plans, seed);
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Failpoint tests share the process-global registry, so they
+    /// serialize behind this lock (shim mutex per the sync-via-shim rule).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_is_a_noop_and_reports_nothing() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        clear();
+        assert!(!enabled());
+        assert!(check("shard.step").is_ok());
+        assert_eq!(fired("shard.step"), 0);
+        assert_eq!(total_fired(), 0);
+    }
+
+    #[test]
+    fn error_fault_fires_after_skip_and_respects_max_fires() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _g = install_guarded(
+            vec![FailPlan::always("t.err", Fault::Error).with_after(2).with_max_fires(1)],
+            1,
+        );
+        assert!(check("t.err").is_ok(), "hit 1 skipped");
+        assert!(check("t.err").is_ok(), "hit 2 skipped");
+        assert!(check("t.err").is_err(), "hit 3 fires");
+        assert!(check("t.err").is_ok(), "max_fires=1 exhausted");
+        assert_eq!(fired("t.err"), 1);
+        assert!(check("t.other").is_ok(), "unrelated site untouched");
+    }
+
+    #[test]
+    fn probabilistic_fires_are_seed_deterministic() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let run = |seed: u64| {
+            let _g = install_guarded(
+                vec![FailPlan::always("t.prob", Fault::Error).with_prob(0.5)],
+                seed,
+            );
+            (0..64).map(|_| u8::from(check("t.prob").is_err())).collect::<Vec<_>>()
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed must reproduce the firing pattern");
+        assert_ne!(a, run(8), "different seed must perturb the pattern");
+        let fires = a.iter().map(|&b| u64::from(b)).sum::<u64>();
+        assert!((8..=56).contains(&fires), "p=0.5 over 64 hits fired {fires}x");
+    }
+
+    #[test]
+    fn soft_check_downgrades_panic_to_error() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _g = install_guarded(vec![FailPlan::always("t.soft", Fault::Panic)], 1);
+        assert!(check_soft("t.soft").is_err(), "soft site returns Err, not panic");
+    }
+
+    #[test]
+    fn panic_fault_panics_with_site_in_message() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _g = install_guarded(vec![FailPlan::always("t.boom", Fault::Panic)], 1);
+        let r = std::panic::catch_unwind(|| check("t.boom"));
+        let msg = r.expect_err("panic fault must panic");
+        let msg = msg.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("t.boom"), "panic message names the site: {msg}");
+        clear();
+    }
+
+    #[test]
+    fn delay_fault_sleeps_then_proceeds() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _g = install_guarded(
+            vec![FailPlan::always("t.slow", Fault::Delay(Duration::from_millis(5)))],
+            1,
+        );
+        let t0 = std::time::Instant::now();
+        assert!(check("t.slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn env_spec_round_trips() {
+        let p = parse_plan("shard.step=panic,0.25,3,2").expect("valid spec");
+        assert_eq!(p.site, "shard.step");
+        assert_eq!(p.fault, Fault::Panic);
+        assert!((p.prob - 0.25).abs() < 1e-12);
+        assert_eq!((p.after, p.max_fires), (3, 2));
+        let d = parse_plan("queue.push=delay:7").expect("valid delay spec");
+        assert_eq!(d.fault, Fault::Delay(Duration::from_millis(7)));
+        assert!(parse_plan("nofault").is_err());
+        assert!(parse_plan("x=explode").is_err());
+    }
+}

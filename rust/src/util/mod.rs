@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod parallel;
 pub mod rng;

@@ -1,0 +1,336 @@
+//! Chaos soak suite — pins the PR 7 fault-injection + supervised-recovery
+//! layer end to end.
+//!
+//! Every test installs a schedule in the process-global failpoint registry
+//! (`halo::util::failpoint`), so the whole binary serializes behind
+//! `TEST_LOCK` and uses `install_guarded` so a panicking test cannot leak
+//! its schedule into the next one. The invariants pinned here:
+//!
+//! - **Exactly one response per request**, served or shed, under any mix
+//!   of injected panics, errors and delays — nothing hangs, nothing is
+//!   silently dropped, nothing answers twice.
+//! - **Bit-identical retried completions**: a request re-homed after a
+//!   shard kill restarts from its original prefix and produces the same
+//!   greedy chain the un-faulted executor would (brown-out may clamp the
+//!   decode budget, yielding a *prefix* of that chain — still bit-exact
+//!   per position).
+//! - **Metrics conservation**: `requests == responses + shed + rejected`
+//!   and `Σ shed_reasons == shed + rejected` at quiesce.
+//! - **No panic escapes the supervisor**: `shutdown()` joins every shard
+//!   thread cleanly even after injected shard deaths.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use halo::coordinator::{
+    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, ShedReason, SubmitSpec,
+    SupervisorConfig,
+};
+use halo::util::failpoint::{self, sites, FailPlan, Fault};
+use halo::util::sync::Mutex;
+
+/// Serializes every test in this binary: the failpoint registry is
+/// process-global, so concurrent schedules would contaminate each other.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Deterministic toy model (mirrors the in-crate coordinator test
+/// executor): next token = sum(window) % 97 over a 16-token context
+/// window. Cheap enough that the soak is fault-dominated, not
+/// compute-dominated.
+struct Echo {
+    cap: usize,
+}
+
+impl BatchExecutor for Echo {
+    fn batch_capacity(&self) -> usize {
+        self.cap
+    }
+    fn seq_len(&self) -> usize {
+        16
+    }
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+        Ok(prefixes.iter().map(|p| p.iter().sum::<i32>() % 97).collect())
+    }
+}
+
+/// The greedy chain `Echo` produces for `prefix` under a sliding window of
+/// `cap` tokens — the oracle every served completion must match exactly.
+fn echo_chain(prefix: &[i32], cap: usize, steps: usize) -> Vec<i32> {
+    let mut seq: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
+    let mut want = Vec::new();
+    for _ in 0..steps {
+        let t = seq.iter().sum::<i32>() % 97;
+        want.push(t);
+        if seq.len() >= cap {
+            seq.remove(0);
+        }
+        seq.push(t);
+    }
+    want
+}
+
+/// Coordinator config tuned for chaos runs: tight batching windows and
+/// millisecond-scale respawn backoffs so dozens of kill/respawn cycles
+/// fit in a fast test.
+fn chaos_cfg(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
+        shards,
+        queue_cap: 0,
+        default_deadline: None,
+        supervisor: SupervisorConfig {
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(8),
+            ..SupervisorConfig::default()
+        },
+    }
+}
+
+fn echo_factory(cap: usize) -> impl Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync {
+    move |_shard| Ok(Box::new(Echo { cap }) as Box<dyn BatchExecutor>)
+}
+
+/// The headline soak: three fault classes live at once (step panics kill
+/// shards, begin errors force retries, push delays jitter submission),
+/// guaranteed to fire at three distinct sites, with every request
+/// answered exactly once and the books balancing afterwards.
+#[test]
+fn chaos_soak_survives_mixed_faults_with_exactly_one_response_each() {
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let t0 = Instant::now();
+    // Probabilistic background chaos plus one deterministic fire per site
+    // (prob 1.0, after N, max_fires 1) so the "≥ 3 distinct sites fired"
+    // and "≥ 1 shard killed" assertions never depend on seed luck.
+    let _g = failpoint::install_guarded(
+        vec![
+            FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_prob(0.05),
+            FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_after(10).with_max_fires(1),
+            FailPlan::always(sites::SHARD_BEGIN, Fault::Error).with_prob(0.10),
+            FailPlan::always(sites::SHARD_BEGIN, Fault::Error).with_after(5).with_max_fires(1),
+            FailPlan::always(sites::QUEUE_PUSH, Fault::Delay(Duration::from_micros(200)))
+                .with_prob(0.05),
+            FailPlan::always(sites::QUEUE_PUSH, Fault::Delay(Duration::from_micros(200)))
+                .with_after(3)
+                .with_max_fires(1),
+        ],
+        0xC0FF_EE00,
+    );
+    let coord = Coordinator::start_sharded(chaos_cfg(3), echo_factory(4));
+
+    let n = 120usize;
+    let mut specs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let prefix: Vec<i32> = (0..1 + i % 6).map(|j| ((i * 7 + j * 3) % 89) as i32).collect();
+        let max_new = 1 + i % 4;
+        rxs.push(coord.submit_spec(SubmitSpec::generate(prefix.clone(), max_new)));
+        specs.push((prefix, max_new));
+    }
+
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for (rx, (prefix, max_new)) in rxs.iter().zip(&specs) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every request answers: served or shed, never dropped");
+        if r.shed {
+            assert!(r.reason.is_some(), "shed response must carry a ShedReason");
+            shed += 1;
+        } else {
+            assert!(
+                !r.tokens.is_empty() && r.tokens.len() <= *max_new,
+                "served length in [1, {max_new}], got {}",
+                r.tokens.len()
+            );
+            // Retried (and possibly brown-out-clamped) completions are a
+            // bit-exact prefix of the un-faulted greedy chain.
+            assert_eq!(
+                r.tokens,
+                echo_chain(prefix, 16, r.tokens.len()),
+                "served chain diverged from the decode oracle"
+            );
+            served += 1;
+        }
+        assert!(
+            rx.recv_timeout(Duration::from_millis(5)).is_err(),
+            "a request must never answer twice"
+        );
+    }
+
+    // Fault observability: at least three distinct sites actually fired,
+    // including at least one shard kill that forced a respawn.
+    assert!(failpoint::fired(sites::SHARD_STEP) >= 1, "no shard was killed");
+    assert!(failpoint::fired(sites::SHARD_BEGIN) >= 1, "no begin fault fired");
+    assert!(failpoint::fired(sites::QUEUE_PUSH) >= 1, "no push delay fired");
+    assert!(failpoint::total_fired() >= 3);
+
+    let snap = coord.merged_snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert_eq!(
+        snap.requests,
+        snap.responses + snap.shed + snap.rejected,
+        "conservation: every arrival is served, shed or rejected"
+    );
+    assert_eq!(
+        snap.shed_reason_total(),
+        snap.shed + snap.rejected,
+        "every shed/reject carries exactly one reason"
+    );
+    assert_eq!(snap.responses, served);
+    assert_eq!(snap.shed + snap.rejected, shed);
+    assert!(snap.shard_restarts >= 1, "the killed shard must have respawned");
+
+    coord.shutdown().expect("no injected panic may escape the supervisor fences");
+    assert!(t0.elapsed() < Duration::from_secs(60), "soak wall-clock guard");
+}
+
+/// Fully deterministic kill: the third decode step panics (once), the
+/// supervisor respawns the shard, and the re-homed request re-decodes
+/// from its original prefix to the exact chain a fault-free run produces.
+#[test]
+fn killed_shard_respawns_and_retried_decode_is_bit_identical() {
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _g = failpoint::install_guarded(
+        vec![FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_after(2).with_max_fires(1)],
+        7,
+    );
+    let coord = Coordinator::start_sharded(chaos_cfg(1), echo_factory(4));
+
+    let prefix = vec![5, 11, 2];
+    let rx = coord.submit_spec(SubmitSpec::generate(prefix.clone(), 6));
+    let r = rx.recv_timeout(Duration::from_secs(20)).expect("retried request still answers");
+    assert!(!r.shed, "one kill within the retry budget must not shed");
+    assert_eq!(
+        r.tokens,
+        echo_chain(&prefix, 16, 6),
+        "post-respawn completion must be bit-identical to a fault-free run"
+    );
+    assert!(rx.recv_timeout(Duration::from_millis(5)).is_err(), "exactly one response");
+
+    assert_eq!(failpoint::fired(sites::SHARD_STEP), 1);
+    let snap = coord.merged_snapshot();
+    assert_eq!(snap.shard_restarts, 1, "exactly one supervised respawn");
+    assert!(snap.retries >= 1, "the orphan was re-enqueued, not re-run in place");
+    assert_eq!(
+        (snap.requests, snap.responses, snap.shed, snap.rejected),
+        (1, 1, 0, 0),
+        "books balance: one arrival, one served response"
+    );
+    coord.shutdown().expect("respawned shard joins cleanly");
+}
+
+/// Kill storm: every admission attempt panics, so each shard burns
+/// through its restart budget and dies permanently. Every request must
+/// still be answered — shed with a recovery-side reason — and shutdown
+/// must join the permanently-dead shard threads cleanly.
+#[test]
+fn total_shard_loss_sheds_everything_with_reasons_and_no_hang() {
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _g = failpoint::install_guarded(
+        vec![FailPlan::always(sites::SHARD_BEGIN, Fault::Panic)],
+        3,
+    );
+    let coord = Coordinator::start_sharded(chaos_cfg(2), echo_factory(4));
+
+    let n = 24usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit_spec(SubmitSpec::generate(vec![i as i32 % 89], 3)))
+        .collect();
+    for rx in &rxs {
+        let r = rx.recv_timeout(Duration::from_secs(20)).expect("total loss must not hang");
+        assert!(r.shed, "nothing can be served when every begin panics");
+        assert!(
+            matches!(r.reason, Some(ShedReason::ShardDeath | ShedReason::RetryExhausted)),
+            "total-loss sheds carry a recovery-side reason, got {:?}",
+            r.reason
+        );
+        assert!(rx.recv_timeout(Duration::from_millis(5)).is_err(), "exactly one response");
+    }
+
+    let snap = coord.merged_snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert_eq!(snap.responses, 0);
+    assert_eq!(snap.shed + snap.rejected, n as u64);
+    assert_eq!(snap.shed_reason_total(), snap.shed + snap.rejected);
+    coord.shutdown().expect("permanently-dead shards exit their threads cleanly");
+}
+
+/// Seed sweep: four different seeds over the same probabilistic schedule.
+/// Whatever the fault pattern, the coordinator never panics outward,
+/// answers every request exactly once, serves only oracle-exact chains,
+/// and balances its books.
+#[test]
+fn random_schedules_across_seeds_never_drop_or_double_answer() {
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for seed in [1u64, 2, 3, 4] {
+        let _g = failpoint::install_guarded(
+            vec![
+                FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_prob(0.10),
+                FailPlan::always(sites::SHARD_BEGIN, Fault::Error).with_prob(0.20),
+                FailPlan::always(sites::QUEUE_PUSH, Fault::Delay(Duration::from_micros(100)))
+                    .with_prob(0.10),
+            ],
+            seed,
+        );
+        let coord = Coordinator::start_sharded(chaos_cfg(2), echo_factory(4));
+        let n = 30usize;
+        let mut rxs = Vec::with_capacity(n);
+        let mut specs = Vec::with_capacity(n);
+        for i in 0..n {
+            let prefix: Vec<i32> = (0..1 + i % 4).map(|j| ((i * 13 + j) % 89) as i32).collect();
+            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix.clone(), 3)));
+            specs.push(prefix);
+        }
+        let mut served = 0u64;
+        let mut shed = 0u64;
+        for (rx, prefix) in rxs.iter().zip(&specs) {
+            let r = rx
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("seed {seed}: request went unanswered: {e}"));
+            if r.shed {
+                assert!(r.reason.is_some(), "seed {seed}: shed without a reason");
+                shed += 1;
+            } else {
+                assert_eq!(
+                    r.tokens,
+                    echo_chain(prefix, 16, r.tokens.len()),
+                    "seed {seed}: served chain diverged from the oracle"
+                );
+                served += 1;
+            }
+            assert!(rx.recv_timeout(Duration::from_millis(5)).is_err(), "seed {seed}: double answer");
+        }
+        let snap = coord.merged_snapshot();
+        assert_eq!(snap.requests, n as u64, "seed {seed}");
+        assert_eq!(snap.requests, snap.responses + snap.shed + snap.rejected, "seed {seed}");
+        assert_eq!(snap.shed_reason_total(), snap.shed + snap.rejected, "seed {seed}");
+        assert_eq!((snap.responses, snap.shed + snap.rejected), (served, shed), "seed {seed}");
+        coord.shutdown().unwrap_or_else(|e| panic!("seed {seed}: shard thread crashed: {e}"));
+    }
+    assert!(!failpoint::enabled(), "guards must clear the registry between seeds");
+}
+
+/// The CLI path: a schedule installed from `HALO_FAILPOINTS` (exactly what
+/// `halo serve` / `halo loadgen` do at startup) fires on the serving path,
+/// and the delayed request is still served correctly.
+#[test]
+fn env_installed_schedule_drives_the_serving_path() {
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var(failpoint::ENV_PLANS, "queue.push=delay:1,1.0,0,2");
+    std::env::set_var(failpoint::ENV_SEED, "9");
+    let installed = failpoint::install_from_env().expect("valid env spec");
+    std::env::remove_var(failpoint::ENV_PLANS);
+    std::env::remove_var(failpoint::ENV_SEED);
+    assert!(installed, "HALO_FAILPOINTS must install a schedule");
+
+    let coord = Coordinator::start_sharded(chaos_cfg(1), echo_factory(4));
+    let prefix = vec![4, 9];
+    let rx = coord.submit_spec(SubmitSpec::generate(prefix.clone(), 2));
+    let r = rx.recv_timeout(Duration::from_secs(10)).expect("delayed push still answers");
+    assert!(!r.shed);
+    assert_eq!(r.tokens, echo_chain(&prefix, 16, 2));
+    assert!(failpoint::fired(sites::QUEUE_PUSH) >= 1, "env schedule never fired");
+    coord.shutdown().expect("clean shutdown");
+    failpoint::clear();
+    assert!(!failpoint::enabled());
+}

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use halo::coordinator::{Batcher, BatcherConfig, Metrics, PushError, RequestQueue};
 use halo::util::sync::atomic::Ordering;
-use halo::util::sync::{explore, model, thread, Arc};
+use halo::util::sync::{explore, model, thread, Arc, Mutex};
 
 /// Admission control vs shed vs shutdown on a cap-1 queue: two producers
 /// race a `close()`, and under every interleaving the queue accepts at
@@ -166,4 +166,74 @@ fn model_merged_snapshot_vs_concurrent_recording() {
         assert_eq!(fin.percentile_latency(0.5), Some(Duration::from_micros(5)));
         assert_eq!(fin.percentile_latency(1.0), Some(Duration::from_micros(10)));
     });
+}
+
+/// The PR 7 supervisor-vs-shard-death race: a dying shard's supervisor
+/// re-homes an orphaned request onto a survivor's queue while that
+/// survivor concurrently closes (its own permanent death / shutdown).
+/// Under every interleaving the orphan lands in exactly one place — the
+/// survivor's queue (drained later by whoever owns the backlog) or back
+/// in the supervisor's hands via `PushError::Closed` (the shed path) —
+/// never both, never lost. This is exactly why `redistribute` treats a
+/// failed push as "try the next shard / shed with a reason" rather than
+/// assuming placement succeeded.
+#[test]
+fn model_supervisor_reenqueue_vs_survivor_close() {
+    let ex = explore(|| {
+        let survivor = Arc::new(RequestQueue::bounded(0));
+        let qs = survivor.clone();
+        // Supervisor thread: re-homes orphan `7`, reporting placement.
+        let sup = thread::spawn(move || match qs.push(7u32) {
+            Ok(()) => true,
+            Err(PushError::Closed(v)) => {
+                assert_eq!(v, 7, "refused orphan mangled");
+                false
+            }
+            Err(PushError::Full(v)) => panic!("unbounded queue reported Full({v})"),
+        });
+        // Survivor dies / shuts down concurrently with the re-enqueue.
+        survivor.close();
+        let requeued = sup.join().unwrap();
+
+        // Perm-death drain: the backlog owner sees the orphan iff the
+        // push won the race; the shed path owns it otherwise.
+        let mut drained = 0;
+        while survivor.try_pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(
+            drained,
+            usize::from(requeued),
+            "orphan must be owned exactly once (requeued={requeued}, drained={drained})"
+        );
+        assert!(survivor.is_closed());
+        assert_eq!(survivor.pop(), None, "drained+closed pop must not block");
+    });
+    assert!(ex.executions > 1, "push/close race must branch the search");
+}
+
+/// Two dying shards race `take_retry_token` on the last token of the
+/// global retry budget (a shim-mutex pool, as in the supervisor): under
+/// every interleaving exactly one wins, the pool never underflows, and
+/// the loser takes the shed path.
+#[test]
+fn model_retry_budget_last_token_has_a_single_winner() {
+    fn take(pool: &Mutex<u64>) -> bool {
+        let mut g = pool.lock().unwrap_or_else(|e| e.into_inner());
+        if *g == 0 {
+            return false;
+        }
+        *g -= 1;
+        true
+    }
+    let ex = explore(|| {
+        let pool = Arc::new(Mutex::new(1u64));
+        let (p1, p2) = (pool.clone(), pool.clone());
+        let t1 = thread::spawn(move || take(&p1));
+        let t2 = thread::spawn(move || take(&p2));
+        let (w1, w2) = (t1.join().unwrap(), t2.join().unwrap());
+        assert!(w1 ^ w2, "exactly one shard may spend the last retry token");
+        assert_eq!(*pool.lock().unwrap_or_else(|e| e.into_inner()), 0, "pool must end drained");
+    });
+    assert!(ex.executions > 1, "token race must branch the search");
 }

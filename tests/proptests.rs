@@ -7,7 +7,8 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use halo::coordinator::{
-    BatchExecutor, BatcherConfig, Coordinator, Metrics, QuantExecutor, SubmitSpec,
+    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, Metrics, QuantExecutor,
+    ShedReason, SubmitSpec, SupervisorConfig,
 };
 use halo::dvfs::{FreqClass, Schedule};
 use halo::mac::MacProfile;
@@ -343,6 +344,11 @@ fn prop_merged_percentiles_equal_union_recompute() {
         let nshards = 1 + rng.gen_usize(6);
         let shards: Vec<Metrics> = (0..nshards).map(|_| Metrics::default()).collect();
         let mut union: Vec<u64> = Vec::new();
+        // Recovery-side counters (PR 7): per-shard restart/retry/brown-out
+        // tallies and per-reason shed counts must sum exactly, element-wise
+        // for the reason vector.
+        let (mut restarts, mut retries, mut brownouts) = (0u64, 0u64, 0u64);
+        let mut reasons = [0u64; 5];
         for m in &shards {
             for _ in 0..rng.gen_usize(40) {
                 let us = rng.gen_usize(1_000_000) as u64;
@@ -350,17 +356,147 @@ fn prop_merged_percentiles_equal_union_recompute() {
                 m.record_latency(Duration::from_micros(us));
                 m.responses.fetch_add(1, Ordering::Relaxed);
             }
+            let (r, t, b) =
+                (rng.gen_usize(4) as u64, rng.gen_usize(9) as u64, rng.gen_usize(3) as u64);
+            m.shard_restarts.fetch_add(r, Ordering::Relaxed);
+            m.retries.fetch_add(t, Ordering::Relaxed);
+            m.brownout_steps.fetch_add(b, Ordering::Relaxed);
+            restarts += r;
+            retries += t;
+            brownouts += b;
+            for (i, reason) in ShedReason::ALL.into_iter().enumerate() {
+                let k = rng.gen_usize(5) as u64;
+                m.shed_reason_counter(reason).fetch_add(k, Ordering::Relaxed);
+                reasons[i] += k;
+            }
         }
         let views: Vec<&Metrics> = shards.iter().collect();
         let merged = Metrics::merged(&views);
         union.sort_unstable();
         assert_eq!(merged.latencies_us, union, "case {case}: union mismatch");
         assert_eq!(merged.responses, union.len() as u64, "case {case}");
+        assert_eq!(
+            (merged.shard_restarts, merged.retries, merged.brownout_steps),
+            (restarts, retries, brownouts),
+            "case {case}: recovery counters must sum across shards"
+        );
+        assert_eq!(merged.shed_reasons, reasons, "case {case}: reason vector must sum");
+        assert_eq!(merged.shed_reason_total(), reasons.iter().sum::<u64>(), "case {case}");
         for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
             let want = (!union.is_empty())
                 .then(|| Duration::from_micros(union[((union.len() - 1) as f64 * p) as usize]));
             assert_eq!(merged.percentile_latency(p), want, "case {case} p={p}");
         }
+    }
+}
+
+#[test]
+fn prop_random_executor_faults_never_panic_and_answer_exactly_once() {
+    // PR 7 robustness property: an executor that randomly panics and
+    // errors (seeded, per-shard streams — faults injected at the executor
+    // boundary rather than through the process-global failpoint registry,
+    // which `tests/chaos.rs` owns and which would leak across the tests
+    // running concurrently in this binary) must never panic the
+    // coordinator: every request is answered exactly once (served with
+    // the oracle chain or shed with a reason), the books balance, and
+    // shutdown joins every supervised shard cleanly.
+    use halo::util::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    struct ChaosExec {
+        rng: Rng,
+        panic_prob: f64,
+        err_prob: f64,
+    }
+    impl BatchExecutor for ChaosExec {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            32
+        }
+        fn run(&mut self, p: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+            let roll = self.rng.gen_f64();
+            if roll < self.panic_prob {
+                panic!("chaos executor: injected panic");
+            }
+            anyhow::ensure!(roll >= self.panic_prob + self.err_prob, "chaos: injected error");
+            Ok(p.iter().map(|t| t.iter().sum::<i32>() % 89).collect())
+        }
+    }
+    // The un-faulted greedy chain (prefix + generated stay under seq_len
+    // 32 here, so the window never slides).
+    fn sum_chain(prefix: &[i32], steps: usize) -> Vec<i32> {
+        let mut seq = prefix.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            let t = seq.iter().sum::<i32>() % 89;
+            out.push(t);
+            seq.push(t);
+        }
+        out
+    }
+
+    let mut rng = Rng::seed_from_u64(900);
+    for case in 0..6u64 {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
+            shards: 1 + rng.gen_usize(3),
+            queue_cap: 0,
+            default_deadline: None,
+            supervisor: SupervisorConfig {
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(4),
+                ..SupervisorConfig::default()
+            },
+        };
+        // Every respawn gets a fresh, distinct fault stream.
+        let spawn_ctr = Arc::new(AtomicU64::new(0));
+        let coord = Coordinator::start_sharded(cfg, move |shard| {
+            let k = spawn_ctr.fetch_add(1, Ordering::Relaxed);
+            Ok(Box::new(ChaosExec {
+                rng: Rng::seed_from_u64(0x5eed ^ (case << 24) ^ ((shard as u64) << 16) ^ k),
+                panic_prob: 0.05,
+                err_prob: 0.10,
+            }) as Box<dyn BatchExecutor>)
+        });
+
+        let n = 20 + rng.gen_usize(30);
+        let mut rxs = Vec::with_capacity(n);
+        let mut prefixes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let prefix: Vec<i32> =
+                (0..1 + rng.gen_usize(8)).map(|_| rng.gen_usize(89) as i32).collect();
+            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix.clone(), 1 + rng.gen_usize(3))));
+            prefixes.push(prefix);
+        }
+        let (mut served, mut shed) = (0u64, 0u64);
+        for (rx, prefix) in rxs.iter().zip(&prefixes) {
+            let r = rx
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("case {case}: request unanswered: {e}"));
+            if r.shed {
+                assert!(r.reason.is_some(), "case {case}: shed without a reason");
+                shed += 1;
+            } else {
+                assert_eq!(
+                    r.tokens,
+                    sum_chain(prefix, r.tokens.len()),
+                    "case {case}: served chain diverged from the oracle"
+                );
+                served += 1;
+            }
+            assert!(
+                rx.recv_timeout(Duration::from_millis(2)).is_err(),
+                "case {case}: a request answered twice"
+            );
+        }
+        let snap = coord.merged_snapshot();
+        assert_eq!(snap.requests, n as u64, "case {case}");
+        assert_eq!(snap.requests, snap.responses + snap.shed + snap.rejected, "case {case}");
+        assert_eq!(snap.shed_reason_total(), snap.shed + snap.rejected, "case {case}");
+        assert_eq!((snap.responses, snap.shed + snap.rejected), (served, shed), "case {case}");
+        coord.shutdown().unwrap_or_else(|e| panic!("case {case}: panic escaped supervisor: {e}"));
     }
 }
 

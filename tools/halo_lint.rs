@@ -15,6 +15,12 @@
 //! - **sync-via-shim** — no direct `std::sync::Mutex`/`Condvar` outside
 //!   `util/sync/`; everything must go through the shim so the model
 //!   checker can interpose (`--cfg loom` proves the test models do).
+//! - **no-unbounded-retry** — a loop header in `coordinator/` non-test
+//!   code that names retry work (`retry`/`attempt`/`respawn`/`restart`)
+//!   must reference its bound (`max`/`budget`/`cap`/`limit`) on the same
+//!   line; the shard supervisor's recovery loops must never be able to
+//!   spin forever, so an unbounded-looking retry loop is a finding unless
+//!   audited in `lint_allow.toml`.
 //! - **no-undocumented-unsafe** — every `unsafe` keyword needs a
 //!   `// SAFETY:` comment within the preceding 10 lines.
 //! - **missing-docs-inventory** — the set of `#[allow(missing_docs)]`
@@ -53,6 +59,7 @@ const RULE_PANIC: &str = "no-panic-serving-path";
 const RULE_SYNC: &str = "sync-via-shim";
 const RULE_UNSAFE: &str = "no-undocumented-unsafe";
 const RULE_DOCS: &str = "missing-docs-inventory";
+const RULE_RETRY: &str = "no-unbounded-retry";
 
 /// Serving-path files beyond `coordinator/` (repo-relative to `rust/src`).
 const SERVING_RUNTIME_FILES: &[&str] =
@@ -352,6 +359,50 @@ fn rule_sync_shim(rel: &str, raw: &[&str], code: &[&str], out: &mut Vec<Finding>
     }
 }
 
+/// no-unbounded-retry over one file: a loop header in `coordinator/`
+/// non-test code that names retry work must make its bound visible on the
+/// same line. Heuristic by design (the scanner has no CFG): it catches
+/// the common shapes — `while needs_retry {`, `for attempt in 0.. {` —
+/// and anything subtler must either hoist the bound into the header
+/// (`for attempt in 0..MAX_REQUEST_ATTEMPTS`) or carry an audited allow.
+fn rule_no_unbounded_retry(
+    rel: &str,
+    raw: &[&str],
+    code: &[&str],
+    tests: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if !rel.starts_with("coordinator/") {
+        return;
+    }
+    const TRIGGERS: &[&str] = &["retry", "retries", "attempt", "respawn", "restart"];
+    const BOUNDS: &[&str] = &["max", "budget", "cap", "limit"];
+    for (i, &line) in code.iter().enumerate() {
+        if tests[i] {
+            continue;
+        }
+        let t = line.trim_start();
+        let is_header = ["loop", "while", "for"].iter().any(|kw| {
+            t.starts_with(kw) && t.as_bytes().get(kw.len()).is_none_or(|&c| !is_ident(c))
+        });
+        if !is_header {
+            continue;
+        }
+        let low = t.to_ascii_lowercase();
+        if TRIGGERS.iter().any(|w| low.contains(w)) && !BOUNDS.iter().any(|w| low.contains(w)) {
+            out.push(Finding {
+                rule: RULE_RETRY,
+                file: rel.to_string(),
+                line: i + 1,
+                msg: "retry loop without a visible bound (reference the budget/cap/max \
+                      constant in the loop header, or add an audited allow)"
+                    .to_string(),
+                snippet: raw[i].to_string(),
+            });
+        }
+    }
+}
+
 /// no-undocumented-unsafe over one file.
 fn rule_undocumented_unsafe(rel: &str, raw: &[&str], code: &[&str], out: &mut Vec<Finding>) {
     for (i, &line) in code.iter().enumerate() {
@@ -382,6 +433,7 @@ fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
     let mut out = Vec::new();
     rule_no_panic(rel, &raw, &code, &tests, &mut out);
     rule_sync_shim(rel, &raw, &code, &mut out);
+    rule_no_unbounded_retry(rel, &raw, &code, &tests, &mut out);
     rule_undocumented_unsafe(rel, &raw, &code, &mut out);
     out
 }
@@ -723,6 +775,41 @@ mod tests {
         assert!(scan_source("mac/profile.rs", "use std::sync::OnceLock;").is_empty());
         // The shim's own re-export path is fine.
         assert!(scan_source("coordinator/server.rs", "use crate::util::sync::Mutex;").is_empty());
+    }
+
+    #[test]
+    fn retry_rule_requires_bound_on_loop_header() {
+        // Unbounded-looking retry loops fire...
+        let bad = "while needs_retry { attempt(); }";
+        assert_eq!(rules_of(&scan_source("coordinator/server.rs", bad)), vec![RULE_RETRY]);
+        let bad2 = "for attempt in 0.. { respawn(); }";
+        assert_eq!(rules_of(&scan_source("coordinator/server.rs", bad2)), vec![RULE_RETRY]);
+        // ...while a bound named in the header passes.
+        let good = "while attempts < cfg.max_request_attempts { go(); }";
+        assert!(scan_source("coordinator/server.rs", good).is_empty());
+        let good2 = "for attempt in 0..RETRY_BUDGET { go(); }";
+        assert!(scan_source("coordinator/server.rs", good2).is_empty());
+        // Non-retry loops and non-header retry mentions don't fire.
+        assert!(scan_source("coordinator/server.rs", "for req in incoming { go(); }").is_empty());
+        assert!(scan_source("coordinator/server.rs", "let respawn = true;").is_empty());
+        // `loop_`-prefixed identifiers are not loop headers.
+        assert!(scan_source("coordinator/server.rs", "loop_retry.tick();").is_empty());
+        // Comments are blanked, so a retry note on a plain loop is clean.
+        assert!(scan_source("coordinator/server.rs", "loop { // retry forever\n}").is_empty());
+        // Scope: coordinator/ non-test code only.
+        assert!(scan_source("runtime/sim.rs", bad).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn f() { while needs_retry {} }\n}\n";
+        assert!(scan_source("coordinator/server.rs", in_test).is_empty());
+        // Allowlistable like every other rule.
+        let allows = vec![AllowEntry {
+            rule: RULE_RETRY.to_string(),
+            file: "coordinator/server.rs".to_string(),
+            contains: "needs_retry".to_string(),
+            why: "bounded by the supervisor's death counter one frame up".to_string(),
+        }];
+        let (kept, used) = apply_allows(scan_source("coordinator/server.rs", bad), &allows);
+        assert!(kept.is_empty());
+        assert_eq!(used, vec![true]);
     }
 
     #[test]
