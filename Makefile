@@ -33,6 +33,7 @@ bench:
 	cargo bench --bench l2_serving
 	cargo bench --bench l4_quant_exec
 	cargo bench --bench l5_decode
+	cargo bench --bench l6_kvcache
 	cargo bench --bench fig8_exec_time
 	cargo bench --bench fig10_energy
 	cargo bench --bench fig11_tile_size
@@ -44,12 +45,14 @@ bench:
 # 64-lane vs scalar netlist eval, blocked vs naive matmul, SimBackend
 # forward), sharded serving throughput (1 shard vs N), quantized vs
 # dense execution (packed LUT matmul + fused SpMV vs dequantize-then-dense),
-# and KV-cached decode vs full-prefix recompute at S=256.
+# KV-cached decode vs full-prefix recompute at S=256, and the paged KV
+# pool's shared-prefix/block-packing memory savings.
 bench-json:
 	cargo bench --bench l1_hotpaths -- --smoke --json BENCH_PR2.json
 	cargo bench --bench l2_serving -- --smoke --json BENCH_PR3.json
 	cargo bench --bench l4_quant_exec -- --smoke --json BENCH_PR4.json
 	cargo bench --bench l5_decode -- --smoke --json BENCH_PR5.json
+	cargo bench --bench l6_kvcache -- --smoke --json BENCH_PR8.json
 
 # The CI regression gate, runnable locally: fresh smoke JSONs compared
 # against the committed baselines (ratio keys only, see tools/bench_check.rs).
@@ -58,6 +61,7 @@ bench-check:
 	cargo bench --bench l2_serving -- --smoke --json /tmp/halo_l2_smoke.json
 	cargo bench --bench l4_quant_exec -- --smoke --json /tmp/halo_l4_smoke.json
 	cargo bench --bench l5_decode -- --smoke --json /tmp/halo_l5_smoke.json
+	cargo bench --bench l6_kvcache -- --smoke --json /tmp/halo_l6_smoke.json
 	cargo run --release --bin bench_check -- --baseline BENCH_PR2.json \
 	  --current /tmp/halo_l1_smoke.json --tol 0.5 \
 	  --keys mac_profile_compute.speedup,netlist_eval.speedup,forward_pass.speedup
@@ -72,6 +76,10 @@ bench-check:
 	cargo run --release --bin bench_check -- --baseline BENCH_PR5.json \
 	  --current /tmp/halo_l5_smoke.json --tol 0.5 \
 	  --keys decode_cached_speedup --min decode_cached_speedup=2.0
+	cargo run --release --bin bench_check -- --baseline BENCH_PR8.json \
+	  --current /tmp/halo_l6_smoke.json --tol 0.3 \
+	  --keys shared_prefix_saving,kv_bytes_per_token_ratio \
+	  --min shared_prefix_saving=1.5
 
 # Documentation gate: rustdoc is warning-clean (missing_docs + intra-doc
 # links) and every example builds.

@@ -5,7 +5,7 @@
 
 use std::time::Duration;
 
-use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator};
+use halo::coordinator::{BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, Request};
 use halo::mac::MacProfile;
 use halo::quant::baselines::by_name;
 use halo::quant::{LayerCtx, Matrix};
@@ -29,12 +29,16 @@ impl BatchExecutor for Noop {
 fn main() {
     // 1. Coordinator routing throughput (no model): requests/s ceiling.
     let coord = Coordinator::start(
-        BatcherConfig { batch_size: 8, timeout: Duration::from_micros(200) },
-        || Ok(Box::new(Noop) as Box<dyn BatchExecutor>),
+        CoordinatorConfig {
+            batcher: BatcherConfig { batch_size: 8, timeout: Duration::from_micros(200) },
+            ..CoordinatorConfig::default()
+        },
+        |_shard| Ok(Box::new(Noop) as Box<dyn BatchExecutor>),
     );
     let n = 20_000;
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n).map(|i| coord.submit(vec![i as i32; 16])).collect();
+    let rxs: Vec<_> =
+        (0..n).map(|i| coord.submit_or_shed(Request::new(vec![i as i32; 16]))).collect();
     for rx in rxs {
         rx.recv().unwrap();
     }

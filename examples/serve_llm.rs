@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use halo::coordinator::server::GraphExecutor;
-use halo::coordinator::{BatcherConfig, Coordinator};
+use halo::coordinator::{Coordinator, CoordinatorConfig, Request};
 use halo::dvfs::Schedule;
 use halo::mac::MacProfile;
 use halo::model::{calibrate_fisher, Evaluator};
@@ -98,11 +98,11 @@ fn main() -> halo::Result<()> {
     let model_name2 = model_name.clone();
     let replace2 = replace.clone();
     let schedule2 = schedule.clone();
-    let coord = Coordinator::start(BatcherConfig::default(), move || {
+    let coord = Coordinator::start(CoordinatorConfig::default(), move |_shard| {
         let rt = Runtime::cpu()?;
-        let store = Store::open(root)?;
+        let store = Store::open(root.clone())?;
         let model = store.model(&model_name2)?;
-        let exec = GraphExecutor::new(rt, &model, &replace2, schedule2)?;
+        let exec = GraphExecutor::new(rt, &model, &replace2, schedule2.clone())?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
     });
 
@@ -113,7 +113,7 @@ fn main() -> halo::Result<()> {
         let start = (i * 61) % (stream.len() - 64);
         let prefix: Vec<i32> =
             stream[start..start + 48].iter().map(|&t| t as i32).collect();
-        rxs.push(coord.submit(prefix));
+        rxs.push(coord.submit_or_shed(Request::new(prefix)));
     }
     for rx in rxs {
         let r = rx.recv()?;

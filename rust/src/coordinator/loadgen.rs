@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use super::batch::BatcherConfig;
 use super::metrics::{MetricsSnapshot, ShedReason};
-use super::server::{BatchExecutor, Coordinator, CoordinatorConfig, SubmitSpec};
+use super::server::{BatchExecutor, Coordinator, CoordinatorConfig, Request};
 use crate::quant::Matrix;
 use crate::runtime::kernels::naive;
 use crate::util::failpoint::{self, sites, FailPlan, Fault};
@@ -147,7 +147,7 @@ pub struct LoadgenReport {
     /// Requests actually submitted (`< cfg.requests` iff `stopped_early`).
     pub submitted: usize,
     /// True when the coordinator reported total executor loss
-    /// ([`Coordinator::try_submit_spec`] returned the spec back) and the
+    /// ([`Coordinator::submit`] handed the request back) and the
     /// generator stopped submitting — the remaining arrivals were never
     /// sent, so they are *not* counted as shed (no phantom sheds).
     pub stopped_early: bool,
@@ -266,7 +266,7 @@ where
         default_deadline: cfg.deadline,
         ..CoordinatorConfig::default()
     };
-    let coord = Coordinator::start_sharded(coord_cfg, make_executor);
+    let coord = Coordinator::start(coord_cfg, make_executor);
 
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let prefixes: Vec<Vec<i32>> = (0..cfg.requests)
@@ -290,7 +290,7 @@ where
         // executor loss) — stop generating load and report a partial run
         // instead of minting phantom shed responses for arrivals that
         // were never actually sent.
-        match coord.try_submit_spec(SubmitSpec::generate(p.clone(), cfg.max_new_tokens)) {
+        match coord.submit(Request::new(p.clone()).max_new(cfg.max_new_tokens)) {
             Ok(rx) => rxs.push(rx),
             Err(_) => {
                 stopped_early = true;
@@ -392,8 +392,8 @@ mod tests {
     fn total_executor_loss_stops_the_generator_without_phantom_sheds() {
         // Every shard factory fails: the supervisor retires the shard
         // permanently (closing its queue) within a few backoff periods.
-        // Once try_submit_spec reports the closure, the generator must
-        // stop — arrivals never sent are not counted anywhere.
+        // Once submit reports the closure, the generator must stop —
+        // arrivals never sent are not counted anywhere.
         let cfg = LoadgenConfig {
             requests: 50,
             shards: 1,

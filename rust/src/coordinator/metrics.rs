@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::runtime::PoolStats;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::Mutex;
 use crate::util::Json;
@@ -100,6 +101,23 @@ pub struct Metrics {
     pub shed_retry_exhausted: AtomicU64,
     /// Sheds/rejections with [`ShedReason::Brownout`].
     pub shed_brownout: AtomicU64,
+    /// KV block-pool gauges (PR 8), published by the shard loop from
+    /// [`PoolStats`] after each decode step via [`Metrics::store_kv_pool`].
+    /// `in_use`/`peak` are point-in-time occupancy; the rest are the
+    /// pool's own monotone counters (the pool is the source of truth, so
+    /// these are `store`d, never `fetch_add`ed).
+    pub kv_blocks_in_use: AtomicU64,
+    /// High-water mark of pool blocks allocated at once.
+    pub kv_blocks_peak: AtomicU64,
+    /// Frozen blocks reused from the shared-prefix registry.
+    pub kv_shared_hits: AtomicU64,
+    /// Shared-prefix registry lookups at cache creation.
+    pub kv_prefix_lookups: AtomicU64,
+    /// Idle registry blocks evicted under pool/registry pressure.
+    pub kv_evictions: AtomicU64,
+    /// Block acquisitions refused with `PoolExhausted` (surfaces as
+    /// brown-out shed backpressure in the coordinator).
+    pub kv_pool_refusals: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -150,6 +168,17 @@ impl Metrics {
         self.responses.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Publish a shard's KV block-pool stats into the gauges. The pool
+    /// owns the counters, so every field is overwritten wholesale.
+    pub fn store_kv_pool(&self, ps: &PoolStats) {
+        self.kv_blocks_in_use.store(ps.blocks_in_use as u64, Ordering::Relaxed);
+        self.kv_blocks_peak.store(ps.blocks_peak as u64, Ordering::Relaxed);
+        self.kv_shared_hits.store(ps.shared_hits, Ordering::Relaxed);
+        self.kv_prefix_lookups.store(ps.prefix_lookups, Ordering::Relaxed);
+        self.kv_evictions.store(ps.evictions, Ordering::Relaxed);
+        self.kv_pool_refusals.store(ps.refusals, Ordering::Relaxed);
+    }
+
     /// Point-in-time copy of everything (percentiles computed over this
     /// view's own latency samples).
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -170,6 +199,12 @@ impl Metrics {
             brownout_steps: self.brownout_steps.load(Ordering::Relaxed),
             shed_reasons: ShedReason::ALL
                 .map(|r| self.shed_reason_counter(r).load(Ordering::Relaxed)),
+            kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
+            kv_blocks_peak: self.kv_blocks_peak.load(Ordering::Relaxed),
+            kv_shared_hits: self.kv_shared_hits.load(Ordering::Relaxed),
+            kv_prefix_lookups: self.kv_prefix_lookups.load(Ordering::Relaxed),
+            kv_evictions: self.kv_evictions.load(Ordering::Relaxed),
+            kv_pool_refusals: self.kv_pool_refusals.load(Ordering::Relaxed),
             latencies_us: lat,
         }
     }
@@ -195,6 +230,12 @@ impl Metrics {
             for (acc, v) in out.shed_reasons.iter_mut().zip(s.shed_reasons) {
                 *acc += v;
             }
+            out.kv_blocks_in_use += s.kv_blocks_in_use;
+            out.kv_blocks_peak += s.kv_blocks_peak;
+            out.kv_shared_hits += s.kv_shared_hits;
+            out.kv_prefix_lookups += s.kv_prefix_lookups;
+            out.kv_evictions += s.kv_evictions;
+            out.kv_pool_refusals += s.kv_pool_refusals;
             out.latencies_us.extend_from_slice(&s.latencies_us);
         }
         out.latencies_us.sort_unstable();
@@ -245,6 +286,19 @@ pub struct MetricsSnapshot {
     /// Per-reason shed/reject counts, indexed in [`ShedReason::ALL`]
     /// order; `Σ == shed + rejected` at quiesce.
     pub shed_reasons: [u64; 5],
+    /// KV pool blocks currently allocated (summed across shards when
+    /// merged).
+    pub kv_blocks_in_use: u64,
+    /// KV pool allocation high-water mark.
+    pub kv_blocks_peak: u64,
+    /// Frozen blocks reused from the shared-prefix registry.
+    pub kv_shared_hits: u64,
+    /// Shared-prefix registry lookups at cache creation.
+    pub kv_prefix_lookups: u64,
+    /// Idle registry blocks evicted under pressure.
+    pub kv_evictions: u64,
+    /// Block acquisitions refused with `PoolExhausted`.
+    pub kv_pool_refusals: u64,
     /// Sorted ascending.
     pub latencies_us: Vec<u64>,
 }
@@ -344,6 +398,14 @@ impl MetricsSnapshot {
             reasons.set(r.name(), self.shed_for(r) as f64);
         }
         j.set("shed_reasons", reasons);
+        let mut kv = Json::obj();
+        kv.set("blocks_in_use", self.kv_blocks_in_use as f64)
+            .set("blocks_peak", self.kv_blocks_peak as f64)
+            .set("shared_hits", self.kv_shared_hits as f64)
+            .set("prefix_lookups", self.kv_prefix_lookups as f64)
+            .set("evictions", self.kv_evictions as f64)
+            .set("pool_refusals", self.kv_pool_refusals as f64);
+        j.set("kv_pool", kv);
         if let Some(w) = wall {
             let s = w.as_secs_f64().max(1e-12);
             j.set("wall_s", s)
@@ -425,6 +487,43 @@ mod tests {
         assert_eq!(reasons.req("deadline").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(reasons.req("retry_exhausted").unwrap().as_f64().unwrap(), 2.0);
         assert!(s.summary().contains("retries=5"));
+    }
+
+    #[test]
+    fn kv_pool_gauges_store_merge_and_report() {
+        let a = Arc::new(Metrics::default());
+        let b = Arc::new(Metrics::default());
+        a.store_kv_pool(&PoolStats {
+            blocks_in_use: 3,
+            blocks_peak: 7,
+            shared_hits: 10,
+            prefix_lookups: 12,
+            evictions: 1,
+            refusals: 2,
+            ..PoolStats::default()
+        });
+        b.store_kv_pool(&PoolStats { blocks_in_use: 5, ..PoolStats::default() });
+        // Gauges overwrite wholesale: a second store replaces, not adds.
+        a.store_kv_pool(&PoolStats {
+            blocks_in_use: 4,
+            blocks_peak: 7,
+            shared_hits: 11,
+            prefix_lookups: 13,
+            evictions: 1,
+            refusals: 2,
+            ..PoolStats::default()
+        });
+        let s = Metrics::merged(&[a, b]);
+        assert_eq!(s.kv_blocks_in_use, 9);
+        assert_eq!(s.kv_blocks_peak, 7);
+        assert_eq!(s.kv_shared_hits, 11);
+        assert_eq!(s.kv_prefix_lookups, 13);
+        assert_eq!(s.kv_evictions, 1);
+        assert_eq!(s.kv_pool_refusals, 2);
+        let j = s.to_json(None);
+        let kv = j.req("kv_pool").unwrap();
+        assert_eq!(kv.req("blocks_in_use").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(kv.req("shared_hits").unwrap().as_f64().unwrap(), 11.0);
     }
 
     #[test]

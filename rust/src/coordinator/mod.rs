@@ -10,7 +10,7 @@
 //! Architecture (PR 3 sharding + PR 5 continuous batching):
 //!
 //! ```text
-//!            submit / submit_spec
+//!     submit(Request) / submit_or_shed(Request)
 //!                    │ round-robin + least-loaded stealing,
 //!                    │ bounded queues (admission control)
 //!        ┌───────────┼───────────┐
@@ -31,7 +31,11 @@
 //! retiring finished ones immediately — no request ever pads to its
 //! neighbor's prefix length, and no request waits for the current batch
 //! to drain before starting. The cached path is pinned bit-identical to
-//! full-prefix recompute by `tests/decode_equiv.rs`.
+//! full-prefix recompute by `tests/decode_equiv.rs`. Since PR 8 each
+//! shard's per-request caches are carved from a shared paged
+//! [`BlockPool`](crate::runtime::BlockPool) (fixed-size blocks, frozen
+//! shared prefixes, bounded memory — exhaustion sheds as brown-out
+//! backpressure instead of panicking).
 //!
 //! Shards are **supervised** (PR 7): each shard thread restarts its
 //! executor after a death (capped exponential backoff + jitter), re-homes
@@ -59,6 +63,6 @@ pub use queue::{Pop, PushError, RequestQueue};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, ShedReason};
 pub use server::{
-    BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitSpec,
+    BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitError,
     SupervisorConfig,
 };

@@ -56,6 +56,7 @@
 //! pinned by the chaos soak suite (`tests/chaos.rs`).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -72,35 +73,111 @@ use crate::dvfs::Schedule;
 use crate::quant::Matrix;
 use crate::runtime::sim::ModelSpec;
 use crate::runtime::{
-    argmax_slice, literal_i32, Buffer, DecodeState, KvCache, ModelArtifacts, PackedModel, Runtime,
+    argmax_slice, literal_i32, BlockPool, Buffer, DecodeState, KvCache, ModelArtifacts,
+    PackedModel, PoolExhausted, PoolStats, Runtime,
 };
 use crate::util::failpoint::{self, sites};
 use crate::util::{parallel, Rng};
 
-/// One inference request: a token prefix plus decode/deadline metadata.
-/// The response carries the autoregressively generated tokens.
-#[derive(Debug)]
+/// One serving request, built fluently and handed to
+/// [`Coordinator::submit`] (fallible) or [`Coordinator::submit_or_shed`]
+/// (infallible). PR 8 collapsed the accreted `submit` / `submit_spec` /
+/// `try_submit_spec` surface into this single builder:
+///
+/// ```ignore
+/// let rx = coord.submit(
+///     Request::new(tokens).max_new(16).deadline(Duration::from_millis(50)).priority(1),
+/// )?;
+/// ```
+#[derive(Debug, Clone)]
 pub struct Request {
+    tokens: Vec<i32>,
+    max_new: usize,
+    deadline: Option<Instant>,
+    priority: i8,
+}
+
+impl Request {
+    /// A request for the classic next-token serving default: decode
+    /// exactly one token, no deadline, priority 0.
+    pub fn new(tokens: Vec<i32>) -> Self {
+        Self { tokens, max_new: 1, deadline: None, priority: 0 }
+    }
+
+    /// Decode `n` tokens autoregressively (clamped to ≥ 1).
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n.max(1);
+        self
+    }
+
+    /// Attach a relative shed deadline (from now): if it passes while the
+    /// request is queued, the request sheds instead of executing.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(Instant::now() + d);
+        self
+    }
+
+    /// Attach an absolute shed deadline.
+    pub fn deadline_at(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Scheduling priority (default 0); under brown-out level ≥ 2,
+    /// negative-priority requests are shed at admission first.
+    pub fn priority(mut self, p: i8) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// The prompt prefix (callers getting the request back in a
+    /// [`SubmitError`] can inspect or resubmit it).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+}
+
+/// [`Coordinator::submit`] refusal: every shard queue is closed — the
+/// coordinator will never serve new work again (total executor loss, or
+/// shutdown has begun). Carries the [`Request`] back *untouched* (no
+/// metrics recorded, nothing queued) so the caller can stop submitting —
+/// load generators use this to avoid minting phantom shed responses — or
+/// route it elsewhere.
+#[derive(Debug)]
+pub struct SubmitError(pub Request);
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "coordinator accepts no new work: every shard queue is closed")
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// An admitted request inside the coordinator: the caller's [`Request`]
+/// plus routing metadata (id, response channel, retry accounting).
+#[derive(Debug)]
+struct QueuedRequest {
     /// Coordinator-assigned id, echoed in the response.
-    pub id: u64,
+    id: u64,
     /// The prompt prefix.
-    pub tokens: Vec<i32>,
-    /// How many tokens to decode (1 = classic next-token serving).
-    pub max_new_tokens: usize,
+    tokens: Vec<i32>,
+    /// How many tokens to decode (post brown-out clamping).
+    max_new_tokens: usize,
     /// Absolute shed deadline: if it passes while the request is queued,
     /// the executor sheds it (empty `tokens`, `shed = true`) instead of
     /// running it.
-    pub deadline: Option<Instant>,
+    deadline: Option<Instant>,
     /// Where the (single) response is delivered.
-    pub respond: Sender<Response>,
+    respond: Sender<Response>,
     /// Submission time (latency measurement).
-    pub submitted: Instant,
+    submitted: Instant,
     /// Scheduling priority; under brown-out level ≥ 2 negative-priority
     /// requests are shed at admission before anything else.
-    pub priority: i8,
+    priority: i8,
     /// Times this request has been re-enqueued after a fault (0 = first
     /// execution). Bounded by [`SupervisorConfig::max_request_attempts`].
-    pub attempts: u32,
+    attempts: u32,
 }
 
 /// What the caller's channel yields for one [`Request`].
@@ -143,6 +220,14 @@ pub trait BatchExecutor {
     /// Simulated DVFS transitions for one pass (schedule metadata).
     fn dvfs_transitions(&self) -> usize {
         0
+    }
+
+    /// Paged KV block-pool statistics for this shard, when the executor
+    /// serves from a shared [`BlockPool`] (attached via `with_kv_pool`).
+    /// `None` for executors without a pool; the shard loop publishes a
+    /// `Some` snapshot into the shard's metrics gauges after every step.
+    fn kv_pool_stats(&self) -> Option<PoolStats> {
+        None
     }
 
     /// Admit one request: build its [`DecodeState`] (window = the
@@ -236,6 +321,11 @@ pub struct GraphExecutor {
     /// `(n_layers, d_model)` for sizing per-request KV caches; `None`
     /// when the model config is unavailable (decode then recomputes).
     kv_dims: Option<(usize, usize)>,
+    /// Shared paged block pool for this shard (PR 8). When attached,
+    /// `begin` carves per-request caches from it (bounded memory +
+    /// shared-prefix reuse); otherwise each request gets a private
+    /// unbounded pool.
+    kv_pool: Option<Arc<BlockPool>>,
 }
 
 impl GraphExecutor {
@@ -275,6 +365,7 @@ impl GraphExecutor {
             dynamic_batch,
             use_kv: true,
             kv_dims,
+            kv_pool: None,
         })
     }
 
@@ -283,6 +374,16 @@ impl GraphExecutor {
     /// (the `--no-kv-cache` debugging oracle).
     pub fn with_kv_cache(mut self, on: bool) -> Self {
         self.use_kv = on;
+        self
+    }
+
+    /// Serve per-request caches from a shared paged [`BlockPool`]. The
+    /// pool must be shaped for this model (`n_layers`, `d_model`); a
+    /// mismatched pool surfaces as an append-shape error on the first
+    /// decode step, not silence. Create the pool *outside* the executor
+    /// factory so its shared-prefix registry survives shard respawns.
+    pub fn with_kv_pool(mut self, pool: Arc<BlockPool>) -> Self {
+        self.kv_pool = Some(pool);
         self
     }
 }
@@ -303,6 +404,9 @@ pub struct QuantExecutor {
     batch: usize,
     schedule: Schedule,
     use_kv: bool,
+    /// Shared paged block pool for this shard (PR 8); see
+    /// [`GraphExecutor::with_kv_pool`].
+    kv_pool: Option<Arc<BlockPool>>,
     work_positions: u64,
 }
 
@@ -317,13 +421,20 @@ impl QuantExecutor {
     /// Executor with an explicit schedule slice (one shard of
     /// [`Schedule::shard`] under sharded serving).
     pub fn with_schedule(model: Arc<PackedModel>, batch: usize, schedule: Schedule) -> Self {
-        Self { model, batch: batch.max(1), schedule, use_kv: true, work_positions: 0 }
+        Self { model, batch: batch.max(1), schedule, use_kv: true, kv_pool: None, work_positions: 0 }
     }
 
     /// Toggle KV-cached incremental decode (on by default); off = every
     /// step recomputes the full window (the `--no-kv-cache` oracle).
     pub fn with_kv_cache(mut self, on: bool) -> Self {
         self.use_kv = on;
+        self
+    }
+
+    /// Serve per-request caches from a shared paged [`BlockPool`]; see
+    /// [`GraphExecutor::with_kv_pool`] for shaping and lifetime rules.
+    pub fn with_kv_pool(mut self, pool: Arc<BlockPool>) -> Self {
+        self.kv_pool = Some(pool);
         self
     }
 
@@ -385,13 +496,25 @@ impl BatchExecutor for QuantExecutor {
     }
 
     /// KV states by default; plain recompute states under `--no-kv-cache`.
+    /// With a shard pool attached, the request's cache is carved from the
+    /// pool — block acquisition is deferred to the first append, but
+    /// shared-prefix seeding happens here (the pool may hand back a chain
+    /// of frozen blocks covering the window's common header).
     fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
         let cap = self.model.spec.seq_len;
         Ok(if self.use_kv {
-            DecodeState::with_cache(prefix, max_new, cap, self.model.new_cache())
+            let cache = match &self.kv_pool {
+                Some(pool) => pool.new_cache(&prefix[prefix.len().saturating_sub(cap)..]),
+                None => self.model.new_cache(),
+            };
+            DecodeState::with_cache(prefix, max_new, cap, cache)
         } else {
             DecodeState::new(prefix, max_new, cap)
         })
+    }
+
+    fn kv_pool_stats(&self) -> Option<PoolStats> {
+        self.kv_pool.as_ref().map(|p| p.stats())
     }
 
     /// Incremental decode: each live request evaluates only its uncached
@@ -503,13 +626,25 @@ impl BatchExecutor for GraphExecutor {
 
     /// KV states when the loaded graph supports incremental decode (sim
     /// backend); plain recompute states otherwise (PJRT, `--no-kv-cache`).
+    /// With a shard pool attached, caches come from the pool (bounded
+    /// blocks + shared-prefix seeding) instead of private allocations.
     fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
         Ok(match self.kv_dims {
             Some((layers, d)) if self.use_kv && self.exe.supports_incremental_decode() => {
-                DecodeState::with_cache(prefix, max_new, self.seq, KvCache::new(layers, d))
+                let cache = match &self.kv_pool {
+                    Some(pool) => {
+                        pool.new_cache(&prefix[prefix.len().saturating_sub(self.seq)..])
+                    }
+                    None => KvCache::new(layers, d),
+                };
+                DecodeState::with_cache(prefix, max_new, self.seq, cache)
             }
             _ => DecodeState::new(prefix, max_new, self.seq),
         })
+    }
+
+    fn kv_pool_stats(&self) -> Option<PoolStats> {
+        self.kv_pool.as_ref().map(|p| p.stats())
     }
 
     /// Incremental decode through `Executable::run_decode_step`: each
@@ -683,45 +818,6 @@ impl CoordinatorConfig {
     }
 }
 
-/// Everything `submit_spec` needs to route one request.
-#[derive(Debug, Clone)]
-pub struct SubmitSpec {
-    /// The prompt prefix.
-    pub tokens: Vec<i32>,
-    /// Tokens to decode (clamped to ≥ 1 at submit).
-    pub max_new_tokens: usize,
-    /// Optional absolute shed deadline.
-    pub deadline: Option<Instant>,
-    /// Scheduling priority (default 0). Under brown-out level ≥ 2,
-    /// negative-priority requests are shed at admission first.
-    pub priority: i8,
-}
-
-impl SubmitSpec {
-    /// Classic next-token serving: decode exactly one token.
-    pub fn next_token(tokens: Vec<i32>) -> Self {
-        Self { tokens, max_new_tokens: 1, deadline: None, priority: 0 }
-    }
-
-    /// Autoregressive decode of `max_new_tokens` tokens.
-    pub fn generate(tokens: Vec<i32>, max_new_tokens: usize) -> Self {
-        Self { tokens, max_new_tokens: max_new_tokens.max(1), deadline: None, priority: 0 }
-    }
-
-    /// Attach a relative shed deadline (from now).
-    pub fn with_deadline(mut self, d: Duration) -> Self {
-        self.deadline = Some(Instant::now() + d);
-        self
-    }
-
-    /// Attach a scheduling priority (negative = first to shed under
-    /// brown-out).
-    pub fn with_priority(mut self, p: i8) -> Self {
-        self.priority = p;
-        self
-    }
-}
-
 /// One shard's router-visible state: its bounded queue, liveness flag and
 /// per-shard metrics. Shared (`Arc<Vec<ShardSlot>>`) between the router
 /// and every supervisor thread, so a dying shard can re-home its orphaned
@@ -730,7 +826,7 @@ struct ShardSlot {
     /// Bounded request queue (admission control lives in the queue: a
     /// `push` atomically checks cap + closed under one lock). Stays open
     /// across respawns — only shutdown or permanent death closes it.
-    queue: Arc<RequestQueue<Request>>,
+    queue: Arc<RequestQueue<QueuedRequest>>,
     /// Set while the shard's executor is down (dead or between respawns):
     /// the router prefers live shards and only queues here as a last
     /// resort (the backlog is drained by the respawn, or re-homed at
@@ -753,29 +849,14 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Single-shard back-compat constructor: one executor thread, unbounded
-    /// queue, no default deadline. The one-shot factory cannot build a
-    /// replacement executor, so after a death here the supervisor's respawn
-    /// attempts fail and the shard goes permanently dead once the restart
-    /// budget drains.
-    pub fn start<F>(cfg: BatcherConfig, make_executor: F) -> Self
-    where
-        F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
-    {
-        let coord_cfg = CoordinatorConfig { batcher: cfg, ..CoordinatorConfig::default() };
-        let mut once = Some(make_executor);
-        let factory: ShardFactory = Box::new(move || match once.take() {
-            Some(f) => f(),
-            None => anyhow::bail!("one-shot executor factory already consumed"),
-        });
-        Self::start_with(coord_cfg, vec![factory])
-    }
-
-    /// Start `cfg.shards` executor threads. `make_executor(shard)` runs on
+    /// The one constructor (PR 8 deleted the single-shard special case):
+    /// start `cfg.shards` executor threads. `make_executor(shard)` runs on
     /// each shard's own thread (PJRT handles never cross threads) — and
     /// runs *again* whenever that shard's supervisor respawns a dead
-    /// executor, so it must hand out a fresh executor per call.
-    pub fn start_sharded<F>(cfg: CoordinatorConfig, make_executor: F) -> Self
+    /// executor, so it must hand out a fresh executor per call. Build
+    /// anything that must survive respawns (e.g. a shard's KV
+    /// [`BlockPool`]) *outside* the closure and move clones in.
+    pub fn start<F>(cfg: CoordinatorConfig, make_executor: F) -> Self
     where
         F: Fn(usize) -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
     {
@@ -860,18 +941,12 @@ impl Coordinator {
         s
     }
 
-    /// Submit a next-token request (back-compat). Never panics: when the
-    /// request cannot be accepted (all queues full or all executors gone),
-    /// the returned channel yields a `shed` response instead.
-    pub fn submit(&self, tokens: Vec<i32>) -> Receiver<Response> {
-        self.submit_spec(SubmitSpec::next_token(tokens))
-    }
-
-    /// Submit with full control over decode length, deadline and priority.
-    /// Infallible from the caller's view: a request the coordinator cannot
-    /// accept still answers on the returned channel with a shed response.
-    pub fn submit_spec(&self, spec: SubmitSpec) -> Receiver<Response> {
-        match self.try_submit_spec(spec) {
+    /// Infallible submit: a request the coordinator cannot accept still
+    /// answers on the returned channel with a shed response — the thin
+    /// wrapper over [`Coordinator::submit`] for callers that want one
+    /// channel per request, no error handling.
+    pub fn submit_or_shed(&self, req: Request) -> Receiver<Response> {
+        match self.submit(req) {
             Ok(rx) => rx,
             Err(_) => {
                 // Every queue is closed (total executor loss or shutdown):
@@ -897,21 +972,20 @@ impl Coordinator {
         }
     }
 
-    /// Fallible submit: `Err(spec)` hands the request back *untouched* (no
-    /// metrics recorded, nothing queued) when every shard queue is closed —
-    /// the coordinator will never serve new work again (total executor
-    /// loss, or shutdown has begun). Load generators use this to stop
-    /// submitting instead of minting phantom shed responses.
+    /// Fallible submit: `Err` hands the [`Request`] back *untouched* (see
+    /// [`SubmitError`]) when every shard queue is closed — the coordinator
+    /// will never serve new work again (total executor loss, or shutdown
+    /// has begun).
     ///
     /// `Ok` means the request was admitted *or* terminally answered on the
     /// returned channel (admission-control rejection, brown-out shed) —
     /// exactly one response either way.
-    pub fn try_submit_spec(&self, spec: SubmitSpec) -> Result<Receiver<Response>, SubmitSpec> {
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>, SubmitError> {
         let (rtx, rrx) = channel();
         let level = self.brownout.level();
         // Brown-out level ≥ 2: negative-priority work is shed at admission
         // before it can displace foreground requests.
-        if level >= 2 && spec.priority < 0 {
+        if level >= 2 && req.priority < 0 {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             self.metrics.requests.fetch_add(1, Ordering::Relaxed);
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -931,20 +1005,21 @@ impl Coordinator {
         }
         // Brown-out level ≥ 1: clamp decode budgets (halved per level) so
         // the backlog drains sooner; the clamp never goes below one token.
-        let requested_new = spec.max_new_tokens.max(1);
+        let requested_new = req.max_new.max(1);
         let max_new = if level > 0 { (requested_new >> level.min(16)).max(1) } else { requested_new };
-        let deadline = spec
-            .deadline
-            .or_else(|| self.cfg.default_deadline.map(|d| Instant::now() + d));
+        let caller_deadline = req.deadline;
+        let deadline =
+            caller_deadline.or_else(|| self.cfg.default_deadline.map(|d| Instant::now() + d));
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = Request {
+        let priority = req.priority;
+        let mut req = QueuedRequest {
             id,
-            tokens: spec.tokens,
+            tokens: req.tokens,
             max_new_tokens: max_new,
             deadline,
             respond: rtx,
             submitted: Instant::now(),
-            priority: spec.priority,
+            priority,
             attempts: 0,
         };
 
@@ -991,14 +1066,15 @@ impl Coordinator {
             }
         }
         if !any_full {
-            // Every queue is closed: hand the spec back so the caller can
+            // Every queue is closed: hand the request back (pre-clamp
+            // decode budget, the caller's own deadline) so the caller can
             // stop submitting. Nothing was recorded or queued.
-            return Err(SubmitSpec {
+            return Err(SubmitError(Request {
                 tokens: req.tokens,
-                max_new_tokens: requested_new,
-                deadline: spec.deadline,
+                max_new: requested_new,
+                deadline: caller_deadline,
                 priority: req.priority,
-            });
+            }));
         }
         // Backpressure: every open queue is at capacity. Terminal
         // admission-control rejection, surfaced as a shed response.
@@ -1061,7 +1137,7 @@ type ShardFactory = Box<dyn FnMut() -> Result<Box<dyn BatchExecutor>> + Send>;
 
 /// One in-flight request on a shard: submission metadata + decode state.
 struct Live {
-    req: Request,
+    req: QueuedRequest,
     state: DecodeState,
 }
 
@@ -1086,11 +1162,15 @@ enum GenExit {
     /// set (plus any request caught mid-admission) to re-home; `served_any`
     /// reports whether this generation completed at least one response
     /// (which resets the supervisor's consecutive-death counter).
-    Died { orphans: Vec<Request>, served_any: bool },
+    Died { orphans: Vec<QueuedRequest>, served_any: bool },
 }
 
-fn orphaned(live: &mut Vec<Live>, extra: Option<Request>, served_any: bool) -> GenExit {
-    let mut orphans: Vec<Request> = live.drain(..).map(|l| l.req).collect();
+fn orphaned(
+    live: &mut Vec<Live>,
+    extra: Option<QueuedRequest>,
+    served_any: bool,
+) -> GenExit {
+    let mut orphans: Vec<QueuedRequest> = live.drain(..).map(|l| l.req).collect();
     orphans.extend(extra);
     GenExit::Died { orphans, served_any }
 }
@@ -1226,7 +1306,7 @@ fn spawn_shard(
 fn run_generation(
     ctx: &ShardCtx,
     m: &Arc<Metrics>,
-    q: &Arc<RequestQueue<Request>>,
+    q: &Arc<RequestQueue<QueuedRequest>>,
     mut exec: Box<dyn BatchExecutor>,
     batcher_cfg: &BatcherConfig,
 ) -> GenExit {
@@ -1308,13 +1388,29 @@ fn run_generation(
                     live.push(Live { req, state });
                 }
                 Ok(Err(e)) => {
-                    // Retryable: the executor survived and the request
-                    // never started — re-home it instead of shedding.
                     eprintln!("[coordinator] shard {shard_id}: admit failed: {e:#}");
                     for g in [m, &ctx.global] {
                         g.exec_errors.fetch_add(1, Ordering::Relaxed);
                     }
-                    redistribute(ctx, m, vec![req]);
+                    if e.downcast_ref::<PoolExhausted>().is_some() {
+                        // KV block pool dry: this is load, not a fault.
+                        // Retrying elsewhere would just drain the retry
+                        // budget against a full pool — shed as brown-out
+                        // backpressure and raise the pressure so decode
+                        // budgets clamp until blocks free up.
+                        ctx.brownout.overload(&ctx.global);
+                        shed_one(shard_id, req, m, &ctx.global, ShedReason::Brownout);
+                        // Publish the refusal immediately: a shard that
+                        // only ever sheds at begin would otherwise never
+                        // reach the per-step gauge store below.
+                        if let Some(ps) = exec.kv_pool_stats() {
+                            m.store_kv_pool(&ps);
+                        }
+                    } else {
+                        // Retryable: the executor survived and the request
+                        // never started — re-home it instead of shedding.
+                        redistribute(ctx, m, vec![req]);
+                    }
                 }
             }
         }
@@ -1359,11 +1455,29 @@ fn run_generation(
             for g in [m, &ctx.global] {
                 g.exec_errors.fetch_add(1, Ordering::Relaxed);
             }
+            let pool_pressure = e.downcast_ref::<PoolExhausted>().is_some();
+            if pool_pressure {
+                // Pool pressure mid-decode: raise brown-out so admission
+                // clamps budgets. The re-home below also *releases* every
+                // live cache (dropping the DecodeStates frees their
+                // blocks), so the retried requests see a drained pool.
+                ctx.brownout.overload(&ctx.global);
+                if let Some(ps) = exec.kv_pool_stats() {
+                    m.store_kv_pool(&ps);
+                }
+            }
             // Retryable fault: re-home the live set (each request restarts
             // decode from its original prefix, so greedy chains stay
-            // bit-identical) and keep this generation serving.
-            let orphans: Vec<Request> = live.drain(..).map(|l| l.req).collect();
-            redistribute(ctx, m, orphans);
+            // bit-identical) and keep this generation serving. Requests
+            // whose budget runs out under sustained pool pressure shed as
+            // Brownout — backpressure, not a shard fault.
+            let orphans: Vec<QueuedRequest> = live.drain(..).map(|l| l.req).collect();
+            let exhaust = if pool_pressure {
+                ShedReason::Brownout
+            } else {
+                ShedReason::RetryExhausted
+            };
+            redistribute_with(ctx, m, orphans, exhaust);
             continue;
         }
         let stepped = live.len() as u64;
@@ -1372,6 +1486,11 @@ fn run_generation(
             g.batches.fetch_add(1, Ordering::Relaxed);
             g.generated_tokens.fetch_add(stepped, Ordering::Relaxed);
             g.dvfs_transitions.fetch_add(transitions, Ordering::Relaxed);
+        }
+        // Publish the shard's KV pool occupancy/sharing gauges (if any)
+        // while they're fresh — metrics readers see per-step granularity.
+        if let Some(ps) = exec.kv_pool_stats() {
+            m.store_kv_pool(&ps);
         }
 
         // ---- retire finished requests immediately.
@@ -1421,7 +1540,7 @@ fn take_retry_token(tokens: &Mutex<u64>) -> bool {
 /// (least-loaded first), pass 1 to any open queue (a dead-but-open shard
 /// is respawning and will drain — or re-home — its backlog). Returns the
 /// request when every queue refused it.
-fn try_place(slots: &[ShardSlot], mut req: Request) -> Option<Request> {
+fn try_place(slots: &[ShardSlot], mut req: QueuedRequest) -> Option<QueuedRequest> {
     let mut order: Vec<(usize, usize)> =
         slots.iter().enumerate().map(|(s, sl)| (sl.queue.len(), s)).collect();
     order.sort_by_key(|&(depth, _)| depth);
@@ -1449,7 +1568,21 @@ fn try_place(slots: &[ShardSlot], mut req: Request) -> Option<Request> {
 /// [`ShedReason::ShardDeath`]. Every path answers the client exactly once
 /// — re-homed requests restart decode from their original prefix, so a
 /// retried greedy chain is bit-identical to an unfaulted one.
-fn redistribute(ctx: &ShardCtx, m: &Arc<Metrics>, orphans: Vec<Request>) {
+fn redistribute(ctx: &ShardCtx, m: &Arc<Metrics>, orphans: Vec<QueuedRequest>) {
+    redistribute_with(ctx, m, orphans, ShedReason::RetryExhausted)
+}
+
+/// [`redistribute`] with an explicit reason for budget-exhausted sheds.
+/// Fault paths keep [`ShedReason::RetryExhausted`]; the KV pool-pressure
+/// path passes [`ShedReason::Brownout`] so a request that keeps losing
+/// the block race reads as backpressure ("retry later"), not as a fault
+/// that consumed the recovery budget.
+fn redistribute_with(
+    ctx: &ShardCtx,
+    m: &Arc<Metrics>,
+    orphans: Vec<QueuedRequest>,
+    exhaust_reason: ShedReason,
+) {
     for mut req in orphans {
         if matches!(req.deadline, Some(dl) if Instant::now() > dl) {
             shed_one(ctx.shard_id, req, m, &ctx.global, ShedReason::Deadline);
@@ -1457,7 +1590,7 @@ fn redistribute(ctx: &ShardCtx, m: &Arc<Metrics>, orphans: Vec<Request>) {
         }
         req.attempts += 1;
         if req.attempts > ctx.sup.max_request_attempts || !take_retry_token(&ctx.retry_tokens) {
-            shed_one(ctx.shard_id, req, m, &ctx.global, ShedReason::RetryExhausted);
+            shed_one(ctx.shard_id, req, m, &ctx.global, exhaust_reason);
             continue;
         }
         for g in [m, &ctx.global] {
@@ -1480,7 +1613,13 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
 
 /// Terminal shed: count it (with its reason) on both the shard and global
 /// metrics, and answer the client's channel exactly once.
-fn shed_one(shard_id: usize, req: Request, m: &Metrics, global: &Metrics, reason: ShedReason) {
+fn shed_one(
+    shard_id: usize,
+    req: QueuedRequest,
+    m: &Metrics,
+    global: &Metrics,
+    reason: ShedReason,
+) {
     for g in [m, global] {
         g.shed.fetch_add(1, Ordering::Relaxed);
         g.shed_reason_counter(reason).fetch_add(1, Ordering::Relaxed);
@@ -1522,15 +1661,8 @@ mod tests {
         }
     }
 
-    fn start(batch: usize) -> Coordinator {
-        Coordinator::start(
-            BatcherConfig { batch_size: batch, timeout: Duration::from_millis(2) },
-            move || Ok(Box::new(Echo { cap: batch }) as Box<dyn BatchExecutor>),
-        )
-    }
-
     fn start_shards(n: usize, batch: usize) -> Coordinator {
-        Coordinator::start_sharded(
+        Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: batch, timeout: Duration::from_millis(2) },
                 shards: n,
@@ -1538,6 +1670,15 @@ mod tests {
             },
             move |_shard| Ok(Box::new(Echo { cap: batch }) as Box<dyn BatchExecutor>),
         )
+    }
+
+    fn start(batch: usize) -> Coordinator {
+        start_shards(1, batch)
+    }
+
+    /// Next-token submit shorthand (the pre-PR-8 `submit(tokens)` shape).
+    fn submit1(c: &Coordinator, tokens: Vec<i32>) -> Receiver<Response> {
+        c.submit_or_shed(Request::new(tokens))
     }
 
     #[test]
@@ -1550,7 +1691,7 @@ mod tests {
             let tokens: Vec<i32> =
                 (0..1 + rng.gen_usize(10)).map(|_| rng.gen_usize(50) as i32).collect();
             want.push((i as u64, tokens.iter().sum::<i32>() % 97));
-            rxs.push(c.submit(tokens));
+            rxs.push(submit1(&c, tokens));
         }
         for (rx, (id, tok)) in rxs.into_iter().zip(want) {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -1569,7 +1710,7 @@ mod tests {
     #[test]
     fn batching_actually_batches() {
         let c = start(8);
-        let rxs: Vec<_> = (0..64).map(|i| c.submit(vec![i])).collect();
+        let rxs: Vec<_> = (0..64).map(|i| submit1(&c, vec![i])).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -1582,7 +1723,7 @@ mod tests {
     #[test]
     fn dvfs_transitions_accounted_per_batch() {
         let c = start(4);
-        let rxs: Vec<_> = (0..8).map(|i| c.submit(vec![i])).collect();
+        let rxs: Vec<_> = (0..8).map(|i| submit1(&c, vec![i])).collect();
         for rx in rxs {
             rx.recv().unwrap();
         }
@@ -1597,7 +1738,7 @@ mod tests {
         // per decode STEP (3 steps → 3× the per-pass transitions), not
         // one per admitted batch.
         let c = start(4);
-        let rx = c.submit_spec(SubmitSpec::generate(vec![1, 2], 3));
+        let rx = c.submit_or_shed(Request::new(vec![1, 2]).max_new(3));
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 3);
         assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 6);
@@ -1607,7 +1748,7 @@ mod tests {
     #[test]
     fn shutdown_drains_cleanly() {
         let c = start(2);
-        let rx = c.submit(vec![1, 2, 3]);
+        let rx = submit1(&c, vec![1, 2, 3]);
         c.shutdown().unwrap();
         assert_eq!(rx.recv().unwrap().next_token, 6);
     }
@@ -1622,7 +1763,7 @@ mod tests {
         let mut want = Vec::new();
         for i in 0..200i32 {
             want.push((i % 50) % 97);
-            rxs.push(c.submit(vec![i % 50]));
+            rxs.push(submit1(&c, vec![i % 50]));
         }
         for (rx, want) in rxs.into_iter().zip(want) {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -1646,7 +1787,7 @@ mod tests {
         // deterministic and checkable in plain code.
         let c = start_shards(2, 4);
         let prefix = vec![3, 5];
-        let rx = c.submit_spec(SubmitSpec::generate(prefix.clone(), 4));
+        let rx = c.submit_or_shed(Request::new(prefix.clone()).max_new(4));
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         let mut seq = prefix;
         let mut want = Vec::new();
@@ -1665,7 +1806,7 @@ mod tests {
     fn generate_slides_context_at_seq_cap() {
         // seq_len = 16; a 16-token prefix forces the slide path.
         let c = start(2);
-        let rx = c.submit_spec(SubmitSpec::generate(vec![1; 16], 3));
+        let rx = c.submit_or_shed(Request::new(vec![1; 16]).max_new(3));
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.tokens.len(), 3);
         c.shutdown().unwrap();
@@ -1692,7 +1833,7 @@ mod tests {
         // the LAST 16 tokens, not the first.
         let c = start(4);
         let prefix: Vec<i32> = (0..40).collect();
-        let rx = c.submit_spec(SubmitSpec::generate(prefix.clone(), 3));
+        let rx = c.submit_or_shed(Request::new(prefix.clone()).max_new(3));
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.tokens, echo_chain(&prefix, 16, 3));
         c.shutdown().unwrap();
@@ -1703,8 +1844,8 @@ mod tests {
         // Different max_new in one batch: short requests finish early (and
         // drop out of later forward passes), long ones keep decoding.
         let c = start(4);
-        let rx1 = c.submit_spec(SubmitSpec::generate(vec![1], 1));
-        let rx2 = c.submit_spec(SubmitSpec::generate(vec![2], 5));
+        let rx1 = c.submit_or_shed(Request::new(vec![1]));
+        let rx2 = c.submit_or_shed(Request::new(vec![2]).max_new(5));
         let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r1.tokens, echo_chain(&[1], 16, 1));
@@ -1714,7 +1855,7 @@ mod tests {
 
     #[test]
     fn dead_shard_is_skipped_and_healthy_shards_serve() {
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
                 shards: 2,
@@ -1730,7 +1871,7 @@ mod tests {
         // Let shard 0 mark itself out of rotation; afterwards everything
         // must be served by shard 1 rather than shed by the dead shard.
         std::thread::sleep(Duration::from_millis(200));
-        let rxs: Vec<_> = (0..20).map(|i| c.submit(vec![i])).collect();
+        let rxs: Vec<_> = (0..20).map(|i| submit1(&c, vec![i])).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert!(!r.shed, "request {i} shed despite a healthy shard");
@@ -1743,13 +1884,8 @@ mod tests {
     fn expired_deadline_is_shed_not_run() {
         // Deadline already in the past: the shard must shed, not execute.
         let c = start(4);
-        let spec = SubmitSpec {
-            tokens: vec![1, 2, 3],
-            max_new_tokens: 1,
-            deadline: Some(Instant::now() - Duration::from_millis(1)),
-            priority: 0,
-        };
-        let r = c.submit_spec(spec).recv_timeout(Duration::from_secs(5)).unwrap();
+        let req = Request::new(vec![1, 2, 3]).deadline_at(Instant::now() - Duration::from_millis(1));
+        let r = c.submit_or_shed(req).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         assert!(r.tokens.is_empty());
         assert_eq!(r.reason, Some(ShedReason::Deadline));
@@ -1782,7 +1918,7 @@ mod tests {
     fn full_queues_reject_with_backpressure() {
         let (gate_tx, gate_rx) = channel::<()>();
         let gate_rx = Mutex::new(Some(gate_rx));
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
                 shards: 1,
@@ -1799,7 +1935,7 @@ mod tests {
         // cap is reached submissions must come back shed immediately.
         let mut rxs = Vec::new();
         for i in 0..8i32 {
-            rxs.push(c.submit(vec![i]));
+            rxs.push(submit1(&c, vec![i]));
             // Give the shard a beat to pull the first request into a batch.
             if i == 0 {
                 std::thread::sleep(Duration::from_millis(20));
@@ -1831,9 +1967,9 @@ mod tests {
         let c = start(2);
         // Client gives up immediately: drop the receiver before the shard
         // responds.
-        drop(c.submit(vec![1, 2]));
+        drop(submit1(&c, vec![1, 2]));
         // The shard must still be alive and serving.
-        let rx = c.submit(vec![4, 4]);
+        let rx = submit1(&c, vec![4, 4]);
         assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().next_token, 8);
         c.shutdown().unwrap();
     }
@@ -1863,17 +1999,20 @@ mod tests {
     #[test]
     fn executor_error_retries_request_and_shard_survives() {
         let c = Coordinator::start(
-            BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
-            || Ok(Box::new(Faulty { fail_first: 1 }) as Box<dyn BatchExecutor>),
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 1, timeout: Duration::from_millis(1) },
+                ..CoordinatorConfig::default()
+            },
+            |_s| Ok(Box::new(Faulty { fail_first: 1 }) as Box<dyn BatchExecutor>),
         );
         // A non-panic step error is retryable: the request re-homes (here
         // back onto the same, still-healthy shard) and then serves.
-        let r1 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r1 = submit1(&c, vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!r1.shed, "retryable executor error must not shed");
         assert_eq!(r1.next_token, 3);
         assert_eq!(c.metrics.exec_errors.load(Ordering::Relaxed), 1);
         assert_eq!(c.metrics.retries.load(Ordering::Relaxed), 1);
-        let r2 = c.submit(vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = submit1(&c, vec![1, 2, 3]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!r2.shed);
         assert_eq!(r2.next_token, 3);
         c.shutdown().unwrap();
@@ -1910,17 +2049,20 @@ mod tests {
         let (size_tx, size_rx) = channel::<usize>();
         let slots = Mutex::new(Some((rel_rx, size_tx)));
         let c = Coordinator::start(
-            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
-            move || {
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(1) },
+                ..CoordinatorConfig::default()
+            },
+            move |_s| {
                 let (release, sizes) = slots.lock().unwrap().take().expect("single shard");
                 Ok(Box::new(StepGate { release, sizes }) as Box<dyn BatchExecutor>)
             },
         );
-        let rx1 = c.submit_spec(SubmitSpec::generate(vec![3, 5], 3));
+        let rx1 = c.submit_or_shed(Request::new(vec![3, 5]).max_new(3));
         // Step 1 begins with request 1 alone.
         assert_eq!(size_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
         // Submit request 2 while step 1 is still executing.
-        let rx2 = c.submit_spec(SubmitSpec::generate(vec![7], 1));
+        let rx2 = c.submit_or_shed(Request::new(vec![7]));
         rel_tx.send(()).unwrap(); // finish step 1
         // Step 2 must include BOTH requests: the join happened mid-flight.
         assert_eq!(size_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 2);
@@ -1964,10 +2106,13 @@ mod tests {
         assert!(e.generate(&[vec![1]], &[2]).is_err());
         // Through the coordinator: the request is shed, the shard lives.
         let c = Coordinator::start(
-            BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
-            || Ok(Box::new(Stuck) as Box<dyn BatchExecutor>),
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
+                ..CoordinatorConfig::default()
+            },
+            |_s| Ok(Box::new(Stuck) as Box<dyn BatchExecutor>),
         );
-        let r = c.submit(vec![1, 2]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = submit1(&c, vec![1, 2]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         // Each zero-progress fault is retried until the per-request budget
         // drains, then the request sheds as retry-exhausted.
@@ -1981,10 +2126,10 @@ mod tests {
     fn submit_after_total_executor_loss_sheds_instead_of_panicking() {
         // Executor construction fails: the shard drains with shed
         // responses and later submissions still answer.
-        let c = Coordinator::start(BatcherConfig::default(), || {
+        let c = Coordinator::start(CoordinatorConfig::default(), |_s| {
             anyhow::bail!("no executor today")
         });
-        let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = submit1(&c, vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         c.shutdown().unwrap();
     }
@@ -2021,17 +2166,20 @@ mod tests {
         // hangs, and shutdown returns Ok (the panic never crossed the
         // unwind fence to the thread boundary).
         let c = Coordinator::start(
-            BatcherConfig { batch_size: 4, timeout: Duration::from_millis(20) },
-            || Ok(Box::new(Bomb { steps: 0, fail_on: 1 }) as Box<dyn BatchExecutor>),
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(20) },
+                ..CoordinatorConfig::default()
+            },
+            |_s| Ok(Box::new(Bomb { steps: 0, fail_on: 1 }) as Box<dyn BatchExecutor>),
         );
-        let rxs: Vec<_> = (0..6).map(|i| c.submit(vec![i])).collect();
+        let rxs: Vec<_> = (0..6).map(|i| submit1(&c, vec![i])).collect();
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert!(r.shed, "request served by a panicked executor");
         }
         assert!(c.metrics.exec_errors.load(Ordering::Relaxed) >= 1);
         // Later submissions find no live shard and shed immediately.
-        let r = c.submit(vec![9]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = submit1(&c, vec![9]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         c.shutdown().unwrap();
     }
@@ -2044,7 +2192,7 @@ mod tests {
         // so each request either sheds (hit the dying shard) or serves
         // (hit the healthy one) — but never hangs, and the healthy shard
         // answers everything routed to it after the death lands.
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
                 shards: 2,
@@ -2059,13 +2207,13 @@ mod tests {
             },
         );
         // Trip the bomb, then give the death time to land.
-        let first: Vec<_> = (0..4).map(|i| c.submit(vec![i])).collect();
+        let first: Vec<_> = (0..4).map(|i| submit1(&c, vec![i])).collect();
         for rx in first {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
         std::thread::sleep(Duration::from_millis(100));
         for i in 0..20i32 {
-            let r = c.submit(vec![i]).recv_timeout(Duration::from_secs(5)).unwrap();
+            let r = submit1(&c, vec![i]).recv_timeout(Duration::from_secs(5)).unwrap();
             assert!(!r.shed, "request {i} shed despite a healthy shard");
             assert_eq!(r.shard, 1);
             assert_eq!(r.next_token, i % 97);
@@ -2075,10 +2223,10 @@ mod tests {
 
     #[test]
     fn panicking_construction_sheds_queued_requests() {
-        let c = Coordinator::start(BatcherConfig::default(), || {
+        let c = Coordinator::start(CoordinatorConfig::default(), |_s| {
             panic!("injected constructor panic")
         });
-        let r = c.submit(vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = submit1(&c, vec![1]).recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.shed);
         c.shutdown().unwrap();
     }
@@ -2087,11 +2235,11 @@ mod tests {
 
     #[test]
     fn shard_respawns_after_panic_and_retried_decode_is_bit_identical() {
-        // Respawnable factory (start_sharded): the supervisor must bring
-        // the shard back, and the orphaned request must re-run from its
-        // original prefix — bit-identical to an unfaulted run.
+        // Respawnable factory: the supervisor must bring the shard back,
+        // and the orphaned request must re-run from its original prefix —
+        // bit-identical to an unfaulted run.
         let first = Arc::new(AtomicBool::new(true));
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
                 shards: 1,
@@ -2106,7 +2254,7 @@ mod tests {
             },
         );
         let r = c
-            .submit_spec(SubmitSpec::generate(vec![3, 5], 3))
+            .submit_or_shed(Request::new(vec![3, 5]).max_new(3))
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
         assert!(!r.shed, "orphan of a respawned shard must serve, not shed");
@@ -2150,7 +2298,7 @@ mod tests {
 
     #[test]
     fn brownout_sheds_negative_priority_and_clamps_decode_budget() {
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
                 shards: 2,
@@ -2178,14 +2326,14 @@ mod tests {
         }
         // Level ≥ 2: negative-priority work sheds at admission...
         let r = c
-            .submit_spec(SubmitSpec::generate(vec![1], 4).with_priority(-1))
+            .submit_or_shed(Request::new(vec![1]).max_new(4).priority(-1))
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
         assert!(r.shed);
         assert_eq!(r.reason, Some(ShedReason::Brownout));
         // ...and level 3 clamps an 8-token decode budget to one token.
         let r = c
-            .submit_spec(SubmitSpec::generate(vec![2], 8))
+            .submit_or_shed(Request::new(vec![2]).max_new(8))
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
         assert!(!r.shed);
@@ -2201,7 +2349,7 @@ mod tests {
         // requests == responses + shed + rejected at quiesce, and the
         // per-reason counters sum to shed + rejected — even with a shard
         // dying and respawning under load.
-        let c = Coordinator::start_sharded(
+        let c = Coordinator::start(
             CoordinatorConfig {
                 batcher: BatcherConfig { batch_size: 2, timeout: Duration::from_millis(1) },
                 shards: 2,
@@ -2215,7 +2363,7 @@ mod tests {
                 })
             },
         );
-        let rxs: Vec<_> = (0..50).map(|i| c.submit(vec![i])).collect();
+        let rxs: Vec<_> = (0..50).map(|i| submit1(&c, vec![i])).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }

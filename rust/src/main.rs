@@ -80,6 +80,12 @@ SERVING OPTIONS (serve / loadgen)
   --tile T            quantization tile size under --quant (default 128)
   --no-kv-cache       decode by full-prefix recompute instead of the
                       per-request KV cache (debugging oracle)
+  --kv-block-size B   rows per paged KV block (default 16); per-request
+                      caches are carved from a per-shard block pool with
+                      shared-prefix reuse across requests
+  --kv-pool-blocks N  per-shard KV pool bound in blocks; 0 = unbounded
+                      (default). A dry pool sheds requests as brown-out
+                      backpressure instead of aborting
   --chaos-seed S      loadgen: install a seeded fault-injection schedule
                       (deterministic chaos; see DESIGN.md §Fault model)
   --kill-prob P       loadgen: per-step shard-kill probability under
@@ -263,10 +269,31 @@ fn parse_quant_variant(s: &str) -> Result<Option<halo::quant::Variant>> {
         })
 }
 
+/// Per-shard paged KV block pools from the serving CLI flags. Built
+/// *outside* the executor factories so a pool (and its shared-prefix
+/// registry) survives supervisor respawns of its shard.
+fn make_kv_pools(
+    args: &Args,
+    n_shards: usize,
+    n_layers: usize,
+    d_model: usize,
+) -> Result<Vec<std::sync::Arc<halo::runtime::BlockPool>>> {
+    use halo::runtime::{BlockPool, DEFAULT_BLOCK_ROWS};
+    let block_rows = args.usize_or("kv-block-size", DEFAULT_BLOCK_ROWS)?.max(1);
+    let max_blocks = args.usize_or("kv-pool-blocks", 0)?;
+    Ok((0..n_shards)
+        .map(|_| {
+            std::sync::Arc::new(
+                BlockPool::new(n_layers, d_model, block_rows, max_blocks).with_sharing(1024),
+            )
+        })
+        .collect())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use halo::coordinator::server::GraphExecutor;
     use halo::coordinator::{
-        BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, SubmitSpec,
+        BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, Request,
     };
     use halo::dvfs::{Ladder, Schedule};
     use halo::model::calibrate_fisher;
@@ -325,11 +352,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("[serve] cost model: {}", cost.summary());
         let pm = Arc::new(packed);
         let ss = Arc::new(pm.schedule.shard(n_shards));
-        Coordinator::start_sharded(cfg, move |shard| {
-            Ok(Box::new(
+        let pools = make_kv_pools(args, n_shards, pm.spec.n_layers, pm.spec.d_model)?;
+        Coordinator::start(cfg, move |shard| {
+            let mut exec =
                 QuantExecutor::with_schedule(pm.clone(), eval_batch, ss[shard].clone())
-                    .with_kv_cache(use_kv),
-            ) as Box<dyn halo::coordinator::BatchExecutor>)
+                    .with_kv_cache(use_kv);
+            if use_kv {
+                if let Some(pool) = pools.get(shard) {
+                    exec = exec.with_kv_pool(pool.clone());
+                }
+            }
+            Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
         })
     } else {
         // Dense path: quantize, dequantize back to f32, substitute into
@@ -356,16 +389,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             schedule.groups.len(),
             schedule.transitions()
         );
+        // Pool dims need the model spec; without one the executor serves
+        // on the recompute path anyway, so skip pools rather than fail.
+        let pools = match halo::runtime::sim::ModelSpec::load(&model.dir) {
+            Ok(s) => make_kv_pools(args, n_shards, s.n_layers, s.d_model)?,
+            Err(_) => Vec::new(),
+        };
         let model = Arc::new(model);
         let replace = Arc::new(replace);
         let ss = Arc::new(schedule.shard(n_shards));
-        Coordinator::start_sharded(cfg, move |shard| {
+        Coordinator::start(cfg, move |shard| {
             // Each shard owns its runtime + resident parameter buffers
             // (PJRT handles never cross threads) and applies its own
             // schedule slice.
             let rt = Runtime::cpu()?;
-            let exec = GraphExecutor::new(rt, &model, &replace, ss[shard].clone())?
+            let mut exec = GraphExecutor::new(rt, &model, &replace, ss[shard].clone())?
                 .with_kv_cache(use_kv);
+            if use_kv {
+                if let Some(pool) = pools.get(shard) {
+                    exec = exec.with_kv_pool(pool.clone());
+                }
+            }
             Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
         })
     };
@@ -378,7 +422,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let start = (i * 37) % (stream.len() - 64);
         let prefix: Vec<i32> =
             stream[start..start + 32].iter().map(|&t| t as i32).collect();
-        rxs.push(coord.submit_spec(SubmitSpec::generate(prefix, max_new)));
+        rxs.push(coord.submit_or_shed(Request::new(prefix).max_new(max_new)));
     }
     let (mut ok, mut shed) = (0, 0);
     for rx in rxs {
@@ -403,6 +447,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         merged.tokens_per_sec(wall)
     );
     println!("[serve] {}", merged.summary());
+    if merged.kv_blocks_peak > 0 {
+        println!(
+            "[serve] kv pool: in_use={} peak={} shared_hits={}/{} evictions={} refusals={}",
+            merged.kv_blocks_in_use,
+            merged.kv_blocks_peak,
+            merged.kv_shared_hits,
+            merged.kv_prefix_lookups,
+            merged.kv_evictions,
+            merged.kv_pool_refusals
+        );
+    }
     for (s, sm) in coord.shard_metrics().iter().enumerate() {
         println!("[serve]   shard {s}: {}", sm.summary());
     }
@@ -484,8 +539,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         // sample — enough to catch a broken decode loop without doubling
         // the whole run's compute client-side.
         const EXACT_CHECKS: usize = 32;
+        let use_kv = !args.has("no-kv-cache");
         let pmv = pm.clone();
         let exact_left = std::cell::Cell::new(EXACT_CHECKS);
+        // Judge responses against the decode path the shards actually run:
+        // the cached ring decode by default, the O(S²) recompute oracle
+        // under --no-kv-cache (the two are bit-identical until a context
+        // slide, which ring re-basing handles differently by design).
         let verify = move |p: &[i32], tokens: &[i32], _m: usize| {
             if tokens.len() != max_new
                 || !tokens.iter().all(|&t| (0..vocab as i32).contains(&t))
@@ -496,17 +556,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 return true;
             }
             exact_left.set(exact_left.get() - 1);
-            match pmv.decode_greedy(p, max_new) {
+            let want = if use_kv {
+                pmv.decode_greedy(p, max_new)
+            } else {
+                pmv.decode_greedy_recompute(p, max_new)
+            };
+            match want {
                 Ok(want) => want == tokens,
                 Err(_) => false,
             }
         };
-        let use_kv = !args.has("no-kv-cache");
+        let pools = make_kv_pools(args, cfg.shards, pm.spec.n_layers, pm.spec.d_model)?;
         loadgen::run_with(&cfg, vocab, &verify, move |shard| {
-            Ok(Box::new(
-                QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone())
-                    .with_kv_cache(use_kv),
-            ) as Box<dyn halo::coordinator::BatchExecutor>)
+            let mut exec = QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone())
+                .with_kv_cache(use_kv);
+            if use_kv {
+                if let Some(pool) = pools.get(shard) {
+                    exec = exec.with_kv_pool(pool.clone());
+                }
+            }
+            Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
         })?
     } else {
         loadgen::run(&cfg)?

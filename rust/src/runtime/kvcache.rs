@@ -1,144 +1,508 @@
-//! Per-request KV cache + decode state for incremental autoregressive
-//! decode (PR 5).
+//! Paged per-request KV cache over a bounded, shard-global block pool
+//! (PR 8; incremental decode itself landed in PR 5).
 //!
-//! Before this module, every decode step re-ran the *entire* prefix
-//! through the forward interpreter — O(S²) work per generated token.
-//! The KV cache stores each layer's key/value projections for every
-//! position already processed, so a step only evaluates the window
-//! suffix that is not yet cached (normally exactly one token) and
-//! attends it against the cached rows.
+//! Before this rework the cache was per-request contiguous storage with
+//! geometric growth, and a context slide threw every cached row away. At
+//! millions-of-users scale the KV cache — not the weights — is the memory
+//! bill, so storage is now *paged*, vLLM-style:
 //!
 //! ## Memory model
 //!
-//! - One [`KvCache`] per in-flight request (caches are never shared:
-//!   different requests have different prefixes, and a request's cache
-//!   dies with its [`DecodeState`] when the request retires).
-//! - Per layer, K and V are each a contiguous row-major `(positions,
-//!   d_model)` f32 block. Capacity grows geometrically: the first
-//!   append reserves [`INITIAL_CAP_ROWS`] positions, and each
-//!   exhaustion doubles, so a decode that runs to the model's context
-//!   window performs O(log S) reallocations and the differential suite
-//!   can place a prefix across a growth boundary deliberately.
-//! - Bytes per request ≈ `2 · n_layers · capacity_rows · d_model · 4`
-//!   ([`KvCache::reserved_bytes`]); capacity is retained across
-//!   [`KvCache::clear`] so a slide-induced re-prefill reuses the
-//!   allocation instead of re-growing from scratch.
-//! - Sliding the context window (drop-front at `seq_len`) shifts every
-//!   absolute position — positional embeddings make every cached row
-//!   stale — so [`DecodeState::push_token`] *clears* the cache on a
-//!   slide and the next step re-prefills the shifted window. That is
-//!   exactly the recompute the oracle path performs at the cap, which
-//!   keeps cached and uncached decode bit-identical there too.
+//! - K/V rows live in fixed-size **blocks** ([`BlockPool::block_rows`]
+//!   positions each, spanning every layer), allocated from a bounded
+//!   shard-global [`BlockPool`]. A request's [`KvCache`] is a *block
+//!   table*: an ordered list of block references plus a front-row offset.
+//! - **Pool exhaustion is backpressure, never a panic**: acquiring a
+//!   block from a full pool first evicts idle shared blocks, then fails
+//!   with a typed [`PoolExhausted`] error that the coordinator maps to
+//!   brown-out shedding (`no-panic-serving-path` covers this file).
+//!   Every block holds an RAII permit, so dropping a cache — request
+//!   retirement, supervisor re-homing, executor death — releases its
+//!   blocks exactly once, structurally.
+//! - **Shared prefixes**: when sharing is enabled
+//!   ([`BlockPool::with_sharing`]), a cache that fills a block while
+//!   still 0-anchored (never slid) freezes it into an immutable
+//!   [`Arc`]-shared block and publishes it in the pool's prefix registry,
+//!   keyed by the token prefix it covers. [`BlockPool::new_cache`] seeds
+//!   new requests with the longest registered chain matching their
+//!   window, so identical system-prompt/few-shot headers are stored once
+//!   per shard and prefilled zero times after the first request. A
+//!   writer never mutates a shared block — shared blocks are always full,
+//!   and appends target a fresh owned tail block (the copy-on-write
+//!   "fork" is the tail allocation).
+//! - **Slides re-base instead of invalidating**: at the context cap
+//!   [`DecodeState::push_token`] drops the *front cached row*
+//!   ([`KvCache::pop_front`]) and keeps every other row. Positional
+//!   embedding indices ring over the context window (see
+//!   `sim::forward_incremental`): the cache tracks
+//!   [`KvCache::positions_seen`], a monotone append counter, and new
+//!   tokens embed at `positions_seen % seq_len`. Decode past the cap is
+//!   therefore *streaming attention* — O(1) work per token, no
+//!   re-prefill — and is pinned block-size-invariant (paged at any block
+//!   size produces bit-identical chains) by `tests/decode_equiv.rs`.
+//!   Chains that never slide remain bit-identical to full-prefix
+//!   recompute, exactly as in PR 5.
 //!
-//! The cache layout is deliberately model-agnostic (rows of f32): the
-//! interpreter (`runtime::sim::forward_incremental`) owns all numerics;
-//! this module owns only storage, growth, and the per-request decode
-//! bookkeeping that the coordinator's continuous-batching loop steps.
+//! The cache layout stays model-agnostic (rows of f32): the interpreter
+//! (`runtime::sim::forward_incremental`) owns all numerics; this module
+//! owns storage, pooling, sharing, and the per-request decode
+//! bookkeeping the coordinator's continuous-batching loop steps.
+
+use std::fmt;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::quant::Matrix;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
-/// Positions reserved by a layer's first append; capacity doubles from
-/// here. Small enough that short next-token requests stay cheap, large
-/// enough that a 256-token prefill performs only a handful of growths.
-pub const INITIAL_CAP_ROWS: usize = 16;
+/// Default positions per block: small enough that short next-token
+/// requests waste little, large enough that a 256-token prefill touches
+/// the pool only a handful of times. `halo serve --kv-block-size`
+/// overrides per deployment.
+pub const DEFAULT_BLOCK_ROWS: usize = 16;
 
-/// One layer's cached key/value projections: two contiguous row-major
-/// `(rows, d_model)` f32 blocks with explicitly managed row capacity.
-#[derive(Debug, Clone)]
-pub struct LayerKv {
+/// Typed "the block pool is out of blocks" error, surfaced from
+/// [`KvCache::append`] (via block acquisition) after idle-block eviction
+/// failed to free capacity. The coordinator downcasts to this to turn
+/// cache pressure into brown-out backpressure (shed/retry with
+/// [`ShedReason::Brownout`](crate::coordinator::ShedReason::Brownout))
+/// instead of a failed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// The pool's configured block bound.
+    pub max_blocks: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "KV block pool exhausted ({} blocks allocated, none evictable)",
+            self.max_blocks
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Pool accounting shared by every permit. Kept separate from
+/// [`BlockPool`] so permits (inside blocks, inside caches) never form an
+/// `Arc` cycle with the pool's registry, which itself holds blocks.
+#[derive(Debug, Default)]
+struct PoolShared {
+    counts: Mutex<PoolCounts>,
+    /// Block bound; 0 = unbounded.
+    max_blocks: usize,
+}
+
+#[derive(Debug, Default)]
+struct PoolCounts {
+    allocated: usize,
+    peak: usize,
+}
+
+/// RAII block-capacity permit: holding one *is* owning one pool slot.
+/// Dropping it (cache retired, block evicted, executor died mid-step)
+/// releases the slot exactly once — re-homing cannot double-free.
+#[derive(Debug)]
+struct Permit {
+    shared: Arc<PoolShared>,
+}
+
+impl Permit {
+    fn try_new(shared: &Arc<PoolShared>) -> Option<Permit> {
+        let mut c = shared.counts.lock().unwrap_or_else(|e| e.into_inner());
+        if shared.max_blocks != 0 && c.allocated >= shared.max_blocks {
+            return None;
+        }
+        c.allocated += 1;
+        c.peak = c.peak.max(c.allocated);
+        drop(c);
+        Some(Permit { shared: Arc::clone(shared) })
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut c = self.shared.counts.lock().unwrap_or_else(|e| e.into_inner());
+        c.allocated = c.allocated.saturating_sub(1);
+    }
+}
+
+/// A full, immutable block published for prefix sharing. `k`/`v` hold
+/// `n_layers · block_rows · d_model` f32 each; row `(layer, slot)` lives
+/// at `(layer · block_rows + slot) · d_model`.
+#[derive(Debug)]
+struct FrozenBlock {
     k: Vec<f32>,
     v: Vec<f32>,
-    d: usize,
-    rows: usize,
-    cap_rows: usize,
+    _permit: Permit,
 }
 
-impl LayerKv {
-    fn new(d: usize) -> Self {
-        Self { k: Vec::new(), v: Vec::new(), d, rows: 0, cap_rows: 0 }
+/// A private, writable block (the tail of a cache's table, or any block
+/// of a never-frozen cache).
+#[derive(Debug)]
+struct OwnedBlock {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    permit: Permit,
+}
+
+/// One entry of a request's block table.
+#[derive(Debug)]
+enum BlockRef {
+    /// Immutable, possibly shared with other requests and the registry.
+    Shared(Arc<FrozenBlock>),
+    /// Private and writable.
+    Owned(OwnedBlock),
+}
+
+impl BlockRef {
+    fn k(&self) -> &[f32] {
+        match self {
+            BlockRef::Shared(b) => &b.k,
+            BlockRef::Owned(b) => &b.k,
+        }
     }
 
-    /// Positions cached in this layer.
-    pub fn rows(&self) -> usize {
-        self.rows
+    fn v(&self) -> &[f32] {
+        match self {
+            BlockRef::Shared(b) => &b.v,
+            BlockRef::Owned(b) => &b.v,
+        }
+    }
+}
+
+/// One published prefix block: covers `tokens` (0-anchored, a multiple of
+/// `block_rows` long); `tokens` disambiguates hash collisions.
+#[derive(Debug)]
+struct RegEntry {
+    hash: u64,
+    tokens: Vec<i32>,
+    block: Arc<FrozenBlock>,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    /// Insertion order; eviction scans newest-first among idle entries so
+    /// shallow chain prefixes (the most-shared blocks) outlive deep ones.
+    entries: Vec<RegEntry>,
+}
+
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    tokens.hash(&mut h);
+    h.finish()
+}
+
+/// Point-in-time [`BlockPool`] statistics, exported per shard through
+/// [`BatchExecutor::kv_pool_stats`](crate::coordinator::BatchExecutor::kv_pool_stats)
+/// into serving [`Metrics`](crate::coordinator::Metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Blocks currently allocated (owned + frozen, including
+    /// registry-held).
+    pub blocks_in_use: usize,
+    /// High-water mark of `blocks_in_use`.
+    pub blocks_peak: usize,
+    /// Configured bound (0 = unbounded).
+    pub max_blocks: usize,
+    /// Positions per block.
+    pub block_rows: usize,
+    /// Blocks seeded into new caches from the prefix registry.
+    pub shared_hits: u64,
+    /// [`BlockPool::new_cache`] calls that consulted the registry.
+    pub prefix_lookups: u64,
+    /// Idle registry blocks dropped to make room under pressure.
+    pub evictions: u64,
+    /// Block acquisitions refused after eviction found nothing idle
+    /// (each surfaces as a [`PoolExhausted`] error upstream).
+    pub refusals: u64,
+    /// Prefix chains currently published in the registry.
+    pub registry_entries: usize,
+}
+
+/// Bounded, shard-global pool of fixed-size K/V blocks plus the
+/// shared-prefix registry. One pool per shard (created outside the
+/// executor factory so the prefix cache survives supervisor respawns);
+/// every request cache on the shard allocates from it. See the module
+/// docs for the memory model.
+#[derive(Debug)]
+pub struct BlockPool {
+    n_layers: usize,
+    d: usize,
+    block_rows: usize,
+    shared: Arc<PoolShared>,
+    registry: Mutex<Registry>,
+    /// Max published prefix entries; 0 = sharing disabled.
+    registry_cap: usize,
+    evictions: AtomicU64,
+    shared_hits: AtomicU64,
+    prefix_lookups: AtomicU64,
+    refusals: AtomicU64,
+}
+
+impl BlockPool {
+    /// A pool for a model with `n_layers` layers of width `d_model`,
+    /// `block_rows` positions per block, bounded at `max_blocks` blocks
+    /// (0 = unbounded). Sharing starts disabled; see
+    /// [`BlockPool::with_sharing`].
+    pub fn new(n_layers: usize, d_model: usize, block_rows: usize, max_blocks: usize) -> Self {
+        Self {
+            n_layers,
+            d: d_model,
+            block_rows: block_rows.max(1),
+            shared: Arc::new(PoolShared { counts: Mutex::default(), max_blocks }),
+            registry: Mutex::default(),
+            registry_cap: 0,
+            evictions: AtomicU64::new(0),
+            shared_hits: AtomicU64::new(0),
+            prefix_lookups: AtomicU64::new(0),
+            refusals: AtomicU64::new(0),
+        }
     }
 
-    /// Positions the current allocation can hold before the next growth.
-    pub fn capacity_rows(&self) -> usize {
-        self.cap_rows
+    /// Enable shared-prefix reuse with at most `registry_cap` published
+    /// prefix blocks (idle entries beyond the cap are evicted
+    /// newest-first; entries pinned by live caches never are).
+    pub fn with_sharing(mut self, registry_cap: usize) -> Self {
+        self.registry_cap = registry_cap;
+        self
     }
 
-    /// Cached key row for position `r`.
-    pub fn k_row(&self, r: usize) -> &[f32] {
-        &self.k[r * self.d..(r + 1) * self.d]
+    /// Positions per block.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
     }
 
-    /// Cached value row for position `r`.
-    pub fn v_row(&self, r: usize) -> &[f32] {
-        &self.v[r * self.d..(r + 1) * self.d]
+    /// Configured block bound (0 = unbounded).
+    pub fn max_blocks(&self) -> usize {
+        self.shared.max_blocks
     }
 
-    /// Geometric growth: double from [`INITIAL_CAP_ROWS`] until
-    /// `want_rows` fits. Never shrinks.
-    fn ensure(&mut self, want_rows: usize) {
-        if want_rows <= self.cap_rows {
+    /// Point-in-time statistics (occupancy, sharing, eviction counters).
+    pub fn stats(&self) -> PoolStats {
+        let (blocks_in_use, blocks_peak) = {
+            let c = self.shared.counts.lock().unwrap_or_else(|e| e.into_inner());
+            (c.allocated, c.peak)
+        };
+        let registry_entries =
+            self.registry.lock().unwrap_or_else(|e| e.into_inner()).entries.len();
+        PoolStats {
+            blocks_in_use,
+            blocks_peak,
+            max_blocks: self.shared.max_blocks,
+            block_rows: self.block_rows,
+            shared_hits: self.shared_hits.load(Ordering::Relaxed),
+            prefix_lookups: self.prefix_lookups.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            refusals: self.refusals.load(Ordering::Relaxed),
+            registry_entries,
+        }
+    }
+
+    /// A cache for one request whose 0-anchored context window starts
+    /// with `window`, seeded with the longest registered shared-prefix
+    /// chain strictly shorter than the window (at least the final window
+    /// position is always left uncached — its logits must be computed to
+    /// decode the next token).
+    pub fn new_cache(self: &Arc<Self>, window: &[i32]) -> KvCache {
+        let chain = self.match_prefix(window);
+        let len = chain.len() * self.block_rows;
+        KvCache {
+            pool: Arc::clone(self),
+            blocks: chain.into_iter().map(BlockRef::Shared).collect(),
+            layer_rows: vec![0; self.n_layers],
+            len,
+            start: 0,
+            positions_seen: len,
+            token_history: if self.registry_cap > 0 { window[..len].to_vec() } else { Vec::new() },
+            share_eligible: self.registry_cap > 0,
+            shared_rows: len,
+        }
+    }
+
+    /// Longest registered chain of full blocks covering a proper prefix
+    /// of `window` (token-verified, not just hash-matched).
+    fn match_prefix(&self, window: &[i32]) -> Vec<Arc<FrozenBlock>> {
+        if self.registry_cap == 0 || window.len() <= self.block_rows {
+            return Vec::new();
+        }
+        self.prefix_lookups.fetch_add(1, Ordering::Relaxed);
+        let mut chain = Vec::new();
+        let reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+        let mut k = self.block_rows;
+        // Strictly `<`: never seed the whole window (see `new_cache`).
+        while k < window.len() {
+            let want = &window[..k];
+            let h = hash_tokens(want);
+            match reg.entries.iter().rev().find(|e| e.hash == h && e.tokens == want) {
+                Some(e) => chain.push(Arc::clone(&e.block)),
+                None => break,
+            }
+            k += self.block_rows;
+        }
+        drop(reg);
+        if !chain.is_empty() {
+            self.shared_hits.fetch_add(chain.len() as u64, Ordering::Relaxed);
+        }
+        chain
+    }
+
+    /// Acquire one zeroed writable block, evicting idle registry blocks
+    /// under pressure. Errors with [`PoolExhausted`] when the pool is at
+    /// its bound and nothing is evictable. The `kvcache.grow` failpoint
+    /// arms here — exactly the allocation edge it modeled pre-paging.
+    fn acquire_block(&self) -> Result<OwnedBlock> {
+        crate::util::failpoint::check(crate::util::failpoint::sites::KVCACHE_GROW)?;
+        // Bounded retry: every iteration either acquires or evicts at
+        // least one registry entry, and the registry is finite.
+        loop {
+            if let Some(permit) = Permit::try_new(&self.shared) {
+                let n = self.n_layers * self.block_rows * self.d;
+                return Ok(OwnedBlock { k: vec![0.0; n], v: vec![0.0; n], permit });
+            }
+            if self.evict_one_idle() == 0 {
+                self.refusals.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::Error::new(PoolExhausted {
+                    max_blocks: self.shared.max_blocks,
+                }));
+            }
+        }
+    }
+
+    /// Drop the newest idle registry entry (strong count 1 ⇒ only the
+    /// registry holds it; a live cache sharing a block also pins every
+    /// shallower block of its chain, so newest-first never strands a
+    /// reachable chain prefix). The freed `Arc` is dropped *outside* the
+    /// registry lock — its permit re-enters the pool counts mutex.
+    fn evict_one_idle(&self) -> usize {
+        let evicted = {
+            let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+            match reg.entries.iter().rposition(|e| Arc::strong_count(&e.block) == 1) {
+                Some(i) => Some(reg.entries.remove(i)),
+                None => None,
+            }
+        };
+        match evicted {
+            Some(entry) => {
+                drop(entry);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                1
+            }
+            None => 0,
+        }
+    }
+
+    /// Publish a frozen block covering the 0-anchored `tokens` prefix.
+    /// Over-cap idle entries are evicted newest-first; entries pinned by
+    /// live caches may keep the registry transiently over cap (they are
+    /// already bounded by the pool's block bound).
+    fn register(&self, tokens: &[i32], block: &Arc<FrozenBlock>) {
+        if self.registry_cap == 0 {
             return;
         }
-        let mut cap = self.cap_rows.max(INITIAL_CAP_ROWS);
-        while cap < want_rows {
-            cap *= 2;
+        let h = hash_tokens(tokens);
+        let dropped = {
+            let mut reg = self.registry.lock().unwrap_or_else(|e| e.into_inner());
+            if reg.entries.iter().any(|e| e.hash == h && e.tokens == tokens) {
+                return;
+            }
+            reg.entries.push(RegEntry {
+                hash: h,
+                tokens: tokens.to_vec(),
+                block: Arc::clone(block),
+            });
+            let mut dropped = Vec::new();
+            while reg.entries.len() > self.registry_cap {
+                match reg.entries.iter().rposition(|e| Arc::strong_count(&e.block) == 1) {
+                    Some(i) => dropped.push(reg.entries.remove(i)),
+                    None => break,
+                }
+            }
+            dropped
+        };
+        if !dropped.is_empty() {
+            self.evictions.fetch_add(dropped.len() as u64, Ordering::Relaxed);
+            drop(dropped);
         }
-        self.k.reserve_exact(cap * self.d - self.k.len());
-        self.v.reserve_exact(cap * self.d - self.v.len());
-        self.cap_rows = cap;
-    }
-
-    fn append(&mut self, k_rows: &Matrix, v_rows: &Matrix) {
-        self.ensure(self.rows + k_rows.rows);
-        self.k.extend_from_slice(&k_rows.data);
-        self.v.extend_from_slice(&v_rows.data);
-        self.rows += k_rows.rows;
-    }
-
-    /// Drop every cached position but keep the allocation (slides
-    /// re-prefill into the same capacity).
-    fn clear(&mut self) {
-        self.k.clear();
-        self.v.clear();
-        self.rows = 0;
     }
 }
 
-/// Per-request KV cache: one [`LayerKv`] per transformer layer plus a
-/// committed-position counter. See the module docs for the memory model.
-#[derive(Debug, Clone)]
+/// Read view of one layer's cached K/V rows through a cache's block
+/// table — the indexing adapter `sim::attention_cached` reads rows
+/// through (replacing PR 5's contiguous `LayerKv`). Row `r` is the
+/// layer's `r`-th *live* row (committed + staged), after any slide
+/// re-basing.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerView<'a> {
+    cache: &'a KvCache,
+    layer: usize,
+}
+
+impl LayerView<'_> {
+    /// Live rows (committed + staged) for this layer.
+    pub fn rows(&self) -> usize {
+        self.cache.len + self.cache.layer_rows[self.layer]
+    }
+
+    /// Cached key row `r`.
+    pub fn k_row(&self, r: usize) -> &[f32] {
+        let (bi, off) = self.cache.locate(self.layer, r);
+        &self.cache.blocks[bi].k()[off..off + self.cache.pool.d]
+    }
+
+    /// Cached value row `r`.
+    pub fn v_row(&self, r: usize) -> &[f32] {
+        let (bi, off) = self.cache.locate(self.layer, r);
+        &self.cache.blocks[bi].v()[off..off + self.cache.pool.d]
+    }
+}
+
+/// Per-request paged KV cache: a block table over a [`BlockPool`] plus
+/// decode bookkeeping. See the module docs for the memory model.
+#[derive(Debug)]
 pub struct KvCache {
-    layers: Vec<LayerKv>,
-    d: usize,
+    pool: Arc<BlockPool>,
+    blocks: Vec<BlockRef>,
+    /// Staged (appended, uncommitted) row count per layer.
+    layer_rows: Vec<usize>,
+    /// Committed positions (logical rows) across every layer.
     len: usize,
+    /// Front-row offset inside `blocks[0]` after slides.
+    start: usize,
+    /// Monotone count of positions ever committed — the ring-position
+    /// basis for positional embeddings (never decremented by slides).
+    positions_seen: usize,
+    /// Tokens behind rows `0..len`, kept only while `share_eligible`.
+    token_history: Vec<i32>,
+    /// Still 0-anchored and never slid, with sharing on: full blocks
+    /// freeze + publish at commit.
+    share_eligible: bool,
+    /// Rows seeded from the shared-prefix registry at construction.
+    shared_rows: usize,
 }
 
 impl KvCache {
-    /// Empty cache for a model with `n_layers` layers of width `d_model`.
-    /// No memory is reserved until the first append.
+    /// Empty standalone cache (private unbounded pool, sharing off) —
+    /// the PR 5-compatible constructor for single-request decode paths
+    /// and tests. Serving executors use [`BlockPool::new_cache`] instead
+    /// so requests share one bounded pool per shard.
     pub fn new(n_layers: usize, d_model: usize) -> Self {
-        Self {
-            layers: (0..n_layers).map(|_| LayerKv::new(d_model)).collect(),
-            d: d_model,
-            len: 0,
-        }
+        Arc::new(BlockPool::new(n_layers, d_model, DEFAULT_BLOCK_ROWS, 0)).new_cache(&[])
     }
 
     /// Number of transformer layers this cache covers.
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        self.layer_rows.len()
     }
 
     /// Model width (columns of every cached row).
     pub fn d_model(&self) -> usize {
-        self.d
+        self.pool.d
     }
 
     /// Positions fully cached across every layer (committed by
@@ -152,46 +516,79 @@ impl KvCache {
         self.len == 0
     }
 
-    /// True when every layer holds exactly the committed position count.
-    /// An errored-out incremental step can leave a partial append; such a
-    /// cache must be [`KvCache::clear`]ed (re-prefilled), never resumed.
+    /// True when no layer holds staged (uncommitted) rows. An errored-out
+    /// incremental step can leave a partial append; such a cache must be
+    /// [`KvCache::clear`]ed (re-prefilled), never resumed.
     pub fn is_consistent(&self) -> bool {
-        self.layers.iter().all(|l| l.rows() == self.len)
+        self.layer_rows.iter().all(|&r| r == 0)
     }
 
-    /// Row capacity of the first layer (all layers grow in lockstep, so
-    /// this is the per-layer capacity the growth tests observe).
+    /// Positions the current block table can hold without acquiring
+    /// another block (includes rows consumed by the slide offset).
     pub fn capacity_rows(&self) -> usize {
-        self.layers.first().map_or(0, |l| l.capacity_rows())
+        self.blocks.len() * self.pool.block_rows
     }
 
-    /// Heap bytes currently reserved across all layers (K + V, f32).
+    /// Blocks currently referenced by this cache's table.
+    pub fn blocks_in_table(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Heap bytes referenced by this cache's block table (K + V, f32,
+    /// all layers). Shared blocks count fully here even though the pool
+    /// stores them once across requests.
     pub fn reserved_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| 2 * l.capacity_rows() * self.d * std::mem::size_of::<f32>())
-            .sum()
+        self.blocks.len()
+            * 2
+            * self.pool.n_layers
+            * self.pool.block_rows
+            * self.pool.d
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Total positions ever committed (monotone across slides) — the
+    /// absolute position of the next appended token, which the
+    /// interpreter rings over the model's context window for positional
+    /// embedding. Equals [`KvCache::len`] until the first slide.
+    pub fn positions_seen(&self) -> usize {
+        self.positions_seen
+    }
+
+    /// Rows this cache was seeded with from the shared-prefix registry.
+    pub fn shared_rows(&self) -> usize {
+        self.shared_rows
     }
 
     /// Read access to one layer's cached rows.
-    pub fn layer(&self, l: usize) -> &LayerKv {
-        &self.layers[l]
+    pub fn layer(&self, l: usize) -> LayerView<'_> {
+        LayerView { cache: self, layer: l }
     }
 
-    /// Append freshly projected K/V rows to `layer`. The interpreter
-    /// calls this once per layer per step, then [`KvCache::commit`]s.
+    /// Block index + element offset of `(layer, row)` for width-`d`
+    /// slicing.
+    fn locate(&self, layer: usize, row: usize) -> (usize, usize) {
+        let bs = self.pool.block_rows;
+        let phys = self.start + row;
+        (phys / bs, (layer * bs + phys % bs) * self.pool.d)
+    }
+
+    /// Append freshly projected K/V rows to `layer`, acquiring pool
+    /// blocks as the table grows. The interpreter calls this once per
+    /// layer per step, then [`KvCache::commit`]s. A [`PoolExhausted`]
+    /// error leaves previously staged rows in place; the caller clears
+    /// and retries/sheds (see `is_consistent`).
     pub fn append(&mut self, layer: usize, k_rows: &Matrix, v_rows: &Matrix) -> Result<()> {
         anyhow::ensure!(
-            layer < self.layers.len(),
+            layer < self.layer_rows.len(),
             "KV append to layer {layer} of a {}-layer cache",
-            self.layers.len()
+            self.layer_rows.len()
         );
         anyhow::ensure!(
-            k_rows.cols == self.d && v_rows.cols == self.d,
+            k_rows.cols == self.pool.d && v_rows.cols == self.pool.d,
             "KV rows of width {}/{} appended to a d_model={} cache",
             k_rows.cols,
             v_rows.cols,
-            self.d
+            self.pool.d
         );
         anyhow::ensure!(
             k_rows.rows == v_rows.rows,
@@ -199,38 +596,109 @@ impl KvCache {
             k_rows.rows,
             v_rows.rows
         );
-        // `kvcache.grow` failpoint: models an allocation failure, so it
-        // only arms when this append would actually grow the layer. An
-        // injected error propagates as a step error (partial append ⇒ the
-        // caller must clear + re-prefill, per `is_consistent`).
-        if self.layers[layer].rows() + k_rows.rows > self.layers[layer].capacity_rows() {
-            crate::util::failpoint::check(crate::util::failpoint::sites::KVCACHE_GROW)?;
+        let (bs, d) = (self.pool.block_rows, self.pool.d);
+        for j in 0..k_rows.rows {
+            let phys = self.start + self.len + self.layer_rows[layer] + j;
+            let bi = phys / bs;
+            while bi >= self.blocks.len() {
+                let block = self.pool.acquire_block()?;
+                self.blocks.push(BlockRef::Owned(block));
+            }
+            let off = (layer * bs + phys % bs) * d;
+            match &mut self.blocks[bi] {
+                BlockRef::Owned(b) => {
+                    b.k[off..off + d].copy_from_slice(&k_rows.data[j * d..(j + 1) * d]);
+                    b.v[off..off + d].copy_from_slice(&v_rows.data[j * d..(j + 1) * d]);
+                }
+                BlockRef::Shared(_) => anyhow::bail!(
+                    "KV append targets a shared (frozen) block at row {} — paging invariant \
+                     violated (shared blocks are always full)",
+                    self.len + self.layer_rows[layer] + j
+                ),
+            }
         }
-        self.layers[layer].append(k_rows, v_rows);
+        self.layer_rows[layer] += k_rows.rows;
         Ok(())
     }
 
-    /// Mark `n` new positions fully cached, verifying every layer
-    /// actually received them (a failed step that appended to only some
-    /// layers is detected here and at the next step's consistency check).
-    pub fn commit(&mut self, n: usize) -> Result<()> {
-        let want = self.len + n;
+    /// Mark the staged rows for `tokens` fully cached, verifying every
+    /// layer actually received them (a failed step that appended to only
+    /// some layers is detected here and at the next step's consistency
+    /// check). The token values extend the cache's 0-anchored history so
+    /// newly filled blocks can be frozen + published for prefix sharing.
+    pub fn commit(&mut self, tokens: &[i32]) -> Result<()> {
+        let n = tokens.len();
         anyhow::ensure!(
-            self.layers.iter().all(|l| l.rows() == want),
-            "partial KV append: committing {want} positions but layer rows are {:?}",
-            self.layers.iter().map(|l| l.rows()).collect::<Vec<_>>()
+            self.layer_rows.iter().all(|&r| r == n),
+            "partial KV append: committing {n} positions but staged layer rows are {:?}",
+            self.layer_rows
         );
-        self.len = want;
+        self.len += n;
+        self.positions_seen += n;
+        for r in self.layer_rows.iter_mut() {
+            *r = 0;
+        }
+        if self.share_eligible {
+            self.token_history.extend_from_slice(tokens);
+            self.publish_full_blocks();
+        }
         Ok(())
     }
 
-    /// Invalidate every cached position, keeping the allocation. Used on
-    /// window slides and after failed steps.
+    /// Freeze every fully committed owned block (0-anchored caches only:
+    /// `start == 0`) into an immutable shared block and publish it under
+    /// the token prefix it covers.
+    fn publish_full_blocks(&mut self) {
+        let bs = self.pool.block_rows;
+        let full = self.len / bs;
+        for bi in 0..full.min(self.blocks.len()) {
+            if !matches!(self.blocks[bi], BlockRef::Owned(_)) {
+                continue;
+            }
+            let BlockRef::Owned(b) = self.blocks.remove(bi) else { continue };
+            let arc = Arc::new(FrozenBlock { k: b.k, v: b.v, _permit: b.permit });
+            if self.token_history.len() >= (bi + 1) * bs {
+                self.pool.register(&self.token_history[..(bi + 1) * bs], &arc);
+            }
+            self.blocks.insert(bi, BlockRef::Shared(arc));
+        }
+    }
+
+    /// Slide re-basing: drop the front cached row, keeping every other
+    /// row live (no re-prefill). The front block is released back to the
+    /// pool once the offset crosses it. A slid cache is no longer
+    /// 0-anchored, so it stops publishing prefix blocks. No-op on an
+    /// empty cache (a cleared cache re-prefills anyway).
+    pub fn pop_front(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        self.len -= 1;
+        self.start += 1;
+        self.share_eligible = false;
+        self.token_history = Vec::new();
+        if self.start >= self.pool.block_rows && !self.blocks.is_empty() {
+            drop(self.blocks.remove(0));
+            self.start -= self.pool.block_rows;
+        }
+    }
+
+    /// Invalidate every cached position, releasing all blocks back to
+    /// the pool. Used after failed steps (partial appends) and by retry
+    /// restarts; a cleared cache behaves exactly like a fresh one
+    /// (positions re-anchor at 0, sharing eligibility resets), keeping
+    /// retried decodes bit-identical to first attempts.
     pub fn clear(&mut self) {
-        for l in &mut self.layers {
-            l.clear();
+        self.blocks.clear();
+        for r in self.layer_rows.iter_mut() {
+            *r = 0;
         }
         self.len = 0;
+        self.start = 0;
+        self.positions_seen = 0;
+        self.shared_rows = 0;
+        self.token_history.clear();
+        self.share_eligible = self.pool.registry_cap > 0;
     }
 }
 
@@ -241,7 +709,7 @@ impl KvCache {
 /// The coordinator's continuous-batching loop owns a *set* of these,
 /// admitting new states mid-flight and retiring finished ones; an
 /// executor's `step` advances each active state by exactly one token.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct DecodeState {
     window: Vec<i32>,
     generated: Vec<i32>,
@@ -265,7 +733,9 @@ impl DecodeState {
         }
     }
 
-    /// Cached state: steps evaluate only the uncached window suffix.
+    /// Cached state: steps evaluate only the uncached window suffix. A
+    /// pool-seeded `cache` (see [`BlockPool::new_cache`]) may already
+    /// cover a shared prefix of the window.
     pub fn with_cache(prefix: &[i32], max_new: usize, seq_cap: usize, cache: KvCache) -> Self {
         let mut s = Self::new(prefix, max_new, seq_cap);
         s.cache = Some(cache);
@@ -299,7 +769,7 @@ impl DecodeState {
     }
 
     /// Window positions already covered by the cache (0 without one, or
-    /// right after a slide cleared it).
+    /// after a failed step cleared it).
     pub fn cached_rows(&self) -> usize {
         self.cache.as_ref().map_or(0, |c| c.len())
     }
@@ -313,7 +783,7 @@ impl DecodeState {
     /// yet covered by the cache) plus the cached-position count — the
     /// shared slicing contract of every cached executor step. Errors when
     /// the cache claims more positions than the window holds (a stale
-    /// cache that somehow missed a slide invalidation).
+    /// cache that somehow missed a slide re-base).
     pub fn uncached_suffix(&self) -> Result<(Vec<i32>, usize)> {
         let cached = self.cached_rows();
         anyhow::ensure!(
@@ -325,17 +795,16 @@ impl DecodeState {
     }
 
     /// Record one generated token: appends to the window, sliding
-    /// (drop-front) at the context cap. A slide shifts every absolute
-    /// position — positional embeddings make all cached rows stale — so
-    /// it clears the KV cache; the next step re-prefills the shifted
-    /// window, which is exactly the recompute the oracle path performs
-    /// at the cap.
+    /// (drop-front) at the context cap. A slide *re-bases* the cache
+    /// ([`KvCache::pop_front`]) instead of invalidating it — every
+    /// retained row stays live and the next step evaluates exactly one
+    /// token (streaming attention; see the module docs).
     pub fn push_token(&mut self, tok: i32) {
         self.generated.push(tok);
         if self.window.len() >= self.seq_cap {
             self.window.remove(0);
             if let Some(c) = &mut self.cache {
-                c.clear();
+                c.pop_front();
             }
         }
         self.window.push(tok);
@@ -355,62 +824,180 @@ mod tests {
         Matrix::from_fn(n, d, |r, c| base + (r * d + c) as f32)
     }
 
+    fn pool(layers: usize, d: usize, bs: usize, max: usize) -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(layers, d, bs, max))
+    }
+
+    /// Prefill `n` rows (all layers) with deterministic data and commit.
+    fn fill(c: &mut KvCache, tokens: &[i32], base: f32) {
+        let n = tokens.len();
+        for l in 0..c.n_layers() {
+            c.append(l, &rows(n, c.d_model(), base + l as f32 * 100.0), &rows(n, c.d_model(), base + 500.0))
+                .unwrap();
+        }
+        c.commit(tokens).unwrap();
+    }
+
     #[test]
-    fn append_commit_and_row_access() {
-        let mut c = KvCache::new(2, 4);
+    fn append_commit_and_row_access_across_block_boundaries() {
+        let p = pool(2, 4, 2, 0); // 2-row blocks force boundary crossings
+        let mut c = p.new_cache(&[]);
         assert_eq!(c.len(), 0);
         assert!(c.is_empty() && c.is_consistent());
         for l in 0..2 {
             c.append(l, &rows(3, 4, l as f32 * 100.0), &rows(3, 4, 500.0)).unwrap();
         }
         assert!(!c.is_consistent(), "uncommitted rows must read as inconsistent");
-        c.commit(3).unwrap();
+        c.commit(&[7, 8, 9]).unwrap();
         assert_eq!(c.len(), 3);
         assert!(c.is_consistent());
+        assert_eq!(c.blocks_in_table(), 2, "3 rows over 2-row blocks = 2 blocks");
+        // Row 2 sits in the second block; values must read back exactly.
         assert_eq!(c.layer(1).k_row(2), &[108.0, 109.0, 110.0, 111.0]);
         assert_eq!(c.layer(0).v_row(0), &[500.0, 501.0, 502.0, 503.0]);
+        assert_eq!(c.layer(0).rows(), 3);
+        assert_eq!(c.reserved_bytes(), 2 * 2 * 2 * 2 * 4 * 4);
     }
 
     #[test]
-    fn capacity_grows_geometrically_and_survives_clear() {
-        let mut c = KvCache::new(1, 2);
-        assert_eq!(c.capacity_rows(), 0);
-        c.append(0, &rows(1, 2, 0.0), &rows(1, 2, 0.0)).unwrap();
-        c.commit(1).unwrap();
-        assert_eq!(c.capacity_rows(), INITIAL_CAP_ROWS);
-        // Cross the first growth boundary: 16 -> 32.
-        c.append(0, &rows(INITIAL_CAP_ROWS, 2, 1.0), &rows(INITIAL_CAP_ROWS, 2, 1.0)).unwrap();
-        c.commit(INITIAL_CAP_ROWS).unwrap();
-        assert_eq!(c.capacity_rows(), 2 * INITIAL_CAP_ROWS);
-        assert_eq!(c.len(), INITIAL_CAP_ROWS + 1);
-        // Values survive growth: row 0 is still the first append.
-        assert_eq!(c.layer(0).k_row(0), &[0.0, 1.0]);
-        let reserved = c.reserved_bytes();
-        assert_eq!(reserved, 2 * 2 * INITIAL_CAP_ROWS * 2 * 4);
-        c.clear();
-        assert!(c.is_empty());
-        assert_eq!(c.capacity_rows(), 2 * INITIAL_CAP_ROWS, "clear must keep capacity");
-        assert_eq!(c.reserved_bytes(), reserved);
-    }
-
-    #[test]
-    fn append_rejects_bad_shapes_and_commit_detects_partial() {
-        let mut c = KvCache::new(2, 4);
+    fn commit_detects_partial_appends_and_shapes_are_checked() {
+        let p = pool(2, 4, 4, 0);
+        let mut c = p.new_cache(&[]);
         assert!(c.append(2, &rows(1, 4, 0.0), &rows(1, 4, 0.0)).is_err());
         assert!(c.append(0, &rows(1, 3, 0.0), &rows(1, 3, 0.0)).is_err());
         assert!(c.append(0, &rows(2, 4, 0.0), &rows(1, 4, 0.0)).is_err());
-        // Append to layer 0 only: commit must refuse.
         c.append(0, &rows(1, 4, 0.0), &rows(1, 4, 0.0)).unwrap();
-        assert!(c.commit(1).is_err());
+        assert!(c.commit(&[1]).is_err(), "layer 1 received nothing");
         assert!(!c.is_consistent());
         c.clear();
         assert!(c.is_consistent());
+        assert_eq!(c.blocks_in_table(), 0, "clear releases the table");
     }
 
     #[test]
-    fn decode_state_window_and_slide_semantics() {
+    fn pool_bound_is_enforced_and_raii_releases() {
+        let p = pool(1, 2, 2, 2); // at most 2 blocks = 4 rows
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[1, 2, 3, 4], 0.0);
+        assert_eq!(p.stats().blocks_in_use, 2);
+        // A fifth row needs a third block: typed refusal, no panic.
+        let err = c.append(0, &rows(1, 2, 9.0), &rows(1, 2, 9.0)).unwrap_err();
+        assert!(err.downcast_ref::<PoolExhausted>().is_some(), "{err}");
+        assert_eq!(p.stats().refusals, 1);
+        // The failed step leaves no staged rows behind here (append
+        // failed before staging) — and dropping the cache frees all.
+        drop(c);
+        let s = p.stats();
+        assert_eq!(s.blocks_in_use, 0, "RAII permits must release on drop");
+        assert_eq!(s.blocks_peak, 2);
+    }
+
+    #[test]
+    fn slide_rebases_without_reallocating_blocks() {
+        // The PR 8 bugfix regression: a slide at the context cap drops
+        // only the front row — no clear, no re-prefill, bounded blocks.
+        let p = pool(1, 2, 2, 0);
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[10, 11, 12, 13], 0.0); // 4 rows = 2 full blocks
+        let row1 = c.layer(0).k_row(1).to_vec();
+        let peak_before = p.stats().blocks_peak;
+        c.pop_front();
+        assert_eq!(c.len(), 3, "pop_front drops exactly one row");
+        assert_eq!(
+            c.layer(0).k_row(0),
+            &row1[..],
+            "remaining rows re-base (old row 1 becomes row 0)"
+        );
+        c.pop_front(); // start crosses the block edge: front block freed
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.blocks_in_table(), 1, "front block released after offset crosses it");
+        assert_eq!(p.stats().blocks_in_use, 1);
+        // Appending after slides reuses the ring: one new block max.
+        fill(&mut c, &[14, 15], 50.0);
+        assert_eq!(c.len(), 4);
+        assert!(p.stats().blocks_peak <= peak_before.max(2) + 1);
+        assert_eq!(c.positions_seen(), 6, "positions_seen is monotone across slides");
+    }
+
+    #[test]
+    fn shared_prefix_seeding_hits_and_verifies_tokens() {
+        let p = Arc::new(BlockPool::new(1, 2, 2, 0).with_sharing(16));
+        let header: Vec<i32> = vec![5, 6, 7, 8]; // two full blocks
+        let mut a = p.new_cache(&header);
+        assert_eq!(a.shared_rows(), 0, "empty registry seeds nothing");
+        fill(&mut a, &header, 1.0);
+        assert_eq!(p.stats().registry_entries, 2, "full blocks publish at commit");
+
+        // Same header, longer window: seeds both published blocks.
+        let window: Vec<i32> = vec![5, 6, 7, 8, 9];
+        let b = p.new_cache(&window);
+        assert_eq!(b.shared_rows(), 4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.layer(0).k_row(1), a.layer(0).k_row(1), "seeded rows are the same memory");
+        // A window equal to the published prefix must keep one row
+        // uncached (its logits drive the next token).
+        let c = p.new_cache(&header);
+        assert_eq!(c.len(), 2, "never seed the whole window");
+        // Divergent tokens must not match even on hash collisions.
+        let d = p.new_cache(&[5, 6, 99, 100, 101]);
+        assert_eq!(d.shared_rows(), 2, "only the first block matches");
+        let s = p.stats();
+        // Lookups: caches a, b, c, d. Hits: b seeded 2 blocks, c and d
+        // one each.
+        assert_eq!((s.prefix_lookups, s.shared_hits), (4, 4), "{s:?}");
+    }
+
+    #[test]
+    fn pool_pressure_evicts_idle_registry_blocks() {
+        let p = Arc::new(BlockPool::new(1, 2, 2, 2).with_sharing(16));
+        let mut a = p.new_cache(&[1, 2, 3, 4]);
+        fill(&mut a, &[1, 2], 0.0); // one full block, published
+        drop(a); // registry now holds the only reference
+        assert_eq!(p.stats().blocks_in_use, 1);
+        assert_eq!(p.stats().registry_entries, 1);
+        // A 4-row prefill needs 2 blocks: eviction must free the idle one.
+        let mut b = p.new_cache(&[9, 9, 9, 9, 9]);
+        fill(&mut b, &[9, 9, 9, 9], 2.0);
+        let s = p.stats();
+        assert_eq!(s.evictions, 1, "idle registry block evicted under pressure");
+        assert_eq!(s.blocks_in_use, 2);
+        assert_eq!(s.refusals, 0);
+    }
+
+    #[test]
+    fn slid_caches_stop_publishing() {
+        let p = Arc::new(BlockPool::new(1, 2, 2, 0).with_sharing(16));
+        let mut c = p.new_cache(&[1, 2, 3]);
+        fill(&mut c, &[1, 2, 3], 0.0);
+        let before = p.stats().registry_entries;
+        c.pop_front();
+        fill(&mut c, &[4, 5], 9.0);
+        assert_eq!(
+            p.stats().registry_entries,
+            before,
+            "a slid cache is not 0-anchored and must not publish"
+        );
+    }
+
+    #[test]
+    fn clear_resets_to_a_fresh_cache() {
+        let p = pool(1, 2, 2, 0);
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[1, 2, 3], 0.0);
+        c.pop_front();
+        c.clear();
+        assert_eq!((c.len(), c.positions_seen(), c.blocks_in_table()), (0, 0, 0));
+        assert_eq!(p.stats().blocks_in_use, 0);
+        // Usable again, re-anchored at position 0.
+        fill(&mut c, &[7], 1.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.positions_seen(), 1);
+    }
+
+    #[test]
+    fn decode_state_slide_keeps_cache_live() {
         // Mirrors the serving decode contract: keep the newest `cap`
-        // prefix tokens, slide at the cap, clear the cache on slide.
+        // prefix tokens, slide at the cap, re-base (never clear).
         let mut s = DecodeState::with_cache(&[1, 2, 3, 4, 5], 3, 4, KvCache::new(1, 2));
         assert_eq!(s.window(), &[2, 3, 4, 5]);
         assert!(!s.done());
@@ -419,13 +1006,14 @@ mod tests {
         {
             let c = s.cache_mut().unwrap();
             c.append(0, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
-            c.commit(4).unwrap();
+            c.commit(&[2, 3, 4, 5]).unwrap();
         }
         assert_eq!(s.cached_rows(), 4);
-        s.push_token(9); // at cap: slides and invalidates
+        s.push_token(9); // at cap: slides and re-bases
         assert_eq!(s.window(), &[3, 4, 5, 9]);
         assert_eq!(s.generated(), &[9]);
-        assert_eq!(s.cached_rows(), 0, "slide must clear the cache");
+        assert_eq!(s.cached_rows(), 3, "slide drops exactly the front row");
+        assert_eq!(s.uncached_suffix().unwrap(), (vec![9], 3));
         s.push_token(8);
         s.push_token(7);
         assert!(s.done());

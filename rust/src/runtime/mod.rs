@@ -19,7 +19,7 @@ pub mod xla;
 pub use artifacts::{ModelArtifacts, Param, Store};
 pub use backend::{argmax_slice, Backend, Buffer, Literal, LiteralData};
 pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
-pub use kvcache::{DecodeState, KvCache};
+pub use kvcache::{BlockPool, DecodeState, KvCache, PoolExhausted, PoolStats, DEFAULT_BLOCK_ROWS};
 pub use qkernels::{qmatmul, PackedModel, QCost};
 
 #[cfg(test)]

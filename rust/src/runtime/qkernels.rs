@@ -42,7 +42,7 @@ use crate::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
 use crate::util::parallel;
 
 use super::artifacts::ModelArtifacts;
-use super::kvcache::KvCache;
+use super::kvcache::{DecodeState, KvCache};
 use super::sim::{self, ModelSpec, ParamSource};
 
 /// Output rows accumulated together per micro-kernel pass (register
@@ -375,13 +375,44 @@ impl PackedModel {
         KvCache::new(self.spec.n_layers, self.spec.d_model)
     }
 
-    /// Greedy (argmax) single-sequence decode on the packed layers —
-    /// `max_new` tokens, sliding the context window at `seq_len` exactly
-    /// like the serving decode loop (each step runs only the live
-    /// positions; causality makes that bit-identical to a padded pass).
-    /// The client-side oracle `halo loadgen --quant` re-derives sampled
-    /// response chains against.
+    /// Greedy (argmax) single-sequence decode on the packed layers,
+    /// KV-cached — `max_new` tokens, sliding the context window at
+    /// `seq_len` exactly like the serving decode loop: the first step
+    /// prefills the window, every later step evaluates only the newest
+    /// token, and a slide re-bases the cache instead of clearing it
+    /// (ring positions; see `runtime::kvcache`). Bit-identical to the
+    /// serving `QuantExecutor` path and, on chains that never slide, to
+    /// [`PackedModel::decode_greedy_recompute`] (pinned by
+    /// `tests/decode_equiv.rs`). The client-side oracle
+    /// `halo loadgen --quant` re-derives sampled response chains against
+    /// this.
     pub fn decode_greedy(&self, prefix: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let mut s = DecodeState::with_cache(prefix, max_new, self.spec.seq_len, self.new_cache());
+        while !s.done() {
+            let (new, cached) = s.uncached_suffix()?;
+            let t = if new.is_empty() {
+                // Empty window (empty prefix): pad one position, same as
+                // the recompute path, without touching the cache.
+                let logits = self.forward(&[0], 1, 1)?;
+                super::backend::argmax_slice(logits.row(0)) as i32
+            } else {
+                let logits = match s.cache_mut() {
+                    Some(cache) => self.forward_incremental(&new, cached, cache)?,
+                    None => anyhow::bail!("decode state constructed with a cache lost it"),
+                };
+                super::backend::argmax_slice(logits.row(new.len() - 1)) as i32
+            };
+            s.push_token(t);
+        }
+        Ok(s.into_generated())
+    }
+
+    /// Cache-free oracle decode: every step re-runs the whole live
+    /// window through [`PackedModel::forward`]. O(S²) — kept as the
+    /// differential oracle for the cached path (`halo loadgen --quant
+    /// --no-kv-cache` verifies against this) and for chains where an
+    /// independent recomputation is wanted.
+    pub fn decode_greedy_recompute(&self, prefix: &[i32], max_new: usize) -> Result<Vec<i32>> {
         let cap = self.spec.seq_len;
         let mut seq: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
         let mut out = Vec::with_capacity(max_new);

@@ -23,7 +23,7 @@ use crate::util::{parallel, Json};
 
 use super::backend::{Backend, Buffer, ExecutableImpl, Literal};
 use super::kernels::{self, dot, matmul_nt, matmul_tn};
-use super::kvcache::{KvCache, LayerKv};
+use super::kvcache::{KvCache, LayerView};
 
 /// sqrt(2/pi) for the tanh GELU approximation (jax.nn.gelu default).
 const GELU_C: f32 = 0.797_884_56;
@@ -851,8 +851,13 @@ pub fn forward_logits(
 ///
 /// `cache` must hold exactly `pos0` committed positions (consistent
 /// across layers) and `pos0 + tokens.len()` must stay within the model's
-/// context window — window slides shift every absolute position and must
-/// clear the cache first (see `runtime::kvcache`). Returns the
+/// context window. Positional embeddings ring over the context window:
+/// a new token embeds at `cache.positions_seen() % seq_len`, which
+/// equals its window row until the first slide and keeps advancing
+/// (mod `seq_len`) afterwards, so a context slide *re-bases* the cache
+/// (`KvCache::pop_front`) instead of clearing it — decode past the cap
+/// is streaming attention over the retained rows, pinned
+/// block-size-invariant by `tests/decode_equiv.rs`. Returns the
 /// `(tokens.len(), vocab)` logits rows for the new positions. On error
 /// the cache may hold a partial append; clear it before reuse (the
 /// consistency check here refuses stale caches).
@@ -902,7 +907,12 @@ pub fn forward_incremental(
             spec.vocab
         );
         let erow = &embed[t as usize * d..(t as usize + 1) * d];
-        let prow = &pos[(pos0 + i) * d..(pos0 + i + 1) * d];
+        // Ring position: monotone committed-position count mod context.
+        // Equal to `pos0 + i` until the first slide (positions_seen ==
+        // len == pos0 for never-slid caches), so pre-slide chains stay
+        // bit-identical to full-window recompute.
+        let ring = (cache.positions_seen() + i) % spec.seq_len;
+        let prow = &pos[ring * d..(ring + 1) * d];
         let xrow = x.row_mut(i);
         for c in 0..d {
             xrow[c] = erow[c] + prow[c];
@@ -950,7 +960,7 @@ pub fn forward_incremental(
         }
         add_into(&mut x, &mlp_out);
     }
-    cache.commit(n)?;
+    cache.commit(tokens)?;
 
     let (xf, _, _) = layernorm(&x, p.vec1("ln_f.scale")?, p.vec1("ln_f.bias")?);
     let a_xf = act(&xf);
@@ -962,14 +972,15 @@ pub fn forward_incremental(
 /// new rows). Mirrors [`attention`]'s numerics exactly — f64-scaled f32
 /// logits, max-subtracted exp with an f64 softmax denominator, f32 weight
 /// rounding, keys ascending — so cached decode stays bit-identical to the
-/// full-prefix pass.
+/// full-prefix pass. Reads rows through the paged cache's [`LayerView`];
+/// the summation order is unchanged from the contiguous layout.
 fn attention_cached(
     pos0: usize,
     n: usize,
     heads: usize,
     hd: usize,
     q: &Matrix,
-    kv: &LayerKv,
+    kv: LayerView<'_>,
 ) -> Matrix {
     let d = heads * hd;
     let scale = 1.0 / (hd as f64).sqrt();

@@ -60,7 +60,7 @@ pub mod sites {
     /// `RequestQueue::push` — fires on the *submitter's* thread, so panic
     /// faults are downgraded to errors here (soft site).
     pub const QUEUE_PUSH: &str = "queue.push";
-    /// KV-cache growth/reallocation (`runtime/kvcache.rs`).
+    /// KV pool block acquisition (`runtime/kvcache.rs`).
     pub const KVCACHE_GROW: &str = "kvcache.grow";
     /// Backend forward entry (`runtime/sim.rs`, full and incremental).
     pub const SIM_RUN: &str = "sim.run";

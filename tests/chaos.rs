@@ -23,8 +23,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use halo::coordinator::{
-    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, ShedReason, SubmitSpec,
-    SupervisorConfig,
+    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, Request,
+    ShedReason, SupervisorConfig,
 };
 use halo::util::failpoint::{self, sites, FailPlan, Fault};
 use halo::util::sync::Mutex;
@@ -115,7 +115,7 @@ fn chaos_soak_survives_mixed_faults_with_exactly_one_response_each() {
         ],
         0xC0FF_EE00,
     );
-    let coord = Coordinator::start_sharded(chaos_cfg(3), echo_factory(4));
+    let coord = Coordinator::start(chaos_cfg(3), echo_factory(4));
 
     let n = 120usize;
     let mut specs = Vec::with_capacity(n);
@@ -123,7 +123,7 @@ fn chaos_soak_survives_mixed_faults_with_exactly_one_response_each() {
     for i in 0..n {
         let prefix: Vec<i32> = (0..1 + i % 6).map(|j| ((i * 7 + j * 3) % 89) as i32).collect();
         let max_new = 1 + i % 4;
-        rxs.push(coord.submit_spec(SubmitSpec::generate(prefix.clone(), max_new)));
+        rxs.push(coord.submit_or_shed(Request::new(prefix.clone()).max_new(max_new)));
         specs.push((prefix, max_new));
     }
 
@@ -194,10 +194,10 @@ fn killed_shard_respawns_and_retried_decode_is_bit_identical() {
         vec![FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_after(2).with_max_fires(1)],
         7,
     );
-    let coord = Coordinator::start_sharded(chaos_cfg(1), echo_factory(4));
+    let coord = Coordinator::start(chaos_cfg(1), echo_factory(4));
 
     let prefix = vec![5, 11, 2];
-    let rx = coord.submit_spec(SubmitSpec::generate(prefix.clone(), 6));
+    let rx = coord.submit_or_shed(Request::new(prefix.clone()).max_new(6));
     let r = rx.recv_timeout(Duration::from_secs(20)).expect("retried request still answers");
     assert!(!r.shed, "one kill within the retry budget must not shed");
     assert_eq!(
@@ -230,11 +230,11 @@ fn total_shard_loss_sheds_everything_with_reasons_and_no_hang() {
         vec![FailPlan::always(sites::SHARD_BEGIN, Fault::Panic)],
         3,
     );
-    let coord = Coordinator::start_sharded(chaos_cfg(2), echo_factory(4));
+    let coord = Coordinator::start(chaos_cfg(2), echo_factory(4));
 
     let n = 24usize;
     let rxs: Vec<_> = (0..n)
-        .map(|i| coord.submit_spec(SubmitSpec::generate(vec![i as i32 % 89], 3)))
+        .map(|i| coord.submit_or_shed(Request::new(vec![i as i32 % 89]).max_new(3)))
         .collect();
     for rx in &rxs {
         let r = rx.recv_timeout(Duration::from_secs(20)).expect("total loss must not hang");
@@ -272,13 +272,13 @@ fn random_schedules_across_seeds_never_drop_or_double_answer() {
             ],
             seed,
         );
-        let coord = Coordinator::start_sharded(chaos_cfg(2), echo_factory(4));
+        let coord = Coordinator::start(chaos_cfg(2), echo_factory(4));
         let n = 30usize;
         let mut rxs = Vec::with_capacity(n);
         let mut specs = Vec::with_capacity(n);
         for i in 0..n {
             let prefix: Vec<i32> = (0..1 + i % 4).map(|j| ((i * 13 + j) % 89) as i32).collect();
-            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix.clone(), 3)));
+            rxs.push(coord.submit_or_shed(Request::new(prefix.clone()).max_new(3)));
             specs.push(prefix);
         }
         let mut served = 0u64;
@@ -323,9 +323,9 @@ fn env_installed_schedule_drives_the_serving_path() {
     std::env::remove_var(failpoint::ENV_SEED);
     assert!(installed, "HALO_FAILPOINTS must install a schedule");
 
-    let coord = Coordinator::start_sharded(chaos_cfg(1), echo_factory(4));
+    let coord = Coordinator::start(chaos_cfg(1), echo_factory(4));
     let prefix = vec![4, 9];
-    let rx = coord.submit_spec(SubmitSpec::generate(prefix.clone(), 2));
+    let rx = coord.submit_or_shed(Request::new(prefix.clone()).max_new(2));
     let r = rx.recv_timeout(Duration::from_secs(10)).expect("delayed push still answers");
     assert!(!r.shed);
     assert_eq!(r.tokens, echo_chain(&prefix, 16, 2));
@@ -333,4 +333,86 @@ fn env_installed_schedule_drives_the_serving_path() {
     coord.shutdown().expect("clean shutdown");
     failpoint::clear();
     assert!(!failpoint::enabled());
+}
+
+/// PR 8: KV block-pool exhaustion is load, not a fault. A pool too small
+/// for even one prefill sheds every request with `ShedReason::Brownout`
+/// — no panic, no shard restart, no retry-budget burn — and the same
+/// workload over an adequate pool serves bit-identically to the solo
+/// cached oracle.
+#[test]
+fn pool_exhaustion_sheds_as_brownout_and_kills_no_shard() {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    use halo::mac::MacProfile;
+    use halo::quant::Variant;
+    use halo::runtime::sim::ModelSpec;
+    use halo::runtime::{BlockPool, PackedModel};
+    use halo::util::Rng;
+
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // No failpoint schedule: the pressure comes from the pool bound alone.
+    let spec = ModelSpec::synthetic(13, 8, 2, 2, 16, 24);
+    let mut rng = Rng::seed_from_u64(0xB10C);
+    let params: Vec<(String, Vec<usize>, Vec<f32>)> = spec
+        .names
+        .iter()
+        .zip(&spec.shapes)
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".scale") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.gen_normal() as f32 * 0.1).collect()
+            };
+            (name.clone(), shape.clone(), data)
+        })
+        .collect();
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let pm = Arc::new(
+        PackedModel::pack_from(
+            spec.clone(),
+            views,
+            Variant::Bal,
+            4,
+            &BTreeMap::new(),
+            MacProfile::cached(),
+        )
+        .unwrap(),
+    );
+
+    // Phase 1: one 4-row block total — an 8-token prefill can never fit.
+    let starved = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 1));
+    let (pm2, pool2) = (pm.clone(), starved.clone());
+    let coord = Coordinator::start(chaos_cfg(1), move |_shard| {
+        let exec = QuantExecutor::new(pm2.clone(), 4).with_kv_pool(pool2.clone());
+        Ok(Box::new(exec) as Box<dyn BatchExecutor>)
+    });
+    let prefix: Vec<i32> = (0..8).map(|i| (i * 3 % spec.vocab as i32)).collect();
+    let rx = coord.submit_or_shed(Request::new(prefix.clone()).max_new(2));
+    let r = rx.recv_timeout(Duration::from_secs(20)).expect("exhaustion must answer, not hang");
+    assert!(r.shed, "an impossible allocation must shed");
+    assert_eq!(r.reason, Some(ShedReason::Brownout), "exhaustion sheds as brown-out");
+    let snap = coord.merged_snapshot();
+    assert_eq!(snap.shard_restarts, 0, "pool pressure must not look like a shard fault");
+    assert!(starved.stats().refusals >= 1, "the pool recorded no refusal");
+    assert!(
+        snap.kv_pool_refusals >= 1,
+        "pool refusals must surface in serving metrics, got {snap:?}"
+    );
+    coord.shutdown().expect("starved coordinator shuts down cleanly");
+
+    // Phase 2: same request, adequate pool — served, bit-identical.
+    let roomy = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(16));
+    let (pm3, pool3) = (pm.clone(), roomy);
+    let coord = Coordinator::start(chaos_cfg(1), move |_shard| {
+        let exec = QuantExecutor::new(pm3.clone(), 4).with_kv_pool(pool3.clone());
+        Ok(Box::new(exec) as Box<dyn BatchExecutor>)
+    });
+    let rx = coord.submit_or_shed(Request::new(prefix.clone()).max_new(2));
+    let r = rx.recv_timeout(Duration::from_secs(20)).expect("roomy pool serves");
+    assert!(!r.shed, "an adequate pool must serve the identical request");
+    assert_eq!(r.tokens, pm.decode_greedy(&prefix, 2).unwrap());
+    coord.shutdown().expect("clean shutdown");
 }

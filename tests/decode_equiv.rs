@@ -1,13 +1,25 @@
-//! Differential decode-equivalence suite (PR 5): KV-cached incremental
-//! decode must produce BIT-IDENTICAL greedy token chains to full-prefix
-//! recompute — for the dense parameter path and all three packed HALO
-//! variants, through ragged continuous-batching joins/retires, across a
-//! KV-cache growth boundary, and past the context-window slide.
+//! Differential decode-equivalence suite (PR 5, reworked for the PR 8
+//! paged KV cache): KV-cached incremental decode must produce
+//! BIT-IDENTICAL greedy token chains to full-prefix recompute — for the
+//! dense parameter path and all three packed HALO variants, through
+//! ragged continuous-batching joins/retires, and across paged-block
+//! boundaries — and context-window slides must *stream* (re-base the
+//! cache, evaluate exactly one token, never re-prefill) with chains that
+//! are invariant to the pool's block size.
 //!
-//! These tests pin the serving fast path to the oracle: any numerical
+//! These tests pin the serving fast path to its oracles: any numerical
 //! drift between `forward_incremental` and the full `forward` (summation
-//! order, softmax precision, position handling) breaks an exact token
+//! order, softmax precision, position handling) — or any paging bug that
+//! reads a stale/mis-indexed block row — breaks an exact token
 //! comparison here, not a tolerance.
+//!
+//! Two oracles since PR 8 (ring positional embedding):
+//! - chains that never slide are bit-identical to full-prefix recompute;
+//! - chains that slide are pinned by *block-size invariance* (the paged
+//!   layout at any block size, including one block spanning the whole
+//!   context, must produce identical chains) plus no-re-prefill
+//!   assertions, and the packed executor path must equal the solo
+//!   `PackedModel::decode_greedy` cached oracle.
 //!
 //! No artifacts needed: models are synthesized in-memory from a tiny
 //! `ModelSpec`, exactly like `tests/qexec.rs`.
@@ -17,17 +29,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use halo::coordinator::{
-    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, SubmitSpec,
+    BatchExecutor, BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, Request,
 };
 use halo::mac::MacProfile;
 use halo::quant::{Matrix, Variant};
-use halo::runtime::kvcache::INITIAL_CAP_ROWS;
 use halo::runtime::sim::{forward_incremental, forward_logits, DenseParams, ModelSpec, ParamSource};
-use halo::runtime::{argmax_slice, DecodeState, KvCache, PackedModel};
+use halo::runtime::{argmax_slice, BlockPool, DecodeState, KvCache, PackedModel, DEFAULT_BLOCK_ROWS};
 use halo::util::Rng;
 
-/// Tiny 2-layer model whose context window (24) exceeds the KV cache's
-/// initial capacity (16), so in-window decode crosses a growth boundary.
+/// Tiny 2-layer model whose context window (24) exceeds the default
+/// block size (16), so in-window decode crosses a paged-block boundary.
 fn tiny_spec() -> ModelSpec {
     ModelSpec::synthetic(13, 8, 2, 2, 16, 24)
 }
@@ -87,8 +98,9 @@ fn random_prefix(rng: &mut Rng, vocab: usize, len: usize) -> Vec<i32> {
 }
 
 /// The recompute oracle: greedy decode where every step re-runs the whole
-/// window through the full-prefix forward pass (window slides at the
-/// context cap, identical to the serving decode contract).
+/// window through the full-prefix forward pass. Valid for cached chains
+/// that never slide; a slid cached chain intentionally diverges (ring
+/// positions stream instead of re-embedding the shifted window).
 fn greedy_recompute(
     spec: &ModelSpec,
     p: &dyn ParamSource,
@@ -116,24 +128,38 @@ fn greedy_recompute(
     out
 }
 
-/// The KV-cached fast path: greedy decode through `forward_incremental`,
-/// evaluating only the uncached window suffix each step and re-prefilling
-/// after a slide (the `DecodeState` contract, spelled out so the test is
-/// an independent mirror of the executor logic). Also returns the peak
-/// per-layer cache capacity observed, so growth tests can assert a
-/// boundary was actually crossed.
+/// Telemetry from one cached decode: enough to prove the paged contract
+/// (streaming slides, bounded blocks, shared seeding) structurally.
+#[derive(Debug, Default, Clone, Copy)]
+struct CacheTrace {
+    /// Longest uncached suffix evaluated on any step AFTER the first
+    /// (post-prefill). Streaming decode keeps this at exactly 1 — a
+    /// re-prefill would spike it to the window length.
+    max_suffix_after_prefill: usize,
+    /// Most blocks the request's table ever referenced.
+    peak_blocks: usize,
+    /// Rows seeded from the pool's shared-prefix registry at creation.
+    seeded_rows: usize,
+}
+
+/// The KV-cached fast path: greedy decode through `forward_incremental`
+/// over a cache carved from `pool`, evaluating only the uncached window
+/// suffix each step and RE-BASING the cache at a context slide
+/// (`pop_front` — the `DecodeState` contract, spelled out so the test is
+/// an independent mirror of the executor logic).
 fn greedy_cached(
     spec: &ModelSpec,
     p: &dyn ParamSource,
     prefix: &[i32],
     max_new: usize,
-) -> (Vec<i32>, usize) {
+    pool: &Arc<BlockPool>,
+) -> (Vec<i32>, CacheTrace) {
     let cap = spec.seq_len;
     let mut window: Vec<i32> = prefix[prefix.len().saturating_sub(cap)..].to_vec();
-    let mut cache = KvCache::new(spec.n_layers, spec.d_model);
+    let mut cache = pool.new_cache(&window);
+    let mut trace = CacheTrace { seeded_rows: cache.shared_rows(), ..CacheTrace::default() };
     let mut out = Vec::new();
-    let mut peak_cap = 0usize;
-    for _ in 0..max_new {
+    for step in 0..max_new {
         let tok = if window.is_empty() {
             let mut scratch = KvCache::new(spec.n_layers, spec.d_model);
             let logits = forward_incremental(spec, p, &[0], 0, &mut scratch, false).unwrap();
@@ -141,18 +167,25 @@ fn greedy_cached(
         } else {
             let cached = cache.len();
             let new = window[cached..].to_vec();
+            if step > 0 {
+                trace.max_suffix_after_prefill = trace.max_suffix_after_prefill.max(new.len());
+            }
             let logits = forward_incremental(spec, p, &new, cached, &mut cache, false).unwrap();
             argmax_slice(logits.row(logits.rows - 1)) as i32
         };
-        peak_cap = peak_cap.max(cache.capacity_rows());
+        trace.peak_blocks = trace.peak_blocks.max(cache.blocks_in_table());
         out.push(tok);
         if window.len() >= cap {
             window.remove(0);
-            cache.clear(); // the slide shifts every position
+            cache.pop_front(); // the slide re-bases; no clear, no re-prefill
         }
         window.push(tok);
     }
-    (out, peak_cap)
+    (out, trace)
+}
+
+fn plain_pool(spec: &ModelSpec, block_rows: usize) -> Arc<BlockPool> {
+    Arc::new(BlockPool::new(spec.n_layers, spec.d_model, block_rows, 0))
 }
 
 // ------------------------------------------------------------- dense path
@@ -163,60 +196,129 @@ fn dense_cached_decode_is_bit_identical_to_recompute() {
     let (params, _) = tiny_params(&spec, 40);
     let p = dense_source(&spec, &params);
     let mut rng = Rng::seed_from_u64(41);
-    // Prefix lengths: empty, short, across the cache-growth boundary
-    // (20 > INITIAL_CAP_ROWS), at the context cap, and beyond it.
+    // Prefix lengths: empty, short, across the default 16-row block
+    // boundary, at the context cap, and beyond it. Budgets shrink near
+    // the cap so no decoded token lands after a slide (slid chains get
+    // their own oracle below).
     for plen in [0usize, 1, 5, 20, 24, 30] {
         let prefix = random_prefix(&mut rng, spec.vocab, plen);
-        let want = greedy_recompute(&spec, &p, &prefix, 6);
-        let (got, _) = greedy_cached(&spec, &p, &prefix, 6);
+        let max_new = (spec.seq_len - plen.min(spec.seq_len) + 1).min(6);
+        let want = greedy_recompute(&spec, &p, &prefix, max_new);
+        let (got, _) = greedy_cached(&spec, &p, &prefix, max_new, &plain_pool(&spec, 16));
         assert_eq!(got, want, "dense decode diverged for prefix length {plen}");
     }
 }
 
 #[test]
-fn dense_decode_across_cache_growth_boundary() {
-    // A 20-token prefix prefills past the cache's initial 16-row
-    // capacity: the growth (16 -> 32) must be observed AND change nothing.
+fn dense_decode_across_block_boundaries() {
+    // A 20-token prefix prefills past the default 16-row block: the
+    // table must span blocks AND change nothing numerically; same for
+    // the exact-boundary case (prefill 16, then step across the edge).
     let spec = tiny_spec();
     let (params, _) = tiny_params(&spec, 42);
     let p = dense_source(&spec, &params);
     let mut rng = Rng::seed_from_u64(43);
     let prefix = random_prefix(&mut rng, spec.vocab, 20);
-    let (got, peak_cap) = greedy_cached(&spec, &p, &prefix, 3);
+    let (got, trace) = greedy_cached(&spec, &p, &prefix, 3, &plain_pool(&spec, DEFAULT_BLOCK_ROWS));
     assert!(
-        peak_cap > INITIAL_CAP_ROWS,
-        "prefix 20 never crossed the {INITIAL_CAP_ROWS}-row boundary (peak {peak_cap})"
+        trace.peak_blocks > 1,
+        "prefix 20 never crossed the {DEFAULT_BLOCK_ROWS}-row block boundary ({trace:?})"
     );
     assert_eq!(got, greedy_recompute(&spec, &p, &prefix, 3));
 
-    // And the exact-boundary case: prefill 16, then step across it.
-    let prefix16 = random_prefix(&mut rng, spec.vocab, INITIAL_CAP_ROWS);
-    let (got16, _) = greedy_cached(&spec, &p, &prefix16, 4);
+    let prefix16 = random_prefix(&mut rng, spec.vocab, DEFAULT_BLOCK_ROWS);
+    let (got16, _) =
+        greedy_cached(&spec, &p, &prefix16, 4, &plain_pool(&spec, DEFAULT_BLOCK_ROWS));
     assert_eq!(got16, greedy_recompute(&spec, &p, &prefix16, 4));
 }
 
 #[test]
-fn dense_decode_past_the_context_slide() {
+fn dense_slide_streams_without_reprefill_and_is_block_size_invariant() {
     // Prefix at the cap + enough new tokens that the window slides every
-    // step: the cached path re-prefills after each slide and must still
-    // match the recompute oracle token for token.
+    // step. The paged cache must RE-BASE at each slide: every post-
+    // prefill step evaluates exactly one token (streaming attention, no
+    // re-prefill), the block table stays bounded by the context window,
+    // and the chain is identical at every block size — including one
+    // block spanning the whole context, where paging degenerates to the
+    // contiguous layout.
     let spec = tiny_spec();
     let (params, _) = tiny_params(&spec, 44);
     let p = dense_source(&spec, &params);
     let mut rng = Rng::seed_from_u64(45);
     let prefix = random_prefix(&mut rng, spec.vocab, spec.seq_len);
-    let want = greedy_recompute(&spec, &p, &prefix, 8);
-    let (got, _) = greedy_cached(&spec, &p, &prefix, 8);
-    assert_eq!(got, want);
+    let max_new = 8;
+
+    let mut chains = Vec::new();
+    for bs in [4usize, DEFAULT_BLOCK_ROWS, spec.seq_len] {
+        let pool = plain_pool(&spec, bs);
+        let (got, trace) = greedy_cached(&spec, &p, &prefix, max_new, &pool);
+        assert_eq!(
+            trace.max_suffix_after_prefill, 1,
+            "block size {bs}: a slide re-prefilled instead of streaming ({trace:?})"
+        );
+        let cap_blocks = (spec.seq_len + bs - 1) / bs;
+        assert!(
+            trace.peak_blocks <= cap_blocks + 1,
+            "block size {bs}: table grew unboundedly across slides ({trace:?})"
+        );
+        assert_eq!(
+            pool.stats().blocks_in_use,
+            0,
+            "block size {bs}: slid-off blocks leaked after the cache dropped"
+        );
+        chains.push((bs, got));
+    }
+    for w in chains.windows(2) {
+        assert_eq!(
+            w[0].1, w[1].1,
+            "slide chain differs between block sizes {} and {}",
+            w[0].0, w[1].0
+        );
+    }
+    // The first decoded token precedes any slide, so it still matches
+    // full-window recompute bit for bit.
+    assert_eq!(chains[0].1[0], greedy_recompute(&spec, &p, &prefix, 1)[0]);
+}
+
+#[test]
+fn dense_shared_prefix_seeding_is_bit_identical() {
+    // Two requests share an 8-token header over a sharing pool with
+    // 4-row blocks: the first publishes frozen header blocks, the second
+    // is seeded from the registry and must decode the exact chain a
+    // cold (non-sharing) cache produces — shared blocks are the same
+    // rows, not approximately the same.
+    let spec = tiny_spec();
+    let (params, _) = tiny_params(&spec, 46);
+    let p = dense_source(&spec, &params);
+    let mut rng = Rng::seed_from_u64(47);
+    let header = random_prefix(&mut rng, spec.vocab, 8);
+    let suffix = random_prefix(&mut rng, spec.vocab, 5);
+
+    let pool = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(64));
+    let (first, t_first) = greedy_cached(&spec, &p, &header, 3, &pool);
+    assert_eq!(t_first.seeded_rows, 0, "empty registry must seed nothing");
+    assert!(pool.stats().registry_entries >= 2, "header prefill published no blocks");
+
+    let mut full = header.clone();
+    full.extend_from_slice(&suffix);
+    let (seeded, t_seeded) = greedy_cached(&spec, &p, &full, 4, &pool);
+    assert_eq!(t_seeded.seeded_rows, 8, "second request not seeded from the registry");
+    let (cold, _) = greedy_cached(&spec, &p, &full, 4, &plain_pool(&spec, 4));
+    assert_eq!(seeded, cold, "shared-prefix seeding changed the decoded chain");
+    assert_eq!(cold, greedy_recompute(&spec, &p, &full, 4));
+    // And the header-only chain was itself correct.
+    assert_eq!(first, greedy_recompute(&spec, &p, &header, 3));
 }
 
 // ------------------------------------------------------------ packed paths
 
 #[test]
 fn packed_cached_decode_matches_oracle_all_variants() {
-    // All three HALO variants, executor-level: the KV-cached QuantExecutor
-    // vs the same executor with the cache disabled (the recompute oracle),
-    // over a ragged batch. Chains must be identical token for token.
+    // All three HALO variants, executor-level, over a ragged batch that
+    // includes sliding chains. The KV-cached QuantExecutor must equal
+    // the solo cached oracle (`decode_greedy`) on every request, and
+    // equal the cache-disabled recompute executor on every request that
+    // never slides.
     for (vi, variant) in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt]
         .into_iter()
         .enumerate()
@@ -224,24 +326,33 @@ fn packed_cached_decode_matches_oracle_all_variants() {
         let (spec, pm) = pack_tiny(50 + vi as u64, variant);
         let pm = Arc::new(pm);
         let mut rng = Rng::seed_from_u64(60 + vi as u64);
-        let prefixes: Vec<Vec<i32>> = [0usize, 3, 20, 24, 30]
-            .iter()
-            .map(|&l| random_prefix(&mut rng, spec.vocab, l))
-            .collect();
+        let plens = [0usize, 3, 20, 24, 30];
+        let prefixes: Vec<Vec<i32>> =
+            plens.iter().map(|&l| random_prefix(&mut rng, spec.vocab, l)).collect();
         let max_new = vec![5usize, 1, 4, 2, 6];
 
         let mut cached = QuantExecutor::new(pm.clone(), prefixes.len());
         let mut oracle = QuantExecutor::new(pm.clone(), prefixes.len()).with_kv_cache(false);
         let got = cached.generate(&prefixes, &max_new).unwrap();
         let want = oracle.generate(&prefixes, &max_new).unwrap();
-        assert_eq!(got, want, "variant {} cached decode diverged", variant.name());
-        // And against the pre-PR-5 packed greedy oracle, per request.
-        for (p, (&m, chain)) in prefixes.iter().zip(max_new.iter().zip(&got)) {
+        for (i, (p, (&m, chain))) in
+            prefixes.iter().zip(max_new.iter().zip(&got)).enumerate()
+        {
+            // The solo cached oracle covers every chain, slid or not.
             if !p.is_empty() {
                 assert_eq!(
                     chain,
                     &pm.decode_greedy(p, m).unwrap(),
                     "variant {} diverged from decode_greedy",
+                    variant.name()
+                );
+            }
+            // The recompute executor is the oracle only while no slide
+            // happened (window start + decoded < cap).
+            if plens[i].min(spec.seq_len) + m - 1 < spec.seq_len {
+                assert_eq!(
+                    chain, &want[i],
+                    "variant {} cached decode diverged pre-slide",
                     variant.name()
                 );
             }
@@ -290,20 +401,32 @@ fn continuous_batching_join_and_retire_preserve_chains() {
 
 #[test]
 fn coordinator_staggered_submissions_decode_correctly() {
-    // End to end through the sharded coordinator: requests submitted in
-    // waves (so later ones join mid-decode) all come back with chains
-    // identical to the solo packed oracle.
+    // End to end through the sharded coordinator — with per-shard paged
+    // BlockPools (sharing on) serving every request cache, exactly the
+    // `halo serve` wiring: requests submitted in waves (so later ones
+    // join mid-decode) all come back with chains identical to the solo
+    // packed oracle, whether their cache was pool-seeded or cold.
     let (spec, pm) = pack_tiny(80, Variant::Bal);
     let pm = Arc::new(pm);
     let pm2 = pm.clone();
-    let coord = Coordinator::start_sharded(
+    let pools: Vec<Arc<BlockPool>> = (0..2)
+        .map(|_| {
+            Arc::new(
+                BlockPool::new(spec.n_layers, spec.d_model, DEFAULT_BLOCK_ROWS, 0)
+                    .with_sharing(64),
+            )
+        })
+        .collect();
+    let pools2 = pools.clone();
+    let coord = Coordinator::start(
         CoordinatorConfig {
             batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(2) },
             shards: 2,
             ..CoordinatorConfig::default()
         },
-        move |_shard| {
-            Ok(Box::new(QuantExecutor::new(pm2.clone(), 4)) as Box<dyn BatchExecutor>)
+        move |shard| {
+            let exec = QuantExecutor::new(pm2.clone(), 4).with_kv_pool(pools2[shard].clone());
+            Ok(Box::new(exec) as Box<dyn BatchExecutor>)
         },
     );
     let mut rng = Rng::seed_from_u64(81);
@@ -314,7 +437,7 @@ fn coordinator_staggered_submissions_decode_correctly() {
             let prefix = random_prefix(&mut rng, spec.vocab, 1 + (wave * 4 + i) % 22);
             let max_new = 1 + (i + wave) % 4;
             want.push(pm.decode_greedy(&prefix, max_new).unwrap());
-            rxs.push(coord.submit_spec(SubmitSpec::generate(prefix, max_new)));
+            rxs.push(coord.submit_or_shed(Request::new(prefix).max_new(max_new)));
         }
         std::thread::sleep(Duration::from_millis(5));
     }
@@ -324,6 +447,15 @@ fn coordinator_staggered_submissions_decode_correctly() {
         assert_eq!(r.tokens, want, "staggered coordinator decode diverged");
     }
     coord.shutdown().unwrap();
+    // Live caches all dropped at retirement: only frozen registry
+    // entries may still hold pool blocks.
+    for pool in &pools {
+        let s = pool.stats();
+        assert!(
+            s.blocks_in_use <= s.registry_entries,
+            "retired requests leaked pool blocks: {s:?}"
+        );
+    }
 }
 
 // --------------------------------------------- work accounting (no padding)

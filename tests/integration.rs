@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 
 use halo::coordinator::server::GraphExecutor;
-use halo::coordinator::{BatcherConfig, Coordinator};
+use halo::coordinator::{Coordinator, CoordinatorConfig, Request};
 use halo::dvfs::Schedule;
 use halo::mac::MacProfile;
 use halo::model::{calibrate_fisher, Evaluator};
@@ -194,9 +194,9 @@ fn codebook_quantizer_consistent_with_kernel_layout() {
 fn coordinator_serves_real_model_end_to_end() {
     let store = need_artifacts!();
     let root = store.root.clone();
-    let coord = Coordinator::start(BatcherConfig::default(), move || {
+    let coord = Coordinator::start(CoordinatorConfig::default(), move |_shard| {
         let rt = Runtime::cpu()?;
-        let store = Store::open(root)?;
+        let store = Store::open(root.clone())?;
         let model = store.model("tiny")?;
         let exec = GraphExecutor::new(rt, &model, &BTreeMap::new(), Schedule::default())?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
@@ -205,7 +205,8 @@ fn coordinator_serves_real_model_end_to_end() {
     let rxs: Vec<_> = (0..20)
         .map(|i| {
             let s = (i * 101) % (stream.len() - 40);
-            coord.submit(stream[s..s + 24].iter().map(|&t| t as i32).collect())
+            let toks: Vec<i32> = stream[s..s + 24].iter().map(|&t| t as i32).collect();
+            coord.submit_or_shed(Request::new(toks))
         })
         .collect();
     for rx in rxs {
@@ -221,7 +222,7 @@ fn sharded_coordinator_decodes_real_model() {
     // PR 3: multi-shard serving with autoregressive decode over real
     // artifacts. Shard executors must agree with a reference single
     // executor's decode chain (the model is deterministic).
-    use halo::coordinator::{BatchExecutor, CoordinatorConfig, SubmitSpec};
+    use halo::coordinator::BatchExecutor;
     use std::sync::Arc;
 
     let store = need_artifacts!();
@@ -229,7 +230,7 @@ fn sharded_coordinator_decodes_real_model() {
     let max_new = 3usize;
 
     let m = model.clone();
-    let coord = Coordinator::start_sharded(CoordinatorConfig::sharded(2), move |_shard| {
+    let coord = Coordinator::start(CoordinatorConfig::sharded(2), move |_shard| {
         let rt = Runtime::cpu()?;
         let exec = GraphExecutor::new(rt, &m, &BTreeMap::new(), Schedule::default())?;
         Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
@@ -244,7 +245,7 @@ fn sharded_coordinator_decodes_real_model() {
         .collect();
     let rxs: Vec<_> = prefixes
         .iter()
-        .map(|p| coord.submit_spec(SubmitSpec::generate(p.clone(), max_new)))
+        .map(|p| coord.submit_or_shed(Request::new(p.clone()).max_new(max_new)))
         .collect();
 
     // Reference decode on a private executor, one sequence at a time (row

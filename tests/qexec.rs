@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use halo::coordinator::{BatcherConfig, Coordinator, QuantExecutor, SubmitSpec};
+use halo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, QuantExecutor, Request};
 use halo::dvfs::Ladder;
 use halo::mac::MacProfile;
 use halo::quant::packed::PackedLayer;
@@ -256,9 +256,15 @@ fn quant_executor_serves_decode_end_to_end() {
 
     let pm2 = pm.clone();
     let coord = Coordinator::start(
-        BatcherConfig { batch_size: 4, timeout: std::time::Duration::from_millis(2) },
-        move || {
-            Ok(Box::new(QuantExecutor::new(pm2, 4))
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                batch_size: 4,
+                timeout: std::time::Duration::from_millis(2),
+            },
+            ..CoordinatorConfig::default()
+        },
+        move |_shard| {
+            Ok(Box::new(QuantExecutor::new(pm2.clone(), 4))
                 as Box<dyn halo::coordinator::BatchExecutor>)
         },
     );
@@ -270,7 +276,7 @@ fn quant_executor_serves_decode_end_to_end() {
         .collect();
     let rxs: Vec<_> = prefixes
         .iter()
-        .map(|p| coord.submit_spec(SubmitSpec::generate(p.clone(), max_new)))
+        .map(|p| coord.submit_or_shed(Request::new(p.clone()).max_new(max_new)))
         .collect();
     for (rx, p) in rxs.into_iter().zip(&prefixes) {
         let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
