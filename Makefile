@@ -4,17 +4,18 @@
 #   make artifacts-fast  tiny-only, few steps (CI smoke / quick iteration)
 #   make test            tier-1 verify: cargo build --release && cargo test -q
 #   make bench           run every harness-free benchmark
-#   make bench-json      JSON benches → BENCH_PR2/PR3/PR4.json (perf trajectory)
+#   make bench-json      JSON benches → BENCH_PR2..PR9.json (perf trajectory)
 #   make docs            rustdoc with -D warnings + build all examples (same as CI)
 #   make fmt             rustfmt check (same as CI)
 #   make lint            halo-lint: panic-safety / sync-shim / retry-bound / unsafe-docs
 #   make loom            exhaustive coordinator model checks (plain + --cfg loom)
 #   make chaos           seeded fault-injection soak (failpoints + shard recovery)
+#   make spec            speculative-decoding exactness suite + the l7 bench smoke
 
 ARTIFACTS ?= artifacts
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt lint loom chaos clean
+.PHONY: artifacts artifacts-fast build test bench bench-json bench-check docs fmt lint loom chaos spec clean
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
@@ -34,6 +35,7 @@ bench:
 	cargo bench --bench l4_quant_exec
 	cargo bench --bench l5_decode
 	cargo bench --bench l6_kvcache
+	cargo bench --bench l7_spec
 	cargo bench --bench fig8_exec_time
 	cargo bench --bench fig10_energy
 	cargo bench --bench fig11_tile_size
@@ -45,14 +47,16 @@ bench:
 # 64-lane vs scalar netlist eval, blocked vs naive matmul, SimBackend
 # forward), sharded serving throughput (1 shard vs N), quantized vs
 # dense execution (packed LUT matmul + fused SpMV vs dequantize-then-dense),
-# KV-cached decode vs full-prefix recompute at S=256, and the paged KV
-# pool's shared-prefix/block-packing memory savings.
+# KV-cached decode vs full-prefix recompute at S=256, the paged KV
+# pool's shared-prefix/block-packing memory savings, and speculative
+# decode vs verifier-only decode (exactness-asserted speedup).
 bench-json:
 	cargo bench --bench l1_hotpaths -- --smoke --json BENCH_PR2.json
 	cargo bench --bench l2_serving -- --smoke --json BENCH_PR3.json
 	cargo bench --bench l4_quant_exec -- --smoke --json BENCH_PR4.json
 	cargo bench --bench l5_decode -- --smoke --json BENCH_PR5.json
 	cargo bench --bench l6_kvcache -- --smoke --json BENCH_PR8.json
+	cargo bench --bench l7_spec -- --smoke --json BENCH_PR9.json
 
 # The CI regression gate, runnable locally: fresh smoke JSONs compared
 # against the committed baselines (ratio keys only, see tools/bench_check.rs).
@@ -80,6 +84,11 @@ bench-check:
 	  --current /tmp/halo_l6_smoke.json --tol 0.3 \
 	  --keys shared_prefix_saving,kv_bytes_per_token_ratio \
 	  --min shared_prefix_saving=1.5
+	cargo bench --bench l7_spec -- --smoke --json /tmp/halo_l7_smoke.json
+	cargo run --release --bin bench_check -- --baseline BENCH_PR9.json \
+	  --current /tmp/halo_l7_smoke.json --tol 0.3 \
+	  --keys spec_decode_speedup,acceptance_rate \
+	  --min spec_decode_speedup=1.2
 
 # Documentation gate: rustdoc is warning-clean (missing_docs + intra-doc
 # links) and every example builds.
@@ -112,6 +121,15 @@ loom:
 # and the metrics conservation law. See DESIGN.md Â§Fault model & recovery.
 chaos:
 	cargo test --release --test chaos -- --nocapture
+
+# Speculative decoding (PR 9): the exactness matrix + sampling/rollback
+# properties that pin `coordinator::spec`, then the l7 bench in smoke
+# mode (which asserts bit-identical chains before timing anything).
+spec:
+	cargo test --release --test decode_equiv speculative -- --nocapture
+	cargo test --release --test proptests prop_seeded_sampling -- --nocapture
+	cargo test --release --test proptests prop_rollback -- --nocapture
+	cargo bench --bench l7_spec -- --smoke
 
 clean:
 	cargo clean

@@ -1,0 +1,221 @@
+//! Bench: speculative decoding on the variant ladder (PR 9).
+//!
+//! Run: `cargo bench --bench l7_spec [-- --smoke] [-- --json FILE]`
+//!
+//! The acceptance workload: one long greedy decode (S=256 tokens, the
+//! PR 5 decode-bench shape) against a packed halo-acc verifier, run two
+//! ways — verifier-only (`PackedModel::decode_greedy`, the solo cached
+//! oracle) and speculatively through `SpecExecutor` with a k=4 drafter.
+//! The speculative chain is asserted BIT-IDENTICAL to the verifier-only
+//! chain before any timing is trusted, so the speedup below can never be
+//! bought with a wrong token.
+//!
+//! Gated ratio keys (see `tools/bench_check.rs` + the bench-smoke CI job):
+//!
+//! - `spec_decode_speedup` — verifier-only wall-clock over speculative
+//!   wall-clock for the **self-pair** (drafter = the verifier's own
+//!   packed layers expanded to dense numerics, so proposals nearly
+//!   always agree and acceptance sits near 1). The win has two factors:
+//!   the drafter runs dense kernels (the PR 4 bench pins packed decode
+//!   at ~0.55x dense throughput, so drafting is cheaper per token than
+//!   verifying) and the verifier amortizes its per-pass LUT panel
+//!   expansion over k+1 positions per round. CI floor: **1.2x**
+//!   (`--min spec_decode_speedup=1.2`, tol 0.3).
+//! - `acceptance_rate` — accepted/drafted for the self-pair. Expansion
+//!   reconstructs the same effective weights the LUT path multiplies, so
+//!   only float summation-order flips can reject a draft; the rate sits
+//!   near 1.0 and is gated at tol 0.3 as a drift alarm.
+//!
+//! A cross-variant pair (halo-perf drafting for halo-acc, the `--spec
+//! drafter=halo-perf` serving default) is measured informationally:
+//! its acceptance — and therefore its speedup — depends on how often two
+//! quantization variants argmax-agree, which is workload physics, not a
+//! regression axis.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use halo::coordinator::{BatchExecutor, SpecExecutor, SpecVerifier};
+use halo::mac::MacProfile;
+use halo::quant::{Matrix, Variant};
+use halo::runtime::sim::ModelSpec;
+use halo::runtime::PackedModel;
+use halo::util::{Json, Rng};
+
+/// Draft depth for every measured pair (the serving default `k=4`).
+const K: usize = 4;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let mut report = Json::obj();
+    report.set("bench", "l7_spec").set("smoke", smoke).set("k", K);
+
+    let s_tokens = if smoke { 48 } else { 256 };
+    let reps = if smoke { 1 } else { 3 };
+    println!("=== speculative decode: S={s_tokens} tokens, k={K}, {reps} reps ===");
+
+    let (speedup, acceptance) = bench_spec(s_tokens, reps, &mut report);
+    println!(
+        "\nsummary: spec_decode_speedup {speedup:.2}x, acceptance_rate {acceptance:.3}"
+    );
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_string_pretty()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}
+
+type ParamList = Vec<(String, Vec<usize>, Vec<f32>)>;
+
+/// Small model whose context holds prefix + the whole decode, so the
+/// window never slides and speculation stays active for all S tokens
+/// (at the cap the headroom clamp turns rounds into plain verifier
+/// steps, which would just dilute the measurement).
+fn bench_model(s_tokens: usize, prefix_len: usize) -> (ModelSpec, ParamList, BTreeMap<String, Matrix>) {
+    let spec = ModelSpec::synthetic(64, 32, 2, 4, 64, prefix_len + s_tokens + 8);
+    let mut rng = Rng::seed_from_u64(0x59EC);
+    let mut params: ParamList = Vec::new();
+    let mut grads = BTreeMap::new();
+    for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".scale") {
+            vec![1.0; numel]
+        } else if name.ends_with(".bias") || name.ends_with(".b1") || name.ends_with(".b2") {
+            vec![0.0; numel]
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            (0..numel).map(|_| rng.gen_normal() as f32 * std).collect()
+        };
+        if spec.linear[i] {
+            let g = Matrix::from_fn(shape[0], shape[1], |r, _| {
+                let base = rng.gen_normal() as f32;
+                if r < shape[0] / 2 {
+                    base * 5.0
+                } else {
+                    base * 0.1
+                }
+            });
+            grads.insert(name.clone(), g);
+        }
+        params.push((name.clone(), shape.clone(), data));
+    }
+    (spec, params, grads)
+}
+
+fn pack(
+    spec: &ModelSpec,
+    params: &ParamList,
+    grads: &BTreeMap<String, Matrix>,
+    variant: Variant,
+) -> Arc<PackedModel> {
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    Arc::new(
+        PackedModel::pack_from(spec.clone(), views, variant, 16, grads, MacProfile::cached())
+            .expect("pack bench model"),
+    )
+}
+
+/// Time one full speculative decode; returns (seconds, chain, stats).
+fn run_spec(
+    drafter: &Arc<PackedModel>,
+    verifier: &Arc<PackedModel>,
+    prefix: &[i32],
+    s_tokens: usize,
+) -> (f64, Vec<i32>, halo::coordinator::SpecDecodeStats) {
+    let mut ex = SpecExecutor::from_packed(
+        drafter,
+        SpecVerifier::Packed(verifier.clone()),
+        K,
+        1,
+    )
+    .expect("pair speculative executor");
+    let t0 = Instant::now();
+    let out = ex.generate(&[prefix.to_vec()], &[s_tokens]).expect("speculative decode");
+    (t0.elapsed().as_secs_f64(), out.into_iter().next().unwrap_or_default(), ex.stats())
+}
+
+fn bench_spec(s_tokens: usize, reps: usize, report: &mut Json) -> (f64, f64) {
+    let prefix_len = 16usize;
+    let (spec, params, grads) = bench_model(s_tokens, prefix_len);
+    let acc = pack(&spec, &params, &grads, Variant::AccOpt);
+    let perf = pack(&spec, &params, &grads, Variant::PerfOpt);
+
+    let mut rng = Rng::seed_from_u64(0x5EED9);
+    let prefix: Vec<i32> = (0..prefix_len).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+
+    // Correctness first: both pairings must emit exactly the verifier's
+    // own greedy chain. Only then do the timings below mean anything.
+    let want = acc.decode_greedy(&prefix, s_tokens).expect("verifier-only oracle");
+    let (_, self_chain, _) = run_spec(&acc, &acc, &prefix, s_tokens);
+    assert_eq!(self_chain, want, "self-pair speculative chain diverged from verifier-only");
+    let (_, cross_chain, _) = run_spec(&perf, &acc, &prefix, s_tokens);
+    assert_eq!(cross_chain, want, "cross-pair speculative chain diverged from verifier-only");
+
+    let (mut t_base, mut t_self, mut t_cross) = (0.0f64, 0.0f64, 0.0f64);
+    let mut self_stats = halo::coordinator::SpecDecodeStats::default();
+    let mut cross_stats = halo::coordinator::SpecDecodeStats::default();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let base = acc.decode_greedy(&prefix, s_tokens).expect("verifier-only decode");
+        t_base += t0.elapsed().as_secs_f64();
+        assert_eq!(base, want);
+
+        let (ts, chain, st) = run_spec(&acc, &acc, &prefix, s_tokens);
+        assert_eq!(chain, want);
+        t_self += ts;
+        self_stats = st;
+
+        let (tc, chain, st) = run_spec(&perf, &acc, &prefix, s_tokens);
+        assert_eq!(chain, want);
+        t_cross += tc;
+        cross_stats = st;
+    }
+
+    let speedup = t_base / t_self.max(1e-12);
+    let acceptance = self_stats.acceptance_rate();
+    let cross_speedup = t_base / t_cross.max(1e-12);
+    let cross_acceptance = cross_stats.acceptance_rate();
+
+    let tok_s = |t: f64| reps as f64 * s_tokens as f64 / t.max(1e-12);
+    println!(
+        "verifier-only (halo-acc packed): {:.0} tok/s over {reps} reps",
+        tok_s(t_base)
+    );
+    println!(
+        "self-pair   acc->acc  k={K}: {:.0} tok/s, accept {acceptance:.3}, \
+         rounds {} ({} drafted / {} verify positions)",
+        tok_s(t_self),
+        self_stats.verify_rounds,
+        self_stats.drafted_tokens,
+        self_stats.verify_positions
+    );
+    println!(
+        "cross-pair perf->acc  k={K}: {:.0} tok/s, accept {cross_acceptance:.3}, \
+         rounds {} (informational)",
+        tok_s(t_cross),
+        cross_stats.verify_rounds
+    );
+
+    report
+        .set("s_tokens", s_tokens)
+        .set("prefix_len", prefix_len)
+        .set("verifier_only_s", t_base)
+        .set("spec_self_s", t_self)
+        .set("spec_cross_s", t_cross)
+        .set("spec_decode_speedup", speedup)
+        .set("acceptance_rate", acceptance)
+        .set("cross_speedup", cross_speedup)
+        .set("cross_acceptance_rate", cross_acceptance)
+        .set("self_verify_rounds", self_stats.verify_rounds as f64)
+        .set("self_draft_positions", self_stats.draft_positions as f64)
+        .set("self_verify_positions", self_stats.verify_positions as f64);
+    (speedup, acceptance)
+}

@@ -56,6 +56,40 @@ impl ShedReason {
     }
 }
 
+/// Monotone speculative-decode counters owned by a shard's
+/// [`SpecExecutor`](super::spec::SpecExecutor) (PR 9). The executor is
+/// the source of truth — the shard loop publishes a snapshot into the
+/// `spec_*` gauges on [`Metrics`] after each decode step via
+/// [`Metrics::store_spec`] (`store`d wholesale, never `fetch_add`ed,
+/// mirroring the [`PoolStats`] pattern).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecDecodeStats {
+    /// Tokens proposed by the drafter (k_eff summed over rounds).
+    pub drafted_tokens: u64,
+    /// Drafted tokens accepted by the verifier (≤ `drafted_tokens`; the
+    /// bonus token emitted after each accepted prefix is not counted
+    /// here, so `accepted / drafted` is the paper's acceptance rate).
+    pub accepted_tokens: u64,
+    /// Positions the drafter evaluated (its own incremental chain:
+    /// catch-up rows + proposal rows).
+    pub draft_positions: u64,
+    /// Positions the verifier scored in batched verify passes.
+    pub verify_positions: u64,
+    /// Verifier passes executed (one per speculative round).
+    pub verify_rounds: u64,
+}
+
+impl SpecDecodeStats {
+    /// Fraction of drafted tokens the verifier accepted (0 when nothing
+    /// was drafted yet).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.drafted_tokens as f64
+    }
+}
+
 /// Live serving counters + latency reservoir for one shard (or the
 /// coordinator's global aggregate).
 #[derive(Debug, Default)]
@@ -118,6 +152,18 @@ pub struct Metrics {
     /// Block acquisitions refused with `PoolExhausted` (surfaces as
     /// brown-out shed backpressure in the coordinator).
     pub kv_pool_refusals: AtomicU64,
+    /// Speculative-decode gauges (PR 9), published by the shard loop from
+    /// [`SpecDecodeStats`] after each decode step via
+    /// [`Metrics::store_spec`]. Zero on non-speculative executors.
+    pub spec_drafted_tokens: AtomicU64,
+    /// Drafted tokens accepted by the verifier.
+    pub spec_accepted_tokens: AtomicU64,
+    /// Positions the drafter evaluated.
+    pub spec_draft_positions: AtomicU64,
+    /// Positions the verifier scored in batched verify passes.
+    pub spec_verify_positions: AtomicU64,
+    /// Verifier passes executed (one per speculative round).
+    pub spec_verify_rounds: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -179,6 +225,17 @@ impl Metrics {
         self.kv_pool_refusals.store(ps.refusals, Ordering::Relaxed);
     }
 
+    /// Publish a shard's speculative-decode stats into the gauges. The
+    /// executor owns the counters, so every field is overwritten
+    /// wholesale (same contract as [`Metrics::store_kv_pool`]).
+    pub fn store_spec(&self, ss: &SpecDecodeStats) {
+        self.spec_drafted_tokens.store(ss.drafted_tokens, Ordering::Relaxed);
+        self.spec_accepted_tokens.store(ss.accepted_tokens, Ordering::Relaxed);
+        self.spec_draft_positions.store(ss.draft_positions, Ordering::Relaxed);
+        self.spec_verify_positions.store(ss.verify_positions, Ordering::Relaxed);
+        self.spec_verify_rounds.store(ss.verify_rounds, Ordering::Relaxed);
+    }
+
     /// Point-in-time copy of everything (percentiles computed over this
     /// view's own latency samples).
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -205,6 +262,13 @@ impl Metrics {
             kv_prefix_lookups: self.kv_prefix_lookups.load(Ordering::Relaxed),
             kv_evictions: self.kv_evictions.load(Ordering::Relaxed),
             kv_pool_refusals: self.kv_pool_refusals.load(Ordering::Relaxed),
+            spec: SpecDecodeStats {
+                drafted_tokens: self.spec_drafted_tokens.load(Ordering::Relaxed),
+                accepted_tokens: self.spec_accepted_tokens.load(Ordering::Relaxed),
+                draft_positions: self.spec_draft_positions.load(Ordering::Relaxed),
+                verify_positions: self.spec_verify_positions.load(Ordering::Relaxed),
+                verify_rounds: self.spec_verify_rounds.load(Ordering::Relaxed),
+            },
             latencies_us: lat,
         }
     }
@@ -236,6 +300,11 @@ impl Metrics {
             out.kv_prefix_lookups += s.kv_prefix_lookups;
             out.kv_evictions += s.kv_evictions;
             out.kv_pool_refusals += s.kv_pool_refusals;
+            out.spec.drafted_tokens += s.spec.drafted_tokens;
+            out.spec.accepted_tokens += s.spec.accepted_tokens;
+            out.spec.draft_positions += s.spec.draft_positions;
+            out.spec.verify_positions += s.spec.verify_positions;
+            out.spec.verify_rounds += s.spec.verify_rounds;
             out.latencies_us.extend_from_slice(&s.latencies_us);
         }
         out.latencies_us.sort_unstable();
@@ -299,6 +368,9 @@ pub struct MetricsSnapshot {
     pub kv_evictions: u64,
     /// Block acquisitions refused with `PoolExhausted`.
     pub kv_pool_refusals: u64,
+    /// Speculative-decode counters (summed across shards when merged;
+    /// all-zero on non-speculative executors).
+    pub spec: SpecDecodeStats,
     /// Sorted ascending.
     pub latencies_us: Vec<u64>,
 }
@@ -350,7 +422,7 @@ impl MetricsSnapshot {
 
     /// One-line human summary (the `halo serve` / `halo loadgen` output).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} responses={} shed={} rejected={} batches={} occupancy={:.2} \
              p50={:?} p95={:?} p99={:?} generated={} dvfs_transitions={} \
              restarts={} retries={} brownout_steps={}",
@@ -368,7 +440,16 @@ impl MetricsSnapshot {
             self.shard_restarts,
             self.retries,
             self.brownout_steps,
-        )
+        );
+        if self.spec.verify_rounds > 0 {
+            s.push_str(&format!(
+                " spec_accept={:.2} spec_drafted={} spec_rounds={}",
+                self.spec.acceptance_rate(),
+                self.spec.drafted_tokens,
+                self.spec.verify_rounds,
+            ));
+        }
+        s
     }
 
     /// JSON object for bench/loadgen reports. `wall` enables tokens/sec
@@ -406,6 +487,14 @@ impl MetricsSnapshot {
             .set("evictions", self.kv_evictions as f64)
             .set("pool_refusals", self.kv_pool_refusals as f64);
         j.set("kv_pool", kv);
+        let mut spec = Json::obj();
+        spec.set("drafted_tokens", self.spec.drafted_tokens as f64)
+            .set("accepted_tokens", self.spec.accepted_tokens as f64)
+            .set("draft_positions", self.spec.draft_positions as f64)
+            .set("verify_positions", self.spec.verify_positions as f64)
+            .set("verify_rounds", self.spec.verify_rounds as f64)
+            .set("acceptance_rate", self.spec.acceptance_rate());
+        j.set("spec", spec);
         if let Some(w) = wall {
             let s = w.as_secs_f64().max(1e-12);
             j.set("wall_s", s)
@@ -524,6 +613,49 @@ mod tests {
         let kv = j.req("kv_pool").unwrap();
         assert_eq!(kv.req("blocks_in_use").unwrap().as_f64().unwrap(), 9.0);
         assert_eq!(kv.req("shared_hits").unwrap().as_f64().unwrap(), 11.0);
+    }
+
+    #[test]
+    fn spec_gauges_store_merge_and_report() {
+        let a = Arc::new(Metrics::default());
+        let b = Arc::new(Metrics::default());
+        a.store_spec(&SpecDecodeStats {
+            drafted_tokens: 10,
+            accepted_tokens: 6,
+            draft_positions: 12,
+            verify_positions: 14,
+            verify_rounds: 3,
+        });
+        // Gauges overwrite wholesale: a second store replaces, not adds.
+        a.store_spec(&SpecDecodeStats {
+            drafted_tokens: 12,
+            accepted_tokens: 9,
+            draft_positions: 15,
+            verify_positions: 18,
+            verify_rounds: 4,
+        });
+        b.store_spec(&SpecDecodeStats {
+            drafted_tokens: 4,
+            accepted_tokens: 3,
+            draft_positions: 5,
+            verify_positions: 6,
+            verify_rounds: 1,
+        });
+        let s = Metrics::merged(&[a, b]);
+        assert_eq!(s.spec.drafted_tokens, 16);
+        assert_eq!(s.spec.accepted_tokens, 12);
+        assert_eq!(s.spec.draft_positions, 20);
+        assert_eq!(s.spec.verify_positions, 24);
+        assert_eq!(s.spec.verify_rounds, 5);
+        assert!((s.spec.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecDecodeStats::default().acceptance_rate(), 0.0);
+        let j = s.to_json(None);
+        let spec = j.req("spec").unwrap();
+        assert_eq!(spec.req("drafted_tokens").unwrap().as_f64().unwrap(), 16.0);
+        assert_eq!(spec.req("acceptance_rate").unwrap().as_f64().unwrap(), 0.75);
+        assert!(s.summary().contains("spec_accept=0.75"));
+        // Non-speculative snapshots keep the summary line unchanged.
+        assert!(!Metrics::default().summary().contains("spec_accept"));
     }
 
     #[test]

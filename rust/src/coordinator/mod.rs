@@ -57,11 +57,13 @@ pub mod loadgen;
 pub mod metrics;
 pub mod queue;
 pub mod server;
+pub mod spec;
 
 pub use batch::{Batcher, BatcherConfig};
 pub use queue::{Pop, PushError, RequestQueue};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
-pub use metrics::{Metrics, MetricsSnapshot, ShedReason};
+pub use metrics::{Metrics, MetricsSnapshot, ShedReason, SpecDecodeStats};
+pub use spec::{SpecConfig, SpecExecutor, SpecVerifier};
 pub use server::{
     BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitError,
     SupervisorConfig,

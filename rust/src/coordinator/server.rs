@@ -72,9 +72,10 @@ use crate::util::sync::{Arc, Mutex};
 use crate::dvfs::Schedule;
 use crate::quant::Matrix;
 use crate::runtime::sim::ModelSpec;
+use super::metrics::SpecDecodeStats;
 use crate::runtime::{
     argmax_slice, literal_i32, BlockPool, Buffer, DecodeState, KvCache, ModelArtifacts,
-    PackedModel, PoolExhausted, PoolStats, Runtime,
+    PackedModel, PoolExhausted, PoolStats, Runtime, Sampler, SamplingParams,
 };
 use crate::util::failpoint::{self, sites};
 use crate::util::{parallel, Rng};
@@ -95,13 +96,14 @@ pub struct Request {
     max_new: usize,
     deadline: Option<Instant>,
     priority: i8,
+    sampling: Option<SamplingParams>,
 }
 
 impl Request {
     /// A request for the classic next-token serving default: decode
-    /// exactly one token, no deadline, priority 0.
+    /// exactly one token, no deadline, priority 0, greedy argmax decode.
     pub fn new(tokens: Vec<i32>) -> Self {
-        Self { tokens, max_new: 1, deadline: None, priority: 0 }
+        Self { tokens, max_new: 1, deadline: None, priority: 0, sampling: None }
     }
 
     /// Decode `n` tokens autoregressively (clamped to ≥ 1).
@@ -127,6 +129,18 @@ impl Request {
     /// negative-priority requests are shed at admission first.
     pub fn priority(mut self, p: i8) -> Self {
         self.priority = p;
+        self
+    }
+
+    /// Seeded sampled decode (PR 9): temperature / top-k over
+    /// f64-softmaxed logits, one RNG draw per emitted token. The default
+    /// (no params) is greedy argmax. A retried request restarts its RNG
+    /// stream from the seed along with its prefix, so sampled chains are
+    /// as reproducible across faults and shard counts as greedy ones.
+    /// Sampling applies on the incremental decode paths; the
+    /// `--no-kv-cache` recompute oracle stays argmax.
+    pub fn sampling(mut self, params: SamplingParams) -> Self {
+        self.sampling = Some(params);
         self
     }
 
@@ -175,6 +189,9 @@ struct QueuedRequest {
     /// Scheduling priority; under brown-out level ≥ 2 negative-priority
     /// requests are shed at admission before anything else.
     priority: i8,
+    /// Seeded sampling params; `None` decodes greedy. Carried through
+    /// re-homing so a retried request replays the same RNG stream.
+    sampling: Option<SamplingParams>,
     /// Times this request has been re-enqueued after a fault (0 = first
     /// execution). Bounded by [`SupervisorConfig::max_request_attempts`].
     attempts: u32,
@@ -227,6 +244,16 @@ pub trait BatchExecutor {
     /// `None` for executors without a pool; the shard loop publishes a
     /// `Some` snapshot into the shard's metrics gauges after every step.
     fn kv_pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
+
+    /// Speculative-decode work counters (monotone totals), when this
+    /// executor runs a drafter/verifier pipeline
+    /// ([`super::spec::SpecExecutor`]). `None` for plain executors; the
+    /// shard loop publishes a `Some` snapshot into the shard's metrics
+    /// gauges after every step (same pattern as
+    /// [`kv_pool_stats`](Self::kv_pool_stats)).
+    fn spec_stats(&self) -> Option<SpecDecodeStats> {
         None
     }
 
@@ -558,7 +585,8 @@ impl BatchExecutor for QuantExecutor {
 
 /// One KV-cached decode step for one request on the packed model:
 /// evaluate the uncached window suffix through
-/// [`PackedModel::forward_incremental`], argmax the last logits row, and
+/// [`PackedModel::forward_incremental`], select from the last logits row
+/// (seeded sampler when the request carries one, argmax otherwise), and
 /// record the token. Empty windows mirror `run()`'s all-padding row
 /// (token 0 at position 0) via a 1-token scratch pass — bit-identical to
 /// the padded batch by row-locality — without touching the request's
@@ -566,7 +594,7 @@ impl BatchExecutor for QuantExecutor {
 fn step_one_packed(model: &PackedModel, s: &mut DecodeState) -> Result<()> {
     let next = if s.window().is_empty() {
         let logits = model.forward(&[0], 1, 1)?;
-        argmax_slice(logits.row(0)) as i32
+        select_token(s, logits.row(0))
     } else {
         let (new, cached) = s.uncached_suffix()?;
         let Some(cache) = s.cache_mut() else {
@@ -574,10 +602,22 @@ fn step_one_packed(model: &PackedModel, s: &mut DecodeState) -> Result<()> {
         };
         let logits = model.forward_incremental(&new, cached, cache)?;
         anyhow::ensure!(logits.cols == model.spec.vocab, "logit row width mismatch");
-        argmax_slice(logits.row(logits.rows - 1)) as i32
+        select_token(s, logits.row(logits.rows - 1))
     };
     s.push_token(next);
     Ok(())
+}
+
+/// Select the next token from one row of logits: the request's seeded
+/// sampler when present ([`Request::sampling`]), argmax otherwise.
+/// Exactly one RNG draw per emitted token when sampling — the invariant
+/// that keeps speculative and verifier-only sampled chains identical
+/// (see `runtime::sample`).
+pub(crate) fn select_token(s: &mut DecodeState, row: &[f32]) -> i32 {
+    match s.sampler_mut() {
+        Some(smp) => smp.select(row) as i32,
+        None => argmax_slice(row) as i32,
+    }
 }
 
 impl BatchExecutor for GraphExecutor {
@@ -662,20 +702,26 @@ impl BatchExecutor for GraphExecutor {
         let (layers, d) = self.kv_dims.unwrap_or((0, 0));
         let params: Vec<&Buffer> = self.params.iter().collect();
         for s in states.iter_mut() {
-            let next = if s.window().is_empty() {
+            let (logits, pos) = if s.window().is_empty() {
                 // Degenerate empty prefix: mirror run()'s all-padding row
                 // (token 0 at position 0) against a scratch cache.
                 let mut scratch = KvCache::new(layers, d);
-                let logits = self.exe.run_decode_step(&params, &[0], 0, &mut scratch)?;
-                logits.argmax_span(0, self.vocab)?
+                (self.exe.run_decode_step(&params, &[0], 0, &mut scratch)?, 0)
             } else {
                 let (new, cached) = s.uncached_suffix()?;
                 let n = new.len();
                 let Some(cache) = s.cache_mut() else {
                     anyhow::bail!("decode state lost its KV cache mid-step");
                 };
-                let logits = self.exe.run_decode_step(&params, &new, cached, cache)?;
-                logits.argmax_span((n - 1) * self.vocab, self.vocab)?
+                (self.exe.run_decode_step(&params, &new, cached, cache)?, n - 1)
+            };
+            let next = if s.sampler_mut().is_some() {
+                let data = logits.as_f32()?;
+                let base = pos * self.vocab;
+                anyhow::ensure!(base + self.vocab <= data.len(), "logit row out of range");
+                select_token(s, &data[base..base + self.vocab])
+            } else {
+                logits.argmax_span(pos * self.vocab, self.vocab)?
             };
             s.push_token(next);
         }
@@ -1020,6 +1066,7 @@ impl Coordinator {
             respond: rtx,
             submitted: Instant::now(),
             priority,
+            sampling: req.sampling,
             attempts: 0,
         };
 
@@ -1381,10 +1428,14 @@ fn run_generation(
                         reason: None,
                     });
                 }
-                Ok(Ok(state)) => {
+                Ok(Ok(mut state)) => {
                     for g in [m, &ctx.global] {
                         g.batch_tokens.fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
                     }
+                    // Attach the request's seeded sampler here (executor-
+                    // agnostic, and re-seeded from scratch on every retry
+                    // so re-homed sampled chains replay bit-identically).
+                    state.set_sampler(req.sampling.map(Sampler::new));
                     live.push(Live { req, state });
                 }
                 Ok(Err(e)) => {
@@ -1445,8 +1496,8 @@ fn run_generation(
         };
         // A "successful" step that generated nothing would spin this
         // loop forever — treat it as an executor fault.
+        let after: usize = live.iter().map(|l| l.state.generated().len()).sum();
         let step_res = step_res.and_then(|()| {
-            let after: usize = live.iter().map(|l| l.state.generated().len()).sum();
             anyhow::ensure!(after > before, "executor step made no decode progress");
             Ok(())
         });
@@ -1480,7 +1531,12 @@ fn run_generation(
             redistribute_with(ctx, m, orphans, exhaust);
             continue;
         }
-        let stepped = live.len() as u64;
+        // Tokens actually emitted this step: a speculative executor can
+        // emit several per request per step, and every one must count.
+        // The schedule-pass counter stays once-per-`step` call — one
+        // verifier pass per step, never per drafted token (PR 9 fix,
+        // pinned next to the PR 5 counter test).
+        let stepped = (after - before) as u64;
         let transitions = exec.dvfs_transitions() as u64;
         for g in [m, &ctx.global] {
             g.batches.fetch_add(1, Ordering::Relaxed);
@@ -1491,6 +1547,10 @@ fn run_generation(
         // while they're fresh — metrics readers see per-step granularity.
         if let Some(ps) = exec.kv_pool_stats() {
             m.store_kv_pool(&ps);
+        }
+        // Same for speculative drafter/verifier work accounting.
+        if let Some(ss) = exec.spec_stats() {
+            m.store_spec(&ss);
         }
 
         // ---- retire finished requests immediately.
@@ -1742,6 +1802,63 @@ mod tests {
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 3);
         assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 6);
+        c.shutdown().unwrap();
+    }
+
+    /// Fake speculative executor: every step emits `burst` tokens per
+    /// live request (Echo's chain rule), the way `SpecExecutor` retires
+    /// several accepted tokens in one verifier pass.
+    struct Burst {
+        cap: usize,
+        burst: usize,
+    }
+
+    impl BatchExecutor for Burst {
+        fn batch_capacity(&self) -> usize {
+            self.cap
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+            Ok(prefixes.iter().map(|p| p.iter().sum::<i32>() % 97).collect())
+        }
+        fn dvfs_transitions(&self) -> usize {
+            2
+        }
+        fn step(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+            for s in states.iter_mut() {
+                let burst = self.burst.min(s.max_new().saturating_sub(s.generated().len())).max(1);
+                for _ in 0..burst {
+                    let t = s.window().iter().sum::<i32>() % 97;
+                    s.push_token(t);
+                }
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn dvfs_transitions_accounted_per_verifier_step_not_per_token() {
+        // PR 9 regression: a speculative step retires several tokens in
+        // ONE schedule pass. The coordinator must count one pass per
+        // executor step (9 tokens / 3 per step → 3 steps → 3×2
+        // transitions) and generated_tokens from the real token delta —
+        // never one pass (or one token) per drafted token.
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                batcher: BatcherConfig { batch_size: 4, timeout: Duration::from_millis(2) },
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            move |_shard| Ok(Box::new(Burst { cap: 4, burst: 3 }) as Box<dyn BatchExecutor>),
+        );
+        let rx = c.submit_or_shed(Request::new(vec![1, 2]).max_new(9));
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.tokens.len(), 9);
+        assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(c.metrics.dvfs_transitions.load(Ordering::Relaxed), 6);
+        assert_eq!(c.metrics.generated_tokens.load(Ordering::Relaxed), 9);
         c.shutdown().unwrap();
     }
 

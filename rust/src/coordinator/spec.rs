@@ -1,0 +1,676 @@
+//! Speculative decoding on the variant ladder (PR 9).
+//!
+//! A cheap **drafter** (an expanded HALO variant) proposes up to `k`
+//! tokens ahead through its own incremental KV-cached chain; the
+//! **verifier** (the served packed variant, or the dense rung of the
+//! ladder) scores the whole proposal in *one* batched
+//! `forward_incremental` pass, accepts the longest agreeing prefix plus
+//! one bonus token, and rolls both block tables back to the accept point
+//! — truncation ([`KvCache::truncate_to`]), never re-prefill.
+//!
+//! **Exactness.** Acceptance compares the verifier's own selections
+//! (seeded sampler or argmax, via the shared
+//! [`select_token`](super::server::select_token)) against the greedy
+//! drafts, so the emitted chain is *bit-identical* to a verifier-only
+//! decode regardless of drafter quality: drafter numerics only move the
+//! acceptance rate, never a token. Two structural invariants carry the
+//! proof (pinned across the whole pairing matrix by
+//! `tests/decode_equiv.rs`):
+//!
+//! - **No slide before verification.** The draft length is clamped to
+//!   the context headroom (`k_eff ≤ seq_len − window`), so every drafted
+//!   row is appended and verified before any window slide can occur; the
+//!   only push that may slide is the final emitted token — exactly the
+//!   push that slides at the same point in a verifier-only chain.
+//! - **Position conservation.** [`KvCache::truncate_to`] rewinds the
+//!   monotone committed-position count by the rejected rows, so the
+//!   surviving rows (and every later append) sit at the same ring
+//!   positions a verifier-only chain would give them.
+//!
+//! **Speedup.** The verifier amortizes its per-pass costs (LUT panel
+//! expansion on packed layers) over `k_eff + 1` emitted tokens, and the
+//! drafter runs variant numerics at dense speed via
+//! [`PackedModel::expand_params`] (native packed decode is slower than
+//! dense wall-clock on this simulator — see `benches/l7_spec.rs`, which
+//! gates `spec_decode_speedup` in CI).
+//!
+//! The executor composes with the whole serving stack: it is a
+//! [`BatchExecutor`], so continuous batching, brown-out, re-homing and
+//! shared-prefix seeding apply unchanged, and the drafter's state rides
+//! the request's [`DecodeState`] aux slot through retire / re-home /
+//! drop (the same RAII path that releases the verifier's blocks).
+
+use std::any::Any;
+
+use anyhow::{Context, Result};
+
+use super::metrics::SpecDecodeStats;
+use super::server::{select_token, BatchExecutor};
+use crate::dvfs::Schedule;
+use crate::quant::{Matrix, Variant};
+use crate::runtime::sim::{self, DenseParams, ModelSpec};
+use crate::runtime::{argmax_slice, BlockPool, DecodeState, KvCache, PackedModel, PoolStats};
+use crate::util::sync::Arc;
+
+/// Parsed `--spec drafter=halo-perf,k=4` serving configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Which HALO variant drafts (expanded to dense numerics at load).
+    pub drafter: Variant,
+    /// Maximum tokens drafted per speculative round (clamped at runtime
+    /// by the context headroom and the request's remaining budget).
+    pub k: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { drafter: Variant::PerfOpt, k: 4 }
+    }
+}
+
+impl SpecConfig {
+    /// Parse a `key=value` list: `drafter=halo-perf,k=4`. Drafter names
+    /// accept an optional `halo-` prefix over [`Variant::parse`]'s
+    /// spellings; omitted keys keep the defaults (`halo-perf`, `k=4`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .with_context(|| format!("--spec expects key=value pairs, got {part:?}"))?;
+            match key.trim() {
+                "drafter" => {
+                    let name = val.trim();
+                    cfg.drafter = Variant::parse(name.strip_prefix("halo-").unwrap_or(name))
+                        .with_context(|| {
+                            format!(
+                                "unknown drafter variant {name:?} \
+                                 (use halo-perf, halo-bal, or halo-acc)"
+                            )
+                        })?;
+                }
+                "k" => {
+                    cfg.k = val
+                        .trim()
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|k| (1..=64).contains(k))
+                        .with_context(|| format!("draft length k must be 1..=64, got {val:?}"))?;
+                }
+                other => anyhow::bail!("unknown --spec key {other:?} (expected drafter or k)"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// The scoring model of a speculative pair: the rung of the ladder whose
+/// chain the pipeline must reproduce bit for bit.
+pub enum SpecVerifier {
+    /// A packed HALO variant, scoring natively on its codebook tiles.
+    Packed(Arc<PackedModel>),
+    /// The dense f32 rung (the strongest verifier on the ladder).
+    Dense {
+        /// Model hyper-parameters (must pair with the drafter's).
+        spec: ModelSpec,
+        /// Owned dense parameter store driving the shared interpreter.
+        params: Arc<DenseParams>,
+    },
+}
+
+impl SpecVerifier {
+    /// The verifier's model hyper-parameters.
+    pub fn spec(&self) -> &ModelSpec {
+        match self {
+            SpecVerifier::Packed(m) => &m.spec,
+            SpecVerifier::Dense { spec, .. } => spec,
+        }
+    }
+
+    fn forward_full(&self, tokens: &[i32], b: usize, s: usize) -> Result<Matrix> {
+        match self {
+            SpecVerifier::Packed(m) => m.forward(tokens, b, s),
+            SpecVerifier::Dense { spec, params } => {
+                sim::forward_logits(spec, params.as_ref(), tokens, b, s)
+            }
+        }
+    }
+
+    fn forward_incremental(
+        &self,
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Matrix> {
+        match self {
+            SpecVerifier::Packed(m) => m.forward_incremental(tokens, pos0, cache),
+            SpecVerifier::Dense { spec, params } => {
+                sim::forward_incremental(spec, params.as_ref(), tokens, pos0, cache, false)
+            }
+        }
+    }
+}
+
+/// Speculative drafter/verifier pipeline as a serving [`BatchExecutor`]:
+/// one [`step`](BatchExecutor::step) runs one speculative round per live
+/// request (draft up to `k`, verify in one batched pass, emit the
+/// accepted prefix + bonus), so a step may retire several tokens while
+/// the coordinator still accounts one schedule pass per step.
+pub struct SpecExecutor {
+    drafter_spec: ModelSpec,
+    drafter: Arc<DenseParams>,
+    verifier: SpecVerifier,
+    k: usize,
+    batch: usize,
+    schedule: Option<Schedule>,
+    verifier_pool: Option<Arc<BlockPool>>,
+    drafter_pool: Option<Arc<BlockPool>>,
+    stats: SpecDecodeStats,
+}
+
+impl SpecExecutor {
+    /// Pair an (already expanded) drafter with a verifier. The two must
+    /// agree on vocabulary and context window — the drafter proposes
+    /// token ids the verifier scores, over the same window trajectory.
+    pub fn new(
+        drafter_spec: ModelSpec,
+        drafter: Arc<DenseParams>,
+        verifier: SpecVerifier,
+        k: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let vs = verifier.spec();
+        anyhow::ensure!(
+            drafter_spec.vocab == vs.vocab && drafter_spec.seq_len == vs.seq_len,
+            "drafter (vocab {}, seq {}) does not pair with the verifier (vocab {}, seq {})",
+            drafter_spec.vocab,
+            drafter_spec.seq_len,
+            vs.vocab,
+            vs.seq_len
+        );
+        anyhow::ensure!(k >= 1, "draft length k must be ≥ 1");
+        let schedule = match &verifier {
+            SpecVerifier::Packed(m) => Some(m.schedule.clone()),
+            SpecVerifier::Dense { .. } => None,
+        };
+        Ok(Self {
+            drafter_spec,
+            drafter,
+            verifier,
+            k,
+            batch: batch.max(1),
+            schedule,
+            verifier_pool: None,
+            drafter_pool: None,
+            stats: SpecDecodeStats::default(),
+        })
+    }
+
+    /// Pair a packed drafter variant with a verifier, expanding the
+    /// drafter's packed layers to dense numerics once at load
+    /// ([`PackedModel::expand_params`]) so drafting runs at dense speed
+    /// while proposing exactly the variant's tokens.
+    pub fn from_packed(
+        drafter: &PackedModel,
+        verifier: SpecVerifier,
+        k: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let params = drafter.expand_params()?;
+        Self::new(drafter.spec.clone(), Arc::new(params), verifier, k, batch)
+    }
+
+    /// Account DVFS transitions against an explicit schedule slice (one
+    /// shard of `Schedule::shard`), instead of the packed verifier's
+    /// whole-model schedule (dense verifiers default to none).
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Serve the verifier's and drafter's per-request caches from shared
+    /// paged pools. Two pools, not one: each side's shared-prefix
+    /// registry must only ever seed caches with its *own* K/V numerics.
+    pub fn with_kv_pools(mut self, verifier: Arc<BlockPool>, drafter: Arc<BlockPool>) -> Self {
+        self.verifier_pool = Some(verifier);
+        self.drafter_pool = Some(drafter);
+        self
+    }
+
+    /// Monotone work counters for this executor's lifetime (the shard
+    /// loop publishes them into the metrics gauges after every step).
+    pub fn stats(&self) -> SpecDecodeStats {
+        self.stats
+    }
+
+    fn seq_cap(&self) -> usize {
+        self.verifier.spec().seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.verifier.spec().vocab
+    }
+
+    /// Detach the drafter's companion state from the request, or build a
+    /// fresh one (first step after a fallback path, or a desynced
+    /// drafter — the drafter is an accelerator, so any doubt about its
+    /// window means rebuild-and-reprefill, never a wrong proposal
+    /// surviving into the verify pass with a corrupt cache).
+    fn take_draft(&self, s: &mut DecodeState) -> DecodeState {
+        if let Some(aux) = s.take_aux() {
+            if let Ok(d) = aux.downcast::<DecodeState>() {
+                if d.window() == s.window() {
+                    return *d;
+                }
+            }
+        }
+        let cache = match &self.drafter_pool {
+            Some(pool) => pool.new_cache(s.window()),
+            None => KvCache::new(self.drafter_spec.n_layers, self.drafter_spec.d_model),
+        };
+        DecodeState::with_cache(s.window(), s.max_new(), self.seq_cap(), cache)
+    }
+
+    /// One speculative round for one request; the drafter state is
+    /// detached first so the borrows stay disjoint, and re-parked on the
+    /// aux slot even when the round errors (its blocks release through
+    /// the request's own retire/drop path either way).
+    fn step_one(&mut self, s: &mut DecodeState) -> Result<()> {
+        let mut draft = self.take_draft(s);
+        let out = self.speculate(s, &mut draft);
+        s.set_aux(Box::new(draft) as Box<dyn Any + Send>);
+        out
+    }
+
+    fn speculate(&mut self, s: &mut DecodeState, d: &mut DecodeState) -> Result<()> {
+        let remaining = s.max_new().saturating_sub(s.generated().len());
+        if remaining == 0 {
+            return Ok(());
+        }
+        let cap = self.seq_cap();
+
+        // Degenerate empty window: mirror the plain executors'
+        // all-padding row (token 0 at position 0) without touching any
+        // cache.
+        if s.window().is_empty() {
+            let logits = self.verifier.forward_full(&[0], 1, 1)?;
+            self.stats.verify_rounds += 1;
+            self.stats.verify_positions += 1;
+            anyhow::ensure!(logits.cols == self.vocab(), "logit row width mismatch");
+            let t = select_token(s, logits.row(0));
+            s.push_token(t);
+            d.push_token(t);
+            return Ok(());
+        }
+
+        // Re-open a fully-caught-up verifier cache (nothing uncached to
+        // anchor the verify pass on): re-evaluate the newest window
+        // token. Defensive — every normal round leaves the last emitted
+        // token uncached.
+        if s.cached_rows() >= s.window().len() {
+            let w = s.window().len();
+            match s.cache_mut() {
+                Some(c) => c.truncate_to(w - 1)?,
+                None => anyhow::bail!("speculative state lost its KV cache mid-step"),
+            }
+        }
+        let (new, cached) = s.uncached_suffix()?;
+        let u = new.len();
+
+        // Draft budget: stay inside the context headroom so no slide can
+        // happen before every drafted row is verified (the exactness
+        // invariant — see the module docs), and never draft past the
+        // request's remaining decode budget.
+        let w_len = cached + u;
+        let k_eff = self.k.min(cap - w_len).min(remaining.saturating_sub(1));
+
+        // Drafter proposals: greedy argmax on the drafter's own
+        // incremental chain. The drafter never touches the request's
+        // sampler RNG, so sampled chains draw the same stream as a
+        // verifier-only decode.
+        let mut drafts: Vec<i32> = Vec::with_capacity(k_eff);
+        if k_eff > 0 {
+            if d.cached_rows() >= d.window().len() {
+                let w = d.window().len();
+                match d.cache_mut() {
+                    Some(c) => c.truncate_to(w - 1)?,
+                    None => anyhow::bail!("drafter state lost its KV cache mid-step"),
+                }
+            }
+            for _ in 0..k_eff {
+                // First iteration catches up everything the drafter has
+                // not seen yet (previously emitted tokens); later ones
+                // evaluate exactly the proposal just pushed.
+                let (dnew, dcached) = d.uncached_suffix()?;
+                anyhow::ensure!(!dnew.is_empty(), "drafter chain has nothing to evaluate");
+                let Some(dcache) = d.cache_mut() else {
+                    anyhow::bail!("drafter state lost its KV cache mid-step");
+                };
+                let logits = sim::forward_incremental(
+                    &self.drafter_spec,
+                    self.drafter.as_ref(),
+                    &dnew,
+                    dcached,
+                    dcache,
+                    false,
+                )?;
+                self.stats.draft_positions += dnew.len() as u64;
+                let g = argmax_slice(logits.row(dnew.len() - 1)) as i32;
+                drafts.push(g);
+                d.push_token(g);
+            }
+        }
+
+        // One batched verifier pass over the uncached suffix + every
+        // draft: u + k_eff rows, of which the last k_eff + 1 logits rows
+        // score the emitted positions.
+        let mut vtokens = new;
+        vtokens.extend_from_slice(&drafts);
+        let n_rows = vtokens.len();
+        let logits = {
+            let Some(cache) = s.cache_mut() else {
+                anyhow::bail!("speculative state lost its KV cache mid-step");
+            };
+            self.verifier.forward_incremental(&vtokens, cached, cache)?
+        };
+        self.stats.verify_rounds += 1;
+        self.stats.verify_positions += n_rows as u64;
+        self.stats.drafted_tokens += k_eff as u64;
+        anyhow::ensure!(logits.cols == self.vocab(), "logit row width mismatch");
+        anyhow::ensure!(logits.rows == n_rows, "verifier returned {} rows for {n_rows}", logits.rows);
+
+        // Longest agreeing prefix + one bonus token. Each emitted token
+        // is selected exactly as a verifier-only chain would select it
+        // (same logits row, same single RNG draw when sampling).
+        let mut emitted: Vec<i32> = Vec::new();
+        let mut keep = 0usize;
+        for i in 0..=k_eff {
+            let t = select_token(s, logits.row(u - 1 + i));
+            emitted.push(t);
+            let accepted = drafts.get(i) == Some(&t);
+            if accepted {
+                keep += 1;
+            }
+            if !accepted || emitted.len() >= remaining {
+                break;
+            }
+        }
+        self.stats.accepted_tokens += keep as u64;
+
+        // Roll the verifier's block table back to the accept point
+        // (truncate, never re-prefill), drop the drafter's rejected
+        // proposals, then record the emitted tokens on both chains (the
+        // drafter already holds its accepted proposals).
+        match s.cache_mut() {
+            Some(c) => c.truncate_to(w_len + keep)?,
+            None => anyhow::bail!("speculative state lost its KV cache mid-step"),
+        }
+        d.rollback(k_eff - keep)?;
+        for (i, &t) in emitted.iter().enumerate() {
+            s.push_token(t);
+            if i >= keep {
+                d.push_token(t);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl BatchExecutor for SpecExecutor {
+    fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_cap()
+    }
+
+    /// Verifier-only full-prefix recompute — the equivalence oracle the
+    /// speculative chain must match (same contract as `QuantExecutor`).
+    fn run(&mut self, prefixes: &[Vec<i32>]) -> Result<Vec<i32>> {
+        anyhow::ensure!(prefixes.len() <= self.batch, "over-full batch");
+        anyhow::ensure!(!prefixes.is_empty(), "empty batch");
+        let b = prefixes.len();
+        let cap = self.seq_cap();
+        let s = prefixes.iter().map(|p| p.len().min(cap)).max().unwrap_or(1).max(1);
+        let mut tokens = vec![0i32; b * s];
+        for (i, p) in prefixes.iter().enumerate() {
+            let n = p.len().min(s);
+            tokens[i * s..i * s + n].copy_from_slice(&p[p.len() - n..]);
+        }
+        let logits = self.verifier.forward_full(&tokens, b, s)?;
+        let vocab = self.vocab();
+        prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let pos = p.len().clamp(1, s) - 1;
+                let row = logits.row(i * s + pos);
+                anyhow::ensure!(row.len() == vocab, "logit row width mismatch");
+                Ok(argmax_slice(row) as i32)
+            })
+            .collect()
+    }
+
+    fn dvfs_transitions(&self) -> usize {
+        self.schedule.as_ref().map_or(0, Schedule::transitions)
+    }
+
+    fn kv_pool_stats(&self) -> Option<PoolStats> {
+        self.verifier_pool.as_ref().map(|p| p.stats())
+    }
+
+    fn spec_stats(&self) -> Option<SpecDecodeStats> {
+        Some(self.stats)
+    }
+
+    /// Verifier cache (pool-seeded when pooled) on the request's state;
+    /// the drafter's own cache + window chain parks on the aux slot, so
+    /// re-homing rebuilds both from the original prefix (bit-identical
+    /// restart) and retiring releases both block chains.
+    fn begin(&mut self, prefix: &[i32], max_new: usize) -> Result<DecodeState> {
+        let cap = self.seq_cap();
+        let tail = &prefix[prefix.len().saturating_sub(cap)..];
+        let vs = self.verifier.spec();
+        let vcache = match &self.verifier_pool {
+            Some(pool) => pool.new_cache(tail),
+            None => KvCache::new(vs.n_layers, vs.d_model),
+        };
+        let mut state = DecodeState::with_cache(prefix, max_new, cap, vcache);
+        let dcache = match &self.drafter_pool {
+            Some(pool) => pool.new_cache(tail),
+            None => KvCache::new(self.drafter_spec.n_layers, self.drafter_spec.d_model),
+        };
+        let draft = DecodeState::with_cache(prefix, max_new, cap, dcache);
+        state.set_aux(Box::new(draft) as Box<dyn Any + Send>);
+        Ok(state)
+    }
+
+    /// One speculative round per live request, serially — each round is
+    /// itself a batched verifier pass, so the win comes from depth, not
+    /// from fanning rounds out.
+    fn step(&mut self, states: &mut [&mut DecodeState]) -> Result<()> {
+        if states.iter().any(|s| !s.has_cache()) {
+            return self.step_recompute(states);
+        }
+        for s in states.iter_mut() {
+            self.step_one(s)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Sampler, SamplingParams};
+    use crate::util::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec::synthetic(13, 8, 2, 2, 16, 24)
+    }
+
+    fn dense_model(spec: &ModelSpec, seed: u64) -> DenseParams {
+        let mut rng = Rng::seed_from_u64(seed);
+        let owned: Vec<(String, Vec<usize>, Vec<f32>)> = spec
+            .names
+            .iter()
+            .zip(&spec.shapes)
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if name.ends_with(".scale") || name == "ln_f.scale" {
+                    vec![1.0; n]
+                } else {
+                    let s = 1.0 / (shape[0] as f32).sqrt();
+                    (0..n).map(|_| rng.gen_normal() as f32 * s).collect()
+                };
+                (name.clone(), shape.clone(), data)
+            })
+            .collect();
+        DenseParams::from_params(
+            spec,
+            owned.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+        )
+        .unwrap()
+    }
+
+    /// Verifier-only incremental chain: the oracle every speculative
+    /// configuration must reproduce bit for bit.
+    fn verifier_only(spec: &ModelSpec, p: &DenseParams, prefix: &[i32], max_new: usize) -> Vec<i32> {
+        let mut s = DecodeState::with_cache(
+            prefix,
+            max_new,
+            spec.seq_len,
+            KvCache::new(spec.n_layers, spec.d_model),
+        );
+        while !s.done() {
+            let (new, cached) = s.uncached_suffix().unwrap();
+            let logits =
+                sim::forward_incremental(spec, p, &new, cached, s.cache_mut().unwrap(), false)
+                    .unwrap();
+            let t = select_token(&mut s, logits.row(new.len() - 1));
+            s.push_token(t);
+        }
+        s.into_generated()
+    }
+
+    fn spec_exec(drafter_seed: u64, verifier_seed: u64, k: usize) -> (ModelSpec, DenseParams, SpecExecutor) {
+        let spec = tiny_spec();
+        let verifier = dense_model(&spec, verifier_seed);
+        let drafter = dense_model(&spec, drafter_seed);
+        let oracle = dense_model(&spec, verifier_seed);
+        let ex = SpecExecutor::new(
+            spec.clone(),
+            Arc::new(drafter),
+            SpecVerifier::Dense { spec: spec.clone(), params: Arc::new(verifier) },
+            k,
+            4,
+        )
+        .unwrap();
+        (spec, oracle, ex)
+    }
+
+    #[test]
+    fn parse_accepts_ladder_names_and_rejects_junk() {
+        assert_eq!(SpecConfig::parse("").unwrap(), SpecConfig::default());
+        let c = SpecConfig::parse("drafter=halo-bal,k=8").unwrap();
+        assert_eq!(c.drafter, Variant::Bal);
+        assert_eq!(c.k, 8);
+        assert_eq!(SpecConfig::parse("drafter=acc").unwrap().drafter, Variant::AccOpt);
+        assert_eq!(SpecConfig::parse("k=1").unwrap().k, 1);
+        assert!(SpecConfig::parse("drafter=dense").is_err(), "dense cannot draft for itself");
+        assert!(SpecConfig::parse("k=0").is_err());
+        assert!(SpecConfig::parse("k=65").is_err());
+        assert!(SpecConfig::parse("k=four").is_err());
+        assert!(SpecConfig::parse("draft=halo-perf").is_err());
+        assert!(SpecConfig::parse("halo-perf").is_err(), "missing key=value shape");
+    }
+
+    #[test]
+    fn self_drafting_accepts_everything_and_matches_the_oracle() {
+        // Drafter == verifier numerics: every greedy draft agrees, so
+        // acceptance is exactly 1 and each round retires k_eff + 1 tokens.
+        let (spec, oracle, mut ex) = spec_exec(11, 11, 4);
+        let prefix = vec![3, 1, 4, 1, 5];
+        let out = ex.generate(&[prefix.clone()], &[12]).unwrap();
+        assert_eq!(out[0], verifier_only(&spec, &oracle, &prefix, 12));
+        let st = ex.stats();
+        assert!(st.drafted_tokens > 0);
+        assert_eq!(st.accepted_tokens, st.drafted_tokens, "identical pair must accept all");
+        assert!(
+            st.verify_rounds < 12,
+            "{} rounds for 12 tokens is no speculation at all",
+            st.verify_rounds
+        );
+    }
+
+    #[test]
+    fn weak_drafter_changes_rounds_not_tokens() {
+        // A drafter with different numerics may be rejected at any
+        // position — the emitted chain must not move by a single bit.
+        let (spec, oracle, mut ex) = spec_exec(99, 11, 4);
+        let prefix = vec![7, 2, 9];
+        let out = ex.generate(&[prefix.clone()], &[16]).unwrap();
+        assert_eq!(out[0], verifier_only(&spec, &oracle, &prefix, 16));
+        let st = ex.stats();
+        assert!(st.accepted_tokens <= st.drafted_tokens);
+        assert!(st.verify_rounds >= 1);
+    }
+
+    #[test]
+    fn chains_that_slide_the_window_stay_exact() {
+        // prefix + max_new well past seq_len = 24: rollbacks interleave
+        // with context slides (the headroom clamp shrinks k_eff to 0 at
+        // the cap) and the chain still matches verifier-only decode.
+        let (spec, oracle, mut ex) = spec_exec(11, 11, 16);
+        let prefix: Vec<i32> = (0..20).map(|i| (i * 5) % 13).collect();
+        let out = ex.generate(&[prefix.clone()], &[24]).unwrap();
+        assert_eq!(out[0], verifier_only(&spec, &oracle, &prefix, 24));
+    }
+
+    #[test]
+    fn sampled_speculation_draws_the_verifier_only_stream() {
+        let (spec, oracle, mut ex) = spec_exec(11, 11, 4);
+        let prefix = vec![1, 2, 3];
+        let params = SamplingParams::new(0xC0FFEE).temperature(0.8).top_k(6);
+        let mut st = ex.begin(&prefix, 10).unwrap();
+        st.set_sampler(Some(Sampler::new(params)));
+        while !st.done() {
+            let mut act = vec![&mut st];
+            ex.step(&mut act).unwrap();
+        }
+        // Oracle: verifier-only chain drawing from the same seeded stream.
+        let mut o = DecodeState::with_cache(
+            &prefix,
+            10,
+            spec.seq_len,
+            KvCache::new(spec.n_layers, spec.d_model),
+        );
+        o.set_sampler(Some(Sampler::new(params)));
+        while !o.done() {
+            let (new, cached) = o.uncached_suffix().unwrap();
+            let logits =
+                sim::forward_incremental(&spec, &oracle, &new, cached, o.cache_mut().unwrap(), false)
+                    .unwrap();
+            let t = select_token(&mut o, logits.row(new.len() - 1));
+            o.push_token(t);
+        }
+        assert_eq!(st.into_generated(), o.into_generated());
+    }
+
+    #[test]
+    fn mismatched_pairing_is_refused() {
+        let spec = tiny_spec();
+        let other = ModelSpec::synthetic(17, 8, 2, 2, 16, 24); // different vocab
+        let drafter = dense_model(&other, 1);
+        let verifier = dense_model(&spec, 2);
+        assert!(SpecExecutor::new(
+            other,
+            Arc::new(drafter),
+            SpecVerifier::Dense { spec: spec.clone(), params: Arc::new(verifier) },
+            4,
+            2,
+        )
+        .is_err());
+    }
+}

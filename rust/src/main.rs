@@ -48,7 +48,8 @@ COMMANDS
         per-request KV cache; --no-kv-cache falls back to full-prefix
         recompute (the equivalence oracle) for debugging.
   loadgen [--shards N] [--rps R] [--requests M] [--json FILE]
-          [--quant Q --model M] [--chaos-seed S [--kill-prob P]]
+          [--quant Q --model M [--spec CFG]]
+          [--chaos-seed S [--kill-prob P]]
         Paced serving load. Default: deterministic synthetic executor,
         no artifacts needed. With --quant: drives the packed quantized
         model from the artifact store instead (KV-cached continuous
@@ -78,8 +79,19 @@ SERVING OPTIONS (serve / loadgen)
   --seed S            loadgen RNG seed (default 0x10AD)
   --json FILE         loadgen: write the full JSON report to FILE
   --tile T            quantization tile size under --quant (default 128)
+  --spec CFG          speculative decoding on the variant ladder, e.g.
+                      --spec drafter=halo-perf,k=4 (requires --quant):
+                      the drafter variant proposes up to k tokens per
+                      round through its own KV chain (packed layers
+                      expanded to dense numerics at load), the served
+                      packed variant verifies them in one batched pass
+                      and rolls its block table back to the accept
+                      point. Emitted chains are bit-identical to
+                      verifier-only decode; the report adds the
+                      acceptance rate and drafter/verifier work split
   --no-kv-cache       decode by full-prefix recompute instead of the
-                      per-request KV cache (debugging oracle)
+                      per-request KV cache (debugging oracle;
+                      incompatible with --spec)
   --kv-block-size B   rows per paged KV block (default 16); per-request
                       caches are carved from a per-shard block pool with
                       shared-prefix reuse across requests
@@ -316,6 +328,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tile = args.usize_or("tile", 128)?;
     let quant = parse_quant_variant(args.str_or("quant", "none"))?;
     let use_kv = !args.has("no-kv-cache");
+    let spec_cfg = match args.get("spec") {
+        Some(s) => Some(halo::coordinator::SpecConfig::parse(s)?),
+        None => None,
+    };
+    anyhow::ensure!(
+        spec_cfg.is_none() || quant.is_some(),
+        "--spec requires a packed verifier: pass --quant perf|bal|acc"
+    );
+    anyhow::ensure!(
+        spec_cfg.is_none() || use_kv,
+        "--spec decodes through KV caches; drop --no-kv-cache"
+    );
 
     // Calibrate + quantize once on the main thread, then share the result
     // across the shard factories.
@@ -353,17 +377,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let pm = Arc::new(packed);
         let ss = Arc::new(pm.schedule.shard(n_shards));
         let pools = make_kv_pools(args, n_shards, pm.spec.n_layers, pm.spec.d_model)?;
-        Coordinator::start(cfg, move |shard| {
-            let mut exec =
-                QuantExecutor::with_schedule(pm.clone(), eval_batch, ss[shard].clone())
-                    .with_kv_cache(use_kv);
-            if use_kv {
-                if let Some(pool) = pools.get(shard) {
-                    exec = exec.with_kv_pool(pool.clone());
+        if let Some(sc) = spec_cfg {
+            // Speculative serving: pack the drafter variant once, expand it
+            // to dense numerics (packed decode is slower per token than the
+            // dense kernels, so an expanded drafter is what actually buys
+            // wall-clock), and hand every shard the shared params. The
+            // served packed variant stays the verifier, so emitted chains
+            // are bit-identical to plain `--quant` serving.
+            use halo::coordinator::{SpecExecutor, SpecVerifier};
+            let drafter_packed =
+                PackedModel::pack_artifacts(&model, sc.drafter, tile, &grads, profile)?;
+            let drafter_spec = drafter_packed.spec.clone();
+            let drafter = Arc::new(drafter_packed.expand_params()?);
+            let dpools =
+                make_kv_pools(args, n_shards, drafter_spec.n_layers, drafter_spec.d_model)?;
+            eprintln!(
+                "[serve] speculative: drafter=halo-{} (expanded dense), k={}",
+                sc.drafter.name(),
+                sc.k
+            );
+            Coordinator::start(cfg, move |shard| {
+                let mut exec = SpecExecutor::new(
+                    drafter_spec.clone(),
+                    drafter.clone(),
+                    SpecVerifier::Packed(pm.clone()),
+                    sc.k,
+                    eval_batch,
+                )?
+                .with_schedule(ss[shard].clone());
+                if let (Some(vp), Some(dp)) = (pools.get(shard), dpools.get(shard)) {
+                    exec = exec.with_kv_pools(vp.clone(), dp.clone());
                 }
-            }
-            Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
-        })
+                Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+            })
+        } else {
+            Coordinator::start(cfg, move |shard| {
+                let mut exec =
+                    QuantExecutor::with_schedule(pm.clone(), eval_batch, ss[shard].clone())
+                        .with_kv_cache(use_kv);
+                if use_kv {
+                    if let Some(pool) = pools.get(shard) {
+                        exec = exec.with_kv_pool(pool.clone());
+                    }
+                }
+                Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+            })
+        }
     } else {
         // Dense path: quantize, dequantize back to f32, substitute into
         // the lowered fwd graph (HALO-bal, the paper's deployment).
@@ -474,6 +533,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let quant = parse_quant_variant(args.str_or("quant", "none"))?;
+    let spec_cfg = match args.get("spec") {
+        Some(s) => Some(halo::coordinator::SpecConfig::parse(s)?),
+        None => None,
+    };
+    anyhow::ensure!(
+        spec_cfg.is_none() || quant.is_some(),
+        "--spec requires a packed verifier: pass --quant perf|bal|acc"
+    );
+    anyhow::ensure!(
+        spec_cfg.is_none() || !args.has("no-kv-cache"),
+        "--spec decodes through KV caches; drop --no-kv-cache"
+    );
     let cfg = LoadgenConfig {
         shards: args.usize_or("shards", 4)?.max(1),
         batch_size: args.usize_or("batch", 8)?.max(1),
@@ -567,16 +638,53 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             }
         };
         let pools = make_kv_pools(args, cfg.shards, pm.spec.n_layers, pm.spec.d_model)?;
-        loadgen::run_with(&cfg, vocab, &verify, move |shard| {
-            let mut exec = QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone())
-                .with_kv_cache(use_kv);
-            if use_kv {
-                if let Some(pool) = pools.get(shard) {
-                    exec = exec.with_kv_pool(pool.clone());
+        if let Some(sc) = spec_cfg {
+            // Speculative loadgen: same verifier-side oracle as above — the
+            // exactness contract means spec-decoded chains must still match
+            // `decode_greedy` bit for bit, so `verify` needs no changes.
+            use halo::coordinator::{SpecExecutor, SpecVerifier};
+            let drafter_packed = PackedModel::pack_artifacts(
+                &model,
+                sc.drafter,
+                tile,
+                &grads,
+                MacProfile::cached(),
+            )?;
+            let drafter_spec = drafter_packed.spec.clone();
+            let drafter = Arc::new(drafter_packed.expand_params()?);
+            let dpools =
+                make_kv_pools(args, cfg.shards, drafter_spec.n_layers, drafter_spec.d_model)?;
+            eprintln!(
+                "[loadgen] speculative: drafter=halo-{} (expanded dense), k={}",
+                sc.drafter.name(),
+                sc.k
+            );
+            loadgen::run_with(&cfg, vocab, &verify, move |shard| {
+                let mut exec = SpecExecutor::new(
+                    drafter_spec.clone(),
+                    drafter.clone(),
+                    SpecVerifier::Packed(pm.clone()),
+                    sc.k,
+                    batch,
+                )?
+                .with_schedule(ss[shard].clone());
+                if let (Some(vp), Some(dp)) = (pools.get(shard), dpools.get(shard)) {
+                    exec = exec.with_kv_pools(vp.clone(), dp.clone());
                 }
-            }
-            Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
-        })?
+                Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+            })?
+        } else {
+            loadgen::run_with(&cfg, vocab, &verify, move |shard| {
+                let mut exec = QuantExecutor::with_schedule(pm.clone(), batch, ss[shard].clone())
+                    .with_kv_cache(use_kv);
+                if use_kv {
+                    if let Some(pool) = pools.get(shard) {
+                        exec = exec.with_kv_pool(pool.clone());
+                    }
+                }
+                Ok(Box::new(exec) as Box<dyn halo::coordinator::BatchExecutor>)
+            })?
+        }
     } else {
         loadgen::run(&cfg)?
     };

@@ -48,11 +48,13 @@
 //! owns storage, pooling, sharing, and the per-request decode
 //! bookkeeping the coordinator's continuous-batching loop steps.
 
+use std::any::Any;
 use std::fmt;
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::sample::Sampler;
 use crate::quant::Matrix;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::Mutex;
@@ -683,6 +685,60 @@ impl KvCache {
         }
     }
 
+    /// Speculative rollback: drop every committed position past
+    /// `new_len`, releasing now-unreferenced tail blocks back to the
+    /// pool — truncate, don't re-prefill. `positions_seen` rewinds with
+    /// the dropped rows so the ring positions of re-appended tokens are
+    /// bit-identical to a chain that never speculated past the accept
+    /// point.
+    ///
+    /// If the new tail block was frozen for prefix sharing while the
+    /// rejected rows were still committed (a batched verify pass can
+    /// fill and publish a block that the rollback then re-opens), the
+    /// kept rows are copied out of the frozen block into a fresh owned
+    /// block (copy-on-write fork, mirroring `BlockPool::new_cache`'s
+    /// partial-tail handling) so subsequent appends stay legal. That
+    /// fork is the only path that can fail, with the pool's typed
+    /// [`PoolExhausted`] backpressure.
+    pub fn truncate_to(&mut self, new_len: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.is_consistent(),
+            "KV truncate of a cache with staged rows: {:?}",
+            self.layer_rows
+        );
+        anyhow::ensure!(
+            new_len <= self.len,
+            "KV truncate to {new_len} of a {}-position cache",
+            self.len
+        );
+        let dropped = self.len - new_len;
+        if dropped == 0 {
+            return Ok(());
+        }
+        self.len = new_len;
+        self.positions_seen -= dropped;
+        self.shared_rows = self.shared_rows.min(new_len);
+        if self.share_eligible {
+            self.token_history.truncate(new_len);
+        }
+        // Release tail blocks past the last live row. Shared tails stay
+        // registered in the pool; dropping our reference is enough.
+        let bs = self.pool.block_rows;
+        let live_rows = self.start + self.len;
+        let need = live_rows.div_ceil(bs);
+        self.blocks.truncate(need);
+        // Re-open a partially live frozen tail so appends can land in it.
+        if live_rows % bs != 0 && need > 0 {
+            if let BlockRef::Shared(arc) = &self.blocks[need - 1] {
+                let mut owned = self.pool.acquire_block()?;
+                owned.k.copy_from_slice(&arc.k);
+                owned.v.copy_from_slice(&arc.v);
+                self.blocks[need - 1] = BlockRef::Owned(owned);
+            }
+        }
+        Ok(())
+    }
+
     /// Invalidate every cached position, releasing all blocks back to
     /// the pool. Used after failed steps (partial appends) and by retry
     /// restarts; a cleared cache behaves exactly like a fresh one
@@ -709,13 +765,34 @@ impl KvCache {
 /// The coordinator's continuous-batching loop owns a *set* of these,
 /// admitting new states mid-flight and retiring finished ones; an
 /// executor's `step` advances each active state by exactly one token.
-#[derive(Debug)]
 pub struct DecodeState {
     window: Vec<i32>,
     generated: Vec<i32>,
     max_new: usize,
     seq_cap: usize,
     cache: Option<KvCache>,
+    /// Seeded sampler when the request asked for sampled decode; `None`
+    /// is greedy argmax.
+    sampler: Option<Sampler>,
+    /// Executor-private companion state that must travel with the
+    /// request through retire / re-homing / drop (the speculative
+    /// executor parks the drafter's `DecodeState` here so its KV blocks
+    /// release through the same RAII path as the verifier's).
+    aux: Option<Box<dyn Any + Send>>,
+}
+
+impl fmt::Debug for DecodeState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DecodeState")
+            .field("window", &self.window)
+            .field("generated", &self.generated)
+            .field("max_new", &self.max_new)
+            .field("seq_cap", &self.seq_cap)
+            .field("cache", &self.cache)
+            .field("sampler", &self.sampler)
+            .field("aux", &self.aux.as_ref().map(|_| "<executor aux>"))
+            .finish()
+    }
 }
 
 impl DecodeState {
@@ -730,6 +807,8 @@ impl DecodeState {
             max_new,
             seq_cap: cap,
             cache: None,
+            sampler: None,
+            aux: None,
         }
     }
 
@@ -779,6 +858,30 @@ impl DecodeState {
         self.cache.as_mut()
     }
 
+    /// Attach the request's seeded sampler (shard loop, right after
+    /// `begin`). `None` keeps greedy argmax decode.
+    pub fn set_sampler(&mut self, sampler: Option<Sampler>) {
+        self.sampler = sampler;
+    }
+
+    /// Mutable sampler access for the executor's token selection.
+    pub fn sampler_mut(&mut self) -> Option<&mut Sampler> {
+        self.sampler.as_mut()
+    }
+
+    /// Park executor-private companion state on this request (see the
+    /// field docs — the speculative drafter's state lives here).
+    pub fn set_aux(&mut self, aux: Box<dyn Any + Send>) {
+        self.aux = Some(aux);
+    }
+
+    /// Detach the executor-private companion state, if any. Executors
+    /// take it at the start of a step (avoiding a double borrow against
+    /// the window/cache) and put it back at the end.
+    pub fn take_aux(&mut self) -> Option<Box<dyn Any + Send>> {
+        self.aux.take()
+    }
+
     /// The window suffix the next cached step must evaluate (tokens not
     /// yet covered by the cache) plus the cached-position count — the
     /// shared slicing contract of every cached executor step. Errors when
@@ -808,6 +911,33 @@ impl DecodeState {
             }
         }
         self.window.push(tok);
+    }
+
+    /// Drop the `n` newest tokens from the window (and the generated
+    /// record), truncating the cache back to the surviving rows via
+    /// [`KvCache::truncate_to`] — the speculative-decode rollback (PR 9):
+    /// rejected drafter proposals rewind here instead of re-prefilling.
+    /// Only valid while none of those `n` pushes slid the window (the
+    /// speculative executor bounds its draft length by the context
+    /// headroom to guarantee this); a slide in between would have dropped
+    /// a front token this rollback cannot restore.
+    pub fn rollback(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            n <= self.generated.len() && n <= self.window.len(),
+            "rollback of {n} tokens from a window of {} ({} generated)",
+            self.window.len(),
+            self.generated.len()
+        );
+        self.generated.truncate(self.generated.len() - n);
+        self.window.truncate(self.window.len() - n);
+        if let Some(c) = &mut self.cache {
+            let keep = c.len().min(self.window.len());
+            c.truncate_to(keep)?;
+        }
+        Ok(())
     }
 
     /// Consume the state, yielding the generated tokens.
@@ -995,6 +1125,82 @@ mod tests {
     }
 
     #[test]
+    fn truncate_releases_tail_blocks_and_rewinds_positions() {
+        let p = pool(2, 4, 2, 0);
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[1, 2, 3, 4, 5], 0.0);
+        assert_eq!((c.len(), c.blocks_in_table()), (5, 3));
+        assert_eq!(p.stats().blocks_in_use, 3);
+
+        c.truncate_to(2).unwrap();
+        assert_eq!((c.len(), c.positions_seen()), (2, 2));
+        assert_eq!(c.blocks_in_table(), 1, "rows 0..2 fit one 2-row block");
+        assert_eq!(p.stats().blocks_in_use, 1, "tail blocks released to the pool");
+        // Kept rows are untouched.
+        assert_eq!(c.layer(0).k_row(1), &[4.0, 5.0, 6.0, 7.0]);
+
+        // Re-appending lands at the rewound ring positions: the cache is
+        // indistinguishable from one that only ever committed 2 rows.
+        fill(&mut c, &[6, 7], 9.0);
+        assert_eq!((c.len(), c.positions_seen()), (4, 4));
+        assert_eq!(c.layer(0).k_row(2), &[9.0, 10.0, 11.0, 12.0]);
+
+        // Truncating to the current length is a no-op; past it errors.
+        c.truncate_to(4).unwrap();
+        assert_eq!(c.len(), 4);
+        assert!(c.truncate_to(5).is_err());
+        // A cache with staged rows must refuse to truncate.
+        c.append(0, &rows(1, 4, 0.0), &rows(1, 4, 0.0)).unwrap();
+        assert!(c.truncate_to(1).is_err());
+    }
+
+    #[test]
+    fn truncate_reopens_frozen_tail_block_for_appends() {
+        let p = Arc::new(BlockPool::new(1, 2, 2, 0).with_sharing(16));
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[1, 2, 3, 4], 0.0);
+        assert_eq!(p.stats().registry_entries, 2, "both full blocks froze");
+
+        // Roll back into the second (frozen) block: the kept row must be
+        // forked into a fresh owned block so the next append is legal.
+        c.truncate_to(3).unwrap();
+        assert_eq!(c.layer(0).k_row(2), &[4.0, 5.0], "kept row survives the fork");
+        fill(&mut c, &[9], 7.0);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.layer(0).k_row(3), &[7.0, 8.0]);
+        assert_eq!(
+            c.layer(0).k_row(2),
+            &[4.0, 5.0],
+            "fork is copy-on-write: old row intact next to the new one"
+        );
+        // The registry still serves the original (pre-rollback) prefix.
+        let seeded = p.new_cache(&[1, 2, 3, 4, 5]);
+        assert_eq!(seeded.shared_rows(), 4);
+
+        // Divergent history republishes under the new tokens.
+        assert_eq!(p.stats().registry_entries, 3, "re-filled fork published anew");
+        let seeded2 = p.new_cache(&[1, 2, 3, 9, 5]);
+        assert_eq!(seeded2.shared_rows(), 4, "post-rollback history is shareable");
+    }
+
+    #[test]
+    fn truncate_after_slide_accounts_start_offset() {
+        let p = pool(1, 2, 2, 0);
+        let mut c = p.new_cache(&[]);
+        fill(&mut c, &[1, 2, 3, 4], 0.0);
+        c.pop_front(); // len 3, start 1 — block 0 still referenced
+        assert_eq!((c.len(), c.blocks_in_table()), (3, 2));
+        c.truncate_to(1).unwrap();
+        // Live physical rows = start(1) + len(1) = 2 → one block.
+        assert_eq!((c.len(), c.blocks_in_table()), (1, 1));
+        assert_eq!(c.positions_seen(), 2, "4 committed - 2 truncated");
+        assert_eq!(c.layer(0).k_row(0), &[2.0, 3.0], "row 0 is the post-slide front");
+        fill(&mut c, &[8], 5.0);
+        assert_eq!(c.layer(0).k_row(1), &[5.0, 6.0]);
+        assert_eq!(p.stats().blocks_in_use, 2);
+    }
+
+    #[test]
     fn decode_state_slide_keeps_cache_live() {
         // Mirrors the serving decode contract: keep the newest `cap`
         // prefix tokens, slide at the cap, re-base (never clear).
@@ -1018,6 +1224,41 @@ mod tests {
         s.push_token(7);
         assert!(s.done());
         assert_eq!(s.into_generated(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn decode_state_rollback_rewinds_window_generated_and_cache() {
+        // The speculative drafter's rewind: push proposals, evaluate some
+        // of them (cache rows), then roll the rejected tail back.
+        let p = pool(1, 2, 2, 0);
+        let mut s = DecodeState::with_cache(&[1, 2], 8, 16, p.new_cache(&[]));
+        {
+            let c = s.cache_mut().unwrap();
+            c.append(0, &rows(2, 2, 0.0), &rows(2, 2, 0.0)).unwrap();
+            c.commit(&[1, 2]).unwrap();
+        }
+        s.push_token(10);
+        s.push_token(11);
+        s.push_token(12);
+        // Evaluate the first pushed token only: cache covers 3 rows.
+        {
+            let c = s.cache_mut().unwrap();
+            c.append(0, &rows(1, 2, 9.0), &rows(1, 2, 9.0)).unwrap();
+            c.commit(&[10]).unwrap();
+        }
+        assert_eq!(s.window(), &[1, 2, 10, 11, 12]);
+        assert_eq!(s.cached_rows(), 3);
+        s.rollback(2).unwrap();
+        assert_eq!(s.window(), &[1, 2, 10]);
+        assert_eq!(s.generated(), &[10]);
+        assert_eq!(s.cached_rows(), 3, "rows for surviving tokens stay live");
+        s.rollback(1).unwrap();
+        assert_eq!(s.window(), &[1, 2]);
+        assert!(s.generated().is_empty());
+        assert_eq!(s.cached_rows(), 2, "cache truncates with the window");
+        assert_eq!(s.uncached_suffix().unwrap(), (vec![], 2));
+        assert!(s.rollback(1).is_err(), "cannot roll back past the generated record");
+        assert!(s.rollback(0).is_ok(), "zero rollback is a no-op");
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod client;
 pub mod kernels;
 pub mod kvcache;
 pub mod qkernels;
+pub mod sample;
 pub mod sim;
 #[cfg(feature = "xla")]
 pub mod xla;
@@ -21,6 +22,7 @@ pub use backend::{argmax_slice, Backend, Buffer, Literal, LiteralData};
 pub use client::{literal_f32, literal_i32, literal_i8, Executable, Runtime};
 pub use kvcache::{BlockPool, DecodeState, KvCache, PoolExhausted, PoolStats, DEFAULT_BLOCK_ROWS};
 pub use qkernels::{qmatmul, PackedModel, QCost};
+pub use sample::{Sampler, SamplingParams};
 
 #[cfg(test)]
 mod tests {

@@ -472,6 +472,43 @@ impl PackedModel {
         }
         c
     }
+
+    /// Materialize this packed model as an owned dense
+    /// [`sim::DenseParams`] store: every packed linear layer is
+    /// dequantized ([`PackedLayer::dequantize`]), everything else copied
+    /// from the dense map. This is the speculative *drafter* fast path
+    /// (`coordinator::spec`): the expansion keeps the packed variant's
+    /// numerics (within the LUT kernels' summation-order tolerance, see
+    /// the `qmatmul_matches_dequantize_then_dense` pin) while decoding
+    /// through the dense kernels — which matters because packed decode
+    /// runs ~0.55x dense wall-clock (BENCH_PR4 `throughput_ratio`), so a
+    /// natively packed drafter could never be cheaper than its verifier.
+    /// One-time cost at executor construction; the model's own
+    /// never-densify store is untouched
+    /// ([`PackedModel::dense_linear_count`] stays 0).
+    pub fn expand_params(&self) -> Result<sim::DenseParams> {
+        let mut owned: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+        for (i, name) in self.spec.names.iter().enumerate() {
+            if self.spec.linear[i] {
+                let layer = self
+                    .layers
+                    .get(name)
+                    .with_context(|| format!("packed layer {name} missing"))?;
+                let w = layer.dequantize();
+                owned.push((name.clone(), vec![w.rows, w.cols], w.data));
+            } else {
+                let (shape, data) = self
+                    .dense
+                    .get(name)
+                    .with_context(|| format!("dense parameter {name} missing"))?;
+                owned.push((name.clone(), shape.clone(), data.clone()));
+            }
+        }
+        sim::DenseParams::from_params(
+            &self.spec,
+            owned.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice())),
+        )
+    }
 }
 
 /// [`ParamSource`] adapter: dense lookups from the non-linear map, linear
@@ -586,14 +623,11 @@ mod tests {
         assert!(pack(&dup).is_err());
     }
 
-    #[test]
-    fn packed_incremental_matches_packed_full_bitexact() {
-        // The packed path inherits incremental decode from the shared
-        // interpreter: prefill + single-token steps must reproduce the
-        // full-window logits rows exactly.
+    /// Seeded tiny packed model for the incremental / expansion pins.
+    fn tiny_packed(seed: u64, variant: Variant) -> (ModelSpec, PackedModel) {
         let spec = ModelSpec::synthetic(11, 8, 1, 2, 16, 6);
         let profile = MacProfile::cached();
-        let mut rng = Rng::seed_from_u64(321);
+        let mut rng = Rng::seed_from_u64(seed);
         let mut params: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
         let mut grads = BTreeMap::new();
         for (i, (name, shape)) in spec.names.iter().zip(&spec.shapes).enumerate() {
@@ -612,9 +646,16 @@ mod tests {
             params.push((name.clone(), shape.clone(), data));
         }
         let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
-        let pm =
-            PackedModel::pack_from(spec.clone(), views, Variant::Bal, 4, &grads, profile).unwrap();
+        let pm = PackedModel::pack_from(spec.clone(), views, variant, 4, &grads, profile).unwrap();
+        (spec, pm)
+    }
 
+    #[test]
+    fn packed_incremental_matches_packed_full_bitexact() {
+        // The packed path inherits incremental decode from the shared
+        // interpreter: prefill + single-token steps must reproduce the
+        // full-window logits rows exactly.
+        let (spec, pm) = tiny_packed(321, Variant::Bal);
         let s = spec.seq_len;
         let toks: Vec<i32> = (0..s as i32).map(|t| (t * 5 + 2) % spec.vocab as i32).collect();
         let full = pm.forward(&toks, 1, s).unwrap();
@@ -625,6 +666,29 @@ mod tests {
         for i in 2..s {
             let one = pm.forward_incremental(&toks[i..i + 1], i, &mut cache).unwrap();
             assert_eq!(one.row(0), full.row(i), "packed incremental step {i}");
+        }
+    }
+
+    #[test]
+    fn expand_params_tracks_packed_numerics() {
+        // The drafter expansion must reproduce the packed chain's
+        // numerics up to the LUT kernels' summation-order tolerance
+        // (`qmatmul_matches_dequantize_then_dense`), without densifying
+        // the packed store itself.
+        let (spec, pm) = tiny_packed(654, Variant::PerfOpt);
+        let dp = pm.expand_params().unwrap();
+        assert_eq!(pm.dense_linear_count(), 0, "expansion must not densify the store");
+
+        let s = spec.seq_len;
+        let toks: Vec<i32> = (0..s as i32).map(|t| (t * 3 + 1) % spec.vocab as i32).collect();
+        let packed = pm.forward(&toks, 1, s).unwrap();
+        let (dense, _, _) = sim::forward(&spec, &dp, &toks, 1, s, false).unwrap();
+        assert_eq!((packed.rows, packed.cols), (dense.rows, dense.cols));
+        for (i, (a, b)) in packed.data.iter().zip(&dense.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 5e-3 * (1.0 + b.abs()),
+                "expanded logits diverge at [{i}]: packed {a} vs expanded {b}"
+            );
         }
     }
 

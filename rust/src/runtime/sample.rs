@@ -1,0 +1,189 @@
+//! Seeded token sampling (PR 9): temperature / top-k selection over
+//! f64-softmaxed logits, driven by the deterministic [`crate::util::Rng`].
+//!
+//! Decode was argmax-only before speculative decoding landed; speculative
+//! acceptance under sampling needs a *seeded* per-request RNG so that a
+//! speculative chain and a verifier-only chain consume bit-identical
+//! random draws. The contract that makes both reproducible:
+//!
+//! - All probability math is f64 (logits are f32): softmax in a fixed
+//!   order over the candidate set, so the selection is exactly
+//!   reproducible across thread counts and shard layouts.
+//! - **One RNG draw per emitted token**, and only for emitted tokens.
+//!   Drafter proposals are always greedy (argmax) and never touch the
+//!   RNG, so a speculative chain draws the same stream as a sequential
+//!   verifier-only chain emitting the same tokens.
+//! - `temperature == 0` is exact greedy: it selects via
+//!   [`super::backend::argmax_slice`] and draws nothing, matching the
+//!   argmax decode paths bit for bit.
+//!
+//! Sampling applies on the incremental (KV-cached) executor paths, which
+//! see per-position logits; the recompute oracle paths stay argmax.
+
+use super::backend::argmax_slice;
+use crate::util::Rng;
+
+/// Per-request sampling controls, carried on the `Request` builder and
+/// attached to the request's `DecodeState` by the shard loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature. `0` (or any non-finite / non-positive value)
+    /// means exact greedy decode (no RNG draw).
+    pub temperature: f64,
+    /// Restrict sampling to the `top_k` highest-logit tokens; `0` means
+    /// the full vocabulary.
+    pub top_k: usize,
+    /// Seed of the per-request RNG stream.
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Sampling at `temperature` 1.0 over the full vocabulary with the
+    /// given seed; tune with [`SamplingParams::temperature`] /
+    /// [`SamplingParams::top_k`].
+    pub fn new(seed: u64) -> Self {
+        Self { temperature: 1.0, top_k: 0, seed }
+    }
+
+    /// Set the softmax temperature (`0` = exact greedy).
+    pub fn temperature(mut self, t: f64) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    /// Restrict to the `k` highest-logit tokens (`0` = full vocabulary).
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    /// True when these params reduce to greedy argmax (no RNG use).
+    pub fn is_greedy(&self) -> bool {
+        !(self.temperature.is_finite() && self.temperature > 0.0)
+    }
+}
+
+/// A seeded sampler: [`SamplingParams`] plus the request's RNG stream.
+/// One lives on each sampled request's `DecodeState`; cloning it forks
+/// the stream (used only by oracle replays in tests).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    /// Sampler at the start of its seeded stream.
+    pub fn new(params: SamplingParams) -> Self {
+        Self { params, rng: Rng::seed_from_u64(params.seed) }
+    }
+
+    /// The sampling controls this sampler was built with.
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Select the next token from one row of logits. Exactly one RNG
+    /// draw when sampling; zero draws (plain argmax) when greedy or when
+    /// the row is empty.
+    pub fn select(&mut self, logits: &[f32]) -> usize {
+        if self.params.is_greedy() || logits.len() <= 1 {
+            return argmax_slice(logits);
+        }
+        // Candidate set: indices of the top-k logits (ties broken toward
+        // lower indices), or everything when top_k is 0 / oversized.
+        let k = match self.params.top_k {
+            0 => logits.len(),
+            k => k.min(logits.len()),
+        };
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+        });
+        order.truncate(k);
+        // f64 softmax over the candidates in their (deterministic)
+        // logit-descending order, then one inverse-CDF draw.
+        let t = self.params.temperature;
+        let m = f64::from(logits[order[0]]);
+        let weights: Vec<f64> = order
+            .iter()
+            .map(|&i| ((f64::from(logits[i]) - m) / t).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let u = self.rng.gen_f64() * total;
+        let mut acc = 0.0;
+        for (i, w) in order.iter().zip(&weights) {
+            acc += w;
+            if u < acc {
+                return *i;
+            }
+        }
+        // Float round-off at the tail: the last candidate wins.
+        order[k - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.0, -1.0, 1.9, 0.5, 2.0]
+    }
+
+    #[test]
+    fn zero_temperature_is_argmax_and_draws_nothing() {
+        let mut s = Sampler::new(SamplingParams::new(7).temperature(0.0));
+        let mut t = Sampler::new(SamplingParams::new(7).temperature(0.0));
+        for _ in 0..5 {
+            assert_eq!(s.select(&logits()), argmax_slice(&logits()));
+        }
+        // The stream was never consumed: both samplers still agree with a
+        // fresh one after any number of greedy selections.
+        assert_eq!(s.rng.next_u64(), t.rng.next_u64());
+    }
+
+    #[test]
+    fn seeded_stream_is_reproducible_and_seed_sensitive() {
+        let p = SamplingParams::new(42).temperature(0.8).top_k(4);
+        let mut a = Sampler::new(p);
+        let mut b = Sampler::new(p);
+        let picks_a: Vec<usize> = (0..64).map(|_| a.select(&logits())).collect();
+        let picks_b: Vec<usize> = (0..64).map(|_| b.select(&logits())).collect();
+        assert_eq!(picks_a, picks_b);
+        let mut c = Sampler::new(SamplingParams::new(43).temperature(0.8).top_k(4));
+        let picks_c: Vec<usize> = (0..64).map(|_| c.select(&logits())).collect();
+        assert_ne!(picks_a, picks_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        // top_k = 2 keeps only the two 2.0 logits (indices 1 and 5).
+        let mut s = Sampler::new(SamplingParams::new(9).temperature(5.0).top_k(2));
+        for _ in 0..256 {
+            let pick = s.select(&logits());
+            assert!(pick == 1 || pick == 5, "pick {pick} outside top-2 support");
+        }
+    }
+
+    #[test]
+    fn high_temperature_covers_full_support() {
+        let mut s = Sampler::new(SamplingParams::new(3).temperature(10.0));
+        let mut seen = [false; 6];
+        for _ in 0..2048 {
+            seen[s.select(&logits())] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "full-vocab sampling missed a token: {seen:?}");
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_argmax() {
+        let mut s = Sampler::new(SamplingParams::new(5).temperature(1e-3));
+        for _ in 0..64 {
+            // Ties on the max logit (indices 1 and 5) split the mass; both
+            // are valid, everything else has ~zero probability.
+            let pick = s.select(&logits());
+            assert!(pick == 1 || pick == 5, "pick {pick} at near-zero temperature");
+        }
+    }
+}

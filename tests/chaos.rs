@@ -335,6 +335,98 @@ fn env_installed_schedule_drives_the_serving_path() {
     assert!(!failpoint::enabled());
 }
 
+/// PR 9: a shard dies MID-SPECULATION (step panic while the speculative
+/// executor is between drafting and verifying). The supervisor re-homes
+/// the orphan onto the survivor, whose `begin` rebuilds BOTH the
+/// verifier cache and the drafter's aux state fresh from the original
+/// prefix — so the retried completion is bit-identical to the un-faulted
+/// verifier-only oracle, never a half-verified draft.
+#[test]
+fn spec_shard_death_mid_speculation_rehomes_bit_identically() {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    use halo::coordinator::{SpecExecutor, SpecVerifier};
+    use halo::mac::MacProfile;
+    use halo::quant::Variant;
+    use halo::runtime::sim::ModelSpec;
+    use halo::runtime::PackedModel;
+    use halo::util::Rng;
+
+    let _l = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = ModelSpec::synthetic(13, 8, 2, 2, 16, 24);
+    let mut rng = Rng::seed_from_u64(0x59EC);
+    let params: Vec<(String, Vec<usize>, Vec<f32>)> = spec
+        .names
+        .iter()
+        .zip(&spec.shapes)
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".scale") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.gen_normal() as f32 * 0.1).collect()
+            };
+            (name.clone(), shape.clone(), data)
+        })
+        .collect();
+    let pack = |variant: Variant| {
+        let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+        Arc::new(
+            PackedModel::pack_from(
+                spec.clone(),
+                views,
+                variant,
+                4,
+                &BTreeMap::new(),
+                MacProfile::cached(),
+            )
+            .unwrap(),
+        )
+    };
+    let verifier = pack(Variant::AccOpt);
+    let drafter = pack(Variant::PerfOpt);
+
+    // First step survives (one speculative round lands some tokens),
+    // the second panics the shard mid-flight — exactly once.
+    let _g = failpoint::install_guarded(
+        vec![FailPlan::always(sites::SHARD_STEP, Fault::Panic).with_after(1).with_max_fires(1)],
+        11,
+    );
+    let (v2, d2) = (verifier.clone(), drafter.clone());
+    let coord = Coordinator::start(chaos_cfg(2), move |_shard| {
+        let exec = SpecExecutor::from_packed(&d2, SpecVerifier::Packed(v2.clone()), 4, 4)?;
+        Ok(Box::new(exec) as Box<dyn BatchExecutor>)
+    });
+
+    let prefix = vec![5i32, 11, 2, 7];
+    let max_new = 10usize;
+    let rx = coord.submit_or_shed(Request::new(prefix.clone()).max_new(max_new));
+    let r = rx.recv_timeout(Duration::from_secs(30)).expect("re-homed request still answers");
+    assert!(!r.shed, "one kill within the retry budget must not shed");
+    assert_eq!(
+        r.tokens,
+        verifier.decode_greedy(&prefix, max_new).unwrap(),
+        "post-re-home speculative completion must equal the verifier-only oracle"
+    );
+    assert!(rx.recv_timeout(Duration::from_millis(5)).is_err(), "exactly one response");
+
+    assert_eq!(failpoint::fired(sites::SHARD_STEP), 1);
+    let snap = coord.merged_snapshot();
+    assert!(snap.shard_restarts >= 1, "the killed shard must have respawned");
+    assert!(snap.retries >= 1, "the orphan was re-homed, not re-run in place");
+    assert!(
+        snap.spec.verify_rounds >= 1,
+        "speculative rounds never reached the metrics gauges: {snap:?}"
+    );
+    assert_eq!(
+        (snap.requests, snap.responses, snap.shed, snap.rejected),
+        (1, 1, 0, 0),
+        "books balance: one arrival, one served response"
+    );
+    coord.shutdown().expect("respawned speculative shard joins cleanly");
+}
+
 /// PR 8: KV block-pool exhaustion is load, not a fault. A pool too small
 /// for even one prefill sheds every request with `ShedReason::Brownout`
 /// — no panic, no shard restart, no retry-budget burn — and the same

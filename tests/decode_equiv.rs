@@ -505,6 +505,289 @@ fn ragged_batch_work_stays_within_ideal() {
 
 // ------------------------------------------------------- dense + packed mix
 
+// ------------------------------------------------------ speculative decoding
+//
+// PR 9: the speculative pipeline (drafter proposes k, verifier scores all
+// k+1 positions in one batched incremental pass, longest agreeing prefix
+// accepted, both KV block tables rolled back to the accept point) must be
+// BIT-IDENTICAL to verifier-only decode for every (drafter, verifier)
+// pairing on the ladder, every draft depth, mid-flight join/retire,
+// context slides interleaved with rollbacks, and shared-prefix-seeded
+// drafter caches. Acceptance-rate physics may change with the pairing —
+// tokens may not.
+
+/// Verifier-only KV-cached chain through the real `DecodeState` contract
+/// — the oracle every speculative configuration must reproduce exactly
+/// (matches the executor's ring re-basing across slides, which
+/// `greedy_recompute` intentionally does not).
+fn dense_verifier_chain(
+    spec: &ModelSpec,
+    p: &DenseParams,
+    prefix: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let mut s = DecodeState::with_cache(
+        prefix,
+        max_new,
+        spec.seq_len,
+        KvCache::new(spec.n_layers, spec.d_model),
+    );
+    while !s.done() {
+        let (new, cached) = s.uncached_suffix().unwrap();
+        let logits =
+            forward_incremental(spec, p, &new, cached, s.cache_mut().unwrap(), false).unwrap();
+        let t = argmax_slice(logits.row(new.len() - 1)) as i32;
+        s.push_token(t);
+    }
+    s.into_generated()
+}
+
+#[test]
+fn speculative_chains_are_bit_identical_across_the_pairing_matrix() {
+    use halo::coordinator::{SpecExecutor, SpecVerifier};
+    // {halo-perf, halo-bal} drafters x {dense, halo-acc} verifiers,
+    // k in {1, 4, 16}, all packed from the SAME synthesized parameters
+    // (the genuine ladder: one model, four rungs). Prefix lengths cover
+    // short, block-crossing, and sliding chains (20 + 8 - 1 > cap 24).
+    let spec = tiny_spec();
+    let (params, grads) = tiny_params(&spec, 110);
+    let dense = Arc::new(dense_source(&spec, &params));
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let apm = Arc::new(
+        PackedModel::pack_from(spec.clone(), views, Variant::AccOpt, 4, &grads, MacProfile::cached())
+            .unwrap(),
+    );
+    let mut rng = Rng::seed_from_u64(111);
+    let plens = [1usize, 5, 20];
+    let prefixes: Vec<Vec<i32>> =
+        plens.iter().map(|&l| random_prefix(&mut rng, spec.vocab, l)).collect();
+    let max_new = vec![6usize, 4, 8];
+
+    let dense_want: Vec<Vec<i32>> = prefixes
+        .iter()
+        .zip(&max_new)
+        .map(|(p, &m)| dense_verifier_chain(&spec, &dense, p, m))
+        .collect();
+    let packed_want: Vec<Vec<i32>> = prefixes
+        .iter()
+        .zip(&max_new)
+        .map(|(p, &m)| apm.decode_greedy(p, m).unwrap())
+        .collect();
+
+    for drafter_variant in [Variant::PerfOpt, Variant::Bal] {
+        let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+        let dpm = PackedModel::pack_from(
+            spec.clone(),
+            views,
+            drafter_variant,
+            4,
+            &grads,
+            MacProfile::cached(),
+        )
+        .unwrap();
+        for k in [1usize, 4, 16] {
+            let mut ex = SpecExecutor::from_packed(
+                &dpm,
+                SpecVerifier::Dense { spec: spec.clone(), params: dense.clone() },
+                k,
+                prefixes.len(),
+            )
+            .unwrap();
+            let got = ex.generate(&prefixes, &max_new).unwrap();
+            assert_eq!(
+                got,
+                dense_want,
+                "drafter halo-{} k={k} vs dense verifier diverged",
+                drafter_variant.name()
+            );
+            assert!(
+                ex.stats().drafted_tokens > 0,
+                "drafter halo-{} k={k} never drafted against the dense verifier",
+                drafter_variant.name()
+            );
+
+            let mut ex = SpecExecutor::from_packed(
+                &dpm,
+                SpecVerifier::Packed(apm.clone()),
+                k,
+                prefixes.len(),
+            )
+            .unwrap();
+            let got = ex.generate(&prefixes, &max_new).unwrap();
+            assert_eq!(
+                got,
+                packed_want,
+                "drafter halo-{} k={k} vs packed halo-acc verifier diverged",
+                drafter_variant.name()
+            );
+            let st = ex.stats();
+            assert!(st.drafted_tokens > 0);
+            assert!(st.accepted_tokens <= st.drafted_tokens);
+        }
+    }
+}
+
+#[test]
+fn speculative_join_and_retire_mid_flight_preserve_chains() {
+    use halo::coordinator::{SpecExecutor, SpecVerifier};
+    // Continuous-batching seam: requests join and retire mid-speculation
+    // (a speculative step may retire several tokens at once, so retire
+    // points land mid-round). Every chain must equal the solo verifier
+    // oracle; the drafter's aux state must follow each request through
+    // join/retire without cross-pollination.
+    let spec = tiny_spec();
+    let (params, grads) = tiny_params(&spec, 120);
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let apm = Arc::new(
+        PackedModel::pack_from(spec.clone(), views, Variant::AccOpt, 4, &grads, MacProfile::cached())
+            .unwrap(),
+    );
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let dpm = PackedModel::pack_from(
+        spec.clone(),
+        views,
+        Variant::PerfOpt,
+        4,
+        &grads,
+        MacProfile::cached(),
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(121);
+    let p1 = random_prefix(&mut rng, spec.vocab, 7);
+    let p2 = random_prefix(&mut rng, spec.vocab, 19);
+    let p3 = random_prefix(&mut rng, spec.vocab, 2);
+
+    let mut exec =
+        SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 4).unwrap();
+    let mut s1 = exec.begin(&p1, 9).unwrap();
+    let mut s2 = exec.begin(&p2, 2).unwrap();
+    // One round with requests 1+2 live; request 2 (max_new 2) may retire
+    // inside it (k_eff is clamped to its remaining budget).
+    while !s2.done() {
+        let mut active: Vec<&mut DecodeState> = vec![&mut s1, &mut s2];
+        exec.step(&mut active).unwrap();
+    }
+    // Request 3 joins mid-flight; request 2 has retired.
+    let mut s3 = exec.begin(&p3, 5).unwrap();
+    while !(s1.done() && s3.done()) {
+        let mut active: Vec<&mut DecodeState> = Vec::new();
+        if !s1.done() {
+            active.push(&mut s1);
+        }
+        if !s3.done() {
+            active.push(&mut s3);
+        }
+        exec.step(&mut active).unwrap();
+    }
+    assert_eq!(s1.into_generated(), apm.decode_greedy(&p1, 9).unwrap());
+    assert_eq!(s2.into_generated(), apm.decode_greedy(&p2, 2).unwrap());
+    assert_eq!(s3.into_generated(), apm.decode_greedy(&p3, 5).unwrap());
+}
+
+#[test]
+fn speculative_context_slides_across_a_rollback_stay_exact() {
+    use halo::coordinator::{SpecExecutor, SpecVerifier};
+    // Start 6 tokens under the cap with k=16: early rounds draft (and
+    // roll back) multi-token batches, the headroom clamp then shrinks
+    // k_eff to 0 as the window hits the cap, and the tail of the decode
+    // slides every step. The full chain — rollbacks, then slides — must
+    // match the verifier-only ring decode bit for bit.
+    let spec = tiny_spec();
+    let (params, _) = tiny_params(&spec, 130);
+    let dense = Arc::new(dense_source(&spec, &params));
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let dpm = PackedModel::pack_from(
+        spec.clone(),
+        views,
+        Variant::Bal,
+        4,
+        &BTreeMap::new(),
+        MacProfile::cached(),
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(131);
+    let prefix = random_prefix(&mut rng, spec.vocab, 18);
+    let max_new = 12; // 18 + 12 - 1 = 29 > cap 24: the window slides
+
+    let mut ex = SpecExecutor::from_packed(
+        &dpm,
+        SpecVerifier::Dense { spec: spec.clone(), params: dense.clone() },
+        16,
+        1,
+    )
+    .unwrap();
+    let got = ex.generate(&[prefix.clone()], &[max_new]).unwrap();
+    assert_eq!(got[0], dense_verifier_chain(&spec, &dense, &prefix, max_new));
+    let st = ex.stats();
+    assert!(st.drafted_tokens > 0, "no speculation happened before the cap");
+    // Every round emits at least one token, and any accepted draft means
+    // some round emitted more than one.
+    assert!(st.verify_rounds as usize <= max_new);
+    if st.accepted_tokens > 0 {
+        assert!((st.verify_rounds as usize) < max_new, "accepted drafts saved no rounds");
+    }
+}
+
+#[test]
+fn speculative_shared_prefix_seeded_drafter_is_bit_identical() {
+    use halo::coordinator::{SpecExecutor, SpecVerifier};
+    // Both sides of the pipeline draw from sharing pools (two pools —
+    // each registry must only seed caches with its own K/V numerics).
+    // A second request sharing the first's header must be seeded on BOTH
+    // the verifier and drafter sides and still decode the exact cold
+    // chain.
+    let spec = tiny_spec();
+    let (params, grads) = tiny_params(&spec, 140);
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let apm = Arc::new(
+        PackedModel::pack_from(spec.clone(), views, Variant::AccOpt, 4, &grads, MacProfile::cached())
+            .unwrap(),
+    );
+    let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
+    let dpm = PackedModel::pack_from(
+        spec.clone(),
+        views,
+        Variant::PerfOpt,
+        4,
+        &grads,
+        MacProfile::cached(),
+    )
+    .unwrap();
+    let mut rng = Rng::seed_from_u64(141);
+    let header = random_prefix(&mut rng, spec.vocab, 8);
+    let suffix = random_prefix(&mut rng, spec.vocab, 5);
+    let mut full = header.clone();
+    full.extend_from_slice(&suffix);
+
+    let vpool = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(64));
+    let dpool = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(64));
+    let mut ex = SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 2)
+        .unwrap()
+        .with_kv_pools(vpool.clone(), dpool.clone());
+
+    // First request publishes frozen header blocks into both registries.
+    let first = ex.generate(&[header.clone()], &[3]).unwrap();
+    assert_eq!(first[0], apm.decode_greedy(&header, 3).unwrap());
+    assert!(vpool.stats().registry_entries >= 1, "verifier registry never populated");
+    assert!(dpool.stats().registry_entries >= 1, "drafter registry never populated");
+
+    // Second request is seeded from both registries.
+    let seeded = ex.generate(&[full.clone()], &[4]).unwrap();
+    assert!(
+        dpool.stats().shared_hits >= 1,
+        "drafter cache was never seeded from its registry: {:?}",
+        dpool.stats()
+    );
+    assert!(vpool.stats().shared_hits >= 1, "verifier cache was never seeded");
+
+    // Cold oracle: same pairing, no pools at all.
+    let mut cold =
+        SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 2).unwrap();
+    let want = cold.generate(&[full.clone()], &[4]).unwrap();
+    assert_eq!(seeded, want, "shared-prefix seeding changed a speculative chain");
+    assert_eq!(want[0], apm.decode_greedy(&full, 4).unwrap());
+}
+
 #[test]
 fn packed_forward_incremental_prefill_matches_packed_forward() {
     // Direct PackedModel surface: prefill logits rows == full forward

@@ -288,6 +288,55 @@ fn model_block_pool_last_block_has_a_single_winner() {
     assert!(ex.executions > 1, "permit race must branch the search");
 }
 
+/// The PR 9 speculative seam: a verify round REJECTING drafted tokens
+/// rolls its cache back (`truncate_to` — releasing the rejected tail
+/// block) while another request's decode concurrently acquires from the
+/// same bounded pool. Under every interleaving the acquirer either wins
+/// the block the rollback freed or is cleanly refused, the roller always
+/// keeps exactly its accepted row, and afterwards permits are conserved
+/// — rollback is a release, never a double-free, never a leak.
+#[test]
+fn model_spec_rollback_release_vs_acquire_single_winner() {
+    let ex = explore(|| {
+        let pool = Arc::new(BlockPool::new(1, 2, 1, 2));
+        // Prelude (single-threaded): the speculating request owns both
+        // blocks — one accepted row, one drafted-and-about-to-be-rejected
+        // row (block size 1: one block each).
+        let mut spec_cache = pool.new_cache(&[]);
+        let row = Matrix::from_fn(1, 2, |_, _| 1.0);
+        spec_cache.append(0, &row, &row).unwrap();
+        spec_cache.commit(&[7]).unwrap();
+        spec_cache.append(0, &row, &row).unwrap();
+        spec_cache.commit(&[8]).unwrap();
+        assert_eq!(pool.stats().blocks_in_use, 2, "prelude must fill the pool");
+
+        let pr = pool.clone();
+        // The verify round rejects the draft: roll back to the accept point.
+        let roller = thread::spawn(move || {
+            spec_cache.truncate_to(1).expect("rollback needs no new blocks here");
+            spec_cache
+        });
+        // A second request races for the block the rollback frees.
+        let acquired = try_acquire(&pool);
+        let spec_cache = roller.join().unwrap();
+
+        assert_eq!(spec_cache.len(), 1, "rollback must keep exactly the accepted row");
+        let s = pool.stats();
+        assert_eq!(
+            s.blocks_in_use,
+            1 + usize::from(acquired.is_some()),
+            "permit count diverged from cache ownership"
+        );
+        drop((spec_cache, acquired));
+        assert_eq!(pr.stats().blocks_in_use, 0, "rollback or release leaked a permit");
+        // Conservation: both blocks are grantable again afterwards.
+        let again = try_acquire(&pr).expect("drained pool must grant a block again");
+        drop(again);
+        assert_eq!(pr.stats().blocks_in_use, 0);
+    });
+    assert!(ex.executions > 1, "rollback/acquire race must branch the search");
+}
+
 /// The PR 7 × PR 8 seam: supervisor re-homing releases a dying shard's
 /// cache (RAII drop) while a survivor concurrently acquires from the
 /// same bounded pool. Under every interleaving the acquirer either wins

@@ -613,6 +613,169 @@ fn prop_random_executor_faults_never_panic_and_answer_exactly_once() {
     }
 }
 
+// --------------------------------------------- PR 9: sampling + rollback
+
+#[test]
+fn prop_seeded_sampling_is_deterministic_across_runs_and_shard_counts() {
+    // Same per-request seed + params => bit-identical sampled chains,
+    // run twice on one shard and once across four (the sampler RNG is
+    // per-request state, so shard placement must be unobservable).
+    use halo::runtime::SamplingParams;
+    let (spec, pm) = kv_packed(750);
+    let mut rng = Rng::seed_from_u64(751);
+    let reqs: Vec<(Vec<i32>, usize, SamplingParams)> = (0..10)
+        .map(|i| {
+            let l = 1 + rng.gen_usize(spec.seq_len);
+            let prefix: Vec<i32> = (0..l).map(|_| rng.gen_usize(spec.vocab) as i32).collect();
+            let m = 2 + rng.gen_usize(4);
+            let sp = SamplingParams::new(0xA0 + i as u64)
+                .temperature(0.6 + 0.15 * (i % 3) as f64)
+                .top_k(4 + i % 5);
+            (prefix, m, sp)
+        })
+        .collect();
+
+    let run = |shards: usize| -> Vec<Vec<i32>> {
+        let pm2 = pm.clone();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    batch_size: 4,
+                    timeout: std::time::Duration::from_millis(1),
+                },
+                shards,
+                ..CoordinatorConfig::default()
+            },
+            move |_shard| Ok(Box::new(QuantExecutor::new(pm2.clone(), 4)) as Box<dyn BatchExecutor>),
+        );
+        let rxs: Vec<_> = reqs
+            .iter()
+            .map(|(p, m, sp)| {
+                coord.submit_or_shed(Request::new(p.clone()).max_new(*m).sampling(*sp))
+            })
+            .collect();
+        let out: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+                assert!(!r.shed, "sampled request shed without pressure");
+                r.tokens
+            })
+            .collect();
+        coord.shutdown().unwrap();
+        out
+    };
+
+    let a = run(1);
+    let b = run(1);
+    let c = run(4);
+    assert_eq!(a, b, "same seed, same shard count: chains must replay exactly");
+    assert_eq!(a, c, "shard placement leaked into a sampled chain");
+    for ((_, m, _), chain) in reqs.iter().zip(&a) {
+        assert_eq!(chain.len(), *m, "short sampled decode");
+        assert!(chain.iter().all(|&t| (0..spec.vocab as i32).contains(&t)));
+    }
+    // The sampler must actually sample: across ~40 tempered draws over a
+    // 13-token vocab, at least one token deviates from the greedy chain.
+    let greedy: Vec<Vec<i32>> =
+        reqs.iter().map(|(p, m, _)| pm.decode_greedy(p, *m).unwrap()).collect();
+    assert_ne!(a, greedy, "seeded sampling never left the greedy chain — sampler inert?");
+}
+
+#[test]
+fn prop_rollback_schedules_conserve_pool_blocks() {
+    // PR 9 speculative-rollback property: random interleavings of cache
+    // creation (possibly seeded from shared prefixes), append+commit,
+    // truncate_to (the accept/reject rollback — to ANY point, including
+    // 0 and the current length), slides, clears and drops over a BOUNDED
+    // sharing pool. The PR 8 conservation law must keep holding: the
+    // bound is never exceeded, every live block is reachable, rollback
+    // never leaks a released tail block and never double-frees a shared
+    // one, and draining every cache leaves exactly the registry behind.
+    let mut rng = Rng::seed_from_u64(760);
+    for case in 0..CASES {
+        let bs = 1 + rng.gen_usize(4);
+        let max_blocks = 8 + rng.gen_usize(24);
+        let pool = Arc::new(BlockPool::new(1, 2, bs, max_blocks).with_sharing(8));
+        let mut caches: Vec<KvCache> = Vec::new();
+        for step in 0..60 {
+            match rng.gen_usize(6) {
+                0 => {
+                    let window = vec![7i32; 1 + rng.gen_usize(3 * bs)];
+                    caches.push(pool.new_cache(&window));
+                }
+                1 if !caches.is_empty() => {
+                    let i = rng.gen_usize(caches.len());
+                    let n = 1 + rng.gen_usize(2 * bs);
+                    let k = Matrix::from_fn(n, 2, |_, _| 1.0);
+                    let toks = vec![7i32; n];
+                    match caches[i].append(0, &k, &k) {
+                        Ok(()) => caches[i].commit(&toks).unwrap(),
+                        Err(e) => {
+                            assert!(
+                                e.downcast_ref::<PoolExhausted>().is_some(),
+                                "case {case} step {step}: non-exhaustion append error {e}"
+                            );
+                            caches[i].clear();
+                        }
+                    }
+                }
+                2 if !caches.is_empty() => {
+                    // The speculative rollback: rewind to a random accept
+                    // point. May itself hit the bound (re-opening a frozen
+                    // shared tail forks a block) — that must surface as
+                    // PoolExhausted, after which clear() recovers.
+                    let i = rng.gen_usize(caches.len());
+                    let len = caches[i].len();
+                    let keep = rng.gen_usize(len + 1);
+                    match caches[i].truncate_to(keep) {
+                        Ok(()) => assert_eq!(caches[i].len(), keep, "case {case} step {step}"),
+                        Err(e) => {
+                            assert!(
+                                e.downcast_ref::<PoolExhausted>().is_some(),
+                                "case {case} step {step}: non-exhaustion rollback error {e}"
+                            );
+                            caches[i].clear();
+                        }
+                    }
+                }
+                3 if !caches.is_empty() => {
+                    let i = rng.gen_usize(caches.len());
+                    caches[i].pop_front();
+                }
+                4 if !caches.is_empty() => {
+                    let i = rng.gen_usize(caches.len());
+                    caches.swap_remove(i);
+                }
+                5 if !caches.is_empty() => {
+                    let i = rng.gen_usize(caches.len());
+                    caches[i].clear();
+                }
+                _ => {}
+            }
+            let s = pool.stats();
+            assert!(
+                s.blocks_in_use <= max_blocks,
+                "case {case} step {step}: bound violated ({s:?})"
+            );
+            let reachable: usize =
+                caches.iter().map(|c| c.blocks_in_table()).sum::<usize>() + s.registry_entries;
+            assert!(
+                s.blocks_in_use <= reachable,
+                "case {case} step {step}: leaked blocks ({} in use, {} reachable)",
+                s.blocks_in_use,
+                reachable
+            );
+        }
+        caches.clear();
+        let s = pool.stats();
+        assert_eq!(
+            s.blocks_in_use, s.registry_entries,
+            "case {case}: after dropping every cache only registry blocks may remain ({s:?})"
+        );
+    }
+}
+
 #[test]
 fn prop_halo_monotone_accuracy_vs_variant() {
     // For random layers: acc-opt reconstruction error <= perf-opt error
