@@ -14,17 +14,25 @@
 //!
 //! - `spec_decode_speedup` — verifier-only wall-clock over speculative
 //!   wall-clock for the **self-pair** (drafter = the verifier's own
-//!   packed layers expanded to dense numerics, so proposals nearly
-//!   always agree and acceptance sits near 1). The win has two factors:
-//!   the drafter runs dense kernels (the PR 4 bench pins packed decode
-//!   at ~0.55x dense throughput, so drafting is cheaper per token than
-//!   verifying) and the verifier amortizes its per-pass LUT panel
-//!   expansion over k+1 positions per round. CI floor: **1.2x**
-//!   (`--min spec_decode_speedup=1.2`, tol 0.3).
-//! - `acceptance_rate` — accepted/drafted for the self-pair. Expansion
-//!   reconstructs the same effective weights the LUT path multiplies, so
-//!   only float summation-order flips can reject a draft; the rate sits
-//!   near 1.0 and is gated at tol 0.3 as a drift alarm.
+//!   packed model, drafting natively on its integer W4A8 tiles since
+//!   PR 10, so proposals are bit-identical and acceptance is 1). The
+//!   PR 10 kernel rebuild moved the economics honestly: the old LUT
+//!   kernel paid a per-pass panel expansion that the k+1-position verify
+//!   pass amortized, while the drafter ran cheaper dense kernels —
+//!   that asymmetry was the 1.2x self-pair win. The integer panels have
+//!   no per-pass expansion and the packed drafter now costs exactly as
+//!   much per token as the verifier, so the self-pair is bounded near
+//!   break-even (each round spends k drafter passes + 1 verify pass for
+//!   k+1 tokens; the verify pass re-does the k positions the drafter
+//!   already computed). It is kept measured and gated as a regression
+//!   alarm — CI floor: **0.7x** (`--min spec_decode_speedup=0.7`,
+//!   tol 0.3) — and the real speedup headroom is a smaller-capacity
+//!   drafter (see ROADMAP: distilled/truncated drafter rung).
+//! - `acceptance_rate` — accepted/drafted for the self-pair. Drafter
+//!   and verifier now run the SAME integer kernels on the same tiles,
+//!   so every draft argmax-matches and the rate is exactly 1.0; gated
+//!   at tol 0.3 as a drift alarm (a drop means the pairing silently
+//!   degraded).
 //!
 //! A cross-variant pair (halo-perf drafting for halo-acc, the `--spec
 //! drafter=halo-perf` serving default) is measured informationally:
@@ -131,7 +139,7 @@ fn run_spec(
     s_tokens: usize,
 ) -> (f64, Vec<i32>, halo::coordinator::SpecDecodeStats) {
     let mut ex = SpecExecutor::from_packed(
-        drafter,
+        drafter.clone(),
         SpecVerifier::Packed(verifier.clone()),
         K,
         1,

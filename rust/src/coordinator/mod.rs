@@ -63,7 +63,7 @@ pub use batch::{Batcher, BatcherConfig};
 pub use queue::{Pop, PushError, RequestQueue};
 pub use loadgen::{LoadgenConfig, LoadgenReport, SyntheticExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, ShedReason, SpecDecodeStats};
-pub use spec::{SpecConfig, SpecExecutor, SpecVerifier};
+pub use spec::{SpecConfig, SpecDrafter, SpecExecutor, SpecVerifier};
 pub use server::{
     BatchExecutor, Coordinator, CoordinatorConfig, QuantExecutor, Request, Response, SubmitError,
     SupervisorConfig,

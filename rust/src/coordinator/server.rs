@@ -416,9 +416,9 @@ impl GraphExecutor {
 }
 
 /// Native quantized executor (PR 4): decode runs directly on the packed
-/// codebook tiles of a [`PackedModel`] — LUT matmul kernels + fused SpMV —
-/// so no dense f32 weight matrix is ever materialized for a quantized
-/// layer. Always dynamic-batch (the packed forward reads `b` from its
+/// codebook tiles of a [`PackedModel`] — integer W4A8 tile kernels +
+/// fused SpMV — so no dense f32 weight matrix is ever materialized for a
+/// quantized layer. Always dynamic-batch (the packed forward reads `b` from its
 /// inputs), so partial batches only pay for the rows they carry.
 ///
 /// PR 5: [`BatchExecutor::step`] runs KV-cached incremental decode

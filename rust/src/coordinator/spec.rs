@@ -1,7 +1,7 @@
 //! Speculative decoding on the variant ladder (PR 9).
 //!
-//! A cheap **drafter** (an expanded HALO variant) proposes up to `k`
-//! tokens ahead through its own incremental KV-cached chain; the
+//! A cheap **drafter** (a natively packed HALO variant) proposes up to
+//! `k` tokens ahead through its own incremental KV-cached chain; the
 //! **verifier** (the served packed variant, or the dense rung of the
 //! ladder) scores the whole proposal in *one* batched
 //! `forward_incremental` pass, accepts the longest agreeing prefix plus
@@ -27,12 +27,19 @@
 //!   surviving rows (and every later append) sit at the same ring
 //!   positions a verifier-only chain would give them.
 //!
-//! **Speedup.** The verifier amortizes its per-pass costs (LUT panel
-//! expansion on packed layers) over `k_eff + 1` emitted tokens, and the
-//! drafter runs variant numerics at dense speed via
-//! [`PackedModel::expand_params`] (native packed decode is slower than
-//! dense wall-clock on this simulator — see `benches/l7_spec.rs`, which
-//! gates `spec_decode_speedup` in CI).
+//! **Speedup.** The verifier amortizes its per-pass fixed costs
+//! (interpreter walk, cache bookkeeping, per-call activation
+//! quantization) over `k_eff + 1` emitted tokens. Since the integer
+//! W4A8 rewrite the drafter runs **natively packed**
+//! ([`SpecDrafter::Packed`]) — packed decode now beats dense wall-clock
+//! (`benches/l4_quant_exec.rs` gates `quant_vs_dense_throughput` ≥ 1.0)
+//! so expanding the drafter back to dense
+//! ([`PackedModel::expand_params`]) would slow drafting down. With
+//! drafter and verifier on the same kernels the self-pair win is
+//! bounded by per-pass amortization (≈ `(k+1)/k` at full acceptance);
+//! the headroom beyond that needs a smaller-capacity drafter model (see
+//! ROADMAP). `benches/l7_spec.rs` measures and gates
+//! `spec_decode_speedup` in CI.
 //!
 //! The executor composes with the whole serving stack: it is a
 //! [`BatchExecutor`], so continuous batching, brown-out, re-homing and
@@ -55,7 +62,8 @@ use crate::util::sync::Arc;
 /// Parsed `--spec drafter=halo-perf,k=4` serving configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpecConfig {
-    /// Which HALO variant drafts (expanded to dense numerics at load).
+    /// Which HALO variant drafts (packed at load, drafting natively on
+    /// the integer kernels).
     pub drafter: Variant,
     /// Maximum tokens drafted per speculative round (clamped at runtime
     /// by the context headroom and the request's remaining budget).
@@ -118,6 +126,47 @@ pub enum SpecVerifier {
     },
 }
 
+/// The proposing model of a speculative pair. Drafts are always greedy
+/// and never touch the request's sampler RNG, so the drafter choice
+/// moves the acceptance rate and the wall-clock — never a token.
+pub enum SpecDrafter {
+    /// A packed HALO variant drafting natively on the integer W4A8
+    /// kernels — the default since packed decode beats dense.
+    Packed(Arc<PackedModel>),
+    /// An owned dense store (tests; ladder experiments pairing dense
+    /// numerics against a packed verifier).
+    Dense {
+        /// Model hyper-parameters (must pair with the verifier's).
+        spec: ModelSpec,
+        /// Owned dense parameter store driving the shared interpreter.
+        params: Arc<DenseParams>,
+    },
+}
+
+impl SpecDrafter {
+    /// The drafter's model hyper-parameters.
+    pub fn spec(&self) -> &ModelSpec {
+        match self {
+            SpecDrafter::Packed(m) => &m.spec,
+            SpecDrafter::Dense { spec, .. } => spec,
+        }
+    }
+
+    fn forward_incremental(
+        &self,
+        tokens: &[i32],
+        pos0: usize,
+        cache: &mut KvCache,
+    ) -> Result<Matrix> {
+        match self {
+            SpecDrafter::Packed(m) => m.forward_incremental(tokens, pos0, cache),
+            SpecDrafter::Dense { spec, params } => {
+                sim::forward_incremental(spec, params.as_ref(), tokens, pos0, cache, false)
+            }
+        }
+    }
+}
+
 impl SpecVerifier {
     /// The verifier's model hyper-parameters.
     pub fn spec(&self) -> &ModelSpec {
@@ -157,8 +206,7 @@ impl SpecVerifier {
 /// accepted prefix + bonus), so a step may retire several tokens while
 /// the coordinator still accounts one schedule pass per step.
 pub struct SpecExecutor {
-    drafter_spec: ModelSpec,
-    drafter: Arc<DenseParams>,
+    drafter: SpecDrafter,
     verifier: SpecVerifier,
     k: usize,
     batch: usize,
@@ -169,22 +217,22 @@ pub struct SpecExecutor {
 }
 
 impl SpecExecutor {
-    /// Pair an (already expanded) drafter with a verifier. The two must
-    /// agree on vocabulary and context window — the drafter proposes
-    /// token ids the verifier scores, over the same window trajectory.
+    /// Pair a drafter with a verifier. The two must agree on vocabulary
+    /// and context window — the drafter proposes token ids the verifier
+    /// scores, over the same window trajectory.
     pub fn new(
-        drafter_spec: ModelSpec,
-        drafter: Arc<DenseParams>,
+        drafter: SpecDrafter,
         verifier: SpecVerifier,
         k: usize,
         batch: usize,
     ) -> Result<Self> {
+        let ds = drafter.spec();
         let vs = verifier.spec();
         anyhow::ensure!(
-            drafter_spec.vocab == vs.vocab && drafter_spec.seq_len == vs.seq_len,
+            ds.vocab == vs.vocab && ds.seq_len == vs.seq_len,
             "drafter (vocab {}, seq {}) does not pair with the verifier (vocab {}, seq {})",
-            drafter_spec.vocab,
-            drafter_spec.seq_len,
+            ds.vocab,
+            ds.seq_len,
             vs.vocab,
             vs.seq_len
         );
@@ -194,7 +242,6 @@ impl SpecExecutor {
             SpecVerifier::Dense { .. } => None,
         };
         Ok(Self {
-            drafter_spec,
             drafter,
             verifier,
             k,
@@ -206,18 +253,17 @@ impl SpecExecutor {
         })
     }
 
-    /// Pair a packed drafter variant with a verifier, expanding the
-    /// drafter's packed layers to dense numerics once at load
-    /// ([`PackedModel::expand_params`]) so drafting runs at dense speed
-    /// while proposing exactly the variant's tokens.
+    /// Pair a packed drafter variant with a verifier. Since the integer
+    /// W4A8 rewrite the drafter decodes **natively** on its packed tiles
+    /// — genuinely faster than a dense expansion, and still proposing
+    /// exactly the variant's tokens.
     pub fn from_packed(
-        drafter: &PackedModel,
+        drafter: Arc<PackedModel>,
         verifier: SpecVerifier,
         k: usize,
         batch: usize,
     ) -> Result<Self> {
-        let params = drafter.expand_params()?;
-        Self::new(drafter.spec.clone(), Arc::new(params), verifier, k, batch)
+        Self::new(SpecDrafter::Packed(drafter), verifier, k, batch)
     }
 
     /// Account DVFS transitions against an explicit schedule slice (one
@@ -264,9 +310,10 @@ impl SpecExecutor {
                 }
             }
         }
+        let ds = self.drafter.spec();
         let cache = match &self.drafter_pool {
             Some(pool) => pool.new_cache(s.window()),
-            None => KvCache::new(self.drafter_spec.n_layers, self.drafter_spec.d_model),
+            None => KvCache::new(ds.n_layers, ds.d_model),
         };
         DecodeState::with_cache(s.window(), s.max_new(), self.seq_cap(), cache)
     }
@@ -346,14 +393,7 @@ impl SpecExecutor {
                 let Some(dcache) = d.cache_mut() else {
                     anyhow::bail!("drafter state lost its KV cache mid-step");
                 };
-                let logits = sim::forward_incremental(
-                    &self.drafter_spec,
-                    self.drafter.as_ref(),
-                    &dnew,
-                    dcached,
-                    dcache,
-                    false,
-                )?;
+                let logits = self.drafter.forward_incremental(&dnew, dcached, dcache)?;
                 self.stats.draft_positions += dnew.len() as u64;
                 let g = argmax_slice(logits.row(dnew.len() - 1)) as i32;
                 drafts.push(g);
@@ -477,9 +517,10 @@ impl BatchExecutor for SpecExecutor {
             None => KvCache::new(vs.n_layers, vs.d_model),
         };
         let mut state = DecodeState::with_cache(prefix, max_new, cap, vcache);
+        let ds = self.drafter.spec();
         let dcache = match &self.drafter_pool {
             Some(pool) => pool.new_cache(tail),
-            None => KvCache::new(self.drafter_spec.n_layers, self.drafter_spec.d_model),
+            None => KvCache::new(ds.n_layers, ds.d_model),
         };
         let draft = DecodeState::with_cache(prefix, max_new, cap, dcache);
         state.set_aux(Box::new(draft) as Box<dyn Any + Send>);
@@ -560,8 +601,7 @@ mod tests {
         let drafter = dense_model(&spec, drafter_seed);
         let oracle = dense_model(&spec, verifier_seed);
         let ex = SpecExecutor::new(
-            spec.clone(),
-            Arc::new(drafter),
+            SpecDrafter::Dense { spec: spec.clone(), params: Arc::new(drafter) },
             SpecVerifier::Dense { spec: spec.clone(), params: Arc::new(verifier) },
             k,
             4,
@@ -665,8 +705,7 @@ mod tests {
         let drafter = dense_model(&other, 1);
         let verifier = dense_model(&spec, 2);
         assert!(SpecExecutor::new(
-            other,
-            Arc::new(drafter),
+            SpecDrafter::Dense { spec: other, params: Arc::new(drafter) },
             SpecVerifier::Dense { spec: spec.clone(), params: Arc::new(verifier) },
             4,
             2,

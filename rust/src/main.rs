@@ -41,8 +41,8 @@ COMMANDS
   serve --model M [--quant Q] [--shards N] [--requests R] [--max-new T]
         Sharded serving demo (quantize → route → continuous batching →
         KV-cached decode). --quant halo-bal|halo-perf|halo-acc executes
-        natively on packed codebook tiles (LUT matmul + fused SpMV;
-        never densifies) and reports the modeled DVFS speedup/energy
+        natively on packed codebook tiles (integer W4A8 kernels + fused
+        SpMV; never densifies) and reports the modeled DVFS speedup/energy
         next to wall-clock; --quant none (default) serves the
         dequantized dense weights. Decode is incremental against a
         per-request KV cache; --no-kv-cache falls back to full-prefix
@@ -82,8 +82,8 @@ SERVING OPTIONS (serve / loadgen)
   --spec CFG          speculative decoding on the variant ladder, e.g.
                       --spec drafter=halo-perf,k=4 (requires --quant):
                       the drafter variant proposes up to k tokens per
-                      round through its own KV chain (packed layers
-                      expanded to dense numerics at load), the served
+                      round through its own KV chain (drafting natively
+                      on its packed tiles), the served
                       packed variant verifies them in one batched pass
                       and rolls its block table back to the accept
                       point. Emitted chains are bit-identical to
@@ -154,7 +154,15 @@ fn cmd_mac(args: &Args, out: &std::path::Path) -> Result<()> {
             let ws: Vec<i8> = if ws.is_empty() {
                 vec![64, -127] // the paper's Fig 3 pair
             } else {
-                ws.iter().map(|s| s.parse().unwrap()).collect()
+                ws.iter()
+                    .map(|s| {
+                        s.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "--w expects an i8 weight value (-128..=127), got {s:?}"
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?
             };
             let samples = args.usize_or("samples", 4096)?;
             let mut md = String::from("## Fig 3 — settle-time histograms\n\n");
@@ -378,27 +386,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let ss = Arc::new(pm.schedule.shard(n_shards));
         let pools = make_kv_pools(args, n_shards, pm.spec.n_layers, pm.spec.d_model)?;
         if let Some(sc) = spec_cfg {
-            // Speculative serving: pack the drafter variant once, expand it
-            // to dense numerics (packed decode is slower per token than the
-            // dense kernels, so an expanded drafter is what actually buys
-            // wall-clock), and hand every shard the shared params. The
-            // served packed variant stays the verifier, so emitted chains
-            // are bit-identical to plain `--quant` serving.
+            // Speculative serving: pack the drafter variant once and let
+            // every shard draft natively on the shared packed tiles —
+            // the integer W4A8 kernels beat the dense kernels, so the
+            // packed drafter is the fast one. The served packed variant
+            // stays the verifier, so emitted chains are bit-identical to
+            // plain `--quant` serving.
             use halo::coordinator::{SpecExecutor, SpecVerifier};
-            let drafter_packed =
-                PackedModel::pack_artifacts(&model, sc.drafter, tile, &grads, profile)?;
-            let drafter_spec = drafter_packed.spec.clone();
-            let drafter = Arc::new(drafter_packed.expand_params()?);
+            let drafter = Arc::new(PackedModel::pack_artifacts(
+                &model, sc.drafter, tile, &grads, profile,
+            )?);
             let dpools =
-                make_kv_pools(args, n_shards, drafter_spec.n_layers, drafter_spec.d_model)?;
+                make_kv_pools(args, n_shards, drafter.spec.n_layers, drafter.spec.d_model)?;
             eprintln!(
-                "[serve] speculative: drafter=halo-{} (expanded dense), k={}",
+                "[serve] speculative: drafter=halo-{} (native packed), k={}",
                 sc.drafter.name(),
                 sc.k
             );
             Coordinator::start(cfg, move |shard| {
-                let mut exec = SpecExecutor::new(
-                    drafter_spec.clone(),
+                let mut exec = SpecExecutor::from_packed(
                     drafter.clone(),
                     SpecVerifier::Packed(pm.clone()),
                     sc.k,
@@ -643,25 +649,22 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             // exactness contract means spec-decoded chains must still match
             // `decode_greedy` bit for bit, so `verify` needs no changes.
             use halo::coordinator::{SpecExecutor, SpecVerifier};
-            let drafter_packed = PackedModel::pack_artifacts(
+            let drafter = Arc::new(PackedModel::pack_artifacts(
                 &model,
                 sc.drafter,
                 tile,
                 &grads,
                 MacProfile::cached(),
-            )?;
-            let drafter_spec = drafter_packed.spec.clone();
-            let drafter = Arc::new(drafter_packed.expand_params()?);
+            )?);
             let dpools =
-                make_kv_pools(args, cfg.shards, drafter_spec.n_layers, drafter_spec.d_model)?;
+                make_kv_pools(args, cfg.shards, drafter.spec.n_layers, drafter.spec.d_model)?;
             eprintln!(
-                "[loadgen] speculative: drafter=halo-{} (expanded dense), k={}",
+                "[loadgen] speculative: drafter=halo-{} (native packed), k={}",
                 sc.drafter.name(),
                 sc.k
             );
             loadgen::run_with(&cfg, vocab, &verify, move |shard| {
-                let mut exec = SpecExecutor::new(
-                    drafter_spec.clone(),
+                let mut exec = SpecExecutor::from_packed(
                     drafter.clone(),
                     SpecVerifier::Packed(pm.clone()),
                     sc.k,

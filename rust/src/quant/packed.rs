@@ -4,12 +4,17 @@
 //! [`super::halo::HaloPayload`] is the *wire* format (whole-matrix index
 //! plane + shared table — the operands of the lowered `fwd_halo` graph).
 //! [`PackedLayer`] is the *execution* format the pure-Rust engine in
-//! [`crate::runtime::qkernels`] consumes: one contiguous `u8` code block
-//! per tile (row-major within the tile), the shared 16-entry codebook
-//! table, a per-tile scale, and the tile's DVFS class/frequency/energy
-//! tags from the MAC circuit model. The hypersparse outlier/salient side
-//! matrix rides along untouched so the execution engine can fuse it as an
-//! SpMV epilogue instead of scattering it into a dense copy.
+//! [`crate::runtime::qkernels`] consumes: per tile, a contiguous `u8`
+//! code block **and** the same elements pre-expanded through an `i8`
+//! integer codebook ([`PackedLayer::qtable`], `table[j] ≈ qtable[j] *
+//! qstep`) into a contiguous `i8` panel ([`PackedTile::wq`], row-major
+//! within the tile) — the operand the W4A8 integer kernel streams, one
+//! byte per weight with no per-call LUT expansion. The shared 16-entry
+//! f32 table, a per-tile scale, and the tile's DVFS
+//! class/frequency/energy tags from the MAC circuit model ride along,
+//! as does the hypersparse outlier/salient side matrix, untouched, so
+//! the execution engine can fuse it as an SpMV epilogue instead of
+//! scattering it into a dense copy.
 //!
 //! Nothing here ever materializes a dense f32 weight matrix;
 //! [`PackedLayer::dequantize`] exists only as the test/bench oracle.
@@ -26,6 +31,19 @@ use super::QuantResult;
 /// fast book is a subset occupying 9 of the 16 slots).
 pub const TABLE_LEN: usize = 16;
 
+/// Hard upper bound on the tile edge length, enforced at pack time.
+///
+/// This is the integer kernel's overflow *and* exactness budget: one
+/// tile contributes at most `MAX_TILE` products of an `i8` panel weight
+/// (|w| ≤ 127) and an `i8` activation (|a| ≤ 128), so any per-tile
+/// accumulator — and every partial sum on the way there — is bounded by
+/// `MAX_TILE · 127 · 128 = 16 646 144 < 2^24`. That keeps the `i32`
+/// accumulation far from overflow and, because every partial sum is an
+/// integer below 2^24, makes the f32 LUT oracle kernel
+/// ([`crate::runtime::qkernels::set_force_lut`]) *bit-identical* to the
+/// integer path: f32 represents all such integers exactly.
+pub const MAX_TILE: usize = 1024;
+
 /// One quantized tile in execution form: contiguous codebook indices plus
 /// the hardware tags the per-tile cycle-cost model reads.
 #[derive(Debug, Clone)]
@@ -33,6 +51,12 @@ pub struct PackedTile {
     /// Codebook index per element, row-major within the tile, indices in
     /// shared-table space (`0..TABLE_LEN`). Edge tiles are smaller.
     pub codes: Vec<u8>,
+    /// The same elements pre-expanded through the layer's integer
+    /// codebook ([`PackedLayer::qtable`]) at pack time: one `i8` panel
+    /// weight per code, row-major within the tile. This is what the
+    /// integer kernel streams — 1 byte per weight, no per-call LUT
+    /// expansion. `w ≈ wq * qstep * scale`.
+    pub wq: Vec<i8>,
     /// Tile height (rows actually covered — edge tiles may be short).
     pub rows: usize,
     /// Tile width (columns actually covered).
@@ -68,6 +92,14 @@ pub struct PackedLayer {
     pub grid: TileGrid,
     /// The shared 16-entry codebook table (medium book; fast ⊆ med).
     pub table: [f32; TABLE_LEN],
+    /// The codebook re-quantized to `i8` for the integer kernel:
+    /// `qtable[j] = round_ties_even(table[j] / qstep)`, so
+    /// `table[j] ≈ qtable[j] * qstep` within half a step
+    /// (≤ 0.4 % of the book's absmax).
+    pub qtable: [i8; TABLE_LEN],
+    /// Step of the integer codebook: `absmax(table) / 127`
+    /// (1.0 for an all-zero book, keeping `qtable` all zero).
+    pub qstep: f32,
     /// One packed tile per grid cell, row-major tile order.
     pub tiles: Vec<PackedTile>,
     /// Full-precision outlier/salient side matrix (SpMV epilogue operand).
@@ -88,11 +120,25 @@ impl PackedLayer {
         profile: &MacProfile,
     ) -> Self {
         let grid = result.grid;
+        assert!(
+            grid.tile <= MAX_TILE,
+            "tile edge {} exceeds MAX_TILE {} (i32 accumulation / f32-exactness budget)",
+            grid.tile,
+            MAX_TILE
+        );
         let (rows, cols) = (grid.rows, grid.cols);
         debug_assert_eq!(payload.idx.len(), rows * cols);
         let mut table = [0.0f32; TABLE_LEN];
         for (slot, &v) in table.iter_mut().zip(payload.codebook.iter()) {
             *slot = v;
+        }
+        // Integer codebook: symmetric absmax over the table, one i8 per
+        // entry. An all-zero book keeps qstep = 1.0 so qtable stays zero.
+        let tmax = table.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let qstep = if tmax == 0.0 { 1.0 } else { tmax / 127.0 };
+        let mut qtable = [0i8; TABLE_LEN];
+        for (q, &v) in qtable.iter_mut().zip(table.iter()) {
+            *q = (v / qstep).round_ties_even().clamp(-127.0, 127.0) as i8;
         }
         let mut tiles = Vec::with_capacity(grid.n_tiles());
         for t in 0..grid.n_tiles() {
@@ -100,9 +146,11 @@ impl PackedLayer {
             let (th, tw) = (rr.len(), cc.len());
             let mut codes = Vec::with_capacity(th * tw);
             grid.for_each(t, |r, c| codes.push(payload.idx[r * cols + c]));
+            let wq: Vec<i8> = codes.iter().map(|&c| qtable[c as usize]).collect();
             let freq_ghz = result.tile_freq_ghz[t];
             tiles.push(PackedTile {
                 codes,
+                wq,
                 rows: th,
                 cols: tw,
                 scale: payload.scales[t],
@@ -116,6 +164,8 @@ impl PackedLayer {
             name: name.to_string(),
             grid,
             table,
+            qtable,
+            qstep,
             tiles,
             sparse: payload.sparse.clone(),
             bits_eff: result.bits_eff,
@@ -137,12 +187,14 @@ impl PackedLayer {
         self.tiles.iter().map(|t| t.class).collect()
     }
 
-    /// Bytes the packed representation actually touches per pass: one `u8`
-    /// code per dense weight, the shared table, a scale per tile, and
-    /// `(f32 val, u32 pos)` per live sparse entry (padding excluded — it
-    /// is an alignment artifact, not traffic).
+    /// Bytes the packed representation actually touches per pass: one
+    /// `i8` panel weight ([`PackedTile::wq`]) per dense weight, the
+    /// shared table, a scale per tile, and `(f32 val, u32 pos)` per live
+    /// sparse entry (padding excluded — it is an alignment artifact, not
+    /// traffic). The `u8` code plane is resident but idle on the serving
+    /// path (the dequantize oracle reads it), so it is not traffic.
     pub fn packed_bytes(&self) -> usize {
-        let codes: usize = self.tiles.iter().map(|t| t.codes.len()).sum();
+        let codes: usize = self.tiles.iter().map(|t| t.wq.len()).sum();
         codes
             + TABLE_LEN * std::mem::size_of::<f32>()
             + self.tiles.len() * std::mem::size_of::<f32>()
@@ -212,6 +264,33 @@ mod tests {
         assert_eq!(last.codes.len(), 24);
         let total: usize = packed.tiles.iter().map(|t| t.codes.len()).sum();
         assert_eq!(total, 100 * 70);
+    }
+
+    #[test]
+    fn integer_codebook_tracks_f32_table_within_half_a_step() {
+        let (_, packed) = quantize(64, 64, 32, 11);
+        assert!(packed.qstep > 0.0);
+        let tmax = packed.table.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!((packed.qstep - tmax / 127.0).abs() <= f32::EPSILON * tmax);
+        for (j, (&q, &v)) in packed.qtable.iter().zip(packed.table.iter()).enumerate() {
+            assert!(
+                (q as f32 * packed.qstep - v).abs() <= 0.5 * packed.qstep + 1e-12,
+                "qtable[{j}] = {q} off by more than qstep/2 from {v}"
+            );
+        }
+        // The extreme entry hits ±127 exactly — full i8 range in use.
+        assert!(packed.qtable.iter().any(|&q| q.unsigned_abs() == 127));
+    }
+
+    #[test]
+    fn wq_panels_are_codes_expanded_through_qtable() {
+        let (_, packed) = quantize(100, 70, 32, 12);
+        for tile in &packed.tiles {
+            assert_eq!(tile.wq.len(), tile.codes.len());
+            for (&w, &c) in tile.wq.iter().zip(tile.codes.iter()) {
+                assert_eq!(w, packed.qtable[c as usize]);
+            }
+        }
     }
 
     #[test]

@@ -1,23 +1,43 @@
-//! Native quantized execution engine: matmul directly on packed HALO
-//! codebook tiles, with the hypersparse outlier matrix fused as an SpMV
-//! epilogue and a per-tile DVFS cycle-cost model.
+//! Native quantized execution engine: integer W4A8 matmul directly on
+//! packed HALO codebook tiles, with the hypersparse outlier matrix fused
+//! as an SpMV epilogue and a per-tile DVFS cycle-cost model.
 //!
 //! This is the serving-side counterpart of the paper's premise that the
-//! quantized form *is* the execution format. The dense path dequantizes
-//! every layer back to f32 before the graph runs; here the forward pass
-//! consumes [`PackedLayer`]s as-is:
+//! quantized form *is* the execution format — and, since the integer
+//! rewrite, the *fast* format. The dense path dequantizes every layer
+//! back to f32 before the graph runs; here the forward pass consumes
+//! [`PackedLayer`]s as-is:
 //!
-//! - [`qmatmul`] walks the layer one tile-column panel at a time. Each
-//!   tile's `u8` codes are expanded through its 16-entry LUT
-//!   (`table[code] * scale`) into an L1-resident panel, which a 4-row
-//!   register-blocked micro-kernel (the blocking scheme of
-//!   [`super::kernels`]) accumulates against the activations. Panels are
-//!   fanned out over the worker pool; each task owns disjoint output
-//!   columns and walks `k` in ascending order, so results are
-//!   deterministic and thread-count independent.
+//! - [`qmatmul`] quantizes the activations to `i8` once per call —
+//!   per-row symmetric absmax, the A8 convention of the AOT activation
+//!   graph (`s = absmax/127`, round-ties-even) — then walks the layer
+//!   one tile-column panel at a time. Each tile's pre-expanded `i8`
+//!   panel ([`crate::quant::packed::PackedTile::wq`]) is streamed
+//!   against the `i8` activations by a 4-row register-blocked
+//!   micro-kernel (the blocking scheme of [`super::kernels`]) that
+//!   widens `i8 × i8 → i32` and accumulates in `i32`; one f32 rescale
+//!   per `(row, tile)` (`tile.scale * layer.qstep * row_scale`) lands
+//!   the partial sum in the output. The constant-trip inner loop over
+//!   the tile width is written for LLVM's autovectorizer: a broadcast
+//!   activation times a contiguous `i8` weight row, i.e. SIMD integer
+//!   multiply-accumulates on every lane width the target offers. Panels
+//!   are fanned out over the worker pool; each task owns disjoint
+//!   output columns, `k` ascends, and per-tile sums are exact integers,
+//!   so results are deterministic and thread-count independent.
+//! - Weight traffic drops 4× vs dense f32 (1 byte/weight, no per-call
+//!   LUT expansion — the PR 4 kernel re-materialized every panel as f32
+//!   each call, which is why it ran ~0.55× dense).
+//! - The f32 LUT kernel survives behind [`set_force_lut`] as the
+//!   equivalence **oracle**: it expands the same integer codebook to an
+//!   f32 panel per call and accumulates in f32. Because a tile edge is
+//!   capped at [`crate::quant::packed::MAX_TILE`], every partial sum on
+//!   both paths is an integer below 2^24, so the two paths are
+//!   **bit-identical** — pinned by `tests/qexec.rs` and the greedy
+//!   chains in `tests/decode_equiv.rs`.
 //! - The `< 0.5 %` outlier/salient side matrix lands via
-//!   [`crate::quant::sparse::SparseMatrix::spmv_into`] **after** the dense
-//!   accumulation — a fused epilogue, not a scatter into a dense copy.
+//!   [`crate::quant::sparse::SparseMatrix::spmv_into`] **after** the
+//!   integer accumulation, on the original f32 activations — a fused
+//!   epilogue, not a scatter into a dense copy.
 //! - [`QCost`] prices every tile at its DVFS class frequency
 //!   ([`crate::mac::MacProfile`] classes mapped onto a
 //!   [`crate::dvfs::Ladder`]), giving the modeled speedup/energy that the
@@ -32,12 +52,14 @@
 #![warn(missing_docs)]
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
 use crate::dvfs::{FreqClass, Ladder, Schedule};
 use crate::mac::MacProfile;
-use crate::quant::packed::PackedLayer;
+use crate::quant::packed::{PackedLayer, PackedTile, TABLE_LEN};
 use crate::quant::{HaloConfig, HaloQuantizer, LayerCtx, Matrix, Variant};
 use crate::util::parallel;
 
@@ -53,12 +75,46 @@ const MR: usize = 4;
 /// the tile columns serially (mirrors `kernels::PAR_MIN_MACS`).
 const PAR_MIN_MACS: usize = 1 << 17;
 
-/// `y = x @ W` executed natively on a packed layer, outliers fused as an
-/// SpMV epilogue. `x` is `(m, K)` row-major; the result is `(m, N)`.
+static FORCE_LUT: AtomicBool = AtomicBool::new(false);
+
+/// Route [`qmatmul`] through the f32 LUT oracle kernel instead of the
+/// integer path. The oracle expands the same `i8` codebook to an f32
+/// panel per call and accumulates in f32 — every partial sum on both
+/// paths is an integer below 2^24 ([`crate::quant::packed::MAX_TILE`]),
+/// so the two are bit-identical; this switch exists for the equivalence
+/// suites and differential benchmarking, never for serving.
+pub fn set_force_lut(on: bool) {
+    FORCE_LUT.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`set_force_lut`] routing is currently active.
+pub fn force_lut() -> bool {
+    FORCE_LUT.load(Ordering::Relaxed)
+}
+
+/// Serializes tests that toggle [`set_force_lut`] and assert on which
+/// path ran — without it a concurrent toggle makes an equivalence check
+/// vacuously compare a path against itself. (Results are bit-identical
+/// either way, so serving correctness never depends on this lock.)
+pub static LUT_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// `y = x @ W` executed natively on a packed layer — integer W4A8 tile
+/// kernels with the outliers fused as an SpMV epilogue. `x` is `(m, K)`
+/// row-major; the result is `(m, N)`.
 ///
-/// Bit-for-bit deterministic: per output element, `k` ascends tile-row by
-/// tile-row exactly like the dense blocked kernel, and the parallel panel
-/// tasks own disjoint columns.
+/// The activations are quantized to `i8` once per call (per-row
+/// symmetric absmax — the A8 convention of the AOT activation graph);
+/// each tile then accumulates `wq(i8) × xq(i8)` into `i32` and lands in
+/// the f32 output through a single per-`(row, tile)` rescale
+/// (`tile.scale * layer.qstep * row_scale`). The sparse outlier epilogue
+/// runs on the *original* f32 activations.
+///
+/// Bit-for-bit deterministic: per-tile sums are exact integers (bounded
+/// by the [`crate::quant::packed::MAX_TILE`] budget), tiles combine in
+/// ascending `k` order, and the parallel panel tasks own disjoint
+/// columns — so results are independent of blocking and thread count,
+/// and identical between full-window and incremental calls (activation
+/// quantization is row-local).
 pub fn qmatmul(x: &Matrix, layer: &PackedLayer) -> Matrix {
     assert_eq!(
         x.cols,
@@ -75,24 +131,36 @@ pub fn qmatmul(x: &Matrix, layer: &PackedLayer) -> Matrix {
         return out;
     }
 
+    // One A8 pass over the activations, shared read-only by every panel
+    // task. Row-local, so incremental and full-window calls quantize
+    // identical rows identically (the decode-equivalence bit-exactness).
+    let (xq, xs) = quantize_rows(x);
+    let xk = x.cols;
+    let oracle = force_lut();
+    // Oracle-only: the integer codebook as f32, expanded per call like
+    // the PR 4 LUT kernel.
+    let qlut: [f32; TABLE_LEN] = std::array::from_fn(|j| layer.qtable[j] as f32);
+
     let panel_task = |tc: usize| -> Vec<f32> {
         let c0 = tc * grid.tile;
         let nw = (c0 + grid.tile).min(n) - c0;
         let mut y = vec![0.0f32; m * nw];
-        let mut wbuf = vec![0.0f32; grid.tile * nw];
+        let mut acc = vec![0i32; MR * nw];
+        let mut facc = if oracle { vec![0.0f32; MR * nw] } else { Vec::new() };
+        let mut wbuf = if oracle { vec![0.0f32; grid.tile * nw] } else { Vec::new() };
         for tr in 0..grid.tiles_r {
             let tile = &layer.tiles[tr * grid.tiles_c + tc];
             debug_assert_eq!(tile.cols, nw);
             let (k0, kh) = (tr * grid.tile, tile.rows);
-            // LUT expansion: 16 multiplies, then one table read per code.
-            let mut lut = [0.0f32; crate::quant::packed::TABLE_LEN];
-            for (slot, &v) in lut.iter_mut().zip(layer.table.iter()) {
-                *slot = v * tile.scale;
+            let rescale = tile.scale * layer.qstep;
+            if oracle {
+                for (wv, &code) in wbuf[..kh * nw].iter_mut().zip(tile.codes.iter()) {
+                    *wv = qlut[code as usize];
+                }
+                lut_panel(&xq, &xs, xk, k0, kh, &wbuf[..kh * nw], nw, rescale, &mut facc, &mut y, m);
+            } else {
+                int_panel(&xq, &xs, xk, k0, kh, tile, nw, rescale, &mut acc, &mut y, m);
             }
-            for (wv, &code) in wbuf[..kh * nw].iter_mut().zip(tile.codes.iter()) {
-                *wv = lut[code as usize];
-            }
-            accumulate_panel(x, k0, kh, &wbuf[..kh * nw], nw, &mut y, m);
         }
         y
     };
@@ -112,57 +180,170 @@ pub fn qmatmul(x: &Matrix, layer: &PackedLayer) -> Matrix {
     }
 
     // Fused epilogue: the hypersparse side matrix adds straight into the
-    // output — the dense weight plane is never reconstructed.
+    // output, from the original f32 activations — the dense weight plane
+    // is never reconstructed.
     layer.sparse.spmv_into(x, &mut out);
     out
 }
 
-/// Accumulate `y[(m, nw)] += x[:, k0..k0+kh] @ w[(kh, nw)]` with 4-row
-/// register blocking: each streamed `w` row is reused `MR`× from
-/// registers, and `k` ascends so the summation order matches the dense
-/// oracle.
-fn accumulate_panel(
-    x: &Matrix,
+/// Per-row symmetric absmax quantization of the activations to `i8` —
+/// the A8 convention of the AOT activation graph (`sim::fake_quant_rows`):
+/// `s = absmax / 127` (1.0 for an all-zero row, so the codes stay 0),
+/// `q = clamp(round_ties_even(v / s), -128, 127)`. Returns the `(m, K)`
+/// code plane and the per-row scale.
+fn quantize_rows(x: &Matrix) -> (Vec<i8>, Vec<f32>) {
+    let (m, k) = (x.rows, x.cols);
+    let mut xq = vec![0i8; m * k];
+    let mut xs = vec![0.0f32; m];
+    for r in 0..m {
+        let row = x.row(r);
+        let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let s = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+        xs[r] = s;
+        for (q, &v) in xq[r * k..(r + 1) * k].iter_mut().zip(row.iter()) {
+            *q = (v / s).round_ties_even().clamp(-128.0, 127.0) as i8;
+        }
+    }
+    (xq, xs)
+}
+
+/// Integer micro-kernel for one tile: `acc[(rows, nw)] = Σ_k wq · xq` in
+/// `i32`, then one f32 rescale per row into `y`. 4-row register blocking
+/// mirrors the dense kernel; the constant-trip inner loop — a broadcast
+/// `i32`-widened activation times a contiguous `i8` weight row — is the
+/// shape LLVM autovectorizes into SIMD widening multiply-accumulates.
+/// `k` ascends and per-tile sums are exact integers, so the result is
+/// independent of blocking and thread count.
+#[allow(clippy::too_many_arguments)]
+fn int_panel(
+    xq: &[i8],
+    xs: &[f32],
+    xk: usize,
     k0: usize,
     kh: usize,
-    w: &[f32],
+    tile: &PackedTile,
     nw: usize,
+    rescale: f32,
+    acc: &mut [i32],
     y: &mut [f32],
     m: usize,
 ) {
-    let xk = x.cols;
-    let xd = &x.data;
+    let wq = &tile.wq;
     let mut r = 0usize;
     while r + MR <= m {
-        let (r01, r23) = y[r * nw..(r + MR) * nw].split_at_mut(2 * nw);
-        let (o0, o1) = r01.split_at_mut(nw);
-        let (o2, o3) = r23.split_at_mut(nw);
+        acc[..MR * nw].fill(0);
+        let (a01, a23) = acc.split_at_mut(2 * nw);
+        let (acc0, acc1) = a01.split_at_mut(nw);
+        let (acc2, acc3) = a23.split_at_mut(nw);
         for kk in 0..kh {
-            let a0 = xd[r * xk + k0 + kk];
-            let a1 = xd[(r + 1) * xk + k0 + kk];
-            let a2 = xd[(r + 2) * xk + k0 + kk];
-            let a3 = xd[(r + 3) * xk + k0 + kk];
-            let wrow = &w[kk * nw..(kk + 1) * nw];
+            let a0 = xq[r * xk + k0 + kk] as i32;
+            let a1 = xq[(r + 1) * xk + k0 + kk] as i32;
+            let a2 = xq[(r + 2) * xk + k0 + kk] as i32;
+            let a3 = xq[(r + 3) * xk + k0 + kk] as i32;
+            let wrow = &wq[kk * nw..(kk + 1) * nw];
             for (j, &wv) in wrow.iter().enumerate() {
-                o0[j] += a0 * wv;
-                o1[j] += a1 * wv;
-                o2[j] += a2 * wv;
-                o3[j] += a3 * wv;
+                let w = wv as i32;
+                acc0[j] += a0 * w;
+                acc1[j] += a1 * w;
+                acc2[j] += a2 * w;
+                acc3[j] += a3 * w;
+            }
+        }
+        for (rr, accr) in [&*acc0, &*acc1, &*acc2, &*acc3].into_iter().enumerate() {
+            let rs = rescale * xs[r + rr];
+            let yrow = &mut y[(r + rr) * nw..(r + rr + 1) * nw];
+            for (o, &a) in yrow.iter_mut().zip(accr.iter()) {
+                *o += a as f32 * rs;
             }
         }
         r += MR;
     }
     while r < m {
-        let orow = &mut y[r * nw..(r + 1) * nw];
+        let acc0 = &mut acc[..nw];
+        acc0.fill(0);
         for kk in 0..kh {
-            let av = xd[r * xk + k0 + kk];
-            if av == 0.0 {
+            let a0 = xq[r * xk + k0 + kk] as i32;
+            if a0 == 0 {
+                continue;
+            }
+            let wrow = &wq[kk * nw..(kk + 1) * nw];
+            for (j, &wv) in wrow.iter().enumerate() {
+                acc0[j] += a0 * wv as i32;
+            }
+        }
+        let rs = rescale * xs[r];
+        let yrow = &mut y[r * nw..(r + 1) * nw];
+        for (o, &a) in yrow.iter_mut().zip(acc0.iter()) {
+            *o += a as f32 * rs;
+        }
+        r += 1;
+    }
+}
+
+/// The f32 LUT oracle micro-kernel: identical loop structure and rescale
+/// epilogue to [`int_panel`], but the quantized operands accumulate in
+/// f32 against a per-call LUT-expanded panel (the PR 4 kernel shape).
+/// Every product and partial sum is an integer below 2^24, so this is
+/// bit-identical to the i32 path — which is the point: it is the oracle.
+#[allow(clippy::too_many_arguments)]
+fn lut_panel(
+    xq: &[i8],
+    xs: &[f32],
+    xk: usize,
+    k0: usize,
+    kh: usize,
+    w: &[f32],
+    nw: usize,
+    rescale: f32,
+    facc: &mut [f32],
+    y: &mut [f32],
+    m: usize,
+) {
+    let mut r = 0usize;
+    while r + MR <= m {
+        facc[..MR * nw].fill(0.0);
+        let (a01, a23) = facc.split_at_mut(2 * nw);
+        let (acc0, acc1) = a01.split_at_mut(nw);
+        let (acc2, acc3) = a23.split_at_mut(nw);
+        for kk in 0..kh {
+            let a0 = xq[r * xk + k0 + kk] as f32;
+            let a1 = xq[(r + 1) * xk + k0 + kk] as f32;
+            let a2 = xq[(r + 2) * xk + k0 + kk] as f32;
+            let a3 = xq[(r + 3) * xk + k0 + kk] as f32;
+            let wrow = &w[kk * nw..(kk + 1) * nw];
+            for (j, &wv) in wrow.iter().enumerate() {
+                acc0[j] += a0 * wv;
+                acc1[j] += a1 * wv;
+                acc2[j] += a2 * wv;
+                acc3[j] += a3 * wv;
+            }
+        }
+        for (rr, accr) in [&*acc0, &*acc1, &*acc2, &*acc3].into_iter().enumerate() {
+            let rs = rescale * xs[r + rr];
+            let yrow = &mut y[(r + rr) * nw..(r + rr + 1) * nw];
+            for (o, &a) in yrow.iter_mut().zip(accr.iter()) {
+                *o += a * rs;
+            }
+        }
+        r += MR;
+    }
+    while r < m {
+        let acc0 = &mut facc[..nw];
+        acc0.fill(0.0);
+        for kk in 0..kh {
+            let a0 = xq[r * xk + k0 + kk] as f32;
+            if a0 == 0.0 {
                 continue;
             }
             let wrow = &w[kk * nw..(kk + 1) * nw];
             for (j, &wv) in wrow.iter().enumerate() {
-                orow[j] += av * wv;
+                acc0[j] += a0 * wv;
             }
+        }
+        let rs = rescale * xs[r];
+        let yrow = &mut y[r * nw..(r + 1) * nw];
+        for (o, &a) in yrow.iter_mut().zip(acc0.iter()) {
+            *o += a * rs;
         }
         r += 1;
     }
@@ -476,14 +657,13 @@ impl PackedModel {
     /// Materialize this packed model as an owned dense
     /// [`sim::DenseParams`] store: every packed linear layer is
     /// dequantized ([`PackedLayer::dequantize`]), everything else copied
-    /// from the dense map. This is the speculative *drafter* fast path
-    /// (`coordinator::spec`): the expansion keeps the packed variant's
-    /// numerics (within the LUT kernels' summation-order tolerance, see
-    /// the `qmatmul_matches_dequantize_then_dense` pin) while decoding
-    /// through the dense kernels — which matters because packed decode
-    /// runs ~0.55x dense wall-clock (BENCH_PR4 `throughput_ratio`), so a
-    /// natively packed drafter could never be cheaper than its verifier.
-    /// One-time cost at executor construction; the model's own
+    /// from the dense map. Since the integer W4A8 rewrite this is **not**
+    /// the drafter path — packed decode is now faster than dense, so
+    /// `coordinator::spec` drafts natively on the packed model — but the
+    /// expansion stays as the dense-numerics oracle for tests and for
+    /// callers that want the quantized weights under the dense kernels
+    /// (within the A8 activation-quantization tolerance, see the
+    /// `qmatmul_tracks_dequantize_then_dense` pin). The model's own
     /// never-densify store is untouched
     /// ([`PackedModel::dense_linear_count`] stays 0).
     pub fn expand_params(&self) -> Result<sim::DenseParams> {
@@ -563,7 +743,13 @@ mod tests {
     }
 
     #[test]
-    fn qmatmul_matches_dequantize_then_dense() {
+    fn qmatmul_tracks_dequantize_then_dense() {
+        // The integer path quantizes activations to i8 and the codebook
+        // to i8, so it *approximates* the dequantize-then-dense oracle
+        // (A8 absmax error + half-a-qstep table error) instead of
+        // matching it to summation order. The exact oracle for the
+        // integer path is the LUT kernel (see
+        // `integer_path_bit_identical_to_lut_oracle`).
         let mut rng = Rng::seed_from_u64(100);
         for (m, k, n, tile) in [(4, 32, 32, 16), (7, 96, 64, 32), (1, 64, 96, 32)] {
             let (_, layer) = packed_layer(k, n, tile, 200 + m as u64);
@@ -572,10 +758,29 @@ mod tests {
             let want = kernels::matmul(&x, &layer.dequantize());
             for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
                 assert!(
-                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    (a - b).abs() <= 5e-2 * (1.0 + b.abs()),
                     "({m},{k},{n},t{tile})[{i}]: {a} vs {b}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn integer_path_bit_identical_to_lut_oracle() {
+        let _guard = LUT_TEST_LOCK.lock().unwrap();
+        let mut rng = Rng::seed_from_u64(900);
+        for (m, k, n, tile) in [(5, 96, 64, 32), (1, 64, 96, 32), (3, 100, 70, 32)] {
+            let (_, layer) = packed_layer(k, n, tile, 300 + m as u64);
+            let x = Matrix::random_normal(m, k, 1.0, &mut rng);
+            set_force_lut(false);
+            let int_path = qmatmul(&x, &layer);
+            set_force_lut(true);
+            let oracle = qmatmul(&x, &layer);
+            set_force_lut(false);
+            assert_eq!(
+                int_path.data, oracle.data,
+                "i8 path must be bit-identical to the f32 LUT oracle ({m},{k},{n},t{tile})"
+            );
         }
     }
 
@@ -671,9 +876,9 @@ mod tests {
 
     #[test]
     fn expand_params_tracks_packed_numerics() {
-        // The drafter expansion must reproduce the packed chain's
-        // numerics up to the LUT kernels' summation-order tolerance
-        // (`qmatmul_matches_dequantize_then_dense`), without densifying
+        // The dense expansion must track the packed chain's numerics up
+        // to the integer path's A8 activation + i8 codebook error
+        // (`qmatmul_tracks_dequantize_then_dense`), without densifying
         // the packed store itself.
         let (spec, pm) = tiny_packed(654, Variant::PerfOpt);
         let dp = pm.expand_params().unwrap();
@@ -686,7 +891,7 @@ mod tests {
         assert_eq!((packed.rows, packed.cols), (dense.rows, dense.cols));
         for (i, (a, b)) in packed.data.iter().zip(&dense.data).enumerate() {
             assert!(
-                (a - b).abs() <= 5e-3 * (1.0 + b.abs()),
+                (a - b).abs() <= 8e-2 * (1.0 + b.abs()),
                 "expanded logits diverge at [{i}]: packed {a} vs expanded {b}"
             );
         }

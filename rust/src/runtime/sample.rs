@@ -84,8 +84,10 @@ impl Sampler {
     }
 
     /// Select the next token from one row of logits. Exactly one RNG
-    /// draw when sampling; zero draws (plain argmax) when greedy or when
-    /// the row is empty.
+    /// draw when sampling; zero draws (plain argmax) when greedy, when
+    /// the row is empty, or when the softmax mass is degenerate (all
+    /// candidate weights zero / non-finite — the top-ranked candidate
+    /// wins deterministically).
     pub fn select(&mut self, logits: &[f32]) -> usize {
         if self.params.is_greedy() || logits.len() <= 1 {
             return argmax_slice(logits);
@@ -110,6 +112,16 @@ impl Sampler {
             .map(|&i| ((f64::from(logits[i]) - m) / t).exp())
             .collect();
         let total: f64 = weights.iter().sum();
+        // Degenerate mass: every candidate weight underflowed to zero,
+        // or a non-finite logit poisoned the softmax (±inf/NaN make
+        // `total` NaN, so no inverse-CDF bin can ever fire and the tail
+        // fallback would return the *lowest*-ranked candidate). Take the
+        // top-ranked candidate and draw nothing — deterministic on both
+        // the speculative and verifier-only paths, so streams stay
+        // aligned.
+        if total == 0.0 || !total.is_finite() {
+            return order[0];
+        }
         let u = self.rng.gen_f64() * total;
         let mut acc = 0.0;
         for (i, w) in order.iter().zip(&weights) {
@@ -174,6 +186,34 @@ mod tests {
             seen[s.select(&logits())] = true;
         }
         assert!(seen.iter().all(|&x| x), "full-vocab sampling missed a token: {seen:?}");
+    }
+
+    #[test]
+    fn extreme_temperature_returns_top_ranked_candidate() {
+        // t = 1e-300: every non-max candidate weight underflows to zero.
+        // The pick must be the top-ranked candidate (the argmax), never
+        // the `order[k-1]` tail fallback.
+        let lg = vec![0.1, 2.0, -1.0, 1.9, 0.5];
+        let mut s = Sampler::new(SamplingParams::new(11).temperature(1e-300));
+        for _ in 0..32 {
+            assert_eq!(s.select(&lg), 1, "tiny-temperature pick must be the argmax");
+        }
+    }
+
+    #[test]
+    fn non_finite_logits_fall_back_to_top_ranked_not_tail() {
+        let p = SamplingParams::new(13).temperature(0.7);
+        let mut s = Sampler::new(p);
+        let mut fresh = Sampler::new(p);
+        // +inf max: (inf - inf)/t is NaN, the softmax total is NaN, and
+        // no inverse-CDF bin can fire — before the guard this returned
+        // the lowest-ranked candidate.
+        assert_eq!(s.select(&[0.0, f32::INFINITY, -1.0]), 1);
+        // All -inf: (-inf) - (-inf) is NaN again; top-ranked is index 0
+        // by the deterministic tie order.
+        assert_eq!(s.select(&[f32::NEG_INFINITY; 4]), 0);
+        // Degenerate selections are deterministic and draw nothing.
+        assert_eq!(s.rng.next_u64(), fresh.rng.next_u64(), "guarded selects must not draw");
     }
 
     #[test]

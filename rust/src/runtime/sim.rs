@@ -302,7 +302,9 @@ impl ModelSpec {
 /// f32 linear weights — the lowered-graph contract), [`DenseParams`] (an
 /// owned dense store for artifact-free tests and benches), and the packed
 /// quantized store in [`super::qkernels`], whose `linmul` runs the
-/// LUT-expanded codebook kernels + fused SpMV instead of a dense matmul.
+/// integer W4A8 tile kernels (i8 panels × i8 activations, i32
+/// accumulation, per-tile rescale) + fused SpMV instead of a dense
+/// matmul.
 pub trait ParamSource {
     /// Flat data of a parameter by name (embeddings, norm scales, biases).
     fn vec1(&self, name: &str) -> Result<&[f32]>;

@@ -68,34 +68,47 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// `--name` parsed as `usize`, or `default` when absent.
+    /// `--name` parsed as `usize`, or `default` when absent. Malformed
+    /// values are usage errors naming the offending token, never panics.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} must be an integer, got {v:?}")),
         }
     }
 
-    /// `--name` parsed as `u64`, or `default` when absent.
+    /// `--name` parsed as `u64`, or `default` when absent. Malformed
+    /// values are usage errors naming the offending token, never panics.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} must be an integer, got {v:?}")),
         }
     }
 
-    /// `--name` parsed as `f64`, or `default` when absent.
+    /// `--name` parsed as `f64`, or `default` when absent. Malformed
+    /// values are usage errors naming the offending token, never panics.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} must be a number, got {v:?}")),
         }
     }
 
     /// `--name` parsed as `i64` when present (`None` when absent).
+    /// Malformed values are usage errors naming the offending token.
     pub fn i64_of(&self, name: &str) -> Result<Option<i64>> {
         self.get(name)
-            .map(|v| v.parse().with_context(|| format!("--{name} must be an integer")))
+            .map(|v| {
+                v.parse()
+                    .with_context(|| format!("--{name} must be an integer, got {v:?}"))
+            })
             .transpose()
     }
 
@@ -153,5 +166,20 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         assert_eq!(a.u64_or("missing", 9).unwrap(), 9);
         assert!(a.usize_or("frac", 0).is_err());
+    }
+
+    #[test]
+    fn malformed_values_error_naming_the_token() {
+        // Usage errors, not panics — and the message carries the
+        // offending token so `--widths 4,x,8`-style typos are findable.
+        let a = parse("x --n 4x --frac abc");
+        for (err, tok) in [
+            (format!("{:#}", a.usize_or("n", 0).unwrap_err()), "4x"),
+            (format!("{:#}", a.u64_or("n", 0).unwrap_err()), "4x"),
+            (format!("{:#}", a.i64_of("n").unwrap_err()), "4x"),
+            (format!("{:#}", a.f64_or("frac", 0.0).unwrap_err()), "abc"),
+        ] {
+            assert!(err.contains(tok), "error {err:?} does not name the token {tok:?}");
+        }
     }
 }

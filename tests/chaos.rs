@@ -395,7 +395,7 @@ fn spec_shard_death_mid_speculation_rehomes_bit_identically() {
     );
     let (v2, d2) = (verifier.clone(), drafter.clone());
     let coord = Coordinator::start(chaos_cfg(2), move |_shard| {
-        let exec = SpecExecutor::from_packed(&d2, SpecVerifier::Packed(v2.clone()), 4, 4)?;
+        let exec = SpecExecutor::from_packed(d2.clone(), SpecVerifier::Packed(v2.clone()), 4, 4)?;
         Ok(Box::new(exec) as Box<dyn BatchExecutor>)
     });
 

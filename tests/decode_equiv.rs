@@ -576,18 +576,20 @@ fn speculative_chains_are_bit_identical_across_the_pairing_matrix() {
 
     for drafter_variant in [Variant::PerfOpt, Variant::Bal] {
         let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
-        let dpm = PackedModel::pack_from(
-            spec.clone(),
-            views,
-            drafter_variant,
-            4,
-            &grads,
-            MacProfile::cached(),
-        )
-        .unwrap();
+        let dpm = Arc::new(
+            PackedModel::pack_from(
+                spec.clone(),
+                views,
+                drafter_variant,
+                4,
+                &grads,
+                MacProfile::cached(),
+            )
+            .unwrap(),
+        );
         for k in [1usize, 4, 16] {
             let mut ex = SpecExecutor::from_packed(
-                &dpm,
+                dpm.clone(),
                 SpecVerifier::Dense { spec: spec.clone(), params: dense.clone() },
                 k,
                 prefixes.len(),
@@ -607,7 +609,7 @@ fn speculative_chains_are_bit_identical_across_the_pairing_matrix() {
             );
 
             let mut ex = SpecExecutor::from_packed(
-                &dpm,
+                dpm.clone(),
                 SpecVerifier::Packed(apm.clone()),
                 k,
                 prefixes.len(),
@@ -643,22 +645,24 @@ fn speculative_join_and_retire_mid_flight_preserve_chains() {
             .unwrap(),
     );
     let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
-    let dpm = PackedModel::pack_from(
-        spec.clone(),
-        views,
-        Variant::PerfOpt,
-        4,
-        &grads,
-        MacProfile::cached(),
-    )
-    .unwrap();
+    let dpm = Arc::new(
+        PackedModel::pack_from(
+            spec.clone(),
+            views,
+            Variant::PerfOpt,
+            4,
+            &grads,
+            MacProfile::cached(),
+        )
+        .unwrap(),
+    );
     let mut rng = Rng::seed_from_u64(121);
     let p1 = random_prefix(&mut rng, spec.vocab, 7);
     let p2 = random_prefix(&mut rng, spec.vocab, 19);
     let p3 = random_prefix(&mut rng, spec.vocab, 2);
 
     let mut exec =
-        SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 4).unwrap();
+        SpecExecutor::from_packed(dpm.clone(), SpecVerifier::Packed(apm.clone()), 4, 4).unwrap();
     let mut s1 = exec.begin(&p1, 9).unwrap();
     let mut s2 = exec.begin(&p2, 2).unwrap();
     // One round with requests 1+2 live; request 2 (max_new 2) may retire
@@ -696,21 +700,23 @@ fn speculative_context_slides_across_a_rollback_stay_exact() {
     let (params, _) = tiny_params(&spec, 130);
     let dense = Arc::new(dense_source(&spec, &params));
     let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
-    let dpm = PackedModel::pack_from(
-        spec.clone(),
-        views,
-        Variant::Bal,
-        4,
-        &BTreeMap::new(),
-        MacProfile::cached(),
-    )
-    .unwrap();
+    let dpm = Arc::new(
+        PackedModel::pack_from(
+            spec.clone(),
+            views,
+            Variant::Bal,
+            4,
+            &BTreeMap::new(),
+            MacProfile::cached(),
+        )
+        .unwrap(),
+    );
     let mut rng = Rng::seed_from_u64(131);
     let prefix = random_prefix(&mut rng, spec.vocab, 18);
     let max_new = 12; // 18 + 12 - 1 = 29 > cap 24: the window slides
 
     let mut ex = SpecExecutor::from_packed(
-        &dpm,
+        dpm.clone(),
         SpecVerifier::Dense { spec: spec.clone(), params: dense.clone() },
         16,
         1,
@@ -744,15 +750,17 @@ fn speculative_shared_prefix_seeded_drafter_is_bit_identical() {
             .unwrap(),
     );
     let views = params.iter().map(|(n, s, d)| (n.as_str(), s.as_slice(), d.as_slice()));
-    let dpm = PackedModel::pack_from(
-        spec.clone(),
-        views,
-        Variant::PerfOpt,
-        4,
-        &grads,
-        MacProfile::cached(),
-    )
-    .unwrap();
+    let dpm = Arc::new(
+        PackedModel::pack_from(
+            spec.clone(),
+            views,
+            Variant::PerfOpt,
+            4,
+            &grads,
+            MacProfile::cached(),
+        )
+        .unwrap(),
+    );
     let mut rng = Rng::seed_from_u64(141);
     let header = random_prefix(&mut rng, spec.vocab, 8);
     let suffix = random_prefix(&mut rng, spec.vocab, 5);
@@ -761,7 +769,7 @@ fn speculative_shared_prefix_seeded_drafter_is_bit_identical() {
 
     let vpool = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(64));
     let dpool = Arc::new(BlockPool::new(spec.n_layers, spec.d_model, 4, 0).with_sharing(64));
-    let mut ex = SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 2)
+    let mut ex = SpecExecutor::from_packed(dpm.clone(), SpecVerifier::Packed(apm.clone()), 4, 2)
         .unwrap()
         .with_kv_pools(vpool.clone(), dpool.clone());
 
@@ -782,7 +790,7 @@ fn speculative_shared_prefix_seeded_drafter_is_bit_identical() {
 
     // Cold oracle: same pairing, no pools at all.
     let mut cold =
-        SpecExecutor::from_packed(&dpm, SpecVerifier::Packed(apm.clone()), 4, 2).unwrap();
+        SpecExecutor::from_packed(dpm.clone(), SpecVerifier::Packed(apm.clone()), 4, 2).unwrap();
     let want = cold.generate(&[full.clone()], &[4]).unwrap();
     assert_eq!(seeded, want, "shared-prefix seeding changed a speculative chain");
     assert_eq!(want[0], apm.decode_greedy(&full, 4).unwrap());
@@ -800,5 +808,38 @@ fn packed_forward_incremental_prefill_matches_packed_forward() {
         let inc = pm.forward_incremental(&toks, 0, &mut cache).unwrap();
         assert_eq!(inc.data, full.data, "{} prefill diverged", variant.name());
         assert_eq!(cache.len(), spec.seq_len);
+    }
+}
+
+#[test]
+fn greedy_chains_identical_under_integer_and_lut_oracle_kernels() {
+    // The ISSUE 10 acceptance pin: the integer W4A8 panel path and the
+    // f32 LUT oracle behind `set_force_lut` must produce IDENTICAL
+    // greedy token chains (not merely close logits) for every packed
+    // variant. Per-tile partial sums fit in 2^24 (see
+    // `quant::packed::MAX_TILE`), so both paths compute the same
+    // real-number results and any divergence here is a kernel bug.
+    // Serialized via LUT_TEST_LOCK so a concurrent toggle cannot make
+    // the comparison vacuous.
+    use halo::runtime::qkernels::{set_force_lut, LUT_TEST_LOCK};
+    let _guard = LUT_TEST_LOCK.lock().unwrap();
+    for variant in [Variant::PerfOpt, Variant::Bal, Variant::AccOpt] {
+        let (spec, pm) = pack_tiny(151, variant);
+        let mut rng = Rng::seed_from_u64(152);
+        for (plen, max_new) in [(1usize, 6usize), (9, 5), (20, 8)] {
+            let prefix = random_prefix(&mut rng, spec.vocab, plen);
+            set_force_lut(false);
+            let int_chain = pm.decode_greedy(&prefix, max_new).unwrap();
+            set_force_lut(true);
+            let lut_chain = pm.decode_greedy(&prefix, max_new).unwrap();
+            set_force_lut(false);
+            assert_eq!(
+                int_chain,
+                lut_chain,
+                "variant {} plen {plen}: integer path diverged from LUT oracle",
+                variant.name()
+            );
+            assert_eq!(int_chain.len(), max_new);
+        }
     }
 }

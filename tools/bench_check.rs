@@ -89,16 +89,10 @@ fn run(args: &Args) -> anyhow::Result<bool> {
     }
     // Absolute floors: current >= floor, no baseline involved.
     for (key, floor) in &mins {
-        match lookup(&current, key).and_then(|j| j.as_f64().ok()) {
-            Some(cur) if cur >= *floor => {
-                println!("ok   {key}: {cur:.2} (absolute floor {floor:.2})");
-            }
-            Some(cur) => {
-                eprintln!("FAIL {key}: {cur:.2} < absolute floor {floor:.2}");
-                ok = false;
-            }
-            None => {
-                eprintln!("FAIL {key}: missing in current {current_path} (floor {floor:.2})");
+        match check_min(&current, current_path, key, *floor) {
+            Ok(cur) => println!("ok   {key}: {cur:.2} (absolute floor {floor:.2})"),
+            Err(msg) => {
+                eprintln!("{msg}");
                 ok = false;
             }
         }
@@ -111,6 +105,18 @@ fn run(args: &Args) -> anyhow::Result<bool> {
         );
     }
     Ok(ok)
+}
+
+/// Check one `--min` absolute floor against the current report. `Err`
+/// carries the exact FAIL line `run` prints — it names the key in every
+/// failure mode, so a typo'd or renamed bench key (the key simply absent
+/// from the current JSON) fails loudly instead of silently passing.
+fn check_min(current: &Json, current_path: &str, key: &str, floor: f64) -> Result<f64, String> {
+    match lookup(current, key).and_then(|j| j.as_f64().ok()) {
+        Some(cur) if cur >= floor => Ok(cur),
+        Some(cur) => Err(format!("FAIL {key}: {cur:.2} < absolute floor {floor:.2}")),
+        None => Err(format!("FAIL {key}: missing in current {current_path} (floor {floor:.2})")),
+    }
 }
 
 /// Parse repeated `--min key=value` floors.
@@ -286,6 +292,60 @@ mod tests {
         // Missing key fails the floor too.
         std::fs::write(&cur, r#"{"other":1.0}"#).unwrap();
         assert!(!run(&argv("decode_cached_speedup=2.0")).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn min_floor_failure_lines_name_the_key() {
+        let cur = j(r#"{"quant_vs_dense_throughput":1.4,"layer":{"throughput_ratio":0.9}}"#);
+        // Present and above the floor: passes with the measured value.
+        assert_eq!(check_min(&cur, "cur.json", "quant_vs_dense_throughput", 1.0).unwrap(), 1.4);
+        assert_eq!(check_min(&cur, "cur.json", "layer.throughput_ratio", 0.5).unwrap(), 0.9);
+        // Present but below: the FAIL line names the key and both numbers.
+        let msg = check_min(&cur, "cur.json", "quant_vs_dense_throughput", 2.0).unwrap_err();
+        assert!(msg.starts_with("FAIL quant_vs_dense_throughput"), "bad line: {msg}");
+        assert!(msg.contains("1.40") && msg.contains("2.00"), "bad line: {msg}");
+        // Absent (typo'd or renamed bench key): fails loudly, naming the
+        // missing key and the file it was expected in.
+        let msg = check_min(&cur, "cur.json", "spec_decode_speedup", 1.0).unwrap_err();
+        assert!(msg.starts_with("FAIL spec_decode_speedup"), "bad line: {msg}");
+        assert!(msg.contains("missing") && msg.contains("cur.json"), "bad line: {msg}");
+        // Non-numeric leaves count as absent, not as silently comparable.
+        let cur = j(r#"{"quant_vs_dense_throughput":"fast"}"#);
+        assert!(check_min(&cur, "cur.json", "quant_vs_dense_throughput", 1.0).is_err());
+    }
+
+    #[test]
+    fn min_floor_on_absent_key_fails_even_when_ratio_keys_pass() {
+        // A --min floor on a key the --keys gate never looks at must still
+        // fail the run when the key is absent from the current JSON.
+        let dir = std::env::temp_dir().join(format!("halo_bench_minonly_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let cur = dir.join("cur.json");
+        std::fs::write(&base, r#"{"x":{"speedup":4.0}}"#).unwrap();
+        let argv = || {
+            Args::parse(
+                [
+                    "--baseline",
+                    base.to_str().unwrap(),
+                    "--current",
+                    cur.to_str().unwrap(),
+                    "--keys",
+                    "x.speedup",
+                    "--min",
+                    "quant_vs_dense_throughput=1.0",
+                ]
+                .into_iter()
+                .map(String::from),
+            )
+        };
+        // Ratio key holds but the floor's key is absent: FAIL.
+        std::fs::write(&cur, r#"{"x":{"speedup":4.0}}"#).unwrap();
+        assert!(!run(&argv()).unwrap());
+        // Same run with the key present and above the floor: passes.
+        std::fs::write(&cur, r#"{"x":{"speedup":4.0},"quant_vs_dense_throughput":1.4}"#).unwrap();
+        assert!(run(&argv()).unwrap());
         std::fs::remove_dir_all(&dir).ok();
     }
 }
